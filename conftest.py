@@ -1,0 +1,8 @@
+"""Repo-root pytest hook: make `compile.*` importable when the suite is run
+as `pytest python/tests/` from the repository root (the Makefile runs it
+from `python/`, where the package is already on sys.path)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

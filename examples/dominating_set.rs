@@ -1,0 +1,59 @@
+//! k-dominating set on a road-network-like graph: the paper's §6.1 setting
+//! in miniature — fixed machines, sweep (L, b) and k, watch critical-path
+//! calls and quality.
+//!
+//!     cargo run --release --example dominating_set
+
+use greedyml::algo::{run_greedyml, run_sequential, DistConfig};
+use greedyml::constraint::Cardinality;
+use greedyml::data::gen::{road, RoadParams};
+use greedyml::data::DatasetSummary;
+use greedyml::greedy::GreedyKind;
+use greedyml::objective::KDominatingSet;
+use greedyml::tree::AccumulationTree;
+use std::sync::Arc;
+
+fn main() -> greedyml::Result<()> {
+    let g = Arc::new(road(RoadParams::usa_like(1 << 16), 5));
+    println!("{}", DatasetSummary::header());
+    println!("{}", DatasetSummary::of_graph("road-like", &g).row());
+
+    let oracle = KDominatingSet::new(g);
+    let m = 32;
+
+    for k in [256usize, 1024, 4096] {
+        let constraint = Cardinality::new(k);
+        let seq = run_sequential(&oracle, &constraint, GreedyKind::Lazy, None)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!(
+            "\nk = {k}: Greedy covers {} vertices with {} calls",
+            seq.greedy.value, seq.greedy.calls
+        );
+        println!(
+            "{:<14} {:>3} {:>3} {:>10} {:>14} {:>12} {:>10}",
+            "algo", "L", "b", "rel f(%)", "crit calls", "vs greedy", "comp (s)"
+        );
+        for b in [m, 8, 4, 2] {
+            let tree = AccumulationTree::new(m, b);
+            let cfg = DistConfig::greedyml(tree, 9);
+            let out =
+                run_greedyml(&oracle, &constraint, &cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let label = if b == m { "RandGreeDI-eq" } else { "GreedyML" };
+            println!(
+                "{:<14} {:>3} {:>3} {:>10.2} {:>14} {:>11.1}% {:>10.3}",
+                label,
+                tree.levels(),
+                b,
+                100.0 * out.value / seq.greedy.value,
+                out.critical_calls,
+                100.0 * out.critical_calls as f64 / seq.greedy.calls as f64,
+                out.comp_secs,
+            );
+        }
+    }
+    println!(
+        "\nThe critical path shrinks relative to Greedy as leaves parallelize the \
+         first scan; small b trades a few extra levels for far smaller accumulations."
+    );
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Quickstart: maximize coverage of a synthetic transaction dataset with
+//! the sequential GREEDY, RandGreeDI, and GreedyML over three tree shapes,
+//! and print the paper-style comparison table.
+//!
+//!     cargo run --release --example quickstart
+
+use greedyml::algo::{run_randgreedi, run_greedyml, run_sequential, randgreedi::RandGreediOpts, DistConfig};
+use greedyml::constraint::Cardinality;
+use greedyml::data::gen::{transactions, TransactionParams};
+use greedyml::greedy::GreedyKind;
+use greedyml::metrics::RunReport;
+use greedyml::objective::KCover;
+use greedyml::tree::AccumulationTree;
+use std::sync::Arc;
+
+fn main() -> greedyml::Result<()> {
+    // 1. A kosarak-like synthetic itemset collection (see DESIGN.md §2 for
+    //    the substitution rationale).
+    let data = Arc::new(transactions(TransactionParams::kosarak_like(20_000), 7));
+    println!(
+        "dataset: {} transactions, {} items, avg itemset size {:.1}",
+        data.num_sets(),
+        data.num_items(),
+        data.avg_set_size()
+    );
+
+    // 2. The k-cover oracle and a cardinality constraint.
+    let oracle = KCover::new(data);
+    let k = 200;
+    let constraint = Cardinality::new(k);
+
+    // 3. Run the three algorithms.
+    let mut reports = Vec::new();
+
+    let seq = run_sequential(&oracle, &constraint, GreedyKind::Lazy, None)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let baseline = seq.greedy.value;
+    reports.push(RunReport {
+        algo: "Greedy".into(),
+        dataset: "kosarak-like".into(),
+        k,
+        machines: 1,
+        branching: 0,
+        levels: 0,
+        value: seq.greedy.value,
+        rel_value_pct: Some(100.0),
+        critical_calls: seq.greedy.calls,
+        total_calls: seq.greedy.calls,
+        comp_secs: seq.secs,
+        comm_secs: 0.0,
+        peak_mem: seq.peak_mem,
+    });
+
+    let m = 16;
+    let rg = run_randgreedi(&oracle, &constraint, RandGreediOpts::new(m, 42))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    reports.push(
+        RunReport::from_outcome("RandGreeDI", "kosarak-like", k, &rg, m, m, 1)
+            .with_baseline(baseline),
+    );
+
+    for b in [4u32, 2] {
+        let tree = AccumulationTree::new(m, b);
+        let cfg = DistConfig::greedyml(tree, 42);
+        let out = run_greedyml(&oracle, &constraint, &cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+        reports.push(
+            RunReport::from_outcome(
+                &format!("GreedyML(b={b})"),
+                "kosarak-like",
+                k,
+                &out,
+                m,
+                b,
+                tree.levels(),
+            )
+            .with_baseline(baseline),
+        );
+    }
+
+    // 4. Print the table.
+    println!("\n{}", RunReport::header());
+    for r in &reports {
+        println!("{}", r.row());
+    }
+    println!(
+        "\nNote how GreedyML keeps the objective within ~1% of RandGreeDI while \
+         the critical-path call count and peak accumulation memory drop as b shrinks."
+    );
+    Ok(())
+}

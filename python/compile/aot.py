@@ -1,0 +1,113 @@
+"""AOT lowering: jit → StableHLO → XLA computation → HLO *text*.
+
+HLO text (not `.serialize()` protos) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Writes `artifacts/<name>.hlo.txt` per entry point and a single
+`artifacts/manifest.json` describing shapes/dtypes, which
+rust/src/runtime/manifest.rs consumes.  `make artifacts` only re-runs this
+when the python sources change.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--dims 64,128]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.coverage import W_TILE
+from compile.kernels.kmedoid import N_TILE
+
+# Candidate-tile width shared by all gain entry points (rust pads to this).
+C_TILE = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO module → HLO text with a tuple root (rust unwraps it)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_points(dims):
+    """(name, fn, example_args) for every artifact we ship.
+
+    One k-medoid variant per feature dimension in `dims` (AOT shapes are
+    static; the Rust runtime picks the artifact whose d matches the dataset
+    and chunks/pads n and kc).
+    """
+    eps = []
+    for d in dims:
+        x = spec((N_TILE, d), jnp.float32)
+        mind = spec((N_TILE,), jnp.float32)
+        c = spec((C_TILE, d), jnp.float32)
+        cand = spec((d,), jnp.float32)
+        eps.append((f"kmedoid_gains_d{d}", model.kmedoid_gains_model, (x, mind, c)))
+        eps.append((f"kmedoid_update_d{d}", model.kmedoid_update_model, (x, mind, cand)))
+        eps.append((f"kmedoid_step_d{d}", model.kmedoid_step_model, (x, mind, c)))
+    masks = spec((C_TILE, W_TILE), jnp.uint32)
+    covered = spec((W_TILE,), jnp.uint32)
+    eps.append(("coverage_gains", model.coverage_gains_model, (masks, covered)))
+    return eps
+
+
+def arg_entry(a):
+    return {"shape": list(a.shape), "dtype": a.dtype.name}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--dims",
+        default="64,128",
+        help="comma-separated k-medoid feature dimensions to compile",
+    )
+    args = ap.parse_args()
+    dims = [int(d) for d in args.dims.split(",") if d]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "format": "hlo-text",
+        "n_tile": N_TILE,
+        "c_tile": C_TILE,
+        "w_tile": W_TILE,
+        "entries": [],
+    }
+    for name, fn, example in entry_points(dims):
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *example)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [arg_entry(a) for a in example],
+                "outputs": [arg_entry(o) for o in outs],
+            }
+        )
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json with {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

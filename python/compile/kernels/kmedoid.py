@@ -1,0 +1,125 @@
+"""Layer-1 Pallas kernels for the k-medoid marginal-gain hot spot.
+
+The paper's compute-heavy objective (Table 1: cost per call is n'·δ) reduces
+to a dense distance computation.  On GPU the authors' C++ code walks the
+view row by row; the TPU-shaped rethink (DESIGN.md §3) is:
+
+* expand ‖x−c‖² = ‖x‖² + ‖c‖² − 2·x@cᵀ so the inner loop is a
+  [nb, d] × [d, kc] matmul — MXU systolic-array work, not scalar loops;
+* tile the view dimension `n` with a BlockSpec grid so each step holds one
+  [nb, d] slab of X plus the [nb, kc] distance tile in VMEM;
+* keep the gains accumulator [kc] resident across grid steps (output block
+  is the same for every step — Pallas keeps it in VMEM).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernels are lowered through the interpreter to plain
+HLO.  Real-TPU efficiency is estimated from the BlockSpec footprint in
+DESIGN.md §Perf.
+
+VMEM budget per grid step (f32): nb·d (X) + nb (mind) + kc·d (C) +
+nb·kc (dist tile) + kc (acc).  With nb=256, d=128, kc=64 that is
+256·128 + 256 + 64·128 + 256·64 + 64 ≈ 57.6 K floats ≈ 230 KiB — far under
+the ~16 MiB VMEM of a TPU core, leaving room to double-buffer the X stream.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes (also the AOT artifact shapes; rust pads to these).
+N_TILE = 256
+"""Rows of X processed per grid step."""
+
+
+def _gains_kernel(x_ref, mind_ref, c_ref, o_ref):
+    """One grid step: accumulate candidate gains for an X tile."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # [nb, d]
+    mind = mind_ref[...]  # [nb]
+    c = c_ref[...]  # [kc, d]
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # [nb, 1]
+    c2 = jnp.sum(c * c, axis=1)[None, :]  # [1, kc]
+    # MXU-shaped inner product; accumulate in f32.
+    xc = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [nb, kc]
+    d2 = jnp.maximum(x2 + c2 - 2.0 * xc, 0.0)
+    dist = jnp.sqrt(d2)
+    improv = jnp.maximum(mind[:, None] - dist, 0.0)  # [nb, kc]
+    o_ref[...] += jnp.sum(improv, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_tile",))
+def kmedoid_gains(x, mind, c, *, n_tile=N_TILE):
+    """Pallas-tiled candidate gains; see `ref.kmedoid_gains_ref`.
+
+    Args:
+      x: [n, d] f32 with n a multiple of `n_tile` (callers pad; padded rows
+         must carry mind = 0 so they contribute nothing).
+      mind: [n] f32.
+      c: [kc, d] f32.
+
+    Returns:
+      [kc] f32 gain sums.
+    """
+    n, d = x.shape
+    kc = c.shape[0]
+    assert n % n_tile == 0, f"n={n} not a multiple of n_tile={n_tile}"
+    grid = (n // n_tile,)
+    return pl.pallas_call(
+        _gains_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_tile, d), lambda i: (i, 0)),  # stream X
+            pl.BlockSpec((n_tile,), lambda i: (i,)),  # stream mind
+            pl.BlockSpec((kc, d), lambda i: (0, 0)),  # C resident
+        ],
+        out_specs=pl.BlockSpec((kc,), lambda i: (0,)),  # acc resident
+        out_shape=jax.ShapeDtypeStruct((kc,), jnp.float32),
+        interpret=True,
+    )(x, mind, c)
+
+
+def _update_kernel(x_ref, mind_ref, cand_ref, o_ref):
+    """One grid step: fold one candidate into the min-distance vector."""
+    x = x_ref[...]  # [nb, d]
+    cand = cand_ref[...]  # [1, d]
+    diff = x - cand
+    dist = jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=1), 0.0))
+    o_ref[...] = jnp.minimum(mind_ref[...], dist)
+
+
+@functools.partial(jax.jit, static_argnames=("n_tile",))
+def kmedoid_update(x, mind, cand, *, n_tile=N_TILE):
+    """Pallas-tiled commit step; see `ref.kmedoid_update_ref`.
+
+    Args:
+      x: [n, d] f32, n a multiple of `n_tile`.
+      mind: [n] f32.
+      cand: [d] f32 — committed candidate (reshaped to [1, d] internally).
+
+    Returns:
+      [n] f32 updated min distances.
+    """
+    n, d = x.shape
+    assert n % n_tile == 0, f"n={n} not a multiple of n_tile={n_tile}"
+    grid = (n // n_tile,)
+    return pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((n_tile,), lambda i: (i,)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, mind, cand.reshape(1, d))

@@ -1,0 +1,70 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package must
+match its reference here (pytest + hypothesis sweep shapes/dtypes), and the
+Rust oracles cross-check against the same semantics through the AOT
+artifacts.
+
+Conventions shared with the Rust side (rust/src/objective, rust/src/runtime):
+
+* k-medoid gains are *sums* over the view, not means — the caller divides by
+  n' so that padded rows (mind = 0) contribute exactly zero.
+* distances are Euclidean (sqrt of clamped squared distance), matching
+  `KMedoid` in rust/src/objective/kmedoid.rs.
+* coverage bitmaps are little-endian uint32 words; gains count candidate
+  bits not present in the covered mask.
+"""
+
+import jax.numpy as jnp
+
+
+def kmedoid_gains_ref(x, mind, c):
+    """Gain sums for k-medoid candidates.
+
+    Args:
+      x:    [n, d] float32 — view vectors.
+      mind: [n]    float32 — current min distance of each view vector to
+            the solution ∪ {e0}.
+      c:    [k, d] float32 — candidate vectors.
+
+    Returns:
+      [k] float32 — gains[j] = sum_i max(mind_i − ‖x_i − c_j‖, 0).
+    """
+    # ‖x−c‖² = ‖x‖² + ‖c‖² − 2·x@cᵀ, clamped for numerical safety.
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # [n, 1]
+    c2 = jnp.sum(c * c, axis=1)[None, :]  # [1, k]
+    d2 = x2 + c2 - 2.0 * x @ c.T  # [n, k]
+    dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+    improv = jnp.maximum(mind[:, None] - dist, 0.0)  # [n, k]
+    return jnp.sum(improv, axis=0)
+
+
+def kmedoid_update_ref(x, mind, cand):
+    """New per-row min distances after committing one candidate.
+
+    Args:
+      x:    [n, d] float32.
+      mind: [n]    float32.
+      cand: [d]    float32 — the committed candidate.
+
+    Returns:
+      [n] float32 — elementwise min(mind, ‖x − cand‖).
+    """
+    diff = x - cand[None, :]
+    dist = jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=1), 0.0))
+    return jnp.minimum(mind, dist)
+
+
+def coverage_gains_ref(masks, covered):
+    """Coverage gains over packed uint32 bitmaps.
+
+    Args:
+      masks:   [k, w] uint32 — candidate bitmaps.
+      covered: [w]    uint32 — already-covered bitmap.
+
+    Returns:
+      [k] int32 — popcount(masks & ~covered) per candidate.
+    """
+    fresh = jnp.bitwise_and(masks, jnp.bitwise_not(covered)[None, :])
+    pops = jnp.bitwise_count(fresh).astype(jnp.int32)
+    return jnp.sum(pops, axis=1)

@@ -1,0 +1,61 @@
+"""Layer-2 JAX compute graphs over the Layer-1 Pallas kernels.
+
+These are the jitted functions that get AOT-lowered (aot.py) and executed
+from the Rust coordinator's hot path via PJRT.  Each is a thin composition
+around a kernel so the kernel lowers *into the same HLO module* — Python
+never runs at solve time.
+
+Graphs:
+  * `kmedoid_gains_model`   — batched candidate gains for one view chunk.
+  * `kmedoid_update_model`  — fold a committed candidate into `mind`.
+  * `kmedoid_step_model`    — fused gains + argmax + update: one greedy
+    round in a single executable launch (the §Perf L2 fusion — avoids a
+    host round-trip between selecting and committing).
+  * `coverage_gains_model`  — packed-bitmap coverage gains.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.coverage import coverage_gains
+from compile.kernels.kmedoid import kmedoid_gains, kmedoid_update
+
+
+def kmedoid_gains_model(x, mind, c):
+    """Candidate gain sums for one padded view chunk (see kernels.kmedoid)."""
+    return (kmedoid_gains(x, mind, c),)
+
+
+def kmedoid_update_model(x, mind, cand):
+    """Updated min-distance vector after committing `cand`."""
+    return (kmedoid_update(x, mind, cand),)
+
+
+def kmedoid_step_model(x, mind, c):
+    """One fused greedy round over a candidate tile.
+
+    Args:
+      x:    [n, d] f32 padded view chunk.
+      mind: [n] f32.
+      c:    [kc, d] f32 candidate tile (pad unused rows with zeros AND mark
+            them invalid by passing x rows with mind=0 — padded candidates
+            produce gain 0 and lose the argmax unless all gains are 0).
+
+    Returns:
+      (best_idx i32, best_gain f32, new_mind [n] f32) — new_mind already
+      reflects committing the argmax candidate.
+    """
+    gains = kmedoid_gains(x, mind, c)  # [kc]
+    best = jnp.argmax(gains)
+    best_gain = gains[best]
+    new_mind = kmedoid_update(x, mind, c[best])
+    # If nothing improves, keep mind unchanged (commit of a useless
+    # candidate is a no-op anyway since min() can only decrease, but the
+    # guard keeps semantics exact for the all-zero-gain tile).
+    new_mind = jnp.where(best_gain > 0.0, new_mind, mind)
+    return (best.astype(jnp.int32), best_gain, new_mind)
+
+
+def coverage_gains_model(masks, covered):
+    """Packed-bitmap coverage gains (see kernels.coverage)."""
+    return (coverage_gains(masks, covered),)

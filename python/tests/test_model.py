@@ -1,0 +1,61 @@
+"""Layer-2 model graphs: shapes and semantics of the AOT entry points."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels.ref import kmedoid_gains_ref, kmedoid_update_ref
+
+
+def _data(n=64, d=8, k=6, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d), dtype=np.float32)
+    mind = (2.0 * rng.random(n)).astype(np.float32)
+    c = rng.standard_normal((k, d), dtype=np.float32)
+    return x, mind, c
+
+
+def test_gains_model_is_tuple_wrapped():
+    x, mind, c = _data(n=256, d=8)
+    (gains,) = model.kmedoid_gains_model(x, mind, c)
+    want = kmedoid_gains_ref(jnp.asarray(x), jnp.asarray(mind), jnp.asarray(c))
+    np.testing.assert_allclose(np.asarray(gains), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_update_model():
+    x, mind, c = _data(n=256, d=8)
+    (new_mind,) = model.kmedoid_update_model(x, mind, c[0])
+    want = kmedoid_update_ref(jnp.asarray(x), jnp.asarray(mind), jnp.asarray(c[0]))
+    np.testing.assert_allclose(np.asarray(new_mind), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_step_model_selects_argmax_and_commits():
+    x, mind, c = _data(n=256, d=8, k=5, seed=3)
+    best, gain, new_mind = model.kmedoid_step_model(x, mind, c)
+    gains = np.asarray(kmedoid_gains_ref(jnp.asarray(x), jnp.asarray(mind), jnp.asarray(c)))
+    assert int(best) == int(np.argmax(gains))
+    assert float(gain) == pytest.approx(float(gains.max()), rel=1e-4)
+    want = kmedoid_update_ref(
+        jnp.asarray(x), jnp.asarray(mind), jnp.asarray(c[int(best)])
+    )
+    np.testing.assert_allclose(np.asarray(new_mind), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_step_model_no_improvement_keeps_mind():
+    x, mind, c = _data(n=256, d=8, k=3, seed=4)
+    mind[:] = 0.0  # nothing can improve a zero-loss view
+    best, gain, new_mind = model.kmedoid_step_model(x, mind, c)
+    assert float(gain) == 0.0
+    np.testing.assert_array_equal(np.asarray(new_mind), mind)
+
+
+def test_coverage_model():
+    rng = np.random.default_rng(9)
+    masks = rng.integers(0, 2**32, (4, 1024), dtype=np.uint64).astype(np.uint32)
+    covered = rng.integers(0, 2**32, (1024,), dtype=np.uint64).astype(np.uint32)
+    (gains,) = model.coverage_gains_model(masks, covered)
+    fresh = masks & ~covered[None, :]
+    want = np.array([sum(int(v).bit_count() for v in row) for row in fresh])
+    np.testing.assert_array_equal(np.asarray(gains), want)

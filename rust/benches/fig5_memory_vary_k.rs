@@ -1,0 +1,93 @@
+//! Fig. 5 — varying k under a hard per-machine memory limit (16 machines).
+//!
+//! The paper's §6.2.1: road_usa, 100 MB per machine, k from 128k to 1,024k.
+//! Only the smallest k fits RandGreeDI; for larger k the lowest-depth
+//! accumulation tree that fits is selected (the (L, b) annotation on each
+//! bar).  Scaled here: road-like graph, proportional limit, k sweep chosen
+//! so the same fits/doesn't-fit ladder appears.
+//!
+//! Left plot → "calls" columns (critical path vs sequential GREEDY).
+//! Right plot → "rel f(%)" column (quality vs GREEDY; paper: within 6%).
+
+#[path = "harness.rs"]
+mod harness;
+
+use greedyml::algo::{run_greedyml, run_sequential, DistConfig};
+use greedyml::constraint::Cardinality;
+use greedyml::data::gen::{road, RoadParams};
+use greedyml::greedy::GreedyKind;
+use greedyml::objective::KDominatingSet;
+use greedyml::tree::AccumulationTree;
+use greedyml::util::fmt_bytes;
+use std::sync::Arc;
+
+fn main() {
+    let m = 16u32;
+    let g = Arc::new(road(RoadParams::usa_like(1 << 16), 5));
+    let oracle = KDominatingSet::new(g.clone());
+    // Scale the paper's 100 MB so the leaf partitions fit with headroom but
+    // wide accumulations do not: leaves hold ~n/m ≈ 4096 elements (~80 KiB
+    // at δ̄ ≈ 2.4); the ladder is then set by the accumulation term b·k·e̅.
+    let limit = 600 * 1024u64;
+    println!(
+        "road-like n={}, m={m}, per-machine limit {}",
+        g.num_vertices(),
+        fmt_bytes(limit)
+    );
+
+    harness::row(
+        &[8, 12, 8, 16, 16, 12, 10],
+        &cells!["k", "algo", "(L,b)", "crit calls", "greedy calls", "rel f(%)", "peak mem"],
+    );
+
+    for k in [500usize, 1000, 2000, 4000, 8000] {
+        let constraint = Cardinality::new(k);
+        let seq = run_sequential(&oracle, &constraint, GreedyKind::Lazy, None).unwrap();
+        // RandGreeDI attempt (b = m) then lowest-depth fitting tree.
+        let mut chosen = None;
+        for b in [m, 8, 4, 2] {
+            let tree = AccumulationTree::new(m, b);
+            let cfg = DistConfig { mem_limit: Some(limit), ..DistConfig::greedyml(tree, 11) };
+            match run_greedyml(&oracle, &constraint, &cfg) {
+                Ok(out) => {
+                    chosen = Some((b, tree.levels(), out));
+                    break;
+                }
+                Err(_) if b == m => {
+                    // Record that RandGreeDI OOMed for this k.
+                    harness::row(
+                        &[8, 12, 8, 16, 16, 12, 10],
+                        &cells![k, "RandGreeDI", format!("(1,{m})"), "OOM", "-", "-", "-"],
+                    );
+                }
+                Err(_) => {}
+            }
+        }
+        match chosen {
+            Some((b, l, out)) => {
+                let algo = if b == m { "RandGreeDI" } else { "GreedyML" };
+                harness::row(
+                    &[8, 12, 8, 16, 16, 12, 10],
+                    &cells![
+                        k,
+                        algo,
+                        format!("({l},{b})"),
+                        out.critical_calls,
+                        seq.greedy.calls,
+                        format!("{:.2}", 100.0 * out.value / seq.greedy.value),
+                        fmt_bytes(out.peak_mem())
+                    ],
+                );
+            }
+            None => harness::row(
+                &[8, 12, 8, 16, 16, 12, 10],
+                &cells![k, "GreedyML", "-", "no tree fits", "-", "-", "-"],
+            ),
+        }
+    }
+    println!(
+        "\nexpected shape: RandGreeDI fits only the smallest k; larger k needs \
+         smaller b (deeper trees); critical-path calls stay below sequential \
+         GREEDY; quality within ~6% of GREEDY (§6.2.1)."
+    );
+}

@@ -1,0 +1,88 @@
+//! Shared bench harness (criterion is unavailable offline — DESIGN.md §2).
+//!
+//! Provides robust wall-clock measurement (warmup + N samples, median /
+//! min / stddev), fixed-width table printing, and the experiment-wide
+//! convention of reporting geometric means across datasets (§6: the paper
+//! reports geomeans of six repetitions).
+//!
+//! Every bench binary is `harness = false` and regenerates one table or
+//! figure from the paper; `cargo bench` runs them all and
+//! `bench_output.txt` is the evidence trail referenced by EXPERIMENTS.md.
+
+#![allow(dead_code)] // each bench uses a subset of the harness
+
+use std::time::Instant;
+
+/// Summary of repeated timings (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStat {
+    pub median: f64,
+    pub mean: f64,
+    pub min: f64,
+    pub stddev: f64,
+    pub samples: usize,
+}
+
+/// Time `f` with `warmup` throwaway runs and `samples` measured runs.
+pub fn bench<R>(warmup: usize, samples: usize, mut f: impl FnMut() -> R) -> BenchStat {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    BenchStat {
+        median: greedyml::util::stats::median(&times),
+        mean: greedyml::util::stats::mean(&times),
+        min: greedyml::util::stats::min(&times),
+        stddev: greedyml::util::stats::stddev(&times),
+        samples,
+    }
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print one formatted row from already-stringified cells with the given
+/// column widths (negative width = left align).
+pub fn row(widths: &[i32], cells: &[String]) {
+    let mut line = String::new();
+    for (w, c) in widths.iter().zip(cells) {
+        if *w < 0 {
+            line.push_str(&format!("{:<width$} ", c, width = (-w) as usize));
+        } else {
+            line.push_str(&format!("{:>width$} ", c, width = *w as usize));
+        }
+    }
+    println!("{}", line.trim_end());
+}
+
+/// Convenience: stringify heterogeneous cells.
+#[macro_export]
+macro_rules! cells {
+    ($($x:expr),* $(,)?) => { vec![$(format!("{}", $x)),*] };
+}
+
+/// Geometric mean (re-exported for benches).
+pub fn geomean(xs: &[f64]) -> f64 {
+    greedyml::util::stats::geomean(xs)
+}
+
+/// Check an observed/predicted ratio against a tolerance band and render a
+/// PASS/soft-FAIL marker (benches validate shape, not constants).
+pub fn shape_check(observed: f64, predicted: f64, tol_ratio: f64) -> &'static str {
+    if predicted <= 0.0 {
+        return "n/a";
+    }
+    let r = observed / predicted;
+    if r >= 1.0 / tol_ratio && r <= tol_ratio {
+        "PASS"
+    } else {
+        "WARN"
+    }
+}

@@ -1,0 +1,95 @@
+//! §Perf microbenchmarks: the hot paths identified in EXPERIMENTS.md §Perf.
+//!
+//!   P1. k-medoid CPU gain_batch       (dense float distance loop)
+//!   P2. coverage union_gain_sparse    (bitset probes)
+//!   P3. coverage union_gain (dense)   (word-wise popcount)
+//!   P4. lazy greedy end-to-end        (heap + dedup + gains)
+//!   P5. PJRT k-medoid gain_batch      (kernel-launch amortization)
+//!
+//! Run before/after every optimization; EXPERIMENTS.md §Perf records the
+//! iteration log.
+
+#[path = "harness.rs"]
+mod harness;
+
+use greedyml::constraint::Cardinality;
+use greedyml::data::gen;
+use greedyml::greedy::greedy_lazy;
+use greedyml::objective::{KCover, KMedoid, Oracle};
+use greedyml::util::bitset::BitSet;
+use std::sync::Arc;
+
+fn main() {
+    // P1: k-medoid gains.
+    let (vs, _) = gen::gaussian_mixture(
+        gen::GaussianParams { n: 2048, dim: 128, classes: 8, noise: 0.3 },
+        3,
+    );
+    let oracle = KMedoid::new(Arc::new(vs));
+    let st = oracle.new_state(None);
+    let cands: Vec<u32> = (0..512).collect();
+    let mut out = Vec::new();
+    let s = harness::bench(1, 5, || st.gain_batch(&cands, &mut out));
+    println!(
+        "P1 kmedoid cpu gain_batch (2048x128 view, 512 cands): {:.4}s median -> {:.0} gains/s",
+        s.median,
+        512.0 / s.median
+    );
+    // Commit path (mind update).
+    let s = harness::bench(1, 5, || {
+        let mut st = oracle.new_state(None);
+        for e in [1u32, 500, 1000, 1500] {
+            st.commit(e);
+        }
+    });
+    println!("P1b kmedoid commit x4 (incl. state init): {:.4}s median", s.median);
+
+    // P2/P3: coverage gains.
+    let data = Arc::new(gen::transactions(
+        gen::TransactionParams { num_sets: 30_000, num_items: 60_000, mean_size: 20.0, zipf_s: 0.9 },
+        7,
+    ));
+    let cov = KCover::new(data.clone());
+    let mut cst = cov.new_state(None);
+    for e in (0..30_000).step_by(100) {
+        cst.commit(e);
+    }
+    let cands: Vec<u32> = (0..30_000).collect();
+    let s = harness::bench(1, 5, || cst.gain_batch(&cands, &mut out));
+    println!(
+        "P2 coverage gain_batch sparse (30k cands, avg delta 20): {:.4}s -> {:.1}M gains/s",
+        s.median,
+        30_000.0 / s.median / 1e6
+    );
+    let a = BitSet::from_iter(1 << 20, (0..1 << 20).step_by(3));
+    let b = BitSet::from_iter(1 << 20, (0..1 << 20).step_by(5));
+    let s = harness::bench(1, 20, || a.union_gain(&b));
+    println!(
+        "P3 dense union_gain over 1M-bit universes: {:.6}s -> {:.1} GB/s word scan",
+        s.median,
+        (2.0 * (1 << 20) as f64 / 8.0) / s.median / 1e9
+    );
+
+    // P4: lazy greedy end-to-end on coverage.
+    let c = Cardinality::new(100);
+    let s = harness::bench(1, 3, || greedy_lazy(&cov, &c, &cands, None));
+    println!("P4 lazy greedy (n=30k, k=100): {:.4}s median", s.median);
+
+    // P5: PJRT kernel path.
+    if let Ok(engine) = greedyml::runtime::Engine::load(&greedyml::runtime::artifact_dir()) {
+        let (vs, _) = gen::gaussian_mixture(
+            gen::GaussianParams { n: 2048, dim: 128, classes: 8, noise: 0.3 },
+            3,
+        );
+        let pjrt =
+            greedyml::runtime::KMedoidPjrt::new(Arc::new(vs), Arc::new(engine)).unwrap();
+        let st = pjrt.new_state(None);
+        let cands: Vec<u32> = (0..512).collect();
+        let s = harness::bench(1, 5, || st.gain_batch(&cands, &mut out));
+        println!(
+            "P5 kmedoid pjrt gain_batch (2048x128, 512 cands): {:.4}s -> {:.0} gains/s",
+            s.median,
+            512.0 / s.median
+        );
+    }
+}

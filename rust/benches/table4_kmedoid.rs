@@ -1,0 +1,131 @@
+//! Table 4 — k-medoid exemplar clustering on 32 machines: relative function
+//! value and speedup vs RandGreeDI across accumulation trees, under both
+//! objective schemes (local-only and local + added images), plus the Fig. 7
+//! exemplar-diversity readout and a CPU-vs-PJRT backend cross-check.
+//!
+//! Expected shape (§6.4): quality flat across (L, b) (within ~1.5% of
+//! RandGreeDI); speedup grows as b shrinks because interior nodes hold
+//! k·b elements instead of k·m and the k-medoid cost is quadratic in the
+//! node's element count.
+
+#[path = "harness.rs"]
+mod harness;
+
+use greedyml::algo::{run_greedyml, randgreedi::RandGreediOpts, DistConfig};
+use greedyml::constraint::Cardinality;
+use greedyml::data::gen::{gaussian_mixture, GaussianParams};
+use greedyml::objective::{KMedoid, Oracle};
+use greedyml::tree::AccumulationTree;
+use std::sync::Arc;
+
+/// Run a config twice and keep the faster BSP computation time (first-run
+/// page-fault / thread-spawn noise is substantial at m=32 on shared CPUs).
+fn timed_run(
+    oracle: &dyn Oracle,
+    constraint: &greedyml::constraint::Cardinality,
+    cfg: &DistConfig,
+) -> (greedyml::algo::DistOutcome, f64) {
+    let a = run_greedyml(oracle, constraint, cfg).unwrap();
+    let b = run_greedyml(oracle, constraint, cfg).unwrap();
+    let secs = a.comp_secs.min(b.comp_secs);
+    (b, secs)
+}
+
+fn main() {
+    let n = 4096usize;
+    let dim = 64usize; // matches the d64 AOT artifacts
+    let (vs, labels) = gaussian_mixture(GaussianParams::tiny_imagenet_like(n, dim), 11);
+    let vs = Arc::new(vs);
+    let oracle = KMedoid::new(vs.clone());
+    let k = 64usize;
+    let m = 32u32;
+    let constraint = Cardinality::new(k);
+    println!("tiny-imagenet-like: n={n}, d={dim}, k={k}, m={m}");
+
+    for added in [0usize, 256] {
+        let variant = if added == 0 { "Local Obj." } else { "Added Images" };
+        harness::section(&format!("Table 4 — {variant}"));
+        let opts = RandGreediOpts {
+            local_view: true,
+            added_elements: added,
+            ..RandGreediOpts::new(m, 3)
+        };
+        let rg_cfg = opts.to_config();
+        let (rg, rg_time) = timed_run(&oracle, &constraint, &rg_cfg);
+        let rg_global = oracle.eval(&rg.solution);
+        println!("RandGreeDI baseline: global f = {rg_global:.4}, comp = {rg_time:.3}s");
+        harness::row(
+            &[4, 4, 14, 10, 14],
+            &cells!["L", "b", "rel f (%)", "speedup", "interior |D|"],
+        );
+        for b in [2u32, 4, 8, 16] {
+            let tree = AccumulationTree::new(m, b);
+            let cfg = DistConfig {
+                local_view: true,
+                added_elements: added,
+                ..DistConfig::greedyml(tree, 3)
+            };
+            let (out, secs) = timed_run(&oracle, &constraint, &cfg);
+            let global = oracle.eval(&out.solution);
+            harness::row(
+                &[4, 4, 14, 10, 14],
+                &cells![
+                    tree.levels(),
+                    b,
+                    format!("{:.2}", 100.0 * global / rg_global),
+                    format!("{:.2}", rg_time / secs.max(1e-9)),
+                    out.max_accum_elems
+                ],
+            );
+        }
+    }
+
+    // Fig. 7: exemplar diversity (labels are known for the synthetic mix).
+    harness::section("Fig 7 — exemplar diversity");
+    let cfg = DistConfig { local_view: true, ..DistConfig::greedyml(AccumulationTree::new(m, 2), 3) };
+    let out = run_greedyml(&oracle, &constraint, &cfg).unwrap();
+    let classes: std::collections::HashSet<u32> =
+        out.solution.iter().map(|&e| labels[e as usize]).collect();
+    let total = labels.iter().max().unwrap() + 1;
+    println!(
+        "GreedyML(b=2) exemplars: {} selected, spanning {}/{} classes",
+        out.solution.len(),
+        classes.len(),
+        total
+    );
+
+    // Backend cross-check: the PJRT path must agree with the CPU oracle.
+    if let Ok(engine) = greedyml::runtime::Engine::load(&greedyml::runtime::artifact_dir()) {
+        harness::section("backend cross-check (CPU oracle vs AOT Pallas/PJRT)");
+        let pjrt = greedyml::runtime::KMedoidPjrt::new(vs.clone(), Arc::new(engine)).unwrap();
+        let tree = AccumulationTree::new(8, 2);
+        let cpu_out = run_greedyml(
+            &oracle,
+            &constraint,
+            &DistConfig { local_view: true, ..DistConfig::greedyml(tree, 3) },
+        )
+        .unwrap();
+        let stat = harness::bench(0, 1, || {
+            run_greedyml(
+                &pjrt,
+                &constraint,
+                &DistConfig { local_view: true, ..DistConfig::greedyml(tree, 3) },
+            )
+            .unwrap()
+        });
+        let pjrt_out = run_greedyml(
+            &pjrt,
+            &constraint,
+            &DistConfig { local_view: true, ..DistConfig::greedyml(tree, 3) },
+        )
+        .unwrap();
+        let (g_cpu, g_pjrt) = (oracle.eval(&cpu_out.solution), oracle.eval(&pjrt_out.solution));
+        println!(
+            "global f: cpu {g_cpu:.4} vs pjrt {g_pjrt:.4} (agreement {:.2}%), pjrt wall {:.2}s",
+            100.0 * g_pjrt / g_cpu,
+            stat.median
+        );
+    } else {
+        println!("(artifacts not built — run `make artifacts` for the PJRT cross-check)");
+    }
+}

@@ -1,0 +1,86 @@
+//! GreeDI (Mirzasoleiman et al. 2013): like RandGreeDI but with an
+//! *arbitrary* (here: contiguous-chunk) partition — the variant whose
+//! worst-case guarantee degrades to `1/Θ(min(√k, m))`.  Included as the
+//! paper's historical baseline and to let the benches demonstrate why the
+//! random tape matters on adversarial orderings.
+
+use super::{greedyml::run_dist, DistConfig, DistOutcome, PartitionScheme};
+use crate::constraint::Constraint;
+use crate::dist::DistError;
+use crate::greedy::GreedyKind;
+use crate::objective::Oracle;
+use crate::tree::AccumulationTree;
+
+/// Run GreeDI on `machines` with a contiguous partition.
+pub fn run_greedi(
+    oracle: &dyn Oracle,
+    constraint: &dyn Constraint,
+    machines: u32,
+    mem_limit: Option<u64>,
+) -> Result<DistOutcome, DistError> {
+    let cfg = DistConfig {
+        tree: AccumulationTree::randgreedi(machines),
+        kind: GreedyKind::Lazy,
+        seed: 0, // no randomness used by the contiguous partition
+        mem_limit,
+        partition: PartitionScheme::Contiguous,
+        local_view: false,
+        added_elements: 0,
+        compare_all_children: true,
+        comm: Default::default(),
+    };
+    run_dist(oracle, constraint, &cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constraint::Cardinality;
+    use crate::objective::KCover;
+    use std::sync::Arc;
+
+    #[test]
+    fn contiguous_partition_covers_everything() {
+        let data = crate::data::gen::transactions(
+            crate::data::gen::TransactionParams {
+                num_sets: 300,
+                num_items: 200,
+                mean_size: 5.0,
+                zipf_s: 0.9,
+            },
+            3,
+        );
+        let o = KCover::new(Arc::new(data));
+        let c = Cardinality::new(8);
+        let out = run_greedi(&o, &c, 6, None).unwrap();
+        assert!(out.value > 0.0);
+        assert!(out.solution.len() <= 8);
+        // Deterministic: no tape involved.
+        let out2 = run_greedi(&o, &c, 6, None).unwrap();
+        assert_eq!(out.solution, out2.solution);
+    }
+
+    #[test]
+    fn random_partition_beats_adversarial_order_on_clustered_data() {
+        // Construct data where contiguity is adversarial: identical
+        // transactions are adjacent, so each GreeDI chunk is redundant.
+        let mut sets = Vec::new();
+        for block in 0..10u32 {
+            for _ in 0..30 {
+                sets.push(vec![block * 4, block * 4 + 1, block * 4 + 2, block * 4 + 3]);
+            }
+        }
+        let o = KCover::new(Arc::new(crate::data::itemsets::ItemsetCollection::from_sets(&sets)));
+        let c = Cardinality::new(10);
+        let gd = run_greedi(&o, &c, 10, None).unwrap();
+        let rg = crate::algo::run_randgreedi(
+            &o,
+            &c,
+            crate::algo::randgreedi::RandGreediOpts::new(10, 5),
+        )
+        .unwrap();
+        // Both should actually solve this easy instance; the point is that
+        // the random partition is never *worse*.
+        assert!(rg.value >= gd.value - 1e-9);
+    }
+}

@@ -1,0 +1,469 @@
+//! The GreedyML engine (Algorithm 3.1) — also the substrate for GreeDI and
+//! RandGreeDI, which are the single-level special case with different
+//! partition/argmax settings.
+//!
+//! Execution is level-synchronous BSP: level 0 runs GREEDY on every leaf's
+//! partition in parallel; each level ℓ ≥ 1 gathers the children's solutions
+//! at their parents (charging the memory meter and the comm model), runs
+//! GREEDY on the union, and keeps `argmax{f(merged), f(previous)}` per the
+//! recurrence of Fig. 3.  Machine 0 participates at every level, so its
+//! accumulated gain-query count is the paper's "function calls on the
+//! critical path".
+
+use super::{DistConfig, DistOutcome, LevelStats, PartitionScheme};
+use crate::constraint::Constraint;
+use crate::dist::{parallel_map, DistError, MachineStats, MemoryMeter, NodeStep, Trace};
+use crate::greedy::{greedy, GreedyOutcome};
+use crate::objective::Oracle;
+use crate::util::rng::{RandomTape, Rng};
+use crate::util::timer::timed;
+use crate::{ElemId, MachineId};
+
+/// Rolling state of one machine between supersteps.
+struct NodeCtx {
+    stats: MachineStats,
+    meter: MemoryMeter,
+    /// S_prev: the machine's best solution so far.
+    sol: Vec<ElemId>,
+    /// f(S_prev) as evaluated at this machine's last active level.
+    sol_value: f64,
+    /// Bytes currently charged for holding `sol`.
+    sol_bytes: u64,
+}
+
+/// What one machine did during a single superstep (level aggregation).
+#[derive(Clone, Copy, Debug, Default)]
+struct StepDelta {
+    comp_secs: f64,
+    comm_secs: f64,
+    calls: u64,
+    accum_elems: usize,
+}
+
+/// A child's shipped solution.
+struct ChildMsg {
+    sol: Vec<ElemId>,
+    value: f64,
+    bytes: u64,
+}
+
+/// Run GreedyML with the given config (Algorithm 3.1).
+pub fn run_greedyml(
+    oracle: &dyn Oracle,
+    constraint: &dyn Constraint,
+    cfg: &DistConfig,
+) -> Result<DistOutcome, DistError> {
+    run_dist(oracle, constraint, cfg)
+}
+
+/// The shared engine (see module docs). Public so the baselines reuse it.
+pub fn run_dist(
+    oracle: &dyn Oracle,
+    constraint: &dyn Constraint,
+    cfg: &DistConfig,
+) -> Result<DistOutcome, DistError> {
+    let tree = cfg.tree;
+    let m = tree.machines();
+    let n = oracle.n();
+
+    // ---- Line 2: partition the data over the leaves. ------------------
+    let parts: Vec<Vec<ElemId>> = match cfg.partition {
+        PartitionScheme::Random => RandomTape::draw(n, m, cfg.seed).partition(),
+        PartitionScheme::Contiguous => {
+            let mut parts = vec![Vec::new(); m as usize];
+            for e in 0..n {
+                parts[(e * m as usize / n.max(1)).min(m as usize - 1)].push(e as ElemId);
+            }
+            parts
+        }
+    };
+
+    let mut levels: Vec<LevelStats> = Vec::with_capacity(tree.levels() as usize + 1);
+
+    // ---- Level 0 superstep: GREEDY on every partition. -----------------
+    let leaf_inputs: Vec<(MachineId, Vec<ElemId>)> =
+        parts.into_iter().enumerate().map(|(i, p)| (i as MachineId, p)).collect();
+    let leaf_results: Vec<Result<(NodeCtx, StepDelta), DistError>> =
+        parallel_map(leaf_inputs, |(id, part)| {
+            let mut stats = MachineStats::new(id);
+            let mut meter = MemoryMeter::new(cfg.mem_limit);
+            let data_bytes: u64 = part.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
+            meter.charge(data_bytes, id, 0, "partition data")?;
+            let view = cfg.local_view.then_some(&part[..]);
+            let (out, secs): (GreedyOutcome, f64) =
+                timed(|| greedy(cfg.kind, oracle, constraint, &part, view));
+            stats.calls = out.calls;
+            stats.cost = out.cost;
+            stats.comp_secs = secs;
+            let sol_bytes: u64 =
+                out.solution.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
+            meter.charge(sol_bytes, id, 0, "local solution")?;
+            // The partition itself is no longer needed once the local
+            // solution exists (only S_prev crosses levels).
+            meter.release(data_bytes);
+            stats.peak_mem = meter.peak();
+            let delta = StepDelta {
+                comp_secs: secs,
+                comm_secs: 0.0,
+                calls: out.calls,
+                accum_elems: 0,
+            };
+            Ok((
+                NodeCtx { stats, meter, sol: out.solution, sol_value: out.value, sol_bytes },
+                delta,
+            ))
+        });
+
+    let mut ctxs: Vec<Option<NodeCtx>> = (0..m).map(|_| None).collect();
+    let mut deltas0 = Vec::with_capacity(m as usize);
+    let mut trace_steps: Vec<NodeStep> = Vec::new();
+    for r in leaf_results {
+        let (ctx, d) = r?;
+        trace_steps.push(NodeStep {
+            machine: ctx.stats.id,
+            level: 0,
+            comp_secs: d.comp_secs,
+            comm_secs: d.comm_secs,
+            calls: d.calls,
+        });
+        deltas0.push(d);
+        let id = ctx.stats.id as usize;
+        ctxs[id] = Some(ctx);
+    }
+    levels.push(aggregate_level(0, &deltas0));
+
+    // Machines that have finished all their roles.
+    let mut retired: Vec<Option<MachineStats>> = (0..m).map(|_| None).collect();
+    let mut max_accum_elems = 0usize;
+
+    // ---- Levels 1..=L: accumulate. -------------------------------------
+    for level in 1..=tree.levels() {
+        let active = tree.nodes_at_level(level);
+        struct Task {
+            id: MachineId,
+            ctx: NodeCtx,
+            children: Vec<ChildMsg>,
+        }
+        let mut tasks: Vec<Task> = Vec::with_capacity(active.len());
+        for &id in &active {
+            let ctx = ctxs[id as usize].take().expect("parent ctx missing");
+            let mut children = Vec::new();
+            for c in tree.children(level, id) {
+                if c == id {
+                    continue; // j = 0: the node's own S_prev stays in ctx.
+                }
+                let mut child = ctxs[c as usize].take().expect("child ctx missing");
+                let bytes: u64 =
+                    child.sol.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
+                child.stats.bytes_sent += bytes;
+                // Child is done (Algorithm 3.1 lines 6-7: send & break).
+                children.push(ChildMsg { sol: std::mem::take(&mut child.sol), value: child.sol_value, bytes });
+                retired[c as usize] = Some(child.stats);
+            }
+            tasks.push(Task { id, ctx, children });
+        }
+
+        let results: Vec<Result<(NodeCtx, StepDelta), DistError>> =
+            parallel_map(tasks, |mut task| {
+                let id = task.id;
+                let ctx = &mut task.ctx;
+                // Receive child solutions: comm model + memory charges.
+                let msg_bytes: Vec<u64> = task.children.iter().map(|c| c.bytes).collect();
+                let recv_bytes: u64 = msg_bytes.iter().sum();
+                ctx.meter.charge(recv_bytes, id, level, "child solutions")?;
+                let comm_secs = cfg.comm.gather_time(&msg_bytes);
+                ctx.stats.comm_secs += comm_secs;
+                ctx.stats.bytes_received += recv_bytes;
+
+                // D ← S_prev ∪ child solutions (lines 8-13), plus the §6.4
+                // optional random extra elements.
+                let mut d: Vec<ElemId> = ctx.sol.clone();
+                for c in &task.children {
+                    d.extend_from_slice(&c.sol);
+                }
+                let added = sample_added(cfg, n, level, id);
+                let mut add_bytes = 0u64;
+                if !added.is_empty() {
+                    add_bytes = added.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
+                    ctx.meter.charge(add_bytes, id, level, "added elements")?;
+                    d.extend_from_slice(&added);
+                }
+                let accum_elems = d.len();
+
+                // Run GREEDY on the union (line 14).
+                let view = cfg.local_view.then_some(&d[..]);
+                let (out, secs) = timed(|| greedy(cfg.kind, oracle, constraint, &d, view));
+                let mut calls = out.calls;
+                let mut cost = out.cost;
+
+                // Line 15: S_prev ← argmax{f(S), f(S_prev)}.  Under a local
+                // view the stored f(S_prev) was computed against different
+                // data, so re-evaluate it against this node's view.
+                let prev_value = if cfg.local_view {
+                    let mut st = oracle.new_state(view);
+                    for &e in &ctx.sol {
+                        calls += 1;
+                        cost += st.call_cost(e);
+                        st.commit(e);
+                    }
+                    st.value()
+                } else {
+                    ctx.sol_value
+                };
+
+                let mut best_sol = out.solution;
+                let mut best_val = out.value;
+                if prev_value > best_val {
+                    best_val = prev_value;
+                    best_sol = ctx.sol.clone();
+                }
+                if cfg.compare_all_children {
+                    // RandGreeDI (Algorithm 2.2 line 7): also compare every
+                    // child's local solution.
+                    for c in &task.children {
+                        if c.value > best_val {
+                            best_val = c.value;
+                            best_sol = c.sol.clone();
+                        }
+                    }
+                }
+
+                ctx.stats.calls += calls;
+                ctx.stats.cost += cost;
+                ctx.stats.comp_secs += secs;
+                ctx.stats.top_level = level;
+                ctx.stats.max_accum_elems = ctx.stats.max_accum_elems.max(accum_elems);
+
+                // Swap in the new solution. The merged solution is a subset
+                // of D (greedy selects *from* the union), so its data is
+                // already charged; release everything D-related first, then
+                // re-charge just the retained solution.
+                let new_bytes: u64 =
+                    best_sol.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
+                ctx.meter.release(recv_bytes + add_bytes + ctx.sol_bytes);
+                ctx.meter.charge(new_bytes, id, level, "merged solution")?;
+                ctx.sol = best_sol;
+                ctx.sol_value = best_val;
+                ctx.sol_bytes = new_bytes;
+                ctx.stats.peak_mem = ctx.meter.peak();
+                let delta = StepDelta { comp_secs: secs, comm_secs, calls, accum_elems };
+                Ok((task.ctx, delta))
+            });
+
+        let mut step_deltas = Vec::with_capacity(active.len());
+        for r in results {
+            let (ctx, d) = r?;
+            max_accum_elems = max_accum_elems.max(d.accum_elems);
+            trace_steps.push(NodeStep {
+                machine: ctx.stats.id,
+                level,
+                comp_secs: d.comp_secs,
+                comm_secs: d.comm_secs,
+                calls: d.calls,
+            });
+            step_deltas.push(d);
+            let id = ctx.stats.id as usize;
+            ctxs[id] = Some(ctx);
+        }
+        levels.push(aggregate_level(level, &step_deltas));
+    }
+
+    // ---- Collect the root and any never-retired machines. --------------
+    let root = ctxs[0].take().expect("root ctx missing");
+    let solution = root.sol.clone();
+    let value = root.sol_value;
+    retired[0] = Some(root.stats);
+    for (i, slot) in ctxs.into_iter().enumerate() {
+        if let Some(ctx) = slot {
+            retired[i] = Some(ctx.stats);
+        }
+    }
+    let machines: Vec<MachineStats> =
+        retired.into_iter().map(|s| s.expect("machine stats missing")).collect();
+
+    let critical_calls = machines[0].calls;
+    let total_calls = machines.iter().map(|s| s.calls).sum();
+    let comp_secs = levels.iter().map(|l| l.comp_secs).sum();
+    let comm_secs = levels.iter().map(|l| l.comm_secs).sum();
+
+    Ok(DistOutcome {
+        solution,
+        value,
+        machines,
+        levels,
+        critical_calls,
+        total_calls,
+        comp_secs,
+        comm_secs,
+        max_accum_elems,
+        trace: Trace::new(trace_steps),
+    })
+}
+
+/// §6.4 "added images": extra random elements mixed into every
+/// accumulation step, seeded per (level, node) for reproducibility.
+fn sample_added(cfg: &DistConfig, n: usize, level: u32, id: MachineId) -> Vec<ElemId> {
+    if cfg.added_elements == 0 {
+        return Vec::new();
+    }
+    let count = cfg.added_elements.min(n);
+    let mut rng = Rng::split(cfg.seed ^ 0xADDED, ((level as u64) << 32) | id as u64);
+    rng.sample_distinct(n, count).into_iter().map(|e| e as ElemId).collect()
+}
+
+/// Fold one superstep's per-node deltas into a [`LevelStats`]: BSP
+/// semantics — the superstep lasts as long as its slowest node.
+fn aggregate_level(level: u32, deltas: &[StepDelta]) -> LevelStats {
+    let mut out = LevelStats { level, ..Default::default() };
+    for d in deltas {
+        out.active_nodes += 1;
+        out.comp_secs = out.comp_secs.max(d.comp_secs);
+        out.comm_secs = out.comm_secs.max(d.comm_secs);
+        out.max_calls = out.max_calls.max(d.calls);
+        out.total_calls += d.calls;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constraint::Cardinality;
+    use crate::objective::{KCover, KDominatingSet, Oracle};
+    use crate::tree::AccumulationTree;
+    use std::sync::Arc;
+
+    fn cover_oracle(n: usize, seed: u64) -> KCover {
+        let data = crate::data::gen::transactions(
+            crate::data::gen::TransactionParams {
+                num_sets: n,
+                num_items: n / 2,
+                mean_size: 6.0,
+                zipf_s: 0.9,
+            },
+            seed,
+        );
+        KCover::new(Arc::new(data))
+    }
+
+    #[test]
+    fn runs_and_produces_feasible_solution() {
+        let o = cover_oracle(600, 3);
+        let c = Cardinality::new(12);
+        let cfg = DistConfig::greedyml(AccumulationTree::new(8, 2), 42);
+        let out = run_greedyml(&o, &c, &cfg).unwrap();
+        assert!(out.solution.len() <= 12);
+        assert!(out.value > 0.0);
+        assert!((out.value - o.eval(&out.solution)).abs() < 1e-9);
+        assert_eq!(out.machines.len(), 8);
+        assert_eq!(out.levels.len(), 4, "L=3 ⇒ 4 supersteps");
+        assert_eq!(out.critical_calls, out.machines[0].calls);
+        assert!(out.total_calls >= out.critical_calls);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let o = cover_oracle(400, 5);
+        let c = Cardinality::new(8);
+        let cfg = DistConfig::greedyml(AccumulationTree::new(6, 2), 7);
+        let a = run_greedyml(&o, &c, &cfg).unwrap();
+        let b = run_greedyml(&o, &c, &cfg).unwrap();
+        assert_eq!(a.solution, b.solution);
+        assert_eq!(a.total_calls, b.total_calls);
+        let cfg2 = DistConfig { seed: 8, ..cfg.clone() };
+        let c2 = run_greedyml(&o, &c, &cfg2).unwrap();
+        assert_ne!(a.solution, c2.solution, "different tape should differ");
+    }
+
+    #[test]
+    fn value_close_to_sequential() {
+        let o = cover_oracle(800, 9);
+        let c = Cardinality::new(16);
+        let seq = crate::greedy::greedy_lazy(&o, &c, &(0..800).collect::<Vec<_>>(), None);
+        for b in [2u32, 4, 8] {
+            let cfg = DistConfig::greedyml(AccumulationTree::new(8, b), 1);
+            let out = run_greedyml(&o, &c, &cfg).unwrap();
+            assert!(
+                out.value >= 0.75 * seq.value,
+                "b={b}: dist {} vs seq {}",
+                out.value,
+                seq.value
+            );
+        }
+    }
+
+    #[test]
+    fn memory_limit_trips_at_root_of_wide_tree() {
+        // Wide accumulation (b = m) must hold m−1 child solutions at the
+        // root; a narrow tree (b = 2) holds only 1. Choose a limit between.
+        let g = Arc::new(crate::data::gen::barabasi_albert(2000, 3, 5));
+        let o = KDominatingSet::new(g);
+        let k = 40;
+        let c = Cardinality::new(k);
+        // Probe memory: unlimited wide run's root peak.
+        let wide = DistConfig::greedyml(AccumulationTree::randgreedi(16), 3);
+        let ok = run_greedyml(&o, &c, &wide).unwrap();
+        let root_peak = ok.machines[0].peak_mem;
+        let limit = root_peak * 2 / 3;
+        let wide_limited = DistConfig { mem_limit: Some(limit), ..wide };
+        let err = run_greedyml(&o, &c, &wide_limited).unwrap_err();
+        match err {
+            DistError::OutOfMemory { machine, level, .. } => {
+                assert_eq!(machine, 0, "root is the bottleneck");
+                assert_eq!(level, 1);
+            }
+        }
+        // The same limit with a binary tree succeeds (more levels, less
+        // fan-in) — the paper's headline memory result (§6.2).
+        let narrow = DistConfig {
+            mem_limit: Some(limit),
+            ..DistConfig::greedyml(AccumulationTree::new(16, 2), 3)
+        };
+        let out = run_greedyml(&o, &c, &narrow).unwrap();
+        assert!(out.value > 0.0);
+        assert!(out.peak_mem() <= limit);
+    }
+
+    #[test]
+    fn single_machine_tree_equals_sequential() {
+        let o = cover_oracle(200, 11);
+        let c = Cardinality::new(6);
+        let cfg = DistConfig::greedyml(AccumulationTree::new(1, 2), 5);
+        let out = run_greedyml(&o, &c, &cfg).unwrap();
+        let seq = crate::greedy::greedy_lazy(&o, &c, &(0..200).collect::<Vec<_>>(), None);
+        assert_eq!(out.solution, seq.solution);
+        assert_eq!(out.levels.len(), 1);
+        assert_eq!(out.comm_secs, 0.0);
+    }
+
+    #[test]
+    fn comm_bytes_flow_up_the_tree() {
+        let o = cover_oracle(400, 2);
+        let c = Cardinality::new(10);
+        let cfg = DistConfig::greedyml(AccumulationTree::new(4, 2), 9);
+        let out = run_greedyml(&o, &c, &cfg).unwrap();
+        let sent: u64 = out.machines.iter().map(|m| m.bytes_sent).sum();
+        let received: u64 = out.machines.iter().map(|m| m.bytes_received).sum();
+        assert_eq!(sent, received, "no bytes lost in flight");
+        assert!(sent > 0);
+        assert!(out.comm_secs > 0.0);
+        // Non-root machines each send exactly once.
+        for mstats in &out.machines[1..] {
+            assert!(mstats.bytes_sent > 0, "machine {} never sent", mstats.id);
+        }
+        assert_eq!(out.machines[0].bytes_sent, 0, "root sends nowhere");
+    }
+
+    #[test]
+    fn added_elements_join_the_accumulation() {
+        let o = cover_oracle(300, 4);
+        let c = Cardinality::new(8);
+        let base = DistConfig::greedyml(AccumulationTree::new(4, 2), 13);
+        let with_added = DistConfig { added_elements: 50, ..base.clone() };
+        let a = run_greedyml(&o, &c, &base).unwrap();
+        let b = run_greedyml(&o, &c, &with_added).unwrap();
+        assert!(b.max_accum_elems >= a.max_accum_elems + 50 - 8);
+        // More candidates can only help (or tie) coverage quality here.
+        assert!(b.value >= a.value * 0.95);
+    }
+}

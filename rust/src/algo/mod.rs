@@ -1,0 +1,139 @@
+//! The four algorithms the paper compares:
+//!
+//! * [`seq::run_sequential`] — GREEDY / Lazy Greedy on the whole dataset.
+//! * [`greedi::run_greedi`] — GreeDI (Mirzasoleiman et al.): *arbitrary*
+//!   partition, single accumulation.
+//! * [`randgreedi::run_randgreedi`] — RandGreeDI (Barbosa et al.,
+//!   Algorithm 2.2): uniform random partition, single accumulation,
+//!   argmax over the global solution and every local one.
+//! * [`greedyml::run_greedyml`] — this paper's GreedyML (Algorithm 3.1):
+//!   uniform random partition, multi-level accumulation tree, per-node
+//!   argmax against the node's own previous-level solution (Fig. 3).
+//!
+//! All four share one engine ([`greedyml::run_dist`]) parameterized by
+//! partition scheme, tree shape and argmax semantics, so comparisons
+//! measure the algorithmic difference and nothing else.
+
+use crate::dist::{CommModel, MachineStats};
+use crate::greedy::GreedyKind;
+use crate::tree::AccumulationTree;
+use crate::ElemId;
+
+pub mod greedi;
+pub mod greedyml;
+pub mod randgreedi;
+pub mod seq;
+
+pub use greedi::run_greedi;
+pub use greedyml::{run_dist, run_greedyml};
+pub use randgreedi::run_randgreedi;
+pub use seq::run_sequential;
+
+/// How the ground set is split across leaf machines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionScheme {
+    /// Uniform random (the random tape `r_W`; RandGreeDI / GreedyML).
+    Random,
+    /// Contiguous chunks (GreeDI's "arbitrary" partition).
+    Contiguous,
+}
+
+/// Configuration of one distributed run.
+#[derive(Clone, Debug)]
+pub struct DistConfig {
+    /// Accumulation tree (machines + branching; RandGreeDI = b = m).
+    pub tree: AccumulationTree,
+    /// Greedy implementation at every node (paper uses Lazy).
+    pub kind: GreedyKind,
+    /// Seed of the random tape.
+    pub seed: u64,
+    /// Per-machine memory limit in bytes (None = unlimited).
+    pub mem_limit: Option<u64>,
+    /// Partition scheme.
+    pub partition: PartitionScheme,
+    /// Evaluate objectives against machine-local ground sets (the paper's
+    /// k-medoid scheme, §6.4). Coverage objectives ignore the view.
+    pub local_view: bool,
+    /// Random extra elements added to every accumulation step (§6.4
+    /// "added images" variant). 0 = local-only.
+    pub added_elements: usize,
+    /// RandGreeDI argmax semantics: compare the merged solution against
+    /// *every* child solution (Algorithm 2.2 line 7) instead of only the
+    /// node's own previous solution (Fig. 3).
+    pub compare_all_children: bool,
+    /// Communication cost model.
+    pub comm: CommModel,
+}
+
+impl DistConfig {
+    /// GreedyML defaults for a given tree.
+    pub fn greedyml(tree: AccumulationTree, seed: u64) -> Self {
+        Self {
+            tree,
+            kind: GreedyKind::Lazy,
+            seed,
+            mem_limit: None,
+            partition: PartitionScheme::Random,
+            local_view: false,
+            added_elements: 0,
+            compare_all_children: false,
+            comm: CommModel::default(),
+        }
+    }
+}
+
+/// Per-level aggregates (one BSP superstep each).
+#[derive(Clone, Debug, Default)]
+pub struct LevelStats {
+    /// Tree level (0 = leaves).
+    pub level: u32,
+    /// Number of nodes that computed at this level.
+    pub active_nodes: usize,
+    /// Max computation seconds over active nodes (BSP superstep length).
+    pub comp_secs: f64,
+    /// Max modeled communication seconds over active nodes.
+    pub comm_secs: f64,
+    /// Max gain queries by any active node at this level.
+    pub max_calls: u64,
+    /// Total gain queries across the level.
+    pub total_calls: u64,
+}
+
+/// Result of a distributed run.
+#[derive(Clone, Debug)]
+pub struct DistOutcome {
+    /// Final solution (from the root, machine 0).
+    pub solution: Vec<ElemId>,
+    /// Objective value of the final solution as seen at the root (under
+    /// its evaluation view if `local_view`).
+    pub value: f64,
+    /// Per-machine statistics (length = m).
+    pub machines: Vec<MachineStats>,
+    /// Per-level aggregates (length = L + 1).
+    pub levels: Vec<LevelStats>,
+    /// Gain queries on the critical path — machine 0's total (§5).
+    pub critical_calls: u64,
+    /// Total gain queries across all machines.
+    pub total_calls: u64,
+    /// BSP computation seconds: Σ over levels of the superstep max.
+    pub comp_secs: f64,
+    /// BSP communication seconds: Σ over levels of the superstep max.
+    pub comm_secs: f64,
+    /// Largest candidate-set size any accumulator worked on
+    /// (Table 1 "Elements per interior node").
+    pub max_accum_elems: usize,
+    /// Per-(machine, level) timeline (Chrome-trace exportable).
+    pub trace: crate::dist::Trace,
+}
+
+impl DistOutcome {
+    /// Total modeled runtime (computation + communication).
+    pub fn total_secs(&self) -> f64 {
+        self.comp_secs + self.comm_secs
+    }
+
+    /// Peak memory over all machines.
+    pub fn peak_mem(&self) -> u64 {
+        self.machines.iter().map(|m| m.peak_mem).max().unwrap_or(0)
+    }
+}

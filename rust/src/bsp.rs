@@ -1,0 +1,159 @@
+//! BSP cost model — the closed forms of Table 1.
+//!
+//! These are the paper's *analytic* complexity expressions for GREEDY,
+//! RandGreeDI and GreedyML under cardinality constraints.  The
+//! `table1_complexity` bench validates the *measured* call counts from the
+//! simulator against these formulas (shape, not constants), and the
+//! coordinator uses them to predict whether a configuration will fit in
+//! memory before running it.
+
+/// Problem/machine parameters for the model.
+#[derive(Clone, Copy, Debug)]
+pub struct BspParams {
+    /// Ground-set size n.
+    pub n: u64,
+    /// Solution size k.
+    pub k: u64,
+    /// Number of machines m.
+    pub m: u64,
+    /// Accumulation levels L (1 for RandGreeDI).
+    pub levels: u64,
+    /// Per-element δ (avg. neighbours / itemset size / feature count).
+    pub delta: f64,
+}
+
+impl BspParams {
+    /// `⌈m^{1/L}⌉` — the per-node fan-in of a balanced L-level tree.
+    pub fn fan_in(&self) -> u64 {
+        if self.levels == 0 {
+            return 1;
+        }
+        let root = (self.m as f64).powf(1.0 / self.levels as f64);
+        // Round carefully: powf(8, 1/3) can come out at 1.9999….
+        let r = root.ceil();
+        if ((r - 1.0).powi(self.levels as i32) >= self.m as f64 - 1e-9) && r > 1.0 {
+            (r - 1.0) as u64
+        } else {
+            r as u64
+        }
+    }
+
+    /// GREEDY total function calls: `n·k`.
+    pub fn greedy_calls(&self) -> u64 {
+        self.n * self.k
+    }
+
+    /// RandGreeDI calls per machine: `k(n/m + k·m)`.
+    pub fn randgreedi_calls(&self) -> u64 {
+        self.k * (self.n / self.m + self.k * self.m)
+    }
+
+    /// GreedyML calls per machine: `k(n/m + L·k·⌈m^{1/L}⌉)`.
+    pub fn greedyml_calls(&self) -> u64 {
+        self.k * (self.n / self.m + self.levels * self.k * self.fan_in())
+    }
+
+    /// Elements held by an interior node: `k·m` (RandGreeDI) vs
+    /// `k·⌈m^{1/L}⌉` (GreedyML).
+    pub fn interior_elems_randgreedi(&self) -> u64 {
+        self.k * self.m
+    }
+
+    /// See [`interior_elems_randgreedi`](Self::interior_elems_randgreedi).
+    pub fn interior_elems_greedyml(&self) -> u64 {
+        self.k * self.fan_in()
+    }
+
+    /// Communication cost: `δ·k·m` (RandGreeDI).
+    pub fn comm_randgreedi(&self) -> f64 {
+        self.delta * (self.k * self.m) as f64
+    }
+
+    /// Communication cost: `δ·k·L·⌈m^{1/L}⌉` (GreedyML).
+    pub fn comm_greedyml(&self) -> f64 {
+        self.delta * (self.k * self.levels * self.fan_in()) as f64
+    }
+
+    /// k-cover / k-dominating-set computation: `δ·k·(n/m + k·m)` for
+    /// RandGreeDI.
+    pub fn coverage_comp_randgreedi(&self) -> f64 {
+        self.delta * self.randgreedi_calls() as f64
+    }
+
+    /// k-cover / k-dominating-set computation for GreedyML.
+    pub fn coverage_comp_greedyml(&self) -> f64 {
+        self.delta * self.greedyml_calls() as f64
+    }
+
+    /// k-medoid computation: `δ·k((n/m)² + (k·m)²)` for RandGreeDI.
+    pub fn kmedoid_comp_randgreedi(&self) -> f64 {
+        let leaf = (self.n / self.m) as f64;
+        let interior = (self.k * self.m) as f64;
+        self.delta * self.k as f64 * (leaf * leaf + interior * interior)
+    }
+
+    /// k-medoid computation: `δ·k((n/m)² + L(k·⌈m^{1/L}⌉)²)` for GreedyML.
+    pub fn kmedoid_comp_greedyml(&self) -> f64 {
+        let leaf = (self.n / self.m) as f64;
+        let interior = (self.k * self.fan_in()) as f64;
+        self.delta * self.k as f64 * (leaf * leaf + self.levels as f64 * interior * interior)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(n: u64, k: u64, m: u64, levels: u64) -> BspParams {
+        BspParams { n, k, m, levels, delta: 2.0 }
+    }
+
+    #[test]
+    fn fan_in_exact_powers() {
+        assert_eq!(p(0, 1, 8, 3).fan_in(), 2);
+        assert_eq!(p(0, 1, 8, 1).fan_in(), 8);
+        assert_eq!(p(0, 1, 8, 2).fan_in(), 3, "ceil(sqrt 8) = 3");
+        assert_eq!(p(0, 1, 27, 3).fan_in(), 3);
+        assert_eq!(p(0, 1, 16, 2).fan_in(), 4);
+        assert_eq!(p(0, 1, 16, 4).fan_in(), 2);
+    }
+
+    #[test]
+    fn randgreedi_is_greedyml_with_l1() {
+        let a = p(1_000_000, 100, 32, 1);
+        assert_eq!(a.randgreedi_calls(), a.greedyml_calls());
+        assert_eq!(a.interior_elems_randgreedi(), a.interior_elems_greedyml());
+        assert!((a.comm_randgreedi() - a.comm_greedyml()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multilevel_reduces_interior_cost() {
+        // The paper's claim: for large k the k²·m accumulation dominates
+        // and L > 1 cuts it to L·k²·m^{1/L}.
+        let rg = p(1_000_000, 10_000, 32, 1);
+        let gml = p(1_000_000, 10_000, 32, 5);
+        assert!(gml.greedyml_calls() < rg.randgreedi_calls());
+        assert!(gml.interior_elems_greedyml() < rg.interior_elems_randgreedi());
+        assert!(gml.kmedoid_comp_greedyml() < rg.kmedoid_comp_randgreedi());
+    }
+
+    #[test]
+    fn comm_grows_linearly_vs_logarithmically() {
+        // Fig. 6: RandGreeDI comm is O(km); GreedyML (b=2) is O(k log m).
+        let mut prev_ratio = 0.0;
+        for m in [8u64, 16, 32, 64, 128] {
+            let levels = (m as f64).log2() as u64;
+            let rg = p(1 << 20, 50, m, 1);
+            let gml = p(1 << 20, 50, m, levels);
+            let ratio = rg.comm_randgreedi() / gml.comm_greedyml();
+            assert!(ratio > prev_ratio, "ratio should widen with m");
+            prev_ratio = ratio;
+        }
+        assert!(prev_ratio > 4.0, "at m=128 the gap should be substantial");
+    }
+
+    #[test]
+    fn greedy_baseline() {
+        assert_eq!(p(1000, 10, 4, 1).greedy_calls(), 10_000);
+    }
+}

@@ -1,0 +1,315 @@
+//! A small property-based testing harness ("proptest-lite").
+//!
+//! `proptest`/`quickcheck` are unavailable offline, so this module provides
+//! the subset we need: composable random generators over a seeded [`Rng`],
+//! a `forall` runner that reports the seed and case number of a failure so
+//! it can be replayed deterministically, and greedy input shrinking for the
+//! common container shapes (vectors and scalars).
+//!
+//! Usage:
+//! ```no_run
+//! # // no_run: doctest binaries miss the xla_extension rpath at load time.
+//! use greedyml::check::{forall, Gen};
+//! forall("sum is commutative", 200, Gen::vec(Gen::u64(0..100), 0..20), |xs| {
+//!     let mut rev = xs.clone();
+//!     rev.reverse();
+//!     let a: u64 = xs.iter().sum();
+//!     let b: u64 = rev.iter().sum();
+//!     if a == b { Ok(()) } else { Err(format!("{a} != {b}")) }
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+use std::ops::Range;
+
+/// A generator of values of type `T` from a PRNG, plus a shrinker that
+/// proposes smaller variants of a failing input.
+pub struct Gen<T> {
+    gen: Box<dyn Fn(&mut Rng) -> T>,
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: 'static> Gen<T> {
+    /// Build from closures.
+    pub fn new(
+        gen: impl Fn(&mut Rng) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Self { gen: Box::new(gen), shrink: Box::new(shrink) }
+    }
+
+    /// Generate one value.
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.gen)(rng)
+    }
+
+    /// Shrink candidates for a failing value.
+    pub fn shrinks(&self, v: &T) -> Vec<T> {
+        (self.shrink)(v)
+    }
+
+    /// Map the generated value (shrinking is lost across the mapping).
+    pub fn map<U: 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |rng| f(self.sample(rng)), |_| Vec::new())
+    }
+}
+
+impl Gen<u64> {
+    /// Uniform u64 in `range`.
+    pub fn u64(range: Range<u64>) -> Gen<u64> {
+        assert!(!range.is_empty());
+        let lo = range.start;
+        let hi = range.end;
+        Gen::new(
+            move |rng| lo + rng.below(hi - lo),
+            move |&v| {
+                let mut out = Vec::new();
+                if v > lo {
+                    out.push(lo); // smallest
+                    out.push(lo + (v - lo) / 2); // halfway down
+                    out.push(v - 1);
+                }
+                out.dedup();
+                out
+            },
+        )
+    }
+}
+
+impl Gen<usize> {
+    /// Uniform usize in `range`.
+    pub fn usize(range: Range<usize>) -> Gen<usize> {
+        Gen::u64(range.start as u64..range.end as u64).map_keep_shrink_usize()
+    }
+}
+
+impl Gen<u64> {
+    fn map_keep_shrink_usize(self) -> Gen<usize> {
+        Gen::new(
+            move |rng| self.sample(rng) as usize,
+            |&v| {
+                let mut out = Vec::new();
+                if v > 0 {
+                    out.push(0);
+                    out.push(v / 2);
+                    out.push(v - 1);
+                }
+                out.dedup();
+                out
+            },
+        )
+    }
+}
+
+impl Gen<f64> {
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64(lo: f64, hi: f64) -> Gen<f64> {
+        assert!(lo < hi);
+        Gen::new(
+            move |rng| lo + rng.f64() * (hi - lo),
+            move |&v| {
+                let mut out = Vec::new();
+                if v != lo {
+                    out.push(lo);
+                    out.push(lo + (v - lo) / 2.0);
+                }
+                out
+            },
+        )
+    }
+}
+
+impl Gen<bool> {
+    /// Bernoulli(p).
+    pub fn bool(p: f64) -> Gen<bool> {
+        Gen::new(move |rng| rng.bool(p), |&v| if v { vec![false] } else { vec![] })
+    }
+}
+
+impl<T: Clone + 'static> Gen<Vec<T>> {
+    /// Vector with length drawn from `len` and elements from `elem`.
+    pub fn vec(elem: Gen<T>, len: Range<usize>) -> Gen<Vec<T>> {
+        assert!(!len.is_empty());
+        let lo = len.start;
+        let hi = len.end;
+        let elem = std::rc::Rc::new(elem);
+        let elem2 = elem.clone();
+        Gen::new(
+            move |rng| {
+                let n = lo + rng.below((hi - lo) as u64) as usize;
+                (0..n).map(|_| elem.sample(rng)).collect()
+            },
+            move |v: &Vec<T>| {
+                let mut out: Vec<Vec<T>> = Vec::new();
+                // Structural shrinks: drop halves, drop single elements.
+                if v.len() > lo {
+                    out.push(v[..lo].to_vec());
+                    out.push(v[..v.len() / 2].to_vec().into_iter().chain(std::iter::empty()).collect());
+                    if v.len() > 1 {
+                        out.push(v[1..].to_vec());
+                        out.push(v[..v.len() - 1].to_vec());
+                    }
+                }
+                out.retain(|c| c.len() >= lo);
+                // Element-wise shrinks on the first shrinkable position.
+                for (i, x) in v.iter().enumerate() {
+                    let cands = elem2.shrinks(x);
+                    if !cands.is_empty() {
+                        for c in cands {
+                            let mut v2 = v.clone();
+                            v2[i] = c;
+                            out.push(v2);
+                        }
+                        break;
+                    }
+                }
+                out
+            },
+        )
+    }
+}
+
+/// Pair generator.
+pub fn pair<A: 'static, B: 'static>(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)> {
+    Gen::new(move |rng| (a.sample(rng), b.sample(rng)), |_| Vec::new())
+}
+
+/// Outcome of a property check.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` on `cases` random inputs from `gen`.  On failure, shrink the
+/// input greedily (up to 200 shrink steps) and panic with the seed, case
+/// index and minimized counterexample.
+pub fn forall<T: std::fmt::Debug + Clone + 'static>(
+    name: &str,
+    cases: usize,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    // Derive the seed from the property name so distinct properties explore
+    // distinct inputs but every run of the suite is reproducible.
+    let seed = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    forall_seeded(name, seed, cases, gen, prop)
+}
+
+/// [`forall`] with an explicit seed (replay a failure).
+pub fn forall_seeded<T: std::fmt::Debug + Clone + 'static>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Shrink.
+            let mut best = input;
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < 200 {
+                for cand in gen.shrinks(&best) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= 200 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}):\n  \
+                 counterexample (after {steps} shrink steps): {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut hits = 0usize;
+        // Can't capture &mut in Fn; use a Cell.
+        let hits_cell = std::cell::Cell::new(0usize);
+        forall("u64 in range", 300, Gen::u64(5..10), |&x| {
+            hits_cell.set(hits_cell.get() + 1);
+            ensure((5..10).contains(&x), format!("{x} out of range"))
+        });
+        hits += hits_cell.get();
+        assert_eq!(hits, 300);
+    }
+
+    #[test]
+    fn vec_gen_respects_len() {
+        forall("vec len", 200, Gen::vec(Gen::u64(0..3), 2..7), |v| {
+            ensure((2..7).contains(&v.len()), format!("len {}", v.len()))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_name() {
+        forall("always fails", 10, Gen::u64(0..100), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Property: all values < 50. Counterexample should shrink toward 50.
+        let result = std::panic::catch_unwind(|| {
+            forall("lt 50", 500, Gen::u64(0..1000), |&x| {
+                ensure(x < 50, format!("{x} >= 50"))
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // The minimized counterexample should be well below the initial
+        // random failure (typically exactly 50 via halving).
+        let after = msg.split("shrink steps): ").nth(1).unwrap();
+        let value: u64 = after.split_whitespace().next().unwrap().parse().unwrap();
+        assert!(value <= 99, "shrunk value {value} not small: {msg}");
+    }
+
+    #[test]
+    fn f64_and_bool_gens() {
+        forall("f64 range", 200, Gen::f64(-1.0, 1.0), |&x| {
+            ensure((-1.0..1.0).contains(&x), format!("{x}"))
+        });
+        forall("bool const", 50, Gen::bool(0.0), |&b| ensure(!b, "true from p=0"));
+    }
+
+    #[test]
+    fn pair_gen() {
+        forall("pair", 100, pair(Gen::u64(0..4), Gen::u64(10..14)), |&(a, b)| {
+            ensure(a < 4 && (10..14).contains(&b), format!("{a},{b}"))
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed| {
+            let g = Gen::u64(0..1_000_000);
+            let mut rng = Rng::new(seed);
+            (0..20).map(|_| g.sample(&mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+}

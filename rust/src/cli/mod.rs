@@ -1,0 +1,149 @@
+//! Minimal command-line argument parser (no `clap` offline).
+//!
+//! Grammar: `greedyml <command> [positional…] [--key value | --key=value |
+//! --flag]…`.  Flags may repeat (`--set a=1 --set b=2`).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// The subcommand (first non-flag token), if any.
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> crate::Result<Self> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                anyhow::ensure!(!stripped.is_empty(), "bare '--' is not a valid flag");
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let value = match inline {
+                    Some(v) => v,
+                    None => {
+                        // Consume the next token as the value unless it is
+                        // another flag (then this is a boolean flag).
+                        match it.peek() {
+                            Some(next) if !next.starts_with("--") => it.next().unwrap(),
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                out.flags.entry(key).or_default().push(value);
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> crate::Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Last value of a flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values of a repeatable flag.
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.flags.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Boolean flag (present and not "false").
+    pub fn has(&self, key: &str) -> bool {
+        matches!(self.get(key), Some(v) if v != "false")
+    }
+
+    /// Required string flag.
+    pub fn require(&self, key: &str) -> crate::Result<&str> {
+        self.get(key).ok_or_else(|| anyhow::anyhow!("missing required flag --{key}"))
+    }
+
+    /// u64 flag with default (supports k/m/g suffixes).
+    pub fn u64_or(&self, key: &str, default: u64) -> crate::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => crate::util::config::parse_u64(v)
+                .map_err(|m| anyhow::anyhow!("flag --{key}: {m}")),
+        }
+    }
+
+    /// Unknown-flag guard: error if any flag is not in `allowed`.
+    pub fn check_known(&self, allowed: &[&str]) -> crate::Result<()> {
+        for key in self.flags.keys() {
+            anyhow::ensure!(
+                allowed.contains(&key.as_str()),
+                "unknown flag --{key} (allowed: {})",
+                allowed.join(", ")
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn commands_positionals_flags() {
+        let a = parse(&["run", "extra", "--config", "exp.toml", "--set", "a=1", "--set=b=2", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["extra"]);
+        assert_eq!(a.get("config"), Some("exp.toml"));
+        assert_eq!(a.get_all("set"), &["a=1", "b=2"]);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse(&["tree", "--show", "--machines", "8"]);
+        assert!(a.has("show"));
+        assert_eq!(a.get("machines"), Some("8"));
+    }
+
+    #[test]
+    fn numeric_suffixes() {
+        let a = parse(&["run", "--k", "32k", "--mem", "100mb"]);
+        assert_eq!(a.u64_or("k", 0).unwrap(), 32_000);
+        assert_eq!(a.u64_or("mem", 0).unwrap(), 100 << 20);
+        assert_eq!(a.u64_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_flag_guard() {
+        let a = parse(&["run", "--bogus", "1"]);
+        assert!(a.check_known(&["config"]).is_err());
+        assert!(a.check_known(&["bogus"]).is_ok());
+    }
+
+    #[test]
+    fn require_errors() {
+        let a = parse(&["run"]);
+        assert!(a.require("config").is_err());
+    }
+
+    #[test]
+    fn bare_double_dash_rejected() {
+        assert!(Args::parse(["--".to_string()]).is_err());
+    }
+}

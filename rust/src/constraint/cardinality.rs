@@ -1,0 +1,86 @@
+//! Cardinality constraint `C = {A ⊆ W : |A| ≤ k}` — the family used in all
+//! of the paper's experiments.
+
+use super::{Constraint, ConstraintState};
+use crate::ElemId;
+
+/// `|S| ≤ k`.
+#[derive(Clone, Copy, Debug)]
+pub struct Cardinality {
+    k: usize,
+}
+
+impl Cardinality {
+    /// Constraint with solution-size budget `k`.
+    pub fn new(k: usize) -> Self {
+        Self { k }
+    }
+
+    /// The budget.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+impl Constraint for Cardinality {
+    fn new_state(&self) -> Box<dyn ConstraintState> {
+        Box::new(CardState { k: self.k, size: 0 })
+    }
+
+    fn rank(&self) -> usize {
+        self.k
+    }
+
+    fn name(&self) -> &'static str {
+        "cardinality"
+    }
+}
+
+struct CardState {
+    k: usize,
+    size: usize,
+}
+
+impl ConstraintState for CardState {
+    #[inline]
+    fn can_add(&self, _e: ElemId) -> bool {
+        self.size < self.k
+    }
+
+    fn commit(&mut self, _e: ElemId) {
+        self.size += 1;
+    }
+
+    #[inline]
+    fn full(&self) -> bool {
+        self.size >= self.k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enforces_budget() {
+        let c = Cardinality::new(2);
+        let mut st = c.new_state();
+        assert!(st.can_add(0) && !st.full());
+        st.commit(0);
+        st.commit(1);
+        assert!(!st.can_add(2));
+        assert!(st.full());
+        assert!(c.is_feasible(&[5, 9]));
+        assert!(!c.is_feasible(&[1, 2, 3]));
+        assert_eq!(c.rank(), 2);
+    }
+
+    #[test]
+    fn k_zero_rejects_everything() {
+        let c = Cardinality::new(0);
+        let st = c.new_state();
+        assert!(!st.can_add(0));
+        assert!(st.full());
+        assert!(c.is_feasible(&[]));
+    }
+}

@@ -1,0 +1,96 @@
+//! Hereditary constraint families (§2.1).
+//!
+//! A constraint family `C ⊆ 2^W` is *hereditary* when every subset of a
+//! feasible set is feasible — the property Lemma 4.2/4.3 rely on (rejected
+//! sets `O_c ⊆ OPT` stay feasible).  The paper's experiments use cardinality
+//! constraints; §7 lists matroid constraints as future work, so we ship a
+//! partition matroid too and the algorithms are generic over the trait.
+
+use crate::ElemId;
+
+pub mod cardinality;
+pub mod partition_matroid;
+
+pub use cardinality::Cardinality;
+pub use partition_matroid::PartitionMatroid;
+
+/// A hereditary constraint. Stateless description; mint per-solution states.
+pub trait Constraint: Send + Sync {
+    /// Fresh state for an empty solution.
+    fn new_state(&self) -> Box<dyn ConstraintState>;
+
+    /// An upper bound on |S| for any feasible S (used to pre-size buffers
+    /// and by the BSP cost model as the paper's `k`).
+    fn rank(&self) -> usize;
+
+    /// Human-readable name.
+    fn name(&self) -> &'static str;
+
+    /// Check feasibility of a whole set from scratch.
+    fn is_feasible(&self, solution: &[ElemId]) -> bool {
+        let mut st = self.new_state();
+        solution.iter().all(|&e| {
+            if st.can_add(e) {
+                st.commit(e);
+                true
+            } else {
+                false
+            }
+        })
+    }
+}
+
+/// Incremental feasibility state for one growing solution.
+pub trait ConstraintState {
+    /// Can `e` be added while staying feasible?
+    fn can_add(&self, e: ElemId) -> bool;
+
+    /// Record that `e` was added.
+    fn commit(&mut self, e: ElemId);
+
+    /// Is the solution saturated (no element could ever be added)?  Purely
+    /// an optimization: lets GREEDY stop scanning early once |S| = k.
+    fn full(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heredity_generic() {
+        // Every prefix of a feasible commit sequence must stay feasible —
+        // checked for both constraint families on random sequences.
+        let mut rng = crate::util::rng::Rng::new(33);
+        let card = Cardinality::new(4);
+        let groups: Vec<u32> = (0..20).map(|e| e % 3).collect();
+        let pm = PartitionMatroid::new(groups, vec![2, 1, 3]);
+        let constraints: [&dyn Constraint; 2] = [&card, &pm];
+        for c in constraints {
+            for _ in 0..50 {
+                let mut st = c.new_state();
+                let mut sol: Vec<ElemId> = Vec::new();
+                for _ in 0..10 {
+                    let e = rng.below(20) as ElemId;
+                    if !sol.contains(&e) && st.can_add(e) {
+                        st.commit(e);
+                        sol.push(e);
+                    }
+                }
+                assert!(c.is_feasible(&sol), "{}: grown set infeasible", c.name());
+                // Heredity: every subset obtained by dropping one element.
+                for drop in 0..sol.len() {
+                    let sub: Vec<ElemId> = sol
+                        .iter()
+                        .enumerate()
+                        .filter(|&(i, _)| i != drop)
+                        .map(|(_, &e)| e)
+                        .collect();
+                    assert!(c.is_feasible(&sub), "{}: subset infeasible", c.name());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Partition matroid constraint: the ground set is partitioned into groups
+//! and at most `cap[g]` elements may be chosen from group `g`.
+//!
+//! This implements the paper's §7 future-work direction ("experiments for
+//! other hereditary constraints, such as matroid ... constraints"): the
+//! GREEDY algorithm is 1/2-approximate under matroids and both RandGreeDI
+//! (α/2) and GreedyML (α/(L+1)) inherit from it — the ablation bench
+//! `fig4_tree_params --constraint matroid` exercises this path.
+
+use super::{Constraint, ConstraintState};
+use crate::ElemId;
+
+/// A partition matroid over groups with per-group capacities.
+#[derive(Clone, Debug)]
+pub struct PartitionMatroid {
+    /// group id of each element (dense `0..n`).
+    groups: Vec<u32>,
+    /// capacity of each group.
+    caps: Vec<u32>,
+}
+
+impl PartitionMatroid {
+    /// Build from per-element group ids and per-group capacities.
+    pub fn new(groups: Vec<u32>, caps: Vec<u32>) -> Self {
+        let ngroups = caps.len() as u32;
+        assert!(
+            groups.iter().all(|&g| g < ngroups),
+            "element group id out of range"
+        );
+        Self { groups, caps }
+    }
+
+    /// Uniform capacities: `n` elements hashed into `ngroups` round-robin,
+    /// each group with capacity `cap`.
+    pub fn round_robin(n: usize, ngroups: usize, cap: u32) -> Self {
+        Self::new(
+            (0..n).map(|e| (e % ngroups) as u32).collect(),
+            vec![cap; ngroups],
+        )
+    }
+
+    /// Group of an element.
+    pub fn group_of(&self, e: ElemId) -> u32 {
+        self.groups[e as usize]
+    }
+}
+
+impl Constraint for PartitionMatroid {
+    fn new_state(&self) -> Box<dyn ConstraintState> {
+        Box::new(PmState {
+            matroid: self.clone(),
+            used: vec![0; self.caps.len()],
+            remaining: self.caps.iter().map(|&c| c as usize).sum(),
+        })
+    }
+
+    fn rank(&self) -> usize {
+        // Rank = Σ min(cap_g, |group g|); the simple Σ cap_g upper bound is
+        // fine for buffer sizing but we compute the exact rank for the BSP
+        // model's `k`.
+        let mut sizes = vec![0u32; self.caps.len()];
+        for &g in &self.groups {
+            sizes[g as usize] += 1;
+        }
+        self.caps
+            .iter()
+            .zip(&sizes)
+            .map(|(&c, &s)| c.min(s) as usize)
+            .sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "partition-matroid"
+    }
+}
+
+struct PmState {
+    matroid: PartitionMatroid,
+    used: Vec<u32>,
+    remaining: usize,
+}
+
+impl ConstraintState for PmState {
+    #[inline]
+    fn can_add(&self, e: ElemId) -> bool {
+        let g = self.matroid.groups[e as usize] as usize;
+        self.used[g] < self.matroid.caps[g]
+    }
+
+    fn commit(&mut self, e: ElemId) {
+        let g = self.matroid.groups[e as usize] as usize;
+        self.used[g] += 1;
+        self.remaining -= 1;
+    }
+
+    fn full(&self) -> bool {
+        self.remaining == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_group_caps() {
+        // 6 elements, groups [0,0,1,1,2,2], caps [1,2,0].
+        let m = PartitionMatroid::new(vec![0, 0, 1, 1, 2, 2], vec![1, 2, 0]);
+        assert!(m.is_feasible(&[0, 2, 3]));
+        assert!(!m.is_feasible(&[0, 1]), "group 0 capped at 1");
+        assert!(!m.is_feasible(&[4]), "group 2 capped at 0");
+        assert_eq!(m.rank(), 3);
+        assert_eq!(m.group_of(3), 1);
+    }
+
+    #[test]
+    fn rank_clips_to_group_sizes() {
+        // Group 0 has 1 element but cap 5.
+        let m = PartitionMatroid::new(vec![0, 1, 1], vec![5, 1]);
+        assert_eq!(m.rank(), 2);
+    }
+
+    #[test]
+    fn full_when_all_caps_hit() {
+        let m = PartitionMatroid::round_robin(4, 2, 1);
+        let mut st = m.new_state();
+        st.commit(0);
+        assert!(!st.full());
+        st.commit(1);
+        assert!(st.full());
+        assert!(!st.can_add(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_bad_groups() {
+        PartitionMatroid::new(vec![0, 7], vec![1]);
+    }
+}

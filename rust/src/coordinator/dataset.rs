@@ -1,0 +1,227 @@
+//! Dataset construction from experiment configs: synthetic generator
+//! presets matching the paper's testbed (Table 2) plus file loaders for
+//! real data.
+
+use crate::data::gen;
+use crate::data::{CsrGraph, DatasetSummary, ItemsetCollection, VectorSet};
+use crate::objective::{KCover, KDominatingSet, KMedoid, Oracle};
+use crate::runtime::{Engine, KCoverPjrt, KMedoidPjrt};
+use crate::util::config::Config;
+use std::sync::Arc;
+
+/// Which gain-evaluation backend to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure Rust oracles.
+    Cpu,
+    /// AOT Pallas kernels through PJRT.
+    Pjrt,
+}
+
+/// A built dataset + oracle, ready to run.
+pub struct BuiltProblem {
+    /// The oracle (CPU or PJRT-backed).
+    pub oracle: Arc<dyn Oracle>,
+    /// Table 2-style dataset summary.
+    pub summary: DatasetSummary,
+    /// Objective label for reports.
+    pub objective: &'static str,
+}
+
+/// Build the dataset + oracle described by the `[dataset]` / `[objective]`
+/// sections of `cfg`. `engine` is required when `objective.backend = pjrt`.
+pub fn build_problem(cfg: &Config, engine: Option<Arc<Engine>>) -> crate::Result<BuiltProblem> {
+    let kind = cfg.str_or("dataset.kind", "road");
+    let seed = cfg.u64_or("dataset.seed", 1)?;
+    let objective = cfg.str_or("objective.kind", "auto");
+    let backend = match cfg.str_or("objective.backend", "cpu") {
+        "cpu" => Backend::Cpu,
+        "pjrt" => Backend::Pjrt,
+        other => anyhow::bail!("objective.backend '{other}' (cpu|pjrt)"),
+    };
+
+    match kind {
+        "road" | "belgium" => {
+            let n = cfg.u64_or("dataset.n", 1 << 14)? as usize;
+            let params = if kind == "belgium" {
+                gen::RoadParams::belgium_like(n)
+            } else {
+                gen::RoadParams::usa_like(n)
+            };
+            let g = Arc::new(gen::road(params, seed));
+            graph_problem(cfg, g, kind, objective)
+        }
+        "rmat" | "friendster" => {
+            let scale = cfg.u64_or("dataset.scale", 14)? as u32;
+            let g = Arc::new(gen::rmat(gen::RmatParams::friendster_like(scale), seed));
+            graph_problem(cfg, g, kind, objective)
+        }
+        "ba" => {
+            let n = cfg.u64_or("dataset.n", 1 << 14)? as usize;
+            let attach = cfg.u64_or("dataset.attach", 3)? as usize;
+            let g = Arc::new(gen::barabasi_albert(n, attach, seed));
+            graph_problem(cfg, g, kind, objective)
+        }
+        "edgelist" => {
+            let path = cfg.str("dataset.path")?;
+            let g = Arc::new(CsrGraph::load_edge_list(path)?);
+            graph_problem(cfg, g, path, objective)
+        }
+        "transactions" | "webdocs" | "kosarak" | "retail" => {
+            let n = cfg.u64_or("dataset.n", 4000)? as usize;
+            let params = match kind {
+                "webdocs" => gen::TransactionParams::webdocs_like(n),
+                "kosarak" => gen::TransactionParams::kosarak_like(n),
+                "retail" => gen::TransactionParams::retail_like(n),
+                _ => gen::TransactionParams {
+                    num_sets: n,
+                    num_items: cfg.u64_or("dataset.items", n as u64 / 4)? as usize,
+                    mean_size: cfg.f64_or("dataset.mean_size", 8.0)?,
+                    zipf_s: cfg.f64_or("dataset.zipf", 1.0)?,
+                },
+            };
+            let data = Arc::new(gen::transactions(params, seed));
+            cover_problem(data, kind, backend, engine)
+        }
+        "fimi" => {
+            let path = cfg.str("dataset.path")?;
+            let data = Arc::new(ItemsetCollection::load_fimi(path)?);
+            cover_problem(data, path, backend, engine)
+        }
+        "gaussian" | "tiny_imagenet" => {
+            let n = cfg.u64_or("dataset.n", 2048)? as usize;
+            let dim = cfg.u64_or("dataset.dim", 128)? as usize;
+            let params = if kind == "tiny_imagenet" {
+                gen::GaussianParams::tiny_imagenet_like(n, dim)
+            } else {
+                gen::GaussianParams {
+                    n,
+                    dim,
+                    classes: cfg.u64_or("dataset.classes", 16)? as usize,
+                    noise: cfg.f64_or("dataset.noise", 0.35)?,
+                }
+            };
+            let (vs, _labels) = gen::gaussian_mixture(params, seed);
+            medoid_problem(Arc::new(vs), kind, backend, engine)
+        }
+        "fvecs" => {
+            let path = cfg.str("dataset.path")?;
+            let mut vs = VectorSet::load_fvecs(path)?;
+            vs.normalize_rows();
+            medoid_problem(Arc::new(vs), path, backend, engine)
+        }
+        other => anyhow::bail!("unknown dataset.kind '{other}'"),
+    }
+}
+
+fn graph_problem(
+    cfg: &Config,
+    g: Arc<CsrGraph>,
+    name: &str,
+    objective: &str,
+) -> crate::Result<BuiltProblem> {
+    anyhow::ensure!(
+        matches!(objective, "auto" | "kdom"),
+        "graph datasets serve the k-dominating-set objective, got '{objective}'"
+    );
+    let summary = DatasetSummary::of_graph(name, &g);
+    let closed = cfg.bool_or("objective.closed", false)?;
+    let oracle: Arc<dyn Oracle> = if closed {
+        Arc::new(KDominatingSet::closed(g))
+    } else {
+        Arc::new(KDominatingSet::new(g))
+    };
+    Ok(BuiltProblem { oracle, summary, objective: "k-dominating-set" })
+}
+
+fn cover_problem(
+    data: Arc<ItemsetCollection>,
+    name: &str,
+    backend: Backend,
+    engine: Option<Arc<Engine>>,
+) -> crate::Result<BuiltProblem> {
+    let summary = DatasetSummary::of_itemsets(name, &data);
+    let oracle: Arc<dyn Oracle> = match backend {
+        Backend::Cpu => Arc::new(KCover::new(data)),
+        Backend::Pjrt => {
+            let engine =
+                engine.ok_or_else(|| anyhow::anyhow!("pjrt backend needs loaded artifacts"))?;
+            Arc::new(KCoverPjrt::new(data, engine)?)
+        }
+    };
+    Ok(BuiltProblem { oracle, summary, objective: "k-cover" })
+}
+
+fn medoid_problem(
+    vs: Arc<VectorSet>,
+    name: &str,
+    backend: Backend,
+    engine: Option<Arc<Engine>>,
+) -> crate::Result<BuiltProblem> {
+    let summary = DatasetSummary::of_vectors(name, &vs);
+    let oracle: Arc<dyn Oracle> = match backend {
+        Backend::Cpu => Arc::new(KMedoid::new(vs)),
+        Backend::Pjrt => {
+            let engine =
+                engine.ok_or_else(|| anyhow::anyhow!("pjrt backend needs loaded artifacts"))?;
+            Arc::new(KMedoidPjrt::new(vs, engine)?)
+        }
+    };
+    Ok(BuiltProblem { oracle, summary, objective: "k-medoid" })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(text: &str) -> Config {
+        Config::parse(text).unwrap()
+    }
+
+    #[test]
+    fn builds_each_synthetic_kind() {
+        for (text, objective) in [
+            ("[dataset]\nkind = road\nn = 256\n", "k-dominating-set"),
+            ("[dataset]\nkind = rmat\nscale = 8\n", "k-dominating-set"),
+            ("[dataset]\nkind = ba\nn = 300\nattach = 2\n", "k-dominating-set"),
+            ("[dataset]\nkind = retail\nn = 200\n", "k-cover"),
+            ("[dataset]\nkind = gaussian\nn = 64\ndim = 8\nclasses = 4\n", "k-medoid"),
+        ] {
+            let p = build_problem(&cfg(text), None).unwrap();
+            assert_eq!(p.objective, objective, "{text}");
+            assert!(p.oracle.n() > 0);
+            assert_eq!(p.summary.n, p.oracle.n());
+        }
+    }
+
+    #[test]
+    fn pjrt_backend_without_engine_errors() {
+        let c = cfg("[dataset]\nkind = retail\nn = 50\n[objective]\nbackend = pjrt\n");
+        assert!(build_problem(&c, None).is_err());
+    }
+
+    #[test]
+    fn unknown_kind_errors() {
+        assert!(build_problem(&cfg("[dataset]\nkind = nope\n"), None).is_err());
+        let c = cfg("[dataset]\nkind = road\nn = 64\n[objective]\nkind = kmedoid\n");
+        assert!(build_problem(&c, None).is_err(), "graph + kmedoid mismatch");
+    }
+
+    #[test]
+    fn file_loaders_roundtrip() {
+        let dir = std::env::temp_dir();
+        let edge = dir.join("greedyml_test_edges.txt");
+        std::fs::write(&edge, "0 1\n1 2\n").unwrap();
+        let c = cfg(&format!("[dataset]\nkind = edgelist\npath = {}\n", edge.display()));
+        let p = build_problem(&c, None).unwrap();
+        assert_eq!(p.oracle.n(), 3);
+        std::fs::remove_file(&edge).ok();
+
+        let fimi = dir.join("greedyml_test.fimi");
+        std::fs::write(&fimi, "1 2 3\n2 4\n").unwrap();
+        let c = cfg(&format!("[dataset]\nkind = fimi\npath = {}\n", fimi.display()));
+        let p = build_problem(&c, None).unwrap();
+        assert_eq!(p.oracle.n(), 2);
+        std::fs::remove_file(&fimi).ok();
+    }
+}

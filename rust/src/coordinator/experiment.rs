@@ -1,0 +1,290 @@
+//! Experiment runner: a config describes a dataset, an objective, a
+//! constraint and a list of algorithm variants; the runner executes them
+//! all, computes relative function values against the strongest available
+//! baseline, prints the paper-shaped table and optionally writes JSON.
+
+use super::dataset::{build_problem, BuiltProblem};
+use crate::algo::{
+    run_greedi, run_greedyml, run_randgreedi, run_sequential, randgreedi::RandGreediOpts,
+    DistConfig,
+};
+use crate::constraint::{Cardinality, Constraint, PartitionMatroid};
+use crate::greedy::GreedyKind;
+use crate::metrics::RunReport;
+use crate::runtime::Engine;
+use crate::tree::AccumulationTree;
+use crate::util::config::Config;
+use std::sync::Arc;
+
+/// One algorithm variant to run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AlgoSpec {
+    /// Sequential (lazy) GREEDY.
+    Greedy,
+    /// GreeDI with `m` machines (contiguous partition).
+    GreeDi { m: u32 },
+    /// RandGreeDI with `m` machines.
+    RandGreedi { m: u32 },
+    /// GreedyML over T(m, b).
+    GreedyMl { m: u32, b: u32 },
+}
+
+impl AlgoSpec {
+    /// Parse one spec token: `greedy`, `greedi:m`, `randgreedi:m`,
+    /// `greedyml:m:b`.
+    pub fn parse(tok: &str) -> crate::Result<Self> {
+        let parts: Vec<&str> = tok.trim().split(':').collect();
+        let num = |s: &str| -> crate::Result<u32> {
+            crate::util::config::parse_u64(s)
+                .map(|v| v as u32)
+                .map_err(|m| anyhow::anyhow!("algo spec '{tok}': {m}"))
+        };
+        match parts.as_slice() {
+            ["greedy"] => Ok(Self::Greedy),
+            ["greedi", m] => Ok(Self::GreeDi { m: num(m)? }),
+            ["randgreedi", m] => Ok(Self::RandGreedi { m: num(m)? }),
+            ["greedyml", m, b] => Ok(Self::GreedyMl { m: num(m)?, b: num(b)? }),
+            _ => anyhow::bail!(
+                "bad algo spec '{tok}' (greedy | greedi:m | randgreedi:m | greedyml:m:b)"
+            ),
+        }
+    }
+
+    /// Report label.
+    pub fn label(&self) -> String {
+        match self {
+            Self::Greedy => "Greedy".into(),
+            Self::GreeDi { m } => format!("GreeDI(m={m})"),
+            Self::RandGreedi { m } => format!("RG(m={m})"),
+            Self::GreedyMl { m, b } => {
+                let t = AccumulationTree::new(*m, *b);
+                format!("GML(m={m},b={b},L={})", t.levels())
+            }
+        }
+    }
+}
+
+/// A fully parsed experiment.
+pub struct Experiment {
+    /// Experiment name (reports).
+    pub name: String,
+    /// The dataset + oracle.
+    pub problem: BuiltProblem,
+    /// Constraint.
+    pub constraint: Box<dyn Constraint>,
+    /// Solution size (rank of the constraint, for reporting).
+    pub k: usize,
+    /// Algorithm variants in run order.
+    pub algos: Vec<AlgoSpec>,
+    /// Shared run options.
+    pub seed: u64,
+    /// Per-machine memory limit.
+    pub mem_limit: Option<u64>,
+    /// k-medoid local-objective scheme.
+    pub local_view: bool,
+    /// §6.4 added elements per accumulation.
+    pub added_elements: usize,
+}
+
+impl Experiment {
+    /// Build from a config (see configs/ for examples).
+    pub fn from_config(cfg: &Config, engine: Option<Arc<Engine>>) -> crate::Result<Self> {
+        let problem = build_problem(cfg, engine)?;
+        let k = cfg.u64_or("problem.k", 32)? as usize;
+        let constraint: Box<dyn Constraint> = match cfg.str_or("problem.constraint", "cardinality")
+        {
+            "cardinality" => Box::new(Cardinality::new(k)),
+            "matroid" => {
+                let groups = cfg.u64_or("problem.groups", 4)? as usize;
+                let cap = (k / groups).max(1) as u32;
+                Box::new(PartitionMatroid::round_robin(problem.oracle.n(), groups, cap))
+            }
+            other => anyhow::bail!("unknown constraint '{other}'"),
+        };
+        let algos = cfg
+            .str_or("run.algos", "greedy, randgreedi:8, greedyml:8:2")
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(AlgoSpec::parse)
+            .collect::<crate::Result<Vec<_>>>()?;
+        anyhow::ensure!(!algos.is_empty(), "run.algos selected nothing");
+        let mem_limit = match cfg.get("run.mem_limit") {
+            None | Some("none") => None,
+            Some(v) => Some(
+                crate::util::config::parse_u64(v).map_err(|m| anyhow::anyhow!("mem_limit: {m}"))?,
+            ),
+        };
+        Ok(Self {
+            name: cfg.str_or("name", "experiment").to_string(),
+            problem,
+            constraint,
+            k,
+            algos,
+            seed: cfg.u64_or("run.seed", 42)?,
+            mem_limit,
+            local_view: cfg.bool_or("run.local_view", false)?,
+            added_elements: cfg.u64_or("run.added", 0)? as usize,
+        })
+    }
+
+    /// Run every variant. Failed runs (e.g. OOM — an *expected* outcome in
+    /// the memory experiments) produce a report row with value 0 and are
+    /// listed in `failures`.
+    pub fn run(&self) -> (Vec<RunReport>, Vec<(String, String)>) {
+        let oracle = self.problem.oracle.as_ref();
+        let dataset = self.problem.summary.name.clone();
+        let mut reports = Vec::new();
+        let mut failures = Vec::new();
+        let mut baseline: Option<f64> = None;
+
+        for spec in &self.algos {
+            let label = spec.label();
+            let result: Result<RunReport, String> = match *spec {
+                AlgoSpec::Greedy => {
+                    run_sequential(oracle, self.constraint.as_ref(), GreedyKind::Lazy, self.mem_limit)
+                        .map(|out| RunReport {
+                            algo: label.clone(),
+                            dataset: dataset.clone(),
+                            k: self.k,
+                            machines: 1,
+                            branching: 0,
+                            levels: 0,
+                            value: out.greedy.value,
+                            rel_value_pct: None,
+                            critical_calls: out.greedy.calls,
+                            total_calls: out.greedy.calls,
+                            comp_secs: out.secs,
+                            comm_secs: 0.0,
+                            peak_mem: out.peak_mem,
+                        })
+                        .map_err(|e| e.to_string())
+                }
+                AlgoSpec::GreeDi { m } => run_greedi(oracle, self.constraint.as_ref(), m, self.mem_limit)
+                    .map(|out| {
+                        RunReport::from_outcome(&label, &dataset, self.k, &out, m, m, 1)
+                    })
+                    .map_err(|e| e.to_string()),
+                AlgoSpec::RandGreedi { m } => {
+                    let opts = RandGreediOpts {
+                        mem_limit: self.mem_limit,
+                        local_view: self.local_view,
+                        added_elements: self.added_elements,
+                        ..RandGreediOpts::new(m, self.seed)
+                    };
+                    run_randgreedi(oracle, self.constraint.as_ref(), opts)
+                        .map(|out| {
+                            RunReport::from_outcome(&label, &dataset, self.k, &out, m, m, 1)
+                        })
+                        .map_err(|e| e.to_string())
+                }
+                AlgoSpec::GreedyMl { m, b } => {
+                    let tree = AccumulationTree::new(m, b);
+                    let cfg = DistConfig {
+                        mem_limit: self.mem_limit,
+                        local_view: self.local_view,
+                        added_elements: self.added_elements,
+                        ..DistConfig::greedyml(tree, self.seed)
+                    };
+                    run_greedyml(oracle, self.constraint.as_ref(), &cfg)
+                        .map(|out| {
+                            RunReport::from_outcome(
+                                &label,
+                                &dataset,
+                                self.k,
+                                &out,
+                                m,
+                                b,
+                                tree.levels(),
+                            )
+                        })
+                        .map_err(|e| e.to_string())
+                }
+            };
+            match result {
+                Ok(report) => {
+                    if baseline.is_none() && report.value > 0.0 {
+                        baseline = Some(report.value);
+                    }
+                    let report = match baseline {
+                        Some(b) => report.with_baseline(b),
+                        None => report,
+                    };
+                    reports.push(report);
+                }
+                Err(msg) => failures.push((label, msg)),
+            }
+        }
+        (reports, failures)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_spec_parsing() {
+        assert_eq!(AlgoSpec::parse("greedy").unwrap(), AlgoSpec::Greedy);
+        assert_eq!(AlgoSpec::parse("greedi:4").unwrap(), AlgoSpec::GreeDi { m: 4 });
+        assert_eq!(AlgoSpec::parse(" randgreedi:16 ").unwrap(), AlgoSpec::RandGreedi { m: 16 });
+        assert_eq!(
+            AlgoSpec::parse("greedyml:32:2").unwrap(),
+            AlgoSpec::GreedyMl { m: 32, b: 2 }
+        );
+        assert!(AlgoSpec::parse("nope").is_err());
+        assert!(AlgoSpec::parse("greedyml:8").is_err());
+        assert!(AlgoSpec::parse("randgreedi:x").is_err());
+        assert!(AlgoSpec::parse("greedyml:8:2").unwrap().label().contains("L=3"));
+    }
+
+    #[test]
+    fn full_experiment_runs_all_algos() {
+        let cfg = Config::parse(
+            "name = smoke\n\
+             [dataset]\nkind = retail\nn = 300\nseed = 2\n\
+             [problem]\nk = 8\n\
+             [run]\nalgos = greedy, greedi:4, randgreedi:4, greedyml:4:2\nseed = 5\n",
+        )
+        .unwrap();
+        let exp = Experiment::from_config(&cfg, None).unwrap();
+        let (reports, failures) = exp.run();
+        assert!(failures.is_empty(), "{failures:?}");
+        assert_eq!(reports.len(), 4);
+        // First successful run (Greedy) is the 100% baseline.
+        assert!((reports[0].rel_value_pct.unwrap() - 100.0).abs() < 1e-9);
+        for r in &reports[1..] {
+            let rel = r.rel_value_pct.unwrap();
+            assert!(rel > 50.0 && rel <= 110.0, "{}: rel {rel}", r.algo);
+        }
+    }
+
+    #[test]
+    fn oom_shows_up_as_failure_not_panic() {
+        let cfg = Config::parse(
+            "[dataset]\nkind = retail\nn = 400\n\
+             [problem]\nk = 8\n\
+             [run]\nalgos = greedy\nmem_limit = 1kb\n",
+        )
+        .unwrap();
+        let exp = Experiment::from_config(&cfg, None).unwrap();
+        let (reports, failures) = exp.run();
+        assert!(reports.is_empty());
+        assert_eq!(failures.len(), 1);
+        assert!(failures[0].1.contains("out of memory"));
+    }
+
+    #[test]
+    fn matroid_constraint_selected() {
+        let cfg = Config::parse(
+            "[dataset]\nkind = retail\nn = 200\n\
+             [problem]\nk = 8\nconstraint = matroid\ngroups = 4\n\
+             [run]\nalgos = greedyml:4:2\n",
+        )
+        .unwrap();
+        let exp = Experiment::from_config(&cfg, None).unwrap();
+        let (reports, failures) = exp.run();
+        assert!(failures.is_empty(), "{failures:?}");
+        assert_eq!(reports.len(), 1);
+        assert!(reports[0].value > 0.0);
+    }
+}

@@ -1,0 +1,41 @@
+//! The coordinator: experiment configs → datasets → algorithm runs →
+//! paper-shaped reports.  This is the layer the CLI, the examples and the
+//! benches drive.
+
+pub mod dataset;
+pub mod experiment;
+pub mod sweep;
+
+pub use dataset::{build_problem, Backend, BuiltProblem};
+pub use experiment::{AlgoSpec, Experiment};
+pub use sweep::Sweep;
+
+use crate::metrics::RunReport;
+
+/// Render a report table (header + one row per run + failures).
+pub fn render_table(reports: &[RunReport], failures: &[(String, String)]) -> String {
+    let mut out = String::new();
+    out.push_str(&RunReport::header());
+    out.push('\n');
+    for r in reports {
+        out.push_str(&r.row());
+        out.push('\n');
+    }
+    for (algo, msg) in failures {
+        out.push_str(&format!("{algo:<14} FAILED: {msg}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_failures() {
+        let t = render_table(&[], &[("RG(m=8)".into(), "machine 0 out of memory".into())]);
+        assert!(t.contains("FAILED"));
+        assert!(t.contains("out of memory"));
+        assert!(t.lines().count() >= 2);
+    }
+}

@@ -1,0 +1,219 @@
+//! Parameter sweeps: run an experiment grid (k values × algorithm variants)
+//! and emit long-form rows — the driver behind the figure benches and the
+//! `greedyml sweep` subcommand.  Results aggregate with geometric means per
+//! the paper's reporting convention (§6).
+
+use super::experiment::AlgoSpec;
+use super::BuiltProblem;
+use crate::algo::{run_sequential, DistConfig};
+use crate::constraint::Cardinality;
+use crate::greedy::GreedyKind;
+use crate::metrics::RunReport;
+use crate::tree::AccumulationTree;
+use crate::util::config::Config;
+use crate::util::stats::geomean;
+
+/// A sweep: the cartesian product of k values and algorithm variants on one
+/// problem.
+pub struct Sweep {
+    /// k values to sweep.
+    pub ks: Vec<usize>,
+    /// Algorithm variants.
+    pub algos: Vec<AlgoSpec>,
+    /// Repetitions with distinct tape seeds (paper: six, geomean reported).
+    pub reps: u64,
+    /// Base seed.
+    pub seed: u64,
+    /// Per-machine memory limit.
+    pub mem_limit: Option<u64>,
+    /// k-medoid local-view scheme.
+    pub local_view: bool,
+}
+
+impl Sweep {
+    /// Parse from the `[sweep]` section of a config:
+    /// `ks = 100, 200`, `algos = …`, `reps = 3`.
+    pub fn from_config(cfg: &Config) -> crate::Result<Self> {
+        let ks = cfg
+            .u64_list("sweep.ks")?
+            .into_iter()
+            .map(|k| k as usize)
+            .collect::<Vec<_>>();
+        anyhow::ensure!(!ks.is_empty(), "sweep.ks is empty");
+        let algos = cfg
+            .str("sweep.algos")?
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(AlgoSpec::parse)
+            .collect::<crate::Result<Vec<_>>>()?;
+        let mem_limit = match cfg.get("sweep.mem_limit") {
+            None | Some("none") => None,
+            Some(v) => Some(
+                crate::util::config::parse_u64(v)
+                    .map_err(|m| anyhow::anyhow!("sweep.mem_limit: {m}"))?,
+            ),
+        };
+        Ok(Self {
+            ks,
+            algos,
+            reps: cfg.u64_or("sweep.reps", 3)?,
+            seed: cfg.u64_or("sweep.seed", 42)?,
+            mem_limit,
+            local_view: cfg.bool_or("sweep.local_view", false)?,
+        })
+    }
+
+    /// Run the grid. Each (k, algo) cell is repeated `reps` times with
+    /// seeds `seed + r`; values/calls/times are geomean-aggregated into one
+    /// report row. Failed cells (OOM) are returned separately.
+    pub fn run(&self, problem: &BuiltProblem) -> (Vec<RunReport>, Vec<(String, String)>) {
+        let oracle = problem.oracle.as_ref();
+        let mut reports = Vec::new();
+        let mut failures = Vec::new();
+        for &k in &self.ks {
+            let constraint = Cardinality::new(k);
+            let baseline = run_sequential(oracle, &constraint, GreedyKind::Lazy, None)
+                .map(|s| s.greedy.value)
+                .unwrap_or(0.0);
+            for spec in &self.algos {
+                let label = spec.label();
+                let mut vals = Vec::new();
+                let mut calls = Vec::new();
+                let mut comps = Vec::new();
+                let mut comms = Vec::new();
+                let mut peak = 0u64;
+                let mut failed = None;
+                let (m, b, l) = match *spec {
+                    AlgoSpec::Greedy => (1, 0, 0),
+                    AlgoSpec::GreeDi { m } | AlgoSpec::RandGreedi { m } => (m, m, 1),
+                    AlgoSpec::GreedyMl { m, b } => (m, b, AccumulationTree::new(m, b).levels()),
+                };
+                for r in 0..self.reps {
+                    let result = match *spec {
+                        AlgoSpec::Greedy => {
+                            run_sequential(oracle, &constraint, GreedyKind::Lazy, self.mem_limit)
+                                .map(|s| {
+                                    (s.greedy.value, s.greedy.calls, s.secs, 0.0, s.peak_mem)
+                                })
+                                .map_err(|e| e.to_string())
+                        }
+                        AlgoSpec::GreeDi { m } => {
+                            crate::algo::run_greedi(oracle, &constraint, m, self.mem_limit)
+                                .map(|o| {
+                                    (o.value, o.critical_calls, o.comp_secs, o.comm_secs, o.peak_mem())
+                                })
+                                .map_err(|e| e.to_string())
+                        }
+                        AlgoSpec::RandGreedi { m } => {
+                            let opts = crate::algo::randgreedi::RandGreediOpts {
+                                mem_limit: self.mem_limit,
+                                local_view: self.local_view,
+                                ..crate::algo::randgreedi::RandGreediOpts::new(m, self.seed + r)
+                            };
+                            crate::algo::run_randgreedi(oracle, &constraint, opts)
+                                .map(|o| {
+                                    (o.value, o.critical_calls, o.comp_secs, o.comm_secs, o.peak_mem())
+                                })
+                                .map_err(|e| e.to_string())
+                        }
+                        AlgoSpec::GreedyMl { m, b } => {
+                            let cfg = DistConfig {
+                                mem_limit: self.mem_limit,
+                                local_view: self.local_view,
+                                ..DistConfig::greedyml(AccumulationTree::new(m, b), self.seed + r)
+                            };
+                            crate::algo::run_greedyml(oracle, &constraint, &cfg)
+                                .map(|o| {
+                                    (o.value, o.critical_calls, o.comp_secs, o.comm_secs, o.peak_mem())
+                                })
+                                .map_err(|e| e.to_string())
+                        }
+                    };
+                    match result {
+                        Ok((v, c, comp, comm, p)) => {
+                            vals.push(v.max(1e-12));
+                            calls.push(c.max(1) as f64);
+                            comps.push(comp.max(1e-9));
+                            comms.push(comm.max(1e-12));
+                            peak = peak.max(p);
+                        }
+                        Err(e) => {
+                            failed = Some(e);
+                            break;
+                        }
+                    }
+                }
+                match failed {
+                    Some(e) => failures.push((format!("{label} k={k}"), e)),
+                    None => {
+                        let report = RunReport {
+                            algo: label,
+                            dataset: problem.summary.name.clone(),
+                            k,
+                            machines: m,
+                            branching: b,
+                            levels: l,
+                            value: geomean(&vals),
+                            rel_value_pct: None,
+                            critical_calls: geomean(&calls) as u64,
+                            total_calls: 0,
+                            comp_secs: geomean(&comps),
+                            comm_secs: geomean(&comms),
+                            peak_mem: peak,
+                        }
+                        .with_baseline(baseline);
+                        reports.push(report);
+                    }
+                }
+            }
+        }
+        (reports, failures)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::build_problem;
+
+    #[test]
+    fn sweep_parses_and_runs_grid() {
+        let cfg = Config::parse(
+            "[dataset]\nkind = retail\nn = 400\nseed = 2\n\
+             [sweep]\nks = 4, 8\nalgos = randgreedi:4, greedyml:4:2\nreps = 2\nseed = 9\n",
+        )
+        .unwrap();
+        let problem = build_problem(&cfg, None).unwrap();
+        let sweep = Sweep::from_config(&cfg).unwrap();
+        let (reports, failures) = sweep.run(&problem);
+        assert!(failures.is_empty(), "{failures:?}");
+        assert_eq!(reports.len(), 4, "2 ks × 2 algos");
+        for r in &reports {
+            assert!(r.value > 0.0);
+            let rel = r.rel_value_pct.unwrap();
+            assert!(rel > 40.0 && rel <= 105.0, "{}: {rel}", r.algo);
+        }
+    }
+
+    #[test]
+    fn sweep_reports_oom_cells() {
+        let cfg = Config::parse(
+            "[dataset]\nkind = retail\nn = 400\nseed = 2\n\
+             [sweep]\nks = 8\nalgos = randgreedi:4\nreps = 1\nmem_limit = 1kb\n",
+        )
+        .unwrap();
+        let problem = build_problem(&cfg, None).unwrap();
+        let sweep = Sweep::from_config(&cfg).unwrap();
+        let (reports, failures) = sweep.run(&problem);
+        assert!(reports.is_empty());
+        assert_eq!(failures.len(), 1);
+    }
+
+    #[test]
+    fn bad_configs_error() {
+        let cfg = Config::parse("[sweep]\nks = \nalgos = greedy\n").unwrap();
+        assert!(Sweep::from_config(&cfg).is_err());
+        let cfg = Config::parse("[sweep]\nks = 4\nalgos = bogus\n").unwrap();
+        assert!(Sweep::from_config(&cfg).is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! Barabási–Albert preferential-attachment generator.
+//!
+//! A second scale-free family used for the ablation benches (DESIGN.md):
+//! BA gives a *guaranteed-connected* power-law graph, unlike R-MAT, which
+//! isolates the effect of disconnected fringe vertices on dominating-set
+//! quality.
+
+use crate::data::graph::CsrGraph;
+use crate::util::rng::Rng;
+
+/// Generate a BA graph: start from a clique of `m0 = m_attach` vertices,
+/// then attach each new vertex to `m_attach` existing vertices sampled
+/// proportionally to degree (via the repeated-endpoints trick).
+pub fn barabasi_albert(n: usize, m_attach: usize, seed: u64) -> CsrGraph {
+    assert!(m_attach >= 1, "need at least one attachment edge");
+    assert!(n > m_attach, "n must exceed m_attach");
+    let mut rng = Rng::new(seed);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n * m_attach);
+    // `endpoints` holds every edge endpoint; sampling uniformly from it is
+    // sampling proportional to degree.
+    let mut endpoints: Vec<u32> = Vec::with_capacity(2 * n * m_attach);
+    // Seed clique.
+    for u in 0..m_attach as u32 {
+        for v in (u + 1)..m_attach as u32 {
+            edges.push((u, v));
+            endpoints.push(u);
+            endpoints.push(v);
+        }
+    }
+    if m_attach == 1 {
+        // Degenerate clique: single vertex, no endpoints yet — bootstrap.
+        endpoints.push(0);
+    }
+    for u in m_attach as u32..n as u32 {
+        let mut targets = std::collections::HashSet::with_capacity(m_attach);
+        let mut guard = 0;
+        while targets.len() < m_attach && guard < 50 * m_attach {
+            let t = endpoints[rng.below(endpoints.len() as u64) as usize];
+            if t != u {
+                targets.insert(t);
+            }
+            guard += 1;
+        }
+        // Fall back to uniform if degree sampling stalls (tiny graphs).
+        while targets.len() < m_attach {
+            let t = rng.below(u as u64) as u32;
+            targets.insert(t);
+        }
+        for &t in &targets {
+            edges.push((u, t));
+            endpoints.push(u);
+            endpoints.push(t);
+        }
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn connected_and_sized() {
+        let g = barabasi_albert(2000, 2, 17);
+        assert_eq!(g.num_vertices(), 2000);
+        // Every vertex beyond the clique attaches with >= 1 edge.
+        for v in 0..2000u32 {
+            assert!(g.degree(v) >= 1, "vertex {v} isolated");
+        }
+        // BFS connectivity check.
+        let mut seen = vec![false; 2000];
+        let mut queue = std::collections::VecDeque::from([0u32]);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop_front() {
+            for &v in g.neighbors(u) {
+                if !seen[v as usize] {
+                    seen[v as usize] = true;
+                    count += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        assert_eq!(count, 2000, "graph not connected");
+    }
+
+    #[test]
+    fn heavy_tail() {
+        let g = barabasi_albert(5000, 3, 23);
+        assert!(g.max_degree() > 20 * 3, "max degree {} not heavy-tailed", g.max_degree());
+    }
+
+    #[test]
+    fn deterministic() {
+        let g1 = barabasi_albert(500, 2, 5);
+        let g2 = barabasi_albert(500, 2, 5);
+        assert_eq!(g1.num_edges(), g2.num_edges());
+    }
+
+    #[test]
+    fn m_attach_one() {
+        let g = barabasi_albert(100, 1, 9);
+        assert_eq!(g.num_vertices(), 100);
+        assert_eq!(g.num_edges(), 99, "m=1 BA is a tree");
+    }
+}

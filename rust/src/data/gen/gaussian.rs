@@ -1,0 +1,138 @@
+//! Gaussian-mixture vector generator for the k-medoid experiments.
+//!
+//! Stands in for Tiny ImageNet (100k images, 200 classes, 64×64 px →
+//! 12,288-d).  Exemplar clustering only cares that the data has cluster
+//! structure in a metric space: we draw `classes` centers on the unit
+//! sphere and sample class members around them with per-class noise, then
+//! apply the paper's preprocessing (center + L2-normalize).
+
+use crate::data::vectors::VectorSet;
+use crate::util::rng::Rng;
+
+/// Parameters for the Gaussian-mixture generator.
+#[derive(Clone, Copy, Debug)]
+pub struct GaussianParams {
+    /// Number of vectors.
+    pub n: usize,
+    /// Dimensionality (paper: 12,288; we default lower for CI speed).
+    pub dim: usize,
+    /// Number of mixture components ("classes"; paper: 200).
+    pub classes: usize,
+    /// Noise scale relative to inter-center distance.
+    pub noise: f64,
+}
+
+impl Default for GaussianParams {
+    fn default() -> Self {
+        Self { n: 2048, dim: 128, classes: 16, noise: 0.35 }
+    }
+}
+
+impl GaussianParams {
+    /// Tiny-ImageNet-like shape, scaled down.
+    pub fn tiny_imagenet_like(n: usize, dim: usize) -> Self {
+        Self { n, dim, classes: (n / 500).max(2), noise: 0.35 }
+    }
+}
+
+/// Generate the mixture. Returns the vectors (already centered/normalized
+/// per the paper's §6.4 preprocessing) and the class label of each row
+/// (used by tests to verify exemplar diversity).
+pub fn gaussian_mixture(params: GaussianParams, seed: u64) -> (VectorSet, Vec<u32>) {
+    assert!(params.classes >= 1 && params.dim >= 2 && params.n >= 1);
+    let mut rng = Rng::new(seed);
+    // Class centers: random unit vectors.
+    let mut centers = vec![0f32; params.classes * params.dim];
+    for c in centers.chunks_mut(params.dim) {
+        let mut norm = 0.0f64;
+        for x in c.iter_mut() {
+            let v = rng.normal();
+            *x = v as f32;
+            norm += v * v;
+        }
+        let norm = norm.sqrt().max(1e-12) as f32;
+        for x in c.iter_mut() {
+            *x /= norm;
+        }
+    }
+    let mut data = vec![0f32; params.n * params.dim];
+    let mut labels = Vec::with_capacity(params.n);
+    for (i, row) in data.chunks_mut(params.dim).enumerate() {
+        // Round-robin class assignment keeps classes balanced like the
+        // paper's 500-images-per-class structure.
+        let class = i % params.classes;
+        labels.push(class as u32);
+        let center = &centers[class * params.dim..(class + 1) * params.dim];
+        for (x, &c) in row.iter_mut().zip(center) {
+            *x = c + (params.noise * rng.normal()) as f32 / (params.dim as f32).sqrt();
+        }
+    }
+    let mut vs = VectorSet::from_flat(data, params.dim).expect("generator produced flat buffer");
+    vs.normalize_rows();
+    (vs, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::vectors::dist_sq;
+
+    #[test]
+    fn shapes_and_labels() {
+        let p = GaussianParams { n: 100, dim: 16, classes: 5, noise: 0.2 };
+        let (vs, labels) = gaussian_mixture(p, 3);
+        assert_eq!(vs.len(), 100);
+        assert_eq!(vs.dim(), 16);
+        assert_eq!(labels.len(), 100);
+        assert!(labels.iter().all(|&l| l < 5));
+        // Balanced classes.
+        for c in 0..5u32 {
+            assert_eq!(labels.iter().filter(|&&l| l == c).count(), 20);
+        }
+    }
+
+    #[test]
+    fn rows_are_normalized() {
+        let (vs, _) = gaussian_mixture(GaussianParams::default(), 5);
+        for i in (0..vs.len()).step_by(97) {
+            let norm: f32 = vs.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-4, "row {i} norm {norm}");
+        }
+    }
+
+    #[test]
+    fn cluster_structure_exists() {
+        let p = GaussianParams { n: 300, dim: 32, classes: 3, noise: 0.15 };
+        let (vs, labels) = gaussian_mixture(p, 11);
+        // Average intra-class distance should be well below inter-class.
+        let (mut intra, mut inter) = (crate::util::stats::Running::new(), crate::util::stats::Running::new());
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..2000 {
+            let i = rng.below(300) as usize;
+            let j = rng.below(300) as usize;
+            if i == j {
+                continue;
+            }
+            let d = dist_sq(vs.row(i), vs.row(j));
+            if labels[i] == labels[j] {
+                intra.push(d);
+            } else {
+                inter.push(d);
+            }
+        }
+        assert!(
+            intra.mean() * 1.5 < inter.mean(),
+            "intra {} vs inter {}",
+            intra.mean(),
+            inter.mean()
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = GaussianParams { n: 50, dim: 8, classes: 2, noise: 0.3 };
+        let (a, _) = gaussian_mixture(p, 9);
+        let (b, _) = gaussian_mixture(p, 9);
+        assert_eq!(a.flat(), b.flat());
+    }
+}

@@ -1,0 +1,16 @@
+//! Synthetic dataset generators standing in for the paper's testbed
+//! (Table 2).  Each generator is seeded and deterministic; DESIGN.md §2
+//! documents the paper-dataset → generator mapping and why each
+//! substitution preserves the behaviour the experiments measure.
+
+pub mod ba;
+pub mod gaussian;
+pub mod rmat;
+pub mod road;
+pub mod transactions;
+
+pub use ba::barabasi_albert;
+pub use gaussian::{gaussian_mixture, GaussianParams};
+pub use rmat::{rmat, RmatParams};
+pub use road::{road, RoadParams};
+pub use transactions::{transactions, TransactionParams, Zipf};

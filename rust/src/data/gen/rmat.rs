@@ -1,0 +1,112 @@
+//! R-MAT / Kronecker power-law graph generator.
+//!
+//! Stands in for the Friendster social network (65.6M vertices, avg degree
+//! 27.5) in the k-dominating-set experiments.  R-MAT reproduces the heavy
+//! tail and community skew that make social graphs behave the way the paper
+//! observes (large dominating sets live in the low-degree fringe; a few
+//! hubs dominate quickly).  Parameters follow the Graph500 convention
+//! (a=0.57, b=0.19, c=0.19, d=0.05).
+
+use crate::data::graph::CsrGraph;
+use crate::util::rng::Rng;
+
+/// R-MAT parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct RmatParams {
+    /// log2 of the number of vertices.
+    pub scale: u32,
+    /// Average number of undirected edges per vertex.
+    pub edge_factor: f64,
+    /// Quadrant probabilities (must sum to 1).
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl Default for RmatParams {
+    fn default() -> Self {
+        Self { scale: 14, edge_factor: 14.0, a: 0.57, b: 0.19, c: 0.19 }
+    }
+}
+
+impl RmatParams {
+    /// Friendster-like skew, scaled to `scale` (the real graph is scale≈26).
+    pub fn friendster_like(scale: u32) -> Self {
+        Self { scale, edge_factor: 13.8, a: 0.57, b: 0.19, c: 0.19 }
+    }
+}
+
+/// Generate an undirected R-MAT graph (duplicate edges and self-loops are
+/// dropped by the CSR builder, so the realized edge factor is slightly
+/// below the nominal one — same convention as Graph500).
+pub fn rmat(params: RmatParams, seed: u64) -> CsrGraph {
+    let n = 1usize << params.scale;
+    let m = (n as f64 * params.edge_factor / 2.0).round() as usize;
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(m);
+    let d = 1.0 - params.a - params.b - params.c;
+    assert!(d >= -1e-9, "rmat quadrant probs exceed 1");
+    for _ in 0..m {
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..params.scale {
+            let r = rng.f64();
+            let (du, dv) = if r < params.a {
+                (0, 0)
+            } else if r < params.a + params.b {
+                (0, 1)
+            } else if r < params.a + params.b + params.c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | du;
+            v = (v << 1) | dv;
+        }
+        edges.push((u as u32, v as u32));
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let p = RmatParams { scale: 8, edge_factor: 8.0, ..Default::default() };
+        let g1 = rmat(p, 42);
+        let g2 = rmat(p, 42);
+        assert_eq!(g1.num_edges(), g2.num_edges());
+        assert_eq!(g1.neighbors(5), g2.neighbors(5));
+        let g3 = rmat(p, 43);
+        assert_ne!(
+            (g1.num_edges(), g1.total_degree()),
+            (g3.num_edges(), g3.total_degree()),
+            "different seeds should differ"
+        );
+    }
+
+    #[test]
+    fn size_and_density_plausible() {
+        let p = RmatParams { scale: 10, edge_factor: 14.0, ..Default::default() };
+        let g = rmat(p, 1);
+        assert_eq!(g.num_vertices(), 1024);
+        // Dedup loses some edges; expect within [30%, 100%] of nominal.
+        let nominal = 1024.0 * 14.0 / 2.0;
+        assert!(g.num_edges() as f64 > 0.3 * nominal, "{} edges", g.num_edges());
+        assert!(g.num_edges() as f64 <= nominal);
+    }
+
+    #[test]
+    fn degree_distribution_is_skewed() {
+        let p = RmatParams { scale: 11, edge_factor: 14.0, ..Default::default() };
+        let g = rmat(p, 7);
+        // Power-law-ish: max degree should dwarf the average.
+        assert!(
+            g.max_degree() as f64 > 8.0 * g.avg_degree(),
+            "max {} avg {}",
+            g.max_degree(),
+            g.avg_degree()
+        );
+    }
+}

@@ -1,0 +1,110 @@
+//! Road-network-like graph generator.
+//!
+//! Stands in for road_usa / road_central / belgium_osm (avg degree ≈ 2.1 —
+//! 2.4, near-planar, huge diameter).  These properties — *not* the exact
+//! topology — drive the paper's observations: tiny δ makes per-call cost
+//! cheap, and low degree forces very large dominating sets, which is why
+//! the paper can push k to 1,024,000.
+//!
+//! Construction: place vertices on a √n×√n grid, connect each to its right
+//! and down neighbour with probability `p_keep` (thinning creates dead ends
+//! and varying degree like a real road network), then add a sparse set of
+//! random "highway" shortcuts.
+
+use crate::data::graph::CsrGraph;
+use crate::util::rng::Rng;
+
+/// Parameters for the road-like generator.
+#[derive(Clone, Copy, Debug)]
+pub struct RoadParams {
+    /// Number of vertices (rounded down to a full grid).
+    pub n: usize,
+    /// Probability of keeping each grid edge.
+    pub p_keep: f64,
+    /// Fraction of n added as long-range shortcut edges.
+    pub shortcut_frac: f64,
+}
+
+impl Default for RoadParams {
+    fn default() -> Self {
+        // Tuned to land near avg degree 2.4 (road_usa / road_central).
+        Self { n: 1 << 14, p_keep: 0.62, shortcut_frac: 0.01 }
+    }
+}
+
+impl RoadParams {
+    /// road_usa-like at a given size.
+    pub fn usa_like(n: usize) -> Self {
+        Self { n, ..Default::default() }
+    }
+
+    /// belgium_osm-like (slightly sparser, avg degree ≈ 2.14).
+    pub fn belgium_like(n: usize) -> Self {
+        Self { n, p_keep: 0.55, shortcut_frac: 0.005 }
+    }
+}
+
+/// Generate a road-like graph.
+pub fn road(params: RoadParams, seed: u64) -> CsrGraph {
+    let side = (params.n as f64).sqrt().floor() as usize;
+    let n = side * side;
+    assert!(side >= 2, "road generator needs at least a 2x2 grid");
+    let mut rng = Rng::new(seed);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity((2.0 * n as f64) as usize);
+    let idx = |r: usize, c: usize| (r * side + c) as u32;
+    for r in 0..side {
+        for c in 0..side {
+            if c + 1 < side && rng.bool(params.p_keep) {
+                edges.push((idx(r, c), idx(r, c + 1)));
+            }
+            if r + 1 < side && rng.bool(params.p_keep) {
+                edges.push((idx(r, c), idx(r + 1, c)));
+            }
+        }
+    }
+    let shortcuts = (n as f64 * params.shortcut_frac) as usize;
+    for _ in 0..shortcuts {
+        let u = rng.below(n as u64) as u32;
+        let v = rng.below(n as u64) as u32;
+        edges.push((u, v));
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn avg_degree_near_target() {
+        let g = road(RoadParams { n: 1 << 14, ..Default::default() }, 3);
+        let avg = g.avg_degree();
+        assert!(
+            (2.1..=2.7).contains(&avg),
+            "avg degree {avg} outside road-like band"
+        );
+    }
+
+    #[test]
+    fn belgium_variant_is_sparser() {
+        let a = road(RoadParams::usa_like(1 << 12), 5);
+        let b = road(RoadParams::belgium_like(1 << 12), 5);
+        assert!(b.avg_degree() < a.avg_degree());
+    }
+
+    #[test]
+    fn max_degree_is_small() {
+        let g = road(RoadParams { n: 1 << 12, ..Default::default() }, 9);
+        // Grid degree ≤ 4 plus a few shortcuts.
+        assert!(g.max_degree() <= 10, "max degree {}", g.max_degree());
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = RoadParams { n: 4096, ..Default::default() };
+        let g1 = road(p, 11);
+        let g2 = road(p, 11);
+        assert_eq!(g1.num_edges(), g2.num_edges());
+        assert_eq!(g1.neighbors(100), g2.neighbors(100));
+    }
+}

@@ -1,0 +1,147 @@
+//! Synthetic transaction (itemset) generator for the k-cover experiments.
+//!
+//! Stands in for webdocs / kosarak / retail.  What matters for k-cover
+//! behaviour (DESIGN.md §2) is (a) the itemset-size distribution and (b)
+//! item popularity skew — overlapping popular items are what create the
+//! submodular "diminishing returns" structure.  We sample itemset sizes
+//! from a clipped lognormal around a target mean and items from a Zipf
+//! distribution over the item universe.
+
+use crate::data::itemsets::ItemsetCollection;
+use crate::util::rng::Rng;
+
+/// Parameters for the transaction generator.
+#[derive(Clone, Copy, Debug)]
+pub struct TransactionParams {
+    /// Number of transactions (the ground set size).
+    pub num_sets: usize,
+    /// Item universe size.
+    pub num_items: usize,
+    /// Target mean itemset size (paper: webdocs 177.2, kosarak 8.1, retail 10.3).
+    pub mean_size: f64,
+    /// Zipf skew exponent for item popularity (≈0.8–1.2 for real baskets).
+    pub zipf_s: f64,
+}
+
+impl TransactionParams {
+    /// webdocs-like (very large itemsets over a big dictionary).
+    pub fn webdocs_like(num_sets: usize) -> Self {
+        Self { num_sets, num_items: num_sets * 3, mean_size: 177.2, zipf_s: 1.0 }
+    }
+
+    /// kosarak-like (click streams: small sets, strong skew).
+    pub fn kosarak_like(num_sets: usize) -> Self {
+        Self { num_sets, num_items: num_sets / 24, mean_size: 8.1, zipf_s: 1.1 }
+    }
+
+    /// retail-like (market baskets).
+    pub fn retail_like(num_sets: usize) -> Self {
+        Self { num_sets, num_items: num_sets / 5, mean_size: 10.3, zipf_s: 0.9 }
+    }
+}
+
+/// Precomputed Zipf sampler over `0..n` via inverse-CDF binary search.
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build for universe size `n` and exponent `s`.
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for i in 1..=n {
+            acc += 1.0 / (i as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Self { cdf }
+    }
+
+    /// Sample one rank (0 = most popular).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        // partition_point: first index with cdf[i] >= u.
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+/// Generate a synthetic transaction collection.
+pub fn transactions(params: TransactionParams, seed: u64) -> ItemsetCollection {
+    let mut rng = Rng::new(seed);
+    let zipf = Zipf::new(params.num_items, params.zipf_s);
+    // Shuffle ranks → item ids so popular items are spread over the id space
+    // (real datasets don't have popularity sorted by id).
+    let mut rank_to_item: Vec<u32> = (0..params.num_items as u32).collect();
+    rng.shuffle(&mut rank_to_item);
+    // Lognormal size: choose sigma so the distribution has a plausible tail,
+    // then scale to hit the mean: E[lognormal(mu, sigma)] = exp(mu + sigma^2/2).
+    let sigma = 0.7f64;
+    let mu = params.mean_size.max(1.0).ln() - sigma * sigma / 2.0;
+    let mut sets = Vec::with_capacity(params.num_sets);
+    for _ in 0..params.num_sets {
+        let raw = (mu + sigma * rng.normal()).exp();
+        let size = raw.round().clamp(1.0, params.num_items as f64) as usize;
+        let mut set = std::collections::HashSet::with_capacity(size);
+        let mut guard = 0;
+        while set.len() < size && guard < size * 30 {
+            set.insert(rank_to_item[zipf.sample(&mut rng)]);
+            guard += 1;
+        }
+        sets.push(set.into_iter().collect::<Vec<u32>>());
+    }
+    ItemsetCollection::from_sets(&sets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_size_near_target() {
+        let p = TransactionParams { num_sets: 4000, num_items: 2000, mean_size: 10.3, zipf_s: 0.9 };
+        let c = transactions(p, 42);
+        assert_eq!(c.num_sets(), 4000);
+        let avg = c.avg_set_size();
+        // Zipf collisions shave the realized mean a bit; wide band.
+        assert!((6.0..=13.0).contains(&avg), "avg itemset size {avg}");
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let z = Zipf::new(1000, 1.1);
+        let mut rng = Rng::new(9);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // Top rank should be sampled far more than the median rank.
+        assert!(counts[0] > 20 * counts[500].max(1), "top {} mid {}", counts[0], counts[500]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = TransactionParams::retail_like(500);
+        let a = transactions(p, 7);
+        let b = transactions(p, 7);
+        assert_eq!(a.total_items(), b.total_items());
+        assert_eq!(a.set(17), b.set(17));
+    }
+
+    #[test]
+    fn presets_have_distinct_shapes() {
+        let kos = transactions(TransactionParams::kosarak_like(2400), 1);
+        let ret = transactions(TransactionParams::retail_like(2400), 1);
+        assert!(kos.avg_set_size() < 12.0);
+        assert!(ret.avg_set_size() < 14.0);
+        let web = transactions(
+            TransactionParams { num_sets: 200, num_items: 4000, mean_size: 177.2, zipf_s: 1.0 },
+            1,
+        );
+        assert!(web.avg_set_size() > 60.0, "webdocs-like avg {}", web.avg_set_size());
+    }
+}

@@ -1,0 +1,229 @@
+//! Compressed-sparse-row graphs.
+//!
+//! The k-dominating-set experiments run on graphs (Friendster, road_usa,
+//! road_central, belgium_osm in the paper).  We store undirected graphs in
+//! CSR form: `offsets[v]..offsets[v+1]` indexes into `neighbors`.  CSR keeps
+//! the per-element adjacency scan (`δ(u)`, the paper's per-call cost unit)
+//! cache-friendly and lets the memory accountant charge each partition its
+//! true byte footprint.
+
+use crate::ElemId;
+
+/// An undirected graph in CSR form. Vertices are `0..n`.
+#[derive(Clone, Debug)]
+pub struct CsrGraph {
+    offsets: Vec<u64>,
+    neighbors: Vec<ElemId>,
+}
+
+impl CsrGraph {
+    /// Build from an edge list (duplicates and self-loops are removed).
+    /// Edges are undirected: `(u, v)` produces adjacency in both rows.
+    pub fn from_edges(n: usize, edges: &[(ElemId, ElemId)]) -> Self {
+        let mut degree = vec![0u64; n];
+        let mut clean: Vec<(ElemId, ElemId)> = edges
+            .iter()
+            .copied()
+            .filter(|&(u, v)| u != v && (u as usize) < n && (v as usize) < n)
+            .map(|(u, v)| if u < v { (u, v) } else { (v, u) })
+            .collect();
+        clean.sort_unstable();
+        clean.dedup();
+        for &(u, v) in &clean {
+            degree[u as usize] += 1;
+            degree[v as usize] += 1;
+        }
+        let mut offsets = vec![0u64; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + degree[v];
+        }
+        let mut cursor = offsets.clone();
+        let mut neighbors = vec![0 as ElemId; offsets[n] as usize];
+        for &(u, v) in &clean {
+            neighbors[cursor[u as usize] as usize] = v;
+            cursor[u as usize] += 1;
+            neighbors[cursor[v as usize] as usize] = u;
+            cursor[v as usize] += 1;
+        }
+        // Sort each adjacency row for deterministic iteration & binary search.
+        for v in 0..n {
+            let (s, e) = (offsets[v] as usize, offsets[v + 1] as usize);
+            neighbors[s..e].sort_unstable();
+        }
+        Self { offsets, neighbors }
+    }
+
+    /// Number of vertices.
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    pub fn num_edges(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    /// Neighbors of `v` (sorted).
+    #[inline]
+    pub fn neighbors(&self, v: ElemId) -> &[ElemId] {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        &self.neighbors[s..e]
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: ElemId) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Sum of degrees (the paper's Σδ(u) column in Table 2).
+    pub fn total_degree(&self) -> u64 {
+        self.neighbors.len() as u64
+    }
+
+    /// Average degree.
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_vertices() == 0 {
+            0.0
+        } else {
+            self.neighbors.len() as f64 / self.num_vertices() as f64
+        }
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices())
+            .map(|v| self.degree(v as ElemId))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Heap bytes (memory accounting).
+    pub fn mem_bytes(&self) -> usize {
+        self.offsets.len() * 8 + self.neighbors.len() * 4
+    }
+
+    /// Bytes charged for holding the adjacency data of one vertex — what a
+    /// leaf machine stores per element of its partition, and what one
+    /// solution element costs when shipped up the accumulation tree
+    /// (id + length + adjacency list; cf. §4.2 "Communication Complexity").
+    pub fn elem_bytes(&self, v: ElemId) -> usize {
+        // 4 (id) + 4 (list length) + 4 per neighbour.
+        8 + 4 * self.degree(v)
+    }
+
+    /// Parse an edge-list text format: one `u v` pair per line, `#` or `%`
+    /// comment lines ignored (covers SNAP and Matrix-Market-ish headers).
+    /// Vertex ids may be arbitrary u32s; they are compacted to `0..n`.
+    pub fn parse_edge_list(text: &str) -> crate::Result<Self> {
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        let mut max_id = 0u32;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let (Some(a), Some(b)) = (it.next(), it.next()) else {
+                anyhow::bail!("bad edge line: '{line}'");
+            };
+            let u: u32 = a.parse().map_err(|e| anyhow::anyhow!("bad vertex '{a}': {e}"))?;
+            let v: u32 = b.parse().map_err(|e| anyhow::anyhow!("bad vertex '{b}': {e}"))?;
+            max_id = max_id.max(u).max(v);
+            edges.push((u, v));
+        }
+        let n = if edges.is_empty() { 0 } else { max_id as usize + 1 };
+        Ok(Self::from_edges(n, &edges))
+    }
+
+    /// Load an edge-list file.
+    pub fn load_edge_list(path: &str) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+        Self::parse_edge_list(&text)
+    }
+
+    /// Write as edge-list text (for golden tests and dataset export).
+    pub fn to_edge_list(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# greedyml edge list\n");
+        for u in 0..self.num_vertices() as ElemId {
+            for &v in self.neighbors(u) {
+                if u < v {
+                    out.push_str(&format!("{u} {v}\n"));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> CsrGraph {
+        // 0 - 1 - 2, plus isolated 3
+        CsrGraph::from_edges(4, &[(0, 1), (1, 2)])
+    }
+
+    #[test]
+    fn basic_structure() {
+        let g = path3();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.neighbors(3), &[] as &[ElemId]);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.max_degree(), 2);
+        assert!((g.avg_degree() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let g = CsrGraph::from_edges(3, &[(0, 1), (1, 0), (0, 1), (2, 2)]);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.neighbors(2), &[] as &[ElemId]);
+    }
+
+    #[test]
+    fn out_of_range_edges_dropped() {
+        let g = CsrGraph::from_edges(2, &[(0, 1), (0, 5)]);
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let g = CsrGraph::from_edges(5, &[(0, 1), (1, 2), (3, 4), (0, 4)]);
+        let text = g.to_edge_list();
+        let g2 = CsrGraph::parse_edge_list(&text).unwrap();
+        assert_eq!(g2.num_vertices(), 5);
+        assert_eq!(g2.num_edges(), 4);
+        for v in 0..5 {
+            assert_eq!(g.neighbors(v), g2.neighbors(v));
+        }
+    }
+
+    #[test]
+    fn parse_with_comments_and_errors() {
+        let g = CsrGraph::parse_edge_list("# hi\n% there\n0 1\n1 2\n").unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert!(CsrGraph::parse_edge_list("0\n").is_err());
+        assert!(CsrGraph::parse_edge_list("a b\n").is_err());
+    }
+
+    #[test]
+    fn elem_bytes_scale_with_degree() {
+        let g = path3();
+        assert_eq!(g.elem_bytes(1), 8 + 8);
+        assert_eq!(g.elem_bytes(3), 8);
+    }
+
+    #[test]
+    fn mem_bytes_positive() {
+        let g = path3();
+        assert!(g.mem_bytes() >= g.num_vertices() * 8);
+    }
+}

@@ -1,0 +1,176 @@
+//! Transaction / itemset collections for the k-cover experiments.
+//!
+//! The paper's k-cover datasets (webdocs, kosarak, retail) come from the
+//! Frequent Itemset Mining repository: each line of a FIMI file is one
+//! transaction — a list of item ids.  The k-cover ground set is the set of
+//! *transactions*; the objective counts the union of *items* covered.
+//!
+//! Storage is CSR-like: all itemsets concatenated into one arena with
+//! per-transaction offsets, so a machine's memory charge is exact and
+//! per-call cost is a linear scan of δ items (Table 1).
+
+use crate::ElemId;
+
+/// A collection of itemsets over an item universe `0..num_items`.
+#[derive(Clone, Debug)]
+pub struct ItemsetCollection {
+    offsets: Vec<u64>,
+    items: Vec<u32>,
+    num_items: usize,
+}
+
+impl ItemsetCollection {
+    /// Build from explicit per-transaction item lists. Item ids are used as
+    /// given; `num_items` is inferred as max+1.
+    pub fn from_sets(sets: &[Vec<u32>]) -> Self {
+        let mut offsets = Vec::with_capacity(sets.len() + 1);
+        offsets.push(0u64);
+        let total: usize = sets.iter().map(|s| s.len()).sum();
+        let mut items = Vec::with_capacity(total);
+        let mut num_items = 0usize;
+        for set in sets {
+            let mut s = set.clone();
+            s.sort_unstable();
+            s.dedup();
+            for &i in &s {
+                num_items = num_items.max(i as usize + 1);
+            }
+            items.extend_from_slice(&s);
+            offsets.push(items.len() as u64);
+        }
+        Self { offsets, items, num_items }
+    }
+
+    /// Number of transactions (the ground set size `n`).
+    pub fn num_sets(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Size of the item universe.
+    pub fn num_items(&self) -> usize {
+        self.num_items
+    }
+
+    /// Items of transaction `t` (sorted, deduped).
+    #[inline]
+    pub fn set(&self, t: ElemId) -> &[u32] {
+        let s = self.offsets[t as usize] as usize;
+        let e = self.offsets[t as usize + 1] as usize;
+        &self.items[s..e]
+    }
+
+    /// Cardinality of transaction `t` (the paper's δ(u) for k-cover).
+    #[inline]
+    pub fn set_size(&self, t: ElemId) -> usize {
+        (self.offsets[t as usize + 1] - self.offsets[t as usize]) as usize
+    }
+
+    /// Total item occurrences (Σδ(u), Table 2).
+    pub fn total_items(&self) -> u64 {
+        self.items.len() as u64
+    }
+
+    /// Average itemset size.
+    pub fn avg_set_size(&self) -> f64 {
+        if self.num_sets() == 0 {
+            0.0
+        } else {
+            self.items.len() as f64 / self.num_sets() as f64
+        }
+    }
+
+    /// Max itemset size.
+    pub fn max_set_size(&self) -> usize {
+        (0..self.num_sets())
+            .map(|t| self.set_size(t as ElemId))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Heap bytes.
+    pub fn mem_bytes(&self) -> usize {
+        self.offsets.len() * 8 + self.items.len() * 4
+    }
+
+    /// Bytes to hold/ship one transaction (id + length + items).
+    pub fn elem_bytes(&self, t: ElemId) -> usize {
+        8 + 4 * self.set_size(t)
+    }
+
+    /// Parse FIMI format: one transaction per line, whitespace-separated
+    /// item ids.  A blank line is an *empty transaction* (so `to_fimi` ∘
+    /// `parse_fimi` round-trips); real FIMI files contain none.
+    pub fn parse_fimi(text: &str) -> crate::Result<Self> {
+        let mut sets: Vec<Vec<u32>> = Vec::new();
+        for line in text.lines() {
+            let set: Result<Vec<u32>, _> =
+                line.split_whitespace().map(|w| w.parse()).collect();
+            sets.push(set.map_err(|e| anyhow::anyhow!("bad FIMI line '{line}': {e}"))?);
+        }
+        Ok(Self::from_sets(&sets))
+    }
+
+    /// Load a FIMI file.
+    pub fn load_fimi(path: &str) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+        Self::parse_fimi(&text)
+    }
+
+    /// Serialise to FIMI text.
+    pub fn to_fimi(&self) -> String {
+        let mut out = String::new();
+        for t in 0..self.num_sets() as ElemId {
+            let strs: Vec<String> = self.set(t).iter().map(|i| i.to_string()).collect();
+            out.push_str(&strs.join(" "));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ItemsetCollection {
+        ItemsetCollection::from_sets(&[vec![1, 2, 3], vec![3, 4], vec![], vec![0, 4, 4]])
+    }
+
+    #[test]
+    fn structure() {
+        let c = sample();
+        assert_eq!(c.num_sets(), 4);
+        assert_eq!(c.num_items(), 5);
+        assert_eq!(c.set(0), &[1, 2, 3]);
+        assert_eq!(c.set(2), &[] as &[u32]);
+        assert_eq!(c.set(3), &[0, 4], "duplicates removed");
+        assert_eq!(c.set_size(1), 2);
+        assert_eq!(c.total_items(), 7);
+        assert_eq!(c.max_set_size(), 3);
+        assert!((c.avg_set_size() - 7.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fimi_roundtrip() {
+        let c = sample();
+        let text = c.to_fimi();
+        let c2 = ItemsetCollection::parse_fimi(&text).unwrap();
+        assert_eq!(c2.num_sets(), 4);
+        for t in 0..4 {
+            assert_eq!(c.set(t), c2.set(t));
+        }
+    }
+
+    #[test]
+    fn fimi_parse_errors() {
+        assert!(ItemsetCollection::parse_fimi("1 2 x\n").is_err());
+    }
+
+    #[test]
+    fn elem_bytes() {
+        let c = sample();
+        assert_eq!(c.elem_bytes(0), 8 + 12);
+        assert_eq!(c.elem_bytes(2), 8);
+    }
+}

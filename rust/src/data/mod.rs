@@ -1,0 +1,97 @@
+//! Datasets: storage (CSR graphs, itemset collections, dense vectors),
+//! text/binary IO, and seeded synthetic generators reproducing the shape of
+//! the paper's testbed (Table 2).
+
+pub mod gen;
+pub mod graph;
+pub mod itemsets;
+pub mod vectors;
+
+pub use graph::CsrGraph;
+pub use itemsets::ItemsetCollection;
+pub use vectors::VectorSet;
+
+/// Summary row matching the paper's Table 2 ("Properties of Datasets").
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetSummary {
+    /// Dataset label.
+    pub name: String,
+    /// Ground-set size n = |V|.
+    pub n: usize,
+    /// Σ_u δ(u): total neighbours / items / vector length.
+    pub total_delta: u64,
+    /// Average δ(u).
+    pub avg_delta: f64,
+}
+
+impl DatasetSummary {
+    /// Summarise a graph (k-dominating-set row).
+    pub fn of_graph(name: &str, g: &CsrGraph) -> Self {
+        Self {
+            name: name.to_string(),
+            n: g.num_vertices(),
+            total_delta: g.total_degree(),
+            avg_delta: g.avg_degree(),
+        }
+    }
+
+    /// Summarise an itemset collection (k-cover row).
+    pub fn of_itemsets(name: &str, c: &ItemsetCollection) -> Self {
+        Self {
+            name: name.to_string(),
+            n: c.num_sets(),
+            total_delta: c.total_items(),
+            avg_delta: c.avg_set_size(),
+        }
+    }
+
+    /// Summarise a vector set (k-medoid row; δ = dim as in the paper).
+    pub fn of_vectors(name: &str, v: &VectorSet) -> Self {
+        Self {
+            name: name.to_string(),
+            n: v.len(),
+            total_delta: (v.len() * v.dim()) as u64,
+            avg_delta: v.dim() as f64,
+        }
+    }
+
+    /// One fixed-width table row (Table 2 shape).
+    pub fn row(&self) -> String {
+        format!(
+            "{:<18} {:>12} {:>16} {:>10.2}",
+            self.name,
+            crate::util::fmt_count(self.n as u64),
+            crate::util::fmt_count(self.total_delta),
+            self.avg_delta
+        )
+    }
+
+    /// Table header matching [`row`](Self::row).
+    pub fn header() -> String {
+        format!("{:<18} {:>12} {:>16} {:>10}", "Dataset", "n=|V|", "sum delta(u)", "avg delta")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summaries() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let s = DatasetSummary::of_graph("g", &g);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.total_delta, 6);
+        assert!((s.avg_delta - 1.5).abs() < 1e-12);
+
+        let c = ItemsetCollection::from_sets(&[vec![0, 1], vec![2]]);
+        let s = DatasetSummary::of_itemsets("c", &c);
+        assert_eq!((s.n, s.total_delta), (2, 3));
+
+        let v = VectorSet::from_flat(vec![0.0; 12], 3).unwrap();
+        let s = DatasetSummary::of_vectors("v", &v);
+        assert_eq!((s.n, s.total_delta), (4, 12));
+        assert!(s.row().contains("v"));
+        assert!(DatasetSummary::header().contains("Dataset"));
+    }
+}

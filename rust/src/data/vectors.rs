@@ -1,0 +1,257 @@
+//! Dense vector datasets for the k-medoid (exemplar clustering) experiments.
+//!
+//! The paper flattens Tiny ImageNet images to 12,288-d vectors, subtracts
+//! the mean and normalizes (§6.4).  We store row-major `f32` with fixed
+//! dimensionality, support the same preprocessing, and read/write a simple
+//! fvecs-like binary format (`[u32 dim][f32 × dim]` per row) so real data
+//! can drop in.
+
+/// A dense row-major `f32` matrix: `n` vectors of dimension `d`.
+#[derive(Clone, Debug)]
+pub struct VectorSet {
+    data: Vec<f32>,
+    dim: usize,
+}
+
+impl VectorSet {
+    /// Build from a flat buffer (length must be a multiple of `dim`).
+    pub fn from_flat(data: Vec<f32>, dim: usize) -> crate::Result<Self> {
+        anyhow::ensure!(dim > 0, "dimension must be positive");
+        anyhow::ensure!(
+            data.len() % dim == 0,
+            "buffer length {} is not a multiple of dim {dim}",
+            data.len()
+        );
+        Ok(Self { data, dim })
+    }
+
+    /// Number of vectors.
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    /// True if there are no vectors.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Dimensionality (the paper's δ for k-medoid, Table 1).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Flat data (PJRT bridge).
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Squared Euclidean distance between rows `i` and `j`.
+    #[inline]
+    pub fn dist_sq(&self, i: usize, j: usize) -> f64 {
+        dist_sq(self.row(i), self.row(j))
+    }
+
+    /// Squared Euclidean distance between row `i` and an external vector.
+    #[inline]
+    pub fn dist_sq_to(&self, i: usize, v: &[f32]) -> f64 {
+        dist_sq(self.row(i), v)
+    }
+
+    /// Paper preprocessing: subtract the per-vector mean and L2-normalize
+    /// each row (§6.4). Zero rows are left as zeros.
+    pub fn normalize_rows(&mut self) {
+        let d = self.dim;
+        for r in self.data.chunks_mut(d) {
+            let mean = r.iter().sum::<f32>() / d as f32;
+            for x in r.iter_mut() {
+                *x -= mean;
+            }
+            let norm = r.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > 0.0 {
+                for x in r.iter_mut() {
+                    *x /= norm;
+                }
+            }
+        }
+    }
+
+    /// Heap bytes.
+    pub fn mem_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Bytes to hold/ship one vector (id + dim + payload).
+    pub fn elem_bytes(&self) -> usize {
+        8 + 4 * self.dim
+    }
+
+    /// Serialise to fvecs bytes: per row, little-endian `u32 dim` then
+    /// `dim` little-endian `f32`s.
+    pub fn to_fvecs(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len() * (4 + 4 * self.dim));
+        for i in 0..self.len() {
+            out.extend_from_slice(&(self.dim as u32).to_le_bytes());
+            for &x in self.row(i) {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Parse fvecs bytes.
+    pub fn parse_fvecs(bytes: &[u8]) -> crate::Result<Self> {
+        anyhow::ensure!(bytes.len() >= 4, "fvecs: truncated header");
+        let dim = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        anyhow::ensure!(dim > 0, "fvecs: zero dimension");
+        let row_bytes = 4 + 4 * dim;
+        anyhow::ensure!(
+            bytes.len() % row_bytes == 0,
+            "fvecs: {} bytes is not a multiple of row size {row_bytes}",
+            bytes.len()
+        );
+        let n = bytes.len() / row_bytes;
+        let mut data = Vec::with_capacity(n * dim);
+        for r in 0..n {
+            let base = r * row_bytes;
+            let d = u32::from_le_bytes(bytes[base..base + 4].try_into().unwrap()) as usize;
+            anyhow::ensure!(d == dim, "fvecs: row {r} has dim {d}, expected {dim}");
+            for c in 0..dim {
+                let off = base + 4 + 4 * c;
+                data.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+            }
+        }
+        Self::from_flat(data, dim)
+    }
+
+    /// Load an fvecs file.
+    pub fn load_fvecs(path: &str) -> crate::Result<Self> {
+        let bytes =
+            std::fs::read(path).map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+        Self::parse_fvecs(&bytes)
+    }
+
+    /// Subset by row indices (builds a new set — used for partitions).
+    pub fn subset(&self, rows: &[crate::ElemId]) -> Self {
+        let mut data = Vec::with_capacity(rows.len() * self.dim);
+        for &r in rows {
+            data.extend_from_slice(self.row(r as usize));
+        }
+        Self { data, dim: self.dim }
+    }
+}
+
+/// Squared Euclidean distance between two equal-length slices.
+#[inline]
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Squared Euclidean distance with 4-lane f32 accumulation (lanes summed in
+/// f64 at the end).  The per-element f32→f64 widening in [`dist_sq`] defeats
+/// autovectorization; this version keeps the inner loop in f32 so LLVM emits
+/// packed SIMD, at a worst-case relative error of ~d·2⁻²⁴ — negligible
+/// against the kernels' own f32 math (§Perf P1).
+#[inline]
+pub fn dist_sq_fast(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    const LANES: usize = 4;
+    let mut lanes = [0.0f32; LANES];
+    let chunks = a.len() / LANES;
+    for c in 0..chunks {
+        let i = c * LANES;
+        // Bounds are checked once by the slice indexing below; the pattern
+        // is simple enough for LLVM to lift the checks and vectorize
+        // (packed sub + FMA; 4 lanes measured faster than 8 here — §Perf P1).
+        let (a4, b4) = (&a[i..i + LANES], &b[i..i + LANES]);
+        for l in 0..LANES {
+            let d = a4[l] - b4[l];
+            lanes[l] += d * d;
+        }
+    }
+    let mut acc = lanes.iter().map(|&l| l as f64).sum::<f64>();
+    for i in chunks * LANES..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> VectorSet {
+        VectorSet::from_flat(vec![0.0, 0.0, 3.0, 4.0, 1.0, 1.0], 2).unwrap()
+    }
+
+    #[test]
+    fn structure_and_distance() {
+        let v = sample();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v.dim(), 2);
+        assert_eq!(v.row(1), &[3.0, 4.0]);
+        assert!((v.dist_sq(0, 1) - 25.0).abs() < 1e-9);
+        assert!((v.dist_sq_to(0, &[1.0, 1.0]) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_flat_validates() {
+        assert!(VectorSet::from_flat(vec![1.0; 5], 2).is_err());
+        assert!(VectorSet::from_flat(vec![], 0).is_err());
+    }
+
+    #[test]
+    fn normalize_rows_zero_mean_unit_norm() {
+        let mut v = VectorSet::from_flat(vec![1.0, 3.0, 5.0, 5.0, 5.0, 5.0], 3).unwrap();
+        v.normalize_rows();
+        // Row 0: mean 3 -> [-2,0,2], norm sqrt(8).
+        let r = v.row(0);
+        assert!((r[0] + 2.0 / 8f32.sqrt()).abs() < 1e-6);
+        let norm: f32 = r.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-6);
+        // Row 1 is constant -> zero after centering; stays zero.
+        assert_eq!(v.row(1), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn fvecs_roundtrip() {
+        let v = sample();
+        let bytes = v.to_fvecs();
+        let v2 = VectorSet::parse_fvecs(&bytes).unwrap();
+        assert_eq!(v2.len(), 3);
+        assert_eq!(v2.dim(), 2);
+        for i in 0..3 {
+            assert_eq!(v.row(i), v2.row(i));
+        }
+    }
+
+    #[test]
+    fn fvecs_rejects_garbage() {
+        assert!(VectorSet::parse_fvecs(&[1, 2]).is_err());
+        // dim=2 header but short payload
+        let mut bad = 2u32.to_le_bytes().to_vec();
+        bad.extend_from_slice(&[0; 4]);
+        assert!(VectorSet::parse_fvecs(&bad).is_err());
+    }
+
+    #[test]
+    fn subset_copies_rows() {
+        let v = sample();
+        let s = v.subset(&[2, 0]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.row(0), &[1.0, 1.0]);
+        assert_eq!(s.row(1), &[0.0, 0.0]);
+    }
+}

@@ -1,0 +1,42 @@
+//! # GreedyML
+//!
+//! A reproduction of *GreedyML: A Parallel Algorithm for Maximizing
+//! Constrained Submodular Functions* (Gopal, Ferdous, Maji, Pothen, 2024).
+//!
+//! The crate is organised in three layers:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution: the
+//!   accumulation tree, the simulated distributed BSP runtime, the
+//!   `GreedyML`/`RandGreeDI`/`GreeDI`/sequential-`Greedy` algorithms, the
+//!   submodular oracles, constraints, datasets, metrics and benchmarks.
+//! * **Layer 2 (python/compile/model.py)** — JAX batched marginal-gain
+//!   graphs, lowered once (AOT) to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot spot (k-medoid distance gains, packed-bitmap coverage gains).
+//!
+//! Python never runs at solve time: `rust/src/runtime` loads the AOT
+//! artifacts via the PJRT C API (`xla` crate) and executes them natively.
+
+pub mod util;
+pub mod check;
+pub mod data;
+pub mod objective;
+pub mod constraint;
+pub mod greedy;
+pub mod tree;
+pub mod dist;
+pub mod algo;
+pub mod bsp;
+pub mod metrics;
+pub mod runtime;
+pub mod coordinator;
+pub mod cli;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Element identifier within a ground set. Ground sets are dense `0..n`.
+pub type ElemId = u32;
+
+/// Machine identifier (a leaf of the accumulation tree).
+pub type MachineId = u32;

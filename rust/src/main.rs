@@ -1,0 +1,226 @@
+//! `greedyml` — the launcher.
+//!
+//! Subcommands:
+//!   run       — run an experiment config:   greedyml run --config configs/fig4.toml [--set k=v]…
+//!   tree      — inspect an accumulation tree: greedyml tree --machines 8 --branching 2
+//!   datasets  — print Table-2-style summaries of the synthetic presets
+//!   artifacts — validate the AOT artifact bundle and report entry points
+//!   model     — print the BSP cost model (Table 1) for given parameters
+
+use greedyml::cli::Args;
+use greedyml::coordinator::{render_table, Experiment};
+use greedyml::metrics::write_reports;
+use greedyml::runtime::Engine;
+use greedyml::tree::AccumulationTree;
+use greedyml::util::config::Config;
+use std::sync::Arc;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> greedyml::Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("tree") => cmd_tree(&args),
+        Some("datasets") => cmd_datasets(),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("model") => cmd_model(&args),
+        Some(other) => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "usage: greedyml <run|sweep|tree|datasets|artifacts|model> [flags]
+  run       --config <file> [--set key=value]… [--json <out.json>] [--pjrt]
+  sweep     --config <file> (with a [sweep] section) [--set key=value]… [--json <out.json>]
+  tree      --machines <m> --branching <b>
+  datasets  (no flags)
+  artifacts [--dir <artifacts/>]
+  model     --n <n> --k <k> --machines <m> --levels <L> [--delta <d>]";
+
+fn cmd_run(args: &Args) -> greedyml::Result<()> {
+    args.check_known(&["config", "set", "json", "pjrt", "trace"])?;
+    let mut cfg = Config::load(args.require("config")?)?;
+    for kv in args.get_all("set") {
+        cfg.set_kv(kv)?;
+    }
+    let engine = if args.has("pjrt") || cfg.str_or("objective.backend", "cpu") == "pjrt" {
+        if args.has("pjrt") {
+            cfg.set("objective.backend", "pjrt");
+        }
+        Some(Arc::new(Engine::load(&greedyml::runtime::artifact_dir())?))
+    } else {
+        None
+    };
+    let exp = Experiment::from_config(&cfg, engine)?;
+    println!(
+        "experiment '{}' — {} on {} (n={}, k={})",
+        exp.name,
+        exp.problem.objective,
+        exp.problem.summary.name,
+        greedyml::util::fmt_count(exp.problem.summary.n as u64),
+        exp.k
+    );
+    let (reports, failures) = exp.run();
+    print!("{}", render_table(&reports, &failures));
+    if let Some(path) = args.get("json") {
+        write_reports(path, &reports)?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.get("trace") {
+        // Re-run the first distributed variant with tracing and export a
+        // Chrome-trace timeline (open in chrome://tracing or Perfetto).
+        if let Some(spec) = exp.algos.iter().find_map(|a| match *a {
+            greedyml::coordinator::AlgoSpec::GreedyMl { m, b } => Some((m, b, false)),
+            greedyml::coordinator::AlgoSpec::RandGreedi { m } => Some((m, m, true)),
+            _ => None,
+        }) {
+            let (m, b, all) = spec;
+            let cfg = greedyml::algo::DistConfig {
+                mem_limit: exp.mem_limit,
+                local_view: exp.local_view,
+                added_elements: exp.added_elements,
+                compare_all_children: all,
+                ..greedyml::algo::DistConfig::greedyml(AccumulationTree::new(m, b), exp.seed)
+            };
+            let out = greedyml::algo::run_dist(
+                exp.problem.oracle.as_ref(),
+                exp.constraint.as_ref(),
+                &cfg,
+            )
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            out.trace.write(path)?;
+            println!(
+                "wrote {path} ({} spans, makespan {:.4}s) — open in chrome://tracing",
+                out.trace.steps().len(),
+                out.trace.makespan()
+            );
+        } else {
+            println!("--trace: no distributed variant in run.algos to trace");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
+    args.check_known(&["config", "set", "json", "pjrt"])?;
+    let mut cfg = Config::load(args.require("config")?)?;
+    for kv in args.get_all("set") {
+        cfg.set_kv(kv)?;
+    }
+    let engine = if args.has("pjrt") || cfg.str_or("objective.backend", "cpu") == "pjrt" {
+        Some(Arc::new(Engine::load(&greedyml::runtime::artifact_dir())?))
+    } else {
+        None
+    };
+    let problem = greedyml::coordinator::build_problem(&cfg, engine)?;
+    let sweep = greedyml::coordinator::Sweep::from_config(&cfg)?;
+    println!(
+        "sweep on {} ({} ks × {} algos × {} reps)",
+        problem.summary.name,
+        sweep.ks.len(),
+        sweep.algos.len(),
+        sweep.reps
+    );
+    let (reports, failures) = sweep.run(&problem);
+    print!("{}", render_table(&reports, &failures));
+    if let Some(path) = args.get("json") {
+        write_reports(path, &reports)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_tree(args: &Args) -> greedyml::Result<()> {
+    args.check_known(&["machines", "branching", "show"])?;
+    let m = args.u64_or("machines", 8)? as u32;
+    let b = args.u64_or("branching", 2)? as u32;
+    let t = AccumulationTree::new(m, b);
+    print!("{}", t.render());
+    println!("max fan-in: {}", t.max_fan_in());
+    Ok(())
+}
+
+fn cmd_datasets() -> greedyml::Result<()> {
+    use greedyml::data::{gen, DatasetSummary};
+    println!("{}", DatasetSummary::header());
+    let road = gen::road(gen::RoadParams::usa_like(1 << 14), 1);
+    println!("{}", DatasetSummary::of_graph("road-like", &road).row());
+    let belg = gen::road(gen::RoadParams::belgium_like(1 << 13), 1);
+    println!("{}", DatasetSummary::of_graph("belgium-like", &belg).row());
+    let rmat = gen::rmat(gen::RmatParams::friendster_like(13), 1);
+    println!("{}", DatasetSummary::of_graph("friendster-like", &rmat).row());
+    let kos = gen::transactions(gen::TransactionParams::kosarak_like(4096), 1);
+    println!("{}", DatasetSummary::of_itemsets("kosarak-like", &kos).row());
+    let ret = gen::transactions(gen::TransactionParams::retail_like(4096), 1);
+    println!("{}", DatasetSummary::of_itemsets("retail-like", &ret).row());
+    let web = gen::transactions(
+        gen::TransactionParams { num_sets: 512, num_items: 2048, mean_size: 177.2, zipf_s: 1.0 },
+        1,
+    );
+    println!("{}", DatasetSummary::of_itemsets("webdocs-like", &web).row());
+    let (vs, _) = gen::gaussian_mixture(gen::GaussianParams::tiny_imagenet_like(2048, 128), 1);
+    println!("{}", DatasetSummary::of_vectors("tiny-imagenet-like", &vs).row());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> greedyml::Result<()> {
+    args.check_known(&["dir"])?;
+    let dir = args.get("dir").map(str::to_string).unwrap_or_else(greedyml::runtime::artifact_dir);
+    let engine = Engine::load(&dir)?;
+    let m = engine.manifest();
+    println!(
+        "artifacts ok: dir={dir} platform={} n_tile={} c_tile={} w_tile={}",
+        engine.platform(),
+        m.n_tile,
+        m.c_tile,
+        m.w_tile
+    );
+    for e in &m.entries {
+        let ins: Vec<String> =
+            e.inputs.iter().map(|s| format!("{:?}:{}", s.shape, s.dtype)).collect();
+        println!("  {:<24} {} -> {} outputs", e.name, ins.join(", "), e.outputs.len());
+    }
+    Ok(())
+}
+
+fn cmd_model(args: &Args) -> greedyml::Result<()> {
+    args.check_known(&["n", "k", "machines", "levels", "delta"])?;
+    let p = greedyml::bsp::BspParams {
+        n: args.u64_or("n", 1 << 20)?,
+        k: args.u64_or("k", 1000)?,
+        m: args.u64_or("machines", 32)?,
+        levels: args.u64_or("levels", 2)?,
+        delta: args.get("delta").map(|d| d.parse()).transpose()?.unwrap_or(8.0),
+    };
+    println!("BSP model (Table 1) for n={} k={} m={} L={} delta={}", p.n, p.k, p.m, p.levels, p.delta);
+    println!("  fan-in ceil(m^(1/L))      : {}", p.fan_in());
+    println!("  Greedy total calls        : {}", greedyml::util::fmt_count(p.greedy_calls()));
+    println!("  RandGreeDI calls/machine  : {}", greedyml::util::fmt_count(p.randgreedi_calls()));
+    println!("  GreedyML calls/machine    : {}", greedyml::util::fmt_count(p.greedyml_calls()));
+    println!(
+        "  interior elems RG vs GML  : {} vs {}",
+        greedyml::util::fmt_count(p.interior_elems_randgreedi()),
+        greedyml::util::fmt_count(p.interior_elems_greedyml())
+    );
+    println!(
+        "  comm cost RG vs GML       : {:.3e} vs {:.3e}",
+        p.comm_randgreedi(),
+        p.comm_greedyml()
+    );
+    println!(
+        "  k-medoid comp RG vs GML   : {:.3e} vs {:.3e}",
+        p.kmedoid_comp_randgreedi(),
+        p.kmedoid_comp_greedyml()
+    );
+    Ok(())
+}

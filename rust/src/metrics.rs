@@ -1,0 +1,190 @@
+//! Run-level metric reporting: turning [`DistOutcome`]s into the rows the
+//! paper's tables and figures print, plus JSON export for machine-readable
+//! results.
+
+use crate::algo::DistOutcome;
+use crate::util::json::Json;
+
+/// A named experiment measurement (one table row / figure point).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Algorithm label (Greedy / RG / GML(L,b) …).
+    pub algo: String,
+    /// Dataset label.
+    pub dataset: String,
+    /// Solution-size parameter k.
+    pub k: usize,
+    /// Machines.
+    pub machines: u32,
+    /// Branching factor (0 for sequential).
+    pub branching: u32,
+    /// Accumulation levels.
+    pub levels: u32,
+    /// Objective value.
+    pub value: f64,
+    /// Objective value relative to a baseline (percent), if known.
+    pub rel_value_pct: Option<f64>,
+    /// Function calls on the critical path.
+    pub critical_calls: u64,
+    /// Total function calls.
+    pub total_calls: u64,
+    /// Modeled computation seconds.
+    pub comp_secs: f64,
+    /// Modeled communication seconds.
+    pub comm_secs: f64,
+    /// Peak per-machine memory in bytes.
+    pub peak_mem: u64,
+}
+
+impl RunReport {
+    /// Build from a distributed outcome.
+    pub fn from_outcome(
+        algo: &str,
+        dataset: &str,
+        k: usize,
+        out: &DistOutcome,
+        machines: u32,
+        branching: u32,
+        levels: u32,
+    ) -> Self {
+        Self {
+            algo: algo.to_string(),
+            dataset: dataset.to_string(),
+            k,
+            machines,
+            branching,
+            levels,
+            value: out.value,
+            rel_value_pct: None,
+            critical_calls: out.critical_calls,
+            total_calls: out.total_calls,
+            comp_secs: out.comp_secs,
+            comm_secs: out.comm_secs,
+            peak_mem: out.peak_mem(),
+        }
+    }
+
+    /// Set the relative function value against a baseline value.
+    pub fn with_baseline(mut self, baseline_value: f64) -> Self {
+        if baseline_value > 0.0 {
+            self.rel_value_pct = Some(100.0 * self.value / baseline_value);
+        }
+        self
+    }
+
+    /// Fixed-width human row.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<14} {:<14} {:>9} {:>4} {:>3} {:>3} {:>14.2} {:>8} {:>12} {:>10.4} {:>10.4} {:>12}",
+            self.algo,
+            self.dataset,
+            self.k,
+            self.machines,
+            self.branching,
+            self.levels,
+            self.value,
+            self.rel_value_pct.map_or("-".to_string(), |p| format!("{p:.2}%")),
+            crate::util::fmt_count(self.critical_calls),
+            self.comp_secs,
+            self.comm_secs,
+            crate::util::fmt_bytes(self.peak_mem),
+        )
+    }
+
+    /// Header matching [`row`](Self::row).
+    pub fn header() -> String {
+        format!(
+            "{:<14} {:<14} {:>9} {:>4} {:>3} {:>3} {:>14} {:>8} {:>12} {:>10} {:>10} {:>12}",
+            "algo", "dataset", "k", "m", "b", "L", "f(S)", "rel", "crit.calls", "comp(s)", "comm(s)", "peak mem"
+        )
+    }
+
+    /// JSON export.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("algo", Json::from(self.algo.clone())),
+            ("dataset", Json::from(self.dataset.clone())),
+            ("k", Json::from(self.k)),
+            ("machines", Json::from(self.machines as u64)),
+            ("branching", Json::from(self.branching as u64)),
+            ("levels", Json::from(self.levels as u64)),
+            ("value", Json::from(self.value)),
+            (
+                "rel_value_pct",
+                self.rel_value_pct.map_or(Json::Null, Json::from),
+            ),
+            ("critical_calls", Json::from(self.critical_calls)),
+            ("total_calls", Json::from(self.total_calls)),
+            ("comp_secs", Json::from(self.comp_secs)),
+            ("comm_secs", Json::from(self.comm_secs)),
+            ("peak_mem", Json::from(self.peak_mem)),
+        ])
+    }
+}
+
+/// Write a list of reports to a JSON file.
+pub fn write_reports(path: &str, reports: &[RunReport]) -> crate::Result<()> {
+    let arr = Json::Arr(reports.iter().map(|r| r.to_json()).collect());
+    std::fs::write(path, arr.to_pretty())
+        .map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy() -> RunReport {
+        RunReport {
+            algo: "GML".into(),
+            dataset: "road".into(),
+            k: 100,
+            machines: 8,
+            branching: 2,
+            levels: 3,
+            value: 1234.5,
+            rel_value_pct: None,
+            critical_calls: 999,
+            total_calls: 4000,
+            comp_secs: 0.5,
+            comm_secs: 0.01,
+            peak_mem: 2048,
+        }
+    }
+
+    #[test]
+    fn baseline_percentage() {
+        let r = dummy().with_baseline(2469.0);
+        assert!((r.rel_value_pct.unwrap() - 50.0).abs() < 0.01);
+        let r2 = dummy().with_baseline(0.0);
+        assert!(r2.rel_value_pct.is_none());
+    }
+
+    #[test]
+    fn row_and_header_align() {
+        let h = RunReport::header();
+        let r = dummy().with_baseline(1234.5).row();
+        assert!(h.contains("crit.calls"));
+        assert!(r.contains("100.00%"));
+        assert!(r.contains("GML"));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let j = dummy().with_baseline(1234.5).to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("k").unwrap().as_u64(), Some(100));
+        assert_eq!(parsed.get("algo").unwrap().as_str(), Some("GML"));
+    }
+
+    #[test]
+    fn write_reports_to_file() {
+        let path = std::env::temp_dir().join("greedyml_metrics_test.json");
+        let path = path.to_str().unwrap().to_string();
+        write_reports(&path, &[dummy(), dummy()]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let arr = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(arr.as_arr().unwrap().len(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,129 @@
+//! Facility-location objective: `f(S) = Σ_i max_{j∈S} w[i][j]` (w ≥ 0).
+//!
+//! A classic monotone submodular function distinct in structure from both
+//! coverage (integer, sparse) and k-medoid (metric): it exercises dense
+//! max-accumulation with real-valued weights.  Used by the property suite
+//! and by the ablation benches as a third objective family; small/dense by
+//! construction (`n × n` weight matrix), so it also gives the brute-force
+//! OPT tests a fast oracle.
+
+use super::{GainState, Oracle};
+use crate::ElemId;
+
+/// Facility-location oracle over a dense non-negative benefit matrix
+/// (row = client, column = facility candidate).
+#[derive(Clone, Debug)]
+pub struct FacilityLocation {
+    /// Row-major `clients × n` benefit matrix.
+    w: Vec<f64>,
+    clients: usize,
+    n: usize,
+}
+
+impl FacilityLocation {
+    /// Build from a row-major matrix.
+    pub fn new(w: Vec<f64>, clients: usize, n: usize) -> Self {
+        assert_eq!(w.len(), clients * n, "matrix shape mismatch");
+        assert!(w.iter().all(|&x| x >= 0.0), "benefits must be non-negative");
+        Self { w, clients, n }
+    }
+
+    /// Random benefits in [0,1).
+    pub fn random(clients: usize, n: usize, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        Self::new((0..clients * n).map(|_| rng.f64()).collect(), clients, n)
+    }
+
+    #[inline]
+    fn benefit(&self, client: usize, facility: ElemId) -> f64 {
+        self.w[client * self.n + facility as usize]
+    }
+}
+
+impl Oracle for FacilityLocation {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn name(&self) -> &'static str {
+        "facility-location"
+    }
+
+    fn new_state<'a>(&'a self, _view: Option<&[ElemId]>) -> Box<dyn GainState + 'a> {
+        Box::new(FacState {
+            oracle: self,
+            best: vec![0.0; self.clients],
+            solution: Vec::new(),
+        })
+    }
+
+    fn elem_bytes(&self, _e: ElemId) -> usize {
+        8 + 8 * self.clients // id + its benefit column
+    }
+}
+
+struct FacState<'a> {
+    oracle: &'a FacilityLocation,
+    /// Per-client best benefit under the current solution.
+    best: Vec<f64>,
+    solution: Vec<ElemId>,
+}
+
+impl GainState for FacState<'_> {
+    fn value(&self) -> f64 {
+        self.best.iter().sum()
+    }
+
+    fn gain(&self, e: ElemId) -> f64 {
+        let mut acc = 0.0;
+        for (c, &b) in self.best.iter().enumerate() {
+            let w = self.oracle.benefit(c, e);
+            if w > b {
+                acc += w - b;
+            }
+        }
+        acc
+    }
+
+    fn commit(&mut self, e: ElemId) {
+        for (c, b) in self.best.iter_mut().enumerate() {
+            let w = self.oracle.benefit(c, e);
+            if w > *b {
+                *b = w;
+            }
+        }
+        self.solution.push(e);
+    }
+
+    fn solution(&self) -> &[ElemId] {
+        &self.solution
+    }
+
+    fn call_cost(&self, _e: ElemId) -> u64 {
+        self.oracle.clients as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::testutil;
+
+    #[test]
+    fn hand_values() {
+        // 2 clients, 3 facilities.
+        let o = FacilityLocation::new(vec![1.0, 0.5, 0.0, 0.0, 0.2, 0.9], 2, 3);
+        assert_eq!(o.eval(&[]), 0.0);
+        assert!((o.eval(&[0]) - 1.0).abs() < 1e-12);
+        assert!((o.eval(&[0, 2]) - 1.9).abs() < 1e-12);
+        assert!((o.eval(&[1]) - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn submodular_and_incremental() {
+        let o = FacilityLocation::random(6, 8, 12);
+        let mut rng = crate::util::rng::Rng::new(5);
+        testutil::check_submodular(&o, &mut rng, 40);
+        testutil::check_incremental(&o, &mut rng);
+    }
+}

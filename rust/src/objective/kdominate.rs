@@ -1,0 +1,149 @@
+//! The maximum k-vertex-dominating-set objective (§4.2).
+//!
+//! Ground set = vertices of a graph; a vertex dominates its adjacent
+//! vertices δ(u) (the paper's definition — open neighbourhood), and
+//! `f(S) = |∪_{u∈S} δ(u)|`.  A `closed` option additionally counts the
+//! vertex itself (the more common textbook definition); the benches use the
+//! paper's open variant.
+
+use super::{GainState, Oracle};
+use crate::data::graph::CsrGraph;
+use crate::util::bitset::BitSet;
+use crate::ElemId;
+use std::sync::Arc;
+
+/// k-dominating-set oracle over an undirected graph.
+#[derive(Clone)]
+pub struct KDominatingSet {
+    graph: Arc<CsrGraph>,
+    closed: bool,
+}
+
+impl KDominatingSet {
+    /// Paper variant: `u` dominates exactly its neighbours.
+    pub fn new(graph: Arc<CsrGraph>) -> Self {
+        Self { graph, closed: false }
+    }
+
+    /// Closed-neighbourhood variant: `u` also dominates itself.
+    pub fn closed(graph: Arc<CsrGraph>) -> Self {
+        Self { graph, closed: true }
+    }
+
+    /// The underlying graph.
+    pub fn graph(&self) -> &CsrGraph {
+        &self.graph
+    }
+}
+
+impl Oracle for KDominatingSet {
+    fn n(&self) -> usize {
+        self.graph.num_vertices()
+    }
+
+    fn name(&self) -> &'static str {
+        "k-dominating-set"
+    }
+
+    fn new_state<'a>(&'a self, _view: Option<&[ElemId]>) -> Box<dyn GainState + 'a> {
+        Box::new(KDomState {
+            graph: &self.graph,
+            closed: self.closed,
+            covered: BitSet::new(self.graph.num_vertices()),
+            covered_count: 0,
+            solution: Vec::new(),
+        })
+    }
+
+    fn elem_bytes(&self, e: ElemId) -> usize {
+        self.graph.elem_bytes(e)
+    }
+}
+
+struct KDomState<'a> {
+    graph: &'a CsrGraph,
+    closed: bool,
+    covered: BitSet,
+    covered_count: usize,
+    solution: Vec<ElemId>,
+}
+
+impl GainState for KDomState<'_> {
+    fn value(&self) -> f64 {
+        self.covered_count as f64
+    }
+
+    #[inline]
+    fn gain(&self, e: ElemId) -> f64 {
+        let mut g = self.covered.union_gain_sparse(self.graph.neighbors(e));
+        if self.closed {
+            g += !self.covered.contains(e as usize) as usize;
+        }
+        g as f64
+    }
+
+    fn commit(&mut self, e: ElemId) {
+        self.covered_count += self.covered.insert_sparse(self.graph.neighbors(e));
+        if self.closed {
+            self.covered_count += self.covered.insert(e as usize) as usize;
+        }
+        self.solution.push(e);
+    }
+
+    fn solution(&self) -> &[ElemId] {
+        &self.solution
+    }
+
+    fn call_cost(&self, e: ElemId) -> u64 {
+        self.graph.degree(e) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::testutil;
+
+    /// Star: 0 is the hub of 1..=4; 5-6 an edge apart.
+    fn star() -> Arc<CsrGraph> {
+        Arc::new(CsrGraph::from_edges(7, &[(0, 1), (0, 2), (0, 3), (0, 4), (5, 6)]))
+    }
+
+    #[test]
+    fn open_neighbourhood_values() {
+        let o = KDominatingSet::new(star());
+        assert_eq!(o.eval(&[0]), 4.0);
+        assert_eq!(o.eval(&[1]), 1.0);
+        assert_eq!(o.eval(&[0, 1]), 5.0, "1 dominates 0");
+        assert_eq!(o.eval(&[0, 5]), 5.0);
+        assert_eq!(o.eval(&[0, 1, 5, 6]), 7.0);
+    }
+
+    #[test]
+    fn closed_neighbourhood_values() {
+        let o = KDominatingSet::closed(star());
+        assert_eq!(o.eval(&[0]), 5.0);
+        assert_eq!(o.eval(&[5]), 2.0);
+    }
+
+    #[test]
+    fn submodular_and_incremental_both_variants() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let g = Arc::new(crate::data::gen::road(
+            crate::data::gen::RoadParams { n: 64, ..Default::default() },
+            3,
+        ));
+        for o in [KDominatingSet::new(g.clone()), KDominatingSet::closed(g.clone())] {
+            testutil::check_submodular(&o, &mut rng, 40);
+            testutil::check_incremental(&o, &mut rng);
+        }
+    }
+
+    #[test]
+    fn call_cost_is_degree() {
+        let o = KDominatingSet::new(star());
+        let st = o.new_state(None);
+        assert_eq!(st.call_cost(0), 4);
+        assert_eq!(st.call_cost(5), 1);
+    }
+}

@@ -1,0 +1,203 @@
+//! The k-medoid (exemplar-based clustering) objective (§4.2, §6.4).
+//!
+//! Given vectors and dissimilarity `d(u, v)` (Euclidean distance), the loss
+//! `L(S) = (1/|V'|) Σ_{u∈V'} min_{v∈S} d(u, v)` is turned into a monotone
+//! submodular maximization via `f(S) = L({e₀}) − L(S ∪ {e₀})` with the
+//! auxiliary element `e₀` = the all-zeros vector (the paper's choice).
+//!
+//! The evaluation view `V'` matters here: in the distributed experiments
+//! each machine evaluates `f` against only its local vectors
+//! (Mirzasoleiman et al., Thm 10), so [`Oracle::new_state`] accepts the
+//! local element list.  Candidates are always global ids.
+//!
+//! Per-call cost is `n'·δ` (δ = dim): each gain query scans the view and
+//! computes one distance per element — this is the compute-intensive
+//! objective the paper accelerates least well at the root (km images
+//! accumulate there), and the one our Pallas/PJRT kernel accelerates
+//! (`runtime::kmedoid_pjrt`).
+
+use super::{GainState, Oracle};
+use crate::data::vectors::VectorSet;
+use crate::ElemId;
+use std::sync::Arc;
+
+/// k-medoid oracle over a vector set.
+#[derive(Clone)]
+pub struct KMedoid {
+    data: Arc<VectorSet>,
+}
+
+impl KMedoid {
+    /// Wrap a (preprocessed) vector set.
+    pub fn new(data: Arc<VectorSet>) -> Self {
+        Self { data }
+    }
+
+    /// The underlying vectors.
+    pub fn data(&self) -> &Arc<VectorSet> {
+        &self.data
+    }
+
+    /// Distance to the auxiliary element e₀ (all zeros) = L2 norm.
+    fn d0(&self, i: usize) -> f64 {
+        self.data.row(i).iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+impl Oracle for KMedoid {
+    fn n(&self) -> usize {
+        self.data.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "k-medoid"
+    }
+
+    fn new_state<'a>(&'a self, view: Option<&[ElemId]>) -> Box<dyn GainState + 'a> {
+        let view: Vec<ElemId> = match view {
+            Some(v) => v.to_vec(),
+            None => (0..self.data.len() as ElemId).collect(),
+        };
+        // mind_i starts at d(i, e0): the loss of the {e0}-only solution.
+        let mind: Vec<f64> = view.iter().map(|&i| self.d0(i as usize)).collect();
+        let base_loss_sum: f64 = mind.iter().sum();
+        Box::new(KMedoidState {
+            oracle: self,
+            view,
+            mind,
+            base_loss_sum,
+            solution: Vec::new(),
+        })
+    }
+
+    fn elem_bytes(&self, _e: ElemId) -> usize {
+        self.data.elem_bytes()
+    }
+}
+
+struct KMedoidState<'a> {
+    oracle: &'a KMedoid,
+    view: Vec<ElemId>,
+    /// Current min distance of each view element to S ∪ {e₀}.
+    mind: Vec<f64>,
+    /// Σ_i d(i, e₀) — the loss sum of the base solution {e₀}.
+    base_loss_sum: f64,
+    solution: Vec<ElemId>,
+}
+
+impl KMedoidState<'_> {
+    #[inline]
+    fn nv(&self) -> f64 {
+        self.view.len().max(1) as f64
+    }
+}
+
+impl GainState for KMedoidState<'_> {
+    fn value(&self) -> f64 {
+        // f(S) = L({e0}) − L(S ∪ {e0}) = (base − Σ mind) / n'.
+        (self.base_loss_sum - self.mind.iter().sum::<f64>()) / self.nv()
+    }
+
+    fn gain(&self, e: ElemId) -> f64 {
+        // §Perf P1: lane-parallel f32 distance (dist_sq_fast) plus sqrt
+        // elision — once mind has shrunk, most candidates fail the
+        // d² < mind² test and never pay the sqrt.
+        let data = &self.oracle.data;
+        let cand = data.row(e as usize);
+        let mut acc = 0.0f64;
+        for (idx, &i) in self.view.iter().enumerate() {
+            let m = self.mind[idx];
+            if m <= 0.0 {
+                continue;
+            }
+            let d2 = crate::data::vectors::dist_sq_fast(data.row(i as usize), cand);
+            if d2 < m * m {
+                acc += m - d2.sqrt();
+            }
+        }
+        acc / self.nv()
+    }
+
+    fn commit(&mut self, e: ElemId) {
+        let data = &self.oracle.data;
+        let cand = data.row(e as usize);
+        for (idx, &i) in self.view.iter().enumerate() {
+            let m = self.mind[idx];
+            let d2 = crate::data::vectors::dist_sq_fast(data.row(i as usize), cand);
+            if d2 < m * m {
+                self.mind[idx] = d2.sqrt();
+            }
+        }
+        self.solution.push(e);
+    }
+
+    fn solution(&self) -> &[ElemId] {
+        &self.solution
+    }
+
+    fn call_cost(&self, _e: ElemId) -> u64 {
+        // n'·δ (Table 1, k-medoid row).
+        (self.view.len() * self.oracle.data.dim()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::testutil;
+
+    fn small() -> KMedoid {
+        // Four 2-d points.
+        let vs = VectorSet::from_flat(vec![1.0, 0.0, 0.0, 1.0, -1.0, 0.0, 3.0, 4.0], 2).unwrap();
+        KMedoid::new(Arc::new(vs))
+    }
+
+    #[test]
+    fn value_matches_definition() {
+        let o = small();
+        // L({e0}) = mean of norms = (1 + 1 + 1 + 5)/4 = 2.
+        // For S = {0}: distances of each point to point0=(1,0):
+        //   d(0)=0, d(1)=sqrt2, d(2)=2, d(3)=sqrt(20); min with d0.
+        let f0 = o.eval(&[0]);
+        let l_e0 = 2.0;
+        let mind = [0.0, 2f64.sqrt().min(1.0), 1.0_f64.min(2.0), 20f64.sqrt().min(5.0)];
+        let expected = l_e0 - mind.iter().sum::<f64>() / 4.0;
+        assert!((f0 - expected).abs() < 1e-9, "{f0} vs {expected}");
+        assert_eq!(o.eval(&[]), 0.0);
+    }
+
+    #[test]
+    fn monotone_submodular_incremental() {
+        let (vs, _) = crate::data::gen::gaussian_mixture(
+            crate::data::gen::GaussianParams { n: 12, dim: 6, classes: 3, noise: 0.4 },
+            8,
+        );
+        let o = KMedoid::new(Arc::new(vs));
+        let mut rng = crate::util::rng::Rng::new(6);
+        testutil::check_submodular(&o, &mut rng, 30);
+        testutil::check_incremental(&o, &mut rng);
+    }
+
+    #[test]
+    fn local_view_restricts_evaluation() {
+        let o = small();
+        let st_full = o.new_state(None);
+        let st_local = o.new_state(Some(&[3]));
+        // Candidate 3 zeroes out the loss of view {3} entirely: gain = d0(3) = 5.
+        assert!((st_local.gain(3) - 5.0).abs() < 1e-9);
+        assert!(st_full.gain(3) < 5.0, "full view dilutes the gain");
+        // call_cost reflects view size.
+        assert_eq!(st_local.call_cost(0), 2);
+        assert_eq!(st_full.call_cost(0), 8);
+    }
+
+    #[test]
+    fn empty_view_is_safe() {
+        let o = small();
+        let mut st = o.new_state(Some(&[]));
+        assert_eq!(st.value(), 0.0);
+        assert_eq!(st.gain(1), 0.0);
+        st.commit(1);
+        assert_eq!(st.value(), 0.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Submodular objective oracles.
+//!
+//! The algorithms only touch objectives through two traits:
+//!
+//! * [`Oracle`] — a monotone submodular function `f : 2^V → R+` over a dense
+//!   ground set `0..n`, able to mint incremental evaluation states.
+//! * [`GainState`] — one solution-in-progress: query marginal gains
+//!   `f(S ∪ {e}) − f(S)` (the paper's unit of computation — every gain query
+//!   is one "function call" in Table 1 and all §6 plots), and commit chosen
+//!   elements.
+//!
+//! States support an optional *evaluation view*: the k-medoid experiments
+//! (§6.4) compute the objective w.r.t. only the data local to a machine
+//! (Mirzasoleiman et al., Thm 10 justifies this), so a state can be bound
+//! to a subset of the dataset while candidates stay global.
+
+use crate::ElemId;
+
+pub mod facility;
+pub mod kcover;
+pub mod kdominate;
+pub mod kmedoid;
+pub mod modular;
+pub mod wcover;
+
+pub use facility::FacilityLocation;
+pub use kcover::KCover;
+pub use kdominate::KDominatingSet;
+pub use kmedoid::KMedoid;
+pub use modular::Modular;
+pub use wcover::WeightedCover;
+
+/// A monotone submodular objective over ground set `0..n`.
+pub trait Oracle: Send + Sync {
+    /// Ground-set size.
+    fn n(&self) -> usize;
+
+    /// Human-readable name (reports).
+    fn name(&self) -> &'static str;
+
+    /// Fresh empty-solution state.  `view` restricts the *evaluation*
+    /// dataset (not the candidate universe): `None` evaluates against the
+    /// full dataset; `Some(elems)` against that subset (k-medoid local
+    /// objective).  Objectives that don't distinguish (coverage) ignore it.
+    fn new_state<'a>(&'a self, view: Option<&[ElemId]>) -> Box<dyn GainState + 'a>;
+
+    /// Bytes needed to hold / communicate element `e` (solution shipping
+    /// and memory accounting; §4.2 Communication Complexity).
+    fn elem_bytes(&self, e: ElemId) -> usize;
+
+    /// Evaluate `f(S)` from scratch (convenience; costs |S| gain queries).
+    fn eval(&self, solution: &[ElemId]) -> f64 {
+        let mut st = self.new_state(None);
+        for &e in solution {
+            st.commit(e);
+        }
+        st.value()
+    }
+}
+
+/// An in-progress solution with incremental marginal-gain queries.
+pub trait GainState {
+    /// Current `f(S)`.
+    fn value(&self) -> f64;
+
+    /// Marginal gain `f(S ∪ {e}) − f(S)`. Pure (does not mutate).
+    fn gain(&self, e: ElemId) -> f64;
+
+    /// Add `e` to the solution.
+    fn commit(&mut self, e: ElemId);
+
+    /// Elements committed so far, in commit order.
+    fn solution(&self) -> &[ElemId];
+
+    /// Abstract cost of one `gain` query in the BSP model (the paper's
+    /// per-call cost: δ for coverage functions, n'·δ for k-medoid).
+    fn call_cost(&self, e: ElemId) -> u64;
+
+    /// Batched gains; the PJRT-accelerated k-medoid state overrides this to
+    /// push the whole candidate tile through the AOT kernel.
+    fn gain_batch(&self, es: &[ElemId], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(es.iter().map(|&e| self.gain(e)));
+    }
+}
+
+/// Shared test helpers: generic submodularity / monotonicity checks used by
+/// every objective's test module and by the property suite.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Check monotonicity and the diminishing-returns property on random
+    /// chains X ⊆ Y and elements w ∉ Y.
+    pub fn check_submodular(oracle: &dyn Oracle, rng: &mut crate::util::rng::Rng, trials: usize) {
+        let n = oracle.n();
+        assert!(n >= 3, "need a few elements");
+        for _ in 0..trials {
+            // Random Y, random X ⊂ Y, random w ∉ Y.
+            let mut elems: Vec<ElemId> = (0..n as u32).collect();
+            rng.shuffle(&mut elems);
+            let ylen = 1 + rng.below((n - 1) as u64) as usize;
+            let (yset, rest) = elems.split_at(ylen.min(n - 1));
+            let xlen = rng.below(yset.len() as u64 + 1) as usize;
+            let xset = &yset[..xlen];
+            let w = rest[0];
+
+            let f = |s: &[ElemId]| oracle.eval(s);
+            let fy = f(yset);
+            let fx = f(xset);
+            assert!(
+                fx <= fy + 1e-6,
+                "{}: monotonicity violated f(X)={fx} > f(Y)={fy}",
+                oracle.name()
+            );
+            let gain_x = f(&[xset, &[w]].concat()) - fx;
+            let gain_y = f(&[yset, &[w]].concat()) - fy;
+            assert!(
+                gain_x >= gain_y - 1e-6,
+                "{}: submodularity violated: gain at X {gain_x} < gain at Y {gain_y}",
+                oracle.name()
+            );
+        }
+    }
+
+    /// Check that incremental gains match from-scratch evaluation along a
+    /// random insertion order.
+    pub fn check_incremental(oracle: &dyn Oracle, rng: &mut crate::util::rng::Rng) {
+        let n = oracle.n();
+        let mut elems: Vec<ElemId> = (0..n as u32).collect();
+        rng.shuffle(&mut elems);
+        let take = elems.len().min(8);
+        let mut st = oracle.new_state(None);
+        let mut sol: Vec<ElemId> = Vec::new();
+        for &e in &elems[..take] {
+            let want = oracle.eval(&[&sol[..], &[e]].concat()) - oracle.eval(&sol);
+            let got = st.gain(e);
+            assert!(
+                (want - got).abs() < 1e-6,
+                "{}: incremental gain {got} != batch {want} at |S|={}",
+                oracle.name(),
+                sol.len()
+            );
+            st.commit(e);
+            sol.push(e);
+            assert!(
+                (st.value() - oracle.eval(&sol)).abs() < 1e-6,
+                "{}: value drift after commit",
+                oracle.name()
+            );
+        }
+        assert_eq!(st.solution(), &sol[..]);
+    }
+}

@@ -1,0 +1,183 @@
+//! Weighted k-cover: `f(S) = Σ_{i ∈ ∪ S} w_i` with non-negative item
+//! weights — the budgeted/document-summarization generalization of k-cover
+//! (Lin & Bilmes, the paper's [18,19] motivation).  Plain k-cover is the
+//! `w ≡ 1` special case, which the tests exploit as an oracle-vs-oracle
+//! consistency check.
+
+use super::{GainState, Oracle};
+use crate::data::itemsets::ItemsetCollection;
+use crate::util::bitset::BitSet;
+use crate::ElemId;
+use std::sync::Arc;
+
+/// Weighted coverage oracle over a transaction collection.
+#[derive(Clone)]
+pub struct WeightedCover {
+    data: Arc<ItemsetCollection>,
+    weights: Arc<Vec<f64>>,
+}
+
+impl WeightedCover {
+    /// Build with per-item weights (must be ≥ 0 and cover the universe).
+    pub fn new(data: Arc<ItemsetCollection>, weights: Vec<f64>) -> crate::Result<Self> {
+        anyhow::ensure!(
+            weights.len() >= data.num_items(),
+            "need {} item weights, got {}",
+            data.num_items(),
+            weights.len()
+        );
+        anyhow::ensure!(
+            weights.iter().all(|&w| w >= 0.0),
+            "item weights must be non-negative (monotonicity)"
+        );
+        Ok(Self { data, weights: Arc::new(weights) })
+    }
+
+    /// Uniform weights — equivalent to plain [`super::KCover`].
+    pub fn uniform(data: Arc<ItemsetCollection>) -> Self {
+        let n = data.num_items();
+        Self { data, weights: Arc::new(vec![1.0; n]) }
+    }
+
+    /// Zipf-decaying weights by item id (popular-item emphasis), seeded.
+    pub fn zipf(data: Arc<ItemsetCollection>, s: f64) -> Self {
+        let n = data.num_items();
+        let weights = (0..n).map(|i| 1.0 / ((i + 1) as f64).powf(s)).collect();
+        Self { data, weights: Arc::new(weights) }
+    }
+}
+
+impl Oracle for WeightedCover {
+    fn n(&self) -> usize {
+        self.data.num_sets()
+    }
+
+    fn name(&self) -> &'static str {
+        "weighted-cover"
+    }
+
+    fn new_state<'a>(&'a self, _view: Option<&[ElemId]>) -> Box<dyn GainState + 'a> {
+        Box::new(WCoverState {
+            oracle: self,
+            covered: BitSet::new(self.data.num_items()),
+            value: 0.0,
+            solution: Vec::new(),
+        })
+    }
+
+    fn elem_bytes(&self, e: ElemId) -> usize {
+        self.data.elem_bytes(e)
+    }
+}
+
+struct WCoverState<'a> {
+    oracle: &'a WeightedCover,
+    covered: BitSet,
+    value: f64,
+    solution: Vec<ElemId>,
+}
+
+impl GainState for WCoverState<'_> {
+    fn value(&self) -> f64 {
+        self.value
+    }
+
+    #[inline]
+    fn gain(&self, e: ElemId) -> f64 {
+        let w = &self.oracle.weights;
+        self.oracle
+            .data
+            .set(e)
+            .iter()
+            .filter(|&&i| !self.covered.contains(i as usize))
+            .map(|&i| w[i as usize])
+            .sum()
+    }
+
+    fn commit(&mut self, e: ElemId) {
+        for &i in self.oracle.data.set(e) {
+            if self.covered.insert(i as usize) {
+                self.value += self.oracle.weights[i as usize];
+            }
+        }
+        self.solution.push(e);
+    }
+
+    fn solution(&self) -> &[ElemId] {
+        &self.solution
+    }
+
+    fn call_cost(&self, e: ElemId) -> u64 {
+        self.oracle.data.set_size(e) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::{testutil, KCover};
+
+    fn data() -> Arc<ItemsetCollection> {
+        Arc::new(ItemsetCollection::from_sets(&[
+            vec![0, 1, 2],
+            vec![2, 3],
+            vec![3, 4, 5],
+            vec![0, 5],
+        ]))
+    }
+
+    #[test]
+    fn uniform_matches_kcover_exactly() {
+        let d = data();
+        let w = WeightedCover::uniform(d.clone());
+        let k = KCover::new(d);
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..40 {
+            let mut sol: Vec<u32> = (0..4).collect();
+            rng.shuffle(&mut sol);
+            let take = rng.below(5) as usize;
+            assert_eq!(w.eval(&sol[..take]), k.eval(&sol[..take]));
+        }
+    }
+
+    #[test]
+    fn weights_change_the_argmax() {
+        let d = data();
+        // Item 4 is worth everything: transaction 2 must win first.
+        let mut weights = vec![0.01; 6];
+        weights[4] = 100.0;
+        let o = WeightedCover::new(d, weights).unwrap();
+        let c = crate::constraint::Cardinality::new(1);
+        let out = crate::greedy::greedy_lazy(&o, &c, &[0, 1, 2, 3], None);
+        assert_eq!(out.solution, vec![2]);
+        assert!(out.value > 100.0);
+    }
+
+    #[test]
+    fn submodular_and_incremental() {
+        let o = WeightedCover::zipf(data(), 1.0);
+        let mut rng = crate::util::rng::Rng::new(8);
+        testutil::check_submodular(&o, &mut rng, 50);
+        testutil::check_incremental(&o, &mut rng);
+    }
+
+    #[test]
+    fn rejects_bad_weights() {
+        assert!(WeightedCover::new(data(), vec![1.0; 2]).is_err());
+        assert!(WeightedCover::new(data(), vec![1.0, 1.0, 1.0, 1.0, 1.0, -0.1]).is_err());
+    }
+
+    #[test]
+    fn works_under_greedyml() {
+        let d = Arc::new(crate::data::gen::transactions(
+            crate::data::gen::TransactionParams::retail_like(800),
+            4,
+        ));
+        let o = WeightedCover::zipf(d, 0.8);
+        let c = crate::constraint::Cardinality::new(10);
+        let cfg = crate::algo::DistConfig::greedyml(crate::tree::AccumulationTree::new(4, 2), 3);
+        let out = crate::algo::run_greedyml(&o, &c, &cfg).unwrap();
+        assert!(out.value > 0.0);
+        assert!((out.value - o.eval(&out.solution)).abs() < 1e-9);
+    }
+}

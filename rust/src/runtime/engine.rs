@@ -1,0 +1,258 @@
+//! PJRT execution engine: load AOT HLO-text artifacts, compile them once on
+//! the CPU PJRT client, and execute them from the solve path.
+//!
+//! Threading: the `xla` crate's wrappers hold raw pointers and are not
+//! `Send`/`Sync`, but the underlying PJRT CPU client *is* thread-safe for
+//! compilation and execution (PJRT C API contract).  We still serialize all
+//! launches behind one mutex — the distributed simulator calls in from many
+//! superstep threads, and exclusive access is the conservatively correct
+//! choice (and matches the paper's one-core-per-machine setup, where
+//! objective evaluation is serial per machine anyway).
+
+use super::manifest::{Entry, Manifest};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+struct Inner {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: `Inner` is only reachable behind `Engine`'s Mutex, so all access
+// is exclusive; the PJRT CPU client itself is thread-safe per the PJRT API
+// contract, we just never rely on that.
+unsafe impl Send for Inner {}
+
+/// A loaded artifact bundle. Cheap to share via `Arc<Engine>`.
+pub struct Engine {
+    inner: Mutex<Inner>,
+    manifest: Manifest,
+    dir: String,
+}
+
+impl Engine {
+    /// Load `manifest.json` from `dir` and compile every listed entry.
+    pub fn load(dir: &str) -> crate::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        let mut executables = HashMap::new();
+        for entry in &manifest.entries {
+            let path = format!("{dir}/{}", entry.file);
+            let exe = compile_one(&client, &path)
+                .map_err(|e| anyhow::anyhow!("compiling {path}: {e}"))?;
+            executables.insert(entry.name.clone(), exe);
+        }
+        Ok(Self {
+            inner: Mutex::new(Inner { client, executables }),
+            manifest,
+            dir: dir.to_string(),
+        })
+    }
+
+    /// The manifest the artifacts were described by.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The artifact directory.
+    pub fn dir(&self) -> &str {
+        &self.dir
+    }
+
+    /// Entry lookup (validated names).
+    pub fn entry(&self, name: &str) -> crate::Result<&Entry> {
+        self.manifest.entry(name)
+    }
+
+    /// PJRT platform name (reporting).
+    pub fn platform(&self) -> String {
+        self.inner.lock().unwrap().client.platform_name()
+    }
+
+    /// Execute entry `name` with positional literals; returns the
+    /// decomposed output tuple.  Arguments are borrowed — the PJRT call
+    /// copies host literals to device buffers itself, so cloning on the
+    /// Rust side would only duplicate host memory (§Perf P5).
+    pub fn execute(&self, name: &str, args: &[&xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+        let entry = self.manifest.entry(name)?;
+        anyhow::ensure!(
+            args.len() == entry.inputs.len(),
+            "entry '{name}' wants {} args, got {}",
+            entry.inputs.len(),
+            args.len()
+        );
+        for (i, (arg, spec)) in args.iter().zip(&entry.inputs).enumerate() {
+            let got = arg.element_count();
+            anyhow::ensure!(
+                got == spec.elems(),
+                "entry '{name}' arg {i}: {got} elements, spec wants {:?}",
+                spec.shape
+            );
+        }
+        let inner = self.inner.lock().unwrap();
+        let exe = inner
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("entry '{name}' not compiled"))?;
+        let result = exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("executing '{name}': {e}"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching '{name}' result: {e}"))?;
+        root.to_tuple().map_err(|e| anyhow::anyhow!("detupling '{name}': {e}"))
+    }
+}
+
+impl Engine {
+    /// Upload a host buffer to a persistent device buffer (§Perf P5: X view
+    /// chunks are immutable for a state's lifetime — upload them once and
+    /// launch with `execute_buffers` instead of re-copying per call).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> crate::Result<xla::PjRtBuffer> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("device upload: {e}"))
+    }
+
+    /// Execute entry `name` with pre-uploaded device buffers.
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> crate::Result<Vec<xla::Literal>> {
+        let inner = self.inner.lock().unwrap();
+        let exe = inner
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("entry '{name}' not compiled"))?;
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .map_err(|e| anyhow::anyhow!("executing '{name}': {e}"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching '{name}' result: {e}"))?;
+        root.to_tuple().map_err(|e| anyhow::anyhow!("detupling '{name}': {e}"))
+    }
+}
+
+fn compile_one(
+    client: &xla::PjRtClient,
+    path: &str,
+) -> Result<xla::PjRtLoadedExecutable, xla::Error> {
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp)
+}
+
+/// Build an `f32` literal of the given logical shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> crate::Result<xla::Literal> {
+    let want: usize = dims.iter().product();
+    anyhow::ensure!(data.len() == want, "literal_f32: {} elems for shape {dims:?}", data.len());
+    let l = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(l);
+    }
+    let dims64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    l.reshape(&dims64).map_err(|e| anyhow::anyhow!("reshape: {e}"))
+}
+
+/// Build a `u32` literal of the given logical shape from a flat slice.
+pub fn literal_u32(data: &[u32], dims: &[usize]) -> crate::Result<xla::Literal> {
+    let want: usize = dims.iter().product();
+    anyhow::ensure!(data.len() == want, "literal_u32: {} elems for shape {dims:?}", data.len());
+    let l = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(l);
+    }
+    let dims64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    l.reshape(&dims64).map_err(|e| anyhow::anyhow!("reshape: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        // Tests are skipped when artifacts have not been generated yet
+        // (CI runs `make artifacts` first; `make test` depends on it).
+        Engine::load("artifacts").ok()
+    }
+
+    #[test]
+    fn loads_and_lists_entries() {
+        let Some(e) = engine() else { return };
+        assert!(e.platform().to_lowercase().contains("cpu") || !e.platform().is_empty());
+        assert!(e.entry("coverage_gains").is_ok());
+        assert!(e.entry("missing_entry").is_err());
+    }
+
+    #[test]
+    fn coverage_gains_executes_and_matches_bit_math() {
+        let Some(e) = engine() else { return };
+        let m = e.manifest();
+        let (c, w) = (m.c_tile, m.w_tile);
+        // Candidate 0 covers bits {0,1}; covered has bit 0 → gain 1.
+        let mut masks = vec![0u32; c * w];
+        masks[0] = 0b11;
+        masks[w] = 0xFFFF_0000; // candidate 1: 16 bits, none covered
+        let mut covered = vec![0u32; w];
+        covered[0] = 0b1;
+        let masks_l = literal_u32(&masks, &[c, w]).unwrap();
+        let covered_l = literal_u32(&covered, &[w]).unwrap();
+        let out = e.execute("coverage_gains", &[&masks_l, &covered_l]).unwrap();
+        let gains: Vec<i32> = out[0].to_vec().unwrap();
+        assert_eq!(gains[0], 1);
+        assert_eq!(gains[1], 16);
+        assert!(gains[2..].iter().all(|&g| g == 0));
+    }
+
+    #[test]
+    fn kmedoid_gains_match_rust_oracle_math() {
+        let Some(e) = engine() else { return };
+        let m = e.manifest();
+        let (nt, ct) = (m.n_tile, m.c_tile);
+        let d = 64usize;
+        let mut rng = crate::util::rng::Rng::new(3);
+        let x: Vec<f32> = (0..nt * d).map(|_| rng.f32() - 0.5).collect();
+        let mind: Vec<f32> = (0..nt).map(|_| rng.f32() * 2.0).collect();
+        let mut c = vec![0f32; ct * d];
+        for v in c.iter_mut().take(3 * d) {
+            *v = rng.f32() - 0.5;
+        }
+        let x_l = literal_f32(&x, &[nt, d]).unwrap();
+        let mind_l = literal_f32(&mind, &[nt]).unwrap();
+        let c_l = literal_f32(&c, &[ct, d]).unwrap();
+        let out = e.execute("kmedoid_gains_d64", &[&x_l, &mind_l, &c_l]).unwrap();
+        let gains: Vec<f32> = out[0].to_vec().unwrap();
+        // Reference math in f64 (mirrors objective::kmedoid).
+        for j in 0..3 {
+            let mut want = 0f64;
+            for i in 0..nt {
+                let mut d2 = 0f64;
+                for t in 0..d {
+                    let diff = (x[i * d + t] - c[j * d + t]) as f64;
+                    d2 += diff * diff;
+                }
+                let dist = d2.sqrt();
+                if (mind[i] as f64) > dist {
+                    want += mind[i] as f64 - dist;
+                }
+            }
+            assert!(
+                (gains[j] as f64 - want).abs() < 1e-2 * want.max(1.0),
+                "candidate {j}: pjrt {} vs rust {want}",
+                gains[j]
+            );
+        }
+    }
+
+    #[test]
+    fn argument_validation() {
+        let Some(e) = engine() else { return };
+        let bad = literal_u32(&[0u32; 4], &[4]).unwrap();
+        assert!(e.execute("coverage_gains", &[&bad]).is_err());
+    }
+}

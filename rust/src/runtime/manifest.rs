@@ -1,0 +1,171 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.  `manifest.json` lists every AOT entry point with its
+//! input/output shapes and dtypes plus the tile sizes the kernels were
+//! compiled for; the engine validates arguments against it before launch.
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one argument or result.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Dimensions, row-major.
+    pub shape: Vec<usize>,
+    /// Numpy dtype name ("float32", "uint32", "int32", …).
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> crate::Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest entry missing shape"))?
+            .iter()
+            .map(|d| d.as_u64().map(|v| v as usize))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow::anyhow!("bad shape dims"))?;
+        let dtype = j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .ok_or_else(|| anyhow::anyhow!("manifest entry missing dtype"))?
+            .to_string();
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// One AOT entry point.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    /// Entry-point name (e.g. `kmedoid_gains_d128`).
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    /// Input specs in call order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output specs (the HLO root is a tuple of these).
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Rows per k-medoid grid step (views are padded to multiples of this).
+    pub n_tile: usize,
+    /// Candidate-tile width shared by the gain kernels.
+    pub c_tile: usize,
+    /// uint32 words per coverage grid step.
+    pub w_tile: usize,
+    /// All entry points.
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        anyhow::ensure!(
+            j.get("format").and_then(|f| f.as_str()) == Some("hlo-text"),
+            "manifest format must be hlo-text (got {:?})",
+            j.get("format")
+        );
+        let grab = |k: &str| -> crate::Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_u64())
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing {k}"))
+        };
+        let entries = j
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing entries"))?
+            .iter()
+            .map(|e| -> crate::Result<Entry> {
+                let name = e
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("entry missing name"))?
+                    .to_string();
+                let file = e
+                    .get("file")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("entry missing file"))?
+                    .to_string();
+                let specs = |k: &str| -> crate::Result<Vec<TensorSpec>> {
+                    e.get(k)
+                        .and_then(|v| v.as_arr())
+                        .ok_or_else(|| anyhow::anyhow!("entry missing {k}"))?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect()
+                };
+                Ok(Entry { name, file, inputs: specs("inputs")?, outputs: specs("outputs")? })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Self { n_tile: grab("n_tile")?, c_tile: grab("c_tile")?, w_tile: grab("w_tile")?, entries })
+    }
+
+    /// Load from `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> crate::Result<Self> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path}: {e} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    /// Look up an entry by name.
+    pub fn entry(&self, name: &str) -> crate::Result<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact entry named '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": "hlo-text", "n_tile": 256, "c_tile": 64, "w_tile": 1024,
+        "entries": [
+            {"name": "kmedoid_gains_d8", "file": "kmedoid_gains_d8.hlo.txt",
+             "inputs": [{"shape": [256, 8], "dtype": "float32"},
+                         {"shape": [256], "dtype": "float32"},
+                         {"shape": [64, 8], "dtype": "float32"}],
+             "outputs": [{"shape": [64], "dtype": "float32"}]}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!((m.n_tile, m.c_tile, m.w_tile), (256, 64, 1024));
+        let e = m.entry("kmedoid_gains_d8").unwrap();
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[0].shape, vec![256, 8]);
+        assert_eq!(e.inputs[0].elems(), 2048);
+        assert_eq!(e.outputs[0].dtype, "float32");
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        // Integration-level check against the actual artifacts directory;
+        // skipped silently when `make artifacts` has not run.
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(m.entry("coverage_gains").is_ok());
+            assert!(m.entries.iter().all(|e| e.file.ends_with(".hlo.txt")));
+        }
+    }
+}

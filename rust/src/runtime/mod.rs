@@ -1,0 +1,37 @@
+//! The PJRT runtime: Python is build-time only; this module is how the
+//! solve path executes the AOT-compiled Layer-1/Layer-2 artifacts.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (shapes, dtypes, tiles).
+//! * [`engine`] — `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//!   `compile` → `execute` (the /opt/xla-example/load_hlo pattern), plus
+//!   literal helpers.
+//! * [`kmedoid_pjrt`] / [`coverage_pjrt`] — drop-in [`crate::objective::Oracle`]
+//!   implementations backed by the kernels, interchangeable with the pure
+//!   Rust oracles everywhere (greedy, distributed runs, benches).
+
+pub mod coverage_pjrt;
+pub mod engine;
+pub mod kmedoid_pjrt;
+pub mod manifest;
+
+pub use coverage_pjrt::KCoverPjrt;
+pub use engine::{literal_f32, literal_u32, Engine};
+pub use kmedoid_pjrt::KMedoidPjrt;
+pub use manifest::{Entry, Manifest, TensorSpec};
+
+/// Default artifact directory, overridable via `GREEDYML_ARTIFACTS`.
+pub fn artifact_dir() -> String {
+    std::env::var("GREEDYML_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn artifact_dir_default() {
+        // Don't mutate the environment (tests run in parallel); just check
+        // the default path shape.
+        if std::env::var("GREEDYML_ARTIFACTS").is_err() {
+            assert_eq!(super::artifact_dir(), "artifacts");
+        }
+    }
+}

@@ -1,0 +1,359 @@
+//! The accumulation tree `T(m, L, b)` (§3).
+//!
+//! A complete b-ary tree with `m` leaves (machines).  Node identity is the
+//! pair `(level, id)`: leaves are `(0, 0..m)`, and a node exists at level
+//! `ℓ ≥ 1` iff `id mod b^ℓ == 0`.  Each internal node receives the lowest
+//! id of its children; the root is `(L, 0)` with `L = ceil(log_b m)`.
+//! Closed forms from Algorithm 3.1:
+//!
+//! * `level(id, b) = max{ ℓ : id mod b^ℓ == 0 }` (capped at L; id 0 → L),
+//! * `parent(id, ℓ) = b^ℓ · ⌊id / b^ℓ⌋` — the parent a node at level ℓ−1
+//!   sends to when entering level ℓ,
+//! * `child(id, ℓ, j) = id + j · b^{ℓ−1}` for `j = 0..b` (bounded by m).
+//!
+//! When `m` is not a power of b, at most one node per level has fewer than
+//! b children (Fig. 2, b=3 and b=4 examples).
+
+use crate::MachineId;
+
+/// Immutable description of an accumulation tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AccumulationTree {
+    m: u32,
+    b: u32,
+    levels: u32,
+}
+
+impl AccumulationTree {
+    /// Build the tree for `m` machines with branching factor `b`.
+    /// `L = ceil(log_b m)`; `m = 1` gives the degenerate single-node tree
+    /// (L = 0).  RandGreeDI is exactly `AccumulationTree::new(m, m)` (L=1).
+    pub fn new(m: u32, b: u32) -> Self {
+        assert!(m >= 1, "need at least one machine");
+        assert!(b >= 2 || m == 1, "branching factor must be ≥ 2");
+        let levels = if m == 1 { 0 } else { ceil_log(m, b) };
+        Self { m, b, levels }
+    }
+
+    /// The RandGreeDI tree: a single accumulation level over all machines.
+    pub fn randgreedi(m: u32) -> Self {
+        if m == 1 {
+            Self::new(1, 2)
+        } else {
+            Self::new(m, m)
+        }
+    }
+
+    /// Number of machines (leaves).
+    pub fn machines(&self) -> u32 {
+        self.m
+    }
+
+    /// Branching factor.
+    pub fn branching(&self) -> u32 {
+        self.b
+    }
+
+    /// Number of accumulation levels L (root level).
+    pub fn levels(&self) -> u32 {
+        self.levels
+    }
+
+    /// `b^ℓ`, saturating (safe for ℓ up to the root of any u32-sized tree).
+    fn pow(&self, l: u32) -> u64 {
+        (self.b as u64).saturating_pow(l)
+    }
+
+    /// Highest level at which machine `id` is active:
+    /// `level(id, b) = max{ ℓ : id mod b^ℓ == 0 }`, capped at L.
+    pub fn level_of(&self, id: MachineId) -> u32 {
+        debug_assert!(id < self.m);
+        if id == 0 {
+            return self.levels;
+        }
+        let mut l = 0;
+        while l < self.levels && (id as u64) % self.pow(l + 1) == 0 {
+            l += 1;
+        }
+        l
+    }
+
+    /// Does node `(level, id)` exist in the tree?
+    pub fn is_node(&self, level: u32, id: MachineId) -> bool {
+        id < self.m && level <= self.level_of(id)
+    }
+
+    /// Parent machine id for a node entering level `level` (Algorithm 3.1:
+    /// `parent(id, i) = b^i · ⌊id / b^i⌋`).
+    pub fn parent(&self, id: MachineId, level: u32) -> MachineId {
+        let p = self.pow(level);
+        ((id as u64 / p) * p) as MachineId
+    }
+
+    /// Children (machine ids) of internal node `(level, id)` — the nodes at
+    /// `level − 1` that send to it, including `id` itself (j = 0).
+    pub fn children(&self, level: u32, id: MachineId) -> Vec<MachineId> {
+        debug_assert!(level >= 1 && self.is_node(level, id));
+        let step = self.pow(level - 1);
+        (0..self.b as u64)
+            .map(|j| id as u64 + j * step)
+            .take_while(|&c| c < self.m as u64)
+            .map(|c| c as MachineId)
+            .collect()
+    }
+
+    /// All node ids active at `level` (ascending).
+    pub fn nodes_at_level(&self, level: u32) -> Vec<MachineId> {
+        let step = self.pow(level);
+        (0..self.m as u64)
+            .step_by(step.min(u64::from(u32::MAX)) as usize)
+            .map(|id| id as MachineId)
+            .collect()
+    }
+
+    /// Number of internal (accumulation) nodes in the whole tree.
+    pub fn num_internal_nodes(&self) -> usize {
+        (1..=self.levels).map(|l| self.nodes_at_level(l).len()).sum()
+    }
+
+    /// Maximum fan-in of any internal node — bounds the accumulation
+    /// memory: a parent holds at most `fan_in · k` solution elements
+    /// (`k·⌈m^{1/L}⌉` in Table 1).
+    pub fn max_fan_in(&self) -> u32 {
+        (1..=self.levels)
+            .flat_map(|l| {
+                self.nodes_at_level(l)
+                    .into_iter()
+                    .map(move |id| self.children(l, id).len() as u32)
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Render the tree as text (Fig. 2 style), for `greedyml tree --show`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "T(m={}, L={}, b={}) — {} internal node(s)\n",
+            self.m,
+            self.levels,
+            self.b,
+            self.num_internal_nodes()
+        ));
+        for l in (0..=self.levels).rev() {
+            out.push_str(&format!("level {l}: "));
+            let nodes = self.nodes_at_level(l);
+            let labels: Vec<String> = nodes.iter().map(|id| format!("({l},{id})")).collect();
+            out.push_str(&labels.join(" "));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// `ceil(log_b(m))` for integers (`m ≥ 1, b ≥ 2`).
+fn ceil_log(m: u32, b: u32) -> u32 {
+    let mut l = 0u32;
+    let mut cap = 1u64;
+    while cap < m as u64 {
+        cap *= b as u64;
+        l += 1;
+    }
+    l
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log_basics() {
+        assert_eq!(ceil_log(1, 2), 0);
+        assert_eq!(ceil_log(2, 2), 1);
+        assert_eq!(ceil_log(8, 2), 3);
+        assert_eq!(ceil_log(9, 2), 4);
+        assert_eq!(ceil_log(8, 3), 2);
+        assert_eq!(ceil_log(8, 8), 1);
+        assert_eq!(ceil_log(27, 3), 3);
+    }
+
+    /// Fig. 2 top-left: m=8, b=2 → L=3.
+    #[test]
+    fn fig2_b2() {
+        let t = AccumulationTree::new(8, 2);
+        assert_eq!(t.levels(), 3);
+        assert_eq!(t.nodes_at_level(0), (0..8).collect::<Vec<_>>());
+        assert_eq!(t.nodes_at_level(1), vec![0, 2, 4, 6]);
+        assert_eq!(t.nodes_at_level(2), vec![0, 4]);
+        assert_eq!(t.nodes_at_level(3), vec![0]);
+        assert_eq!(t.children(1, 6), vec![6, 7]);
+        assert_eq!(t.children(3, 0), vec![0, 4]);
+        assert_eq!(t.parent(7, 1), 6);
+        assert_eq!(t.parent(6, 2), 4);
+        assert_eq!(t.parent(4, 3), 0);
+        assert_eq!(t.max_fan_in(), 2);
+    }
+
+    /// Fig. 2 top-right: m=8, b=3 → L=2; the last node in level 1 has
+    /// only 2 children.
+    #[test]
+    fn fig2_b3() {
+        let t = AccumulationTree::new(8, 3);
+        assert_eq!(t.levels(), 2);
+        assert_eq!(t.nodes_at_level(1), vec![0, 3, 6]);
+        assert_eq!(t.children(1, 0), vec![0, 1, 2]);
+        assert_eq!(t.children(1, 6), vec![6, 7], "truncated arity");
+        assert_eq!(t.children(2, 0), vec![0, 3, 6]);
+    }
+
+    /// Fig. 2 bottom-left: m=8, b=4 → L=2; the root has 2 children.
+    #[test]
+    fn fig2_b4() {
+        let t = AccumulationTree::new(8, 4);
+        assert_eq!(t.levels(), 2);
+        assert_eq!(t.nodes_at_level(1), vec![0, 4]);
+        assert_eq!(t.children(2, 0), vec![0, 4]);
+        assert_eq!(t.children(1, 4), vec![4, 5, 6, 7]);
+    }
+
+    /// Fig. 2 bottom-right: m=8, b=8 → RandGreeDI, L=1.
+    #[test]
+    fn fig2_b8_is_randgreedi() {
+        let t = AccumulationTree::new(8, 8);
+        assert_eq!(t.levels(), 1);
+        assert_eq!(t.children(1, 0), (0..8).collect::<Vec<_>>());
+        assert_eq!(t, AccumulationTree::randgreedi(8));
+    }
+
+    #[test]
+    fn level_of_matches_definition() {
+        let t = AccumulationTree::new(16, 2);
+        // level(id) = trailing b-ary zeros, capped at L; id 0 → L.
+        assert_eq!(t.level_of(0), 4);
+        assert_eq!(t.level_of(1), 0);
+        assert_eq!(t.level_of(2), 1);
+        assert_eq!(t.level_of(4), 2);
+        assert_eq!(t.level_of(8), 3);
+        assert_eq!(t.level_of(12), 2);
+    }
+
+    #[test]
+    fn parent_child_inverse_property() {
+        use crate::check::{ensure, forall, pair, Gen};
+        forall(
+            "tree parent/child inverse",
+            300,
+            pair(Gen::u64(1..65), Gen::u64(2..9)),
+            |&(m, b)| {
+                let m = m as u32;
+                let b = b as u32;
+                if m == 1 {
+                    return Ok(());
+                }
+                let t = AccumulationTree::new(m, b);
+                for l in 1..=t.levels() {
+                    for id in t.nodes_at_level(l) {
+                        let kids = t.children(l, id);
+                        ensure(!kids.is_empty(), format!("node ({l},{id}) childless"))?;
+                        ensure(kids[0] == id, "first child must be the node itself")?;
+                        for &c in &kids {
+                            ensure(
+                                t.parent(c, l) == id,
+                                format!("parent({c},{l}) != {id} in T({m},{b})"),
+                            )?;
+                            ensure(t.is_node(l - 1, c), "child is not a node one level down")?;
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn every_leaf_reaches_root() {
+        use crate::check::{ensure, forall, pair, Gen};
+        forall(
+            "leaf-to-root chain",
+            200,
+            pair(Gen::u64(1..129), Gen::u64(2..17)),
+            |&(m, b)| {
+                let (m, b) = (m as u32, b as u32);
+                if m == 1 {
+                    return Ok(());
+                }
+                let t = AccumulationTree::new(m, b);
+                for leaf in 0..m {
+                    let mut id = leaf;
+                    for l in 1..=t.levels() {
+                        id = t.parent(id, l);
+                    }
+                    ensure(id == 0, format!("leaf {leaf} ended at {id}, not root"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn at_most_one_truncated_node_per_level() {
+        use crate::check::{ensure, forall, pair, Gen};
+        forall(
+            "≤1 short-arity node per level",
+            200,
+            pair(Gen::u64(2..200), Gen::u64(2..9)),
+            |&(m, b)| {
+                let (m, b) = (m as u32, b as u32);
+                let t = AccumulationTree::new(m, b);
+                for l in 1..=t.levels() {
+                    let short = t
+                        .nodes_at_level(l)
+                        .into_iter()
+                        .filter(|&id| (t.children(l, id).len() as u32) < b)
+                        .count();
+                    ensure(
+                        short <= 1,
+                        format!("level {l} of T({m},{b}) has {short} short nodes"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn children_partition_level_below() {
+        // The children sets of all nodes at level ℓ exactly partition the
+        // nodes at level ℓ−1.
+        for (m, b) in [(8u32, 2u32), (8, 3), (8, 4), (13, 3), (100, 4), (9, 2)] {
+            let t = AccumulationTree::new(m, b);
+            for l in 1..=t.levels() {
+                let mut collected: Vec<u32> = t
+                    .nodes_at_level(l)
+                    .into_iter()
+                    .flat_map(|id| t.children(l, id))
+                    .collect();
+                collected.sort_unstable();
+                assert_eq!(collected, t.nodes_at_level(l - 1), "T({m},{b}) level {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn render_mentions_all_levels() {
+        let t = AccumulationTree::new(8, 2);
+        let s = t.render();
+        for l in 0..=3 {
+            assert!(s.contains(&format!("level {l}:")), "missing level {l} in:\n{s}");
+        }
+    }
+
+    #[test]
+    fn single_machine_tree() {
+        let t = AccumulationTree::new(1, 2);
+        assert_eq!(t.levels(), 0);
+        assert_eq!(t.level_of(0), 0);
+        assert_eq!(t.nodes_at_level(0), vec![0]);
+        assert_eq!(t.num_internal_nodes(), 0);
+    }
+}

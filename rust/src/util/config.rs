@@ -1,0 +1,293 @@
+//! Experiment configuration system.
+//!
+//! Experiments are described by a flat, typed key–value config that can be
+//! loaded from a file (simple `key = value` / `[section]` TOML subset),
+//! overridden from the CLI (`--set key=value`), and round-tripped into
+//! reports so every result records exactly how it was produced.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed configuration: section-qualified keys (`section.key`) → raw
+/// string values, with typed accessors.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+/// Config error (missing key / bad type / parse failure).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigError {
+    pub msg: String,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.msg)
+    }
+}
+impl std::error::Error for ConfigError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, ConfigError> {
+    Err(ConfigError { msg: msg.into() })
+}
+
+impl Config {
+    /// Empty config.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse the TOML subset: `[section]` headers, `key = value` lines,
+    /// `#` comments, blank lines.  Values keep their raw string form;
+    /// quoting (single or double) is stripped.
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let Some(name) = name.strip_suffix(']') else {
+                    return err(format!("line {}: unterminated section header", lineno + 1));
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return err(format!("line {}: expected 'key = value'", lineno + 1));
+            };
+            let key = key.trim();
+            if key.is_empty() {
+                return err(format!("line {}: empty key", lineno + 1));
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            cfg.values.insert(full, unquote(value.trim()).to_string());
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError { msg: format!("cannot read {path}: {e}") })?;
+        Self::parse(&text)
+    }
+
+    /// Set a raw value (CLI `--set key=value` overrides).
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    /// Apply a `key=value` override string.
+    pub fn set_kv(&mut self, kv: &str) -> Result<(), ConfigError> {
+        let Some((k, v)) = kv.split_once('=') else {
+            return err(format!("override '{kv}' is not key=value"));
+        };
+        self.set(k.trim(), unquote(v.trim()));
+        Ok(())
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Whether a key exists.
+    pub fn contains(&self, key: &str) -> bool {
+        self.values.contains_key(key)
+    }
+
+    /// Required string.
+    pub fn str(&self, key: &str) -> Result<&str, ConfigError> {
+        self.get(key).ok_or(ConfigError { msg: format!("missing key '{key}'") })
+    }
+
+    /// String with default.
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Required u64 (accepts `_` separators and `k`/`m`/`g` suffixes,
+    /// e.g. `mem_limit = 100m`, `k = 32_000`).
+    pub fn u64(&self, key: &str) -> Result<u64, ConfigError> {
+        parse_u64(self.str(key)?).map_err(|m| ConfigError { msg: format!("key '{key}': {m}") })
+    }
+
+    /// u64 with default.
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => parse_u64(s).map_err(|m| ConfigError { msg: format!("key '{key}': {m}") }),
+        }
+    }
+
+    /// Required f64.
+    pub fn f64(&self, key: &str) -> Result<f64, ConfigError> {
+        self.str(key)?
+            .parse()
+            .map_err(|e| ConfigError { msg: format!("key '{key}': {e}") })
+    }
+
+    /// f64 with default.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| ConfigError { msg: format!("key '{key}': {e}") }),
+        }
+    }
+
+    /// bool with default (`true/false/1/0/yes/no`).
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true" | "1" | "yes") => Ok(true),
+            Some("false" | "0" | "no") => Ok(false),
+            Some(other) => err(format!("key '{key}': '{other}' is not a bool")),
+        }
+    }
+
+    /// Comma-separated u64 list, e.g. `ks = 1000, 2000, 4000`.
+    pub fn u64_list(&self, key: &str) -> Result<Vec<u64>, ConfigError> {
+        self.str(key)?
+            .split(',')
+            .map(|s| parse_u64(s.trim()).map_err(|m| ConfigError { msg: format!("key '{key}': {m}") }))
+            .collect()
+    }
+
+    /// All keys under a section prefix (for report round-tripping).
+    pub fn section(&self, prefix: &str) -> impl Iterator<Item = (&str, &str)> {
+        let want = format!("{prefix}.");
+        self.values
+            .iter()
+            .filter(move |(k, _)| k.starts_with(&want))
+            .map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    /// Dump as a JSON object (experiment provenance in reports).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::Obj(
+            self.values
+                .iter()
+                .map(|(k, v)| (k.clone(), crate::util::json::Json::Str(v.clone())))
+                .collect(),
+        )
+    }
+}
+
+fn unquote(s: &str) -> &str {
+    let b = s.as_bytes();
+    if b.len() >= 2 && ((b[0] == b'"' && b[b.len() - 1] == b'"') || (b[0] == b'\'' && b[b.len() - 1] == b'\'')) {
+        &s[1..s.len() - 1]
+    } else {
+        s
+    }
+}
+
+/// Parse a u64 with `_` separators and optional k/m/g (×1e3/1e6/1e9) or
+/// kb/mb/gb (×2^10/2^20/2^30) suffix.
+pub fn parse_u64(s: &str) -> Result<u64, String> {
+    let s = s.trim().to_ascii_lowercase();
+    let (digits, mult) = if let Some(d) = s.strip_suffix("kb") {
+        (d.to_string(), 1u64 << 10)
+    } else if let Some(d) = s.strip_suffix("mb") {
+        (d.to_string(), 1u64 << 20)
+    } else if let Some(d) = s.strip_suffix("gb") {
+        (d.to_string(), 1u64 << 30)
+    } else if let Some(d) = s.strip_suffix('k') {
+        (d.to_string(), 1_000)
+    } else if let Some(d) = s.strip_suffix('m') {
+        (d.to_string(), 1_000_000)
+    } else if let Some(d) = s.strip_suffix('g') {
+        (d.to_string(), 1_000_000_000)
+    } else {
+        (s.clone(), 1)
+    };
+    let digits: String = digits.chars().filter(|&c| c != '_').collect();
+    let base: u64 = digits
+        .trim()
+        .parse()
+        .map_err(|_| format!("'{s}' is not an unsigned integer"))?;
+    base.checked_mul(mult).ok_or_else(|| format!("'{s}' overflows u64"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let cfg = Config::parse(
+            r#"
+            # experiment
+            name = "fig4"
+            [tree]
+            machines = 32
+            branching = 8
+            [problem]
+            k = 32_000
+            mem_limit = 100mb
+            frac = 0.25
+            ks = 1k, 2k, 4k
+            verbose = yes
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.str("name").unwrap(), "fig4");
+        assert_eq!(cfg.u64("tree.machines").unwrap(), 32);
+        assert_eq!(cfg.u64("problem.k").unwrap(), 32_000);
+        assert_eq!(cfg.u64("problem.mem_limit").unwrap(), 100 << 20);
+        assert!((cfg.f64("problem.frac").unwrap() - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.u64_list("problem.ks").unwrap(), vec![1000, 2000, 4000]);
+        assert!(cfg.bool_or("problem.verbose", false).unwrap());
+        assert_eq!(cfg.u64_or("tree.levels", 1).unwrap(), 1);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut cfg = Config::parse("[a]\nx = 1\n").unwrap();
+        cfg.set_kv("a.x=2").unwrap();
+        assert_eq!(cfg.u64("a.x").unwrap(), 2);
+        assert!(cfg.set_kv("nonsense").is_err());
+    }
+
+    #[test]
+    fn suffixes() {
+        assert_eq!(parse_u64("128k").unwrap(), 128_000);
+        assert_eq!(parse_u64("2m").unwrap(), 2_000_000);
+        assert_eq!(parse_u64("1g").unwrap(), 1_000_000_000);
+        assert_eq!(parse_u64("4kb").unwrap(), 4096);
+        assert_eq!(parse_u64("3_000").unwrap(), 3000);
+        assert!(parse_u64("abc").is_err());
+        assert!(parse_u64("99999999999g").is_err());
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(Config::parse("[oops\n").is_err());
+        assert!(Config::parse("novalue\n").is_err());
+        assert!(Config::parse("= 3\n").is_err());
+    }
+
+    #[test]
+    fn section_iter_and_json() {
+        let cfg = Config::parse("[t]\na = 1\nb = x\n[u]\nc = 2\n").unwrap();
+        let t: Vec<_> = cfg.section("t").collect();
+        assert_eq!(t, vec![("t.a", "1"), ("t.b", "x")]);
+        let j = cfg.to_json();
+        assert_eq!(j.get("u.c").unwrap().as_str(), Some("2"));
+    }
+
+    #[test]
+    fn missing_keys_report_name() {
+        let cfg = Config::new();
+        let e = cfg.u64("tree.machines").unwrap_err();
+        assert!(e.msg.contains("tree.machines"));
+    }
+}

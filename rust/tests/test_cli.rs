@@ -1,0 +1,129 @@
+//! CLI integration: drive the `greedyml` binary end to end.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_greedyml"))
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = bin().output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("usage: greedyml"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn tree_command_renders_fig2() {
+    let out = bin().args(["tree", "--machines", "8", "--branching", "3"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("T(m=8, L=2, b=3)"));
+    assert!(text.contains("(1,0) (1,3) (1,6)"));
+}
+
+#[test]
+fn model_command_prints_table1() {
+    let out = bin()
+        .args(["model", "--n", "1m", "--k", "10k", "--machines", "32", "--levels", "5"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("RandGreeDI calls/machine"));
+    assert!(text.contains("fan-in ceil(m^(1/L))      : 2"));
+}
+
+#[test]
+fn run_command_with_inline_config_and_overrides() {
+    let dir = std::env::temp_dir();
+    let cfg = dir.join("greedyml_cli_test.toml");
+    std::fs::write(
+        &cfg,
+        "name = cli\n[dataset]\nkind = retail\nn = 300\n[problem]\nk = 8\n\
+         [run]\nalgos = greedy, greedyml:4:2\n",
+    )
+    .unwrap();
+    let json = dir.join("greedyml_cli_test.json");
+    let out = bin()
+        .args([
+            "run",
+            "--config",
+            cfg.to_str().unwrap(),
+            "--set",
+            "problem.k=6",
+            "--json",
+            json.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("k=6"), "override not applied:\n{text}");
+    assert!(text.contains("Greedy"));
+    assert!(text.contains("GML(m=4,b=2,L=2)"));
+    let parsed = greedyml::util::json::Json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+    assert_eq!(parsed.as_arr().unwrap().len(), 2);
+    std::fs::remove_file(&cfg).ok();
+    std::fs::remove_file(&json).ok();
+}
+
+#[test]
+fn run_command_missing_config_errors() {
+    let out = bin().args(["run", "--config", "/nonexistent.toml"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("cannot read"));
+}
+
+#[test]
+fn datasets_command_prints_table2() {
+    let out = bin().arg("datasets").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for name in ["road-like", "friendster-like", "kosarak-like", "tiny-imagenet-like"] {
+        assert!(text.contains(name), "missing {name} in:\n{text}");
+    }
+}
+
+#[test]
+fn artifacts_command_if_built() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        return;
+    }
+    let out = bin().arg("artifacts").output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("coverage_gains"));
+}
+
+#[test]
+fn run_command_exports_chrome_trace() {
+    let dir = std::env::temp_dir();
+    let cfg = dir.join("greedyml_cli_trace.toml");
+    std::fs::write(
+        &cfg,
+        "[dataset]\nkind = retail\nn = 200\n[problem]\nk = 6\n[run]\nalgos = greedyml:4:2\n",
+    )
+    .unwrap();
+    let trace = dir.join("greedyml_cli_trace.json");
+    let out = bin()
+        .args(["run", "--config", cfg.to_str().unwrap(), "--trace", trace.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let parsed =
+        greedyml::util::json::Json::parse(&std::fs::read_to_string(&trace).unwrap()).unwrap();
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    // 4 leaves + 2 level-1 nodes + 1 root = 7 compute spans + 3 recv spans.
+    assert!(events.len() >= 8, "{} events", events.len());
+    assert!(events.iter().all(|e| e.get("ph").unwrap().as_str() == Some("X")));
+    std::fs::remove_file(&cfg).ok();
+    std::fs::remove_file(&trace).ok();
+}

@@ -1,0 +1,116 @@
+//! Full-pipeline integration: config text → experiment → algorithms →
+//! reports, across objectives, constraints, partition schemes and
+//! failure modes.
+
+use greedyml::coordinator::{render_table, Experiment};
+use greedyml::util::config::Config;
+
+fn run_config(text: &str) -> (Vec<greedyml::metrics::RunReport>, Vec<(String, String)>) {
+    let cfg = Config::parse(text).unwrap();
+    let exp = Experiment::from_config(&cfg, None).unwrap();
+    exp.run()
+}
+
+#[test]
+fn kcover_pipeline_all_algorithms() {
+    let (reports, failures) = run_config(
+        "name = it\n\
+         [dataset]\nkind = kosarak\nn = 2000\nseed = 3\n\
+         [problem]\nk = 24\n\
+         [run]\nalgos = greedy, greedi:8, randgreedi:8, greedyml:8:2, greedyml:8:4\nseed = 1\n",
+    );
+    assert!(failures.is_empty(), "{failures:?}");
+    assert_eq!(reports.len(), 5);
+    let greedy = reports[0].value;
+    for r in &reports {
+        assert!(r.value > 0.0);
+        assert!(r.value <= greedy + 1e-9, "{}: dist beat greedy?", r.algo);
+        assert!(r.value >= 0.6 * greedy, "{}: too weak ({} vs {greedy})", r.algo, r.value);
+    }
+    let table = render_table(&reports, &failures);
+    assert!(table.contains("GML(m=8,b=2,L=3)"));
+}
+
+#[test]
+fn kdominating_pipeline_with_memory_ladder() {
+    // A limit that breaks wide trees but not the binary one.
+    let base = "name = mem\n\
+         [dataset]\nkind = ba\nn = 20000\nattach = 3\nseed = 4\n\
+         [problem]\nk = 600\n\
+         [run]\nseed = 2\n";
+    // Probe unlimited to find the wide-tree peak.
+    let cfg = Config::parse(&format!("{base}algos = randgreedi:16\n")).unwrap();
+    let mut cfg = cfg;
+    cfg.set("run.algos", "randgreedi:16");
+    let exp = Experiment::from_config(&cfg, None).unwrap();
+    let (reports, failures) = exp.run();
+    assert!(failures.is_empty());
+    let peak = reports[0].peak_mem;
+
+    let mut cfg2 = Config::parse(base).unwrap();
+    cfg2.set("run.algos", "randgreedi:16, greedyml:16:2");
+    cfg2.set("run.mem_limit", &format!("{}", peak * 2 / 3));
+    let exp2 = Experiment::from_config(&cfg2, None).unwrap();
+    let (reports2, failures2) = exp2.run();
+    assert_eq!(failures2.len(), 1, "RandGreeDI should OOM: {failures2:?}");
+    assert!(failures2[0].0.starts_with("RG"));
+    assert_eq!(reports2.len(), 1, "GreedyML(b=2) should succeed");
+    assert!(reports2[0].algo.starts_with("GML"));
+}
+
+#[test]
+fn kmedoid_pipeline_local_view_and_added() {
+    let (reports, failures) = run_config(
+        "name = med\n\
+         [dataset]\nkind = gaussian\nn = 512\ndim = 16\nclasses = 8\nseed = 5\n\
+         [objective]\nkind = kmedoid\n\
+         [problem]\nk = 12\n\
+         [run]\nalgos = randgreedi:8, greedyml:8:2\nlocal_view = true\nadded = 64\nseed = 3\n",
+    );
+    assert!(failures.is_empty(), "{failures:?}");
+    assert_eq!(reports.len(), 2);
+    // Local values are not directly comparable to global, but both must be
+    // positive and within a sane band of each other.
+    let (rg, gml) = (reports[0].value, reports[1].value);
+    assert!(rg > 0.0 && gml > 0.0);
+    assert!(gml > 0.5 * rg && gml < 2.0 * rg, "rg {rg} vs gml {gml}");
+}
+
+#[test]
+fn partition_matroid_pipeline() {
+    let (reports, failures) = run_config(
+        "name = mat\n\
+         [dataset]\nkind = retail\nn = 600\nseed = 6\n\
+         [problem]\nk = 12\nconstraint = matroid\ngroups = 3\n\
+         [run]\nalgos = greedy, greedyml:4:2\nseed = 4\n",
+    );
+    assert!(failures.is_empty(), "{failures:?}");
+    assert_eq!(reports.len(), 2);
+    assert!(reports[1].value >= 0.5 * reports[0].value);
+}
+
+#[test]
+fn reports_are_json_exportable() {
+    let (reports, _) = run_config(
+        "[dataset]\nkind = retail\nn = 300\n[problem]\nk = 6\n[run]\nalgos = greedyml:4:2\n",
+    );
+    let path = std::env::temp_dir().join("greedyml_pipeline_report.json");
+    greedyml::metrics::write_reports(path.to_str().unwrap(), &reports).unwrap();
+    let parsed =
+        greedyml::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(parsed.as_arr().unwrap().len(), reports.len());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn determinism_across_full_pipeline() {
+    let text = "[dataset]\nkind = road\nn = 4096\nseed = 9\n\
+                [problem]\nk = 64\n\
+                [run]\nalgos = greedyml:8:2\nseed = 17\n";
+    let (a, _) = run_config(text);
+    let (b, _) = run_config(text);
+    assert_eq!(a[0].value, b[0].value);
+    assert_eq!(a[0].critical_calls, b[0].critical_calls);
+    assert_eq!(a[0].total_calls, b[0].total_calls);
+    assert_eq!(a[0].peak_mem, b[0].peak_mem);
+}

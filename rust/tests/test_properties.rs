@@ -1,0 +1,144 @@
+//! Cross-module property suite (the S7 check harness at integration scope):
+//! random instances, structural invariants of the whole distributed stack.
+
+use greedyml::algo::{run_greedyml, DistConfig};
+use greedyml::check::{ensure, forall, pair, Gen};
+use greedyml::constraint::{Cardinality, Constraint};
+use greedyml::data::itemsets::ItemsetCollection;
+use greedyml::objective::{KCover, Oracle};
+use greedyml::tree::AccumulationTree;
+use greedyml::util::rng::Rng;
+use std::sync::Arc;
+
+fn random_instance(seed: u64, n: usize, items: usize) -> KCover {
+    let mut rng = Rng::new(seed);
+    let sets: Vec<Vec<u32>> = (0..n)
+        .map(|_| {
+            (0..1 + rng.below(6) as usize)
+                .map(|_| rng.below(items as u64) as u32)
+                .collect()
+        })
+        .collect();
+    KCover::new(Arc::new(ItemsetCollection::from_sets(&sets)))
+}
+
+#[test]
+fn solution_always_feasible_and_value_consistent() {
+    forall(
+        "dist solution feasibility",
+        40,
+        pair(Gen::u64(0..1000), pair(Gen::u64(2..17), Gen::u64(2..6))),
+        |&(seed, (m, b))| {
+            let oracle = random_instance(seed, 200, 100);
+            let k = 8;
+            let constraint = Cardinality::new(k);
+            let cfg = DistConfig::greedyml(AccumulationTree::new(m as u32, b as u32), seed);
+            let out = run_greedyml(&oracle, &constraint, &cfg)
+                .map_err(|e| format!("unexpected failure: {e}"))?;
+            ensure(constraint.is_feasible(&out.solution), "infeasible solution")?;
+            ensure(out.solution.len() <= k, "solution exceeds k")?;
+            let fresh = oracle.eval(&out.solution);
+            ensure(
+                (fresh - out.value).abs() < 1e-9,
+                format!("reported {} vs recomputed {fresh}", out.value),
+            )?;
+            // No duplicate elements.
+            let set: std::collections::HashSet<_> = out.solution.iter().collect();
+            ensure(set.len() == out.solution.len(), "duplicates in solution")
+        },
+    );
+}
+
+#[test]
+fn call_accounting_adds_up() {
+    forall(
+        "calls: levels sum == machines sum",
+        30,
+        pair(Gen::u64(0..500), pair(Gen::u64(2..13), Gen::u64(2..5))),
+        |&(seed, (m, b))| {
+            let oracle = random_instance(seed, 150, 80);
+            let cfg = DistConfig::greedyml(AccumulationTree::new(m as u32, b as u32), seed);
+            let out = run_greedyml(&oracle, &Cardinality::new(6), &cfg)
+                .map_err(|e| format!("{e}"))?;
+            let by_levels: u64 = out.levels.iter().map(|l| l.total_calls).sum();
+            let by_machines: u64 = out.machines.iter().map(|s| s.calls).sum();
+            ensure(
+                by_levels == by_machines,
+                format!("levels {by_levels} != machines {by_machines}"),
+            )?;
+            ensure(out.total_calls == by_machines, "total_calls mismatch")?;
+            ensure(
+                out.critical_calls == out.machines[0].calls,
+                "critical path is machine 0",
+            )
+        },
+    );
+}
+
+#[test]
+fn taller_trees_never_increase_peak_accumulation() {
+    forall(
+        "peak accumulation monotone in b",
+        20,
+        Gen::u64(0..300),
+        |&seed| {
+            let oracle = random_instance(seed, 300, 150);
+            let constraint = Cardinality::new(10);
+            let mut prev_elems = usize::MAX;
+            for b in [16u32, 4, 2] {
+                let cfg = DistConfig::greedyml(AccumulationTree::new(16, b), seed);
+                let out = run_greedyml(&oracle, &constraint, &cfg).map_err(|e| format!("{e}"))?;
+                ensure(
+                    out.max_accum_elems <= prev_elems,
+                    format!("b={b}: {} > previous {prev_elems}", out.max_accum_elems),
+                )?;
+                prev_elems = out.max_accum_elems;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn comm_bytes_conserved_and_root_receives_most() {
+    forall(
+        "conservation of bytes",
+        25,
+        pair(Gen::u64(0..400), Gen::u64(2..6)),
+        |&(seed, b)| {
+            let oracle = random_instance(seed, 200, 100);
+            let cfg = DistConfig::greedyml(AccumulationTree::new(8, b as u32), seed);
+            let out = run_greedyml(&oracle, &Cardinality::new(6), &cfg).map_err(|e| format!("{e}"))?;
+            let sent: u64 = out.machines.iter().map(|s| s.bytes_sent).sum();
+            let recv: u64 = out.machines.iter().map(|s| s.bytes_received).sum();
+            ensure(sent == recv, format!("sent {sent} != received {recv}"))?;
+            ensure(out.machines[0].bytes_sent == 0, "root must not send")
+        },
+    );
+}
+
+#[test]
+fn adding_machines_partitions_all_elements() {
+    // Leaf call totals imply every element was scanned exactly once across
+    // leaves in the first round of naive greedy — a partition witness at
+    // the integration level.
+    forall(
+        "leaf partition covers ground set",
+        20,
+        pair(Gen::u64(0..200), Gen::u64(2..33)),
+        |&(seed, m)| {
+            let oracle = random_instance(seed, 120, 60);
+            let cfg = DistConfig {
+                kind: greedyml::greedy::GreedyKind::Naive,
+                ..DistConfig::greedyml(AccumulationTree::new(m as u32, 2), seed)
+            };
+            let out = run_greedyml(&oracle, &Cardinality::new(1), &cfg).map_err(|e| format!("{e}"))?;
+            // With k=1, each leaf does exactly |P_i| gain queries.
+            let leaf_calls: u64 = out.levels[0].total_calls;
+            ensure(
+                leaf_calls == 120,
+                format!("leaf scan saw {leaf_calls} elements, want 120"),
+            )
+        },
+    );
+}

@@ -1,0 +1,86 @@
+//! Runtime end-to-end integration: AOT artifacts → PJRT engine → oracles →
+//! distributed GreedyML.  These tests require `make artifacts`; they are
+//! skipped (silently pass) when the bundle is missing so `cargo test` works
+//! on a fresh checkout.
+
+use greedyml::algo::{run_greedyml, DistConfig};
+use greedyml::constraint::Cardinality;
+use greedyml::data::gen;
+use greedyml::objective::{KMedoid, Oracle};
+use greedyml::runtime::{Engine, KCoverPjrt, KMedoidPjrt};
+use greedyml::tree::AccumulationTree;
+use std::sync::Arc;
+
+fn engine() -> Option<Arc<Engine>> {
+    Engine::load("artifacts").ok().map(Arc::new)
+}
+
+#[test]
+fn engine_loads_every_manifest_entry() {
+    let Some(engine) = engine() else { return };
+    let m = engine.manifest();
+    assert!(m.entries.len() >= 4);
+    for e in &m.entries {
+        assert!(engine.entry(&e.name).is_ok());
+        assert!(!e.inputs.is_empty());
+        assert!(!e.outputs.is_empty());
+    }
+}
+
+#[test]
+fn distributed_greedyml_over_pjrt_kmedoid() {
+    let Some(engine) = engine() else { return };
+    let (vs, _) = gen::gaussian_mixture(
+        gen::GaussianParams { n: 768, dim: 64, classes: 6, noise: 0.3 },
+        21,
+    );
+    let vs = Arc::new(vs);
+    let cpu = KMedoid::new(vs.clone());
+    let pjrt = KMedoidPjrt::new(vs, engine).unwrap();
+    let constraint = Cardinality::new(10);
+    let cfg = DistConfig { local_view: true, ..DistConfig::greedyml(AccumulationTree::new(4, 2), 5) };
+    let a = run_greedyml(&cpu, &constraint, &cfg).unwrap();
+    let b = run_greedyml(&pjrt, &constraint, &cfg).unwrap();
+    // Same algorithm, same tape; only the gain arithmetic differs (f64 vs
+    // f32 kernel). Global values must agree tightly.
+    let ga = cpu.eval(&a.solution);
+    let gb = cpu.eval(&b.solution);
+    assert!(
+        (ga - gb).abs() < 5e-3 * ga.max(1e-9),
+        "cpu-backed {ga} vs pjrt-backed {gb}"
+    );
+    assert_eq!(a.machines.len(), b.machines.len());
+}
+
+#[test]
+fn distributed_greedyml_over_pjrt_coverage_exact() {
+    let Some(engine) = engine() else { return };
+    let data = Arc::new(gen::transactions(gen::TransactionParams::retail_like(1200), 31));
+    let cpu = greedyml::objective::KCover::new(data.clone());
+    let pjrt = KCoverPjrt::new(data, engine).unwrap();
+    let constraint = Cardinality::new(16);
+    let cfg = DistConfig::greedyml(AccumulationTree::new(4, 2), 8);
+    let a = run_greedyml(&cpu, &constraint, &cfg).unwrap();
+    let b = run_greedyml(&pjrt, &constraint, &cfg).unwrap();
+    // Integer objective + identical tape ⇒ bit-identical results.
+    assert_eq!(a.value, b.value);
+    assert_eq!(a.solution, b.solution);
+}
+
+#[test]
+fn pjrt_engine_is_shareable_across_superstep_threads() {
+    // The dist simulator calls the engine from many superstep threads; this
+    // exercises the Mutex-serialized Send/Sync wrapper under real fan-out.
+    let Some(engine) = engine() else { return };
+    let (vs, _) = gen::gaussian_mixture(
+        gen::GaussianParams { n: 1024, dim: 64, classes: 4, noise: 0.3 },
+        13,
+    );
+    let pjrt = KMedoidPjrt::new(Arc::new(vs), engine).unwrap();
+    let constraint = Cardinality::new(6);
+    // 8 leaves → 8 concurrent threads issuing kernel launches.
+    let cfg = DistConfig { local_view: true, ..DistConfig::greedyml(AccumulationTree::new(8, 2), 2) };
+    let out = run_greedyml(&pjrt, &constraint, &cfg).unwrap();
+    assert!(out.value > 0.0);
+    assert_eq!(out.machines.len(), 8);
+}
