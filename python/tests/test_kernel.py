@@ -8,6 +8,8 @@ difference — this is the same trade the TPU kernel makes.
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property sweeps need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -176,17 +176,34 @@ pub fn run_dist(
                 ctx.stats.bytes_received += recv_bytes;
 
                 // D ← S_prev ∪ child solutions (lines 8-13), plus the §6.4
-                // optional random extra elements.
-                let mut d: Vec<ElemId> = ctx.sol.clone();
-                for c in &task.children {
-                    d.extend_from_slice(&c.sol);
+                // optional random extra elements.  The union is built
+                // *distinct*: solutions can overlap across levels, and
+                // `sample_added` can re-draw elements already in D — blind
+                // concatenation would inflate `accum_elems` and charge the
+                // memory meter twice for the same resident element.
+                // Membership is tracked in a |D|-sized set, not an O(n)
+                // bitmap: the union is O(b·k + added) elements and this
+                // runs once per active node per level.
+                let cap = ctx.sol.len()
+                    + task.children.iter().map(|c| c.sol.len()).sum::<usize>()
+                    + cfg.added_elements;
+                let mut seen = std::collections::HashSet::with_capacity(cap);
+                let mut d: Vec<ElemId> = Vec::with_capacity(cap);
+                for &e in ctx.sol.iter().chain(task.children.iter().flat_map(|c| c.sol.iter())) {
+                    if seen.insert(e) {
+                        d.push(e);
+                    }
                 }
                 let added = sample_added(cfg, n, level, id);
                 let mut add_bytes = 0u64;
-                if !added.is_empty() {
-                    add_bytes = added.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
+                for &e in &added {
+                    if seen.insert(e) {
+                        add_bytes += oracle.elem_bytes(e) as u64;
+                        d.push(e);
+                    }
+                }
+                if add_bytes > 0 {
                     ctx.meter.charge(add_bytes, id, level, "added elements")?;
-                    d.extend_from_slice(&added);
                 }
                 let accum_elems = d.len();
 
@@ -465,5 +482,27 @@ mod tests {
         assert!(b.max_accum_elems >= a.max_accum_elems + 50 - 8);
         // More candidates can only help (or tie) coverage quality here.
         assert!(b.value >= a.value * 0.95);
+    }
+
+    #[test]
+    fn accumulation_union_is_deduplicated() {
+        // added_elements = n draws the whole ground set at every
+        // accumulation step; since D is a distinct union, no accumulator
+        // can ever see more candidates than the ground set holds.  (The
+        // pre-dedup union was |S_prev| + Σ|child| + n > n.)
+        let n = 100;
+        let o = cover_oracle(n, 6);
+        let c = Cardinality::new(5);
+        let cfg = DistConfig {
+            added_elements: n,
+            ..DistConfig::greedyml(AccumulationTree::new(4, 2), 3)
+        };
+        let out = run_greedyml(&o, &c, &cfg).unwrap();
+        assert!(
+            out.max_accum_elems <= n,
+            "{} accumulation candidates from a {n}-element ground set",
+            out.max_accum_elems
+        );
+        assert!(out.value > 0.0);
     }
 }

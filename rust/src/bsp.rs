@@ -23,19 +23,28 @@ pub struct BspParams {
 }
 
 impl BspParams {
-    /// `⌈m^{1/L}⌉` — the per-node fan-in of a balanced L-level tree.
+    /// `⌈m^{1/L}⌉` — the per-node fan-in of a balanced L-level tree,
+    /// computed exactly as the smallest integer `b` with `b^L ≥ m`
+    /// (floating-point `powf` rounding is wrong for large `m`).
     pub fn fan_in(&self) -> u64 {
         if self.levels == 0 {
             return 1;
         }
-        let root = (self.m as f64).powf(1.0 / self.levels as f64);
-        // Round carefully: powf(8, 1/3) can come out at 1.9999….
-        let r = root.ceil();
-        if ((r - 1.0).powi(self.levels as i32) >= self.m as f64 - 1e-9) && r > 1.0 {
-            (r - 1.0) as u64
-        } else {
-            r as u64
+        if self.m <= 1 {
+            return self.m;
         }
+        // Binary search the minimal b in [1, m]; b = m always satisfies
+        // m^L ≥ m for L ≥ 1.
+        let (mut lo, mut hi) = (1u64, self.m);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if pow_sat(mid, self.levels) >= self.m {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo
     }
 
     /// GREEDY total function calls: `n·k`.
@@ -100,6 +109,25 @@ impl BspParams {
     }
 }
 
+/// `b^e`, saturating at `u64::MAX`.  Terminates quickly for any input: for
+/// `b ≥ 2` the product saturates within 64 steps and the loop breaks.
+fn pow_sat(b: u64, e: u64) -> u64 {
+    if e == 0 {
+        return 1;
+    }
+    if b <= 1 {
+        return b;
+    }
+    let mut r = 1u64;
+    for _ in 0..e {
+        r = r.saturating_mul(b);
+        if r == u64::MAX {
+            break;
+        }
+    }
+    r
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,5 +183,65 @@ mod tests {
     #[test]
     fn greedy_baseline() {
         assert_eq!(p(1000, 10, 4, 1).greedy_calls(), 10_000);
+    }
+
+    #[test]
+    fn fan_in_covers_and_is_minimal() {
+        use crate::check::{ensure, forall, pair, Gen};
+        forall(
+            "fan_in(m,L)^L >= m, minimally",
+            500,
+            pair(Gen::u64(1..100_000), Gen::u64(1..12)),
+            |&(m, levels)| {
+                let b = p(0, 1, m, levels).fan_in();
+                ensure(
+                    pow_sat(b, levels) >= m,
+                    format!("{b}^{levels} = {} < m = {m}", pow_sat(b, levels)),
+                )?;
+                if b > 1 {
+                    ensure(
+                        pow_sat(b - 1, levels) < m,
+                        format!("{b} is not minimal for m={m}, L={levels}"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fan_in_monotone_in_m() {
+        use crate::check::{ensure, forall, pair, Gen};
+        forall(
+            "fan_in monotone in m",
+            300,
+            pair(Gen::u64(1..50_000), Gen::u64(1..10)),
+            |&(m, levels)| {
+                let a = p(0, 1, m, levels).fan_in();
+                let b = p(0, 1, m + 1, levels).fan_in();
+                ensure(a <= b, format!("fan_in({m})={a} > fan_in({})={b} at L={levels}", m + 1))
+            },
+        );
+    }
+
+    #[test]
+    fn fan_in_single_level_is_m() {
+        use crate::check::{ensure, forall, Gen};
+        forall("fan_in(m, 1) == m", 300, Gen::u64(1..1_000_000), |&m| {
+            let b = p(0, 1, m, 1).fan_in();
+            ensure(b == m, format!("fan_in({m}, 1) = {b}"))
+        });
+    }
+
+    #[test]
+    fn fan_in_huge_m_does_not_overflow() {
+        // The old powf-based rounding went wrong far earlier than this.
+        assert_eq!(p(0, 1, u64::MAX, 64).fan_in(), 2);
+        assert_eq!(p(0, 1, u64::MAX, 1).fan_in(), u64::MAX);
+        assert_eq!(p(0, 1, 1 << 62, 31).fan_in(), 4);
+        assert_eq!(pow_sat(2, 64), u64::MAX);
+        assert_eq!(pow_sat(3, 0), 1);
+        assert_eq!(pow_sat(1, 1_000_000), 1);
+        assert_eq!(pow_sat(0, 5), 0);
     }
 }

@@ -1,0 +1,90 @@
+//! The α–β communication cost model.
+//!
+//! The simulator runs on one machine, so communication time is *modeled*,
+//! not measured: receiving a message of `b` bytes costs
+//! `latency + b · secs_per_byte` (the classic α–β model), and a gather of
+//! several child solutions in one BSP superstep costs the sum over
+//! messages — the root of a RandGreeDI tree pays `m − 1` latencies plus
+//! the bandwidth term for every child solution, while a binary GreedyML
+//! tree pays one message per level.  This is exactly the divergence the
+//! Fig. 6 strong-scaling bench plots.
+
+/// Latency + bandwidth model for solution shipping.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CommModel {
+    /// Fixed per-message cost α in seconds.
+    pub latency_secs: f64,
+    /// Inverse bandwidth β in seconds per byte.
+    pub secs_per_byte: f64,
+}
+
+impl Default for CommModel {
+    /// A commodity-cluster default: 10 µs latency, 1 GiB/s bandwidth.
+    fn default() -> Self {
+        Self { latency_secs: 1e-5, secs_per_byte: 1.0 / (1u64 << 30) as f64 }
+    }
+}
+
+impl CommModel {
+    /// Build from explicit α (seconds) and β (seconds per byte).
+    pub fn new(latency_secs: f64, secs_per_byte: f64) -> Self {
+        Self { latency_secs, secs_per_byte }
+    }
+
+    /// A free network (modeled comm time identically zero).
+    pub fn zero() -> Self {
+        Self { latency_secs: 0.0, secs_per_byte: 0.0 }
+    }
+
+    /// Modeled seconds for one node to gather one message per child in a
+    /// BSP superstep; `msg_bytes` holds the per-child message sizes.  Zero
+    /// children gather in zero time.
+    pub fn gather_time(&self, msg_bytes: &[u64]) -> f64 {
+        msg_bytes
+            .iter()
+            .map(|&b| self.latency_secs + self.secs_per_byte * b as f64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_children_cost_nothing() {
+        assert_eq!(CommModel::default().gather_time(&[]), 0.0);
+        assert_eq!(CommModel::zero().gather_time(&[]), 0.0);
+    }
+
+    #[test]
+    fn monotone_in_bytes() {
+        let c = CommModel::default();
+        let mut prev = 0.0;
+        for bytes in [0u64, 1, 1024, 1 << 20, 1 << 30] {
+            let t = c.gather_time(&[bytes]);
+            assert!(t > prev || (bytes == 0 && t > 0.0), "bytes {bytes}: {t} vs {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn monotone_in_message_count() {
+        let c = CommModel::default();
+        let one = c.gather_time(&[4096]);
+        let two = c.gather_time(&[4096, 4096]);
+        let three = c.gather_time(&[4096, 4096, 4096]);
+        assert!(two > one && three > two);
+        assert!((two - 2.0 * one).abs() < 1e-12, "gather is additive over messages");
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let c = CommModel::default();
+        // A 1-byte message is essentially one latency...
+        assert!((c.gather_time(&[1]) - c.latency_secs) / c.latency_secs < 1e-3);
+        // ...while a 1 GiB message is essentially one bandwidth second.
+        let big = c.gather_time(&[1 << 30]);
+        assert!((big - 1.0).abs() < 1e-3, "{big}");
+    }
+}

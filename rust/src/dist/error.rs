@@ -1,0 +1,72 @@
+//! Failures of a simulated distributed run.
+//!
+//! Out-of-memory is the only failure mode the runtime itself produces: the
+//! paper's §6.2 experiments *expect* runs to die when a machine's budget
+//! cannot hold the data or the accumulated child solutions, and the
+//! coordinator reports such runs as failures rather than panicking.
+
+use crate::util::fmt_bytes;
+use crate::MachineId;
+
+/// Error produced by a distributed run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DistError {
+    /// A [`MemoryMeter`](super::MemoryMeter) charge exceeded the
+    /// per-machine limit.  Carries enough context to tell *which* machine
+    /// died, at *which* tree level, holding *what* — the coordinates the
+    /// memory experiments assert on.
+    OutOfMemory {
+        /// Machine whose budget was exceeded.
+        machine: MachineId,
+        /// Tree level at which the charge happened (0 = leaf work).
+        level: u32,
+        /// What was being allocated ("partition data", "child solutions", …).
+        label: &'static str,
+        /// Bytes the failing charge asked for.
+        requested: u64,
+        /// Bytes already in use before the charge.
+        in_use: u64,
+        /// The per-machine limit.
+        limit: u64,
+    },
+}
+
+impl std::fmt::Display for DistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DistError::OutOfMemory { machine, level, label, requested, in_use, limit } => {
+                write!(
+                    f,
+                    "machine {machine} out of memory at level {level}: {} for '{label}' \
+                     on top of {} in use exceeds the {} limit",
+                    fmt_bytes(*requested),
+                    fmt_bytes(*in_use),
+                    fmt_bytes(*limit)
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for DistError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_machine_and_says_out_of_memory() {
+        let e = DistError::OutOfMemory {
+            machine: 0,
+            level: 1,
+            label: "child solutions",
+            requested: 2048,
+            in_use: 1024,
+            limit: 1536,
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("machine 0 out of memory"), "{msg}");
+        assert!(msg.contains("level 1"), "{msg}");
+        assert!(msg.contains("child solutions"), "{msg}");
+    }
+}

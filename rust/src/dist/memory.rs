@@ -1,0 +1,139 @@
+//! Per-machine memory accounting.
+//!
+//! Every simulated machine owns one [`MemoryMeter`].  The algorithm layer
+//! charges it for whatever the machine must hold at that moment — its data
+//! partition, its current solution, received child solutions, §6.4 added
+//! elements — and releases what it drops.  A charge that would push usage
+//! past the configured limit fails the run with
+//! [`DistError::OutOfMemory`], tagged with the machine, tree level and a
+//! label for the allocation, so the §6.2 memory experiments can assert on
+//! exactly where a configuration dies.
+
+use super::DistError;
+use crate::MachineId;
+
+/// Charge/release byte accounting with an optional hard limit.
+#[derive(Clone, Debug)]
+pub struct MemoryMeter {
+    limit: Option<u64>,
+    in_use: u64,
+    peak: u64,
+}
+
+impl MemoryMeter {
+    /// New meter; `limit = None` means unlimited.
+    pub fn new(limit: Option<u64>) -> Self {
+        Self { limit, in_use: 0, peak: 0 }
+    }
+
+    /// Charge `bytes`.  Fails (leaving usage unchanged) if the new total
+    /// would exceed the limit; `machine`, `level` and `label` describe the
+    /// allocation for the error.
+    pub fn charge(
+        &mut self,
+        bytes: u64,
+        machine: MachineId,
+        level: u32,
+        label: &'static str,
+    ) -> Result<(), DistError> {
+        let new_total = self.in_use.saturating_add(bytes);
+        if let Some(limit) = self.limit {
+            if new_total > limit {
+                return Err(DistError::OutOfMemory {
+                    machine,
+                    level,
+                    label,
+                    requested: bytes,
+                    in_use: self.in_use,
+                    limit,
+                });
+            }
+        }
+        self.in_use = new_total;
+        self.peak = self.peak.max(self.in_use);
+        Ok(())
+    }
+
+    /// Release `bytes` (saturating: releasing more than is held clamps to
+    /// zero rather than underflowing).
+    pub fn release(&mut self, bytes: u64) {
+        self.in_use = self.in_use.saturating_sub(bytes);
+    }
+
+    /// Bytes currently held.
+    pub fn in_use(&self) -> u64 {
+        self.in_use
+    }
+
+    /// Highest usage ever reached.
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    /// The configured limit.
+    pub fn limit(&self) -> Option<u64> {
+        self.limit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_release_peak_accounting() {
+        let mut m = MemoryMeter::new(None);
+        m.charge(100, 0, 0, "a").unwrap();
+        m.charge(50, 0, 0, "b").unwrap();
+        assert_eq!(m.in_use(), 150);
+        assert_eq!(m.peak(), 150);
+        m.release(120);
+        assert_eq!(m.in_use(), 30);
+        assert_eq!(m.peak(), 150, "peak must not decrease on release");
+        m.charge(40, 0, 0, "c").unwrap();
+        assert_eq!(m.in_use(), 70);
+        assert_eq!(m.peak(), 150, "new usage below old peak keeps the peak");
+    }
+
+    #[test]
+    fn limit_allows_exact_fit_but_not_one_more_byte() {
+        let mut m = MemoryMeter::new(Some(100));
+        m.charge(100, 0, 0, "fits").unwrap();
+        assert!(m.charge(1, 0, 0, "overflow").is_err());
+        assert_eq!(m.in_use(), 100, "failed charge must not change usage");
+    }
+
+    #[test]
+    fn oom_error_carries_machine_level_label() {
+        let mut m = MemoryMeter::new(Some(10));
+        let err = m.charge(64, 3, 2, "child solutions").unwrap_err();
+        match err {
+            DistError::OutOfMemory { machine, level, label, requested, in_use, limit } => {
+                assert_eq!(machine, 3);
+                assert_eq!(level, 2);
+                assert_eq!(label, "child solutions");
+                assert_eq!(requested, 64);
+                assert_eq!(in_use, 0);
+                assert_eq!(limit, 10);
+            }
+        }
+    }
+
+    #[test]
+    fn release_saturates_at_zero() {
+        let mut m = MemoryMeter::new(None);
+        m.charge(5, 0, 0, "x").unwrap();
+        m.release(1000);
+        assert_eq!(m.in_use(), 0);
+    }
+
+    #[test]
+    fn charging_after_release_can_oom_again() {
+        let mut m = MemoryMeter::new(Some(100));
+        m.charge(80, 1, 0, "data").unwrap();
+        m.release(80);
+        m.charge(90, 1, 1, "solutions").unwrap();
+        assert!(m.charge(20, 1, 1, "more").is_err());
+        assert_eq!(m.peak(), 90);
+    }
+}

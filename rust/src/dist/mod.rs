@@ -1,0 +1,37 @@
+//! The simulated distributed runtime underneath the algorithm layer.
+//!
+//! The paper's algorithms run on `m` MPI ranks; this crate reproduces them
+//! on one process by giving each *simulated machine* the resources the
+//! paper accounts for, so every §5/§6 measurement has a faithful source:
+//!
+//! * [`parallel_map`] — the BSP superstep executor: order-preserving
+//!   thread-pool fan-out of per-machine tasks (one closure call per
+//!   machine, results returned in machine order so runs are deterministic
+//!   regardless of scheduling).
+//! * [`MemoryMeter`] — per-machine memory accounting with a hard limit;
+//!   a charge that would exceed [`DistConfig::mem_limit`] aborts the run
+//!   with [`DistError::OutOfMemory`], reproducing §6.2's "cannot even hold
+//!   the data" regime as a real error.
+//! * [`CommModel`] — the α–β (latency + bandwidth) communication model
+//!   behind the modeled `comm_secs` of Fig. 6.
+//! * [`MachineStats`] — everything one machine did over its lifetime:
+//!   gain queries, abstract cost, computation/communication seconds, bytes
+//!   shipped, peak memory, highest active tree level.
+//! * [`NodeStep`] / [`Trace`] — the per-(machine, level) timeline,
+//!   exportable as Chrome-trace JSON (`chrome://tracing` / Perfetto).
+//!
+//! [`DistConfig::mem_limit`]: crate::algo::DistConfig::mem_limit
+
+pub mod comm;
+pub mod error;
+pub mod memory;
+pub mod pool;
+pub mod stats;
+pub mod trace;
+
+pub use comm::CommModel;
+pub use error::DistError;
+pub use memory::MemoryMeter;
+pub use pool::parallel_map;
+pub use stats::MachineStats;
+pub use trace::{NodeStep, Trace};

@@ -1,0 +1,121 @@
+//! The BSP superstep executor.
+//!
+//! [`parallel_map`] fans a vector of per-machine tasks out over OS threads
+//! and returns the results *in input order*, so a distributed run is
+//! bit-deterministic no matter how the scheduler interleaves machines —
+//! the property the `deterministic_given_seed` tests rely on.  Errors are
+//! ordinary values: the algorithm layer maps each task to a
+//! `Result<_, DistError>` and inspects the slots afterwards, which lets an
+//! OOM on one machine surface without tearing down the others mid-step
+//! (they finish their superstep first, like real BSP ranks would).
+//!
+//! Threads are scoped (`std::thread::scope`), so the closure may borrow
+//! the oracle, constraint and config from the caller's stack; a panic in
+//! any worker propagates to the caller on join.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Apply `f` to every item on a pool of up to `available_parallelism`
+/// threads; the result vector preserves input order.
+pub fn parallel_map<T, U, F>(items: Vec<T>, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    let n = items.len();
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(n);
+    if threads <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+
+    // Work-stealing by atomic cursor: each worker claims the next unclaimed
+    // index, takes its input and writes its result slot.  Slot mutexes are
+    // uncontended (one owner each); the cursor is the only shared point.
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<U>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().expect("task claimed twice");
+                let out = f(item);
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("worker skipped a task"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn preserves_input_order() {
+        let inputs: Vec<usize> = (0..257).collect();
+        let out = parallel_map(inputs, |i| i * 2);
+        assert_eq!(out, (0..257).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_every_item_exactly_once() {
+        let hits = AtomicU64::new(0);
+        let out = parallel_map((0..100u64).collect(), |i| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(out.len(), 100);
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(empty, |x| x).is_empty());
+        assert_eq!(parallel_map(vec![41], |x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn errors_ride_through_as_values() {
+        let out: Vec<Result<u32, String>> = parallel_map((0..10u32).collect(), |i| {
+            if i == 3 {
+                Err(format!("machine {i} failed"))
+            } else {
+                Ok(i)
+            }
+        });
+        assert_eq!(out[2], Ok(2));
+        assert_eq!(out[3], Err("machine 3 failed".to_string()));
+        assert_eq!(out.iter().filter(|r| r.is_err()).count(), 1);
+    }
+
+    #[test]
+    fn closure_may_borrow_caller_state() {
+        let table: Vec<u64> = (0..50).map(|i| i * i).collect();
+        let out = parallel_map((0..50usize).collect(), |i| table[i]);
+        assert_eq!(out, table);
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates() {
+        parallel_map(vec![0u32, 1, 2, 3], |i| {
+            if i == 2 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

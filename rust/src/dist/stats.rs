@@ -1,0 +1,57 @@
+//! Per-machine lifetime statistics.
+//!
+//! One [`MachineStats`] per simulated machine, accumulated across every
+//! superstep the machine participates in.  Machine 0 is active at every
+//! level of the accumulation tree, so its `calls` total is the paper's
+//! "function calls on the critical path" (§5) and its `peak_mem` is the
+//! root-bottleneck number the §6.2 memory experiments revolve around.
+
+use crate::MachineId;
+
+/// Everything one machine did over a distributed run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MachineStats {
+    /// Machine id (leaf index in the accumulation tree).
+    pub id: MachineId,
+    /// Marginal-gain queries issued across all its supersteps.
+    pub calls: u64,
+    /// Σ of `call_cost` over those queries (the δ-weighted cost of Table 1).
+    pub cost: u64,
+    /// Wall-clock computation seconds across its supersteps.
+    pub comp_secs: f64,
+    /// Modeled communication seconds (receives at accumulation steps).
+    pub comm_secs: f64,
+    /// Bytes shipped to its parent when it retired.
+    pub bytes_sent: u64,
+    /// Bytes received from children across accumulation steps.
+    pub bytes_received: u64,
+    /// Peak memory over the machine's lifetime.
+    pub peak_mem: u64,
+    /// Highest tree level at which the machine computed (0 = leaf only).
+    pub top_level: u32,
+    /// Largest candidate union |D| the machine ran GREEDY on.
+    pub max_accum_elems: usize,
+}
+
+impl MachineStats {
+    /// Fresh zeroed stats for machine `id`.
+    pub fn new(id: MachineId) -> Self {
+        Self { id, ..Self::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_is_zeroed_except_id() {
+        let s = MachineStats::new(7);
+        assert_eq!(s.id, 7);
+        assert_eq!(s.calls, 0);
+        assert_eq!(s.comp_secs, 0.0);
+        assert_eq!(s.bytes_sent, 0);
+        assert_eq!(s.top_level, 0);
+        assert_eq!(s.max_accum_elems, 0);
+    }
+}

@@ -1,0 +1,198 @@
+//! The per-(machine, level) execution timeline.
+//!
+//! Each BSP superstep contributes one [`NodeStep`] per active machine; the
+//! collected [`Trace`] reconstructs the level-synchronous schedule (level
+//! ℓ starts when the slowest node of level ℓ−1 finishes) and exports it as
+//! Chrome-trace JSON — open the file in `chrome://tracing` or Perfetto to
+//! see the paper's critical path as actual swim lanes.
+
+use crate::MachineId;
+
+/// What one machine did during one superstep.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct NodeStep {
+    /// The machine (trace row).
+    pub machine: MachineId,
+    /// Tree level of the superstep (0 = leaf GREEDY).
+    pub level: u32,
+    /// Computation seconds within the step.
+    pub comp_secs: f64,
+    /// Modeled receive seconds within the step (0 at the leaves).
+    pub comm_secs: f64,
+    /// Gain queries issued within the step.
+    pub calls: u64,
+}
+
+/// An ordered collection of [`NodeStep`]s for one distributed run.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    steps: Vec<NodeStep>,
+}
+
+impl Trace {
+    /// Wrap collected steps.
+    pub fn new(steps: Vec<NodeStep>) -> Self {
+        Self { steps }
+    }
+
+    /// All steps, in collection order (level-major).
+    pub fn steps(&self) -> &[NodeStep] {
+        &self.steps
+    }
+
+    /// Duration of each level's superstep: the slowest active node's
+    /// receive + compute time (BSP semantics).  Indexed by level.
+    fn level_durations(&self) -> Vec<f64> {
+        let top = self.steps.iter().map(|s| s.level).max().unwrap_or(0);
+        let mut durs = vec![0.0f64; top as usize + 1];
+        for s in &self.steps {
+            let d = s.comm_secs + s.comp_secs;
+            if d > durs[s.level as usize] {
+                durs[s.level as usize] = d;
+            }
+        }
+        durs
+    }
+
+    /// End-to-end modeled schedule length: Σ over levels of the superstep
+    /// maximum.
+    pub fn makespan(&self) -> f64 {
+        self.level_durations().iter().sum()
+    }
+
+    /// Render as a Chrome-trace JSON document (the "JSON Array Format"
+    /// wrapped in an object).  Every span is a complete event (`"ph": "X"`)
+    /// with microsecond timestamps; machines are rows (`tid`), and each
+    /// accumulation step shows a `recv` span (the modeled gather) followed
+    /// by its `greedy` span.
+    pub fn to_chrome_json(&self) -> String {
+        let durs = self.level_durations();
+        let mut starts = vec![0.0f64; durs.len()];
+        for l in 1..durs.len() {
+            starts[l] = starts[l - 1] + durs[l - 1];
+        }
+        let mut events = Vec::new();
+        for s in &self.steps {
+            let t0 = starts[s.level as usize];
+            if s.comm_secs > 0.0 {
+                events.push(serde_json::json!({
+                    "name": format!("recv L{}", s.level),
+                    "cat": "comm",
+                    "ph": "X",
+                    "pid": 0,
+                    "tid": s.machine,
+                    "ts": t0 * 1e6,
+                    "dur": s.comm_secs * 1e6,
+                    "args": { "level": s.level },
+                }));
+            }
+            events.push(serde_json::json!({
+                "name": format!("greedy L{}", s.level),
+                "cat": "comp",
+                "ph": "X",
+                "pid": 0,
+                "tid": s.machine,
+                "ts": (t0 + s.comm_secs) * 1e6,
+                "dur": s.comp_secs * 1e6,
+                "args": { "level": s.level, "calls": s.calls },
+            }));
+        }
+        let doc = serde_json::json!({
+            "displayTimeUnit": "ms",
+            "traceEvents": events,
+        });
+        serde_json::to_string_pretty(&doc).expect("chrome trace is always serializable")
+    }
+
+    /// Write the Chrome-trace JSON to `path`.
+    pub fn write(&self, path: &str) -> crate::Result<()> {
+        std::fs::write(path, self.to_chrome_json())
+            .map_err(|e| anyhow::anyhow!("cannot write trace {path}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    /// A small 2-machine, 2-level trace: both leaves compute, then the
+    /// root receives and accumulates.
+    fn sample() -> Trace {
+        Trace::new(vec![
+            NodeStep { machine: 0, level: 0, comp_secs: 0.010, comm_secs: 0.0, calls: 100 },
+            NodeStep { machine: 1, level: 0, comp_secs: 0.030, comm_secs: 0.0, calls: 120 },
+            NodeStep { machine: 0, level: 1, comp_secs: 0.005, comm_secs: 0.002, calls: 40 },
+        ])
+    }
+
+    #[test]
+    fn makespan_is_sum_of_level_maxima() {
+        let t = sample();
+        // Level 0: max(0.010, 0.030); level 1: 0.002 + 0.005.
+        assert!((t.makespan() - (0.030 + 0.007)).abs() < 1e-12);
+        assert_eq!(Trace::default().makespan(), 0.0);
+    }
+
+    #[test]
+    fn golden_chrome_trace_shape() {
+        let text = sample().to_chrome_json();
+        let parsed = Json::parse(&text).expect("valid JSON");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 compute spans + 1 recv span (only the root has comm time).
+        assert_eq!(events.len(), 4, "{text}");
+        for e in events {
+            assert_eq!(e.get("ph").unwrap().as_str(), Some("X"), "complete events only");
+            assert!(e.get("ts").unwrap().as_f64().is_some());
+            assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(e.get("tid").unwrap().as_u64().is_some());
+            assert!(e.get("name").unwrap().as_str().is_some());
+        }
+        // The level-1 spans start after the slowest leaf (0.030 s = 30000 µs).
+        let lvl1: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("args").unwrap().get("level").unwrap().as_u64() == Some(1))
+            .collect();
+        assert_eq!(lvl1.len(), 2, "recv + greedy at the root");
+        for e in &lvl1 {
+            assert!(e.get("ts").unwrap().as_f64().unwrap() >= 30_000.0 - 1e-6);
+        }
+    }
+
+    #[test]
+    fn recv_precedes_compute_within_a_step() {
+        let text = sample().to_chrome_json();
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let find = |name: &str| {
+            events
+                .iter()
+                .find(|e| e.get("name").unwrap().as_str() == Some(name))
+                .unwrap_or_else(|| panic!("missing event '{name}'"))
+        };
+        let recv = find("recv L1");
+        let comp = find("greedy L1");
+        let recv_end = recv.get("ts").unwrap().as_f64().unwrap()
+            + recv.get("dur").unwrap().as_f64().unwrap();
+        let comp_start = comp.get("ts").unwrap().as_f64().unwrap();
+        assert!((recv_end - comp_start).abs() < 1e-6, "{recv_end} vs {comp_start}");
+    }
+
+    #[test]
+    fn write_roundtrips_through_a_file() {
+        let path = std::env::temp_dir().join("greedyml_trace_test.json");
+        let path = path.to_str().unwrap().to_string();
+        sample().write(&path).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("traceEvents").unwrap().as_arr().unwrap().len(), 4);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn steps_are_preserved() {
+        let t = sample();
+        assert_eq!(t.steps().len(), 3);
+        assert_eq!(t.steps()[1].machine, 1);
+        assert_eq!(t.steps()[2].level, 1);
+    }
+}

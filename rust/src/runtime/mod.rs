@@ -8,16 +8,33 @@
 //! * [`kmedoid_pjrt`] / [`coverage_pjrt`] — drop-in [`crate::objective::Oracle`]
 //!   implementations backed by the kernels, interchangeable with the pure
 //!   Rust oracles everywhere (greedy, distributed runs, benches).
+//!
+//! Everything that touches the `xla` crate is gated behind the off-by-default
+//! `pjrt` cargo feature, so offline builds need no XLA toolchain.  Without
+//! the feature, [`stub`] provides API-compatible stand-ins whose
+//! `Engine::load` always fails — every PJRT-gated call site (CLI `--pjrt`,
+//! benches, e2e tests) already treats a failed load as "artifacts not
+//! available" and degrades to the pure-Rust oracles or a clean skip.
 
+#[cfg(feature = "pjrt")]
 pub mod coverage_pjrt;
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod kmedoid_pjrt;
 pub mod manifest;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
+#[cfg(feature = "pjrt")]
 pub use coverage_pjrt::KCoverPjrt;
+#[cfg(feature = "pjrt")]
 pub use engine::{literal_f32, literal_u32, Engine};
+#[cfg(feature = "pjrt")]
 pub use kmedoid_pjrt::KMedoidPjrt;
 pub use manifest::{Entry, Manifest, TensorSpec};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Engine, KCoverPjrt, KMedoidPjrt};
 
 /// Default artifact directory, overridable via `GREEDYML_ARTIFACTS`.
 pub fn artifact_dir() -> String {

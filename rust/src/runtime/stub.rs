@@ -1,0 +1,128 @@
+//! API-compatible stand-ins for the PJRT runtime, compiled when the `pjrt`
+//! cargo feature is off.
+//!
+//! The contract: [`Engine::load`] always fails with a clear message, and
+//! none of the types can be constructed (each holds an
+//! [`std::convert::Infallible`]), so the methods that would need a real
+//! engine are statically unreachable.  Call sites
+//! don't change between builds — benches and e2e tests already gate their
+//! PJRT sections on `Engine::load(..)` succeeding, and the coordinator's
+//! `backend = pjrt` path only runs with a loaded engine in hand.
+
+use super::manifest::{Entry, Manifest};
+use crate::data::{ItemsetCollection, VectorSet};
+use crate::objective::{GainState, Oracle};
+use crate::ElemId;
+use std::convert::Infallible;
+use std::sync::Arc;
+
+const NO_PJRT: &str = "built without the `pjrt` cargo feature; \
+                       rebuild with `cargo build --features pjrt` (requires the XLA toolchain)";
+
+/// Uninhabited stand-in for the artifact engine.
+pub struct Engine {
+    #[allow(dead_code)] // uninhabitedness is the point; never read
+    never: Infallible,
+}
+
+impl Engine {
+    /// Always fails: there is no PJRT client in this build.
+    pub fn load(dir: &str) -> crate::Result<Self> {
+        anyhow::bail!("cannot load artifacts from {dir}: {NO_PJRT}")
+    }
+
+    /// The manifest the artifacts were described by.
+    pub fn manifest(&self) -> &Manifest {
+        unreachable!("stub cannot be constructed (see `never` field)")
+    }
+
+    /// The artifact directory.
+    pub fn dir(&self) -> &str {
+        unreachable!("stub cannot be constructed (see `never` field)")
+    }
+
+    /// Entry lookup (validated names).
+    pub fn entry(&self, _name: &str) -> crate::Result<&Entry> {
+        unreachable!("stub cannot be constructed (see `never` field)")
+    }
+
+    /// PJRT platform name (reporting).
+    pub fn platform(&self) -> String {
+        unreachable!("stub cannot be constructed (see `never` field)")
+    }
+}
+
+/// Uninhabited stand-in for the PJRT k-cover oracle.
+pub struct KCoverPjrt {
+    #[allow(dead_code)]
+    never: Infallible,
+}
+
+impl KCoverPjrt {
+    /// Always fails in a non-`pjrt` build.
+    pub fn new(_data: Arc<ItemsetCollection>, _engine: Arc<Engine>) -> crate::Result<Self> {
+        anyhow::bail!("k-cover PJRT oracle unavailable: {NO_PJRT}")
+    }
+}
+
+impl Oracle for KCoverPjrt {
+    fn n(&self) -> usize {
+        unreachable!("stub cannot be constructed (see `never` field)")
+    }
+
+    fn name(&self) -> &'static str {
+        unreachable!("stub cannot be constructed (see `never` field)")
+    }
+
+    fn new_state<'a>(&'a self, _view: Option<&[ElemId]>) -> Box<dyn GainState + 'a> {
+        unreachable!("stub cannot be constructed (see `never` field)")
+    }
+
+    fn elem_bytes(&self, _e: ElemId) -> usize {
+        unreachable!("stub cannot be constructed (see `never` field)")
+    }
+}
+
+/// Uninhabited stand-in for the PJRT k-medoid oracle.
+pub struct KMedoidPjrt {
+    #[allow(dead_code)]
+    never: Infallible,
+}
+
+impl KMedoidPjrt {
+    /// Always fails in a non-`pjrt` build.
+    pub fn new(_data: Arc<VectorSet>, _engine: Arc<Engine>) -> crate::Result<Self> {
+        anyhow::bail!("k-medoid PJRT oracle unavailable: {NO_PJRT}")
+    }
+}
+
+impl Oracle for KMedoidPjrt {
+    fn n(&self) -> usize {
+        unreachable!("stub cannot be constructed (see `never` field)")
+    }
+
+    fn name(&self) -> &'static str {
+        unreachable!("stub cannot be constructed (see `never` field)")
+    }
+
+    fn new_state<'a>(&'a self, _view: Option<&[ElemId]>) -> Box<dyn GainState + 'a> {
+        unreachable!("stub cannot be constructed (see `never` field)")
+    }
+
+    fn elem_bytes(&self, _e: ElemId) -> usize {
+        unreachable!("stub cannot be constructed (see `never` field)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_load_reports_missing_feature() {
+        let err = Engine::load("artifacts").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("pjrt"), "{msg}");
+        assert!(msg.contains("artifacts"), "{msg}");
+    }
+}
