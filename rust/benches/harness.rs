@@ -73,6 +73,65 @@ pub fn geomean(xs: &[f64]) -> f64 {
     greedyml::util::stats::geomean(xs)
 }
 
+/// True when the given flag (e.g. `--json`, `--tiny`) was passed to the
+/// bench binary (`cargo bench --bench <name> -- --json`).
+pub fn flag(name: &str) -> bool {
+    std::env::args().any(|a| a == name)
+}
+
+/// Machine-readable bench output (the `--json` mode): one entry per
+/// measured point, written as `BENCH_<bench>.json` so the perf trajectory
+/// is diffable across PRs (EXPERIMENTS.md §Perf references these files).
+pub struct JsonReport {
+    bench: String,
+    entries: Vec<(String, BenchStat, Option<f64>)>,
+}
+
+impl JsonReport {
+    /// Start a report for the named bench.
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), entries: Vec::new() }
+    }
+
+    /// Record one measured point; `throughput` is items/second where the
+    /// bench has a natural unit (gains/s, rows/s), `None` otherwise.
+    pub fn record(&mut self, key: &str, stat: BenchStat, throughput: Option<f64>) {
+        self.entries.push((key.to_string(), stat, throughput));
+    }
+
+    /// Default output path for this bench (working directory).
+    pub fn default_path(&self) -> String {
+        format!("BENCH_{}.json", self.bench)
+    }
+
+    /// Write the report as deterministic pretty JSON.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        use greedyml::util::json::Json;
+        use std::collections::BTreeMap;
+        let mut entries = BTreeMap::new();
+        for (key, stat, thr) in &self.entries {
+            let mut obj = BTreeMap::new();
+            obj.insert("median_secs".to_string(), Json::Num(stat.median));
+            obj.insert("min_secs".to_string(), Json::Num(stat.min));
+            obj.insert("stddev_secs".to_string(), Json::Num(stat.stddev));
+            obj.insert("samples".to_string(), Json::Num(stat.samples as f64));
+            if let Some(t) = thr {
+                obj.insert("throughput_per_sec".to_string(), Json::Num(*t));
+            }
+            entries.insert(key.clone(), Json::Obj(obj));
+        }
+        let doc = Json::Obj(
+            [
+                ("bench".to_string(), Json::Str(self.bench.clone())),
+                ("entries".to_string(), Json::Obj(entries)),
+            ]
+            .into_iter()
+            .collect(),
+        );
+        std::fs::write(path, doc.to_pretty())
+    }
+}
+
 /// Check an observed/predicted ratio against a tolerance band and render a
 /// PASS/soft-FAIL marker (benches validate shape, not constants).
 pub fn shape_check(observed: f64, predicted: f64, tol_ratio: f64) -> &'static str {

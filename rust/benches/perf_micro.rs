@@ -1,95 +1,143 @@
 //! §Perf microbenchmarks: the hot paths identified in EXPERIMENTS.md §Perf.
 //!
-//!   P1. k-medoid CPU gain_batch       (dense float distance loop)
-//!   P2. coverage union_gain_sparse    (bitset probes)
-//!   P3. coverage union_gain (dense)   (word-wise popcount)
-//!   P4. lazy greedy end-to-end        (heap + dedup + gains)
-//!   P5. PJRT k-medoid gain_batch      (kernel-launch amortization)
+//!   P1.  k-medoid CPU gain_batch      (tiled norm-trick kernel, serial)
+//!   P1p. same scan fanned out         (par_gain_batch on the executor)
+//!   P1b. k-medoid commit path         (fused kernel + cached norms)
+//!   P2.  coverage union_gain_sparse   (bitset probes)
+//!   P3.  coverage union_gain (dense)  (word-wise popcount)
+//!   P4.  lazy greedy end-to-end       (heap + dedup + gains, threads = 1)
+//!   P4t. lazy greedy end-to-end       (threads = default_threads)
+//!   P5.  PJRT k-medoid gain_batch     (kernel-launch amortization)
 //!
 //! Run before/after every optimization; EXPERIMENTS.md §Perf records the
-//! iteration log.
+//! iteration log.  Flags: `--json` writes `BENCH_perf_micro.json`
+//! (machine-readable medians + throughputs), `--tiny` shrinks every size
+//! for the CI smoke invocation.
 
 #[path = "harness.rs"]
 mod harness;
 
 use greedyml::constraint::Cardinality;
 use greedyml::data::gen;
+use greedyml::dist::pool;
 use greedyml::greedy::greedy_lazy;
 use greedyml::objective::{KCover, KMedoid, Oracle};
 use greedyml::util::bitset::BitSet;
 use std::sync::Arc;
 
 fn main() {
-    // P1: k-medoid gains.
+    let tiny = harness::flag("--tiny");
+    let mut report = harness::JsonReport::new("perf_micro");
+
+    // P1: k-medoid gains through the tiled kernel.  (Tiny keeps ncand >
+    // GAIN_CHUNK so the P1p smoke still goes through the executor fan-out
+    // rather than the single-chunk serial fallback.)
+    let (n, dim, ncand) = if tiny { (256, 32, 128) } else { (2048, 128, 512) };
     let (vs, _) = gen::gaussian_mixture(
-        gen::GaussianParams { n: 2048, dim: 128, classes: 8, noise: 0.3 },
+        gen::GaussianParams { n, dim, classes: 8, noise: 0.3 },
         3,
     );
     let oracle = KMedoid::new(Arc::new(vs));
     let st = oracle.new_state(None);
-    let cands: Vec<u32> = (0..512).collect();
+    let cands: Vec<u32> = (0..ncand as u32).collect();
     let mut out = Vec::new();
     let s = harness::bench(1, 5, || st.gain_batch(&cands, &mut out));
     println!(
-        "P1 kmedoid cpu gain_batch (2048x128 view, 512 cands): {:.4}s median -> {:.0} gains/s",
+        "P1 kmedoid cpu gain_batch ({n}x{dim} view, {ncand} cands): {:.4}s median -> {:.0} gains/s",
         s.median,
-        512.0 / s.median
+        ncand as f64 / s.median
     );
-    // Commit path (mind update).
+    report.record("P1", s, Some(ncand as f64 / s.median));
+
+    // P1p: the same scan fanned out over the two-level executor.
+    let threads = pool::default_threads();
+    let s = pool::with_pool(threads, |_| {
+        harness::bench(1, 5, || pool::par_gain_batch(&*st, &cands, &mut out))
+    });
+    println!(
+        "P1p kmedoid par_gain_batch ({threads} threads): {:.4}s median -> {:.0} gains/s",
+        s.median,
+        ncand as f64 / s.median
+    );
+    report.record("P1p", s, Some(ncand as f64 / s.median));
+
+    // P1b: commit path (mind update, incl. state init).
+    let commits: Vec<u32> = (0..4).map(|i| (i * n as u32 / 4 + 1).min(n as u32 - 1)).collect();
     let s = harness::bench(1, 5, || {
         let mut st = oracle.new_state(None);
-        for e in [1u32, 500, 1000, 1500] {
+        for &e in &commits {
             st.commit(e);
         }
     });
     println!("P1b kmedoid commit x4 (incl. state init): {:.4}s median", s.median);
+    report.record("P1b", s, None);
 
     // P2/P3: coverage gains.
+    let (nsets, nitems) = if tiny { (3_000, 6_000) } else { (30_000, 60_000) };
     let data = Arc::new(gen::transactions(
-        gen::TransactionParams { num_sets: 30_000, num_items: 60_000, mean_size: 20.0, zipf_s: 0.9 },
+        gen::TransactionParams { num_sets: nsets, num_items: nitems, mean_size: 20.0, zipf_s: 0.9 },
         7,
     ));
     let cov = KCover::new(data.clone());
     let mut cst = cov.new_state(None);
-    for e in (0..30_000).step_by(100) {
+    for e in (0..nsets as u32).step_by(100) {
         cst.commit(e);
     }
-    let cands: Vec<u32> = (0..30_000).collect();
+    let cands: Vec<u32> = (0..nsets as u32).collect();
     let s = harness::bench(1, 5, || cst.gain_batch(&cands, &mut out));
     println!(
-        "P2 coverage gain_batch sparse (30k cands, avg delta 20): {:.4}s -> {:.1}M gains/s",
+        "P2 coverage gain_batch sparse ({nsets} cands, avg delta 20): {:.4}s -> {:.1}M gains/s",
         s.median,
-        30_000.0 / s.median / 1e6
+        nsets as f64 / s.median / 1e6
     );
-    let a = BitSet::from_iter(1 << 20, (0..1 << 20).step_by(3));
-    let b = BitSet::from_iter(1 << 20, (0..1 << 20).step_by(5));
+    report.record("P2", s, Some(nsets as f64 / s.median));
+
+    let bits = if tiny { 1 << 16 } else { 1 << 20 };
+    let a = BitSet::from_iter(bits, (0..bits).step_by(3));
+    let b = BitSet::from_iter(bits, (0..bits).step_by(5));
     let s = harness::bench(1, 20, || a.union_gain(&b));
     println!(
-        "P3 dense union_gain over 1M-bit universes: {:.6}s -> {:.1} GB/s word scan",
+        "P3 dense union_gain over {}-bit universes: {:.6}s -> {:.1} GB/s word scan",
+        bits,
         s.median,
-        (2.0 * (1 << 20) as f64 / 8.0) / s.median / 1e9
+        (2.0 * bits as f64 / 8.0) / s.median / 1e9
     );
+    report.record("P3", s, Some(bits as f64 / s.median));
 
-    // P4: lazy greedy end-to-end on coverage.
-    let c = Cardinality::new(100);
-    let s = harness::bench(1, 3, || greedy_lazy(&cov, &c, &cands, None));
-    println!("P4 lazy greedy (n=30k, k=100): {:.4}s median", s.median);
+    // P4/P4t: lazy greedy end-to-end on coverage, serial vs fanned out.
+    let k = if tiny { 16 } else { 100 };
+    let c = Cardinality::new(k);
+    let s = pool::with_pool(1, |_| harness::bench(1, 3, || greedy_lazy(&cov, &c, &cands, None)));
+    println!("P4 lazy greedy (n={nsets}, k={k}, threads=1): {:.4}s median", s.median);
+    report.record("P4", s, None);
+    let s = pool::with_pool(threads, |_| {
+        harness::bench(1, 3, || greedy_lazy(&cov, &c, &cands, None))
+    });
+    println!("P4t lazy greedy (n={nsets}, k={k}, threads={threads}): {:.4}s median", s.median);
+    report.record("P4t", s, None);
 
     // P5: PJRT kernel path.
     if let Ok(engine) = greedyml::runtime::Engine::load(&greedyml::runtime::artifact_dir()) {
         let (vs, _) = gen::gaussian_mixture(
-            gen::GaussianParams { n: 2048, dim: 128, classes: 8, noise: 0.3 },
+            gen::GaussianParams { n, dim, classes: 8, noise: 0.3 },
             3,
         );
         let pjrt =
             greedyml::runtime::KMedoidPjrt::new(Arc::new(vs), Arc::new(engine)).unwrap();
         let st = pjrt.new_state(None);
-        let cands: Vec<u32> = (0..512).collect();
+        let cands: Vec<u32> = (0..ncand as u32).collect();
         let s = harness::bench(1, 5, || st.gain_batch(&cands, &mut out));
         println!(
-            "P5 kmedoid pjrt gain_batch (2048x128, 512 cands): {:.4}s -> {:.0} gains/s",
+            "P5 kmedoid pjrt gain_batch ({n}x{dim}, {ncand} cands): {:.4}s -> {:.0} gains/s",
             s.median,
-            512.0 / s.median
+            ncand as f64 / s.median
         );
+        report.record("P5", s, Some(ncand as f64 / s.median));
+    }
+
+    if harness::flag("--json") {
+        let path = report.default_path();
+        report.write(&path).expect("write bench JSON");
+        println!("wrote {path}");
     }
 }

@@ -28,6 +28,7 @@ pub fn run_greedi(
         added_elements: 0,
         compare_all_children: true,
         comm: Default::default(),
+        threads: None,
     };
     run_dist(oracle, constraint, &cfg)
 }

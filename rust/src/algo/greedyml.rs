@@ -12,7 +12,8 @@
 
 use super::{DistConfig, DistOutcome, LevelStats, PartitionScheme};
 use crate::constraint::Constraint;
-use crate::dist::{parallel_map, DistError, MachineStats, MemoryMeter, NodeStep, Trace};
+use crate::dist::pool;
+use crate::dist::{DistError, Executor, MachineStats, MemoryMeter, NodeStep, Trace};
 use crate::greedy::{greedy, GreedyOutcome};
 use crate::objective::Oracle;
 use crate::util::rng::{RandomTape, Rng};
@@ -57,7 +58,23 @@ pub fn run_greedyml(
 }
 
 /// The shared engine (see module docs). Public so the baselines reuse it.
+///
+/// Spawns the two-level executor once for the whole run (workers persist
+/// across supersteps) and tears it down on return; `cfg.threads` /
+/// `GREEDYML_THREADS` control its width, and `threads = 1` reproduces the
+/// serial runtime bit-for-bit.
 pub fn run_dist(
+    oracle: &dyn Oracle,
+    constraint: &dyn Constraint,
+    cfg: &DistConfig,
+) -> Result<DistOutcome, DistError> {
+    let threads = cfg.threads.unwrap_or_else(pool::default_threads).max(1);
+    pool::with_pool(threads, |exec| run_dist_on(exec, oracle, constraint, cfg))
+}
+
+/// One distributed run on an already-running executor.
+fn run_dist_on(
+    exec: &Executor<'_>,
     oracle: &dyn Oracle,
     constraint: &dyn Constraint,
     cfg: &DistConfig,
@@ -84,7 +101,7 @@ pub fn run_dist(
     let leaf_inputs: Vec<(MachineId, Vec<ElemId>)> =
         parts.into_iter().enumerate().map(|(i, p)| (i as MachineId, p)).collect();
     let leaf_results: Vec<Result<(NodeCtx, StepDelta), DistError>> =
-        parallel_map(leaf_inputs, |(id, part)| {
+        exec.map(leaf_inputs, |(id, part)| {
             let mut stats = MachineStats::new(id);
             let mut meter = MemoryMeter::new(cfg.mem_limit);
             let data_bytes: u64 = part.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
@@ -153,8 +170,9 @@ pub fn run_dist(
                     continue; // j = 0: the node's own S_prev stays in ctx.
                 }
                 let mut child = ctxs[c as usize].take().expect("child ctx missing");
-                let bytes: u64 =
-                    child.sol.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
+                // `sol_bytes` already tracks Σ elem_bytes over the held
+                // solution (charged at every level swap) — no rescan.
+                let bytes = child.sol_bytes;
                 child.stats.bytes_sent += bytes;
                 // Child is done (Algorithm 3.1 lines 6-7: send & break).
                 children.push(ChildMsg { sol: std::mem::take(&mut child.sol), value: child.sol_value, bytes });
@@ -164,7 +182,7 @@ pub fn run_dist(
         }
 
         let results: Vec<Result<(NodeCtx, StepDelta), DistError>> =
-            parallel_map(tasks, |mut task| {
+            exec.map(tasks, |mut task| {
                 let id = task.id;
                 let ctx = &mut task.ctx;
                 // Receive child solutions: comm model + memory charges.
@@ -236,12 +254,17 @@ pub fn run_dist(
                 }
                 if cfg.compare_all_children {
                     // RandGreeDI (Algorithm 2.2 line 7): also compare every
-                    // child's local solution.
+                    // child's local solution.  Only the argmax winner is
+                    // cloned — b can be as large as m.
+                    let mut winner: Option<&ChildMsg> = None;
                     for c in &task.children {
                         if c.value > best_val {
                             best_val = c.value;
-                            best_sol = c.sol.clone();
+                            winner = Some(c);
                         }
+                    }
+                    if let Some(c) = winner {
+                        best_sol = c.sol.clone();
                     }
                 }
 

@@ -63,6 +63,11 @@ pub struct DistConfig {
     pub compare_all_children: bool,
     /// Communication cost model.
     pub comm: CommModel,
+    /// Worker threads of the two-level executor serving the run (`None` =
+    /// the `GREEDYML_THREADS` environment variable, else all cores).
+    /// Results are bit-identical across thread counts; `Some(1)` runs the
+    /// whole simulation serially on the calling thread.
+    pub threads: Option<usize>,
 }
 
 impl DistConfig {
@@ -78,6 +83,7 @@ impl DistConfig {
             added_elements: 0,
             compare_all_children: false,
             comm: CommModel::default(),
+            threads: None,
         }
     }
 }

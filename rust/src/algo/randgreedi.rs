@@ -55,6 +55,7 @@ impl RandGreediOpts {
             added_elements: self.added_elements,
             compare_all_children: true,
             comm: Default::default(),
+            threads: None,
         }
     }
 }

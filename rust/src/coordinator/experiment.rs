@@ -84,6 +84,8 @@ pub struct Experiment {
     pub local_view: bool,
     /// §6.4 added elements per accumulation.
     pub added_elements: usize,
+    /// Executor width (`run.threads`; 0 or absent = auto).
+    pub threads: Option<usize>,
 }
 
 impl Experiment {
@@ -124,6 +126,10 @@ impl Experiment {
             mem_limit,
             local_view: cfg.bool_or("run.local_view", false)?,
             added_elements: cfg.u64_or("run.added", 0)? as usize,
+            threads: match cfg.u64_or("run.threads", 0)? {
+                0 => None,
+                t => Some(t as usize),
+            },
         })
     }
 
@@ -183,6 +189,7 @@ impl Experiment {
                         mem_limit: self.mem_limit,
                         local_view: self.local_view,
                         added_elements: self.added_elements,
+                        threads: self.threads,
                         ..DistConfig::greedyml(tree, self.seed)
                     };
                     run_greedyml(oracle, self.constraint.as_ref(), &cfg)

@@ -4,10 +4,12 @@
 //! on one process by giving each *simulated machine* the resources the
 //! paper accounts for, so every §5/§6 measurement has a faithful source:
 //!
-//! * [`parallel_map`] — the BSP superstep executor: order-preserving
-//!   thread-pool fan-out of per-machine tasks (one closure call per
-//!   machine, results returned in machine order so runs are deterministic
-//!   regardless of scheduling).
+//! * [`pool`] — the two-level parallel execution subsystem: a persistent
+//!   work-stealing pool spawned once per run ([`pool::with_pool`]), the
+//!   order-preserving superstep fan-out ([`Executor::map`] /
+//!   [`parallel_map`]), and the deterministic intra-task gain-scan fan-out
+//!   ([`pool::par_gain_batch`]) that lets the single active accumulation
+//!   node borrow the idle cores of its retired siblings.
 //! * [`MemoryMeter`] — per-machine memory accounting with a hard limit;
 //!   a charge that would exceed [`DistConfig::mem_limit`] aborts the run
 //!   with [`DistError::OutOfMemory`], reproducing §6.2's "cannot even hold
@@ -32,6 +34,6 @@ pub mod trace;
 pub use comm::CommModel;
 pub use error::DistError;
 pub use memory::MemoryMeter;
-pub use pool::parallel_map;
+pub use pool::{parallel_map, Executor};
 pub use stats::MachineStats;
 pub use trace::{NodeStep, Trace};

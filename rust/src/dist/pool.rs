@@ -1,60 +1,362 @@
-//! The BSP superstep executor.
+//! The two-level parallel execution subsystem.
 //!
-//! [`parallel_map`] fans a vector of per-machine tasks out over OS threads
-//! and returns the results *in input order*, so a distributed run is
-//! bit-deterministic no matter how the scheduler interleaves machines —
-//! the property the `deterministic_given_seed` tests rely on.  Errors are
+//! **Level one — machines.** [`Executor::map`] fans a vector of per-machine
+//! tasks out over a pool of workers spawned once per distributed run
+//! ([`with_pool`]), and returns the results *in input order*, so a run is
+//! bit-deterministic no matter how the scheduler interleaves machines — the
+//! property the `deterministic_given_seed` tests rely on.  Errors are
 //! ordinary values: the algorithm layer maps each task to a
 //! `Result<_, DistError>` and inspects the slots afterwards, which lets an
 //! OOM on one machine surface without tearing down the others mid-step
 //! (they finish their superstep first, like real BSP ranks would).
 //!
-//! Threads are scoped (`std::thread::scope`), so the closure may borrow
-//! the oracle, constraint and config from the caller's stack; a panic in
-//! any worker propagates to the caller on join.
+//! **Level two — gain scans.** The paper's accumulation tree starves the
+//! machine level of parallelism: at level ℓ ≥ 1 only `m/b^ℓ` nodes are
+//! active and at the root exactly one, so per-machine threads leave almost
+//! every core idle during the upper supersteps (§1, §4).  A task may
+//! therefore fan its *own* gain scan back out over the free workers through
+//! [`par_gain_batch`]: candidates are split into fixed [`GAIN_CHUNK`]-sized
+//! chunks, evaluated wherever a worker is free, and merged in chunk order.
+//! Chunk boundaries depend only on the candidate list — never on the thread
+//! count — and each chunk's gains are pure per-candidate functions of the
+//! shared state, so the merged vector is bit-identical from `threads = 1`
+//! to `threads = cores`.
+//!
+//! Workers are scoped (`std::thread::scope`), so tasks may borrow the
+//! oracle, constraint and config from the caller's stack; a panic in any
+//! task is captured and re-raised on the thread that submitted the batch.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use crate::objective::GainState;
+use crate::ElemId;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
-/// Apply `f` to every item on a pool of up to `available_parallelism`
-/// threads; the result vector preserves input order.
+/// Candidates per level-two chunk of [`par_gain_batch`].  Fixed (never
+/// derived from the thread count) so gain vectors merge identically however
+/// many workers participate; 64 candidates keep a chunk's rows around the
+/// size of one k-medoid view tile, so nested chunking preserves the cache
+/// blocking of the tiled kernel.
+pub const GAIN_CHUNK: usize = 64;
+
+/// Default worker count: the `GREEDYML_THREADS` environment variable when
+/// set to a positive integer, otherwise `available_parallelism`.
+pub fn default_threads() -> usize {
+    match std::env::var("GREEDYML_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+    {
+        Some(t) if t >= 1 => t,
+        _ => std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+    }
+}
+
+/// One type-erased batch of independent, index-addressed tasks.
+///
+/// `data` points into the submitting thread's stack frame; it is only ever
+/// dereferenced through `run` for claimed indices `i < total`, and the
+/// submitter blocks inside [`execute`] until `done == total`, so the
+/// pointee strictly outlives every dereference.
+struct Job {
+    run: unsafe fn(*const (), usize),
+    data: *const (),
+    /// Submission order; a waiting submitter only helps jobs younger than
+    /// its own, which bounds help-recursion to the nesting depth.
+    id: usize,
+    cursor: AtomicUsize,
+    done: AtomicUsize,
+    total: usize,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+// SAFETY: see the `data` invariant above — the raw pointer never outlives
+// the submitter's stack frame, and all result hand-off goes through slot
+// mutexes inside the pointee.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+/// Pool state shared between the owning thread and its workers.
+struct Shared {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    /// Signaled on: job pushed, job fully done, shutdown.
+    cv: Condvar,
+    shutdown: AtomicBool,
+    next_id: AtomicUsize,
+    threads: usize,
+}
+
+impl Shared {
+    fn new(threads: usize) -> Self {
+        Self {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            next_id: AtomicUsize::new(0),
+            threads,
+        }
+    }
+}
+
+/// Handle to the pool serving the current region of code.
+pub struct Executor<'a> {
+    shared: &'a Shared,
+}
+
+thread_local! {
+    /// The pool whose workers serve this thread (installed by [`with_pool`]
+    /// on the owning thread and by each worker at startup), so nested code
+    /// can find idle capacity without threading a handle through every
+    /// signature.
+    static CURRENT: std::cell::Cell<Option<*const Shared>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// RAII registration of a pool in [`CURRENT`]; restores the previous value
+/// on drop so nested pools shadow cleanly even across unwinds.
+struct Registration {
+    prev: Option<*const Shared>,
+}
+
+impl Registration {
+    fn enter(shared: &Shared) -> Registration {
+        let prev = CURRENT.with(|c| c.replace(Some(shared as *const Shared)));
+        Registration { prev }
+    }
+}
+
+impl Drop for Registration {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        CURRENT.with(|c| c.set(prev));
+    }
+}
+
+/// Sets `shutdown` and wakes every worker on drop — including during a
+/// panic unwind of the pool-owning closure, so `thread::scope` can join.
+struct ShutdownGuard<'a>(&'a Shared);
+
+impl Drop for ShutdownGuard<'_> {
+    fn drop(&mut self) {
+        self.0.shutdown.store(true, Ordering::SeqCst);
+        let _q = self.0.queue.lock().unwrap();
+        self.0.cv.notify_all();
+    }
+}
+
+/// Run `f` with a persistent pool of `threads` workers (the calling thread
+/// counts as one).  Workers are spawned once — every [`Executor::map`] and
+/// [`par_gain_batch`] inside `f` reuses them instead of paying per-superstep
+/// spawn/join.  `threads = 1` spawns nothing and runs everything serially on
+/// the caller, bit-for-bit the single-threaded runtime.
+pub fn with_pool<R>(threads: usize, f: impl FnOnce(&Executor<'_>) -> R) -> R {
+    let threads = threads.max(1);
+    let shared = Shared::new(threads);
+    if threads == 1 {
+        // Still register: nested primitives must see `threads() == 1` and
+        // stay serial instead of spawning a pool of their own.
+        let _cur = Registration::enter(&shared);
+        return f(&Executor { shared: &shared });
+    }
+    std::thread::scope(|scope| {
+        for _ in 0..threads - 1 {
+            scope.spawn(|| worker(&shared));
+        }
+        let _stop = ShutdownGuard(&shared);
+        let _cur = Registration::enter(&shared);
+        f(&Executor { shared: &shared })
+    })
+}
+
+/// Look up the pool registered for the current thread, if any.
+pub fn with_executor<R>(f: impl FnOnce(Option<&Executor<'_>>) -> R) -> R {
+    match CURRENT.with(|c| c.get()) {
+        // SAFETY: the pointer was installed by a `Registration` whose
+        // `Shared` outlives every thread that can observe it (workers are
+        // scoped to `with_pool`, and the guard resets the slot on exit).
+        Some(p) => f(Some(&Executor { shared: unsafe { &*p } })),
+        None => f(None),
+    }
+}
+
+/// Apply `f` to every item on an ad-hoc pool; the result vector preserves
+/// input order.  Reuses the surrounding [`with_pool`] workers when one is
+/// active, otherwise spins up a [`default_threads`]-sized pool for this one
+/// call (the pre-executor behaviour, kept for standalone callers).
 pub fn parallel_map<T, U, F>(items: Vec<T>, f: F) -> Vec<U>
 where
     T: Send,
     U: Send,
     F: Fn(T) -> U + Sync,
 {
-    let n = items.len();
-    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(n);
-    if threads <= 1 {
-        return items.into_iter().map(f).collect();
+    with_executor(|cur| match cur {
+        Some(exec) => exec.map(items, &f),
+        None => {
+            let threads = default_threads().min(items.len().max(1));
+            with_pool(threads, |exec| exec.map(items, &f))
+        }
+    })
+}
+
+/// Batched marginal gains with level-two fan-out: fixed [`GAIN_CHUNK`]
+/// chunking of `es` across free pool workers, merged in chunk order.  Falls
+/// back to the state's own (possibly tiled) `gain_batch` when no pool is
+/// registered, the pool is serial, the batch is a single chunk, or the
+/// state opts out of splitting (`parallel_scan` — the PJRT states keep
+/// whole batches for kernel-launch amortization).  The output is
+/// bit-identical across all of those paths: chunk boundaries are fixed and
+/// each candidate's gain is a pure function of the shared state.
+pub fn par_gain_batch(state: &dyn GainState, es: &[ElemId], out: &mut Vec<f64>) {
+    with_executor(|cur| match cur {
+        Some(exec) if exec.threads() > 1 && es.len() > GAIN_CHUNK && state.parallel_scan() => {
+            let chunks: Vec<&[ElemId]> = es.chunks(GAIN_CHUNK).collect();
+            let per_chunk: Vec<Vec<f64>> = exec.map(chunks, |chunk| {
+                let mut g = Vec::with_capacity(chunk.len());
+                state.gain_batch(chunk, &mut g);
+                g
+            });
+            out.clear();
+            out.reserve(es.len());
+            for g in per_chunk {
+                out.extend(g);
+            }
+        }
+        _ => state.gain_batch(es, out),
+    })
+}
+
+impl Executor<'_> {
+    /// Worker count of this pool (including the owning thread).
+    pub fn threads(&self) -> usize {
+        self.shared.threads
     }
 
-    // Work-stealing by atomic cursor: each worker claims the next unclaimed
-    // index, takes its input and writes its result slot.  Slot mutexes are
-    // uncontended (one owner each); the cursor is the only shared point.
-    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
-    let results: Vec<Mutex<Option<U>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    let cursor = AtomicUsize::new(0);
-
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let item = slots[i].lock().unwrap().take().expect("task claimed twice");
-                let out = f(item);
-                *results[i].lock().unwrap() = Some(out);
-            });
+    /// Apply `f` to every item across the pool; results in input order.
+    /// Callable from the owning thread *or* from inside a task (nested
+    /// batches interleave with outer ones on whatever workers are free).
+    pub fn map<T, U, F>(&self, items: Vec<T>, f: F) -> Vec<U>
+    where
+        T: Send,
+        U: Send,
+        F: Fn(T) -> U + Sync,
+    {
+        let n = items.len();
+        if self.threads() == 1 || n <= 1 {
+            return items.into_iter().map(f).collect();
         }
-    });
 
-    results
-        .into_iter()
-        .map(|slot| slot.into_inner().unwrap().expect("worker skipped a task"))
-        .collect()
+        // Slot mutexes are uncontended (each index has one owner at a
+        // time); the claim cursor in the Job is the only shared point.
+        struct MapTask<T, U, F> {
+            slots: Vec<Mutex<Option<T>>>,
+            results: Vec<Mutex<Option<U>>>,
+            f: F,
+        }
+
+        unsafe fn run_one<T, U, F: Fn(T) -> U>(data: *const (), i: usize) {
+            let task = &*(data as *const MapTask<T, U, F>);
+            let item = task.slots[i].lock().unwrap().take().expect("task claimed twice");
+            let out = (task.f)(item);
+            *task.results[i].lock().unwrap() = Some(out);
+        }
+
+        let task = MapTask {
+            slots: items.into_iter().map(|t| Mutex::new(Some(t))).collect(),
+            results: (0..n).map(|_| Mutex::new(None)).collect(),
+            f,
+        };
+        let job = Arc::new(Job {
+            run: run_one::<T, U, F>,
+            data: &task as *const MapTask<T, U, F> as *const (),
+            id: self.shared.next_id.fetch_add(1, Ordering::Relaxed),
+            cursor: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            total: n,
+            panic: Mutex::new(None),
+        });
+        execute(self.shared, &job);
+
+        task.results
+            .into_iter()
+            .map(|slot| slot.into_inner().unwrap().expect("worker skipped a task"))
+            .collect()
+    }
+}
+
+/// Claim-and-run loop: drain whatever indices of `job` are still unclaimed.
+/// Panics inside a task are captured into the job (the submitter re-raises
+/// them), so worker threads themselves never die.
+fn run_available(shared: &Shared, job: &Job) {
+    loop {
+        let i = job.cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= job.total {
+            return;
+        }
+        let res = catch_unwind(AssertUnwindSafe(|| unsafe { (job.run)(job.data, i) }));
+        if let Err(payload) = res {
+            *job.panic.lock().unwrap() = Some(payload);
+        }
+        if job.done.fetch_add(1, Ordering::AcqRel) + 1 == job.total {
+            // Completion may unblock a submitter; the lock makes the
+            // notify race-free against its check-then-wait.
+            let _q = shared.queue.lock().unwrap();
+            shared.cv.notify_all();
+        }
+    }
+}
+
+/// Submit a job, help run it, and while stragglers finish help any *younger*
+/// queued job (nested gain scans submitted by still-running tasks) — the
+/// submitter never idles while the pool has work.
+fn execute(shared: &Shared, job: &Arc<Job>) {
+    if job.total == 0 {
+        return;
+    }
+    {
+        let mut q = shared.queue.lock().unwrap();
+        q.push_back(job.clone());
+        shared.cv.notify_all();
+    }
+    run_available(shared, job);
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        if job.done.load(Ordering::Acquire) >= job.total {
+            break;
+        }
+        q.retain(|j| j.cursor.load(Ordering::Relaxed) < j.total);
+        let younger = q.iter().find(|j| j.id > job.id).cloned();
+        match younger {
+            Some(other) => {
+                drop(q);
+                run_available(shared, &other);
+                q = shared.queue.lock().unwrap();
+            }
+            None => q = shared.cv.wait(q).unwrap(),
+        }
+    }
+    drop(q);
+    if let Some(payload) = job.panic.lock().unwrap().take() {
+        resume_unwind(payload);
+    }
+}
+
+/// Worker thread body: serve any queued job until shutdown.
+fn worker(shared: &Shared) {
+    let _cur = Registration::enter(shared);
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        q.retain(|j| j.cursor.load(Ordering::Relaxed) < j.total);
+        if let Some(job) = q.front().cloned() {
+            drop(q);
+            run_available(shared, &job);
+            q = shared.queue.lock().unwrap();
+            continue;
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        q = shared.cv.wait(q).unwrap();
+    }
 }
 
 #[cfg(test)]
@@ -117,5 +419,77 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    fn pool_persists_across_maps() {
+        with_pool(4, |exec| {
+            assert_eq!(exec.threads(), 4);
+            for round in 0..20u64 {
+                let out = exec.map((0..33u64).collect(), |i| i + round);
+                assert_eq!(out, (0..33).map(|i| i + round).collect::<Vec<_>>());
+            }
+        });
+    }
+
+    #[test]
+    fn nested_map_fans_out_from_inside_a_task() {
+        // Level-one tasks each run a level-two batch; the inner batches are
+        // served by whatever workers the outer batch left idle.
+        let out = with_pool(4, |exec| {
+            exec.map((0..6u64).collect(), |outer| {
+                with_executor(|cur| {
+                    let inner = cur.expect("worker registers pool").map(
+                        (0..50u64).collect::<Vec<_>>(),
+                        |i| i * outer,
+                    );
+                    inner.iter().sum::<u64>()
+                })
+            })
+        });
+        let want: Vec<u64> = (0..6).map(|o| (0..50).sum::<u64>() * o).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn serial_pool_registers_but_spawns_nothing() {
+        with_pool(1, |exec| {
+            assert_eq!(exec.threads(), 1);
+            with_executor(|cur| assert_eq!(cur.expect("registered").threads(), 1));
+            let out = exec.map(vec![1, 2, 3], |x| x * 10);
+            assert_eq!(out, vec![10, 20, 30]);
+        });
+        with_executor(|cur| assert!(cur.is_none(), "registration must not leak"));
+    }
+
+    #[test]
+    fn parallel_map_reuses_surrounding_pool() {
+        with_pool(3, |_| {
+            let out = parallel_map((0..40u32).collect(), |i| i + 1);
+            assert_eq!(out, (1..41).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_batch() {
+        with_pool(4, |exec| {
+            let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                exec.map(vec![0u32, 1, 2], |i| {
+                    if i == 1 {
+                        panic!("task failure");
+                    }
+                    i
+                })
+            }));
+            assert!(res.is_err(), "panic must propagate to the submitter");
+            // The pool is still serviceable afterwards.
+            let out = exec.map(vec![5u32, 6], |x| x * 2);
+            assert_eq!(out, vec![10, 12]);
+        });
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
     }
 }

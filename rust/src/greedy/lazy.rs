@@ -9,9 +9,13 @@
 //! in the critical path" metric is dominated by the *first* full scan of a
 //! node's input.
 //!
-//! The initial scan is issued through [`GainState::gain_batch`] so the
-//! PJRT-accelerated k-medoid oracle can evaluate whole candidate tiles in
-//! one executable launch.
+//! The initial scan is issued through [`crate::dist::pool::par_gain_batch`]:
+//! tiled oracles (CPU k-medoid, PJRT) evaluate whole candidate tiles per
+//! call, and when a [`crate::dist::pool::with_pool`] executor is active the
+//! scan additionally fans out over idle workers — exactly the scan that
+//! dominates the accumulation node's critical path (§5).  `calls`/`cost`
+//! accounting is computed from the candidate list itself, so it is
+//! identical however the scan was executed.
 
 use super::{dedup_candidates, GreedyOutcome};
 use crate::constraint::Constraint;
@@ -63,9 +67,9 @@ pub fn greedy_lazy(
     let mut calls = 0u64;
     let mut cost = 0u64;
 
-    // Initial full scan (batched).
+    // Initial full scan (batched; fans out over idle executor workers).
     let mut gains = Vec::with_capacity(candidates.len());
-    state.gain_batch(&candidates, &mut gains);
+    crate::dist::pool::par_gain_batch(&*state, &candidates, &mut gains);
     calls += candidates.len() as u64;
     cost += candidates.iter().map(|&e| state.call_cost(e)).sum::<u64>();
     let mut heap: BinaryHeap<Entry> = candidates

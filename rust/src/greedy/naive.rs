@@ -36,8 +36,9 @@ pub fn greedy_naive(
         if feasible.is_empty() {
             break;
         }
-        // e' ← argmax f(S ∪ {e}); batched so accelerated oracles can tile.
-        state.gain_batch(&feasible, &mut gains);
+        // e' ← argmax f(S ∪ {e}); batched so accelerated oracles can tile
+        // and an active executor can fan the round's scan over idle cores.
+        crate::dist::pool::par_gain_batch(&*state, &feasible, &mut gains);
         calls += feasible.len() as u64;
         cost += feasible.iter().map(|&e| state.call_cost(e)).sum::<u64>();
         let mut best = 0usize;

@@ -60,7 +60,7 @@ pub fn greedy_stochastic(
             continue;
         }
         let sample: Vec<ElemId> = sample_idx.iter().map(|&i| pool[i]).collect();
-        state.gain_batch(&sample, &mut gains);
+        crate::dist::pool::par_gain_batch(&*state, &sample, &mut gains);
         calls += sample.len() as u64;
         cost += sample.iter().map(|&e| state.call_cost(e)).sum::<u64>();
         let mut best = 0usize;
@@ -75,7 +75,7 @@ pub fn greedy_stochastic(
             // feasibility-pruned scan once to decide (same as the paper's
             // termination handling).
             pool.retain(|&e| cstate.can_add(e));
-            state.gain_batch(&pool, &mut gains);
+            crate::dist::pool::par_gain_batch(&*state, &pool, &mut gains);
             calls += pool.len() as u64;
             cost += pool.iter().map(|&e| state.call_cost(e)).sum::<u64>();
             match gains

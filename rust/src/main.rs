@@ -90,6 +90,7 @@ fn cmd_run(args: &Args) -> greedyml::Result<()> {
                 local_view: exp.local_view,
                 added_elements: exp.added_elements,
                 compare_all_children: all,
+                threads: exp.threads,
                 ..greedyml::algo::DistConfig::greedyml(AccumulationTree::new(m, b), exp.seed)
             };
             let out = greedyml::algo::run_dist(

@@ -13,13 +13,22 @@
 //! Per-call cost is `n'·δ` (δ = dim): each gain query scans the view and
 //! computes one distance per element — this is the compute-intensive
 //! objective the paper accelerates least well at the root (km images
-//! accumulate there), and the one our Pallas/PJRT kernel accelerates
-//! (`runtime::kmedoid_pjrt`).
+//! accumulate there).  The CPU state therefore overrides `gain_batch` with
+//! a cache-blocked tile kernel (§Perf P6): distances via the norm trick
+//! `‖u−v‖² = ‖u‖² + ‖v‖² − 2·u·v` over precomputed row norms, candidate
+//! register-blocking through [`crate::data::vectors::dot4_fast`], and the
+//! existing `mind` sqrt-elision pruning.  The Pallas/PJRT kernel
+//! (`runtime::kmedoid_pjrt`) is the accelerator-side counterpart.
 
 use super::{GainState, Oracle};
-use crate::data::vectors::VectorSet;
+use crate::data::vectors::{dot4_fast, dot_fast, VectorSet};
 use crate::ElemId;
 use std::sync::Arc;
+
+/// View rows per cache tile of the blocked gain kernel (§Perf P6): at the
+/// paper's δ = 128 a tile is 64 × 128 × 4 B = 32 KB of X rows, small enough
+/// to stay L1/L2-hot across the whole candidate slice.
+const VIEW_TILE: usize = 64;
 
 /// k-medoid oracle over a vector set.
 #[derive(Clone)]
@@ -37,11 +46,6 @@ impl KMedoid {
     pub fn data(&self) -> &Arc<VectorSet> {
         &self.data
     }
-
-    /// Distance to the auxiliary element e₀ (all zeros) = L2 norm.
-    fn d0(&self, i: usize) -> f64 {
-        self.data.row(i).iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
-    }
 }
 
 impl Oracle for KMedoid {
@@ -58,11 +62,14 @@ impl Oracle for KMedoid {
             Some(v) => v.to_vec(),
             None => (0..self.data.len() as ElemId).collect(),
         };
-        // mind_i starts at d(i, e0): the loss of the {e0}-only solution.
-        let mind: Vec<f64> = view.iter().map(|&i| self.d0(i as usize)).collect();
+        let norms = self.data.norms_sq();
+        // mind_i starts at d(i, e0) = ‖x_i‖: the loss of the {e0}-only
+        // solution (e0 is the all-zeros auxiliary element).
+        let mind: Vec<f64> = view.iter().map(|&i| norms[i as usize].sqrt()).collect();
         let base_loss_sum: f64 = mind.iter().sum();
         Box::new(KMedoidState {
             oracle: self,
+            norms,
             view,
             mind,
             base_loss_sum,
@@ -77,6 +84,8 @@ impl Oracle for KMedoid {
 
 struct KMedoidState<'a> {
     oracle: &'a KMedoid,
+    /// Cached ‖x_i‖² for every row (norm-trick kernel input).
+    norms: &'a [f64],
     view: Vec<ElemId>,
     /// Current min distance of each view element to S ∪ {e₀}.
     mind: Vec<f64>,
@@ -90,6 +99,93 @@ impl KMedoidState<'_> {
     fn nv(&self) -> f64 {
         self.view.len().max(1) as f64
     }
+
+    /// Norm-trick squared distance: ‖x − c‖² = ‖x‖² + ‖c‖² − 2·x·c, clamped
+    /// at zero (f32 cancellation can go a hair negative for coincident
+    /// points, and sqrt of that would be NaN).
+    #[inline]
+    fn d2(ni: f64, cn: f64, dot: f64) -> f64 {
+        (ni + cn - 2.0 * dot).max(0.0)
+    }
+
+    /// §Perf P6 core: add each candidate's un-normalized gain
+    /// Σ_i max(0, mind_i − d(i, c)) into `acc`.
+    ///
+    /// Blocking: view tiles outer so a 32 KB block of X rows stays cache-hot
+    /// across the whole candidate slice, candidates register-blocked in
+    /// fours inside ([`dot4_fast`] reuses each X element across the four).
+    /// Per candidate, view elements accumulate in index order with one f64
+    /// accumulator per (candidate, tile) — the order depends only on the
+    /// view, never on chunking or thread count, and the per-candidate lane
+    /// math of `dot4_fast` equals `dot_fast`, so every path through this
+    /// kernel (single gain, serial batch, executor-chunked batch) is
+    /// bit-identical.
+    fn accumulate_gains(&self, es: &[ElemId], acc: &mut [f64]) {
+        debug_assert_eq!(es.len(), acc.len());
+        let data = &self.oracle.data;
+        let norms = self.norms;
+        let nview = self.view.len();
+        let mut t = 0;
+        while t < nview {
+            let tend = (t + VIEW_TILE).min(nview);
+            let mut c = 0;
+            while c + 4 <= es.len() {
+                let (e0, e1, e2, e3) = (es[c], es[c + 1], es[c + 2], es[c + 3]);
+                let r0 = data.row(e0 as usize);
+                let r1 = data.row(e1 as usize);
+                let r2 = data.row(e2 as usize);
+                let r3 = data.row(e3 as usize);
+                let cn = [
+                    norms[e0 as usize],
+                    norms[e1 as usize],
+                    norms[e2 as usize],
+                    norms[e3 as usize],
+                ];
+                let mut s = [0.0f64; 4];
+                for idx in t..tend {
+                    let m = self.mind[idx];
+                    if m <= 0.0 {
+                        continue;
+                    }
+                    let i = self.view[idx] as usize;
+                    let x = data.row(i);
+                    let ni = norms[i];
+                    let dots = dot4_fast(x, r0, r1, r2, r3);
+                    let mm = m * m;
+                    for j in 0..4 {
+                        let d2 = Self::d2(ni, cn[j], dots[j]);
+                        if d2 < mm {
+                            s[j] += m - d2.sqrt();
+                        }
+                    }
+                }
+                for j in 0..4 {
+                    acc[c + j] += s[j];
+                }
+                c += 4;
+            }
+            while c < es.len() {
+                let e = es[c] as usize;
+                let cand = data.row(e);
+                let cn = norms[e];
+                let mut s = 0.0f64;
+                for idx in t..tend {
+                    let m = self.mind[idx];
+                    if m <= 0.0 {
+                        continue;
+                    }
+                    let i = self.view[idx] as usize;
+                    let d2 = Self::d2(norms[i], cn, dot_fast(data.row(i), cand));
+                    if d2 < m * m {
+                        s += m - d2.sqrt();
+                    }
+                }
+                acc[c] += s;
+                c += 1;
+            }
+            t = tend;
+        }
+    }
 }
 
 impl GainState for KMedoidState<'_> {
@@ -99,31 +195,33 @@ impl GainState for KMedoidState<'_> {
     }
 
     fn gain(&self, e: ElemId) -> f64 {
-        // §Perf P1: lane-parallel f32 distance (dist_sq_fast) plus sqrt
-        // elision — once mind has shrunk, most candidates fail the
-        // d² < mind² test and never pay the sqrt.
-        let data = &self.oracle.data;
-        let cand = data.row(e as usize);
-        let mut acc = 0.0f64;
-        for (idx, &i) in self.view.iter().enumerate() {
-            let m = self.mind[idx];
-            if m <= 0.0 {
-                continue;
-            }
-            let d2 = crate::data::vectors::dist_sq_fast(data.row(i as usize), cand);
-            if d2 < m * m {
-                acc += m - d2.sqrt();
-            }
+        // A one-candidate tile of the blocked kernel, so the lazy heap's
+        // single refreshes agree bit-for-bit with the batched initial scan.
+        let mut acc = [0.0f64];
+        self.accumulate_gains(&[e], &mut acc);
+        acc[0] / self.nv()
+    }
+
+    fn gain_batch(&self, es: &[ElemId], out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(es.len(), 0.0);
+        self.accumulate_gains(es, out);
+        let nv = self.nv();
+        for g in out.iter_mut() {
+            *g /= nv;
         }
-        acc / self.nv()
     }
 
     fn commit(&mut self, e: ElemId) {
+        // Fused on the same norm-trick kernel as the gain scan: the d² a
+        // commit writes into `mind` is the exact value the next gain query
+        // would compare against, so sqrt-elision pruning stays lossless.
         let data = &self.oracle.data;
         let cand = data.row(e as usize);
+        let cn = self.norms[e as usize];
         for (idx, &i) in self.view.iter().enumerate() {
             let m = self.mind[idx];
-            let d2 = crate::data::vectors::dist_sq_fast(data.row(i as usize), cand);
+            let d2 = Self::d2(self.norms[i as usize], cn, dot_fast(data.row(i as usize), cand));
             if d2 < m * m {
                 self.mind[idx] = d2.sqrt();
             }
@@ -189,6 +287,42 @@ mod tests {
         // call_cost reflects view size.
         assert_eq!(st_local.call_cost(0), 2);
         assert_eq!(st_full.call_cost(0), 8);
+    }
+
+    #[test]
+    fn tiled_batch_matches_single_gains_bitwise() {
+        // > VIEW_TILE elements so the kernel crosses tile boundaries, and a
+        // candidate count that exercises both the 4-block and the scalar
+        // remainder; a couple of commits make `mind` pruning non-trivial.
+        let (vs, _) = crate::data::gen::gaussian_mixture(
+            crate::data::gen::GaussianParams { n: 150, dim: 19, classes: 5, noise: 0.4 },
+            12,
+        );
+        let o = KMedoid::new(Arc::new(vs));
+        let mut st = o.new_state(None);
+        st.commit(7);
+        st.commit(101);
+        let es: Vec<ElemId> = (0..149).collect();
+        let mut batch = Vec::new();
+        st.gain_batch(&es, &mut batch);
+        for (i, &e) in es.iter().enumerate() {
+            assert_eq!(
+                st.gain(e).to_bits(),
+                batch[i].to_bits(),
+                "elem {e}: single vs batched tile kernel"
+            );
+        }
+        // Chunked evaluation (what the executor does) merges identically.
+        let mut chunked = Vec::new();
+        for chunk in es.chunks(64) {
+            let mut part = Vec::new();
+            st.gain_batch(chunk, &mut part);
+            chunked.extend(part);
+        }
+        assert_eq!(
+            batch.iter().map(|g| g.to_bits()).collect::<Vec<_>>(),
+            chunked.iter().map(|g| g.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -59,7 +59,12 @@ pub trait Oracle: Send + Sync {
 }
 
 /// An in-progress solution with incremental marginal-gain queries.
-pub trait GainState {
+///
+/// States are `Send + Sync`: the read-only scan methods (`gain`,
+/// `gain_batch`) fan out across executor workers
+/// ([`crate::dist::pool::par_gain_batch`]), while `commit` keeps `&mut`
+/// exclusivity on the submitting thread.
+pub trait GainState: Send + Sync {
     /// Current `f(S)`.
     fn value(&self) -> f64;
 
@@ -76,11 +81,24 @@ pub trait GainState {
     /// per-call cost: δ for coverage functions, n'·δ for k-medoid).
     fn call_cost(&self, e: ElemId) -> u64;
 
-    /// Batched gains; the PJRT-accelerated k-medoid state overrides this to
-    /// push the whole candidate tile through the AOT kernel.
+    /// Batched gains; the CPU k-medoid state overrides this with the
+    /// cache-blocked tile kernel, and the PJRT-accelerated state pushes the
+    /// whole candidate tile through the AOT kernel.  Implementations must
+    /// keep each candidate's gain independent of the batch it arrives in —
+    /// the executor splits batches into fixed-size chunks across threads
+    /// and relies on the merged vector being bit-identical.
     fn gain_batch(&self, es: &[ElemId], out: &mut Vec<f64>) {
         out.clear();
         out.extend(es.iter().map(|&e| self.gain(e)));
+    }
+
+    /// Whether the executor may split one `gain_batch` across worker
+    /// threads (`dist::pool::par_gain_batch`).  Pure CPU states say yes;
+    /// the PJRT states opt out — their launches funnel through one engine
+    /// mutex (chunking would only multiply padded kernel launches) and the
+    /// device-to-host readback is not internally thread-safe.
+    fn parallel_scan(&self) -> bool {
+        true
     }
 }
 

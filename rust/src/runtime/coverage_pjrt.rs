@@ -143,6 +143,12 @@ impl GainState for KCoverPjrtState<'_> {
     fn call_cost(&self, e: ElemId) -> u64 {
         self.oracle.data.set_size(e) as u64
     }
+
+    fn parallel_scan(&self) -> bool {
+        // Launches serialize behind the engine mutex and readback is not
+        // thread-safe; splitting would only multiply padded c_tile launches.
+        false
+    }
 }
 
 #[cfg(test)]

@@ -83,7 +83,8 @@ impl Oracle for KMedoidPjrt {
             }
             // §Perf P5: upload once; every gain/commit launch reuses the
             // device-resident chunk instead of re-copying ~n_tile·d floats.
-            x_chunks.push(self.engine.upload_f32(&flat, &[nt, d]).expect("chunk upload"));
+            x_chunks
+                .push(DeviceBuf(self.engine.upload_f32(&flat, &[nt, d]).expect("chunk upload")));
         }
         Box::new(KMedoidPjrtState {
             oracle: self,
@@ -100,11 +101,21 @@ impl Oracle for KMedoidPjrt {
     }
 }
 
+/// Device-resident buffer shared across superstep threads.
+struct DeviceBuf(PjRtBuffer);
+
+// SAFETY: a buffer is written once at upload and only read afterwards, and
+// every PJRT launch that touches it is serialized behind the engine's
+// mutex (see `engine.rs`); the `xla` wrapper is `!Send`/`!Sync` only
+// because it holds a raw pointer.
+unsafe impl Send for DeviceBuf {}
+unsafe impl Sync for DeviceBuf {}
+
 struct KMedoidPjrtState<'a> {
     oracle: &'a KMedoidPjrt,
     view: Vec<ElemId>,
     /// Padded `[n_tile, d]` device-resident X buffers, one per view chunk.
-    x_chunks: Vec<PjRtBuffer>,
+    x_chunks: Vec<DeviceBuf>,
     /// Host copy of the padded min-distance vector (len = chunks · n_tile).
     mind: Vec<f32>,
     base_loss_sum: f64,
@@ -134,7 +145,7 @@ impl KMedoidPjrtState<'_> {
                 .upload_f32(&self.mind[ci * nt..(ci + 1) * nt], &[nt])
                 .expect("mind upload");
             let out = eng
-                .execute_buffers(&self.oracle.gains_entry, &[x_buf, &mind_buf, &c_buf])
+                .execute_buffers(&self.oracle.gains_entry, &[&x_buf.0, &mind_buf, &c_buf])
                 .expect("gains kernel launch");
             let gains: Vec<f32> = out[0].to_vec().expect("gains output");
             for (a, &g) in acc.iter_mut().zip(gains.iter().take(live)) {
@@ -185,7 +196,7 @@ impl GainState for KMedoidPjrtState<'_> {
                 .upload_f32(&self.mind[ci * nt..(ci + 1) * nt], &[nt])
                 .expect("mind upload");
             let out = eng
-                .execute_buffers(&self.oracle.update_entry, &[x_buf, &mind_buf, &cand])
+                .execute_buffers(&self.oracle.update_entry, &[&x_buf.0, &mind_buf, &cand])
                 .expect("update kernel launch");
             let new_mind: Vec<f32> = out[0].to_vec().expect("update output");
             self.mind[ci * nt..(ci + 1) * nt].copy_from_slice(&new_mind);
@@ -207,6 +218,12 @@ impl GainState for KMedoidPjrtState<'_> {
 
     fn call_cost(&self, _e: ElemId) -> u64 {
         (self.view.len() * self.oracle.data.dim()) as u64
+    }
+
+    fn parallel_scan(&self) -> bool {
+        // Launches serialize behind the engine mutex and readback is not
+        // thread-safe; splitting would only multiply padded c_tile launches.
+        false
     }
 }
 

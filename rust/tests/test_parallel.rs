@@ -1,0 +1,147 @@
+//! Tier-1 coverage for the two-level executor and the tiled/parallel gain
+//! paths: the fanned-out `par_gain_batch` must match the serial per-element
+//! loop for every oracle, and whole distributed runs must be bit-identical
+//! across thread counts (the determinism contract of `dist::pool`).
+
+use greedyml::algo::{run_greedyml, DistConfig};
+use greedyml::constraint::Cardinality;
+use greedyml::data::gen;
+use greedyml::dist::pool;
+use greedyml::objective::{
+    FacilityLocation, KCover, KDominatingSet, KMedoid, Modular, Oracle, WeightedCover,
+};
+use greedyml::tree::AccumulationTree;
+use std::sync::Arc;
+
+/// One small instance of every CPU oracle.
+fn all_oracles() -> Vec<Box<dyn Oracle>> {
+    let itemsets = Arc::new(gen::transactions(
+        gen::TransactionParams { num_sets: 300, num_items: 150, mean_size: 6.0, zipf_s: 0.9 },
+        11,
+    ));
+    let weights: Vec<f64> = (0..150).map(|i| 1.0 + (i % 7) as f64 * 0.25).collect();
+    let graph = Arc::new(gen::barabasi_albert(300, 3, 5));
+    let (vs, _) = gen::gaussian_mixture(
+        gen::GaussianParams { n: 200, dim: 24, classes: 4, noise: 0.4 },
+        7,
+    );
+    vec![
+        Box::new(KCover::new(itemsets.clone())),
+        Box::new(WeightedCover::new(itemsets, weights).unwrap()),
+        Box::new(KDominatingSet::new(graph)),
+        Box::new(KMedoid::new(Arc::new(vs))),
+        Box::new(FacilityLocation::random(40, 300, 9)),
+        Box::new(Modular::random(300, 3)),
+    ]
+}
+
+#[test]
+fn par_gain_batch_matches_serial_loop_for_every_oracle() {
+    for oracle in all_oracles() {
+        let mut st = oracle.new_state(None);
+        // A few commits so gains reflect a non-empty solution.
+        for e in [3u32, 57, 120] {
+            st.commit(e);
+        }
+        let cands: Vec<u32> = (0..oracle.n() as u32).collect();
+        let serial: Vec<f64> = cands.iter().map(|&e| st.gain(e)).collect();
+        let mut fanned = Vec::new();
+        pool::with_pool(4, |_| pool::par_gain_batch(&*st, &cands, &mut fanned));
+        assert_eq!(serial.len(), fanned.len(), "{}", oracle.name());
+        for (i, (s, p)) in serial.iter().zip(&fanned).enumerate() {
+            assert!(
+                (s - p).abs() <= 1e-9,
+                "{}: elem {i}: serial {s} vs parallel {p}",
+                oracle.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn par_gain_batch_is_chunk_count_invariant() {
+    // The fan-out must produce the same bits whether the pool has 1, 2 or
+    // many workers (chunk boundaries are fixed, never thread-derived).
+    let (vs, _) = gen::gaussian_mixture(
+        gen::GaussianParams { n: 300, dim: 16, classes: 4, noise: 0.3 },
+        13,
+    );
+    let oracle = KMedoid::new(Arc::new(vs));
+    let st = oracle.new_state(None);
+    let cands: Vec<u32> = (0..300).collect();
+    let mut reference = Vec::new();
+    st.gain_batch(&cands, &mut reference);
+    for threads in [1usize, 2, 4, 7] {
+        let mut got = Vec::new();
+        pool::with_pool(threads, |_| pool::par_gain_batch(&*st, &cands, &mut got));
+        let same = reference
+            .iter()
+            .zip(&got)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "threads={threads}: gains differ from serial reference");
+    }
+}
+
+fn coverage_cfg(threads: Option<usize>) -> DistConfig {
+    DistConfig { threads, ..DistConfig::greedyml(AccumulationTree::new(8, 2), 17) }
+}
+
+#[test]
+fn run_greedyml_is_thread_count_invariant_on_coverage() {
+    let data = gen::transactions(
+        gen::TransactionParams { num_sets: 600, num_items: 300, mean_size: 6.0, zipf_s: 0.9 },
+        23,
+    );
+    let o = KCover::new(Arc::new(data));
+    let c = Cardinality::new(12);
+    let base = run_greedyml(&o, &c, &coverage_cfg(Some(1))).unwrap();
+    let auto = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    for threads in [4usize, auto] {
+        let out = run_greedyml(&o, &c, &coverage_cfg(Some(threads))).unwrap();
+        assert_eq!(base.solution, out.solution, "threads={threads}");
+        assert_eq!(base.value.to_bits(), out.value.to_bits(), "threads={threads}");
+        assert_eq!(base.total_calls, out.total_calls, "threads={threads}");
+        assert_eq!(base.critical_calls, out.critical_calls, "threads={threads}");
+    }
+}
+
+#[test]
+fn run_greedyml_is_thread_count_invariant_on_kmedoid() {
+    let (vs, _) = gen::gaussian_mixture(
+        gen::GaussianParams { n: 400, dim: 16, classes: 5, noise: 0.4 },
+        29,
+    );
+    let o = KMedoid::new(Arc::new(vs));
+    let c = Cardinality::new(8);
+    let mk = |threads: usize| DistConfig {
+        local_view: true,
+        threads: Some(threads),
+        ..DistConfig::greedyml(AccumulationTree::new(4, 2), 31)
+    };
+    let base = run_greedyml(&o, &c, &mk(1)).unwrap();
+    let auto = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    for threads in [4usize, auto] {
+        let out = run_greedyml(&o, &c, &mk(threads)).unwrap();
+        assert_eq!(base.solution, out.solution, "threads={threads}");
+        assert_eq!(base.value.to_bits(), out.value.to_bits(), "threads={threads}");
+        assert_eq!(base.total_calls, out.total_calls, "threads={threads}");
+    }
+}
+
+#[test]
+fn lazy_greedy_inside_pool_matches_standalone() {
+    // The level-two fan-out changes *where* gains are computed, never what
+    // the algorithm selects.
+    let data = gen::transactions(
+        gen::TransactionParams { num_sets: 500, num_items: 250, mean_size: 7.0, zipf_s: 1.0 },
+        3,
+    );
+    let o = KCover::new(Arc::new(data));
+    let c = Cardinality::new(15);
+    let cands: Vec<u32> = (0..500).collect();
+    let standalone = greedyml::greedy::greedy_lazy(&o, &c, &cands, None);
+    let pooled = pool::with_pool(4, |_| greedyml::greedy::greedy_lazy(&o, &c, &cands, None));
+    assert_eq!(standalone.solution, pooled.solution);
+    assert_eq!(standalone.calls, pooled.calls);
+    assert_eq!(standalone.value.to_bits(), pooled.value.to_bits());
+}
