@@ -35,6 +35,14 @@ fn main() {
     let oracle = KCover::new(data);
     let constraint = Cardinality::new(k);
 
+    // A problem spec equivalent to the oracle above, so the bench also
+    // runs under `GREEDYML_BACKEND=process` (workers rebuild the dataset
+    // from this and comm becomes measured instead of α–β-modeled).
+    let problem_spec = format!(
+        "dataset.kind = transactions\ndataset.n = {n}\ndataset.items = {n}\n\
+         dataset.mean_size = 8.0\ndataset.zipf = 0.8\ndataset.seed = 3\nproblem.k = {k}\n"
+    );
+
     harness::section(&format!(
         "Table 1: measured vs model (k-cover, n={n}, k={k}, delta={delta:.1})"
     ));
@@ -43,10 +51,13 @@ fn main() {
         &cells!["algo", "m", "b", "L", "interior|D| meas", "model k*fanin", "check", "comm B meas", "model", "check"],
     );
 
-    for (m, b) in [(8u32, 8u32), (16, 16), (8, 2), (16, 4), (16, 2), (32, 2), (32, 8)] {
+    let shapes = [(8u32, 8u32), (16, 16), (8, 2), (16, 4), (16, 2), (32, 2), (32, 8)];
+    let mut outcomes = Vec::new();
+    for (m, b) in shapes {
         let tree = AccumulationTree::new(m, b);
         let cfg = DistConfig {
             kind: GreedyKind::Naive, // Table 1 counts are for plain GREEDY
+            problem: Some(problem_spec.clone()),
             ..DistConfig::greedyml(tree, 7)
         };
         let out = run_greedyml(&oracle, &constraint, &cfg).expect("run");
@@ -81,13 +92,54 @@ fn main() {
                 harness::shape_check(comm_meas as f64, comm_model, 4.0)
             ],
         );
+        outcomes.push((algo, m, b, tree, params, out));
+    }
+
+    // Makespan-vs-model cross-check: the measured end-to-end superstep
+    // seconds (trace makespan) next to the BSP-modeled cost (measured
+    // compute + α–β-modeled critical-path communication).  Under the
+    // thread backend the comm column *is* the α–β model; under
+    // `GREEDYML_BACKEND=process` it is measured pipe-transfer time, making
+    // backend-measured comm directly comparable to the model.
+    harness::section("makespan vs BSP model (measured superstep seconds vs modeled cost)");
+    harness::row(
+        &[-14, 4, 4, 12, 12, 12, 12, 10, 8],
+        &cells!["algo", "m", "b", "makespan s", "comp s", "comm s", "comm model s", "comm", "check"],
+    );
+    let alpha_beta = greedyml::dist::CommModel::default();
+    for (algo, m, b, tree, params, out) in &outcomes {
+        // Critical-path modeled comm: machine 0 gathers `fanin − 1`
+        // messages of ≈ 4·k·(δ+2) bytes at each of L levels.
+        let msgs_per_level = params.fan_in().saturating_sub(1);
+        let msg_bytes = (4.0 * params.k as f64 * (delta + 2.0)) as u64;
+        let comm_model_secs = tree.levels() as f64
+            * alpha_beta.gather_time(&vec![msg_bytes; msgs_per_level as usize]);
+        let model_secs = out.comp_secs + comm_model_secs;
+        harness::row(
+            &[-14, 4, 4, 12, 12, 12, 12, 10, 8],
+            &cells![
+                algo,
+                m,
+                b,
+                format!("{:.6}", out.trace.makespan()),
+                format!("{:.6}", out.comp_secs),
+                format!("{:.6}", out.comm_secs),
+                format!("{:.6}", comm_model_secs),
+                if out.comm_measured { "measured" } else { "α–β" },
+                harness::shape_check(out.trace.makespan(), model_secs, 2.0)
+            ],
+        );
     }
 
     harness::section("calls per leaf (naive GREEDY): measured vs n*k/m bound");
     harness::row(&[4, 4, 16, 16, 10], &cells!["m", "b", "max leaf calls", "bound nk/m", "check"]);
     for (m, b) in [(8u32, 2u32), (16, 4), (32, 2)] {
         let tree = AccumulationTree::new(m, b);
-        let cfg = DistConfig { kind: GreedyKind::Naive, ..DistConfig::greedyml(tree, 7) };
+        let cfg = DistConfig {
+            kind: GreedyKind::Naive,
+            problem: Some(problem_spec.clone()),
+            ..DistConfig::greedyml(tree, 7)
+        };
         let out = run_greedyml(&oracle, &constraint, &cfg).expect("run");
         let leaf_calls = out.levels[0].max_calls as f64;
         let bound = (n * k / m as usize) as f64;

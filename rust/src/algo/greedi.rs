@@ -11,6 +11,20 @@ use crate::greedy::GreedyKind;
 use crate::objective::Oracle;
 use crate::tree::AccumulationTree;
 
+/// The full engine config GreeDI runs as: contiguous partition, single
+/// accumulation level, argmax over every child.  Public so the
+/// coordinator can attach backend/problem settings before running.
+pub fn greedi_config(machines: u32, mem_limit: Option<u64>) -> DistConfig {
+    DistConfig {
+        mem_limit,
+        partition: PartitionScheme::Contiguous,
+        compare_all_children: true,
+        kind: GreedyKind::Lazy,
+        // seed 0: no randomness used by the contiguous partition
+        ..DistConfig::greedyml(AccumulationTree::randgreedi(machines), 0)
+    }
+}
+
 /// Run GreeDI on `machines` with a contiguous partition.
 pub fn run_greedi(
     oracle: &dyn Oracle,
@@ -18,19 +32,7 @@ pub fn run_greedi(
     machines: u32,
     mem_limit: Option<u64>,
 ) -> Result<DistOutcome, DistError> {
-    let cfg = DistConfig {
-        tree: AccumulationTree::randgreedi(machines),
-        kind: GreedyKind::Lazy,
-        seed: 0, // no randomness used by the contiguous partition
-        mem_limit,
-        partition: PartitionScheme::Contiguous,
-        local_view: false,
-        added_elements: 0,
-        compare_all_children: true,
-        comm: Default::default(),
-        threads: None,
-    };
-    run_dist(oracle, constraint, &cfg)
+    run_dist(oracle, constraint, &greedi_config(machines, mem_limit))
 }
 
 #[cfg(test)]

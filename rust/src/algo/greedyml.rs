@@ -4,49 +4,28 @@
 //!
 //! Execution is level-synchronous BSP: level 0 runs GREEDY on every leaf's
 //! partition in parallel; each level ℓ ≥ 1 gathers the children's solutions
-//! at their parents (charging the memory meter and the comm model), runs
-//! GREEDY on the union, and keeps `argmax{f(merged), f(previous)}` per the
-//! recurrence of Fig. 3.  Machine 0 participates at every level, so its
-//! accumulated gain-query count is the paper's "function calls on the
-//! critical path".
+//! at their parents, runs GREEDY on the union, and keeps
+//! `argmax{f(merged), f(previous)}` per the recurrence of Fig. 3.  Machine
+//! 0 participates at every level, so its accumulated gain-query count is
+//! the paper's "function calls on the critical path".
+//!
+//! The engine is pure tree orchestration: it partitions the ground set,
+//! walks the accumulation levels, and aggregates statistics — *all*
+//! superstep fan-out, solution shipping and per-machine resource
+//! accounting happen behind the [`Backend`] trait, so the same loop runs
+//! on the in-process thread pool ([`ThreadBackend`], modeled comm) and on
+//! forked worker processes ([`ProcessBackend`], measured comm), producing
+//! bit-identical solutions.
 
 use super::{DistConfig, DistOutcome, LevelStats, PartitionScheme};
 use crate::constraint::Constraint;
-use crate::dist::pool;
-use crate::dist::{DistError, Executor, MachineStats, MemoryMeter, NodeStep, Trace};
-use crate::greedy::{greedy, GreedyOutcome};
+use crate::dist::{
+    pool, AccumTask, Backend, BackendSpec, DistError, NodeParams, NodeStep, ProcessBackend,
+    ResolvedBackend, StepReport, ThreadBackend, Trace,
+};
 use crate::objective::Oracle;
-use crate::util::rng::{RandomTape, Rng};
-use crate::util::timer::timed;
-use crate::{ElemId, MachineId};
-
-/// Rolling state of one machine between supersteps.
-struct NodeCtx {
-    stats: MachineStats,
-    meter: MemoryMeter,
-    /// S_prev: the machine's best solution so far.
-    sol: Vec<ElemId>,
-    /// f(S_prev) as evaluated at this machine's last active level.
-    sol_value: f64,
-    /// Bytes currently charged for holding `sol`.
-    sol_bytes: u64,
-}
-
-/// What one machine did during a single superstep (level aggregation).
-#[derive(Clone, Copy, Debug, Default)]
-struct StepDelta {
-    comp_secs: f64,
-    comm_secs: f64,
-    calls: u64,
-    accum_elems: usize,
-}
-
-/// A child's shipped solution.
-struct ChildMsg {
-    sol: Vec<ElemId>,
-    value: f64,
-    bytes: u64,
-}
+use crate::util::rng::RandomTape;
+use crate::ElemId;
 
 /// Run GreedyML with the given config (Algorithm 3.1).
 pub fn run_greedyml(
@@ -59,29 +38,89 @@ pub fn run_greedyml(
 
 /// The shared engine (see module docs). Public so the baselines reuse it.
 ///
-/// Spawns the two-level executor once for the whole run (workers persist
-/// across supersteps) and tears it down on return; `cfg.threads` /
-/// `GREEDYML_THREADS` control its width, and `threads = 1` reproduces the
-/// serial runtime bit-for-bit.
+/// Resolves the configured [`BackendSpec`](crate::dist::BackendSpec) and
+/// drives [`run_dist_on`] against it.  On the thread backend the two-level
+/// executor is spawned once for the whole run (workers persist across
+/// supersteps); `cfg.threads` / `GREEDYML_THREADS` control its width, and
+/// `threads = 1` reproduces the serial runtime bit-for-bit.  On the
+/// process backend one worker process per machine is forked instead
+/// (`cfg.problem` must carry the spec the workers rebuild the oracle
+/// from).
 pub fn run_dist(
     oracle: &dyn Oracle,
     constraint: &dyn Constraint,
     cfg: &DistConfig,
 ) -> Result<DistOutcome, DistError> {
-    let threads = cfg.threads.unwrap_or_else(pool::default_threads).max(1);
-    pool::with_pool(threads, |exec| run_dist_on(exec, oracle, constraint, cfg))
+    let params = NodeParams {
+        kind: cfg.kind,
+        seed: cfg.seed,
+        n: oracle.n(),
+        mem_limit: cfg.mem_limit,
+        local_view: cfg.local_view,
+        added_elements: cfg.added_elements,
+        compare_all_children: cfg.compare_all_children,
+    };
+    let mut resolved = cfg.backend.resolve()?;
+    if resolved == ResolvedBackend::Process
+        && cfg.backend == BackendSpec::Auto
+        && cfg.problem.is_none()
+    {
+        // The env var is advisory: programmatic callers (benches, unit
+        // tests, library users with hand-built oracles) carry no problem
+        // spec, and failing them because the environment asked for
+        // process workers would make `GREEDYML_BACKEND=process cargo
+        // bench` unusable.  Explicit `BackendSpec::Process` still errors.
+        eprintln!(
+            "GREEDYML_BACKEND=process ignored for this run: no problem spec to ship \
+             to workers (programmatic oracle); using the thread backend"
+        );
+        resolved = ResolvedBackend::Thread;
+    }
+    match resolved {
+        ResolvedBackend::Thread => {
+            let threads = cfg.threads.unwrap_or_else(pool::default_threads).max(1);
+            pool::with_pool(threads, |exec| {
+                let mut backend = ThreadBackend::new(
+                    exec,
+                    oracle,
+                    constraint,
+                    params.clone(),
+                    cfg.comm,
+                    cfg.tree.machines(),
+                );
+                run_dist_on(&mut backend, cfg, oracle.n())
+            })
+        }
+        ResolvedBackend::Process => {
+            let problem = cfg.problem.as_deref().ok_or_else(|| {
+                DistError::backend(
+                    "the process backend needs DistConfig::problem (a dataset/problem \
+                     config spec) so workers can rebuild the oracle — config-built \
+                     experiments attach it automatically",
+                )
+            })?;
+            let mut backend = ProcessBackend::spawn(
+                cfg.tree.machines(),
+                &params,
+                cfg.threads.unwrap_or(1),
+                problem,
+                cfg.worker_bin.as_deref(),
+            )?;
+            run_dist_on(&mut backend, cfg, oracle.n())
+        }
+    }
 }
 
-/// One distributed run on an already-running executor.
+/// One distributed run against an already-constructed backend: partition,
+/// walk the accumulation tree, aggregate.  Contains no executor, shipping
+/// or metering logic of its own — that is the backend's contract.
 fn run_dist_on(
-    exec: &Executor<'_>,
-    oracle: &dyn Oracle,
-    constraint: &dyn Constraint,
+    backend: &mut dyn Backend,
     cfg: &DistConfig,
+    n: usize,
 ) -> Result<DistOutcome, DistError> {
     let tree = cfg.tree;
     let m = tree.machines();
-    let n = oracle.n();
 
     // ---- Line 2: partition the data over the leaves. ------------------
     let parts: Vec<Vec<ElemId>> = match cfg.partition {
@@ -96,271 +135,83 @@ fn run_dist_on(
     };
 
     let mut levels: Vec<LevelStats> = Vec::with_capacity(tree.levels() as usize + 1);
+    let mut trace_steps: Vec<NodeStep> = Vec::new();
+    let mut max_accum_elems = 0usize;
 
     // ---- Level 0 superstep: GREEDY on every partition. -----------------
-    let leaf_inputs: Vec<(MachineId, Vec<ElemId>)> =
-        parts.into_iter().enumerate().map(|(i, p)| (i as MachineId, p)).collect();
-    let leaf_results: Vec<Result<(NodeCtx, StepDelta), DistError>> =
-        exec.map(leaf_inputs, |(id, part)| {
-            let mut stats = MachineStats::new(id);
-            let mut meter = MemoryMeter::new(cfg.mem_limit);
-            let data_bytes: u64 = part.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
-            meter.charge(data_bytes, id, 0, "partition data")?;
-            let view = cfg.local_view.then_some(&part[..]);
-            let (out, secs): (GreedyOutcome, f64) =
-                timed(|| greedy(cfg.kind, oracle, constraint, &part, view));
-            stats.calls = out.calls;
-            stats.cost = out.cost;
-            stats.comp_secs = secs;
-            let sol_bytes: u64 =
-                out.solution.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
-            meter.charge(sol_bytes, id, 0, "local solution")?;
-            // The partition itself is no longer needed once the local
-            // solution exists (only S_prev crosses levels).
-            meter.release(data_bytes);
-            stats.peak_mem = meter.peak();
-            let delta = StepDelta {
-                comp_secs: secs,
-                comm_secs: 0.0,
-                calls: out.calls,
-                accum_elems: 0,
-            };
-            Ok((
-                NodeCtx { stats, meter, sol: out.solution, sol_value: out.value, sol_bytes },
-                delta,
-            ))
-        });
-
-    let mut ctxs: Vec<Option<NodeCtx>> = (0..m).map(|_| None).collect();
-    let mut deltas0 = Vec::with_capacity(m as usize);
-    let mut trace_steps: Vec<NodeStep> = Vec::new();
-    for r in leaf_results {
-        let (ctx, d) = r?;
-        trace_steps.push(NodeStep {
-            machine: ctx.stats.id,
-            level: 0,
-            comp_secs: d.comp_secs,
-            comm_secs: d.comm_secs,
-            calls: d.calls,
-        });
-        deltas0.push(d);
-        let id = ctx.stats.id as usize;
-        ctxs[id] = Some(ctx);
-    }
-    levels.push(aggregate_level(0, &deltas0));
-
-    // Machines that have finished all their roles.
-    let mut retired: Vec<Option<MachineStats>> = (0..m).map(|_| None).collect();
-    let mut max_accum_elems = 0usize;
+    let leaf_reports = backend.run_leaves(parts)?;
+    levels.push(collect_reports(0, &leaf_reports, &mut trace_steps, &mut max_accum_elems));
 
     // ---- Levels 1..=L: accumulate. -------------------------------------
     for level in 1..=tree.levels() {
-        let active = tree.nodes_at_level(level);
-        struct Task {
-            id: MachineId,
-            ctx: NodeCtx,
-            children: Vec<ChildMsg>,
-        }
-        let mut tasks: Vec<Task> = Vec::with_capacity(active.len());
-        for &id in &active {
-            let ctx = ctxs[id as usize].take().expect("parent ctx missing");
-            let mut children = Vec::new();
-            for c in tree.children(level, id) {
-                if c == id {
-                    continue; // j = 0: the node's own S_prev stays in ctx.
-                }
-                let mut child = ctxs[c as usize].take().expect("child ctx missing");
-                // `sol_bytes` already tracks Σ elem_bytes over the held
-                // solution (charged at every level swap) — no rescan.
-                let bytes = child.sol_bytes;
-                child.stats.bytes_sent += bytes;
-                // Child is done (Algorithm 3.1 lines 6-7: send & break).
-                children.push(ChildMsg { sol: std::mem::take(&mut child.sol), value: child.sol_value, bytes });
-                retired[c as usize] = Some(child.stats);
-            }
-            tasks.push(Task { id, ctx, children });
-        }
-
-        let results: Vec<Result<(NodeCtx, StepDelta), DistError>> =
-            exec.map(tasks, |mut task| {
-                let id = task.id;
-                let ctx = &mut task.ctx;
-                // Receive child solutions: comm model + memory charges.
-                let msg_bytes: Vec<u64> = task.children.iter().map(|c| c.bytes).collect();
-                let recv_bytes: u64 = msg_bytes.iter().sum();
-                ctx.meter.charge(recv_bytes, id, level, "child solutions")?;
-                let comm_secs = cfg.comm.gather_time(&msg_bytes);
-                ctx.stats.comm_secs += comm_secs;
-                ctx.stats.bytes_received += recv_bytes;
-
-                // D ← S_prev ∪ child solutions (lines 8-13), plus the §6.4
-                // optional random extra elements.  The union is built
-                // *distinct*: solutions can overlap across levels, and
-                // `sample_added` can re-draw elements already in D — blind
-                // concatenation would inflate `accum_elems` and charge the
-                // memory meter twice for the same resident element.
-                // Membership is tracked in a |D|-sized set, not an O(n)
-                // bitmap: the union is O(b·k + added) elements and this
-                // runs once per active node per level.
-                let cap = ctx.sol.len()
-                    + task.children.iter().map(|c| c.sol.len()).sum::<usize>()
-                    + cfg.added_elements;
-                let mut seen = std::collections::HashSet::with_capacity(cap);
-                let mut d: Vec<ElemId> = Vec::with_capacity(cap);
-                for &e in ctx.sol.iter().chain(task.children.iter().flat_map(|c| c.sol.iter())) {
-                    if seen.insert(e) {
-                        d.push(e);
-                    }
-                }
-                let added = sample_added(cfg, n, level, id);
-                let mut add_bytes = 0u64;
-                for &e in &added {
-                    if seen.insert(e) {
-                        add_bytes += oracle.elem_bytes(e) as u64;
-                        d.push(e);
-                    }
-                }
-                if add_bytes > 0 {
-                    ctx.meter.charge(add_bytes, id, level, "added elements")?;
-                }
-                let accum_elems = d.len();
-
-                // Run GREEDY on the union (line 14).
-                let view = cfg.local_view.then_some(&d[..]);
-                let (out, secs) = timed(|| greedy(cfg.kind, oracle, constraint, &d, view));
-                let mut calls = out.calls;
-                let mut cost = out.cost;
-
-                // Line 15: S_prev ← argmax{f(S), f(S_prev)}.  Under a local
-                // view the stored f(S_prev) was computed against different
-                // data, so re-evaluate it against this node's view.
-                let prev_value = if cfg.local_view {
-                    let mut st = oracle.new_state(view);
-                    for &e in &ctx.sol {
-                        calls += 1;
-                        cost += st.call_cost(e);
-                        st.commit(e);
-                    }
-                    st.value()
-                } else {
-                    ctx.sol_value
-                };
-
-                let mut best_sol = out.solution;
-                let mut best_val = out.value;
-                if prev_value > best_val {
-                    best_val = prev_value;
-                    best_sol = ctx.sol.clone();
-                }
-                if cfg.compare_all_children {
-                    // RandGreeDI (Algorithm 2.2 line 7): also compare every
-                    // child's local solution.  Only the argmax winner is
-                    // cloned — b can be as large as m.
-                    let mut winner: Option<&ChildMsg> = None;
-                    for c in &task.children {
-                        if c.value > best_val {
-                            best_val = c.value;
-                            winner = Some(c);
-                        }
-                    }
-                    if let Some(c) = winner {
-                        best_sol = c.sol.clone();
-                    }
-                }
-
-                ctx.stats.calls += calls;
-                ctx.stats.cost += cost;
-                ctx.stats.comp_secs += secs;
-                ctx.stats.top_level = level;
-                ctx.stats.max_accum_elems = ctx.stats.max_accum_elems.max(accum_elems);
-
-                // Swap in the new solution. The merged solution is a subset
-                // of D (greedy selects *from* the union), so its data is
-                // already charged; release everything D-related first, then
-                // re-charge just the retained solution.
-                let new_bytes: u64 =
-                    best_sol.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
-                ctx.meter.release(recv_bytes + add_bytes + ctx.sol_bytes);
-                ctx.meter.charge(new_bytes, id, level, "merged solution")?;
-                ctx.sol = best_sol;
-                ctx.sol_value = best_val;
-                ctx.sol_bytes = new_bytes;
-                ctx.stats.peak_mem = ctx.meter.peak();
-                let delta = StepDelta { comp_secs: secs, comm_secs, calls, accum_elems };
-                Ok((task.ctx, delta))
-            });
-
-        let mut step_deltas = Vec::with_capacity(active.len());
-        for r in results {
-            let (ctx, d) = r?;
-            max_accum_elems = max_accum_elems.max(d.accum_elems);
-            trace_steps.push(NodeStep {
-                machine: ctx.stats.id,
-                level,
-                comp_secs: d.comp_secs,
-                comm_secs: d.comm_secs,
-                calls: d.calls,
-            });
-            step_deltas.push(d);
-            let id = ctx.stats.id as usize;
-            ctxs[id] = Some(ctx);
-        }
-        levels.push(aggregate_level(level, &step_deltas));
+        let tasks: Vec<AccumTask> = tree
+            .nodes_at_level(level)
+            .into_iter()
+            .map(|id| AccumTask {
+                parent: id,
+                // j = 0 is the node itself: its S_prev stays in place.
+                children: tree.children(level, id).into_iter().filter(|&c| c != id).collect(),
+            })
+            .collect();
+        let reports = backend.run_superstep(level, &tasks)?;
+        levels.push(collect_reports(level, &reports, &mut trace_steps, &mut max_accum_elems));
     }
 
-    // ---- Collect the root and any never-retired machines. --------------
-    let root = ctxs[0].take().expect("root ctx missing");
-    let solution = root.sol.clone();
-    let value = root.sol_value;
-    retired[0] = Some(root.stats);
-    for (i, slot) in ctxs.into_iter().enumerate() {
-        if let Some(ctx) = slot {
-            retired[i] = Some(ctx.stats);
-        }
-    }
-    let machines: Vec<MachineStats> =
-        retired.into_iter().map(|s| s.expect("machine stats missing")).collect();
+    // ---- Collect the root and every machine's lifetime stats. ----------
+    let fin = backend.finish()?;
 
-    let critical_calls = machines[0].calls;
-    let total_calls = machines.iter().map(|s| s.calls).sum();
+    let critical_calls = fin.machines[0].calls;
+    let total_calls = fin.machines.iter().map(|s| s.calls).sum();
     let comp_secs = levels.iter().map(|l| l.comp_secs).sum();
     let comm_secs = levels.iter().map(|l| l.comm_secs).sum();
 
     Ok(DistOutcome {
-        solution,
-        value,
-        machines,
+        solution: fin.solution,
+        value: fin.value,
+        machines: fin.machines,
         levels,
         critical_calls,
         total_calls,
         comp_secs,
         comm_secs,
+        comm_measured: backend.measures_comm(),
         max_accum_elems,
         trace: Trace::new(trace_steps),
     })
 }
 
-/// §6.4 "added images": extra random elements mixed into every
-/// accumulation step, seeded per (level, node) for reproducibility.
-fn sample_added(cfg: &DistConfig, n: usize, level: u32, id: MachineId) -> Vec<ElemId> {
-    if cfg.added_elements == 0 {
-        return Vec::new();
+/// Record one superstep's reports into the trace, track the largest
+/// accumulation union, and fold them into the level aggregate.
+fn collect_reports(
+    level: u32,
+    reports: &[StepReport],
+    trace: &mut Vec<NodeStep>,
+    max_accum_elems: &mut usize,
+) -> LevelStats {
+    for r in reports {
+        trace.push(NodeStep {
+            machine: r.machine,
+            level: r.level,
+            comp_secs: r.comp_secs,
+            comm_secs: r.comm_secs,
+            calls: r.calls,
+            peak_mem: r.peak_mem,
+        });
+        *max_accum_elems = (*max_accum_elems).max(r.accum_elems);
     }
-    let count = cfg.added_elements.min(n);
-    let mut rng = Rng::split(cfg.seed ^ 0xADDED, ((level as u64) << 32) | id as u64);
-    rng.sample_distinct(n, count).into_iter().map(|e| e as ElemId).collect()
+    aggregate_level(level, reports)
 }
 
-/// Fold one superstep's per-node deltas into a [`LevelStats`]: BSP
+/// Fold one superstep's per-node reports into a [`LevelStats`]: BSP
 /// semantics — the superstep lasts as long as its slowest node.
-fn aggregate_level(level: u32, deltas: &[StepDelta]) -> LevelStats {
+fn aggregate_level(level: u32, reports: &[StepReport]) -> LevelStats {
     let mut out = LevelStats { level, ..Default::default() };
-    for d in deltas {
+    for r in reports {
         out.active_nodes += 1;
-        out.comp_secs = out.comp_secs.max(d.comp_secs);
-        out.comm_secs = out.comm_secs.max(d.comm_secs);
-        out.max_calls = out.max_calls.max(d.calls);
-        out.total_calls += d.calls;
+        out.comp_secs = out.comp_secs.max(r.comp_secs);
+        out.comm_secs = out.comm_secs.max(r.comm_secs);
+        out.max_calls = out.max_calls.max(r.calls);
+        out.total_calls += r.calls;
     }
     out
 }
@@ -399,6 +250,7 @@ mod tests {
         assert_eq!(out.levels.len(), 4, "L=3 ⇒ 4 supersteps");
         assert_eq!(out.critical_calls, out.machines[0].calls);
         assert!(out.total_calls >= out.critical_calls);
+        assert!(!out.comm_measured, "thread backend models comm");
     }
 
     #[test]
@@ -452,6 +304,7 @@ mod tests {
                 assert_eq!(machine, 0, "root is the bottleneck");
                 assert_eq!(level, 1);
             }
+            other => panic!("expected OOM, got {other:?}"),
         }
         // The same limit with a binary tree succeeds (more levels, less
         // fan-in) — the paper's headline memory result (§6.2).
@@ -527,5 +380,39 @@ mod tests {
             out.max_accum_elems
         );
         assert!(out.value > 0.0);
+    }
+
+    #[test]
+    fn trace_steps_carry_memory_watermarks() {
+        let o = cover_oracle(300, 8);
+        let c = Cardinality::new(8);
+        let cfg = DistConfig::greedyml(AccumulationTree::new(4, 2), 21);
+        let out = run_greedyml(&o, &c, &cfg).unwrap();
+        assert!(out.trace.steps().iter().all(|s| s.peak_mem > 0));
+        // The root's last watermark equals its lifetime peak.
+        let root_last = out
+            .trace
+            .steps()
+            .iter()
+            .filter(|s| s.machine == 0)
+            .last()
+            .expect("root steps present");
+        assert_eq!(root_last.peak_mem, out.machines[0].peak_mem);
+    }
+
+    #[test]
+    fn process_backend_without_problem_spec_errors() {
+        let o = cover_oracle(100, 2);
+        let c = Cardinality::new(4);
+        let cfg = DistConfig {
+            backend: crate::dist::BackendSpec::Process,
+            ..DistConfig::greedyml(AccumulationTree::new(2, 2), 1)
+        };
+        match run_greedyml(&o, &c, &cfg).unwrap_err() {
+            DistError::Backend { message } => {
+                assert!(message.contains("problem"), "{message}")
+            }
+            other => panic!("expected backend error, got {other:?}"),
+        }
     }
 }

@@ -14,7 +14,7 @@
 //! partition scheme, tree shape and argmax semantics, so comparisons
 //! measure the algorithmic difference and nothing else.
 
-use crate::dist::{CommModel, MachineStats};
+use crate::dist::{BackendSpec, CommModel, MachineStats};
 use crate::greedy::GreedyKind;
 use crate::tree::AccumulationTree;
 use crate::ElemId;
@@ -24,7 +24,7 @@ pub mod greedyml;
 pub mod randgreedi;
 pub mod seq;
 
-pub use greedi::run_greedi;
+pub use greedi::{greedi_config, run_greedi};
 pub use greedyml::{run_dist, run_greedyml};
 pub use randgreedi::run_randgreedi;
 pub use seq::run_sequential;
@@ -68,6 +68,21 @@ pub struct DistConfig {
     /// Results are bit-identical across thread counts; `Some(1)` runs the
     /// whole simulation serially on the calling thread.
     pub threads: Option<usize>,
+    /// Execution backend: in-process thread pool (modeled comm) or one
+    /// worker process per machine (measured comm).  [`BackendSpec::Auto`]
+    /// defers to the `GREEDYML_BACKEND` environment variable.  Solutions
+    /// are bit-identical across backends.
+    pub backend: BackendSpec,
+    /// Problem spec for the process backend: flat `key = value` config
+    /// text (`dataset.*` / `problem.*` / `objective.*`) that a worker
+    /// parses to rebuild the oracle and constraint in its own address
+    /// space.  Required when the process backend is selected; ignored by
+    /// the thread backend.  See [`crate::coordinator::problem_spec`].
+    pub problem: Option<String>,
+    /// Worker executable for the process backend (`None` = the
+    /// `GREEDYML_WORKER_BIN` environment variable, else this binary).
+    /// Integration tests point this at the real `greedyml` binary.
+    pub worker_bin: Option<String>,
 }
 
 impl DistConfig {
@@ -84,6 +99,9 @@ impl DistConfig {
             compare_all_children: false,
             comm: CommModel::default(),
             threads: None,
+            backend: BackendSpec::Auto,
+            problem: None,
+            worker_bin: None,
         }
     }
 }
@@ -124,7 +142,12 @@ pub struct DistOutcome {
     /// BSP computation seconds: Σ over levels of the superstep max.
     pub comp_secs: f64,
     /// BSP communication seconds: Σ over levels of the superstep max.
+    /// α–β-modeled on the thread backend, measured on the process backend
+    /// (see [`DistOutcome::comm_measured`]).
     pub comm_secs: f64,
+    /// Whether `comm_secs` was *measured* (process backend: real
+    /// serialization + pipe transfer wall time) rather than α–β-modeled.
+    pub comm_measured: bool,
     /// Largest candidate-set size any accumulator worked on
     /// (Table 1 "Elements per interior node").
     pub max_accum_elems: usize,

@@ -6,7 +6,7 @@
 //! with `compare_all_children` enabled — Theorem 4.4 with L = 1 recovers
 //! its α/2 guarantee.
 
-use super::{greedyml::run_dist, DistConfig, DistOutcome, PartitionScheme};
+use super::{greedyml::run_dist, DistConfig, DistOutcome};
 use crate::constraint::Constraint;
 use crate::dist::DistError;
 use crate::greedy::GreedyKind;
@@ -43,19 +43,16 @@ impl RandGreediOpts {
         }
     }
 
-    /// Expand into the full engine config.
+    /// Expand into the full engine config (backend settings at their
+    /// defaults — the coordinator overrides them before running).
     pub fn to_config(self) -> DistConfig {
         DistConfig {
-            tree: AccumulationTree::randgreedi(self.machines),
             kind: self.kind,
-            seed: self.seed,
             mem_limit: self.mem_limit,
-            partition: PartitionScheme::Random,
             local_view: self.local_view,
             added_elements: self.added_elements,
             compare_all_children: true,
-            comm: Default::default(),
-            threads: None,
+            ..DistConfig::greedyml(AccumulationTree::randgreedi(self.machines), self.seed)
         }
     }
 }

@@ -5,10 +5,10 @@
 
 use super::dataset::{build_problem, BuiltProblem};
 use crate::algo::{
-    run_greedi, run_greedyml, run_randgreedi, run_sequential, randgreedi::RandGreediOpts,
-    DistConfig,
+    greedi_config, run_dist, run_sequential, randgreedi::RandGreediOpts, DistConfig,
 };
 use crate::constraint::{Cardinality, Constraint, PartitionMatroid};
+use crate::dist::BackendSpec;
 use crate::greedy::GreedyKind;
 use crate::metrics::RunReport;
 use crate::runtime::Engine;
@@ -86,23 +86,36 @@ pub struct Experiment {
     pub added_elements: usize,
     /// Executor width (`run.threads`; 0 or absent = auto).
     pub threads: Option<usize>,
+    /// Execution backend for the distributed variants (`run.backend`
+    /// config key / `--backend` flag / `GREEDYML_BACKEND`).
+    pub backend: BackendSpec,
+    /// Flat problem spec shipped to process-backend workers.
+    pub problem_spec: String,
+}
+
+/// Build the constraint described by the `[problem]` section.  Shared by
+/// the experiment runner and the process-backend worker, which rebuilds
+/// the same constraint from the shipped problem spec.  Returns the
+/// constraint and the solution-size parameter `k`.
+pub fn build_constraint(cfg: &Config, n: usize) -> crate::Result<(Box<dyn Constraint>, usize)> {
+    let k = cfg.u64_or("problem.k", 32)? as usize;
+    let constraint: Box<dyn Constraint> = match cfg.str_or("problem.constraint", "cardinality") {
+        "cardinality" => Box::new(Cardinality::new(k)),
+        "matroid" => {
+            let groups = cfg.u64_or("problem.groups", 4)? as usize;
+            let cap = (k / groups).max(1) as u32;
+            Box::new(PartitionMatroid::round_robin(n, groups, cap))
+        }
+        other => anyhow::bail!("unknown constraint '{other}'"),
+    };
+    Ok((constraint, k))
 }
 
 impl Experiment {
     /// Build from a config (see configs/ for examples).
     pub fn from_config(cfg: &Config, engine: Option<Arc<Engine>>) -> crate::Result<Self> {
         let problem = build_problem(cfg, engine)?;
-        let k = cfg.u64_or("problem.k", 32)? as usize;
-        let constraint: Box<dyn Constraint> = match cfg.str_or("problem.constraint", "cardinality")
-        {
-            "cardinality" => Box::new(Cardinality::new(k)),
-            "matroid" => {
-                let groups = cfg.u64_or("problem.groups", 4)? as usize;
-                let cap = (k / groups).max(1) as u32;
-                Box::new(PartitionMatroid::round_robin(problem.oracle.n(), groups, cap))
-            }
-            other => anyhow::bail!("unknown constraint '{other}'"),
-        };
+        let (constraint, k) = build_constraint(cfg, problem.oracle.n())?;
         let algos = cfg
             .str_or("run.algos", "greedy, randgreedi:8, greedyml:8:2")
             .split(',')
@@ -116,6 +129,8 @@ impl Experiment {
                 crate::util::config::parse_u64(v).map_err(|m| anyhow::anyhow!("mem_limit: {m}"))?,
             ),
         };
+        let backend = BackendSpec::parse(cfg.str_or("run.backend", "auto"))
+            .map_err(|e| anyhow::anyhow!("run.backend: {e}"))?;
         Ok(Self {
             name: cfg.str_or("name", "experiment").to_string(),
             problem,
@@ -130,6 +145,36 @@ impl Experiment {
                 0 => None,
                 t => Some(t as usize),
             },
+            backend,
+            problem_spec: super::problem_spec(cfg),
+        })
+    }
+
+    /// Attach this experiment's backend settings to an engine config.
+    fn with_backend(&self, mut cfg: DistConfig) -> DistConfig {
+        cfg.backend = self.backend;
+        cfg.problem = Some(self.problem_spec.clone());
+        cfg.threads = cfg.threads.or(self.threads);
+        cfg
+    }
+
+    /// The full engine config for a tree-shaped run of this experiment
+    /// (GreedyML, or the RandGreeDI/GreeDI argmax when
+    /// `compare_all_children`), with run options and backend settings
+    /// attached.  The CLI's `--trace` re-run uses this so the traced
+    /// config can never diverge from the tabulated one.
+    pub fn dist_config(
+        &self,
+        tree: AccumulationTree,
+        compare_all_children: bool,
+    ) -> DistConfig {
+        self.with_backend(DistConfig {
+            mem_limit: self.mem_limit,
+            local_view: self.local_view,
+            added_elements: self.added_elements,
+            compare_all_children,
+            threads: self.threads,
+            ..DistConfig::greedyml(tree, self.seed)
         })
     }
 
@@ -165,11 +210,14 @@ impl Experiment {
                         })
                         .map_err(|e| e.to_string())
                 }
-                AlgoSpec::GreeDi { m } => run_greedi(oracle, self.constraint.as_ref(), m, self.mem_limit)
-                    .map(|out| {
-                        RunReport::from_outcome(&label, &dataset, self.k, &out, m, m, 1)
-                    })
-                    .map_err(|e| e.to_string()),
+                AlgoSpec::GreeDi { m } => {
+                    let cfg = self.with_backend(greedi_config(m, self.mem_limit));
+                    run_dist(oracle, self.constraint.as_ref(), &cfg)
+                        .map(|out| {
+                            RunReport::from_outcome(&label, &dataset, self.k, &out, m, m, 1)
+                        })
+                        .map_err(|e| e.to_string())
+                }
                 AlgoSpec::RandGreedi { m } => {
                     let opts = RandGreediOpts {
                         mem_limit: self.mem_limit,
@@ -177,7 +225,8 @@ impl Experiment {
                         added_elements: self.added_elements,
                         ..RandGreediOpts::new(m, self.seed)
                     };
-                    run_randgreedi(oracle, self.constraint.as_ref(), opts)
+                    let cfg = self.with_backend(opts.to_config());
+                    run_dist(oracle, self.constraint.as_ref(), &cfg)
                         .map(|out| {
                             RunReport::from_outcome(&label, &dataset, self.k, &out, m, m, 1)
                         })
@@ -185,14 +234,8 @@ impl Experiment {
                 }
                 AlgoSpec::GreedyMl { m, b } => {
                     let tree = AccumulationTree::new(m, b);
-                    let cfg = DistConfig {
-                        mem_limit: self.mem_limit,
-                        local_view: self.local_view,
-                        added_elements: self.added_elements,
-                        threads: self.threads,
-                        ..DistConfig::greedyml(tree, self.seed)
-                    };
-                    run_greedyml(oracle, self.constraint.as_ref(), &cfg)
+                    let cfg = self.dist_config(tree, false);
+                    run_dist(oracle, self.constraint.as_ref(), &cfg)
                         .map(|out| {
                             RunReport::from_outcome(
                                 &label,
@@ -278,6 +321,19 @@ mod tests {
         assert!(reports.is_empty());
         assert_eq!(failures.len(), 1);
         assert!(failures[0].1.contains("out of memory"));
+    }
+
+    #[test]
+    fn backend_key_parses_and_rejects_garbage() {
+        let base = "[dataset]\nkind = retail\nn = 120\n[problem]\nk = 4\n[run]\nalgos = greedy\n";
+        let exp = Experiment::from_config(&Config::parse(base).unwrap(), None).unwrap();
+        assert_eq!(exp.backend, BackendSpec::Auto);
+        assert!(exp.problem_spec.contains("dataset.kind = retail"));
+        let threaded = format!("{base}backend = thread\n");
+        let exp = Experiment::from_config(&Config::parse(&threaded).unwrap(), None).unwrap();
+        assert_eq!(exp.backend, BackendSpec::Thread);
+        let bogus = format!("{base}backend = quantum\n");
+        assert!(Experiment::from_config(&Config::parse(&bogus).unwrap(), None).is_err());
     }
 
     #[test]

@@ -11,6 +11,44 @@ pub use experiment::{AlgoSpec, Experiment};
 pub use sweep::Sweep;
 
 use crate::metrics::RunReport;
+use crate::util::config::Config;
+
+/// Serialize the problem-defining sections of a config (`dataset.*`,
+/// `problem.*`, `objective.*`) into flat `key = value` text.  A
+/// process-backend worker parses this to rebuild the same oracle and
+/// constraint in its own address space — the generators are seeded, so the
+/// rebuild is byte-identical.  Values that would not survive a reparse
+/// verbatim (a `#` reads as a comment, surrounding quotes get stripped)
+/// are quoted with whichever quote character they don't contain.
+pub fn problem_spec(cfg: &Config) -> String {
+    let mut out = String::new();
+    for section in ["dataset", "problem", "objective"] {
+        for (k, v) in cfg.section(section) {
+            out.push_str(k);
+            out.push_str(" = ");
+            let needs_quoting = v.contains('#')
+                || (v.len() >= 2
+                    && ((v.starts_with('"') && v.ends_with('"'))
+                        || (v.starts_with('\'') && v.ends_with('\''))));
+            if needs_quoting && !v.contains('"') {
+                out.push('"');
+                out.push_str(v);
+                out.push('"');
+            } else if needs_quoting && !v.contains('\'') {
+                out.push('\'');
+                out.push_str(v);
+                out.push('\'');
+            } else {
+                // Pathological (contains '#' plus both quote kinds):
+                // shipped raw; the Ready{n} handshake catches a divergent
+                // rebuild.
+                out.push_str(v);
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
 
 /// Render a report table (header + one row per run + failures).
 pub fn render_table(reports: &[RunReport], failures: &[(String, String)]) -> String {
@@ -37,5 +75,40 @@ mod tests {
         assert!(t.contains("FAILED"));
         assert!(t.contains("out of memory"));
         assert!(t.lines().count() >= 2);
+    }
+
+    #[test]
+    fn problem_spec_roundtrips_through_config_parse() {
+        let cfg = Config::parse(
+            "name = x\n[dataset]\nkind = retail\nn = 300\n[problem]\nk = 8\n\
+             [run]\nalgos = greedy\n[objective]\nkind = auto\n",
+        )
+        .unwrap();
+        let spec = problem_spec(&cfg);
+        assert!(spec.contains("dataset.kind = retail"));
+        assert!(spec.contains("problem.k = 8"));
+        assert!(spec.contains("objective.kind = auto"));
+        assert!(!spec.contains("run.algos"), "run section must not ship to workers");
+        let reparsed = Config::parse(&spec).unwrap();
+        assert_eq!(reparsed.str("dataset.kind").unwrap(), "retail");
+        assert_eq!(reparsed.u64("problem.k").unwrap(), 8);
+        // Building from the spec yields the same problem.
+        let a = build_problem(&cfg, None).unwrap();
+        let b = build_problem(&reparsed, None).unwrap();
+        assert_eq!(a.oracle.n(), b.oracle.n());
+        assert_eq!(a.objective, b.objective);
+    }
+
+    #[test]
+    fn problem_spec_quotes_values_a_reparse_would_mangle() {
+        // A '#' in a path must not be read as a comment by the worker.
+        let cfg = Config::parse(
+            "[dataset]\nkind = edgelist\npath = \"data/graph#v2.txt\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.str("dataset.path").unwrap(), "data/graph#v2.txt");
+        let spec = problem_spec(&cfg);
+        let reparsed = Config::parse(&spec).unwrap();
+        assert_eq!(reparsed.str("dataset.path").unwrap(), "data/graph#v2.txt");
     }
 }

@@ -5,8 +5,9 @@
 
 use super::experiment::AlgoSpec;
 use super::BuiltProblem;
-use crate::algo::{run_sequential, DistConfig};
+use crate::algo::{greedi_config, run_dist, run_sequential, DistConfig};
 use crate::constraint::Cardinality;
+use crate::dist::BackendSpec;
 use crate::greedy::GreedyKind;
 use crate::metrics::RunReport;
 use crate::tree::AccumulationTree;
@@ -28,6 +29,10 @@ pub struct Sweep {
     pub mem_limit: Option<u64>,
     /// k-medoid local-view scheme.
     pub local_view: bool,
+    /// Execution backend for the distributed variants.
+    pub backend: BackendSpec,
+    /// Flat problem spec shipped to process-backend workers.
+    pub problem_spec: String,
 }
 
 impl Sweep {
@@ -53,6 +58,8 @@ impl Sweep {
                     .map_err(|m| anyhow::anyhow!("sweep.mem_limit: {m}"))?,
             ),
         };
+        let backend = BackendSpec::parse(cfg.str_or("sweep.backend", "auto"))
+            .map_err(|e| anyhow::anyhow!("sweep.backend: {e}"))?;
         Ok(Self {
             ks,
             algos,
@@ -60,7 +67,22 @@ impl Sweep {
             seed: cfg.u64_or("sweep.seed", 42)?,
             mem_limit,
             local_view: cfg.bool_or("sweep.local_view", false)?,
+            backend,
+            problem_spec: super::problem_spec(cfg),
         })
+    }
+
+    /// Attach this sweep's backend settings to an engine config.  The
+    /// sweep varies `k` and always runs a cardinality constraint — append
+    /// both to the spec (later keys win) so process workers rebuild the
+    /// constraint the cell actually runs.
+    fn with_backend(&self, mut dist: DistConfig, k: usize) -> DistConfig {
+        dist.backend = self.backend;
+        dist.problem = Some(format!(
+            "{}problem.constraint = cardinality\nproblem.k = {k}\n",
+            self.problem_spec
+        ));
+        dist
     }
 
     /// Run the grid. Each (k, algo) cell is repeated `reps` times with
@@ -98,7 +120,8 @@ impl Sweep {
                                 .map_err(|e| e.to_string())
                         }
                         AlgoSpec::GreeDi { m } => {
-                            crate::algo::run_greedi(oracle, &constraint, m, self.mem_limit)
+                            let cfg = self.with_backend(greedi_config(m, self.mem_limit), k);
+                            run_dist(oracle, &constraint, &cfg)
                                 .map(|o| {
                                     (o.value, o.critical_calls, o.comp_secs, o.comm_secs, o.peak_mem())
                                 })
@@ -110,19 +133,26 @@ impl Sweep {
                                 local_view: self.local_view,
                                 ..crate::algo::randgreedi::RandGreediOpts::new(m, self.seed + r)
                             };
-                            crate::algo::run_randgreedi(oracle, &constraint, opts)
+                            let cfg = self.with_backend(opts.to_config(), k);
+                            run_dist(oracle, &constraint, &cfg)
                                 .map(|o| {
                                     (o.value, o.critical_calls, o.comp_secs, o.comm_secs, o.peak_mem())
                                 })
                                 .map_err(|e| e.to_string())
                         }
                         AlgoSpec::GreedyMl { m, b } => {
-                            let cfg = DistConfig {
-                                mem_limit: self.mem_limit,
-                                local_view: self.local_view,
-                                ..DistConfig::greedyml(AccumulationTree::new(m, b), self.seed + r)
-                            };
-                            crate::algo::run_greedyml(oracle, &constraint, &cfg)
+                            let cfg = self.with_backend(
+                                DistConfig {
+                                    mem_limit: self.mem_limit,
+                                    local_view: self.local_view,
+                                    ..DistConfig::greedyml(
+                                        AccumulationTree::new(m, b),
+                                        self.seed + r,
+                                    )
+                                },
+                                k,
+                            );
+                            run_dist(oracle, &constraint, &cfg)
                                 .map(|o| {
                                     (o.value, o.critical_calls, o.comp_secs, o.comm_secs, o.peak_mem())
                                 })

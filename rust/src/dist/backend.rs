@@ -1,0 +1,283 @@
+//! The distributed-runtime backend abstraction.
+//!
+//! The BSP engine ([`crate::algo::run_dist`]) walks the accumulation tree
+//! level by level, but *how* a superstep's per-machine tasks execute, how
+//! child solutions ship between tree levels, and who mints each machine's
+//! [`MemoryMeter`](super::MemoryMeter) is a [`Backend`] concern:
+//!
+//! * [`ThreadBackend`] — the default simulator: every machine is a task on
+//!   the persistent work-stealing pool ([`super::pool`]), solutions move
+//!   by `memcpy`, and communication seconds come from the α–β
+//!   [`CommModel`].  `threads = 1` reproduces the serial runtime
+//!   bit-for-bit.
+//! * [`ProcessBackend`](super::proc::ProcessBackend) — one forked worker
+//!   process per machine (a hidden `greedyml worker` subcommand speaking
+//!   length-prefixed JSON frames over stdin/stdout), so every machine has
+//!   a real address space and `comm_secs` is *measured* solution-shipping
+//!   wall time instead of a model.
+//!
+//! Both backends run the identical node program ([`super::node`]), so
+//! solutions, values and call counts are bit-identical across them — the
+//! property `tests/test_backend.rs` locks down.  An MPI backend slots in
+//! behind the same trait (the ROADMAP north star).
+
+use super::node::{accum_step, leaf_step, NodeParams, NodeState, StepReport};
+use super::pool::Executor;
+use super::{CommModel, DistError, MachineStats};
+use crate::constraint::Constraint;
+use crate::objective::Oracle;
+use crate::{ElemId, MachineId};
+
+/// Which backend a [`DistConfig`](crate::algo::DistConfig) selects.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendSpec {
+    /// Defer to the `GREEDYML_BACKEND` environment variable
+    /// (`thread` | `process`), defaulting to [`BackendSpec::Thread`].
+    #[default]
+    Auto,
+    /// In-process simulator on the persistent thread pool.
+    Thread,
+    /// One forked worker process per simulated machine.
+    Process,
+}
+
+impl BackendSpec {
+    /// Parse a config/CLI token (`auto` | `thread` | `process`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" | "" => Ok(Self::Auto),
+            "thread" | "threads" => Ok(Self::Thread),
+            "process" | "proc" => Ok(Self::Process),
+            other => Err(format!("unknown backend '{other}' (auto | thread | process)")),
+        }
+    }
+
+    /// Resolve `Auto` through `GREEDYML_BACKEND`; an unparsable variable is
+    /// an error (silently falling back would make a mis-spelt env var
+    /// quietly change what an experiment measured).
+    pub fn resolve(self) -> Result<ResolvedBackend, DistError> {
+        match self {
+            Self::Thread => Ok(ResolvedBackend::Thread),
+            Self::Process => Ok(ResolvedBackend::Process),
+            Self::Auto => match std::env::var("GREEDYML_BACKEND") {
+                Err(_) => Ok(ResolvedBackend::Thread),
+                Ok(v) => match Self::parse(&v) {
+                    Ok(Self::Process) => Ok(ResolvedBackend::Process),
+                    Ok(_) => Ok(ResolvedBackend::Thread),
+                    Err(e) => Err(DistError::backend(format!("GREEDYML_BACKEND: {e}"))),
+                },
+            },
+        }
+    }
+}
+
+/// A [`BackendSpec`] with `Auto` already resolved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResolvedBackend {
+    /// In-process thread-pool simulator.
+    Thread,
+    /// Process-per-machine workers.
+    Process,
+}
+
+/// One accumulation assignment within a superstep: `parent` gathers the
+/// solutions of `children` (its own S_prev stays in place — the engine has
+/// already removed the `j = 0` self-child).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AccumTask {
+    /// The aggregating node.
+    pub parent: MachineId,
+    /// Retiring children whose solutions ship to `parent`, in tree order.
+    pub children: Vec<MachineId>,
+}
+
+/// What the backend hands back when the run completes.
+#[derive(Clone, Debug)]
+pub struct BackendOutcome {
+    /// The root's final solution.
+    pub solution: Vec<ElemId>,
+    /// f(solution) as the root evaluated it.
+    pub value: f64,
+    /// Per-machine lifetime statistics, indexed by machine id.
+    pub machines: Vec<MachineStats>,
+}
+
+/// The three responsibilities the engine delegates: superstep fan-out,
+/// solution shipping between tree levels, and per-machine resources
+/// (memory meters, stats).  Implementations must execute the shared node
+/// program (`dist::node`) so results are backend-independent.
+pub trait Backend {
+    /// Backend label for reports and errors.
+    fn name(&self) -> &'static str;
+
+    /// Superstep 0: run GREEDY on every machine's partition
+    /// (`parts[i]` belongs to machine `i`).  Reports come back in machine
+    /// order; if any machine fails, the whole superstep still completes
+    /// (BSP ranks finish their step) and the first failure in machine
+    /// order is returned.
+    fn run_leaves(&mut self, parts: Vec<Vec<ElemId>>) -> Result<Vec<StepReport>, DistError>;
+
+    /// Superstep `level ≥ 1`: ship each task's child solutions to its
+    /// parent and run the accumulation step there.  Reports come back in
+    /// task order; error semantics as in [`Backend::run_leaves`].
+    fn run_superstep(
+        &mut self,
+        level: u32,
+        tasks: &[AccumTask],
+    ) -> Result<Vec<StepReport>, DistError>;
+
+    /// Tear down and collect the final solution + per-machine stats.
+    fn finish(&mut self) -> Result<BackendOutcome, DistError>;
+
+    /// Whether `comm_secs` in this backend's reports is measured wall time
+    /// (process backend) rather than the α–β model (thread backend).
+    fn measures_comm(&self) -> bool;
+}
+
+/// The in-process backend: machines are tasks on the persistent
+/// work-stealing [`Executor`]; `comm_secs` follows the α–β [`CommModel`].
+pub struct ThreadBackend<'a> {
+    exec: &'a Executor<'a>,
+    oracle: &'a dyn Oracle,
+    constraint: &'a dyn Constraint,
+    params: NodeParams,
+    comm: CommModel,
+    /// Live per-machine state (None once retired or not yet started).
+    nodes: Vec<Option<NodeState>>,
+    /// Stats of machines that shipped their solution and retired.
+    retired: Vec<Option<MachineStats>>,
+}
+
+impl<'a> ThreadBackend<'a> {
+    /// Backend over `machines` simulated machines on an already-running
+    /// executor.
+    pub fn new(
+        exec: &'a Executor<'a>,
+        oracle: &'a dyn Oracle,
+        constraint: &'a dyn Constraint,
+        params: NodeParams,
+        comm: CommModel,
+        machines: u32,
+    ) -> Self {
+        Self {
+            exec,
+            oracle,
+            constraint,
+            params,
+            comm,
+            nodes: (0..machines).map(|_| None).collect(),
+            retired: (0..machines).map(|_| None).collect(),
+        }
+    }
+}
+
+impl Backend for ThreadBackend<'_> {
+    fn name(&self) -> &'static str {
+        "thread"
+    }
+
+    fn run_leaves(&mut self, parts: Vec<Vec<ElemId>>) -> Result<Vec<StepReport>, DistError> {
+        let oracle = self.oracle;
+        let constraint = self.constraint;
+        let params = &self.params;
+        let inputs: Vec<(MachineId, Vec<ElemId>)> =
+            parts.into_iter().enumerate().map(|(i, p)| (i as MachineId, p)).collect();
+        let results = self.exec.map(inputs, |(id, part)| {
+            leaf_step(oracle, constraint, params, id, &part)
+        });
+        let mut reports = Vec::with_capacity(results.len());
+        for r in results {
+            let (state, report) = r?;
+            let id = state.stats.id as usize;
+            self.nodes[id] = Some(state);
+            reports.push(report);
+        }
+        Ok(reports)
+    }
+
+    fn run_superstep(
+        &mut self,
+        level: u32,
+        tasks: &[AccumTask],
+    ) -> Result<Vec<StepReport>, DistError> {
+        // Shipping phase: children hand their solutions to the submitting
+        // thread (in-process "communication"), retiring as they go.
+        struct Work {
+            state: NodeState,
+            children: Vec<super::node::ChildMsg>,
+        }
+        let mut work: Vec<Work> = Vec::with_capacity(tasks.len());
+        for task in tasks {
+            let state = self.nodes[task.parent as usize].take().expect("parent state missing");
+            let mut children = Vec::with_capacity(task.children.len());
+            for &c in &task.children {
+                let mut child = self.nodes[c as usize].take().expect("child state missing");
+                children.push(child.ship());
+                self.retired[c as usize] = Some(child.stats);
+            }
+            work.push(Work { state, children });
+        }
+
+        // Accumulation phase: fan out across the pool; modeled gather cost.
+        let oracle = self.oracle;
+        let constraint = self.constraint;
+        let params = &self.params;
+        let comm = self.comm;
+        let results = self.exec.map(work, |mut w| {
+            let msg_bytes: Vec<u64> = w.children.iter().map(|c| c.bytes).collect();
+            let comm_secs = comm.gather_time(&msg_bytes);
+            let report =
+                accum_step(oracle, constraint, params, &mut w.state, level, &w.children, comm_secs)?;
+            Ok::<(NodeState, StepReport), DistError>((w.state, report))
+        });
+        let mut reports = Vec::with_capacity(results.len());
+        for r in results {
+            let (state, report) = r?;
+            let id = state.stats.id as usize;
+            self.nodes[id] = Some(state);
+            reports.push(report);
+        }
+        Ok(reports)
+    }
+
+    fn finish(&mut self) -> Result<BackendOutcome, DistError> {
+        let root = self.nodes[0].take().expect("root state missing");
+        let solution = root.sol.clone();
+        let value = root.sol_value;
+        self.retired[0] = Some(root.stats);
+        for (i, slot) in self.nodes.iter_mut().enumerate() {
+            if let Some(state) = slot.take() {
+                self.retired[i] = Some(state.stats);
+            }
+        }
+        let machines: Vec<MachineStats> = self
+            .retired
+            .iter_mut()
+            .map(|s| s.take().expect("machine stats missing"))
+            .collect();
+        Ok(BackendOutcome { solution, value, machines })
+    }
+
+    fn measures_comm(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_spec_parses_tokens() {
+        assert_eq!(BackendSpec::parse("auto").unwrap(), BackendSpec::Auto);
+        assert_eq!(BackendSpec::parse("thread").unwrap(), BackendSpec::Thread);
+        assert_eq!(BackendSpec::parse(" Process ").unwrap(), BackendSpec::Process);
+        assert!(BackendSpec::parse("mpi").is_err());
+    }
+
+    #[test]
+    fn explicit_specs_resolve_without_env() {
+        assert_eq!(BackendSpec::Thread.resolve().unwrap(), ResolvedBackend::Thread);
+        assert_eq!(BackendSpec::Process.resolve().unwrap(), ResolvedBackend::Process);
+    }
+}

@@ -1,9 +1,12 @@
-//! Failures of a simulated distributed run.
+//! Failures of a distributed run.
 //!
-//! Out-of-memory is the only failure mode the runtime itself produces: the
+//! Out-of-memory is the failure mode the runtime semantics produce: the
 //! paper's §6.2 experiments *expect* runs to die when a machine's budget
 //! cannot hold the data or the accumulated child solutions, and the
-//! coordinator reports such runs as failures rather than panicking.
+//! coordinator reports such runs as failures rather than panicking.  The
+//! process backend adds a second mode — [`DistError::Backend`] — for the
+//! machinery itself (worker spawn, wire protocol), which is a bug or an
+//! environment problem, never an expected experimental outcome.
 
 use crate::util::fmt_bytes;
 use crate::MachineId;
@@ -14,14 +17,15 @@ pub enum DistError {
     /// A [`MemoryMeter`](super::MemoryMeter) charge exceeded the
     /// per-machine limit.  Carries enough context to tell *which* machine
     /// died, at *which* tree level, holding *what* — the coordinates the
-    /// memory experiments assert on.
+    /// memory experiments assert on.  The label is owned (`String`) so the
+    /// error serializes intact across the process-backend wire.
     OutOfMemory {
         /// Machine whose budget was exceeded.
         machine: MachineId,
         /// Tree level at which the charge happened (0 = leaf work).
         level: u32,
         /// What was being allocated ("partition data", "child solutions", …).
-        label: &'static str,
+        label: String,
         /// Bytes the failing charge asked for.
         requested: u64,
         /// Bytes already in use before the charge.
@@ -29,6 +33,21 @@ pub enum DistError {
         /// The per-machine limit.
         limit: u64,
     },
+    /// The execution backend itself failed (worker spawn, wire protocol,
+    /// missing problem spec) — distinct from algorithmic OOM because the
+    /// experiments must never confuse an infrastructure fault with a §6.2
+    /// memory result.
+    Backend {
+        /// Human-readable description of the fault.
+        message: String,
+    },
+}
+
+impl DistError {
+    /// Shorthand for a backend-infrastructure error.
+    pub fn backend(message: impl Into<String>) -> Self {
+        DistError::Backend { message: message.into() }
+    }
 }
 
 impl std::fmt::Display for DistError {
@@ -44,6 +63,7 @@ impl std::fmt::Display for DistError {
                     fmt_bytes(*limit)
                 )
             }
+            DistError::Backend { message } => write!(f, "backend failure: {message}"),
         }
     }
 }
@@ -59,7 +79,7 @@ mod tests {
         let e = DistError::OutOfMemory {
             machine: 0,
             level: 1,
-            label: "child solutions",
+            label: "child solutions".to_string(),
             requested: 2048,
             in_use: 1024,
             limit: 1536,
@@ -68,5 +88,12 @@ mod tests {
         assert!(msg.contains("machine 0 out of memory"), "{msg}");
         assert!(msg.contains("level 1"), "{msg}");
         assert!(msg.contains("child solutions"), "{msg}");
+    }
+
+    #[test]
+    fn backend_errors_name_the_fault() {
+        let e = DistError::backend("worker 3 exited before replying");
+        assert!(e.to_string().contains("backend failure"), "{e}");
+        assert!(e.to_string().contains("worker 3"), "{e}");
     }
 }

@@ -42,7 +42,7 @@ impl MemoryMeter {
                 return Err(DistError::OutOfMemory {
                     machine,
                     level,
-                    label,
+                    label: label.to_string(),
                     requested: bytes,
                     in_use: self.in_use,
                     limit,
@@ -116,6 +116,7 @@ mod tests {
                 assert_eq!(in_use, 0);
                 assert_eq!(limit, 10);
             }
+            other => panic!("expected OutOfMemory, got {other:?}"),
         }
     }
 

@@ -1,9 +1,23 @@
-//! The simulated distributed runtime underneath the algorithm layer.
+//! The distributed runtime underneath the algorithm layer.
 //!
 //! The paper's algorithms run on `m` MPI ranks; this crate reproduces them
-//! on one process by giving each *simulated machine* the resources the
-//! paper accounts for, so every §5/§6 measurement has a faithful source:
+//! by giving each *simulated machine* the resources the paper accounts
+//! for, so every §5/§6 measurement has a faithful source.  Since PR 3 the
+//! engine reaches those resources only through the [`Backend`] trait —
+//! superstep fan-out, solution shipping between tree levels, and
+//! per-machine meters/stats are backend concerns:
 //!
+//! * [`backend`] — the [`Backend`] trait, the [`BackendSpec`] selector
+//!   (`run.backend` config key / `--backend` flag / `GREEDYML_BACKEND`),
+//!   and [`ThreadBackend`]: machines as tasks on the persistent pool,
+//!   α–β-modeled communication (the default; `threads = 1` is bit-for-bit
+//!   the serial runtime).
+//! * [`proc`] — [`ProcessBackend`](proc::ProcessBackend): one forked
+//!   worker process per machine (the hidden `greedyml worker`
+//!   subcommand), real address spaces, *measured* solution-shipping time.
+//! * [`node`] — the per-machine node program (leaf GREEDY, accumulate,
+//!   ship) both backends execute bit-identically.
+//! * [`wire`] — the length-prefixed JSON frames of the worker protocol.
 //! * [`pool`] — the two-level parallel execution subsystem: a persistent
 //!   work-stealing pool spawned once per run ([`pool::with_pool`]), the
 //!   order-preserving superstep fan-out ([`Executor::map`] /
@@ -15,25 +29,33 @@
 //!   with [`DistError::OutOfMemory`], reproducing §6.2's "cannot even hold
 //!   the data" regime as a real error.
 //! * [`CommModel`] — the α–β (latency + bandwidth) communication model
-//!   behind the modeled `comm_secs` of Fig. 6.
+//!   behind the thread backend's modeled `comm_secs` (Fig. 6).
 //! * [`MachineStats`] — everything one machine did over its lifetime:
 //!   gain queries, abstract cost, computation/communication seconds, bytes
 //!   shipped, peak memory, highest active tree level.
-//! * [`NodeStep`] / [`Trace`] — the per-(machine, level) timeline,
-//!   exportable as Chrome-trace JSON (`chrome://tracing` / Perfetto).
+//! * [`NodeStep`] / [`Trace`] — the per-(machine, level) timeline with
+//!   memory watermarks, exportable as Chrome-trace JSON
+//!   (`chrome://tracing` / Perfetto).
 //!
 //! [`DistConfig::mem_limit`]: crate::algo::DistConfig::mem_limit
 
+pub mod backend;
 pub mod comm;
 pub mod error;
 pub mod memory;
+pub mod node;
 pub mod pool;
+pub mod proc;
 pub mod stats;
 pub mod trace;
+pub mod wire;
 
+pub use backend::{AccumTask, Backend, BackendOutcome, BackendSpec, ResolvedBackend, ThreadBackend};
 pub use comm::CommModel;
 pub use error::DistError;
 pub use memory::MemoryMeter;
+pub use node::{ChildMsg, NodeParams, NodeState, StepReport};
 pub use pool::{parallel_map, Executor};
+pub use proc::ProcessBackend;
 pub use stats::MachineStats;
 pub use trace::{NodeStep, Trace};

@@ -1,0 +1,380 @@
+//! The per-machine node program of Algorithm 3.1, shared by every backend.
+//!
+//! A backend decides *where* each simulated machine runs (a pool task, a
+//! forked worker process, eventually an MPI rank) — but *what* a machine
+//! does during a superstep must be byte-for-byte identical everywhere, or
+//! the backends stop being interchangeable.  This module is that single
+//! source of truth: [`leaf_step`] (level 0: GREEDY on the machine's
+//! partition) and [`accum_step`] (level ℓ ≥ 1: union the child solutions,
+//! GREEDY on the union, argmax against the previous solution), both
+//! operating on one [`NodeState`] and charging its [`MemoryMeter`].
+//!
+//! Determinism contract: given the same oracle data, [`NodeParams`] and
+//! inputs, both steps produce identical solutions, values, call counts and
+//! memory-charge sequences regardless of the backend, the thread count or
+//! the host process — the backend-parity suite (`tests/test_backend.rs`)
+//! enforces this.
+
+use super::{DistError, MachineStats, MemoryMeter};
+use crate::constraint::Constraint;
+use crate::greedy::{greedy, GreedyKind, GreedyOutcome};
+use crate::objective::Oracle;
+use crate::util::rng::Rng;
+use crate::util::timer::timed;
+use crate::{ElemId, MachineId};
+
+/// The slice of [`DistConfig`](crate::algo::DistConfig) a node program
+/// needs — the full config also carries coordinator-side concerns (tree
+/// shape, backend choice, comm model) that never cross into a worker.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeParams {
+    /// Greedy implementation at every node.
+    pub kind: GreedyKind,
+    /// Seed of the random tape (also seeds §6.4 added-element draws).
+    pub seed: u64,
+    /// Ground-set size (bounds the added-element draws).
+    pub n: usize,
+    /// Per-machine memory limit in bytes (None = unlimited).
+    pub mem_limit: Option<u64>,
+    /// Evaluate objectives against machine-local ground sets (§6.4).
+    pub local_view: bool,
+    /// Random extra elements added to every accumulation step (§6.4).
+    pub added_elements: usize,
+    /// RandGreeDI argmax semantics (compare every child solution).
+    pub compare_all_children: bool,
+}
+
+/// Rolling state of one machine between supersteps.
+pub struct NodeState {
+    /// Lifetime statistics (id, calls, bytes, peaks).
+    pub stats: MachineStats,
+    /// The machine's memory budget.
+    pub meter: MemoryMeter,
+    /// S_prev: the machine's best solution so far.
+    pub sol: Vec<ElemId>,
+    /// f(S_prev) as evaluated at this machine's last active level.
+    pub sol_value: f64,
+    /// Bytes currently charged for holding `sol`.
+    pub sol_bytes: u64,
+}
+
+impl NodeState {
+    /// Package the held solution for shipping to the parent (Algorithm 3.1
+    /// lines 6-7: send & break).  Records the sent bytes in the stats; the
+    /// solution is moved out, leaving the node retired.
+    pub fn ship(&mut self) -> ChildMsg {
+        let bytes = self.sol_bytes;
+        self.stats.bytes_sent += bytes;
+        ChildMsg {
+            from: self.stats.id,
+            sol: std::mem::take(&mut self.sol),
+            value: self.sol_value,
+            bytes,
+        }
+    }
+}
+
+/// A child's shipped solution — the one payload that crosses machine
+/// boundaries, and therefore the unit the process backend serializes
+/// (see [`crate::dist::wire`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChildMsg {
+    /// Sending machine.
+    pub from: MachineId,
+    /// The child's final solution.
+    pub sol: Vec<ElemId>,
+    /// f(sol) as the child evaluated it.
+    pub value: f64,
+    /// Bytes of the shipped solution (Σ `elem_bytes`).
+    pub bytes: u64,
+}
+
+/// What one machine did during a single superstep — the backend returns
+/// one per active node and the engine folds them into level stats and the
+/// Chrome trace.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepReport {
+    /// The machine that computed.
+    pub machine: MachineId,
+    /// Tree level of the superstep.
+    pub level: u32,
+    /// Wall computation seconds within the step.
+    pub comp_secs: f64,
+    /// Communication seconds (α–β-modeled on the thread backend, measured
+    /// wall time on the process backend).
+    pub comm_secs: f64,
+    /// Gain queries issued within the step.
+    pub calls: u64,
+    /// Size of the candidate union |D| at an accumulation step (0 at leaves).
+    pub accum_elems: usize,
+    /// The machine's memory watermark (meter peak) at the end of the step.
+    pub peak_mem: u64,
+}
+
+/// Level-0 superstep body: GREEDY on the machine's partition.
+pub fn leaf_step(
+    oracle: &dyn Oracle,
+    constraint: &dyn Constraint,
+    p: &NodeParams,
+    id: MachineId,
+    part: &[ElemId],
+) -> Result<(NodeState, StepReport), DistError> {
+    let mut stats = MachineStats::new(id);
+    let mut meter = MemoryMeter::new(p.mem_limit);
+    let data_bytes: u64 = part.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
+    meter.charge(data_bytes, id, 0, "partition data")?;
+    let view = p.local_view.then_some(part);
+    let (out, secs): (GreedyOutcome, f64) =
+        timed(|| greedy(p.kind, oracle, constraint, part, view));
+    stats.calls = out.calls;
+    stats.cost = out.cost;
+    stats.comp_secs = secs;
+    let sol_bytes: u64 = out.solution.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
+    meter.charge(sol_bytes, id, 0, "local solution")?;
+    // The partition itself is no longer needed once the local solution
+    // exists (only S_prev crosses levels).
+    meter.release(data_bytes);
+    stats.peak_mem = meter.peak();
+    let report = StepReport {
+        machine: id,
+        level: 0,
+        comp_secs: secs,
+        comm_secs: 0.0,
+        calls: out.calls,
+        accum_elems: 0,
+        peak_mem: meter.peak(),
+    };
+    Ok((
+        NodeState { stats, meter, sol: out.solution, sol_value: out.value, sol_bytes },
+        report,
+    ))
+}
+
+/// Level ℓ ≥ 1 superstep body: receive child solutions, union with S_prev
+/// (plus §6.4 added elements), GREEDY on the union, keep the argmax.
+///
+/// `comm_secs` is supplied by the backend — the α–β model on the thread
+/// backend, the measured solution-shipping wall time on the process
+/// backend — so the node program stays identical while the *meaning* of
+/// the communication column changes underneath it.
+pub fn accum_step(
+    oracle: &dyn Oracle,
+    constraint: &dyn Constraint,
+    p: &NodeParams,
+    ctx: &mut NodeState,
+    level: u32,
+    children: &[ChildMsg],
+    comm_secs: f64,
+) -> Result<StepReport, DistError> {
+    let id = ctx.stats.id;
+    // Receive child solutions: memory charges + the backend's comm time.
+    let recv_bytes: u64 = children.iter().map(|c| c.bytes).sum();
+    ctx.meter.charge(recv_bytes, id, level, "child solutions")?;
+    ctx.stats.comm_secs += comm_secs;
+    ctx.stats.bytes_received += recv_bytes;
+
+    // D ← S_prev ∪ child solutions (lines 8-13), plus the §6.4 optional
+    // random extra elements.  The union is built *distinct*: solutions can
+    // overlap across levels, and `sample_added` can re-draw elements
+    // already in D — blind concatenation would inflate `accum_elems` and
+    // charge the memory meter twice for the same resident element.
+    // Membership is tracked in a |D|-sized set, not an O(n) bitmap: the
+    // union is O(b·k + added) elements and this runs once per active node
+    // per level.
+    let cap = ctx.sol.len()
+        + children.iter().map(|c| c.sol.len()).sum::<usize>()
+        + p.added_elements;
+    let mut seen = std::collections::HashSet::with_capacity(cap);
+    let mut d: Vec<ElemId> = Vec::with_capacity(cap);
+    for &e in ctx.sol.iter().chain(children.iter().flat_map(|c| c.sol.iter())) {
+        if seen.insert(e) {
+            d.push(e);
+        }
+    }
+    let added = sample_added(p, level, id);
+    let mut add_bytes = 0u64;
+    for &e in &added {
+        if seen.insert(e) {
+            add_bytes += oracle.elem_bytes(e) as u64;
+            d.push(e);
+        }
+    }
+    if add_bytes > 0 {
+        ctx.meter.charge(add_bytes, id, level, "added elements")?;
+    }
+    let accum_elems = d.len();
+
+    // Run GREEDY on the union (line 14).
+    let view = p.local_view.then_some(&d[..]);
+    let (out, secs) = timed(|| greedy(p.kind, oracle, constraint, &d, view));
+    let mut calls = out.calls;
+    let mut cost = out.cost;
+
+    // Line 15: S_prev ← argmax{f(S), f(S_prev)}.  Under a local view the
+    // stored f(S_prev) was computed against different data, so re-evaluate
+    // it against this node's view.
+    let prev_value = if p.local_view {
+        let mut st = oracle.new_state(view);
+        for &e in &ctx.sol {
+            calls += 1;
+            cost += st.call_cost(e);
+            st.commit(e);
+        }
+        st.value()
+    } else {
+        ctx.sol_value
+    };
+
+    let mut best_sol = out.solution;
+    let mut best_val = out.value;
+    if prev_value > best_val {
+        best_val = prev_value;
+        best_sol = ctx.sol.clone();
+    }
+    if p.compare_all_children {
+        // RandGreeDI (Algorithm 2.2 line 7): also compare every child's
+        // local solution.  Only the argmax winner is cloned — b can be as
+        // large as m.
+        let mut winner: Option<&ChildMsg> = None;
+        for c in children {
+            if c.value > best_val {
+                best_val = c.value;
+                winner = Some(c);
+            }
+        }
+        if let Some(c) = winner {
+            best_sol = c.sol.clone();
+        }
+    }
+
+    ctx.stats.calls += calls;
+    ctx.stats.cost += cost;
+    ctx.stats.comp_secs += secs;
+    ctx.stats.top_level = level;
+    ctx.stats.max_accum_elems = ctx.stats.max_accum_elems.max(accum_elems);
+
+    // Swap in the new solution. The merged solution is a subset of D
+    // (greedy selects *from* the union), so its data is already charged;
+    // release everything D-related first, then re-charge just the retained
+    // solution.
+    let new_bytes: u64 = best_sol.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
+    ctx.meter.release(recv_bytes + add_bytes + ctx.sol_bytes);
+    ctx.meter.charge(new_bytes, id, level, "merged solution")?;
+    ctx.sol = best_sol;
+    ctx.sol_value = best_val;
+    ctx.sol_bytes = new_bytes;
+    ctx.stats.peak_mem = ctx.meter.peak();
+    Ok(StepReport {
+        machine: id,
+        level,
+        comp_secs: secs,
+        comm_secs,
+        calls,
+        accum_elems,
+        peak_mem: ctx.meter.peak(),
+    })
+}
+
+/// §6.4 "added images": extra random elements mixed into every
+/// accumulation step, seeded per (level, node) for reproducibility.
+fn sample_added(p: &NodeParams, level: u32, id: MachineId) -> Vec<ElemId> {
+    if p.added_elements == 0 {
+        return Vec::new();
+    }
+    let count = p.added_elements.min(p.n);
+    let mut rng = Rng::split(p.seed ^ 0xADDED, ((level as u64) << 32) | id as u64);
+    rng.sample_distinct(p.n, count).into_iter().map(|e| e as ElemId).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constraint::Cardinality;
+    use crate::objective::KCover;
+    use std::sync::Arc;
+
+    fn params(n: usize) -> NodeParams {
+        NodeParams {
+            kind: GreedyKind::Lazy,
+            seed: 7,
+            n,
+            mem_limit: None,
+            local_view: false,
+            added_elements: 0,
+            compare_all_children: false,
+        }
+    }
+
+    fn oracle(n: usize) -> KCover {
+        let data = crate::data::gen::transactions(
+            crate::data::gen::TransactionParams {
+                num_sets: n,
+                num_items: n / 2,
+                mean_size: 5.0,
+                zipf_s: 0.9,
+            },
+            11,
+        );
+        KCover::new(Arc::new(data))
+    }
+
+    #[test]
+    fn leaf_then_accum_runs_and_reports() {
+        let o = oracle(200);
+        let c = Cardinality::new(6);
+        let p = params(200);
+        let part_a: Vec<ElemId> = (0..100).collect();
+        let part_b: Vec<ElemId> = (100..200).collect();
+        let (mut a, ra) = leaf_step(&o, &c, &p, 0, &part_a).unwrap();
+        let (mut b, rb) = leaf_step(&o, &c, &p, 1, &part_b).unwrap();
+        assert_eq!(ra.level, 0);
+        assert!(ra.calls > 0 && rb.calls > 0);
+        assert!(ra.peak_mem > 0);
+        let msg = b.ship();
+        assert_eq!(msg.from, 1);
+        assert_eq!(b.stats.bytes_sent, msg.bytes);
+        assert!(b.sol.is_empty(), "shipping moves the solution out");
+        let rep = accum_step(&o, &c, &p, &mut a, 1, &[msg], 0.25).unwrap();
+        assert_eq!(rep.level, 1);
+        assert!(rep.accum_elems >= a.sol.len());
+        assert_eq!(a.stats.top_level, 1);
+        assert!((a.stats.comm_secs - 0.25).abs() < 1e-12, "comm passes through");
+        assert!(a.stats.bytes_received > 0);
+    }
+
+    #[test]
+    fn steps_are_deterministic_across_invocations() {
+        let o = oracle(300);
+        let c = Cardinality::new(8);
+        let p = NodeParams { added_elements: 20, ..params(300) };
+        let part: Vec<ElemId> = (0..150).collect();
+        let run = || {
+            let (mut s, _) = leaf_step(&o, &c, &p, 0, &part).unwrap();
+            let (mut t, _) = leaf_step(&o, &c, &p, 1, &(150..300).collect::<Vec<_>>()).unwrap();
+            let msg = t.ship();
+            accum_step(&o, &c, &p, &mut s, 1, &[msg], 0.0).unwrap();
+            (s.sol.clone(), s.sol_value, s.stats.calls)
+        };
+        let (sol1, v1, c1) = run();
+        let (sol2, v2, c2) = run();
+        assert_eq!(sol1, sol2);
+        assert_eq!(v1.to_bits(), v2.to_bits());
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn leaf_oom_carries_partition_data_label() {
+        let o = oracle(200);
+        let c = Cardinality::new(4);
+        let p = NodeParams { mem_limit: Some(8), ..params(200) };
+        let part: Vec<ElemId> = (0..100).collect();
+        match leaf_step(&o, &c, &p, 3, &part).unwrap_err() {
+            DistError::OutOfMemory { machine, level, label, .. } => {
+                assert_eq!(machine, 3);
+                assert_eq!(level, 0);
+                assert_eq!(label, "partition data");
+            }
+            other => panic!("expected OOM, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,551 @@
+//! The process-per-machine backend.
+//!
+//! [`ProcessBackend`] forks one worker process per simulated machine — a
+//! hidden `greedyml worker` subcommand — and drives it over stdin/stdout
+//! with the length-prefixed JSON frames of [`super::wire`].  Each machine
+//! therefore owns a *real* address space: its dataset copy, partition and
+//! solutions live in a separate heap, and solution shipping is real
+//! serialization + pipe I/O, so `comm_secs` is **measured** wall time
+//! (the coordinator clocks each gather from the first `Ship` request to
+//! the parent's `Recv` receipt) instead of the α–β model the thread
+//! backend books.
+//!
+//! Workers rebuild the oracle from the problem spec carried by
+//! [`DistConfig::problem`](crate::algo::DistConfig::problem) — flat
+//! `key = value` config text — because closures cannot cross a process
+//! boundary; the generators are seeded, so every worker reconstructs
+//! byte-identical data and the run stays bit-compatible with the thread
+//! backend (`tests/test_backend.rs`).
+
+use super::backend::{AccumTask, Backend, BackendOutcome};
+use super::node::{accum_step, leaf_step, ChildMsg, NodeParams, NodeState, StepReport};
+use super::wire::{read_frame, write_frame, FromWorker, ToWorker};
+use super::{pool, DistError, MachineStats};
+use crate::{ElemId, MachineId};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::time::Instant;
+
+/// One spawned worker process (= one simulated machine).
+struct Worker {
+    machine: MachineId,
+    child: Child,
+    stdin: BufWriter<ChildStdin>,
+    stdout: BufReader<ChildStdout>,
+}
+
+impl Worker {
+    fn send(&mut self, msg: &ToWorker) -> Result<(), DistError> {
+        write_frame(&mut self.stdin, &msg.to_value())
+            .map_err(|e| DistError::backend(format!("worker {}: {e}", self.machine)))
+    }
+
+    fn recv(&mut self) -> Result<FromWorker, DistError> {
+        match read_frame(&mut self.stdout) {
+            Ok(Some(v)) => FromWorker::from_value(&v),
+            Ok(None) => Err(DistError::backend(format!(
+                "worker {} exited before replying",
+                self.machine
+            ))),
+            Err(e) => Err(DistError::backend(format!("worker {}: {e}", self.machine))),
+        }
+    }
+
+    /// Receive, unwrapping a worker-side failure into `Err`.
+    fn recv_ok(&mut self) -> Result<FromWorker, DistError> {
+        match self.recv()? {
+            FromWorker::Fail(e) => Err(e),
+            other => Ok(other),
+        }
+    }
+}
+
+/// Resolve the worker executable: explicit config value, then the
+/// `GREEDYML_WORKER_BIN` environment variable, then this very binary.
+fn worker_binary(explicit: Option<&str>) -> Result<std::path::PathBuf, DistError> {
+    if let Some(p) = explicit {
+        return Ok(p.into());
+    }
+    if let Ok(p) = std::env::var("GREEDYML_WORKER_BIN") {
+        if !p.trim().is_empty() {
+            return Ok(p.into());
+        }
+    }
+    std::env::current_exe()
+        .map_err(|e| DistError::backend(format!("cannot locate worker binary: {e}")))
+}
+
+/// The process-per-machine [`Backend`].
+pub struct ProcessBackend {
+    workers: Vec<Worker>,
+}
+
+impl ProcessBackend {
+    /// Fork `machines` workers, handshake each with the node parameters
+    /// and the problem spec, and verify they rebuilt the same ground set.
+    pub fn spawn(
+        machines: u32,
+        params: &NodeParams,
+        threads: usize,
+        problem: &str,
+        worker_bin: Option<&str>,
+    ) -> Result<Self, DistError> {
+        let bin = worker_binary(worker_bin)?;
+        let mut workers = Vec::with_capacity(machines as usize);
+        for machine in 0..machines {
+            let mut child = Command::new(&bin)
+                .arg("worker")
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .map_err(|e| {
+                    DistError::backend(format!("cannot spawn worker {}: {e}", bin.display()))
+                })?;
+            let stdin = BufWriter::new(child.stdin.take().expect("piped stdin"));
+            let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
+            workers.push(Worker { machine, child, stdin, stdout });
+        }
+        let mut backend = Self { workers };
+        // Send every Init before reading any Ready so the m dataset
+        // rebuilds run concurrently.
+        for w in &mut backend.workers {
+            let init = ToWorker::Init {
+                machine: w.machine,
+                threads,
+                params: params.clone(),
+                problem: problem.to_string(),
+            };
+            w.send(&init)?;
+        }
+        for w in &mut backend.workers {
+            match w.recv_ok()? {
+                FromWorker::Ready { n } if n == params.n => {}
+                FromWorker::Ready { n } => {
+                    return Err(DistError::backend(format!(
+                        "worker {} rebuilt a ground set of {n} elements, coordinator has {}; \
+                         the problem spec does not describe this oracle",
+                        w.machine, params.n
+                    )))
+                }
+                other => {
+                    return Err(DistError::backend(format!(
+                        "worker {}: expected ready, got {other:?}",
+                        w.machine
+                    )))
+                }
+            }
+        }
+        Ok(backend)
+    }
+}
+
+impl Backend for ProcessBackend {
+    fn name(&self) -> &'static str {
+        "process"
+    }
+
+    fn run_leaves(&mut self, parts: Vec<Vec<ElemId>>) -> Result<Vec<StepReport>, DistError> {
+        if parts.len() != self.workers.len() {
+            return Err(DistError::backend(format!(
+                "{} partitions for {} workers",
+                parts.len(),
+                self.workers.len()
+            )));
+        }
+        for (w, part) in self.workers.iter_mut().zip(parts) {
+            w.send(&ToWorker::Leaf { part })?;
+        }
+        // Every rank finishes its superstep; first failure in machine
+        // order wins (same semantics as the thread backend).
+        let mut reports = Vec::with_capacity(self.workers.len());
+        let mut first_err: Option<DistError> = None;
+        for w in &mut self.workers {
+            match w.recv()? {
+                FromWorker::Step(r) => reports.push(r),
+                FromWorker::Fail(e) => first_err = first_err.take().or(Some(e)),
+                other => {
+                    return Err(DistError::backend(format!(
+                        "worker {}: expected step, got {other:?}",
+                        w.machine
+                    )))
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(reports),
+        }
+    }
+
+    fn run_superstep(
+        &mut self,
+        level: u32,
+        tasks: &[AccumTask],
+    ) -> Result<Vec<StepReport>, DistError> {
+        // Shipping phase: for each parent, gather the retiring children's
+        // solutions and forward them.  The clock runs from the first Ship
+        // request to the parent's Recv receipt — serialization, two pipe
+        // hops and deserialization are all inside it, which is exactly the
+        // cost the α–β model approximates.
+        for task in tasks {
+            let t0 = Instant::now();
+            let mut children: Vec<ChildMsg> = Vec::with_capacity(task.children.len());
+            for &c in &task.children {
+                self.workers[c as usize].send(&ToWorker::Ship)?;
+                match self.workers[c as usize].recv_ok()? {
+                    FromWorker::Sol(msg) => children.push(msg),
+                    other => {
+                        return Err(DistError::backend(format!(
+                            "worker {c}: expected sol, got {other:?}"
+                        )))
+                    }
+                }
+            }
+            let parent = &mut self.workers[task.parent as usize];
+            parent.send(&ToWorker::Recv { level, children })?;
+            match parent.recv_ok()? {
+                FromWorker::Ack => {}
+                other => {
+                    return Err(DistError::backend(format!(
+                        "worker {}: expected ack, got {other:?}",
+                        task.parent
+                    )))
+                }
+            }
+            let comm_secs = t0.elapsed().as_secs_f64();
+            // Kick off the accumulation and move on — parents of this
+            // superstep compute concurrently in their own processes.
+            parent.send(&ToWorker::Accum { level, comm_secs })?;
+        }
+
+        // Collection phase, in task order.
+        let mut reports = Vec::with_capacity(tasks.len());
+        let mut first_err: Option<DistError> = None;
+        for task in tasks {
+            let parent = &mut self.workers[task.parent as usize];
+            match parent.recv()? {
+                FromWorker::Step(r) => reports.push(r),
+                FromWorker::Fail(e) => first_err = first_err.take().or(Some(e)),
+                other => {
+                    return Err(DistError::backend(format!(
+                        "worker {}: expected step, got {other:?}",
+                        task.parent
+                    )))
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(reports),
+        }
+    }
+
+    fn finish(&mut self) -> Result<BackendOutcome, DistError> {
+        for w in &mut self.workers {
+            w.send(&ToWorker::Finish)?;
+        }
+        let mut machines: Vec<MachineStats> = Vec::with_capacity(self.workers.len());
+        let mut solution = Vec::new();
+        let mut value = 0.0;
+        for w in &mut self.workers {
+            match w.recv_ok()? {
+                FromWorker::Final { stats, sol, value: v } => {
+                    if stats.id != w.machine {
+                        return Err(DistError::backend(format!(
+                            "worker {} reported stats for machine {}",
+                            w.machine, stats.id
+                        )));
+                    }
+                    if w.machine == 0 {
+                        solution = sol;
+                        value = v;
+                    }
+                    machines.push(stats);
+                }
+                other => {
+                    return Err(DistError::backend(format!(
+                        "worker {}: expected final, got {other:?}",
+                        w.machine
+                    )))
+                }
+            }
+        }
+        for w in &mut self.workers {
+            let _ = w.child.wait();
+        }
+        Ok(BackendOutcome { solution, value, machines })
+    }
+
+    fn measures_comm(&self) -> bool {
+        true
+    }
+}
+
+impl Drop for ProcessBackend {
+    fn drop(&mut self) {
+        // On the success path the workers have already exited after Final;
+        // on error paths make sure no orphans linger.
+        for w in &mut self.workers {
+            match w.child.try_wait() {
+                Ok(Some(_)) => {}
+                _ => {
+                    let _ = w.child.kill();
+                    let _ = w.child.wait();
+                }
+            }
+        }
+    }
+}
+
+// ---- worker side -------------------------------------------------------
+
+/// Entry point of the hidden `greedyml worker` subcommand: serve one
+/// simulated machine over stdin/stdout until `Finish` or EOF.
+pub fn run_worker() -> crate::Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut input = BufReader::new(stdin.lock());
+    let mut output = BufWriter::new(stdout.lock());
+
+    let first = read_frame(&mut input)
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .ok_or_else(|| anyhow::anyhow!("worker: EOF before init"))?;
+    let ToWorker::Init { machine, threads, params, problem } =
+        ToWorker::from_value(&first).map_err(|e| anyhow::anyhow!("{e}"))?
+    else {
+        anyhow::bail!("worker: first frame must be init");
+    };
+
+    let built = build_worker_problem(&problem);
+    let (oracle, constraint) = match built {
+        Ok(pair) => pair,
+        Err(e) => {
+            reply(&mut output, &FromWorker::Fail(DistError::backend(format!("{e:#}"))))?;
+            return Ok(());
+        }
+    };
+    reply(&mut output, &FromWorker::Ready { n: oracle.n() })?;
+
+    // The worker's own two-level executor serves the nested gain scans;
+    // the machine-level parallelism lives in the process fan-out, so one
+    // thread per worker is the default.
+    pool::with_pool(threads.max(1), |_exec| {
+        serve(&mut input, &mut output, oracle.as_ref(), constraint.as_ref(), &params, machine)
+    })
+}
+
+/// Rebuild the oracle + constraint a worker simulates, from the flat
+/// config text the coordinator shipped.
+fn build_worker_problem(
+    problem: &str,
+) -> crate::Result<(std::sync::Arc<dyn crate::objective::Oracle>, Box<dyn crate::constraint::Constraint>)>
+{
+    let cfg = crate::util::config::Config::parse(problem)
+        .map_err(|e| anyhow::anyhow!("problem spec: {e}"))?;
+    let built = crate::coordinator::build_problem(&cfg, None)?;
+    let (constraint, _k) =
+        crate::coordinator::experiment::build_constraint(&cfg, built.oracle.n())?;
+    Ok((built.oracle, constraint))
+}
+
+fn reply(output: &mut impl Write, msg: &FromWorker) -> crate::Result<()> {
+    write_frame(output, &msg.to_value()).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+/// The command loop: one superstep role per frame.
+fn serve(
+    input: &mut impl Read,
+    output: &mut impl Write,
+    oracle: &dyn crate::objective::Oracle,
+    constraint: &dyn crate::constraint::Constraint,
+    params: &NodeParams,
+    machine: MachineId,
+) -> crate::Result<()> {
+    let mut state: Option<NodeState> = None;
+    let mut pending: Option<(u32, Vec<ChildMsg>)> = None;
+    loop {
+        let Some(frame) = read_frame(input).map_err(|e| anyhow::anyhow!("{e}"))? else {
+            return Ok(()); // coordinator went away — exit quietly
+        };
+        let cmd = ToWorker::from_value(&frame).map_err(|e| anyhow::anyhow!("{e}"))?;
+        match cmd {
+            ToWorker::Leaf { part } => {
+                match leaf_step(oracle, constraint, params, machine, &part) {
+                    Ok((s, report)) => {
+                        state = Some(s);
+                        reply(output, &FromWorker::Step(report))?;
+                    }
+                    Err(e) => reply(output, &FromWorker::Fail(e))?,
+                }
+            }
+            ToWorker::Ship => match state.as_mut() {
+                Some(s) => {
+                    let msg = s.ship();
+                    reply(output, &FromWorker::Sol(msg))?;
+                }
+                None => reply(
+                    output,
+                    &FromWorker::Fail(DistError::backend(format!(
+                        "worker {machine}: ship before leaf"
+                    ))),
+                )?,
+            },
+            ToWorker::Recv { level, children } => {
+                pending = Some((level, children));
+                reply(output, &FromWorker::Ack)?;
+            }
+            ToWorker::Accum { level, comm_secs } => {
+                let took = pending.take();
+                let result = match (state.as_mut(), took) {
+                    (Some(s), Some((lvl, children))) if lvl == level => {
+                        accum_step(oracle, constraint, params, s, level, &children, comm_secs)
+                    }
+                    _ => Err(DistError::backend(format!(
+                        "worker {machine}: accum at level {level} without matching recv"
+                    ))),
+                };
+                match result {
+                    Ok(report) => reply(output, &FromWorker::Step(report))?,
+                    Err(e) => reply(output, &FromWorker::Fail(e))?,
+                }
+            }
+            ToWorker::Finish => {
+                match state.take() {
+                    Some(s) => reply(
+                        output,
+                        &FromWorker::Final {
+                            stats: s.stats.clone(),
+                            sol: s.sol,
+                            value: s.sol_value,
+                        },
+                    )?,
+                    None => reply(
+                        output,
+                        &FromWorker::Fail(DistError::backend(format!(
+                            "worker {machine}: finish before any superstep"
+                        ))),
+                    )?,
+                }
+                return Ok(());
+            }
+            ToWorker::Init { .. } => {
+                reply(
+                    output,
+                    &FromWorker::Fail(DistError::backend(format!(
+                        "worker {machine}: duplicate init"
+                    ))),
+                )?;
+                anyhow::bail!("duplicate init");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::greedy::GreedyKind;
+
+    fn params() -> NodeParams {
+        NodeParams {
+            kind: GreedyKind::Lazy,
+            seed: 1,
+            n: 100,
+            mem_limit: None,
+            local_view: false,
+            added_elements: 0,
+            compare_all_children: false,
+        }
+    }
+
+    #[test]
+    fn spawn_with_missing_binary_is_a_backend_error() {
+        let err = ProcessBackend::spawn(
+            2,
+            &params(),
+            1,
+            "dataset.kind = retail\ndataset.n = 100\n",
+            Some("/nonexistent/greedyml-worker-binary"),
+        )
+        .unwrap_err();
+        match err {
+            DistError::Backend { message } => {
+                assert!(message.contains("cannot spawn worker"), "{message}")
+            }
+            other => panic!("expected backend error, got {other:?}"),
+        }
+    }
+
+    /// Drive `serve` in-process over byte buffers: a 1-machine session is
+    /// leaf → finish, no child traffic — the protocol state machine works
+    /// without forking anything.
+    #[test]
+    fn serve_runs_a_single_machine_session_in_memory() {
+        let data = crate::data::gen::transactions(
+            crate::data::gen::TransactionParams {
+                num_sets: 100,
+                num_items: 50,
+                mean_size: 5.0,
+                zipf_s: 0.9,
+            },
+            5,
+        );
+        let oracle = crate::objective::KCover::new(std::sync::Arc::new(data));
+        let constraint = crate::constraint::Cardinality::new(4);
+        let mut input = Vec::new();
+        let part: Vec<ElemId> = (0..100).collect();
+        write_frame(&mut input, &ToWorker::Leaf { part }.to_value()).unwrap();
+        write_frame(&mut input, &ToWorker::Finish.to_value()).unwrap();
+        let mut output = Vec::new();
+        serve(&mut input.as_slice(), &mut output, &oracle, &constraint, &params(), 0).unwrap();
+
+        let mut cursor = output.as_slice();
+        let step = read_frame(&mut cursor).unwrap().unwrap();
+        match FromWorker::from_value(&step).unwrap() {
+            FromWorker::Step(r) => {
+                assert_eq!(r.level, 0);
+                assert!(r.calls > 0);
+            }
+            other => panic!("expected step, got {other:?}"),
+        }
+        let fin = read_frame(&mut cursor).unwrap().unwrap();
+        match FromWorker::from_value(&fin).unwrap() {
+            FromWorker::Final { stats, sol, value } => {
+                assert_eq!(stats.id, 0);
+                assert_eq!(sol.len(), 4);
+                assert!(value > 0.0);
+            }
+            other => panic!("expected final, got {other:?}"),
+        }
+        assert!(read_frame(&mut cursor).unwrap().is_none(), "no trailing frames");
+    }
+
+    #[test]
+    fn serve_reports_protocol_misuse_as_fail() {
+        let data = crate::data::gen::transactions(
+            crate::data::gen::TransactionParams {
+                num_sets: 40,
+                num_items: 20,
+                mean_size: 4.0,
+                zipf_s: 0.9,
+            },
+            5,
+        );
+        let oracle = crate::objective::KCover::new(std::sync::Arc::new(data));
+        let constraint = crate::constraint::Cardinality::new(3);
+        let mut input = Vec::new();
+        write_frame(&mut input, &ToWorker::Ship.to_value()).unwrap();
+        let mut output = Vec::new();
+        // Ship before leaf: the worker answers Fail and keeps serving
+        // (the EOF after it ends the loop cleanly).
+        serve(&mut input.as_slice(), &mut output, &oracle, &constraint, &params(), 7).unwrap();
+        let v = read_frame(&mut output.as_slice()).unwrap().unwrap();
+        match FromWorker::from_value(&v).unwrap() {
+            FromWorker::Fail(DistError::Backend { message }) => {
+                assert!(message.contains("ship before leaf"), "{message}")
+            }
+            other => panic!("expected fail, got {other:?}"),
+        }
+    }
+}

@@ -4,7 +4,11 @@
 //! collected [`Trace`] reconstructs the level-synchronous schedule (level
 //! ℓ starts when the slowest node of level ℓ−1 finishes) and exports it as
 //! Chrome-trace JSON — open the file in `chrome://tracing` or Perfetto to
-//! see the paper's critical path as actual swim lanes.
+//! see the paper's critical path as actual swim lanes.  Each machine also
+//! gets a **memory counter track** (`"ph": "C"` events) fed by its
+//! [`MemoryMeter`](super::MemoryMeter) watermark at the end of every
+//! step, so the §6.2 memory story is visible in the same timeline as the
+//! compute/communication spans.
 
 use crate::MachineId;
 
@@ -17,10 +21,13 @@ pub struct NodeStep {
     pub level: u32,
     /// Computation seconds within the step.
     pub comp_secs: f64,
-    /// Modeled receive seconds within the step (0 at the leaves).
+    /// Communication seconds within the step (0 at the leaves; modeled on
+    /// the thread backend, measured on the process backend).
     pub comm_secs: f64,
     /// Gain queries issued within the step.
     pub calls: u64,
+    /// The machine's memory watermark (meter peak) at the end of the step.
+    pub peak_mem: u64,
 }
 
 /// An ordered collection of [`NodeStep`]s for one distributed run.
@@ -63,8 +70,10 @@ impl Trace {
     /// Render as a Chrome-trace JSON document (the "JSON Array Format"
     /// wrapped in an object).  Every span is a complete event (`"ph": "X"`)
     /// with microsecond timestamps; machines are rows (`tid`), and each
-    /// accumulation step shows a `recv` span (the modeled gather) followed
-    /// by its `greedy` span.
+    /// accumulation step shows a `recv` span (the gather) followed by its
+    /// `greedy` span.  Each step additionally emits a counter event
+    /// (`"ph": "C"`, one `mem m<id>` track per machine) carrying the
+    /// machine's memory watermark at the step's end.
     pub fn to_chrome_json(&self) -> String {
         let durs = self.level_durations();
         let mut starts = vec![0.0f64; durs.len()];
@@ -96,6 +105,16 @@ impl Trace {
                 "dur": s.comp_secs * 1e6,
                 "args": { "level": s.level, "calls": s.calls },
             }));
+            // Memory watermark counter: plotted as a per-machine track.
+            events.push(serde_json::json!({
+                "name": format!("mem m{}", s.machine),
+                "cat": "mem",
+                "ph": "C",
+                "pid": 0,
+                "tid": s.machine,
+                "ts": (t0 + s.comm_secs + s.comp_secs) * 1e6,
+                "args": { "bytes": s.peak_mem },
+            }));
         }
         let doc = serde_json::json!({
             "displayTimeUnit": "ms",
@@ -120,10 +139,44 @@ mod tests {
     /// root receives and accumulates.
     fn sample() -> Trace {
         Trace::new(vec![
-            NodeStep { machine: 0, level: 0, comp_secs: 0.010, comm_secs: 0.0, calls: 100 },
-            NodeStep { machine: 1, level: 0, comp_secs: 0.030, comm_secs: 0.0, calls: 120 },
-            NodeStep { machine: 0, level: 1, comp_secs: 0.005, comm_secs: 0.002, calls: 40 },
+            NodeStep {
+                machine: 0,
+                level: 0,
+                comp_secs: 0.010,
+                comm_secs: 0.0,
+                calls: 100,
+                peak_mem: 1000,
+            },
+            NodeStep {
+                machine: 1,
+                level: 0,
+                comp_secs: 0.030,
+                comm_secs: 0.0,
+                calls: 120,
+                peak_mem: 1500,
+            },
+            NodeStep {
+                machine: 0,
+                level: 1,
+                comp_secs: 0.005,
+                comm_secs: 0.002,
+                calls: 40,
+                peak_mem: 2500,
+            },
         ])
+    }
+
+    fn events_of(text: &str) -> Vec<Json> {
+        let parsed = Json::parse(text).expect("valid JSON");
+        parsed.get("traceEvents").unwrap().as_arr().unwrap().to_vec()
+    }
+
+    fn spans(events: &[Json]) -> Vec<Json> {
+        events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .cloned()
+            .collect()
     }
 
     #[test]
@@ -137,19 +190,18 @@ mod tests {
     #[test]
     fn golden_chrome_trace_shape() {
         let text = sample().to_chrome_json();
-        let parsed = Json::parse(&text).expect("valid JSON");
-        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let events = events_of(&text);
+        let spans = spans(&events);
         // 3 compute spans + 1 recv span (only the root has comm time).
-        assert_eq!(events.len(), 4, "{text}");
-        for e in events {
-            assert_eq!(e.get("ph").unwrap().as_str(), Some("X"), "complete events only");
+        assert_eq!(spans.len(), 4, "{text}");
+        for e in &spans {
             assert!(e.get("ts").unwrap().as_f64().is_some());
             assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
             assert!(e.get("tid").unwrap().as_u64().is_some());
             assert!(e.get("name").unwrap().as_str().is_some());
         }
         // The level-1 spans start after the slowest leaf (0.030 s = 30000 µs).
-        let lvl1: Vec<_> = events
+        let lvl1: Vec<_> = spans
             .iter()
             .filter(|e| e.get("args").unwrap().get("level").unwrap().as_u64() == Some(1))
             .collect();
@@ -160,15 +212,38 @@ mod tests {
     }
 
     #[test]
+    fn memory_watermarks_are_counter_events() {
+        let text = sample().to_chrome_json();
+        let events = events_of(&text);
+        let counters: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("C"))
+            .collect();
+        assert_eq!(counters.len(), 3, "one watermark per step:\n{text}");
+        // Per-machine tracks with the meter peaks as values.
+        let bytes: Vec<u64> = counters
+            .iter()
+            .map(|e| e.get("args").unwrap().get("bytes").unwrap().as_u64().unwrap())
+            .collect();
+        assert_eq!(bytes, vec![1000, 1500, 2500]);
+        let names: Vec<&str> =
+            counters.iter().map(|e| e.get("name").unwrap().as_str().unwrap()).collect();
+        assert_eq!(names, vec!["mem m0", "mem m1", "mem m0"]);
+        // The root's watermark lands at the end of its step (30 ms + 7 ms).
+        let root_ts = counters[2].get("ts").unwrap().as_f64().unwrap();
+        assert!((root_ts - 37_000.0).abs() < 1e-6, "{root_ts}");
+    }
+
+    #[test]
     fn recv_precedes_compute_within_a_step() {
         let text = sample().to_chrome_json();
-        let parsed = Json::parse(&text).unwrap();
-        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let events = events_of(&text);
         let find = |name: &str| {
             events
                 .iter()
                 .find(|e| e.get("name").unwrap().as_str() == Some(name))
                 .unwrap_or_else(|| panic!("missing event '{name}'"))
+                .clone()
         };
         let recv = find("recv L1");
         let comp = find("greedy L1");
@@ -184,7 +259,8 @@ mod tests {
         let path = path.to_str().unwrap().to_string();
         sample().write(&path).unwrap();
         let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
-        assert_eq!(parsed.get("traceEvents").unwrap().as_arr().unwrap().len(), 4);
+        // 4 spans + 3 memory counters.
+        assert_eq!(parsed.get("traceEvents").unwrap().as_arr().unwrap().len(), 7);
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,492 @@
+//! The process-backend wire protocol.
+//!
+//! Coordinator and workers speak length-prefixed JSON frames over the
+//! worker's stdin/stdout: a 4-byte little-endian payload length followed
+//! by one `serde_json` document.  JSON keeps the protocol debuggable
+//! (any frame can be printed and a session replayed by hand) and
+//! `serde_json`'s shortest-roundtrip float formatting (ryu) guarantees
+//! `f64` values cross the boundary bit-exactly — the backend-parity
+//! suite depends on `f(S)` surviving serialization.
+//!
+//! Message flow (one worker = one simulated machine):
+//!
+//! ```text
+//! coordinator → worker          worker → coordinator
+//! ------------------          --------------------
+//! Init{machine,params,spec}    Ready{n}
+//! Leaf{part}                   Step(report) | Fail(err)
+//! Ship                         Sol(child msg)
+//! Recv{level,children}         Ack            (receipt — ends the comm timer)
+//! Accum{level,comm_secs}       Step(report) | Fail(err)
+//! Finish                       Final{stats,sol,value}
+//! ```
+
+use super::node::{ChildMsg, NodeParams, StepReport};
+use super::{DistError, MachineStats};
+use crate::greedy::GreedyKind;
+use crate::{ElemId, MachineId};
+use serde_json::{json, Value};
+use std::io::{Read, Write};
+
+/// Hard cap on one frame's payload (a corrupt length prefix must not make
+/// the reader allocate gigabytes).
+const MAX_FRAME: u32 = 1 << 30;
+
+/// Write one length-prefixed JSON frame.
+pub fn write_frame(w: &mut impl Write, v: &Value) -> Result<(), DistError> {
+    let bytes = serde_json::to_vec(v)
+        .map_err(|e| DistError::backend(format!("frame encode: {e}")))?;
+    let len = u32::try_from(bytes.len())
+        .ok()
+        .filter(|&l| l <= MAX_FRAME)
+        .ok_or_else(|| DistError::backend(format!("frame of {} bytes too large", bytes.len())))?;
+    w.write_all(&len.to_le_bytes())
+        .and_then(|_| w.write_all(&bytes))
+        .and_then(|_| w.flush())
+        .map_err(|e| DistError::backend(format!("frame write: {e}")))
+}
+
+/// Read one frame; `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Value>, DistError> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(DistError::backend(format!("frame length read: {e}"))),
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        return Err(DistError::backend(format!("frame length {len} exceeds cap")));
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)
+        .map_err(|e| DistError::backend(format!("frame body read: {e}")))?;
+    serde_json::from_slice(&buf)
+        .map(Some)
+        .map_err(|e| DistError::backend(format!("frame decode: {e}")))
+}
+
+/// Coordinator → worker commands.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ToWorker {
+    /// Handshake: which machine this worker simulates, the node program
+    /// parameters, the executor width for its in-worker gain scans, and
+    /// the problem spec (flat config text) to rebuild the oracle from.
+    Init { machine: MachineId, threads: usize, params: NodeParams, problem: String },
+    /// Level-0 superstep: GREEDY on this partition.
+    Leaf { part: Vec<ElemId> },
+    /// Ship the held solution to the coordinator (the worker retires).
+    Ship,
+    /// Deliver child solutions for the coming accumulation; the worker
+    /// acks immediately so the coordinator can stop its transfer clock.
+    Recv { level: u32, children: Vec<ChildMsg> },
+    /// Run the accumulation step on the previously delivered children,
+    /// booking `comm_secs` (the coordinator-measured shipping time).
+    Accum { level: u32, comm_secs: f64 },
+    /// Ship final stats (and the solution, for the root) and exit.
+    Finish,
+}
+
+/// Worker → coordinator replies.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FromWorker {
+    /// Handshake reply: the rebuilt oracle's ground-set size (sanity check
+    /// that coordinator and worker built the same problem).
+    Ready { n: usize },
+    /// A completed superstep.
+    Step(StepReport),
+    /// Receipt of a `Recv` payload.
+    Ack,
+    /// The shipped solution of a retiring machine.
+    Sol(ChildMsg),
+    /// Final stats + solution.
+    Final { stats: MachineStats, sol: Vec<ElemId>, value: f64 },
+    /// The node program failed (OOM) or the worker itself did.
+    Fail(DistError),
+}
+
+impl ToWorker {
+    /// Encode as a JSON frame body.
+    pub fn to_value(&self) -> Value {
+        match self {
+            Self::Init { machine, threads, params, problem } => json!({
+                "t": "init",
+                "machine": machine,
+                "threads": threads,
+                "params": params_to_value(params),
+                "problem": problem,
+            }),
+            Self::Leaf { part } => json!({ "t": "leaf", "part": part }),
+            Self::Ship => json!({ "t": "ship" }),
+            Self::Recv { level, children } => json!({
+                "t": "recv",
+                "level": level,
+                "children": children.iter().map(child_to_value).collect::<Vec<_>>(),
+            }),
+            Self::Accum { level, comm_secs } => {
+                json!({ "t": "accum", "level": level, "comm_secs": comm_secs })
+            }
+            Self::Finish => json!({ "t": "finish" }),
+        }
+    }
+
+    /// Decode from a JSON frame body.
+    pub fn from_value(v: &Value) -> Result<Self, DistError> {
+        match str_field(v, "t")? {
+            "init" => Ok(Self::Init {
+                machine: u64_field(v, "machine")? as MachineId,
+                threads: u64_field(v, "threads")? as usize,
+                params: params_from_value(field(v, "params")?)?,
+                problem: str_field(v, "problem")?.to_string(),
+            }),
+            "leaf" => Ok(Self::Leaf { part: elems_field(v, "part")? }),
+            "ship" => Ok(Self::Ship),
+            "recv" => Ok(Self::Recv {
+                level: u64_field(v, "level")? as u32,
+                children: arr_field(v, "children")?
+                    .iter()
+                    .map(child_from_value)
+                    .collect::<Result<_, _>>()?,
+            }),
+            "accum" => Ok(Self::Accum {
+                level: u64_field(v, "level")? as u32,
+                comm_secs: f64_field(v, "comm_secs")?,
+            }),
+            "finish" => Ok(Self::Finish),
+            other => Err(DistError::backend(format!("unknown command '{other}'"))),
+        }
+    }
+}
+
+impl FromWorker {
+    /// Encode as a JSON frame body.
+    pub fn to_value(&self) -> Value {
+        match self {
+            Self::Ready { n } => json!({ "t": "ready", "n": n }),
+            Self::Step(r) => json!({ "t": "step", "report": report_to_value(r) }),
+            Self::Ack => json!({ "t": "ack" }),
+            Self::Sol(m) => json!({ "t": "sol", "msg": child_to_value(m) }),
+            Self::Final { stats, sol, value } => json!({
+                "t": "final",
+                "stats": stats_to_value(stats),
+                "sol": sol,
+                "value": value,
+            }),
+            Self::Fail(e) => json!({ "t": "fail", "error": error_to_value(e) }),
+        }
+    }
+
+    /// Decode from a JSON frame body.
+    pub fn from_value(v: &Value) -> Result<Self, DistError> {
+        match str_field(v, "t")? {
+            "ready" => Ok(Self::Ready { n: u64_field(v, "n")? as usize }),
+            "step" => Ok(Self::Step(report_from_value(field(v, "report")?)?)),
+            "ack" => Ok(Self::Ack),
+            "sol" => Ok(Self::Sol(child_from_value(field(v, "msg")?)?)),
+            "final" => Ok(Self::Final {
+                stats: stats_from_value(field(v, "stats")?)?,
+                sol: elems_field(v, "sol")?,
+                value: f64_field(v, "value")?,
+            }),
+            "fail" => Ok(Self::Fail(error_from_value(field(v, "error")?)?)),
+            other => Err(DistError::backend(format!("unknown reply '{other}'"))),
+        }
+    }
+}
+
+// ---- field helpers ----------------------------------------------------
+
+fn field<'a>(v: &'a Value, key: &str) -> Result<&'a Value, DistError> {
+    v.get(key)
+        .ok_or_else(|| DistError::backend(format!("frame missing field '{key}'")))
+}
+
+fn str_field<'a>(v: &'a Value, key: &str) -> Result<&'a str, DistError> {
+    field(v, key)?
+        .as_str()
+        .ok_or_else(|| DistError::backend(format!("field '{key}' is not a string")))
+}
+
+fn u64_field(v: &Value, key: &str) -> Result<u64, DistError> {
+    field(v, key)?
+        .as_u64()
+        .ok_or_else(|| DistError::backend(format!("field '{key}' is not a u64")))
+}
+
+fn f64_field(v: &Value, key: &str) -> Result<f64, DistError> {
+    field(v, key)?
+        .as_f64()
+        .ok_or_else(|| DistError::backend(format!("field '{key}' is not a number")))
+}
+
+fn bool_field(v: &Value, key: &str) -> Result<bool, DistError> {
+    field(v, key)?
+        .as_bool()
+        .ok_or_else(|| DistError::backend(format!("field '{key}' is not a bool")))
+}
+
+fn arr_field<'a>(v: &'a Value, key: &str) -> Result<&'a [Value], DistError> {
+    field(v, key)?
+        .as_array()
+        .map(|a| a.as_slice())
+        .ok_or_else(|| DistError::backend(format!("field '{key}' is not an array")))
+}
+
+fn elems_field(v: &Value, key: &str) -> Result<Vec<ElemId>, DistError> {
+    arr_field(v, key)?
+        .iter()
+        .map(|e| {
+            e.as_u64()
+                .map(|x| x as ElemId)
+                .ok_or_else(|| DistError::backend(format!("field '{key}': non-integer element")))
+        })
+        .collect()
+}
+
+// ---- struct codecs ----------------------------------------------------
+
+fn params_to_value(p: &NodeParams) -> Value {
+    json!({
+        "kind": match p.kind { GreedyKind::Naive => "naive", GreedyKind::Lazy => "lazy" },
+        "seed": p.seed,
+        "n": p.n,
+        "mem_limit": p.mem_limit,
+        "local_view": p.local_view,
+        "added_elements": p.added_elements,
+        "compare_all_children": p.compare_all_children,
+    })
+}
+
+fn params_from_value(v: &Value) -> Result<NodeParams, DistError> {
+    Ok(NodeParams {
+        kind: match str_field(v, "kind")? {
+            "naive" => GreedyKind::Naive,
+            "lazy" => GreedyKind::Lazy,
+            other => return Err(DistError::backend(format!("unknown greedy kind '{other}'"))),
+        },
+        seed: u64_field(v, "seed")?,
+        n: u64_field(v, "n")? as usize,
+        mem_limit: match field(v, "mem_limit")? {
+            Value::Null => None,
+            other => Some(other.as_u64().ok_or_else(|| {
+                DistError::backend("field 'mem_limit' is neither null nor u64")
+            })?),
+        },
+        local_view: bool_field(v, "local_view")?,
+        added_elements: u64_field(v, "added_elements")? as usize,
+        compare_all_children: bool_field(v, "compare_all_children")?,
+    })
+}
+
+fn child_to_value(m: &ChildMsg) -> Value {
+    json!({ "from": m.from, "sol": m.sol, "value": m.value, "bytes": m.bytes })
+}
+
+fn child_from_value(v: &Value) -> Result<ChildMsg, DistError> {
+    Ok(ChildMsg {
+        from: u64_field(v, "from")? as MachineId,
+        sol: elems_field(v, "sol")?,
+        value: f64_field(v, "value")?,
+        bytes: u64_field(v, "bytes")?,
+    })
+}
+
+fn report_to_value(r: &StepReport) -> Value {
+    json!({
+        "machine": r.machine,
+        "level": r.level,
+        "comp_secs": r.comp_secs,
+        "comm_secs": r.comm_secs,
+        "calls": r.calls,
+        "accum_elems": r.accum_elems,
+        "peak_mem": r.peak_mem,
+    })
+}
+
+fn report_from_value(v: &Value) -> Result<StepReport, DistError> {
+    Ok(StepReport {
+        machine: u64_field(v, "machine")? as MachineId,
+        level: u64_field(v, "level")? as u32,
+        comp_secs: f64_field(v, "comp_secs")?,
+        comm_secs: f64_field(v, "comm_secs")?,
+        calls: u64_field(v, "calls")?,
+        accum_elems: u64_field(v, "accum_elems")? as usize,
+        peak_mem: u64_field(v, "peak_mem")?,
+    })
+}
+
+fn stats_to_value(s: &MachineStats) -> Value {
+    json!({
+        "id": s.id,
+        "calls": s.calls,
+        "cost": s.cost,
+        "comp_secs": s.comp_secs,
+        "comm_secs": s.comm_secs,
+        "bytes_sent": s.bytes_sent,
+        "bytes_received": s.bytes_received,
+        "peak_mem": s.peak_mem,
+        "top_level": s.top_level,
+        "max_accum_elems": s.max_accum_elems,
+    })
+}
+
+fn stats_from_value(v: &Value) -> Result<MachineStats, DistError> {
+    Ok(MachineStats {
+        id: u64_field(v, "id")? as MachineId,
+        calls: u64_field(v, "calls")?,
+        cost: u64_field(v, "cost")?,
+        comp_secs: f64_field(v, "comp_secs")?,
+        comm_secs: f64_field(v, "comm_secs")?,
+        bytes_sent: u64_field(v, "bytes_sent")?,
+        bytes_received: u64_field(v, "bytes_received")?,
+        peak_mem: u64_field(v, "peak_mem")?,
+        top_level: u64_field(v, "top_level")? as u32,
+        max_accum_elems: u64_field(v, "max_accum_elems")? as usize,
+    })
+}
+
+fn error_to_value(e: &DistError) -> Value {
+    match e {
+        DistError::OutOfMemory { machine, level, label, requested, in_use, limit } => json!({
+            "kind": "oom",
+            "machine": machine,
+            "level": level,
+            "label": label,
+            "requested": requested,
+            "in_use": in_use,
+            "limit": limit,
+        }),
+        DistError::Backend { message } => json!({ "kind": "backend", "message": message }),
+    }
+}
+
+fn error_from_value(v: &Value) -> Result<DistError, DistError> {
+    match str_field(v, "kind")? {
+        "oom" => Ok(DistError::OutOfMemory {
+            machine: u64_field(v, "machine")? as MachineId,
+            level: u64_field(v, "level")? as u32,
+            label: str_field(v, "label")?.to_string(),
+            requested: u64_field(v, "requested")?,
+            in_use: u64_field(v, "in_use")?,
+            limit: u64_field(v, "limit")?,
+        }),
+        "backend" => Ok(DistError::backend(str_field(v, "message")?)),
+        other => Err(DistError::backend(format!("unknown error kind '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_cmd(msg: ToWorker) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg.to_value()).unwrap();
+        let v = read_frame(&mut buf.as_slice()).unwrap().expect("frame present");
+        assert_eq!(ToWorker::from_value(&v).unwrap(), msg);
+    }
+
+    fn roundtrip_reply(msg: FromWorker) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg.to_value()).unwrap();
+        let v = read_frame(&mut buf.as_slice()).unwrap().expect("frame present");
+        assert_eq!(FromWorker::from_value(&v).unwrap(), msg);
+    }
+
+    #[test]
+    fn commands_roundtrip() {
+        roundtrip_cmd(ToWorker::Init {
+            machine: 3,
+            threads: 2,
+            params: NodeParams {
+                kind: GreedyKind::Lazy,
+                seed: 42,
+                n: 1000,
+                mem_limit: Some(1 << 20),
+                local_view: true,
+                added_elements: 50,
+                compare_all_children: false,
+            },
+            problem: "dataset.kind = retail\ndataset.n = 300\n".to_string(),
+        });
+        roundtrip_cmd(ToWorker::Leaf { part: vec![5, 1, 999] });
+        roundtrip_cmd(ToWorker::Ship);
+        roundtrip_cmd(ToWorker::Recv {
+            level: 2,
+            children: vec![ChildMsg { from: 4, sol: vec![7, 8], value: 12.5, bytes: 64 }],
+        });
+        roundtrip_cmd(ToWorker::Accum { level: 2, comm_secs: 0.125 });
+        roundtrip_cmd(ToWorker::Finish);
+    }
+
+    #[test]
+    fn replies_roundtrip() {
+        roundtrip_reply(FromWorker::Ready { n: 512 });
+        roundtrip_reply(FromWorker::Step(StepReport {
+            machine: 1,
+            level: 2,
+            comp_secs: 0.5,
+            comm_secs: 0.001,
+            calls: 900,
+            accum_elems: 33,
+            peak_mem: 4096,
+        }));
+        roundtrip_reply(FromWorker::Ack);
+        roundtrip_reply(FromWorker::Sol(ChildMsg {
+            from: 0,
+            sol: vec![1, 2, 3],
+            value: 7.25,
+            bytes: 96,
+        }));
+        roundtrip_reply(FromWorker::Final {
+            stats: MachineStats { id: 6, calls: 10, peak_mem: 77, ..MachineStats::new(6) },
+            sol: vec![9],
+            value: 3.5,
+        });
+        roundtrip_reply(FromWorker::Fail(DistError::OutOfMemory {
+            machine: 2,
+            level: 1,
+            label: "child solutions".to_string(),
+            requested: 100,
+            in_use: 50,
+            limit: 120,
+        }));
+        roundtrip_reply(FromWorker::Fail(DistError::backend("spawn failed")));
+    }
+
+    #[test]
+    fn f64_values_cross_the_wire_bit_exactly() {
+        // The parity suite compares f(S) with to_bits(); ryu's shortest
+        // representation must reproduce the exact double.
+        for v in [1.0 / 3.0, 1e-300, 123456789.123456789, f64::MIN_POSITIVE] {
+            let msg = FromWorker::Sol(ChildMsg { from: 0, sol: vec![], value: v, bytes: 0 });
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &msg.to_value()).unwrap();
+            let parsed = read_frame(&mut buf.as_slice()).unwrap().unwrap();
+            match FromWorker::from_value(&parsed).unwrap() {
+                FromWorker::Sol(m) => assert_eq!(m.value.to_bits(), v.to_bits()),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn eof_between_frames_is_clean_none() {
+        let empty: &[u8] = &[];
+        assert!(read_frame(&mut &*empty).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &json!({"t": "ack"})).unwrap();
+        buf.truncate(buf.len() - 2);
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected() {
+        let buf = (MAX_FRAME + 1).to_le_bytes().to_vec();
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+    }
+}

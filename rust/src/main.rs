@@ -31,6 +31,10 @@ fn real_main() -> greedyml::Result<()> {
         Some("datasets") => cmd_datasets(),
         Some("artifacts") => cmd_artifacts(&args),
         Some("model") => cmd_model(&args),
+        // Hidden: the process-backend worker protocol endpoint.  Spawned by
+        // ProcessBackend, one per simulated machine; speaks length-prefixed
+        // JSON frames on stdin/stdout (rust/src/dist/wire.rs).
+        Some("worker") => greedyml::dist::proc::run_worker(),
         Some(other) => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
         None => {
             println!("{USAGE}");
@@ -40,18 +44,21 @@ fn real_main() -> greedyml::Result<()> {
 }
 
 const USAGE: &str = "usage: greedyml <run|sweep|tree|datasets|artifacts|model> [flags]
-  run       --config <file> [--set key=value]… [--json <out.json>] [--pjrt]
-  sweep     --config <file> (with a [sweep] section) [--set key=value]… [--json <out.json>]
+  run       --config <file> [--set key=value]… [--json <out.json>] [--pjrt] [--backend thread|process]
+  sweep     --config <file> (with a [sweep] section) [--set key=value]… [--json <out.json>] [--csv <dir>]
   tree      --machines <m> --branching <b>
   datasets  (no flags)
   artifacts [--dir <artifacts/>]
   model     --n <n> --k <k> --machines <m> --levels <L> [--delta <d>]";
 
 fn cmd_run(args: &Args) -> greedyml::Result<()> {
-    args.check_known(&["config", "set", "json", "pjrt", "trace"])?;
+    args.check_known(&["config", "set", "json", "pjrt", "trace", "backend"])?;
     let mut cfg = Config::load(args.require("config")?)?;
     for kv in args.get_all("set") {
         cfg.set_kv(kv)?;
+    }
+    if let Some(backend) = args.get("backend") {
+        cfg.set("run.backend", backend);
     }
     let engine = if args.has("pjrt") || cfg.str_or("objective.backend", "cpu") == "pjrt" {
         if args.has("pjrt") {
@@ -85,14 +92,7 @@ fn cmd_run(args: &Args) -> greedyml::Result<()> {
             _ => None,
         }) {
             let (m, b, all) = spec;
-            let cfg = greedyml::algo::DistConfig {
-                mem_limit: exp.mem_limit,
-                local_view: exp.local_view,
-                added_elements: exp.added_elements,
-                compare_all_children: all,
-                threads: exp.threads,
-                ..greedyml::algo::DistConfig::greedyml(AccumulationTree::new(m, b), exp.seed)
-            };
+            let cfg = exp.dist_config(AccumulationTree::new(m, b), all);
             let out = greedyml::algo::run_dist(
                 exp.problem.oracle.as_ref(),
                 exp.constraint.as_ref(),
@@ -113,10 +113,13 @@ fn cmd_run(args: &Args) -> greedyml::Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
-    args.check_known(&["config", "set", "json", "pjrt"])?;
+    args.check_known(&["config", "set", "json", "pjrt", "csv", "backend"])?;
     let mut cfg = Config::load(args.require("config")?)?;
     for kv in args.get_all("set") {
         cfg.set_kv(kv)?;
+    }
+    if let Some(backend) = args.get("backend") {
+        cfg.set("sweep.backend", backend);
     }
     let engine = if args.has("pjrt") || cfg.str_or("objective.backend", "cpu") == "pjrt" {
         Some(Arc::new(Engine::load(&greedyml::runtime::artifact_dir())?))
@@ -137,6 +140,11 @@ fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
     if let Some(path) = args.get("json") {
         write_reports(path, &reports)?;
         println!("wrote {path}");
+    }
+    if let Some(dir) = args.get("csv") {
+        for path in greedyml::metrics::write_sweep_csvs(dir, &reports)? {
+            println!("wrote {path}");
+        }
     }
     Ok(())
 }

@@ -130,6 +130,104 @@ pub fn write_reports(path: &str, reports: &[RunReport]) -> crate::Result<()> {
     Ok(())
 }
 
+/// Quote a CSV field if it contains a delimiter (algorithm labels carry
+/// commas: `GML(m=8,b=2,L=3)`).
+fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Write the figure-regeneration CSVs from long-form sweep rows into
+/// `dir`: one file per paper figure, each in tidy long form (one run per
+/// row) so the plot scripts only select and pivot.  Returns the paths
+/// written.
+///
+/// * `fig4_tree_params.csv` — solution quality vs tree shape (m, b, L).
+/// * `fig5_memory_vary_k.csv` — peak per-machine memory vs k.
+/// * `fig6_strong_scaling.csv` — computation/communication seconds and
+///   critical-path calls vs machine count.
+pub fn write_sweep_csvs(dir: &str, reports: &[RunReport]) -> crate::Result<Vec<String>> {
+    std::fs::create_dir_all(dir).map_err(|e| anyhow::anyhow!("cannot create {dir}: {e}"))?;
+    let mut written = Vec::new();
+    let mut emit = |name: &str, header: &str, rows: Vec<String>| -> crate::Result<()> {
+        let path = format!("{}/{name}", dir.trim_end_matches('/'));
+        let mut text = String::from(header);
+        text.push('\n');
+        for row in rows {
+            text.push_str(&row);
+            text.push('\n');
+        }
+        std::fs::write(&path, text).map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))?;
+        written.push(path);
+        Ok(())
+    };
+    emit(
+        "fig4_tree_params.csv",
+        "algo,dataset,k,machines,branching,levels,value,rel_value_pct,critical_calls",
+        reports
+            .iter()
+            .map(|r| {
+                format!(
+                    "{},{},{},{},{},{},{},{},{}",
+                    csv_field(&r.algo),
+                    csv_field(&r.dataset),
+                    r.k,
+                    r.machines,
+                    r.branching,
+                    r.levels,
+                    r.value,
+                    r.rel_value_pct.map_or(String::new(), |p| format!("{p}")),
+                    r.critical_calls,
+                )
+            })
+            .collect(),
+    )?;
+    emit(
+        "fig5_memory_vary_k.csv",
+        "algo,dataset,k,machines,branching,levels,peak_mem_bytes",
+        reports
+            .iter()
+            .map(|r| {
+                format!(
+                    "{},{},{},{},{},{},{}",
+                    csv_field(&r.algo),
+                    csv_field(&r.dataset),
+                    r.k,
+                    r.machines,
+                    r.branching,
+                    r.levels,
+                    r.peak_mem,
+                )
+            })
+            .collect(),
+    )?;
+    emit(
+        "fig6_strong_scaling.csv",
+        "algo,dataset,k,machines,levels,comp_secs,comm_secs,total_secs,critical_calls",
+        reports
+            .iter()
+            .map(|r| {
+                format!(
+                    "{},{},{},{},{},{},{},{},{}",
+                    csv_field(&r.algo),
+                    csv_field(&r.dataset),
+                    r.k,
+                    r.machines,
+                    r.levels,
+                    r.comp_secs,
+                    r.comm_secs,
+                    r.comp_secs + r.comm_secs,
+                    r.critical_calls,
+                )
+            })
+            .collect(),
+    )?;
+    Ok(written)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,6 +273,31 @@ mod tests {
         let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("k").unwrap().as_u64(), Some(100));
         assert_eq!(parsed.get("algo").unwrap().as_str(), Some("GML"));
+    }
+
+    #[test]
+    fn sweep_csvs_are_long_form_and_comma_safe() {
+        let dir = std::env::temp_dir().join("greedyml_csv_test");
+        let dir = dir.to_str().unwrap().to_string();
+        let mut r2 = dummy();
+        r2.algo = "GML(m=8,b=2,L=3)".into();
+        r2.k = 200;
+        let written = write_sweep_csvs(&dir, &[dummy().with_baseline(1234.5), r2]).unwrap();
+        assert_eq!(written.len(), 3);
+        for path in &written {
+            let text = std::fs::read_to_string(path).unwrap();
+            assert_eq!(text.lines().count(), 3, "header + 2 rows in {path}");
+            assert!(
+                text.contains("\"GML(m=8,b=2,L=3)\""),
+                "comma-bearing label must be quoted in {path}:\n{text}"
+            );
+        }
+        let fig5 = std::fs::read_to_string(format!("{dir}/fig5_memory_vary_k.csv")).unwrap();
+        assert!(fig5.starts_with("algo,dataset,k,"));
+        assert!(fig5.contains(",2048"), "peak_mem column present");
+        let fig6 = std::fs::read_to_string(format!("{dir}/fig6_strong_scaling.csv")).unwrap();
+        assert!(fig6.contains(",0.51,"), "total_secs = comp + comm");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

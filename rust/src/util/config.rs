@@ -40,12 +40,15 @@ impl Config {
 
     /// Parse the TOML subset: `[section]` headers, `key = value` lines,
     /// `#` comments, blank lines.  Values keep their raw string form;
-    /// quoting (single or double) is stripped.
+    /// quoting (single or double) is stripped.  A `#` inside a quoted
+    /// value is part of the value, not a comment — the process backend
+    /// ships problem specs through this parser, and paths may contain
+    /// `#`.
     pub fn parse(text: &str) -> Result<Self, ConfigError> {
         let mut cfg = Config::new();
         let mut section = String::new();
         for (lineno, raw) in text.lines().enumerate() {
-            let line = raw.split('#').next().unwrap_or("").trim();
+            let line = strip_comment(raw).trim();
             if line.is_empty() {
                 continue;
             }
@@ -181,6 +184,36 @@ impl Config {
     }
 }
 
+/// Cut a trailing `# comment` off a config line.  A `#` inside a *quoted
+/// value* — the value text starts with `'` or `"` right after the `=` —
+/// is literal content; a stray apostrophe inside an unquoted value
+/// (`don't`) must NOT swallow a trailing comment, so quoting is only
+/// honored at the start of the value.
+fn strip_comment(line: &str) -> &str {
+    let Some(hash) = line.find('#') else { return line };
+    // No '=' before the '#': section header, blank, or whole-line comment.
+    let Some(eq) = line.find('=').filter(|&e| e < hash) else {
+        return &line[..hash];
+    };
+    let value = line[eq + 1..].trim_start();
+    let quote = match value.chars().next() {
+        Some(c @ ('"' | '\'')) => c,
+        _ => return &line[..hash],
+    };
+    let open = line.len() - value.len();
+    match line[open + quote.len_utf8()..].find(quote) {
+        Some(rel) => {
+            let close = open + quote.len_utf8() + rel + quote.len_utf8();
+            match line[close..].find('#') {
+                Some(h) => &line[..close + h],
+                None => line,
+            }
+        }
+        // Unterminated quote: fall back to the plain cut.
+        None => &line[..hash],
+    }
+}
+
 fn unquote(s: &str) -> &str {
     let b = s.as_bytes();
     if b.len() >= 2 && ((b[0] == b'"' && b[b.len() - 1] == b'"') || (b[0] == b'\'' && b[b.len() - 1] == b'\'')) {
@@ -266,6 +299,20 @@ mod tests {
         assert_eq!(parse_u64("3_000").unwrap(), 3000);
         assert!(parse_u64("abc").is_err());
         assert!(parse_u64("99999999999g").is_err());
+    }
+
+    #[test]
+    fn hash_inside_quoted_value_is_not_a_comment() {
+        let cfg = Config::parse(
+            "a = \"data/graph#v2.txt\"   # real comment\nb = 'x#y'\nc = plain # cut\n\
+             d = don't # cut\n# standalone\ne = 1",
+        )
+        .unwrap();
+        assert_eq!(cfg.str("a").unwrap(), "data/graph#v2.txt");
+        assert_eq!(cfg.str("b").unwrap(), "x#y");
+        assert_eq!(cfg.str("c").unwrap(), "plain");
+        assert_eq!(cfg.str("d").unwrap(), "don't", "mid-value apostrophe is not a quote");
+        assert_eq!(cfg.u64("e").unwrap(), 1);
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Backend parity: the thread backend (in-process pool, α–β-modeled comm)
+//! and the process backend (one forked worker per machine, measured comm)
+//! must produce **bit-identical** solutions, values and call counts for
+//! the same seed and config — the backend only decides *where* machines
+//! run, never *what* they compute.
+//!
+//! Problems are config-built (`coordinator::build_problem`) because the
+//! process backend's workers rebuild the oracle from the shipped problem
+//! spec; the spec is the same text on both sides, so the data is
+//! byte-identical.
+
+use greedyml::algo::{run_dist, DistConfig, DistOutcome, PartitionScheme};
+use greedyml::coordinator::{build_problem, experiment::build_constraint, problem_spec};
+use greedyml::dist::{BackendSpec, DistError};
+use greedyml::tree::AccumulationTree;
+use greedyml::util::config::Config;
+
+/// The real `greedyml` binary — the process backend's workers; the test
+/// binary itself has no `worker` subcommand.
+fn worker_bin() -> String {
+    env!("CARGO_BIN_EXE_greedyml").to_string()
+}
+
+/// Run one config on both backends and return (thread, process) outcomes.
+fn run_both(spec_text: &str, cfg: &DistConfig) -> (DistOutcome, DistOutcome) {
+    let parsed = Config::parse(spec_text).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+    let thread_cfg = DistConfig { backend: BackendSpec::Thread, ..cfg.clone() };
+    let process_cfg = DistConfig {
+        backend: BackendSpec::Process,
+        problem: Some(problem_spec(&parsed)),
+        worker_bin: Some(worker_bin()),
+        ..cfg.clone()
+    };
+    let a = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &thread_cfg)
+        .expect("thread backend run");
+    let b = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &process_cfg)
+        .expect("process backend run");
+    (a, b)
+}
+
+/// The bit-parity assertions shared by every workload.
+fn assert_parity(thread: &DistOutcome, process: &DistOutcome) {
+    assert_eq!(thread.solution, process.solution, "solutions must be bit-identical");
+    assert_eq!(
+        thread.value.to_bits(),
+        process.value.to_bits(),
+        "f(S) must survive the wire bit-exactly: {} vs {}",
+        thread.value,
+        process.value
+    );
+    assert_eq!(thread.critical_calls, process.critical_calls);
+    assert_eq!(thread.total_calls, process.total_calls);
+    assert_eq!(thread.max_accum_elems, process.max_accum_elems);
+    assert_eq!(thread.machines.len(), process.machines.len());
+    for (t, p) in thread.machines.iter().zip(&process.machines) {
+        assert_eq!(t.id, p.id);
+        assert_eq!(t.calls, p.calls, "machine {}", t.id);
+        assert_eq!(t.cost, p.cost, "machine {}", t.id);
+        assert_eq!(t.bytes_sent, p.bytes_sent, "machine {}", t.id);
+        assert_eq!(t.bytes_received, p.bytes_received, "machine {}", t.id);
+        assert_eq!(t.peak_mem, p.peak_mem, "machine {}", t.id);
+        assert_eq!(t.top_level, p.top_level, "machine {}", t.id);
+        assert_eq!(t.max_accum_elems, p.max_accum_elems, "machine {}", t.id);
+    }
+    // The meaning of the comm column differs: modeled vs measured.
+    assert!(!thread.comm_measured, "thread backend models comm");
+    assert!(process.comm_measured, "process backend measures comm");
+}
+
+const COVERAGE_SPEC: &str = "[dataset]\nkind = retail\nn = 500\nseed = 2\n[problem]\nk = 10\n";
+
+#[test]
+fn coverage_greedyml_tree_is_bit_identical_across_backends() {
+    let cfg = DistConfig::greedyml(AccumulationTree::new(4, 2), 42);
+    let (thread, process) = run_both(COVERAGE_SPEC, &cfg);
+    assert_parity(&thread, &process);
+    assert!(thread.value > 0.0);
+    assert_eq!(thread.levels.len(), 3, "m=4, b=2 ⇒ 3 supersteps");
+    // Real pipe transfers take nonzero wall time.
+    assert!(process.comm_secs > 0.0, "measured comm must be positive");
+}
+
+#[test]
+fn coverage_randgreedi_wide_tree_parity() {
+    // b = m with RandGreeDI argmax semantics (compare_all_children) — the
+    // ChildMsg values feed the argmax, so value transport is exercised.
+    let cfg = DistConfig {
+        compare_all_children: true,
+        ..DistConfig::greedyml(AccumulationTree::randgreedi(6), 9)
+    };
+    let (thread, process) = run_both(COVERAGE_SPEC, &cfg);
+    assert_parity(&thread, &process);
+}
+
+#[test]
+fn greedi_contiguous_partition_parity() {
+    // The GreeDI path: contiguous partition + argmax over all children.
+    let cfg = DistConfig {
+        partition: PartitionScheme::Contiguous,
+        compare_all_children: true,
+        ..DistConfig::greedyml(AccumulationTree::randgreedi(4), 0)
+    };
+    let (thread, process) = run_both(COVERAGE_SPEC, &cfg);
+    assert_parity(&thread, &process);
+}
+
+#[test]
+fn kmedoid_local_view_parity() {
+    // k-medoid with the §6.4 machine-local evaluation views and added
+    // elements: floats flow through gains, view re-evaluation and the
+    // wire; everything must still match bit-for-bit.
+    let spec = "[dataset]\nkind = gaussian\nn = 192\ndim = 12\nclasses = 6\nseed = 4\n\
+                [problem]\nk = 8\n";
+    let cfg = DistConfig {
+        local_view: true,
+        added_elements: 16,
+        ..DistConfig::greedyml(AccumulationTree::new(4, 2), 7)
+    };
+    let (thread, process) = run_both(spec, &cfg);
+    assert_parity(&thread, &process);
+    assert!(thread.value > 0.0);
+}
+
+#[test]
+fn oom_surfaces_identically_on_both_backends() {
+    // A wide tree whose root must hold m−1 child solutions, with a limit
+    // below its unconstrained peak: both backends must fail with the same
+    // OutOfMemory coordinates (machine, level, label) — the process
+    // backend carries the error across the wire.
+    let parsed = Config::parse(COVERAGE_SPEC).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+    let base = DistConfig {
+        compare_all_children: true,
+        ..DistConfig::greedyml(AccumulationTree::randgreedi(8), 3)
+    };
+    let probe = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &base).unwrap();
+    let limit = probe.machines[0].peak_mem * 2 / 3;
+
+    let thread_cfg = DistConfig {
+        mem_limit: Some(limit),
+        backend: BackendSpec::Thread,
+        ..base.clone()
+    };
+    let process_cfg = DistConfig {
+        mem_limit: Some(limit),
+        backend: BackendSpec::Process,
+        problem: Some(problem_spec(&parsed)),
+        worker_bin: Some(worker_bin()),
+        ..base
+    };
+    let te = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &thread_cfg).unwrap_err();
+    let pe = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &process_cfg).unwrap_err();
+    match (&te, &pe) {
+        (
+            DistError::OutOfMemory { machine: tm, level: tl, label: tla, .. },
+            DistError::OutOfMemory { machine: pm, level: pl, label: pla, .. },
+        ) => {
+            assert_eq!(tm, pm, "same machine");
+            assert_eq!(tl, pl, "same level");
+            assert_eq!(tla, pla, "same allocation label");
+        }
+        other => panic!("expected twin OOMs, got {other:?}"),
+    }
+    assert_eq!(te, pe, "identical error payloads");
+}
+
+#[test]
+fn process_backend_single_machine_tree() {
+    // Degenerate m = 1: one worker, no shipping at all.
+    let cfg = DistConfig::greedyml(AccumulationTree::new(1, 2), 5);
+    let (thread, process) = run_both(COVERAGE_SPEC, &cfg);
+    assert_parity(&thread, &process);
+    assert_eq!(process.comm_secs, 0.0, "no levels, no transfers");
+}
+
+#[test]
+fn bad_problem_spec_is_a_backend_error_not_a_hang() {
+    let parsed = Config::parse(COVERAGE_SPEC).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+    let cfg = DistConfig {
+        backend: BackendSpec::Process,
+        problem: Some("dataset.kind = not_a_dataset\n".to_string()),
+        worker_bin: Some(worker_bin()),
+        ..DistConfig::greedyml(AccumulationTree::new(2, 2), 1)
+    };
+    match run_dist(problem.oracle.as_ref(), constraint.as_ref(), &cfg).unwrap_err() {
+        DistError::Backend { message } => {
+            assert!(
+                message.contains("not_a_dataset") || message.contains("unknown"),
+                "{message}"
+            );
+        }
+        other => panic!("expected backend error, got {other:?}"),
+    }
+}

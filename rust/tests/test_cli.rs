@@ -121,9 +121,84 @@ fn run_command_exports_chrome_trace() {
     let parsed =
         greedyml::util::json::Json::parse(&std::fs::read_to_string(&trace).unwrap()).unwrap();
     let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
-    // 4 leaves + 2 level-1 nodes + 1 root = 7 compute spans + 3 recv spans.
+    // 4 leaves + 2 level-1 nodes + 1 root = 7 compute spans + 3 recv
+    // spans, plus one memory-watermark counter per step.
     assert!(events.len() >= 8, "{} events", events.len());
-    assert!(events.iter().all(|e| e.get("ph").unwrap().as_str() == Some("X")));
+    let spans =
+        events.iter().filter(|e| e.get("ph").unwrap().as_str() == Some("X")).count();
+    let counters =
+        events.iter().filter(|e| e.get("ph").unwrap().as_str() == Some("C")).count();
+    assert_eq!(spans + counters, events.len(), "only spans and counters");
+    assert!(spans >= 8, "{spans} spans");
+    assert_eq!(counters, 7, "one watermark per (machine, level) step");
     std::fs::remove_file(&cfg).ok();
     std::fs::remove_file(&trace).ok();
+}
+
+#[test]
+fn run_command_under_process_backend() {
+    // End-to-end worker protocol: the launched binary forks itself as
+    // `greedyml worker` once per machine.  Same config on both backends
+    // must report the same objective value in the JSON output.
+    let dir = std::env::temp_dir();
+    let cfg = dir.join("greedyml_cli_proc.toml");
+    std::fs::write(
+        &cfg,
+        "name = proc\n[dataset]\nkind = retail\nn = 300\n[problem]\nk = 8\n\
+         [run]\nalgos = greedyml:4:2\nseed = 5\n",
+    )
+    .unwrap();
+    let run = |backend: &str, json: &std::path::Path| {
+        let out = bin()
+            .args([
+                "run",
+                "--config",
+                cfg.to_str().unwrap(),
+                "--backend",
+                backend,
+                "--json",
+                json.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{backend}: {}", String::from_utf8_lossy(&out.stderr));
+        let parsed =
+            greedyml::util::json::Json::parse(&std::fs::read_to_string(json).unwrap()).unwrap();
+        let rows = parsed.as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        rows[0].get("value").unwrap().as_f64().unwrap()
+    };
+    let tj = dir.join("greedyml_cli_proc_thread.json");
+    let pj = dir.join("greedyml_cli_proc_process.json");
+    let tv = run("thread", &tj);
+    let pv = run("process", &pj);
+    assert_eq!(tv.to_bits(), pv.to_bits(), "thread {tv} vs process {pv}");
+    std::fs::remove_file(&cfg).ok();
+    std::fs::remove_file(&tj).ok();
+    std::fs::remove_file(&pj).ok();
+}
+
+#[test]
+fn sweep_command_emits_figure_csvs() {
+    let dir = std::env::temp_dir();
+    let cfg = dir.join("greedyml_cli_sweep_csv.toml");
+    std::fs::write(
+        &cfg,
+        "[dataset]\nkind = retail\nn = 300\nseed = 2\n\
+         [sweep]\nks = 4, 8\nalgos = randgreedi:4, greedyml:4:2\nreps = 1\n",
+    )
+    .unwrap();
+    let csv_dir = dir.join("greedyml_cli_sweep_csv_out");
+    let out = bin()
+        .args(["sweep", "--config", cfg.to_str().unwrap(), "--csv", csv_dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    for name in ["fig4_tree_params.csv", "fig5_memory_vary_k.csv", "fig6_strong_scaling.csv"] {
+        let text = std::fs::read_to_string(csv_dir.join(name)).unwrap();
+        assert_eq!(text.lines().count(), 5, "{name}: header + 2 ks × 2 algos:\n{text}");
+        assert!(text.starts_with("algo,dataset,k,"), "{name}:\n{text}");
+    }
+    std::fs::remove_file(&cfg).ok();
+    std::fs::remove_dir_all(&csv_dir).ok();
 }
