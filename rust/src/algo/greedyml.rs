@@ -13,15 +13,16 @@
 //! walks the accumulation levels, and aggregates statistics — *all*
 //! superstep fan-out, solution shipping and per-machine resource
 //! accounting happen behind the [`Backend`] trait, so the same loop runs
-//! on the in-process thread pool ([`ThreadBackend`], modeled comm) and on
-//! forked worker processes ([`ProcessBackend`], measured comm), producing
-//! bit-identical solutions.
+//! on the in-process thread pool ([`ThreadBackend`], modeled comm), on
+//! forked worker processes ([`ProcessBackend`], measured comm) and on
+//! remote TCP worker daemons ([`TcpBackend`], measured comm over a real
+//! network), producing bit-identical solutions.
 
 use super::{DistConfig, DistOutcome, LevelStats, PartitionScheme};
 use crate::constraint::Constraint;
 use crate::dist::{
-    pool, AccumTask, Backend, BackendSpec, DistError, NodeParams, NodeStep, ProcessBackend,
-    ResolvedBackend, StepReport, ThreadBackend, Trace,
+    pool, tcp, AccumTask, Backend, BackendSpec, DistError, NodeParams, NodeStep, ProcessBackend,
+    ResolvedBackend, StepReport, TcpBackend, ThreadBackend, Trace,
 };
 use crate::objective::Oracle;
 use crate::util::rng::RandomTape;
@@ -43,9 +44,10 @@ pub fn run_greedyml(
 /// executor is spawned once for the whole run (workers persist across
 /// supersteps); `cfg.threads` / `GREEDYML_THREADS` control its width, and
 /// `threads = 1` reproduces the serial runtime bit-for-bit.  On the
-/// process backend one worker process per machine is forked instead
-/// (`cfg.problem` must carry the spec the workers rebuild the oracle
-/// from).
+/// process backend one worker process per machine is forked instead, and
+/// on the tcp backend one worker session per machine is opened on the
+/// configured `greedyml serve` hosts (both need `cfg.problem` to carry
+/// the spec the workers rebuild the oracle from).
 pub fn run_dist(
     oracle: &dyn Oracle,
     constraint: &dyn Constraint,
@@ -61,17 +63,18 @@ pub fn run_dist(
         compare_all_children: cfg.compare_all_children,
     };
     let mut resolved = cfg.backend.resolve()?;
-    if resolved == ResolvedBackend::Process
+    if resolved != ResolvedBackend::Thread
         && cfg.backend == BackendSpec::Auto
         && cfg.problem.is_none()
     {
         // The env var is advisory: programmatic callers (benches, unit
         // tests, library users with hand-built oracles) carry no problem
         // spec, and failing them because the environment asked for
-        // process workers would make `GREEDYML_BACKEND=process cargo
-        // bench` unusable.  Explicit `BackendSpec::Process` still errors.
+        // process or tcp workers would make `GREEDYML_BACKEND=process
+        // cargo bench` unusable.  Explicit `BackendSpec::Process`/`Tcp`
+        // still errors.
         eprintln!(
-            "GREEDYML_BACKEND=process ignored for this run: no problem spec to ship \
+            "GREEDYML_BACKEND ignored for this run: no problem spec to ship \
              to workers (programmatic oracle); using the thread backend"
         );
         resolved = ResolvedBackend::Thread;
@@ -105,6 +108,40 @@ pub fn run_dist(
                 cfg.threads.unwrap_or(1),
                 problem,
                 cfg.worker_bin.as_deref(),
+            )?;
+            run_dist_on(&mut backend, cfg, oracle.n())
+        }
+        ResolvedBackend::Tcp => {
+            let problem = cfg.problem.as_deref().ok_or_else(|| {
+                DistError::backend(
+                    "the tcp backend needs DistConfig::problem (a dataset/problem \
+                     config spec) so workers can rebuild the oracle — config-built \
+                     experiments attach it automatically",
+                )
+            })?;
+            let hosts = match &cfg.hosts {
+                Some(h) if !h.is_empty() => h.clone(),
+                // An explicitly-set empty list is a configuration error,
+                // not an invitation to fall back to the environment.
+                Some(_) => {
+                    return Err(DistError::backend(
+                        "the tcp backend got an empty hosts list",
+                    ))
+                }
+                None => tcp::hosts_from_env().transpose()?.ok_or_else(|| {
+                    DistError::backend(
+                        "the tcp backend needs worker hosts: set DistConfig::hosts \
+                         (--hosts / run.hosts) or GREEDYML_HOSTS to a host:port list \
+                         of running `greedyml serve` daemons",
+                    )
+                })?,
+            };
+            let mut backend = TcpBackend::connect(
+                &hosts,
+                cfg.tree.machines(),
+                &params,
+                cfg.threads.unwrap_or(1),
+                problem,
             )?;
             run_dist_on(&mut backend, cfg, oracle.n())
         }
@@ -398,6 +435,27 @@ mod tests {
             .last()
             .expect("root steps present");
         assert_eq!(root_last.peak_mem, out.machines[0].peak_mem);
+    }
+
+    #[test]
+    fn tcp_backend_without_hosts_errors() {
+        // An explicit empty list (rather than None) keeps the test
+        // deterministic: hosts: None would consult GREEDYML_HOSTS, and a
+        // developer's ambient environment must not change the outcome.
+        let o = cover_oracle(100, 2);
+        let c = Cardinality::new(4);
+        let cfg = DistConfig {
+            backend: crate::dist::BackendSpec::Tcp,
+            problem: Some("dataset.kind = retail\ndataset.n = 100\n".to_string()),
+            hosts: Some(Vec::new()),
+            ..DistConfig::greedyml(AccumulationTree::new(2, 2), 1)
+        };
+        match run_greedyml(&o, &c, &cfg).unwrap_err() {
+            DistError::Backend { message } => {
+                assert!(message.contains("hosts"), "{message}")
+            }
+            other => panic!("expected backend error, got {other:?}"),
+        }
     }
 
     #[test]

@@ -68,21 +68,30 @@ pub struct DistConfig {
     /// Results are bit-identical across thread counts; `Some(1)` runs the
     /// whole simulation serially on the calling thread.
     pub threads: Option<usize>,
-    /// Execution backend: in-process thread pool (modeled comm) or one
-    /// worker process per machine (measured comm).  [`BackendSpec::Auto`]
-    /// defers to the `GREEDYML_BACKEND` environment variable.  Solutions
-    /// are bit-identical across backends.
+    /// Execution backend: in-process thread pool (modeled comm), one
+    /// worker process per machine (measured comm), or one TCP session per
+    /// machine on remote `greedyml serve` daemons (measured comm over a
+    /// real network).  [`BackendSpec::Auto`] defers to the
+    /// `GREEDYML_BACKEND` environment variable.  Solutions are
+    /// bit-identical across backends.
     pub backend: BackendSpec,
-    /// Problem spec for the process backend: flat `key = value` config
-    /// text (`dataset.*` / `problem.*` / `objective.*`) that a worker
-    /// parses to rebuild the oracle and constraint in its own address
-    /// space.  Required when the process backend is selected; ignored by
-    /// the thread backend.  See [`crate::coordinator::problem_spec`].
+    /// Problem spec for the process and tcp backends: flat `key = value`
+    /// config text (`dataset.*` / `problem.*` / `objective.*`) that a
+    /// worker parses to rebuild the oracle and constraint in its own
+    /// address space.  Required when those backends are selected; ignored
+    /// by the thread backend.  See [`crate::coordinator::problem_spec`].
     pub problem: Option<String>,
     /// Worker executable for the process backend (`None` = the
     /// `GREEDYML_WORKER_BIN` environment variable, else this binary).
     /// Integration tests point this at the real `greedyml` binary.
     pub worker_bin: Option<String>,
+    /// Worker daemons for the tcp backend, as `host:port` entries
+    /// (machine `i` connects to `hosts[i % hosts.len()]`).  `None` defers
+    /// to the `GREEDYML_HOSTS` environment variable; selecting the tcp
+    /// backend with neither — or with an explicitly empty list — is an
+    /// error.  Config key `run.hosts` (`sweep.hosts` for sweeps) / CLI
+    /// flag `--hosts`.
+    pub hosts: Option<Vec<String>>,
 }
 
 impl DistConfig {
@@ -102,6 +111,7 @@ impl DistConfig {
             backend: BackendSpec::Auto,
             problem: None,
             worker_bin: None,
+            hosts: None,
         }
     }
 }

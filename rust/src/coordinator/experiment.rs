@@ -89,8 +89,11 @@ pub struct Experiment {
     /// Execution backend for the distributed variants (`run.backend`
     /// config key / `--backend` flag / `GREEDYML_BACKEND`).
     pub backend: BackendSpec,
-    /// Flat problem spec shipped to process-backend workers.
+    /// Flat problem spec shipped to process/tcp-backend workers.
     pub problem_spec: String,
+    /// `greedyml serve` worker daemons for the tcp backend (`run.hosts`
+    /// config key / `--hosts` flag; `None` defers to `GREEDYML_HOSTS`).
+    pub hosts: Option<Vec<String>>,
 }
 
 /// Build the constraint described by the `[problem]` section.  Shared by
@@ -147,6 +150,7 @@ impl Experiment {
             },
             backend,
             problem_spec: super::problem_spec(cfg),
+            hosts: crate::dist::tcp::hosts_from_config(cfg, "run.hosts")?,
         })
     }
 
@@ -155,6 +159,7 @@ impl Experiment {
         cfg.backend = self.backend;
         cfg.problem = Some(self.problem_spec.clone());
         cfg.threads = cfg.threads.or(self.threads);
+        cfg.hosts = self.hosts.clone();
         cfg
     }
 
@@ -328,12 +333,28 @@ mod tests {
         let base = "[dataset]\nkind = retail\nn = 120\n[problem]\nk = 4\n[run]\nalgos = greedy\n";
         let exp = Experiment::from_config(&Config::parse(base).unwrap(), None).unwrap();
         assert_eq!(exp.backend, BackendSpec::Auto);
+        assert_eq!(exp.hosts, None);
         assert!(exp.problem_spec.contains("dataset.kind = retail"));
         let threaded = format!("{base}backend = thread\n");
         let exp = Experiment::from_config(&Config::parse(&threaded).unwrap(), None).unwrap();
         assert_eq!(exp.backend, BackendSpec::Thread);
         let bogus = format!("{base}backend = quantum\n");
         assert!(Experiment::from_config(&Config::parse(&bogus).unwrap(), None).is_err());
+    }
+
+    #[test]
+    fn hosts_key_parses_and_rejects_garbage() {
+        let base = "[dataset]\nkind = retail\nn = 120\n[problem]\nk = 4\n[run]\nalgos = greedy\n";
+        let hosted = format!("{base}backend = tcp\nhosts = 127.0.0.1:7401, 127.0.0.1:7402\n");
+        let exp = Experiment::from_config(&Config::parse(&hosted).unwrap(), None).unwrap();
+        assert_eq!(exp.backend, BackendSpec::Tcp);
+        assert_eq!(
+            exp.hosts,
+            Some(vec!["127.0.0.1:7401".to_string(), "127.0.0.1:7402".to_string()])
+        );
+        let portless = format!("{base}hosts = localhost\n");
+        let err = Experiment::from_config(&Config::parse(&portless).unwrap(), None).unwrap_err();
+        assert!(err.to_string().contains("run.hosts"), "{err}");
     }
 
     #[test]

@@ -31,8 +31,11 @@ pub struct Sweep {
     pub local_view: bool,
     /// Execution backend for the distributed variants.
     pub backend: BackendSpec,
-    /// Flat problem spec shipped to process-backend workers.
+    /// Flat problem spec shipped to process/tcp-backend workers.
     pub problem_spec: String,
+    /// `greedyml serve` worker daemons for the tcp backend (`sweep.hosts`
+    /// config key / `--hosts` flag; `None` defers to `GREEDYML_HOSTS`).
+    pub hosts: Option<Vec<String>>,
 }
 
 impl Sweep {
@@ -69,19 +72,21 @@ impl Sweep {
             local_view: cfg.bool_or("sweep.local_view", false)?,
             backend,
             problem_spec: super::problem_spec(cfg),
+            hosts: crate::dist::tcp::hosts_from_config(cfg, "sweep.hosts")?,
         })
     }
 
     /// Attach this sweep's backend settings to an engine config.  The
     /// sweep varies `k` and always runs a cardinality constraint — append
-    /// both to the spec (later keys win) so process workers rebuild the
-    /// constraint the cell actually runs.
+    /// both to the spec (later keys win) so process/tcp workers rebuild
+    /// the constraint the cell actually runs.
     fn with_backend(&self, mut dist: DistConfig, k: usize) -> DistConfig {
         dist.backend = self.backend;
         dist.problem = Some(format!(
             "{}problem.constraint = cardinality\nproblem.k = {k}\n",
             self.problem_spec
         ));
+        dist.hosts = self.hosts.clone();
         dist
     }
 

@@ -16,10 +16,46 @@
 //!   a real address space and `comm_secs` is *measured* solution-shipping
 //!   wall time instead of a model.
 //!
-//! Both backends run the identical node program ([`super::node`]), so
+//! * [`TcpBackend`](super::tcp::TcpBackend) — the multi-host transport:
+//!   worker sessions hosted by `greedyml serve` daemons over TCP, with a
+//!   protocol-version handshake, connect retry and per-frame timeouts;
+//!   `comm_secs` is measured over a real network hop.
+//!
+//! Every backend runs the identical node program ([`super::node`]), so
 //! solutions, values and call counts are bit-identical across them — the
 //! property `tests/test_backend.rs` locks down.  An MPI backend slots in
 //! behind the same trait (the ROADMAP north star).
+//!
+//! # Example
+//!
+//! Backends are selected through [`DistConfig`](crate::algo::DistConfig);
+//! the thread backend needs no worker processes or hosts, so a run is
+//! self-contained:
+//!
+//! ```
+//! use greedyml::algo::{run_greedyml, DistConfig};
+//! use greedyml::constraint::Cardinality;
+//! use greedyml::data::gen::{transactions, TransactionParams};
+//! use greedyml::dist::BackendSpec;
+//! use greedyml::objective::KCover;
+//! use greedyml::tree::AccumulationTree;
+//! use std::sync::Arc;
+//!
+//! let params = TransactionParams { num_sets: 120, num_items: 60, mean_size: 4.0, zipf_s: 0.9 };
+//! let oracle = KCover::new(Arc::new(transactions(params, 1)));
+//! let constraint = Cardinality::new(5);
+//! // 4 machines in a binary accumulation tree, explicitly on the
+//! // in-process thread backend with a 2-wide executor.
+//! let cfg = DistConfig {
+//!     backend: BackendSpec::Thread,
+//!     threads: Some(2),
+//!     ..DistConfig::greedyml(AccumulationTree::new(4, 2), 7)
+//! };
+//! let out = run_greedyml(&oracle, &constraint, &cfg).unwrap();
+//! assert!(out.solution.len() <= 5);
+//! assert!(out.value > 0.0);
+//! assert!(!out.comm_measured, "the thread backend models communication");
+//! ```
 
 use super::node::{accum_step, leaf_step, NodeParams, NodeState, StepReport};
 use super::pool::Executor;
@@ -32,23 +68,29 @@ use crate::{ElemId, MachineId};
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum BackendSpec {
     /// Defer to the `GREEDYML_BACKEND` environment variable
-    /// (`thread` | `process`), defaulting to [`BackendSpec::Thread`].
+    /// (`thread` | `process` | `tcp`), defaulting to
+    /// [`BackendSpec::Thread`].
     #[default]
     Auto,
     /// In-process simulator on the persistent thread pool.
     Thread,
     /// One forked worker process per simulated machine.
     Process,
+    /// One TCP worker session per simulated machine, hosted by remote
+    /// `greedyml serve` daemons
+    /// ([`DistConfig::hosts`](crate::algo::DistConfig::hosts)).
+    Tcp,
 }
 
 impl BackendSpec {
-    /// Parse a config/CLI token (`auto` | `thread` | `process`).
+    /// Parse a config/CLI token (`auto` | `thread` | `process` | `tcp`).
     pub fn parse(s: &str) -> Result<Self, String> {
         match s.trim().to_ascii_lowercase().as_str() {
             "auto" | "" => Ok(Self::Auto),
             "thread" | "threads" => Ok(Self::Thread),
             "process" | "proc" => Ok(Self::Process),
-            other => Err(format!("unknown backend '{other}' (auto | thread | process)")),
+            "tcp" => Ok(Self::Tcp),
+            other => Err(format!("unknown backend '{other}' (auto | thread | process | tcp)")),
         }
     }
 
@@ -59,10 +101,12 @@ impl BackendSpec {
         match self {
             Self::Thread => Ok(ResolvedBackend::Thread),
             Self::Process => Ok(ResolvedBackend::Process),
+            Self::Tcp => Ok(ResolvedBackend::Tcp),
             Self::Auto => match std::env::var("GREEDYML_BACKEND") {
                 Err(_) => Ok(ResolvedBackend::Thread),
                 Ok(v) => match Self::parse(&v) {
                     Ok(Self::Process) => Ok(ResolvedBackend::Process),
+                    Ok(Self::Tcp) => Ok(ResolvedBackend::Tcp),
                     Ok(_) => Ok(ResolvedBackend::Thread),
                     Err(e) => Err(DistError::backend(format!("GREEDYML_BACKEND: {e}"))),
                 },
@@ -78,6 +122,8 @@ pub enum ResolvedBackend {
     Thread,
     /// Process-per-machine workers.
     Process,
+    /// TCP sessions on `greedyml serve` daemons.
+    Tcp,
 }
 
 /// One accumulation assignment within a superstep: `parent` gathers the
@@ -272,6 +318,7 @@ mod tests {
         assert_eq!(BackendSpec::parse("auto").unwrap(), BackendSpec::Auto);
         assert_eq!(BackendSpec::parse("thread").unwrap(), BackendSpec::Thread);
         assert_eq!(BackendSpec::parse(" Process ").unwrap(), BackendSpec::Process);
+        assert_eq!(BackendSpec::parse("tcp").unwrap(), BackendSpec::Tcp);
         assert!(BackendSpec::parse("mpi").is_err());
     }
 
@@ -279,5 +326,6 @@ mod tests {
     fn explicit_specs_resolve_without_env() {
         assert_eq!(BackendSpec::Thread.resolve().unwrap(), ResolvedBackend::Thread);
         assert_eq!(BackendSpec::Process.resolve().unwrap(), ResolvedBackend::Process);
+        assert_eq!(BackendSpec::Tcp.resolve().unwrap(), ResolvedBackend::Tcp);
     }
 }

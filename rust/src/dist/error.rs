@@ -4,9 +4,13 @@
 //! paper's §6.2 experiments *expect* runs to die when a machine's budget
 //! cannot hold the data or the accumulated child solutions, and the
 //! coordinator reports such runs as failures rather than panicking.  The
-//! process backend adds a second mode — [`DistError::Backend`] — for the
-//! machinery itself (worker spawn, wire protocol), which is a bug or an
-//! environment problem, never an expected experimental outcome.
+//! framed backends add a second mode — [`DistError::Backend`] — for the
+//! machinery itself: worker spawn and wire-protocol faults on the
+//! process backend; unreachable hosts, version-handshake mismatches,
+//! dropped connections and per-frame timeouts on the tcp backend.  Those
+//! are bugs or environment problems, never an expected experimental
+//! outcome, and the two kinds must never be confused — a §6.2 memory
+//! result is a finding, a dead worker is an incident.
 
 use crate::util::fmt_bytes;
 use crate::MachineId;
@@ -34,9 +38,10 @@ pub enum DistError {
         limit: u64,
     },
     /// The execution backend itself failed (worker spawn, wire protocol,
-    /// missing problem spec) — distinct from algorithmic OOM because the
-    /// experiments must never confuse an infrastructure fault with a §6.2
-    /// memory result.
+    /// missing problem spec, unreachable or version-mismatched TCP
+    /// workers, connection loss, frame timeout) — distinct from
+    /// algorithmic OOM because the experiments must never confuse an
+    /// infrastructure fault with a §6.2 memory result.
     Backend {
         /// Human-readable description of the fault.
         message: String,

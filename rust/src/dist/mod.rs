@@ -15,9 +15,17 @@
 //! * [`proc`] — [`ProcessBackend`](proc::ProcessBackend): one forked
 //!   worker process per machine (the hidden `greedyml worker`
 //!   subcommand), real address spaces, *measured* solution-shipping time.
+//! * [`tcp`] — [`TcpBackend`](tcp::TcpBackend): the multi-host transport.
+//!   `greedyml serve --bind <addr>` daemons host worker sessions over
+//!   TCP; the coordinator places machines onto hosts (`--hosts` /
+//!   `run.hosts` / `GREEDYML_HOSTS`), with a version handshake, connect
+//!   retry and per-frame timeouts.  Same frames, same session loop, same
+//!   bit-identical results — `comm_secs` measured over a real network.
 //! * [`node`] — the per-machine node program (leaf GREEDY, accumulate,
-//!   ship) both backends execute bit-identically.
-//! * [`wire`] — the length-prefixed JSON frames of the worker protocol.
+//!   ship) every backend executes bit-identically.
+//! * [`wire`] — the length-prefixed JSON frames of the worker protocol
+//!   (specified in `docs/wire-protocol.md`), shared by the process and
+//!   tcp transports through one coordinator-side driver (`remote`).
 //! * [`pool`] — the two-level parallel execution subsystem: a persistent
 //!   work-stealing pool spawned once per run ([`pool::with_pool`]), the
 //!   order-preserving superstep fan-out ([`Executor::map`] /
@@ -46,7 +54,9 @@ pub mod memory;
 pub mod node;
 pub mod pool;
 pub mod proc;
+mod remote;
 pub mod stats;
+pub mod tcp;
 pub mod trace;
 pub mod wire;
 
@@ -58,4 +68,5 @@ pub use node::{ChildMsg, NodeParams, NodeState, StepReport};
 pub use pool::{parallel_map, Executor};
 pub use proc::ProcessBackend;
 pub use stats::MachineStats;
+pub use tcp::TcpBackend;
 pub use trace::{NodeStep, Trace};

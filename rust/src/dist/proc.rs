@@ -16,49 +16,22 @@
 //! boundary; the generators are seeded, so every worker reconstructs
 //! byte-identical data and the run stays bit-compatible with the thread
 //! backend (`tests/test_backend.rs`).
+//!
+//! All protocol driving lives in the transport-generic `RemoteBackend`
+//! (`dist/remote.rs`); this module only owns what is pipe-specific —
+//! forking the workers, wiring their stdio, and killing orphans on error
+//! paths.  The worker-side command loop (`serve_session`) is likewise
+//! shared with the tcp backend's `greedyml serve` daemon, which serves
+//! the same sessions over sockets.
 
 use super::backend::{AccumTask, Backend, BackendOutcome};
-use super::node::{accum_step, leaf_step, ChildMsg, NodeParams, NodeState, StepReport};
+use super::node::{accum_step, leaf_step, ChildMsg, NodeParams, NodeState};
+use super::remote::{FramedWorker, RemoteBackend};
 use super::wire::{read_frame, write_frame, FromWorker, ToWorker};
-use super::{pool, DistError, MachineStats};
+use super::{pool, DistError};
 use crate::{ElemId, MachineId};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
-use std::time::Instant;
-
-/// One spawned worker process (= one simulated machine).
-struct Worker {
-    machine: MachineId,
-    child: Child,
-    stdin: BufWriter<ChildStdin>,
-    stdout: BufReader<ChildStdout>,
-}
-
-impl Worker {
-    fn send(&mut self, msg: &ToWorker) -> Result<(), DistError> {
-        write_frame(&mut self.stdin, &msg.to_value())
-            .map_err(|e| DistError::backend(format!("worker {}: {e}", self.machine)))
-    }
-
-    fn recv(&mut self) -> Result<FromWorker, DistError> {
-        match read_frame(&mut self.stdout) {
-            Ok(Some(v)) => FromWorker::from_value(&v),
-            Ok(None) => Err(DistError::backend(format!(
-                "worker {} exited before replying",
-                self.machine
-            ))),
-            Err(e) => Err(DistError::backend(format!("worker {}: {e}", self.machine))),
-        }
-    }
-
-    /// Receive, unwrapping a worker-side failure into `Err`.
-    fn recv_ok(&mut self) -> Result<FromWorker, DistError> {
-        match self.recv()? {
-            FromWorker::Fail(e) => Err(e),
-            other => Ok(other),
-        }
-    }
-}
 
 /// Resolve the worker executable: explicit config value, then the
 /// `GREEDYML_WORKER_BIN` environment variable, then this very binary.
@@ -75,9 +48,34 @@ fn worker_binary(explicit: Option<&str>) -> Result<std::path::PathBuf, DistError
         .map_err(|e| DistError::backend(format!("cannot locate worker binary: {e}")))
 }
 
+/// The forked worker processes, killed on drop unless already exited.
+/// Separate from [`ProcessBackend`] so an error during the Init/Ready
+/// handshake (which consumes the guard) still reaps every child.
+struct Children(Vec<Child>);
+
+impl Drop for Children {
+    fn drop(&mut self) {
+        // On the success path the workers have already exited after Final;
+        // on error paths make sure no orphans linger.
+        for child in &mut self.0 {
+            match child.try_wait() {
+                Ok(Some(_)) => {}
+                _ => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+            }
+        }
+    }
+}
+
+/// The fleet driver over pipe transports.
+type PipeFleet = RemoteBackend<BufReader<ChildStdout>, BufWriter<ChildStdin>>;
+
 /// The process-per-machine [`Backend`].
 pub struct ProcessBackend {
-    workers: Vec<Worker>,
+    children: Children,
+    inner: PipeFleet,
 }
 
 impl ProcessBackend {
@@ -91,6 +89,7 @@ impl ProcessBackend {
         worker_bin: Option<&str>,
     ) -> Result<Self, DistError> {
         let bin = worker_binary(worker_bin)?;
+        let mut children = Children(Vec::with_capacity(machines as usize));
         let mut workers = Vec::with_capacity(machines as usize);
         for machine in 0..machines {
             let mut child = Command::new(&bin)
@@ -104,197 +103,42 @@ impl ProcessBackend {
                 })?;
             let stdin = BufWriter::new(child.stdin.take().expect("piped stdin"));
             let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
-            workers.push(Worker { machine, child, stdin, stdout });
+            children.0.push(child);
+            workers.push(FramedWorker::new(machine, stdout, stdin));
         }
-        let mut backend = Self { workers };
-        // Send every Init before reading any Ready so the m dataset
-        // rebuilds run concurrently.
-        for w in &mut backend.workers {
-            let init = ToWorker::Init {
-                machine: w.machine,
-                threads,
-                params: params.clone(),
-                problem: problem.to_string(),
-            };
-            w.send(&init)?;
-        }
-        for w in &mut backend.workers {
-            match w.recv_ok()? {
-                FromWorker::Ready { n } if n == params.n => {}
-                FromWorker::Ready { n } => {
-                    return Err(DistError::backend(format!(
-                        "worker {} rebuilt a ground set of {n} elements, coordinator has {}; \
-                         the problem spec does not describe this oracle",
-                        w.machine, params.n
-                    )))
-                }
-                other => {
-                    return Err(DistError::backend(format!(
-                        "worker {}: expected ready, got {other:?}",
-                        w.machine
-                    )))
-                }
-            }
-        }
-        Ok(backend)
+        let inner = RemoteBackend::init("process", workers, params, threads, problem)?;
+        Ok(Self { children, inner })
     }
 }
 
 impl Backend for ProcessBackend {
     fn name(&self) -> &'static str {
-        "process"
+        self.inner.name()
     }
 
-    fn run_leaves(&mut self, parts: Vec<Vec<ElemId>>) -> Result<Vec<StepReport>, DistError> {
-        if parts.len() != self.workers.len() {
-            return Err(DistError::backend(format!(
-                "{} partitions for {} workers",
-                parts.len(),
-                self.workers.len()
-            )));
-        }
-        for (w, part) in self.workers.iter_mut().zip(parts) {
-            w.send(&ToWorker::Leaf { part })?;
-        }
-        // Every rank finishes its superstep; first failure in machine
-        // order wins (same semantics as the thread backend).
-        let mut reports = Vec::with_capacity(self.workers.len());
-        let mut first_err: Option<DistError> = None;
-        for w in &mut self.workers {
-            match w.recv()? {
-                FromWorker::Step(r) => reports.push(r),
-                FromWorker::Fail(e) => first_err = first_err.take().or(Some(e)),
-                other => {
-                    return Err(DistError::backend(format!(
-                        "worker {}: expected step, got {other:?}",
-                        w.machine
-                    )))
-                }
-            }
-        }
-        match first_err {
-            Some(e) => Err(e),
-            None => Ok(reports),
-        }
+    fn run_leaves(&mut self, parts: Vec<Vec<ElemId>>) -> Result<Vec<super::StepReport>, DistError> {
+        self.inner.run_leaves(parts)
     }
 
     fn run_superstep(
         &mut self,
         level: u32,
         tasks: &[AccumTask],
-    ) -> Result<Vec<StepReport>, DistError> {
-        // Shipping phase: for each parent, gather the retiring children's
-        // solutions and forward them.  The clock runs from the first Ship
-        // request to the parent's Recv receipt — serialization, two pipe
-        // hops and deserialization are all inside it, which is exactly the
-        // cost the α–β model approximates.
-        for task in tasks {
-            let t0 = Instant::now();
-            let mut children: Vec<ChildMsg> = Vec::with_capacity(task.children.len());
-            for &c in &task.children {
-                self.workers[c as usize].send(&ToWorker::Ship)?;
-                match self.workers[c as usize].recv_ok()? {
-                    FromWorker::Sol(msg) => children.push(msg),
-                    other => {
-                        return Err(DistError::backend(format!(
-                            "worker {c}: expected sol, got {other:?}"
-                        )))
-                    }
-                }
-            }
-            let parent = &mut self.workers[task.parent as usize];
-            parent.send(&ToWorker::Recv { level, children })?;
-            match parent.recv_ok()? {
-                FromWorker::Ack => {}
-                other => {
-                    return Err(DistError::backend(format!(
-                        "worker {}: expected ack, got {other:?}",
-                        task.parent
-                    )))
-                }
-            }
-            let comm_secs = t0.elapsed().as_secs_f64();
-            // Kick off the accumulation and move on — parents of this
-            // superstep compute concurrently in their own processes.
-            parent.send(&ToWorker::Accum { level, comm_secs })?;
-        }
-
-        // Collection phase, in task order.
-        let mut reports = Vec::with_capacity(tasks.len());
-        let mut first_err: Option<DistError> = None;
-        for task in tasks {
-            let parent = &mut self.workers[task.parent as usize];
-            match parent.recv()? {
-                FromWorker::Step(r) => reports.push(r),
-                FromWorker::Fail(e) => first_err = first_err.take().or(Some(e)),
-                other => {
-                    return Err(DistError::backend(format!(
-                        "worker {}: expected step, got {other:?}",
-                        task.parent
-                    )))
-                }
-            }
-        }
-        match first_err {
-            Some(e) => Err(e),
-            None => Ok(reports),
-        }
+    ) -> Result<Vec<super::StepReport>, DistError> {
+        self.inner.run_superstep(level, tasks)
     }
 
     fn finish(&mut self) -> Result<BackendOutcome, DistError> {
-        for w in &mut self.workers {
-            w.send(&ToWorker::Finish)?;
+        let outcome = self.inner.finish()?;
+        // Workers exit after Final; reap them so Drop has nothing to kill.
+        for child in &mut self.children.0 {
+            let _ = child.wait();
         }
-        let mut machines: Vec<MachineStats> = Vec::with_capacity(self.workers.len());
-        let mut solution = Vec::new();
-        let mut value = 0.0;
-        for w in &mut self.workers {
-            match w.recv_ok()? {
-                FromWorker::Final { stats, sol, value: v } => {
-                    if stats.id != w.machine {
-                        return Err(DistError::backend(format!(
-                            "worker {} reported stats for machine {}",
-                            w.machine, stats.id
-                        )));
-                    }
-                    if w.machine == 0 {
-                        solution = sol;
-                        value = v;
-                    }
-                    machines.push(stats);
-                }
-                other => {
-                    return Err(DistError::backend(format!(
-                        "worker {}: expected final, got {other:?}",
-                        w.machine
-                    )))
-                }
-            }
-        }
-        for w in &mut self.workers {
-            let _ = w.child.wait();
-        }
-        Ok(BackendOutcome { solution, value, machines })
+        Ok(outcome)
     }
 
     fn measures_comm(&self) -> bool {
-        true
-    }
-}
-
-impl Drop for ProcessBackend {
-    fn drop(&mut self) {
-        // On the success path the workers have already exited after Final;
-        // on error paths make sure no orphans linger.
-        for w in &mut self.workers {
-            match w.child.try_wait() {
-                Ok(Some(_)) => {}
-                _ => {
-                    let _ = w.child.kill();
-                    let _ = w.child.wait();
-                }
-            }
-        }
+        self.inner.measures_comm()
     }
 }
 
@@ -307,8 +151,19 @@ pub fn run_worker() -> crate::Result<()> {
     let stdout = std::io::stdout();
     let mut input = BufReader::new(stdin.lock());
     let mut output = BufWriter::new(stdout.lock());
+    serve_session(&mut input, &mut output)
+}
 
-    let first = read_frame(&mut input)
+/// One worker session over any framed byte stream: read `Init`, rebuild
+/// the problem, reply `Ready`, then serve supersteps until `Finish` or
+/// EOF.  The process backend runs this over a worker's stdio; the tcp
+/// backend's `greedyml serve` daemon runs it per accepted connection
+/// (after the `Hello`/`Welcome` version handshake).
+pub(crate) fn serve_session(
+    input: &mut impl Read,
+    output: &mut impl Write,
+) -> crate::Result<()> {
+    let first = read_frame(input)
         .map_err(|e| anyhow::anyhow!("{e}"))?
         .ok_or_else(|| anyhow::anyhow!("worker: EOF before init"))?;
     let ToWorker::Init { machine, threads, params, problem } =
@@ -321,17 +176,17 @@ pub fn run_worker() -> crate::Result<()> {
     let (oracle, constraint) = match built {
         Ok(pair) => pair,
         Err(e) => {
-            reply(&mut output, &FromWorker::Fail(DistError::backend(format!("{e:#}"))))?;
+            reply(output, &FromWorker::Fail(DistError::backend(format!("{e:#}"))))?;
             return Ok(());
         }
     };
-    reply(&mut output, &FromWorker::Ready { n: oracle.n() })?;
+    reply(output, &FromWorker::Ready { n: oracle.n() })?;
 
     // The worker's own two-level executor serves the nested gain scans;
-    // the machine-level parallelism lives in the process fan-out, so one
+    // the machine-level parallelism lives in the worker fan-out, so one
     // thread per worker is the default.
     pool::with_pool(threads.max(1), |_exec| {
-        serve(&mut input, &mut output, oracle.as_ref(), constraint.as_ref(), &params, machine)
+        serve(input, output, oracle.as_ref(), constraint.as_ref(), &params, machine)
     })
 }
 
@@ -437,6 +292,17 @@ fn serve(
                     ))),
                 )?;
                 anyhow::bail!("duplicate init");
+            }
+            ToWorker::Hello { .. } => {
+                // The handshake belongs before Init, on the TCP accept
+                // path — mid-session it is a protocol violation.
+                reply(
+                    output,
+                    &FromWorker::Fail(DistError::backend(format!(
+                        "worker {machine}: hello mid-session"
+                    ))),
+                )?;
+                anyhow::bail!("hello mid-session");
             }
         }
     }
@@ -547,5 +413,19 @@ mod tests {
             }
             other => panic!("expected fail, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn serve_session_rejects_a_hello_first_frame() {
+        // Over pipes there is no handshake: the first frame must be Init.
+        let mut input = Vec::new();
+        write_frame(
+            &mut input,
+            &ToWorker::Hello { version: super::super::wire::PROTOCOL_VERSION }.to_value(),
+        )
+        .unwrap();
+        let mut output = Vec::new();
+        let err = serve_session(&mut input.as_slice(), &mut output).unwrap_err();
+        assert!(err.to_string().contains("first frame must be init"), "{err}");
     }
 }

@@ -1,0 +1,324 @@
+//! The shared coordinator-side driver for framed-transport backends.
+//!
+//! The process backend (pipes to forked workers) and the tcp backend
+//! (sockets to `greedyml serve` daemons) speak the identical protocol of
+//! [`super::wire`] and differ only in what carries the bytes.  This module
+//! is the transport-generic half they share: a [`FramedWorker`] wraps one
+//! worker's read/write byte streams behind typed `send`/`recv`, and
+//! [`RemoteBackend`] drives a fleet of them through the
+//! [`Backend`] contract — Init/Ready handshake, leaf fan-out, the
+//! Ship → Recv gather (whose wall time *is* the measured `comm_secs`),
+//! accumulation kick-off, and final collection.
+//!
+//! Keeping this logic in one place is what keeps the transports
+//! interchangeable: a backend cannot drift in superstep ordering or error
+//! semantics when it only supplies `Read`/`Write` endpoints.
+
+use super::backend::{AccumTask, Backend, BackendOutcome};
+use super::node::{ChildMsg, NodeParams, StepReport};
+use super::wire::{read_frame, write_frame, FromWorker, ToWorker};
+use super::{DistError, MachineStats};
+use crate::{ElemId, MachineId};
+use std::io::{Read, Write};
+use std::time::Instant;
+
+/// One remote worker (= one simulated machine) behind a framed byte
+/// stream: `reader` carries worker → coordinator replies, `writer`
+/// coordinator → worker commands.
+pub(crate) struct FramedWorker<R, W> {
+    /// The machine this worker simulates (also its index in the fleet).
+    pub machine: MachineId,
+    reader: R,
+    writer: W,
+}
+
+impl<R: Read, W: Write> FramedWorker<R, W> {
+    /// Wrap a worker's byte streams.
+    pub fn new(machine: MachineId, reader: R, writer: W) -> Self {
+        Self { machine, reader, writer }
+    }
+
+    /// Send one command frame.
+    pub fn send(&mut self, msg: &ToWorker) -> Result<(), DistError> {
+        write_frame(&mut self.writer, &msg.to_value())
+            .map_err(|e| DistError::backend(format!("worker {}: {e}", self.machine)))
+    }
+
+    /// Receive one reply frame; a closed stream (worker death, dropped
+    /// connection) is an error, not a hang — the transport's per-frame
+    /// timeout bounds how long a silent-but-open stream can stall this.
+    pub fn recv(&mut self) -> Result<FromWorker, DistError> {
+        match read_frame(&mut self.reader) {
+            Ok(Some(v)) => FromWorker::from_value(&v),
+            Ok(None) => Err(DistError::backend(format!(
+                "worker {} disconnected before replying",
+                self.machine
+            ))),
+            Err(e) => Err(DistError::backend(format!("worker {}: {e}", self.machine))),
+        }
+    }
+
+    /// Receive, unwrapping a worker-side failure into `Err`.
+    pub fn recv_ok(&mut self) -> Result<FromWorker, DistError> {
+        match self.recv()? {
+            FromWorker::Fail(e) => Err(e),
+            other => Ok(other),
+        }
+    }
+}
+
+/// A [`Backend`] over any fleet of framed workers.  The transport layer
+/// (process spawn, TCP connect + handshake) builds the [`FramedWorker`]s;
+/// everything protocol-shaped lives here.
+pub(crate) struct RemoteBackend<R, W> {
+    name: &'static str,
+    workers: Vec<FramedWorker<R, W>>,
+}
+
+impl<R: Read, W: Write> RemoteBackend<R, W> {
+    /// Initialize a fleet: send every `Init` before reading any `Ready`,
+    /// so the `m` per-worker dataset rebuilds run concurrently, then
+    /// verify each worker rebuilt the coordinator's ground set.
+    ///
+    /// `workers` must arrive in machine order (worker `i` simulates
+    /// machine `i`) — superstep routing indexes the fleet by machine id.
+    pub fn init(
+        name: &'static str,
+        workers: Vec<FramedWorker<R, W>>,
+        params: &NodeParams,
+        threads: usize,
+        problem: &str,
+    ) -> Result<Self, DistError> {
+        let mut backend = Self { name, workers };
+        for w in &mut backend.workers {
+            let init = ToWorker::Init {
+                machine: w.machine,
+                threads,
+                params: params.clone(),
+                problem: problem.to_string(),
+            };
+            w.send(&init)?;
+        }
+        for w in &mut backend.workers {
+            match w.recv_ok()? {
+                FromWorker::Ready { n } if n == params.n => {}
+                FromWorker::Ready { n } => {
+                    return Err(DistError::backend(format!(
+                        "worker {} rebuilt a ground set of {n} elements, coordinator has {}; \
+                         the problem spec does not describe this oracle",
+                        w.machine, params.n
+                    )))
+                }
+                other => {
+                    return Err(DistError::backend(format!(
+                        "worker {}: expected ready, got {other:?}",
+                        w.machine
+                    )))
+                }
+            }
+        }
+        Ok(backend)
+    }
+}
+
+impl<R: Read, W: Write> Backend for RemoteBackend<R, W> {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn run_leaves(&mut self, parts: Vec<Vec<ElemId>>) -> Result<Vec<StepReport>, DistError> {
+        if parts.len() != self.workers.len() {
+            return Err(DistError::backend(format!(
+                "{} partitions for {} workers",
+                parts.len(),
+                self.workers.len()
+            )));
+        }
+        for (w, part) in self.workers.iter_mut().zip(parts) {
+            w.send(&ToWorker::Leaf { part })?;
+        }
+        // Every rank finishes its superstep; first failure in machine
+        // order wins (same semantics as the thread backend).
+        let mut reports = Vec::with_capacity(self.workers.len());
+        let mut first_err: Option<DistError> = None;
+        for w in &mut self.workers {
+            match w.recv()? {
+                FromWorker::Step(r) => reports.push(r),
+                FromWorker::Fail(e) => first_err = first_err.take().or(Some(e)),
+                other => {
+                    return Err(DistError::backend(format!(
+                        "worker {}: expected step, got {other:?}",
+                        w.machine
+                    )))
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(reports),
+        }
+    }
+
+    fn run_superstep(
+        &mut self,
+        level: u32,
+        tasks: &[AccumTask],
+    ) -> Result<Vec<StepReport>, DistError> {
+        // Shipping phase: for each parent, gather the retiring children's
+        // solutions and forward them.  The clock runs from the first Ship
+        // request to the parent's Recv receipt — serialization, two
+        // transport hops and deserialization are all inside it, which is
+        // exactly the cost the α–β model approximates.
+        for task in tasks {
+            let t0 = Instant::now();
+            let mut children: Vec<ChildMsg> = Vec::with_capacity(task.children.len());
+            for &c in &task.children {
+                self.workers[c as usize].send(&ToWorker::Ship)?;
+                match self.workers[c as usize].recv_ok()? {
+                    FromWorker::Sol(msg) => children.push(msg),
+                    other => {
+                        return Err(DistError::backend(format!(
+                            "worker {c}: expected sol, got {other:?}"
+                        )))
+                    }
+                }
+            }
+            let parent = &mut self.workers[task.parent as usize];
+            parent.send(&ToWorker::Recv { level, children })?;
+            match parent.recv_ok()? {
+                FromWorker::Ack => {}
+                other => {
+                    return Err(DistError::backend(format!(
+                        "worker {}: expected ack, got {other:?}",
+                        task.parent
+                    )))
+                }
+            }
+            let comm_secs = t0.elapsed().as_secs_f64();
+            // Kick off the accumulation and move on — parents of this
+            // superstep compute concurrently in their own workers.
+            parent.send(&ToWorker::Accum { level, comm_secs })?;
+        }
+
+        // Collection phase, in task order.
+        let mut reports = Vec::with_capacity(tasks.len());
+        let mut first_err: Option<DistError> = None;
+        for task in tasks {
+            let parent = &mut self.workers[task.parent as usize];
+            match parent.recv()? {
+                FromWorker::Step(r) => reports.push(r),
+                FromWorker::Fail(e) => first_err = first_err.take().or(Some(e)),
+                other => {
+                    return Err(DistError::backend(format!(
+                        "worker {}: expected step, got {other:?}",
+                        task.parent
+                    )))
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(reports),
+        }
+    }
+
+    fn finish(&mut self) -> Result<BackendOutcome, DistError> {
+        for w in &mut self.workers {
+            w.send(&ToWorker::Finish)?;
+        }
+        let mut machines: Vec<MachineStats> = Vec::with_capacity(self.workers.len());
+        let mut solution = Vec::new();
+        let mut value = 0.0;
+        for w in &mut self.workers {
+            match w.recv_ok()? {
+                FromWorker::Final { stats, sol, value: v } => {
+                    if stats.id != w.machine {
+                        return Err(DistError::backend(format!(
+                            "worker {} reported stats for machine {}",
+                            w.machine, stats.id
+                        )));
+                    }
+                    if w.machine == 0 {
+                        solution = sol;
+                        value = v;
+                    }
+                    machines.push(stats);
+                }
+                other => {
+                    return Err(DistError::backend(format!(
+                        "worker {}: expected final, got {other:?}",
+                        w.machine
+                    )))
+                }
+            }
+        }
+        Ok(BackendOutcome { solution, value, machines })
+    }
+
+    fn measures_comm(&self) -> bool {
+        // Solutions really serialize and cross a pipe or socket; the
+        // Ship → Recv clock above is wall time, not the α–β model.
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive a RemoteBackend against in-memory byte buffers: scripted
+    /// worker replies on the read side, captured commands on the write
+    /// side.  No processes, no sockets — pure protocol logic.
+    fn scripted(replies: &[FromWorker]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        for r in replies {
+            write_frame(&mut buf, &r.to_value()).unwrap();
+        }
+        buf
+    }
+
+    fn params(n: usize) -> NodeParams {
+        NodeParams {
+            kind: crate::greedy::GreedyKind::Lazy,
+            seed: 1,
+            n,
+            mem_limit: None,
+            local_view: false,
+            added_elements: 0,
+            compare_all_children: false,
+        }
+    }
+
+    #[test]
+    fn init_rejects_a_divergent_ground_set() {
+        let replies = scripted(&[FromWorker::Ready { n: 7 }]);
+        let worker = FramedWorker::new(0, replies.as_slice(), Vec::<u8>::new());
+        let err = RemoteBackend::init("test", vec![worker], &params(100), 1, "spec")
+            .err()
+            .expect("ground-set mismatch must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("7 elements"), "{msg}");
+        assert!(msg.contains("100"), "{msg}");
+    }
+
+    #[test]
+    fn worker_disconnect_is_an_error_not_a_hang() {
+        // An empty reply stream = the worker died before Ready.
+        let empty: &[u8] = &[];
+        let worker = FramedWorker::new(3, empty, Vec::<u8>::new());
+        let err = RemoteBackend::init("test", vec![worker], &params(10), 1, "spec")
+            .err()
+            .expect("EOF must fail");
+        assert!(err.to_string().contains("worker 3 disconnected"), "{err}");
+    }
+
+    #[test]
+    fn worker_fail_reply_surfaces_as_the_inner_error() {
+        let replies = scripted(&[FromWorker::Fail(DistError::backend("no such dataset"))]);
+        let worker = FramedWorker::new(1, replies.as_slice(), Vec::<u8>::new());
+        let err = RemoteBackend::init("test", vec![worker], &params(10), 1, "spec")
+            .err()
+            .expect("Fail must propagate");
+        assert!(err.to_string().contains("no such dataset"), "{err}");
+    }
+}

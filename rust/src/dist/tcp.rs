@@ -1,0 +1,549 @@
+//! The multi-host TCP backend.
+//!
+//! The thread and process backends still live on one box; this module is
+//! the first genuinely distributed deployment path.  A `greedyml serve
+//! --bind <addr>` **worker daemon** runs on each host and accepts one TCP
+//! connection per simulated machine; the coordinator's [`TcpBackend`]
+//! places the `m` machines onto the configured hosts round-robin
+//! (machine `i` → `hosts[i % hosts.len()]`) and drives them with the
+//! same length-prefixed frames as the process backend ([`super::wire`]),
+//! through the same transport-generic driver (`RemoteBackend` in
+//! `dist/remote.rs`) and the same worker-side session loop — so
+//! solutions stay bit-identical to the thread backend while `comm_secs`
+//! becomes *measured* wall time over a real network hop.
+//!
+//! What is TCP-specific, and lives here:
+//!
+//! * **Connection handshake** — the first frames on a fresh socket are
+//!   [`ToWorker::Hello`] / [`FromWorker::Welcome`] carrying
+//!   [`PROTOCOL_VERSION`]; a daemon from a different build refuses the
+//!   session instead of desyncing mid-run.  The pipe transport skips
+//!   this (both ends are the same binary).
+//! * **Connect retry** — a worker daemon that is still starting (tests
+//!   and CI spawn `serve` right before the run) gets
+//!   [`CONNECT_RETRY_WINDOW`] of reconnect attempts; after that the run
+//!   fails into [`DistError::Backend`].  There is no mid-run reconnect:
+//!   a worker's state (its partition, its `S_prev`) dies with its
+//!   connection, so a dropped socket fails the run rather than silently
+//!   recomputing.
+//! * **Per-frame timeouts** — coordinator-side socket reads and writes
+//!   time out after [`frame_timeout`] (default 600 s, tune with
+//!   `GREEDYML_TCP_TIMEOUT`, `0` disables), so a wedged-but-open remote
+//!   worker becomes a [`DistError::Backend`] instead of a hang.  Daemon
+//!   sessions use a short pre-handshake timeout (port scans must not pin
+//!   threads) and a generous multi-hour one afterwards — a worker
+//!   legitimately idles while other machines compute, but a coordinator
+//!   that vanished without closing the socket must not leak the session
+//!   forever.
+//!
+//! Hosts come from [`DistConfig::hosts`](crate::algo::DistConfig::hosts)
+//! (the `--hosts` flag / `run.hosts` config key) or the `GREEDYML_HOSTS`
+//! environment variable.  When every host is `127.0.0.1`, the full path —
+//! handshake, oracle rebuild, real socket shipping — runs on one machine,
+//! which is how the tier-1 suite exercises it without a cluster.
+
+use super::backend::{AccumTask, Backend, BackendOutcome};
+use super::node::{NodeParams, StepReport};
+use super::proc::serve_session;
+use super::remote::{FramedWorker, RemoteBackend};
+use super::wire::{read_frame, write_frame, FromWorker, ToWorker, PROTOCOL_VERSION};
+use super::DistError;
+use crate::ElemId;
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+/// How long [`TcpBackend::connect`] keeps retrying a refused connection
+/// before failing the run — long enough for a just-spawned `greedyml
+/// serve` to reach `accept`, short enough that a wrong `--hosts` entry
+/// fails visibly.
+pub const CONNECT_RETRY_WINDOW: Duration = Duration::from_secs(5);
+
+/// Pause between connect attempts within the retry window.
+const CONNECT_POLL: Duration = Duration::from_millis(50);
+
+/// Default per-frame socket timeout (seconds) — see [`frame_timeout`].
+const DEFAULT_FRAME_TIMEOUT_SECS: u64 = 600;
+
+/// How long a daemon waits for a fresh connection's `Hello` frame before
+/// dropping it — idle or port-scan connections must not pin a session
+/// thread (and its file descriptor) forever.  Widened to
+/// [`SESSION_IDLE_TIMEOUT`] once the handshake completes.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Read timeout of an established daemon session.  A worker legitimately
+/// idles for as long as other machines' supersteps take, so this is
+/// generous — but finite: if a coordinator host dies without a FIN/RST
+/// (crash, network partition), the session must eventually unblock and
+/// release its thread and rebuilt oracle instead of leaking them for the
+/// daemon's lifetime.
+const SESSION_IDLE_TIMEOUT: Duration = Duration::from_secs(6 * 3600);
+
+/// The coordinator's per-frame socket timeout: `GREEDYML_TCP_TIMEOUT`
+/// seconds when set (`0` disables), else 600 s.  Bounds every socket read
+/// and write, so a remote worker that stops responding mid-superstep
+/// surfaces as [`DistError::Backend`] instead of hanging the run; raise
+/// it (or disable) for problems whose leaf GREEDY legitimately computes
+/// longer than the default.  An unparsable value is an error, not a
+/// silent fall-back to the default — a user who set `30m` to extend the
+/// window must not have their run killed by the 600 s they overrode.
+pub fn frame_timeout() -> Result<Option<Duration>, DistError> {
+    match std::env::var("GREEDYML_TCP_TIMEOUT") {
+        Err(_) => Ok(Some(Duration::from_secs(DEFAULT_FRAME_TIMEOUT_SECS))),
+        Ok(v) => match v.trim().parse::<u64>() {
+            Ok(0) => Ok(None),
+            Ok(secs) => Ok(Some(Duration::from_secs(secs))),
+            Err(_) => Err(DistError::backend(format!(
+                "GREEDYML_TCP_TIMEOUT: '{v}' is not a whole number of seconds (0 disables)"
+            ))),
+        },
+    }
+}
+
+/// Parse a `host:port,host:port` list (the `--hosts` flag, the
+/// `run.hosts`/`sweep.hosts` config keys, and `GREEDYML_HOSTS` all use
+/// this form; IPv6 addresses need brackets, `[::1]:7401`).  Entries are
+/// trimmed and blank entries are skipped (so a trailing comma is fine);
+/// an all-blank list and a missing, non-numeric or zero port are errors
+/// *here* — catching a malformed entry at parse time gives a clear
+/// message, instead of `connect` burning its whole retry window on an
+/// address that could never be dialed.
+pub fn parse_hosts(s: &str) -> Result<Vec<String>, DistError> {
+    let hosts: Vec<String> = s
+        .split(',')
+        .map(|h| h.trim().to_string())
+        .filter(|h| !h.is_empty())
+        .collect();
+    if hosts.is_empty() {
+        return Err(DistError::backend(format!("no worker hosts in '{s}'")));
+    }
+    for h in &hosts {
+        let parts = if let Some(rest) = h.strip_prefix('[') {
+            // Bracketed IPv6: [addr]:port.
+            rest.split_once("]:")
+        } else if h.matches(':').count() == 1 {
+            // Hostname or IPv4: exactly one colon before the port.  A
+            // bare IPv6 literal has several and must be bracketed —
+            // `::1` alone names no port at all.
+            h.split_once(':')
+        } else {
+            None
+        };
+        // Port 0 and an empty host part both parse but can never be
+        // dialed — reject them here, not after a burned retry window.
+        let valid = parts.map_or(false, |(addr, port)| {
+            !addr.is_empty() && port.parse::<u16>().map_or(false, |p| p != 0)
+        });
+        if !valid {
+            return Err(DistError::backend(format!(
+                "host '{h}' is not host:port (IPv6 addresses need brackets: [addr]:port)"
+            )));
+        }
+    }
+    Ok(hosts)
+}
+
+/// Prefix a host-list parse failure with where the list came from,
+/// without nesting a second "backend failure:" banner.
+fn label_hosts_error(source: &str, e: DistError) -> String {
+    match e {
+        DistError::Backend { message } => format!("{source}: {message}"),
+        other => format!("{source}: {other}"),
+    }
+}
+
+/// Worker hosts from the `GREEDYML_HOSTS` environment variable, if set
+/// and non-empty.  An unparsable value is an error, not a fallback — a
+/// mis-spelt host list must not quietly change where an experiment ran.
+pub fn hosts_from_env() -> Option<Result<Vec<String>, DistError>> {
+    match std::env::var("GREEDYML_HOSTS") {
+        Ok(v) if !v.trim().is_empty() => Some(
+            parse_hosts(&v)
+                .map_err(|e| DistError::backend(label_hosts_error("GREEDYML_HOSTS", e))),
+        ),
+        _ => None,
+    }
+}
+
+/// Worker hosts from a config key (`run.hosts` / `sweep.hosts`):
+/// `Ok(None)` when the key is absent, a `key: reason` error when the
+/// value does not parse.  Shared by the experiment and sweep runners so
+/// the two entry points cannot drift.
+pub fn hosts_from_config(
+    cfg: &crate::util::config::Config,
+    key: &str,
+) -> crate::Result<Option<Vec<String>>> {
+    match cfg.get(key) {
+        None => Ok(None),
+        Some(v) => parse_hosts(v)
+            .map(Some)
+            .map_err(|e| anyhow::anyhow!("{}", label_hosts_error(key, e))),
+    }
+}
+
+/// The fleet driver over socket transports.
+type TcpFleet = RemoteBackend<BufReader<TcpStream>, BufWriter<TcpStream>>;
+
+/// The multi-host [`Backend`]: one TCP session per simulated machine,
+/// placed round-robin over `greedyml serve` daemons.
+pub struct TcpBackend {
+    inner: TcpFleet,
+}
+
+impl TcpBackend {
+    /// Connect `machines` sessions round-robin over `hosts`, handshake
+    /// protocol versions, ship the problem spec, and verify every worker
+    /// rebuilt the coordinator's ground set.
+    pub fn connect(
+        hosts: &[String],
+        machines: u32,
+        params: &NodeParams,
+        threads: usize,
+        problem: &str,
+    ) -> Result<Self, DistError> {
+        Self::connect_with_retry(hosts, machines, params, threads, problem, CONNECT_RETRY_WINDOW)
+    }
+
+    /// [`TcpBackend::connect`] with an explicit retry window (tests use a
+    /// short one so a dead host fails fast).
+    pub(crate) fn connect_with_retry(
+        hosts: &[String],
+        machines: u32,
+        params: &NodeParams,
+        threads: usize,
+        problem: &str,
+        retry: Duration,
+    ) -> Result<Self, DistError> {
+        if hosts.is_empty() {
+            return Err(DistError::backend("the tcp backend needs at least one worker host"));
+        }
+        let timeout = frame_timeout()?;
+        let mut workers = Vec::with_capacity(machines as usize);
+        for machine in 0..machines {
+            let host = &hosts[machine as usize % hosts.len()];
+            let stream = connect_retry(host, retry)?;
+            let _ = stream.set_nodelay(true);
+            stream
+                .set_read_timeout(timeout)
+                .and_then(|_| stream.set_write_timeout(timeout))
+                .map_err(|e| DistError::backend(format!("worker at {host}: set timeout: {e}")))?;
+            let reader = stream
+                .try_clone()
+                .map_err(|e| DistError::backend(format!("worker at {host}: clone socket: {e}")))?;
+            let mut worker =
+                FramedWorker::new(machine, BufReader::new(reader), BufWriter::new(stream));
+            handshake(&mut worker, host)?;
+            workers.push(worker);
+        }
+        Ok(Self { inner: RemoteBackend::init("tcp", workers, params, threads, problem)? })
+    }
+}
+
+/// Dial `host` until it accepts or the retry window closes.  Each
+/// attempt uses [`TcpStream::connect_timeout`] bounded by the remaining
+/// window, so a blackholed host (dropped SYNs, no RST) fails within
+/// ~`retry` instead of blocking on the kernel's minutes-long connect
+/// timeout.
+fn connect_retry(host: &str, retry: Duration) -> Result<TcpStream, DistError> {
+    use std::net::ToSocketAddrs;
+    let deadline = Instant::now() + retry;
+    loop {
+        let attempt = (|| -> std::io::Result<TcpStream> {
+            let mut last: Option<std::io::Error> = None;
+            for addr in host.to_socket_addrs()? {
+                let left = deadline
+                    .saturating_duration_since(Instant::now())
+                    .max(CONNECT_POLL);
+                match TcpStream::connect_timeout(&addr, left) {
+                    Ok(stream) => return Ok(stream),
+                    Err(e) => last = Some(e),
+                }
+            }
+            Err(last.unwrap_or_else(|| {
+                std::io::Error::new(std::io::ErrorKind::NotFound, "no addresses resolved")
+            }))
+        })();
+        match attempt {
+            Ok(stream) => return Ok(stream),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(DistError::backend(format!(
+                        "cannot reach worker at {host} after {:.1}s: {e} \
+                         (is `greedyml serve --bind {host}` running?)",
+                        retry.as_secs_f64()
+                    )));
+                }
+                std::thread::sleep(CONNECT_POLL);
+            }
+        }
+    }
+}
+
+/// Exchange `Hello`/`Welcome` on a fresh connection and verify the
+/// protocol versions match.
+fn handshake(
+    worker: &mut FramedWorker<BufReader<TcpStream>, BufWriter<TcpStream>>,
+    host: &str,
+) -> Result<(), DistError> {
+    worker.send(&ToWorker::Hello { version: PROTOCOL_VERSION })?;
+    match worker.recv_ok()? {
+        FromWorker::Welcome { version } if version == PROTOCOL_VERSION => Ok(()),
+        FromWorker::Welcome { version } => Err(DistError::backend(format!(
+            "worker at {host} speaks wire-protocol v{version}, coordinator speaks \
+             v{PROTOCOL_VERSION} — deploy matching greedyml builds"
+        ))),
+        other => Err(DistError::backend(format!(
+            "worker at {host}: expected welcome, got {other:?}"
+        ))),
+    }
+}
+
+impl Backend for TcpBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn run_leaves(&mut self, parts: Vec<Vec<ElemId>>) -> Result<Vec<StepReport>, DistError> {
+        self.inner.run_leaves(parts)
+    }
+
+    fn run_superstep(
+        &mut self,
+        level: u32,
+        tasks: &[AccumTask],
+    ) -> Result<Vec<StepReport>, DistError> {
+        self.inner.run_superstep(level, tasks)
+    }
+
+    fn finish(&mut self) -> Result<BackendOutcome, DistError> {
+        self.inner.finish()
+    }
+
+    fn measures_comm(&self) -> bool {
+        self.inner.measures_comm()
+    }
+}
+
+// ---- worker daemon -----------------------------------------------------
+
+/// Entry point of the `greedyml serve` subcommand: bind `addr`, print the
+/// resolved address (`greedyml serve: listening on <ip>:<port>` — the one
+/// stdout line, so spawners can `--bind 127.0.0.1:0` and read the port
+/// back), then accept connections forever.  Each connection is one worker
+/// session — handshake, `Init`, supersteps — served on its own thread, so
+/// a single daemon hosts as many simulated machines as coordinators place
+/// on it, across any number of runs.  Session errors are logged to stderr
+/// and never take the daemon down; stop it with SIGTERM/Ctrl-C.
+pub fn run_serve(bind: &str) -> crate::Result<()> {
+    let listener =
+        TcpListener::bind(bind).map_err(|e| anyhow::anyhow!("cannot bind {bind}: {e}"))?;
+    let addr = listener.local_addr().map_err(|e| anyhow::anyhow!("local_addr: {e}"))?;
+    println!("greedyml serve: listening on {addr}");
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                std::thread::spawn(move || {
+                    if let Err(e) = serve_connection(stream) {
+                        eprintln!("greedyml serve: session from {peer}: {e:#}");
+                    }
+                });
+            }
+            Err(e) => {
+                // A persistent accept failure (e.g. EMFILE) must degrade
+                // to slow retries, not a hot stderr-spamming spin.
+                eprintln!("greedyml serve: accept: {e}");
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Serve one accepted connection: version handshake, then the shared
+/// worker session loop ([`serve_session`]).
+fn serve_connection(stream: TcpStream) -> crate::Result<()> {
+    let _ = stream.set_nodelay(true);
+    // Read timeout only until the handshake completes (SO_RCVTIMEO is a
+    // property of the socket, shared with the cloned reader below).
+    let _ = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+    let reader = stream.try_clone().map_err(|e| anyhow::anyhow!("clone socket: {e}"))?;
+    let mut input = BufReader::new(reader);
+    let mut output = BufWriter::new(stream);
+
+    let first = read_frame(&mut input)
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .ok_or_else(|| anyhow::anyhow!("EOF before hello"))?;
+    match ToWorker::from_value(&first).map_err(|e| anyhow::anyhow!("{e}"))? {
+        ToWorker::Hello { version } if version == PROTOCOL_VERSION => {
+            write_frame(&mut output, &FromWorker::Welcome { version: PROTOCOL_VERSION }.to_value())
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let _ = input.get_ref().set_read_timeout(Some(SESSION_IDLE_TIMEOUT));
+        }
+        ToWorker::Hello { version } => {
+            let msg = format!(
+                "coordinator speaks wire-protocol v{version}, this daemon speaks \
+                 v{PROTOCOL_VERSION} — deploy matching greedyml builds"
+            );
+            let _ = write_frame(
+                &mut output,
+                &FromWorker::Fail(DistError::backend(msg.clone())).to_value(),
+            );
+            anyhow::bail!("{msg}");
+        }
+        other => {
+            let _ = write_frame(
+                &mut output,
+                &FromWorker::Fail(DistError::backend("expected hello as the first frame"))
+                    .to_value(),
+            );
+            anyhow::bail!("expected hello as the first frame, got {other:?}");
+        }
+    }
+    serve_session(&mut input, &mut output)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::greedy::GreedyKind;
+
+    const SPEC: &str =
+        "dataset.kind = retail\ndataset.n = 100\ndataset.seed = 2\nproblem.k = 4\n";
+
+    fn params() -> NodeParams {
+        NodeParams {
+            kind: GreedyKind::Lazy,
+            seed: 1,
+            n: 100,
+            mem_limit: None,
+            local_view: false,
+            added_elements: 0,
+            compare_all_children: false,
+        }
+    }
+
+    /// Accept `sessions` connections on an ephemeral port, serving each
+    /// with the real daemon session handler on its own thread.
+    fn local_daemon(sessions: usize) -> (String, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let mut workers = Vec::new();
+            for _ in 0..sessions {
+                let (stream, _) = listener.accept().unwrap();
+                workers.push(std::thread::spawn(move || {
+                    let _ = serve_connection(stream);
+                }));
+            }
+            for w in workers {
+                w.join().unwrap();
+            }
+        });
+        (addr, handle)
+    }
+
+    #[test]
+    fn parse_hosts_splits_trims_and_validates() {
+        assert_eq!(
+            parse_hosts(" 10.0.0.1:7401 ,10.0.0.2:7402, ").unwrap(),
+            vec!["10.0.0.1:7401".to_string(), "10.0.0.2:7402".to_string()]
+        );
+        assert_eq!(parse_hosts("[::1]:7401").unwrap(), vec!["[::1]:7401".to_string()]);
+        assert!(parse_hosts("").is_err());
+        assert!(parse_hosts(" , ").is_err());
+        assert!(parse_hosts("no-port-here").is_err());
+        assert!(parse_hosts("host:notaport").is_err());
+        assert!(parse_hosts("::1").is_err(), "bare IPv6 literals name no port");
+        assert!(parse_hosts("[::1]").is_err(), "bracketed address still needs a port");
+        assert!(parse_hosts(":7401").is_err(), "empty host part is undialable");
+        assert!(parse_hosts("host:0").is_err(), "port 0 is undialable");
+    }
+
+    #[test]
+    fn dead_host_fails_within_the_retry_window() {
+        // Bind-then-drop reserves a port nobody listens on.
+        let port = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let hosts = vec![format!("127.0.0.1:{port}")];
+        let err = TcpBackend::connect_with_retry(
+            &hosts,
+            1,
+            &params(),
+            1,
+            SPEC,
+            Duration::from_millis(200),
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("cannot reach worker"), "{msg}");
+        assert!(msg.contains("greedyml serve"), "{msg}");
+    }
+
+    #[test]
+    fn version_mismatch_is_refused_with_a_fail_frame() {
+        let (addr, handle) = local_daemon(1);
+        let stream = connect_retry(&addr, Duration::from_secs(2)).unwrap();
+        let reader = stream.try_clone().unwrap();
+        let mut input = BufReader::new(reader);
+        let mut output = BufWriter::new(stream);
+        write_frame(&mut output, &ToWorker::Hello { version: PROTOCOL_VERSION + 1 }.to_value())
+            .unwrap();
+        let v = read_frame(&mut input).unwrap().expect("a Fail frame, not a silent close");
+        match FromWorker::from_value(&v).unwrap() {
+            FromWorker::Fail(DistError::Backend { message }) => {
+                assert!(message.contains("wire-protocol"), "{message}");
+            }
+            other => panic!("expected fail, got {other:?}"),
+        }
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn single_machine_session_runs_end_to_end_over_a_socket() {
+        // The full coordinator path — connect, handshake, Init/Ready with
+        // a worker that rebuilds the oracle, leaf superstep, Final — over
+        // a real localhost socket, no child processes.
+        let (addr, handle) = local_daemon(1);
+        let mut backend = TcpBackend::connect_with_retry(
+            &[addr],
+            1,
+            &params(),
+            1,
+            SPEC,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert_eq!(backend.name(), "tcp");
+        assert!(backend.measures_comm());
+        let reports = backend.run_leaves(vec![(0..100).collect()]).unwrap();
+        assert_eq!(reports.len(), 1);
+        assert!(reports[0].calls > 0);
+        let outcome = backend.finish().unwrap();
+        assert_eq!(outcome.machines.len(), 1);
+        assert_eq!(outcome.solution.len(), 4, "k = 4 cardinality constraint");
+        assert!(outcome.value > 0.0);
+        drop(backend);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn ground_set_mismatch_is_reported_against_the_rebuilt_oracle() {
+        // Coordinator claims n = 100 but ships a 60-element problem: the
+        // Ready{n} check must catch the divergence.
+        let (addr, handle) = local_daemon(1);
+        let bad_spec = "dataset.kind = retail\ndataset.n = 60\ndataset.seed = 2\nproblem.k = 4\n";
+        let err = TcpBackend::connect_with_retry(
+            &[addr],
+            1,
+            &params(),
+            1,
+            bad_spec,
+            Duration::from_secs(5),
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("60 elements"), "{msg}");
+        handle.join().unwrap();
+    }
+}

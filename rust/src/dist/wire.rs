@@ -1,18 +1,26 @@
-//! The process-backend wire protocol.
+//! The worker wire protocol shared by every framed-transport backend.
 //!
-//! Coordinator and workers speak length-prefixed JSON frames over the
-//! worker's stdin/stdout: a 4-byte little-endian payload length followed
-//! by one `serde_json` document.  JSON keeps the protocol debuggable
-//! (any frame can be printed and a session replayed by hand) and
-//! `serde_json`'s shortest-roundtrip float formatting (ryu) guarantees
-//! `f64` values cross the boundary bit-exactly — the backend-parity
-//! suite depends on `f(S)` surviving serialization.
+//! Coordinator and workers speak length-prefixed JSON frames — a 4-byte
+//! little-endian payload length followed by one `serde_json` document —
+//! over the worker's stdin/stdout (process backend) or a `TcpStream`
+//! (tcp backend).  JSON keeps the protocol debuggable (any frame can be
+//! printed and a session replayed by hand) and `serde_json`'s
+//! shortest-roundtrip float formatting (ryu) guarantees `f64` values
+//! cross the boundary bit-exactly — the backend-parity suite depends on
+//! `f(S)` surviving serialization.
 //!
-//! Message flow (one worker = one simulated machine):
+//! The protocol is specified prose-first in `docs/wire-protocol.md`; the
+//! `wire_doc_stays_in_lockstep_with_the_codec` test fails if a message
+//! variant exists in one place but not the other.
+//!
+//! Message flow (one worker = one simulated machine; the `Hello`/`Welcome`
+//! handshake only happens on TCP connections, where the two endpoints may
+//! be different builds):
 //!
 //! ```text
 //! coordinator → worker          worker → coordinator
 //! ------------------          --------------------
+//! Hello{version}               Welcome{version} | Fail(err)   (TCP only)
 //! Init{machine,params,spec}    Ready{n}
 //! Leaf{part}                   Step(report) | Fail(err)
 //! Ship                         Sol(child msg)
@@ -31,6 +39,15 @@ use std::io::{Read, Write};
 /// Hard cap on one frame's payload (a corrupt length prefix must not make
 /// the reader allocate gigabytes).
 const MAX_FRAME: u32 = 1 << 30;
+
+/// Wire-protocol version, checked by the TCP handshake
+/// ([`ToWorker::Hello`] / [`FromWorker::Welcome`]).  Bump whenever a frame
+/// is added, removed, or changes field semantics: a `greedyml serve`
+/// daemon from a different build must refuse a coordinator it cannot
+/// faithfully serve instead of desyncing mid-run.  The process backend
+/// skips the handshake — both pipe endpoints are the same binary, so the
+/// versions are trivially equal.
+pub const PROTOCOL_VERSION: u32 = 1;
 
 /// Write one length-prefixed JSON frame.
 pub fn write_frame(w: &mut impl Write, v: &Value) -> Result<(), DistError> {
@@ -69,20 +86,51 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Value>, DistError> {
 /// Coordinator → worker commands.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ToWorker {
+    /// TCP connection handshake: the coordinator announces its
+    /// [`PROTOCOL_VERSION`] as the very first frame on the socket.  The
+    /// worker replies [`FromWorker::Welcome`] on a match and
+    /// [`FromWorker::Fail`] (then closes) on a mismatch.  Never sent over
+    /// the process backend's pipes.
+    Hello {
+        /// The coordinator's [`PROTOCOL_VERSION`].
+        version: u32,
+    },
     /// Handshake: which machine this worker simulates, the node program
     /// parameters, the executor width for its in-worker gain scans, and
     /// the problem spec (flat config text) to rebuild the oracle from.
-    Init { machine: MachineId, threads: usize, params: NodeParams, problem: String },
+    Init {
+        /// The simulated machine this worker becomes.
+        machine: MachineId,
+        /// Executor width for the worker's nested gain scans.
+        threads: usize,
+        /// The node program's parameters.
+        params: NodeParams,
+        /// Flat `key = value` problem spec the worker rebuilds from.
+        problem: String,
+    },
     /// Level-0 superstep: GREEDY on this partition.
-    Leaf { part: Vec<ElemId> },
+    Leaf {
+        /// The machine's data partition (element ids).
+        part: Vec<ElemId>,
+    },
     /// Ship the held solution to the coordinator (the worker retires).
     Ship,
     /// Deliver child solutions for the coming accumulation; the worker
     /// acks immediately so the coordinator can stop its transfer clock.
-    Recv { level: u32, children: Vec<ChildMsg> },
+    Recv {
+        /// Tree level of the coming accumulation.
+        level: u32,
+        /// The retiring children's shipped solutions.
+        children: Vec<ChildMsg>,
+    },
     /// Run the accumulation step on the previously delivered children,
     /// booking `comm_secs` (the coordinator-measured shipping time).
-    Accum { level: u32, comm_secs: f64 },
+    Accum {
+        /// Tree level of the accumulation.
+        level: u32,
+        /// Coordinator-measured Ship → Recv wall seconds to book.
+        comm_secs: f64,
+    },
     /// Ship final stats (and the solution, for the root) and exit.
     Finish,
 }
@@ -90,9 +138,18 @@ pub enum ToWorker {
 /// Worker → coordinator replies.
 #[derive(Clone, Debug, PartialEq)]
 pub enum FromWorker {
+    /// TCP handshake reply: the worker's [`PROTOCOL_VERSION`], sent only
+    /// when it matches the coordinator's [`ToWorker::Hello`].
+    Welcome {
+        /// The worker's [`PROTOCOL_VERSION`].
+        version: u32,
+    },
     /// Handshake reply: the rebuilt oracle's ground-set size (sanity check
     /// that coordinator and worker built the same problem).
-    Ready { n: usize },
+    Ready {
+        /// Ground-set size of the worker's rebuilt oracle.
+        n: usize,
+    },
     /// A completed superstep.
     Step(StepReport),
     /// Receipt of a `Recv` payload.
@@ -100,7 +157,14 @@ pub enum FromWorker {
     /// The shipped solution of a retiring machine.
     Sol(ChildMsg),
     /// Final stats + solution.
-    Final { stats: MachineStats, sol: Vec<ElemId>, value: f64 },
+    Final {
+        /// The machine's lifetime statistics.
+        stats: MachineStats,
+        /// The machine's final solution (meaningful at the root).
+        sol: Vec<ElemId>,
+        /// f(sol) as this machine evaluated it.
+        value: f64,
+    },
     /// The node program failed (OOM) or the worker itself did.
     Fail(DistError),
 }
@@ -109,6 +173,7 @@ impl ToWorker {
     /// Encode as a JSON frame body.
     pub fn to_value(&self) -> Value {
         match self {
+            Self::Hello { version } => json!({ "t": "hello", "version": version }),
             Self::Init { machine, threads, params, problem } => json!({
                 "t": "init",
                 "machine": machine,
@@ -133,6 +198,7 @@ impl ToWorker {
     /// Decode from a JSON frame body.
     pub fn from_value(v: &Value) -> Result<Self, DistError> {
         match str_field(v, "t")? {
+            "hello" => Ok(Self::Hello { version: u64_field(v, "version")? as u32 }),
             "init" => Ok(Self::Init {
                 machine: u64_field(v, "machine")? as MachineId,
                 threads: u64_field(v, "threads")? as usize,
@@ -162,6 +228,7 @@ impl FromWorker {
     /// Encode as a JSON frame body.
     pub fn to_value(&self) -> Value {
         match self {
+            Self::Welcome { version } => json!({ "t": "welcome", "version": version }),
             Self::Ready { n } => json!({ "t": "ready", "n": n }),
             Self::Step(r) => json!({ "t": "step", "report": report_to_value(r) }),
             Self::Ack => json!({ "t": "ack" }),
@@ -179,6 +246,7 @@ impl FromWorker {
     /// Decode from a JSON frame body.
     pub fn from_value(v: &Value) -> Result<Self, DistError> {
         match str_field(v, "t")? {
+            "welcome" => Ok(Self::Welcome { version: u64_field(v, "version")? as u32 }),
             "ready" => Ok(Self::Ready { n: u64_field(v, "n")? as usize }),
             "step" => Ok(Self::Step(report_from_value(field(v, "report")?)?)),
             "ack" => Ok(Self::Ack),
@@ -393,65 +461,135 @@ mod tests {
         assert_eq!(FromWorker::from_value(&v).unwrap(), msg);
     }
 
+    /// One sample of every coordinator → worker command (the lockstep test
+    /// derives the live tag set from this list — extend it when adding a
+    /// variant).
+    fn all_commands() -> Vec<ToWorker> {
+        vec![
+            ToWorker::Hello { version: PROTOCOL_VERSION },
+            ToWorker::Init {
+                machine: 3,
+                threads: 2,
+                params: NodeParams {
+                    kind: GreedyKind::Lazy,
+                    seed: 42,
+                    n: 1000,
+                    mem_limit: Some(1 << 20),
+                    local_view: true,
+                    added_elements: 50,
+                    compare_all_children: false,
+                },
+                problem: "dataset.kind = retail\ndataset.n = 300\n".to_string(),
+            },
+            ToWorker::Leaf { part: vec![5, 1, 999] },
+            ToWorker::Ship,
+            ToWorker::Recv {
+                level: 2,
+                children: vec![ChildMsg { from: 4, sol: vec![7, 8], value: 12.5, bytes: 64 }],
+            },
+            ToWorker::Accum { level: 2, comm_secs: 0.125 },
+            ToWorker::Finish,
+        ]
+    }
+
+    /// One sample of every worker → coordinator reply (see [`all_commands`]).
+    fn all_replies() -> Vec<FromWorker> {
+        vec![
+            FromWorker::Welcome { version: PROTOCOL_VERSION },
+            FromWorker::Ready { n: 512 },
+            FromWorker::Step(StepReport {
+                machine: 1,
+                level: 2,
+                comp_secs: 0.5,
+                comm_secs: 0.001,
+                calls: 900,
+                accum_elems: 33,
+                peak_mem: 4096,
+            }),
+            FromWorker::Ack,
+            FromWorker::Sol(ChildMsg { from: 0, sol: vec![1, 2, 3], value: 7.25, bytes: 96 }),
+            FromWorker::Final {
+                stats: MachineStats { id: 6, calls: 10, peak_mem: 77, ..MachineStats::new(6) },
+                sol: vec![9],
+                value: 3.5,
+            },
+            FromWorker::Fail(DistError::OutOfMemory {
+                machine: 2,
+                level: 1,
+                label: "child solutions".to_string(),
+                requested: 100,
+                in_use: 50,
+                limit: 120,
+            }),
+        ]
+    }
+
     #[test]
     fn commands_roundtrip() {
-        roundtrip_cmd(ToWorker::Init {
-            machine: 3,
-            threads: 2,
-            params: NodeParams {
-                kind: GreedyKind::Lazy,
-                seed: 42,
-                n: 1000,
-                mem_limit: Some(1 << 20),
-                local_view: true,
-                added_elements: 50,
-                compare_all_children: false,
-            },
-            problem: "dataset.kind = retail\ndataset.n = 300\n".to_string(),
-        });
-        roundtrip_cmd(ToWorker::Leaf { part: vec![5, 1, 999] });
-        roundtrip_cmd(ToWorker::Ship);
-        roundtrip_cmd(ToWorker::Recv {
-            level: 2,
-            children: vec![ChildMsg { from: 4, sol: vec![7, 8], value: 12.5, bytes: 64 }],
-        });
-        roundtrip_cmd(ToWorker::Accum { level: 2, comm_secs: 0.125 });
-        roundtrip_cmd(ToWorker::Finish);
+        for cmd in all_commands() {
+            roundtrip_cmd(cmd);
+        }
     }
 
     #[test]
     fn replies_roundtrip() {
-        roundtrip_reply(FromWorker::Ready { n: 512 });
-        roundtrip_reply(FromWorker::Step(StepReport {
-            machine: 1,
-            level: 2,
-            comp_secs: 0.5,
-            comm_secs: 0.001,
-            calls: 900,
-            accum_elems: 33,
-            peak_mem: 4096,
-        }));
-        roundtrip_reply(FromWorker::Ack);
-        roundtrip_reply(FromWorker::Sol(ChildMsg {
-            from: 0,
-            sol: vec![1, 2, 3],
-            value: 7.25,
-            bytes: 96,
-        }));
-        roundtrip_reply(FromWorker::Final {
-            stats: MachineStats { id: 6, calls: 10, peak_mem: 77, ..MachineStats::new(6) },
-            sol: vec![9],
-            value: 3.5,
-        });
-        roundtrip_reply(FromWorker::Fail(DistError::OutOfMemory {
-            machine: 2,
-            level: 1,
-            label: "child solutions".to_string(),
-            requested: 100,
-            in_use: 50,
-            limit: 120,
-        }));
+        for reply in all_replies() {
+            roundtrip_reply(reply);
+        }
         roundtrip_reply(FromWorker::Fail(DistError::backend("spawn failed")));
+    }
+
+    /// Every `"t"` tag scanned out of a document (the prose spec quotes
+    /// each frame's tag as `"t": "<tag>"`).
+    fn doc_tags(doc: &str) -> std::collections::BTreeSet<String> {
+        let mut tags = std::collections::BTreeSet::new();
+        let needle = "\"t\": \"";
+        let mut rest = doc;
+        while let Some(pos) = rest.find(needle) {
+            rest = &rest[pos + needle.len()..];
+            if let Some(end) = rest.find('"') {
+                tags.insert(rest[..end].to_string());
+            }
+        }
+        tags
+    }
+
+    #[test]
+    fn wire_doc_stays_in_lockstep_with_the_codec() {
+        // Keep `docs/wire-protocol.md` honest: every message variant the
+        // codec speaks must be named in the spec (as `"t": "<tag>"`), the
+        // spec must not describe tags the codec does not speak, and every
+        // variant must round-trip through its own frame.
+        let doc = include_str!("../../../docs/wire-protocol.md");
+        let documented = doc_tags(doc);
+        let mut live = std::collections::BTreeSet::new();
+        for cmd in all_commands() {
+            live.insert(cmd.to_value()["t"].as_str().unwrap().to_string());
+            roundtrip_cmd(cmd);
+        }
+        for reply in all_replies() {
+            live.insert(reply.to_value()["t"].as_str().unwrap().to_string());
+            roundtrip_reply(reply);
+        }
+        assert_eq!(
+            live, documented,
+            "docs/wire-protocol.md and dist/wire.rs disagree on the message set \
+             (left = codec, right = doc) — update both together"
+        );
+    }
+
+    #[test]
+    fn ship_frame_bytes_match_the_documented_hex_dump() {
+        // The annotated hex dump in docs/wire-protocol.md shows this exact
+        // frame; if the encoding ever changes, the doc must change with it.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &ToWorker::Ship.to_value()).unwrap();
+        assert_eq!(
+            buf,
+            [0x0c, 0x00, 0x00, 0x00, 0x7b, 0x22, 0x74, 0x22, 0x3a, 0x22, 0x73, 0x68, 0x69,
+             0x70, 0x22, 0x7d],
+            "Ship frame no longer matches the hex dump in docs/wire-protocol.md"
+        );
     }
 
     #[test]

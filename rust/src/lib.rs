@@ -24,6 +24,10 @@ pub mod objective;
 pub mod constraint;
 pub mod greedy;
 pub mod tree;
+// `dist` is the crate's most public surface (backends, wire protocol,
+// runtime meters) and the one other backends plug into — every public
+// item in it must be documented.
+#[warn(missing_docs)]
 pub mod dist;
 pub mod algo;
 pub mod bsp;

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   run       — run an experiment config:   greedyml run --config configs/fig4.toml [--set k=v]…
+//!   sweep     — run an experiment grid (k values × algorithms)
+//!   serve     — host tcp-backend worker sessions: greedyml serve --bind 0.0.0.0:7401
 //!   tree      — inspect an accumulation tree: greedyml tree --machines 8 --branching 2
 //!   datasets  — print Table-2-style summaries of the synthetic presets
 //!   artifacts — validate the AOT artifact bundle and report entry points
@@ -27,6 +29,7 @@ fn real_main() -> greedyml::Result<()> {
     match args.command.as_deref() {
         Some("run") => cmd_run(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("serve") => cmd_serve(&args),
         Some("tree") => cmd_tree(&args),
         Some("datasets") => cmd_datasets(),
         Some("artifacts") => cmd_artifacts(&args),
@@ -43,22 +46,28 @@ fn real_main() -> greedyml::Result<()> {
     }
 }
 
-const USAGE: &str = "usage: greedyml <run|sweep|tree|datasets|artifacts|model> [flags]
-  run       --config <file> [--set key=value]… [--json <out.json>] [--pjrt] [--backend thread|process]
-  sweep     --config <file> (with a [sweep] section) [--set key=value]… [--json <out.json>] [--csv <dir>]
+const USAGE: &str = "usage: greedyml <run|sweep|serve|tree|datasets|artifacts|model> [flags]
+  run       --config <file> [--set key=value]… [--json <out.json>] [--pjrt]
+            [--backend thread|process|tcp] [--hosts h1:port,h2:port]
+  sweep     --config <file> (with a [sweep] section) [--set key=value]… [--json <out.json>]
+            [--csv <dir>] [--backend thread|process|tcp] [--hosts h1:port,h2:port]
+  serve     --bind <addr>   (tcp-backend worker daemon; --bind 127.0.0.1:0 picks a free port)
   tree      --machines <m> --branching <b>
   datasets  (no flags)
   artifacts [--dir <artifacts/>]
   model     --n <n> --k <k> --machines <m> --levels <L> [--delta <d>]";
 
 fn cmd_run(args: &Args) -> greedyml::Result<()> {
-    args.check_known(&["config", "set", "json", "pjrt", "trace", "backend"])?;
+    args.check_known(&["config", "set", "json", "pjrt", "trace", "backend", "hosts"])?;
     let mut cfg = Config::load(args.require("config")?)?;
     for kv in args.get_all("set") {
         cfg.set_kv(kv)?;
     }
     if let Some(backend) = args.get("backend") {
         cfg.set("run.backend", backend);
+    }
+    if let Some(hosts) = args.get("hosts") {
+        cfg.set("run.hosts", hosts);
     }
     let engine = if args.has("pjrt") || cfg.str_or("objective.backend", "cpu") == "pjrt" {
         if args.has("pjrt") {
@@ -113,13 +122,16 @@ fn cmd_run(args: &Args) -> greedyml::Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
-    args.check_known(&["config", "set", "json", "pjrt", "csv", "backend"])?;
+    args.check_known(&["config", "set", "json", "pjrt", "csv", "backend", "hosts"])?;
     let mut cfg = Config::load(args.require("config")?)?;
     for kv in args.get_all("set") {
         cfg.set_kv(kv)?;
     }
     if let Some(backend) = args.get("backend") {
         cfg.set("sweep.backend", backend);
+    }
+    if let Some(hosts) = args.get("hosts") {
+        cfg.set("sweep.hosts", hosts);
     }
     let engine = if args.has("pjrt") || cfg.str_or("objective.backend", "cpu") == "pjrt" {
         Some(Arc::new(Engine::load(&greedyml::runtime::artifact_dir())?))
@@ -147,6 +159,15 @@ fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
         }
     }
     Ok(())
+}
+
+fn cmd_serve(args: &Args) -> greedyml::Result<()> {
+    args.check_known(&["bind"])?;
+    // 127.0.0.1:0 binds an ephemeral port and prints it — handy for tests
+    // and single-host smoke runs; production daemons pass an explicit
+    // `--bind 0.0.0.0:<port>`.
+    let bind = args.get("bind").unwrap_or("127.0.0.1:0");
+    greedyml::dist::tcp::run_serve(bind)
 }
 
 fn cmd_tree(args: &Args) -> greedyml::Result<()> {

@@ -1,24 +1,82 @@
-//! Backend parity: the thread backend (in-process pool, α–β-modeled comm)
-//! and the process backend (one forked worker per machine, measured comm)
-//! must produce **bit-identical** solutions, values and call counts for
-//! the same seed and config — the backend only decides *where* machines
-//! run, never *what* they compute.
+//! Backend parity: the thread backend (in-process pool, α–β-modeled comm),
+//! the process backend (one forked worker per machine, measured comm) and
+//! the tcp backend (worker sessions on `greedyml serve` daemons, measured
+//! comm over real sockets) must produce **bit-identical** solutions,
+//! values and call counts for the same seed and config — the backend only
+//! decides *where* machines run, never *what* they compute.
 //!
 //! Problems are config-built (`coordinator::build_problem`) because the
-//! process backend's workers rebuild the oracle from the shipped problem
+//! process and tcp workers rebuild the oracle from the shipped problem
 //! spec; the spec is the same text on both sides, so the data is
-//! byte-identical.
+//! byte-identical.  The tcp tests spawn real `greedyml serve` daemons on
+//! `127.0.0.1:0` and read the bound port back from their first stdout
+//! line — the full multi-host path, no cluster needed.
 
 use greedyml::algo::{run_dist, DistConfig, DistOutcome, PartitionScheme};
 use greedyml::coordinator::{build_problem, experiment::build_constraint, problem_spec};
+use greedyml::dist::wire::{read_frame, write_frame, FromWorker, ToWorker, PROTOCOL_VERSION};
 use greedyml::dist::{BackendSpec, DistError};
 use greedyml::tree::AccumulationTree;
 use greedyml::util::config::Config;
+use std::io::{BufRead, BufReader, BufWriter};
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
 
-/// The real `greedyml` binary — the process backend's workers; the test
-/// binary itself has no `worker` subcommand.
+/// The real `greedyml` binary — the process backend's workers and the tcp
+/// backend's `serve` daemons; the test binary itself has neither
+/// subcommand.
 fn worker_bin() -> String {
     env!("CARGO_BIN_EXE_greedyml").to_string()
+}
+
+/// One spawned `greedyml serve` daemon on an ephemeral localhost port,
+/// killed on drop.
+struct ServeDaemon {
+    child: Child,
+    addr: String,
+}
+
+impl ServeDaemon {
+    fn spawn() -> Self {
+        let mut child = Command::new(worker_bin())
+            .args(["serve", "--bind", "127.0.0.1:0"])
+            .stdout(Stdio::piped())
+            .spawn()
+            .expect("spawn greedyml serve");
+        // The daemon's one stdout line: "greedyml serve: listening on <addr>".
+        let mut line = String::new();
+        BufReader::new(child.stdout.as_mut().expect("piped stdout"))
+            .read_line(&mut line)
+            .expect("read listen line");
+        let addr = line
+            .trim()
+            .rsplit(' ')
+            .next()
+            .unwrap_or_default()
+            .to_string();
+        assert!(
+            line.contains("listening on") && addr.contains(':'),
+            "unexpected serve banner: {line:?}"
+        );
+        ServeDaemon { child, addr }
+    }
+}
+
+impl Drop for ServeDaemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// A tcp-backend config targeting the given daemons.
+fn tcp_cfg(cfg: &DistConfig, parsed: &Config, daemons: &[ServeDaemon]) -> DistConfig {
+    DistConfig {
+        backend: BackendSpec::Tcp,
+        problem: Some(problem_spec(parsed)),
+        hosts: Some(daemons.iter().map(|d| d.addr.clone()).collect()),
+        ..cfg.clone()
+    }
 }
 
 /// Run one config on both backends and return (thread, process) outcomes.
@@ -174,6 +232,156 @@ fn process_backend_single_machine_tree() {
     let (thread, process) = run_both(COVERAGE_SPEC, &cfg);
     assert_parity(&thread, &process);
     assert_eq!(process.comm_secs, 0.0, "no levels, no transfers");
+}
+
+// ---- tcp backend over localhost ----------------------------------------
+
+/// Run one config on the thread backend and on the tcp backend over
+/// `daemons` local `greedyml serve` processes; return both outcomes.
+fn run_thread_and_tcp(
+    spec_text: &str,
+    cfg: &DistConfig,
+    daemons: usize,
+) -> (DistOutcome, DistOutcome) {
+    let parsed = Config::parse(spec_text).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+    let fleet: Vec<ServeDaemon> = (0..daemons).map(|_| ServeDaemon::spawn()).collect();
+    let thread_cfg = DistConfig { backend: BackendSpec::Thread, ..cfg.clone() };
+    let a = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &thread_cfg)
+        .expect("thread backend run");
+    let b = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &tcp_cfg(cfg, &parsed, &fleet))
+        .expect("tcp backend run");
+    (a, b)
+}
+
+#[test]
+fn tcp_coverage_parity_across_two_local_hosts() {
+    // m = 4 machines placed round-robin on 2 daemons: every daemon hosts
+    // two concurrent sessions, and the full GreedyML tree runs over real
+    // sockets with the same bits as the in-process pool.
+    let cfg = DistConfig::greedyml(AccumulationTree::new(4, 2), 42);
+    let (thread, tcp) = run_thread_and_tcp(COVERAGE_SPEC, &cfg, 2);
+    assert_parity(&thread, &tcp);
+    assert!(thread.value > 0.0);
+    assert!(tcp.comm_measured, "tcp backend measures comm");
+    assert!(tcp.comm_secs > 0.0, "real socket transfers take nonzero wall time");
+}
+
+#[test]
+fn tcp_kmedoid_local_view_parity() {
+    // Floats through gains, §6.4 view re-evaluation and the socket —
+    // bit-parity must survive all of it.
+    let spec = "[dataset]\nkind = gaussian\nn = 192\ndim = 12\nclasses = 6\nseed = 4\n\
+                [problem]\nk = 8\n";
+    let cfg = DistConfig {
+        local_view: true,
+        added_elements: 16,
+        ..DistConfig::greedyml(AccumulationTree::new(4, 2), 7)
+    };
+    let (thread, tcp) = run_thread_and_tcp(spec, &cfg, 2);
+    assert_parity(&thread, &tcp);
+    assert!(thread.value > 0.0);
+}
+
+#[test]
+fn tcp_oom_coordinates_cross_the_wire_identically() {
+    // The twin-OOM property of the process backend, now over sockets: a
+    // wide tree whose root cannot hold m−1 child solutions must die with
+    // the same (machine, level, label) on both backends.
+    let parsed = Config::parse(COVERAGE_SPEC).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+    let base = DistConfig {
+        compare_all_children: true,
+        ..DistConfig::greedyml(AccumulationTree::randgreedi(8), 3)
+    };
+    let probe = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &base).unwrap();
+    let limit = probe.machines[0].peak_mem * 2 / 3;
+
+    let thread_cfg = DistConfig {
+        mem_limit: Some(limit),
+        backend: BackendSpec::Thread,
+        ..base.clone()
+    };
+    let te = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &thread_cfg).unwrap_err();
+
+    let fleet = vec![ServeDaemon::spawn(), ServeDaemon::spawn()];
+    let limited = DistConfig { mem_limit: Some(limit), ..base };
+    let tcp = tcp_cfg(&limited, &parsed, &fleet);
+    let pe = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &tcp).unwrap_err();
+    assert_eq!(te, pe, "identical OOM payloads across thread and tcp");
+    match pe {
+        DistError::OutOfMemory { machine, level, .. } => {
+            assert_eq!(machine, 0, "root is the bottleneck");
+            assert_eq!(level, 1);
+        }
+        other => panic!("expected OOM, got {other:?}"),
+    }
+}
+
+#[test]
+fn tcp_worker_death_mid_superstep_is_an_error_not_a_hang() {
+    // A scripted rogue worker: completes the handshake and Init, then
+    // drops the connection at the Leaf command — exactly what a crashed
+    // or OOM-killed remote host looks like.  The coordinator must fail
+    // with DistError::Backend instead of blocking forever.
+    let parsed = Config::parse(COVERAGE_SPEC).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let rogue = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut input = BufReader::new(stream.try_clone().unwrap());
+        let mut output = BufWriter::new(stream);
+        let hello = read_frame(&mut input).unwrap().expect("hello frame");
+        match ToWorker::from_value(&hello).unwrap() {
+            ToWorker::Hello { version } => assert_eq!(version, PROTOCOL_VERSION),
+            other => panic!("expected hello, got {other:?}"),
+        }
+        write_frame(&mut output, &FromWorker::Welcome { version: PROTOCOL_VERSION }.to_value())
+            .unwrap();
+        let init = read_frame(&mut input).unwrap().expect("init frame");
+        let n = match ToWorker::from_value(&init).unwrap() {
+            ToWorker::Init { params, .. } => params.n,
+            other => panic!("expected init, got {other:?}"),
+        };
+        write_frame(&mut output, &FromWorker::Ready { n }.to_value()).unwrap();
+        // Read the Leaf command, then die without replying.
+        let _ = read_frame(&mut input);
+    });
+
+    let cfg = DistConfig {
+        backend: BackendSpec::Tcp,
+        problem: Some(problem_spec(&parsed)),
+        hosts: Some(vec![addr]),
+        ..DistConfig::greedyml(AccumulationTree::new(1, 2), 1)
+    };
+    match run_dist(problem.oracle.as_ref(), constraint.as_ref(), &cfg).unwrap_err() {
+        DistError::Backend { message } => {
+            assert!(message.contains("disconnected"), "{message}");
+        }
+        other => panic!("expected backend error, got {other:?}"),
+    }
+    rogue.join().unwrap();
+}
+
+#[test]
+fn tcp_daemon_survives_across_runs() {
+    // One daemon, two complete back-to-back runs: sessions are per-run,
+    // the daemon is long-lived infrastructure.
+    let parsed = Config::parse(COVERAGE_SPEC).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+    let fleet = vec![ServeDaemon::spawn()];
+    let cfg = DistConfig::greedyml(AccumulationTree::new(2, 2), 11);
+    let tcp = tcp_cfg(&cfg, &parsed, &fleet);
+    let a = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &tcp).expect("first run");
+    let b = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &tcp).expect("second run");
+    assert_eq!(a.solution, b.solution);
+    assert_eq!(a.value.to_bits(), b.value.to_bits());
 }
 
 #[test]
