@@ -1,0 +1,177 @@
+"""Turn `greedyml sweep --csv <dir>` output into the paper's figures.
+
+The Rust sweep runner emits three long-form CSVs (rust/src/metrics.rs,
+`write_sweep_csvs`):
+
+* ``fig4_tree_params.csv``  — relative objective quality vs k per
+  algorithm/tree shape (Fig. 4: GreedyML trees match RandGreeDI quality).
+* ``fig5_memory_vary_k.csv`` — per-machine peak memory vs k (Fig. 5: the
+  accumulation tree caps the root's footprint).
+* ``fig6_strong_scaling.csv`` — runtime vs machine count (Fig. 6).
+
+This script renders each CSV it finds into a PNG next to the data::
+
+    cargo run --release -- sweep --config configs/fig4.toml --csv out/
+    python python/plots/figures.py out/
+
+matplotlib is gated exactly like the optional deps in the kernel tests
+(`python/tests/test_kernel.py` skips without hypothesis): missing
+matplotlib is a clean, explanatory exit/skip, never a traceback — the
+tier-1 environment does not install it.
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import sys
+
+try:  # gated import: plotting is optional, parsing is not
+    import matplotlib
+
+    matplotlib.use("Agg")  # headless: CI and ssh sessions have no display
+    import matplotlib.pyplot as plt
+
+    HAVE_MPL = True
+except ImportError:  # pragma: no cover - exercised only without matplotlib
+    HAVE_MPL = False
+
+
+def read_rows(path: str) -> list[dict[str, str]]:
+    """Read one long-form CSV into dict rows (header-keyed)."""
+    with open(path, newline="") as fh:
+        return list(csv.DictReader(fh))
+
+
+def _series(rows: list[dict[str, str]], x_key: str, y_key: str):
+    """Group rows by algorithm label into sorted (x, y) float series.
+
+    Rows with an empty y value (e.g. a missing rel_value_pct baseline)
+    are dropped rather than plotted as zeros.
+    """
+    by_algo: dict[str, list[tuple[float, float]]] = {}
+    for row in rows:
+        y = row.get(y_key, "")
+        if y == "":
+            continue
+        by_algo.setdefault(row["algo"], []).append((float(row[x_key]), float(y)))
+    return {algo: sorted(pts) for algo, pts in by_algo.items()}
+
+
+def _plot(series, *, title, xlabel, ylabel, out_path, logy=False):
+    fig, ax = plt.subplots(figsize=(6.4, 4.2))
+    for algo, pts in sorted(series.items()):
+        xs = [p[0] for p in pts]
+        ys = [p[1] for p in pts]
+        ax.plot(xs, ys, marker="o", linewidth=1.6, markersize=4, label=algo)
+    if logy:
+        ax.set_yscale("log")
+    ax.set_title(title)
+    ax.set_xlabel(xlabel)
+    ax.set_ylabel(ylabel)
+    ax.grid(True, linewidth=0.3, alpha=0.6)
+    ax.legend(fontsize=8)
+    fig.tight_layout()
+    fig.savefig(out_path, dpi=150)
+    plt.close(fig)
+    return out_path
+
+
+def fig4(csv_path: str, out_dir: str) -> str:
+    """Fig. 4: solution quality (percent of the sequential-greedy value)
+    across k for each algorithm / tree shape."""
+    series = _series(read_rows(csv_path), "k", "rel_value_pct")
+    return _plot(
+        series,
+        title="Fig. 4 — quality vs k (tree shapes)",
+        xlabel="k (solution size)",
+        ylabel="f(S) / f(Greedy) [%]",
+        out_path=os.path.join(out_dir, "fig4_tree_params.png"),
+    )
+
+
+def fig5(csv_path: str, out_dir: str) -> str:
+    """Fig. 5: per-machine peak memory across k (log scale — the gap
+    between RandGreeDI's wide gather and GreedyML's narrow trees is
+    multiplicative)."""
+    series = _series(read_rows(csv_path), "k", "peak_mem_bytes")
+    return _plot(
+        series,
+        title="Fig. 5 — per-machine peak memory vs k",
+        xlabel="k (solution size)",
+        ylabel="peak memory [bytes]",
+        out_path=os.path.join(out_dir, "fig5_memory_vary_k.png"),
+        logy=True,
+    )
+
+
+def fig6(csv_path: str, out_dir: str) -> str:
+    """Fig. 6: strong scaling — total (compute + communication) seconds
+    against the machine count."""
+    series = _series(read_rows(csv_path), "machines", "total_secs")
+    return _plot(
+        series,
+        title="Fig. 6 — strong scaling",
+        xlabel="machines m",
+        ylabel="total seconds (comp + comm)",
+        out_path=os.path.join(out_dir, "fig6_strong_scaling.png"),
+        logy=True,
+    )
+
+
+RENDERERS = {
+    "fig4_tree_params.csv": fig4,
+    "fig5_memory_vary_k.csv": fig5,
+    "fig6_strong_scaling.csv": fig6,
+}
+
+
+def render_all(csv_dir: str, out_dir: str | None = None) -> list[str]:
+    """Render every known CSV present in ``csv_dir``; returns written paths.
+
+    Raises a clean, explanatory RuntimeError without matplotlib (the
+    gated import at the top of the module) — never a NameError from a
+    half-imported plotting stack.
+    """
+    if not HAVE_MPL:
+        raise RuntimeError(
+            "figures.py: matplotlib is not installed — `pip install matplotlib` "
+            "to render; the sweep CSVs themselves need no extra deps."
+        )
+    out_dir = out_dir or csv_dir
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    for name, renderer in sorted(RENDERERS.items()):
+        path = os.path.join(csv_dir, name)
+        if os.path.exists(path):
+            written.append(renderer(path, out_dir))
+    return written
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) < 2 or argv[1] in ("-h", "--help"):
+        print(__doc__)
+        print("usage: python python/plots/figures.py <csv_dir> [out_dir]")
+        return 2
+    csv_dir = argv[1]
+    out_dir = argv[2] if len(argv) > 2 else csv_dir
+    try:
+        written = render_all(csv_dir, out_dir)
+    except RuntimeError as e:
+        print(e, file=sys.stderr)
+        return 1
+    if not written:
+        print(
+            f"figures.py: no sweep CSVs in {csv_dir} (expected any of: "
+            + ", ".join(sorted(RENDERERS))
+            + ") — run `greedyml sweep --config … --csv {csv_dir}` first.",
+            file=sys.stderr,
+        )
+        return 1
+    for path in written:
+        print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

@@ -1,0 +1,77 @@
+"""python/plots/figures.py against synthetic sweep CSVs.
+
+The parsing/grouping layer runs everywhere; the rendering tests are
+gated on matplotlib exactly like the kernel tests gate on hypothesis —
+the tier-1 image does not ship it.
+"""
+
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "plots"))
+import figures  # noqa: E402
+
+FIG4 = """algo,dataset,k,machines,branching,levels,value,rel_value_pct,critical_calls
+Greedy,retail,4,1,0,0,100.0,100,400
+"GML(m=8,b=2,L=3)",retail,4,8,2,3,97.0,97,120
+Greedy,retail,8,1,0,0,150.0,100,800
+"GML(m=8,b=2,L=3)",retail,8,8,2,3,148.5,99,260
+"""
+
+FIG5 = """algo,dataset,k,machines,branching,levels,peak_mem_bytes
+RG(m=8),retail,4,8,8,1,4096
+RG(m=8),retail,8,8,8,1,8192
+"GML(m=8,b=2,L=3)",retail,4,8,2,3,1024
+"GML(m=8,b=2,L=3)",retail,8,8,2,3,2048
+"""
+
+FIG6 = """algo,dataset,k,machines,levels,comp_secs,comm_secs,total_secs,critical_calls
+RG(m=4),retail,8,4,1,0.5,0.01,0.51,900
+RG(m=8),retail,8,8,1,0.3,0.02,0.32,500
+"""
+
+
+def write_csvs(tmp_path, names):
+    texts = {
+        "fig4_tree_params.csv": FIG4,
+        "fig5_memory_vary_k.csv": FIG5,
+        "fig6_strong_scaling.csv": FIG6,
+    }
+    for name in names:
+        (tmp_path / name).write_text(texts[name])
+
+
+def test_series_groups_by_algo_and_drops_blank_values(tmp_path):
+    write_csvs(tmp_path, ["fig4_tree_params.csv"])
+    rows = figures.read_rows(str(tmp_path / "fig4_tree_params.csv"))
+    assert len(rows) == 4
+    series = figures._series(rows, "k", "rel_value_pct")
+    assert set(series) == {"Greedy", "GML(m=8,b=2,L=3)"}
+    assert series["GML(m=8,b=2,L=3)"] == [(4.0, 97.0), (8.0, 99.0)]
+    # A blank y cell (no baseline yet) is dropped, not plotted as zero.
+    rows[0]["rel_value_pct"] = ""
+    assert len(figures._series(rows, "k", "rel_value_pct")["Greedy"]) == 1
+
+
+def test_render_all_without_csvs_is_empty(tmp_path):
+    pytest.importorskip("matplotlib", reason="rendering needs matplotlib")
+    assert figures.render_all(str(tmp_path)) == []
+
+
+def test_render_all_writes_one_png_per_present_csv(tmp_path):
+    pytest.importorskip("matplotlib", reason="rendering needs matplotlib")
+    write_csvs(
+        tmp_path,
+        ["fig4_tree_params.csv", "fig5_memory_vary_k.csv", "fig6_strong_scaling.csv"],
+    )
+    out = tmp_path / "png"
+    written = figures.render_all(str(tmp_path), str(out))
+    assert [os.path.basename(p) for p in written] == [
+        "fig4_tree_params.png",
+        "fig5_memory_vary_k.png",
+        "fig6_strong_scaling.png",
+    ]
+    for p in written:
+        assert os.path.getsize(p) > 1000, f"{p} looks empty"

@@ -1,0 +1,125 @@
+//! dist_ship: what it costs to get a problem onto remote workers —
+//! spec shipping (rebuild recipe, every worker regenerates the whole
+//! dataset) vs partition shipping (each worker receives only its O(n/m)
+//! shard, solutions travel with their data).
+//!
+//! Reports, per mode: the Init payload wire bytes (what actually crosses
+//! the pipe per worker), the per-worker dataset footprint (full rebuild
+//! vs shard), the meter's per-worker peak, end-to-end wall time on the
+//! process backend, and the shard/full ratio checked against the ideal
+//! 1/m (the paper's whole premise, §1/§4.2: no machine holds the full
+//! dataset).  Flags: `--json` writes `BENCH_dist_ship.json`, `--tiny`
+//! shrinks sizes for the CI smoke invocation.
+
+#[path = "harness.rs"]
+mod harness;
+
+use greedyml::algo::{run_dist, DistConfig};
+use greedyml::coordinator::{build_problem, experiment::build_constraint, problem_spec};
+use greedyml::dist::{BackendSpec, ShipSpec};
+use greedyml::tree::AccumulationTree;
+use greedyml::util::config::Config;
+use greedyml::util::json::Json;
+use greedyml::util::rng::RandomTape;
+
+fn main() {
+    let tiny = harness::flag("--tiny");
+    let (n, m, k) = if tiny { (400usize, 4u32, 8usize) } else { (8000, 8, 32) };
+    let seed = 42u64;
+    let spec_text = format!(
+        "[dataset]\nkind = retail\nn = {n}\nseed = 2\n[problem]\nk = {k}\n"
+    );
+    let parsed = Config::parse(&spec_text).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let constraint = build_constraint(&parsed, problem.oracle.n()).unwrap().0;
+    let oracle = problem.oracle.as_ref();
+    let shipped_spec = problem_spec(&parsed);
+
+    harness::section(&format!("dist_ship: retail n={n}, m={m}, k={k}"));
+
+    // ---- payload accounting (what Init actually carries) ---------------
+    let p = oracle.partitionable().expect("k-cover is partitionable");
+    let full_bytes = p.extract_partition(&(0..n as u32).collect::<Vec<_>>()).wire_bytes();
+    let parts = RandomTape::draw(n, m, seed).partition();
+    let shard_bytes: Vec<usize> =
+        parts.iter().map(|part| p.extract_partition(part).wire_bytes()).collect();
+    let shard_max = shard_bytes.iter().copied().max().unwrap_or(0);
+    let shard_mean = shard_bytes.iter().sum::<usize>() as f64 / shard_bytes.len() as f64;
+    let ideal = full_bytes as f64 / m as f64;
+    println!(
+        "Init payload per worker: spec recipe {} B (+ full {} B dataset rebuilt in-worker)",
+        shipped_spec.len(),
+        full_bytes
+    );
+    println!(
+        "                         partition shard mean {:.0} B / max {shard_max} B \
+         (ideal n/m share {:.0} B) [{}]",
+        shard_mean,
+        ideal,
+        harness::shape_check(shard_mean, ideal, 2.0)
+    );
+
+    // ---- end-to-end wall time on the process backend --------------------
+    let base = DistConfig {
+        problem: Some(shipped_spec.clone()),
+        worker_bin: Some(env!("CARGO_BIN_EXE_greedyml").to_string()),
+        ..DistConfig::greedyml(AccumulationTree::new(m, 2), seed)
+    };
+    let (warmup, samples) = if tiny { (0, 2) } else { (1, 5) };
+    let mut outcomes = Vec::new();
+    let mut measure = |label: &str, cfg: DistConfig| {
+        let stat = harness::bench(warmup, samples, || {
+            let out = run_dist(oracle, constraint.as_ref(), &cfg).expect(label);
+            outcomes.push((label.to_string(), out.value, out.peak_mem()));
+        });
+        println!("{label:>22}: {:.4}s median ({} samples)", stat.median, stat.samples);
+        stat
+    };
+    let t_thread =
+        measure("thread", DistConfig { backend: BackendSpec::Thread, ..base.clone() });
+    let t_spec = measure(
+        "process --ship spec",
+        DistConfig { backend: BackendSpec::Process, ship: ShipSpec::Spec, ..base.clone() },
+    );
+    let t_part = measure(
+        "process --ship part",
+        DistConfig {
+            backend: BackendSpec::Process,
+            ship: ShipSpec::Partition,
+            ..base.clone()
+        },
+    );
+
+    // Every mode must have computed the same objective (bit-parity is the
+    // test suite's job; the bench still refuses to report nonsense).
+    let value0 = outcomes[0].1;
+    assert!(
+        outcomes.iter().all(|(_, v, _)| v.to_bits() == value0.to_bits()),
+        "ship modes disagree on f(S): {outcomes:?}"
+    );
+    let peak_mem = outcomes.iter().map(|&(_, _, p)| p).max().unwrap_or(0);
+    println!("objective {value0:.3}, per-worker peak {peak_mem} B (meter, mode-invariant)");
+
+    if harness::flag("--json") {
+        let doc = Json::obj([
+            ("bench", Json::Str("dist_ship".to_string())),
+            ("n", Json::Num(n as f64)),
+            ("machines", Json::Num(m as f64)),
+            ("k", Json::Num(k as f64)),
+            ("spec_recipe_bytes", Json::Num(shipped_spec.len() as f64)),
+            ("spec_worker_data_bytes", Json::Num(full_bytes as f64)),
+            ("partition_shard_bytes_mean", Json::Num(shard_mean)),
+            ("partition_shard_bytes_max", Json::Num(shard_max as f64)),
+            ("shard_over_full_ratio", Json::Num(shard_mean / full_bytes as f64)),
+            ("ideal_ratio", Json::Num(1.0 / m as f64)),
+            ("peak_mem_bytes", Json::Num(peak_mem as f64)),
+            ("value", Json::Num(value0)),
+            ("thread_median_secs", Json::Num(t_thread.median)),
+            ("spec_median_secs", Json::Num(t_spec.median)),
+            ("partition_median_secs", Json::Num(t_part.median)),
+        ]);
+        let path = "BENCH_dist_ship.json";
+        std::fs::write(path, doc.to_pretty()).expect("write bench json");
+        println!("wrote {path}");
+    }
+}

@@ -22,11 +22,12 @@ use super::{DistConfig, DistOutcome, LevelStats, PartitionScheme};
 use crate::constraint::Constraint;
 use crate::dist::{
     pool, tcp, AccumTask, Backend, BackendSpec, DistError, NodeParams, NodeStep, ProcessBackend,
-    ResolvedBackend, StepReport, TcpBackend, ThreadBackend, Trace,
+    ResolvedBackend, ShipMode, ShipPlan, StepReport, TcpBackend, ThreadBackend, Trace,
 };
-use crate::objective::Oracle;
+use crate::objective::{Oracle, PartitionPayload, Partitionable};
+use crate::tree::AccumulationTree;
 use crate::util::rng::RandomTape;
-use crate::ElemId;
+use crate::{ElemId, MachineId};
 
 /// Run GreedyML with the given config (Algorithm 3.1).
 pub fn run_greedyml(
@@ -62,6 +63,9 @@ pub fn run_dist(
         added_elements: cfg.added_elements,
         compare_all_children: cfg.compare_all_children,
     };
+    // Line 2 of Algorithm 3.1, computed once: the same split feeds the
+    // partition-shipping Init shards and the engine's Leaf fan-out.
+    let parts = make_parts(cfg, oracle.n());
     let mut resolved = cfg.backend.resolve()?;
     if resolved != ResolvedBackend::Thread
         && cfg.backend == BackendSpec::Auto
@@ -91,7 +95,7 @@ pub fn run_dist(
                     cfg.comm,
                     cfg.tree.machines(),
                 );
-                run_dist_on(&mut backend, cfg, oracle.n())
+                run_dist_on(&mut backend, cfg, parts)
             })
         }
         ResolvedBackend::Process => {
@@ -102,14 +106,15 @@ pub fn run_dist(
                      experiments attach it automatically",
                 )
             })?;
+            let plan = ship_plan(oracle, cfg, &params, problem, &parts)?;
             let mut backend = ProcessBackend::spawn(
                 cfg.tree.machines(),
                 &params,
                 cfg.threads.unwrap_or(1),
-                problem,
+                plan,
                 cfg.worker_bin.as_deref(),
             )?;
-            run_dist_on(&mut backend, cfg, oracle.n())
+            run_dist_on(&mut backend, cfg, parts)
         }
         ResolvedBackend::Tcp => {
             let problem = cfg.problem.as_deref().ok_or_else(|| {
@@ -136,14 +141,102 @@ pub fn run_dist(
                     )
                 })?,
             };
+            let plan = ship_plan(oracle, cfg, &params, problem, &parts)?;
             let mut backend = TcpBackend::connect(
                 &hosts,
                 cfg.tree.machines(),
                 &params,
                 cfg.threads.unwrap_or(1),
-                problem,
+                plan,
             )?;
-            run_dist_on(&mut backend, cfg, oracle.n())
+            run_dist_on(&mut backend, cfg, parts)
+        }
+    }
+}
+
+/// Resolve the configured ship mode into the plan a remote backend
+/// executes at Init time: the rebuild recipe (`spec`), or one dataset
+/// shard per machine (`partition`).
+fn ship_plan<'a>(
+    oracle: &dyn Oracle,
+    cfg: &DistConfig,
+    params: &NodeParams,
+    problem: &'a str,
+    parts: &[Vec<ElemId>],
+) -> Result<ShipPlan<'a>, DistError> {
+    match cfg.ship.resolve()? {
+        ShipMode::Spec => Ok(ShipPlan::Spec(problem)),
+        ShipMode::Partition => {
+            let p = oracle.partitionable().ok_or_else(|| {
+                DistError::backend(format!(
+                    "the '{}' oracle does not support partition shipping (its data \
+                     cannot be sliced into shards) — run with --ship spec",
+                    oracle.name()
+                ))
+            })?;
+            if p.needs_local_view() && !cfg.local_view {
+                return Err(DistError::backend(format!(
+                    "partition shipping the '{}' objective needs machine-local \
+                     evaluation views: a worker holding an O(n/m) shard cannot \
+                     evaluate f against the full dataset — enable local_view \
+                     (the paper's §6.4 scheme) or run with --ship spec",
+                    oracle.name()
+                )));
+            }
+            Ok(ShipPlan::Partition {
+                spec: problem,
+                payloads: ship_payloads(p, parts, cfg.tree, params),
+            })
+        }
+    }
+}
+
+/// One Init shard per machine: its leaf partition plus the §6.4 added
+/// elements every accumulation it will run is seeded to draw
+/// ([`crate::dist::node`]'s `sample_added` is deterministic in
+/// `(seed, level, machine)`, so the coordinator can replay the draws).
+/// Everything else a machine ever evaluates arrives later with the child
+/// solutions it receives ([`crate::dist::node::ChildMsg::data`]).
+fn ship_payloads(
+    p: &dyn Partitionable,
+    parts: &[Vec<ElemId>],
+    tree: AccumulationTree,
+    params: &NodeParams,
+) -> Vec<PartitionPayload> {
+    parts
+        .iter()
+        .enumerate()
+        .map(|(id, part)| {
+            let id = id as MachineId;
+            let mut elems = part.clone();
+            let mut seen: std::collections::HashSet<ElemId> =
+                elems.iter().copied().collect();
+            for level in 1..=tree.level_of(id) {
+                for e in crate::dist::node::sample_added(params, level, id) {
+                    if seen.insert(e) {
+                        elems.push(e);
+                    }
+                }
+            }
+            p.extract_partition(&elems)
+        })
+        .collect()
+}
+
+/// Line 2 of Algorithm 3.1: split the ground set over the `m` leaves.
+/// Deterministic in `(cfg.seed, cfg.partition, n, m)` — the partition-
+/// shipping coordinator builds Init shards from the same split the
+/// engine later hands to `Backend::run_leaves`.
+fn make_parts(cfg: &DistConfig, n: usize) -> Vec<Vec<ElemId>> {
+    let m = cfg.tree.machines();
+    match cfg.partition {
+        PartitionScheme::Random => RandomTape::draw(n, m, cfg.seed).partition(),
+        PartitionScheme::Contiguous => {
+            let mut parts = vec![Vec::new(); m as usize];
+            for e in 0..n {
+                parts[(e * m as usize / n.max(1)).min(m as usize - 1)].push(e as ElemId);
+            }
+            parts
         }
     }
 }
@@ -154,22 +247,9 @@ pub fn run_dist(
 fn run_dist_on(
     backend: &mut dyn Backend,
     cfg: &DistConfig,
-    n: usize,
+    parts: Vec<Vec<ElemId>>,
 ) -> Result<DistOutcome, DistError> {
     let tree = cfg.tree;
-    let m = tree.machines();
-
-    // ---- Line 2: partition the data over the leaves. ------------------
-    let parts: Vec<Vec<ElemId>> = match cfg.partition {
-        PartitionScheme::Random => RandomTape::draw(n, m, cfg.seed).partition(),
-        PartitionScheme::Contiguous => {
-            let mut parts = vec![Vec::new(); m as usize];
-            for e in 0..n {
-                parts[(e * m as usize / n.max(1)).min(m as usize - 1)].push(e as ElemId);
-            }
-            parts
-        }
-    };
 
     let mut levels: Vec<LevelStats> = Vec::with_capacity(tree.levels() as usize + 1);
     let mut trace_steps: Vec<NodeStep> = Vec::new();

@@ -14,7 +14,7 @@
 //! partition scheme, tree shape and argmax semantics, so comparisons
 //! measure the algorithmic difference and nothing else.
 
-use crate::dist::{BackendSpec, CommModel, MachineStats};
+use crate::dist::{BackendSpec, CommModel, MachineStats, ShipSpec};
 use crate::greedy::GreedyKind;
 use crate::tree::AccumulationTree;
 use crate::ElemId;
@@ -81,6 +81,14 @@ pub struct DistConfig {
     /// address space.  Required when those backends are selected; ignored
     /// by the thread backend.  See [`crate::coordinator::problem_spec`].
     pub problem: Option<String>,
+    /// How the problem travels to process/tcp workers
+    /// ([`ShipSpec::Spec`]: rebuild recipe, O(n) worker memory;
+    /// [`ShipSpec::Partition`]: O(n/m) dataset shards, solutions travel
+    /// with their data).  [`ShipSpec::Auto`] defers to the `GREEDYML_SHIP`
+    /// environment variable.  Config key `run.ship` (`sweep.ship` for
+    /// sweeps) / CLI flag `--ship`.  The thread backend ignores it.
+    /// Results are bit-identical across modes.
+    pub ship: ShipSpec,
     /// Worker executable for the process backend (`None` = the
     /// `GREEDYML_WORKER_BIN` environment variable, else this binary).
     /// Integration tests point this at the real `greedyml` binary.
@@ -110,6 +118,7 @@ impl DistConfig {
             threads: None,
             backend: BackendSpec::Auto,
             problem: None,
+            ship: ShipSpec::Auto,
             worker_bin: None,
             hosts: None,
         }

@@ -8,7 +8,7 @@ use crate::algo::{
     greedi_config, run_dist, run_sequential, randgreedi::RandGreediOpts, DistConfig,
 };
 use crate::constraint::{Cardinality, Constraint, PartitionMatroid};
-use crate::dist::BackendSpec;
+use crate::dist::{BackendSpec, ShipSpec};
 use crate::greedy::GreedyKind;
 use crate::metrics::RunReport;
 use crate::runtime::Engine;
@@ -91,6 +91,10 @@ pub struct Experiment {
     pub backend: BackendSpec,
     /// Flat problem spec shipped to process/tcp-backend workers.
     pub problem_spec: String,
+    /// How problems travel to process/tcp workers (`run.ship` config key
+    /// / `--ship` flag / `GREEDYML_SHIP`): rebuild recipe or O(n/m)
+    /// dataset shards.
+    pub ship: ShipSpec,
     /// `greedyml serve` worker daemons for the tcp backend (`run.hosts`
     /// config key / `--hosts` flag; `None` defers to `GREEDYML_HOSTS`).
     pub hosts: Option<Vec<String>>,
@@ -134,6 +138,8 @@ impl Experiment {
         };
         let backend = BackendSpec::parse(cfg.str_or("run.backend", "auto"))
             .map_err(|e| anyhow::anyhow!("run.backend: {e}"))?;
+        let ship = ShipSpec::parse(cfg.str_or("run.ship", "auto"))
+            .map_err(|e| anyhow::anyhow!("run.ship: {e}"))?;
         Ok(Self {
             name: cfg.str_or("name", "experiment").to_string(),
             problem,
@@ -149,6 +155,7 @@ impl Experiment {
                 t => Some(t as usize),
             },
             backend,
+            ship,
             problem_spec: super::problem_spec(cfg),
             hosts: crate::dist::tcp::hosts_from_config(cfg, "run.hosts")?,
         })
@@ -158,6 +165,7 @@ impl Experiment {
     fn with_backend(&self, mut cfg: DistConfig) -> DistConfig {
         cfg.backend = self.backend;
         cfg.problem = Some(self.problem_spec.clone());
+        cfg.ship = self.ship;
         cfg.threads = cfg.threads.or(self.threads);
         cfg.hosts = self.hosts.clone();
         cfg

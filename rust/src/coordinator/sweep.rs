@@ -7,7 +7,7 @@ use super::experiment::AlgoSpec;
 use super::BuiltProblem;
 use crate::algo::{greedi_config, run_dist, run_sequential, DistConfig};
 use crate::constraint::Cardinality;
-use crate::dist::BackendSpec;
+use crate::dist::{BackendSpec, ShipSpec};
 use crate::greedy::GreedyKind;
 use crate::metrics::RunReport;
 use crate::tree::AccumulationTree;
@@ -31,6 +31,9 @@ pub struct Sweep {
     pub local_view: bool,
     /// Execution backend for the distributed variants.
     pub backend: BackendSpec,
+    /// How problems travel to process/tcp workers (`sweep.ship` config
+    /// key / `--ship` flag / `GREEDYML_SHIP`).
+    pub ship: ShipSpec,
     /// Flat problem spec shipped to process/tcp-backend workers.
     pub problem_spec: String,
     /// `greedyml serve` worker daemons for the tcp backend (`sweep.hosts`
@@ -63,6 +66,8 @@ impl Sweep {
         };
         let backend = BackendSpec::parse(cfg.str_or("sweep.backend", "auto"))
             .map_err(|e| anyhow::anyhow!("sweep.backend: {e}"))?;
+        let ship = ShipSpec::parse(cfg.str_or("sweep.ship", "auto"))
+            .map_err(|e| anyhow::anyhow!("sweep.ship: {e}"))?;
         Ok(Self {
             ks,
             algos,
@@ -71,6 +76,7 @@ impl Sweep {
             mem_limit,
             local_view: cfg.bool_or("sweep.local_view", false)?,
             backend,
+            ship,
             problem_spec: super::problem_spec(cfg),
             hosts: crate::dist::tcp::hosts_from_config(cfg, "sweep.hosts")?,
         })
@@ -86,6 +92,7 @@ impl Sweep {
             "{}problem.constraint = cardinality\nproblem.k = {k}\n",
             self.problem_spec
         ));
+        dist.ship = self.ship;
         dist.hosts = self.hosts.clone();
         dist
     }

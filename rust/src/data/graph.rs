@@ -113,6 +113,23 @@ impl CsrGraph {
         8 + 4 * self.degree(v)
     }
 
+    /// Re-index a subset of vertices into a fresh CSR pair
+    /// `(offsets, neighbors)`: row `i` of the slice is `vertices[i]`, with
+    /// offsets renumbered from zero and neighbour lists kept in **global**
+    /// vertex ids (the dominating-set item universe stays the whole
+    /// graph).  The partition-shipping slice primitive for graph data.
+    pub fn neighborhoods(&self, vertices: &[ElemId]) -> (Vec<u64>, Vec<u32>) {
+        let mut offsets = Vec::with_capacity(vertices.len() + 1);
+        offsets.push(0u64);
+        let total: usize = vertices.iter().map(|&v| self.degree(v)).sum();
+        let mut targets = Vec::with_capacity(total);
+        for &v in vertices {
+            targets.extend_from_slice(self.neighbors(v));
+            offsets.push(targets.len() as u64);
+        }
+        (offsets, targets)
+    }
+
     /// Parse an edge-list text format: one `u v` pair per line, `#` or `%`
     /// comment lines ignored (covers SNAP and Matrix-Market-ish headers).
     /// Vertex ids may be arbitrary u32s; they are compacted to `0..n`.

@@ -97,6 +97,22 @@ impl ItemsetCollection {
         8 + 4 * self.set_size(t)
     }
 
+    /// Re-index a subset of transactions into a fresh CSR pair
+    /// `(offsets, items)` — transaction `i` of the slice is `elems[i]`,
+    /// with offsets renumbered from zero.  The partition-shipping slice
+    /// primitive: a shard payload is exactly this pair plus the id map.
+    pub fn slice_sets(&self, elems: &[ElemId]) -> (Vec<u64>, Vec<u32>) {
+        let mut offsets = Vec::with_capacity(elems.len() + 1);
+        offsets.push(0u64);
+        let total: usize = elems.iter().map(|&t| self.set_size(t)).sum();
+        let mut items = Vec::with_capacity(total);
+        for &t in elems {
+            items.extend_from_slice(self.set(t));
+            offsets.push(items.len() as u64);
+        }
+        (offsets, items)
+    }
+
     /// Parse FIMI format: one transaction per line, whitespace-separated
     /// item ids.  A blank line is an *empty transaction* (so `to_fimi` ∘
     /// `parse_fimi` round-trips); real FIMI files contain none.

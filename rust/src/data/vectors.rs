@@ -152,11 +152,22 @@ impl VectorSet {
 
     /// Subset by row indices (builds a new set — used for partitions).
     pub fn subset(&self, rows: &[crate::ElemId]) -> Self {
+        Self {
+            data: self.gather_flat(rows),
+            dim: self.dim,
+            norms_sq: std::sync::OnceLock::new(),
+        }
+    }
+
+    /// Re-index a subset of rows into a fresh flat buffer (row `i` of the
+    /// result is `rows[i]`) — the partition-shipping slice primitive; a
+    /// vector shard payload is exactly this buffer plus the id map.
+    pub fn gather_flat(&self, rows: &[crate::ElemId]) -> Vec<f32> {
         let mut data = Vec::with_capacity(rows.len() * self.dim);
         for &r in rows {
             data.extend_from_slice(self.row(r as usize));
         }
-        Self { data, dim: self.dim, norms_sq: std::sync::OnceLock::new() }
+        data
     }
 }
 

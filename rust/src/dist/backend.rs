@@ -126,6 +126,81 @@ pub enum ResolvedBackend {
     Tcp,
 }
 
+/// How a problem travels to remote (process/tcp) workers — the
+/// `--ship` flag / `run.ship` config key / `GREEDYML_SHIP` environment
+/// variable.  The thread backend shares one address space and ignores it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShipSpec {
+    /// Defer to `GREEDYML_SHIP` (`spec` | `partition`), defaulting to
+    /// [`ShipMode::Spec`].
+    #[default]
+    Auto,
+    /// Ship the flat problem spec; every worker regenerates the whole
+    /// dataset and restricts to its part (O(n) worker memory).
+    Spec,
+    /// Ship each worker only its O(n/m) dataset shard
+    /// ([`crate::objective::PartitionPayload`]); solutions travel with
+    /// their extracted data.  Requires a
+    /// [`Partitionable`](crate::objective::Partitionable) oracle.
+    Partition,
+}
+
+impl ShipSpec {
+    /// Parse a config/CLI token (`auto` | `spec` | `partition`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" | "" => Ok(Self::Auto),
+            "spec" => Ok(Self::Spec),
+            "partition" | "part" => Ok(Self::Partition),
+            other => Err(format!("unknown ship mode '{other}' (auto | spec | partition)")),
+        }
+    }
+
+    /// Resolve `Auto` through `GREEDYML_SHIP`; an unparsable variable is
+    /// an error, not a silent fallback — a mis-spelt mode must not
+    /// quietly change what an experiment measured.
+    pub fn resolve(self) -> Result<ShipMode, DistError> {
+        match self {
+            Self::Spec => Ok(ShipMode::Spec),
+            Self::Partition => Ok(ShipMode::Partition),
+            Self::Auto => match std::env::var("GREEDYML_SHIP") {
+                Err(_) => Ok(ShipMode::Spec),
+                Ok(v) => match Self::parse(&v) {
+                    Ok(Self::Partition) => Ok(ShipMode::Partition),
+                    Ok(_) => Ok(ShipMode::Spec),
+                    Err(e) => Err(DistError::backend(format!("GREEDYML_SHIP: {e}"))),
+                },
+            },
+        }
+    }
+}
+
+/// A [`ShipSpec`] with `Auto` already resolved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShipMode {
+    /// Rebuild-recipe shipping.
+    Spec,
+    /// Dataset-shard shipping.
+    Partition,
+}
+
+/// What the coordinator hands a remote backend at Init time: either the
+/// rebuild recipe for every worker, or the per-machine dataset shards
+/// (`payloads[i]` belongs to machine `i`; the spec still rides along for
+/// the constraint/objective settings).
+#[derive(Clone, Debug)]
+pub enum ShipPlan<'a> {
+    /// Spec shipping: one flat `key = value` problem spec for all workers.
+    Spec(&'a str),
+    /// Partition shipping: one shard per machine plus the settings spec.
+    Partition {
+        /// Constraint/objective settings (no dataset rebuild).
+        spec: &'a str,
+        /// Machine-ordered shards.
+        payloads: Vec<crate::objective::PartitionPayload>,
+    },
+}
+
 /// One accumulation assignment within a superstep: `parent` gathers the
 /// solutions of `children` (its own S_prev stays in place — the engine has
 /// already removed the `j = 0` self-child).
@@ -327,5 +402,20 @@ mod tests {
         assert_eq!(BackendSpec::Thread.resolve().unwrap(), ResolvedBackend::Thread);
         assert_eq!(BackendSpec::Process.resolve().unwrap(), ResolvedBackend::Process);
         assert_eq!(BackendSpec::Tcp.resolve().unwrap(), ResolvedBackend::Tcp);
+    }
+
+    #[test]
+    fn ship_spec_parses_tokens() {
+        assert_eq!(ShipSpec::parse("auto").unwrap(), ShipSpec::Auto);
+        assert_eq!(ShipSpec::parse(" Spec ").unwrap(), ShipSpec::Spec);
+        assert_eq!(ShipSpec::parse("partition").unwrap(), ShipSpec::Partition);
+        assert_eq!(ShipSpec::parse("part").unwrap(), ShipSpec::Partition);
+        assert!(ShipSpec::parse("telepathy").is_err());
+    }
+
+    #[test]
+    fn explicit_ship_specs_resolve_without_env() {
+        assert_eq!(ShipSpec::Spec.resolve().unwrap(), ShipMode::Spec);
+        assert_eq!(ShipSpec::Partition.resolve().unwrap(), ShipMode::Partition);
     }
 }

@@ -26,6 +26,14 @@
 //! * [`wire`] — the length-prefixed JSON frames of the worker protocol
 //!   (specified in `docs/wire-protocol.md`), shared by the process and
 //!   tcp transports through one coordinator-side driver (`remote`).
+//!   Problems reach remote workers in one of two **ship modes**
+//!   ([`ShipSpec`]: `--ship` / `run.ship` / `GREEDYML_SHIP`): `spec`
+//!   ships a rebuild recipe and every worker regenerates the whole
+//!   dataset (O(n) worker memory), while `partition` ships each worker
+//!   only its O(n/m) dataset shard
+//!   ([`crate::objective::PartitionPayload`]) and solutions travel with
+//!   their extracted data — the paper's actual deployment model (§1,
+//!   §4.2), where no machine ever holds the full dataset.
 //! * [`pool`] — the two-level parallel execution subsystem: a persistent
 //!   work-stealing pool spawned once per run ([`pool::with_pool`]), the
 //!   order-preserving superstep fan-out ([`Executor::map`] /
@@ -60,7 +68,10 @@ pub mod tcp;
 pub mod trace;
 pub mod wire;
 
-pub use backend::{AccumTask, Backend, BackendOutcome, BackendSpec, ResolvedBackend, ThreadBackend};
+pub use backend::{
+    AccumTask, Backend, BackendOutcome, BackendSpec, ResolvedBackend, ShipMode, ShipPlan,
+    ShipSpec, ThreadBackend,
+};
 pub use comm::CommModel;
 pub use error::DistError;
 pub use memory::MemoryMeter;

@@ -61,7 +61,9 @@ pub struct NodeState {
 impl NodeState {
     /// Package the held solution for shipping to the parent (Algorithm 3.1
     /// lines 6-7: send & break).  Records the sent bytes in the stats; the
-    /// solution is moved out, leaving the node retired.
+    /// solution is moved out, leaving the node retired.  Under partition
+    /// shipping the transport layer attaches the solution's extracted data
+    /// shard ([`ChildMsg::data`]) before the message crosses the wire.
     pub fn ship(&mut self) -> ChildMsg {
         let bytes = self.sol_bytes;
         self.stats.bytes_sent += bytes;
@@ -70,6 +72,7 @@ impl NodeState {
             sol: std::mem::take(&mut self.sol),
             value: self.sol_value,
             bytes,
+            data: None,
         }
     }
 }
@@ -81,12 +84,19 @@ impl NodeState {
 pub struct ChildMsg {
     /// Sending machine.
     pub from: MachineId,
-    /// The child's final solution.
+    /// The child's final solution (always global element ids).
     pub sol: Vec<ElemId>,
     /// f(sol) as the child evaluated it.
     pub value: f64,
     /// Bytes of the shipped solution (Σ `elem_bytes`).
     pub bytes: u64,
+    /// Under partition shipping (`--ship partition`), the extracted data
+    /// shard for `sol` — the parent holds only its own O(n/m) partition,
+    /// so a solution must travel *with* its data (exactly the bytes §4.2
+    /// already accounts as `bytes`).  `None` everywhere else: the thread
+    /// backend shares one address space and spec-shipped workers hold the
+    /// full rebuilt dataset.
+    pub data: Option<crate::objective::PartitionPayload>,
 }
 
 /// What one machine did during a single superstep — the backend returns
@@ -277,7 +287,9 @@ pub fn accum_step(
 
 /// §6.4 "added images": extra random elements mixed into every
 /// accumulation step, seeded per (level, node) for reproducibility.
-fn sample_added(p: &NodeParams, level: u32, id: MachineId) -> Vec<ElemId> {
+/// `pub(crate)`: the partition-shipping coordinator replays these draws
+/// to know which extra elements each machine's Init shard must carry.
+pub(crate) fn sample_added(p: &NodeParams, level: u32, id: MachineId) -> Vec<ElemId> {
     if p.added_elements == 0 {
         return Vec::new();
     }

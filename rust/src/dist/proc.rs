@@ -10,12 +10,17 @@
 //! the parent's `Recv` receipt) instead of the α–β model the thread
 //! backend books.
 //!
-//! Workers rebuild the oracle from the problem spec carried by
+//! Workers adopt the problem per the run's ship mode
+//! ([`ShipSpec`](super::ShipSpec)): under spec shipping they rebuild the
+//! oracle from the problem spec carried by
 //! [`DistConfig::problem`](crate::algo::DistConfig::problem) — flat
 //! `key = value` config text — because closures cannot cross a process
 //! boundary; the generators are seeded, so every worker reconstructs
-//! byte-identical data and the run stays bit-compatible with the thread
-//! backend (`tests/test_backend.rs`).
+//! byte-identical data.  Under partition shipping they instead receive
+//! their O(n/m) dataset shard
+//! ([`PartitionPayload`](crate::objective::PartitionPayload)) and
+//! regenerate nothing.  Either way the run stays bit-compatible with the
+//! thread backend (`tests/test_backend.rs`).
 //!
 //! All protocol driving lives in the transport-generic `RemoteBackend`
 //! (`dist/remote.rs`); this module only owns what is pipe-specific —
@@ -24,14 +29,17 @@
 //! shared with the tcp backend's `greedyml serve` daemon, which serves
 //! the same sessions over sockets.
 
-use super::backend::{AccumTask, Backend, BackendOutcome};
+use super::backend::{AccumTask, Backend, BackendOutcome, ShipPlan};
 use super::node::{accum_step, leaf_step, ChildMsg, NodeParams, NodeState};
 use super::remote::{FramedWorker, RemoteBackend};
 use super::wire::{read_frame, write_frame, FromWorker, ToWorker};
 use super::{pool, DistError};
+use crate::constraint::Constraint;
+use crate::objective::{Oracle, PartitionOracle};
 use crate::{ElemId, MachineId};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::Arc;
 
 /// Resolve the worker executable: explicit config value, then the
 /// `GREEDYML_WORKER_BIN` environment variable, then this very binary.
@@ -80,12 +88,13 @@ pub struct ProcessBackend {
 
 impl ProcessBackend {
     /// Fork `machines` workers, handshake each with the node parameters
-    /// and the problem spec, and verify they rebuilt the same ground set.
+    /// and the [`ShipPlan`] (the problem spec, or each machine's dataset
+    /// shard), and verify each rebuilt what the coordinator shipped.
     pub fn spawn(
         machines: u32,
         params: &NodeParams,
         threads: usize,
-        problem: &str,
+        plan: ShipPlan<'_>,
         worker_bin: Option<&str>,
     ) -> Result<Self, DistError> {
         let bin = worker_binary(worker_bin)?;
@@ -106,7 +115,7 @@ impl ProcessBackend {
             children.0.push(child);
             workers.push(FramedWorker::new(machine, stdout, stdin));
         }
-        let inner = RemoteBackend::init("process", workers, params, threads, problem)?;
+        let inner = RemoteBackend::init("process", workers, params, threads, plan)?;
         Ok(Self { children, inner })
     }
 }
@@ -154,11 +163,65 @@ pub fn run_worker() -> crate::Result<()> {
     serve_session(&mut input, &mut output)
 }
 
-/// One worker session over any framed byte stream: read `Init`, rebuild
-/// the problem, reply `Ready`, then serve supersteps until `Finish` or
-/// EOF.  The process backend runs this over a worker's stdio; the tcp
-/// backend's `greedyml serve` daemon runs it per accepted connection
-/// (after the `Hello`/`Welcome` version handshake).
+/// What a worker holds for one session: either the whole dataset rebuilt
+/// from a spec, or a [`PartitionOracle`] over its shipped shard — which
+/// grows as child solutions arrive with their data.
+pub(crate) enum WorkerProblem {
+    /// Spec shipping: the full oracle, regenerated locally.
+    Spec {
+        /// The rebuilt oracle.
+        oracle: Arc<dyn Oracle>,
+        /// The rebuilt constraint.
+        constraint: Box<dyn Constraint>,
+    },
+    /// Partition shipping: the shard facade (mutable — `Recv` ingests
+    /// child-solution data into it between supersteps).
+    Partition {
+        /// The shard-backed oracle facade.
+        oracle: PartitionOracle,
+        /// The rebuilt constraint (global element ids, like everything
+        /// the facade speaks, so id-keyed constraints stay exact).
+        constraint: Box<dyn Constraint>,
+    },
+}
+
+impl WorkerProblem {
+    fn oracle(&self) -> &dyn Oracle {
+        match self {
+            Self::Spec { oracle, .. } => oracle.as_ref(),
+            Self::Partition { oracle, .. } => oracle,
+        }
+    }
+
+    fn constraint(&self) -> &dyn Constraint {
+        match self {
+            Self::Spec { constraint, .. } => constraint.as_ref(),
+            Self::Partition { constraint, .. } => constraint.as_ref(),
+        }
+    }
+
+    fn partition(&self) -> Option<&PartitionOracle> {
+        match self {
+            Self::Spec { .. } => None,
+            Self::Partition { oracle, .. } => Some(oracle),
+        }
+    }
+
+    fn partition_mut(&mut self) -> Option<&mut PartitionOracle> {
+        match self {
+            Self::Spec { .. } => None,
+            Self::Partition { oracle, .. } => Some(oracle),
+        }
+    }
+}
+
+/// One worker session over any framed byte stream: read `Init` (spec
+/// shipping — rebuild the whole problem) or `InitPart` (partition
+/// shipping — adopt the shipped shard), reply `Ready`, then serve
+/// supersteps until `Finish` or EOF.  The process backend runs this over
+/// a worker's stdio; the tcp backend's `greedyml serve` daemon runs it
+/// per accepted connection (after the `Hello`/`Welcome` version
+/// handshake).
 pub(crate) fn serve_session(
     input: &mut impl Read,
     output: &mut impl Write,
@@ -166,54 +229,88 @@ pub(crate) fn serve_session(
     let first = read_frame(input)
         .map_err(|e| anyhow::anyhow!("{e}"))?
         .ok_or_else(|| anyhow::anyhow!("worker: EOF before init"))?;
-    let ToWorker::Init { machine, threads, params, problem } =
-        ToWorker::from_value(&first).map_err(|e| anyhow::anyhow!("{e}"))?
-    else {
-        anyhow::bail!("worker: first frame must be init");
-    };
+    let (machine, threads, params, built) =
+        match ToWorker::from_value(&first).map_err(|e| anyhow::anyhow!("{e}"))? {
+            ToWorker::Init { machine, threads, params, problem } => {
+                (machine, threads, params, build_worker_problem(&problem))
+            }
+            ToWorker::InitPart { machine, threads, params, spec, payload } => {
+                let built = build_partition_problem(&spec, &payload, params.local_view);
+                (machine, threads, params, built)
+            }
+            _ => anyhow::bail!("worker: first frame must be init or init_part"),
+        };
 
-    let built = build_worker_problem(&problem);
-    let (oracle, constraint) = match built {
-        Ok(pair) => pair,
+    let mut problem = match built {
+        Ok(p) => p,
         Err(e) => {
             reply(output, &FromWorker::Fail(DistError::backend(format!("{e:#}"))))?;
             return Ok(());
         }
     };
-    reply(output, &FromWorker::Ready { n: oracle.n() })?;
+    let ready = match &problem {
+        // Spec shipping acknowledges the rebuilt global ground set;
+        // partition shipping acknowledges the shard size it received.
+        WorkerProblem::Spec { oracle, .. } => oracle.n(),
+        WorkerProblem::Partition { oracle, .. } => oracle.len_local(),
+    };
+    reply(output, &FromWorker::Ready { n: ready })?;
 
     // The worker's own two-level executor serves the nested gain scans;
     // the machine-level parallelism lives in the worker fan-out, so one
     // thread per worker is the default.
     pool::with_pool(threads.max(1), |_exec| {
-        serve(input, output, oracle.as_ref(), constraint.as_ref(), &params, machine)
+        serve(input, output, &mut problem, &params, machine)
     })
 }
 
 /// Rebuild the oracle + constraint a worker simulates, from the flat
 /// config text the coordinator shipped.
-fn build_worker_problem(
-    problem: &str,
-) -> crate::Result<(std::sync::Arc<dyn crate::objective::Oracle>, Box<dyn crate::constraint::Constraint>)>
-{
+fn build_worker_problem(problem: &str) -> crate::Result<WorkerProblem> {
     let cfg = crate::util::config::Config::parse(problem)
         .map_err(|e| anyhow::anyhow!("problem spec: {e}"))?;
     let built = crate::coordinator::build_problem(&cfg, None)?;
     let (constraint, _k) =
         crate::coordinator::experiment::build_constraint(&cfg, built.oracle.n())?;
-    Ok((built.oracle, constraint))
+    Ok(WorkerProblem::Spec { oracle: built.oracle, constraint })
+}
+
+/// Adopt a shipped shard: no dataset regeneration — the payload *is* the
+/// data.  The spec text only supplies the constraint/objective settings.
+fn build_partition_problem(
+    spec: &str,
+    payload: &crate::objective::PartitionPayload,
+    local_view: bool,
+) -> crate::Result<WorkerProblem> {
+    let cfg = crate::util::config::Config::parse(spec)
+        .map_err(|e| anyhow::anyhow!("problem spec: {e}"))?;
+    let oracle = PartitionOracle::from_payload(payload)
+        .map_err(|e| anyhow::anyhow!("partition payload: {e}"))?;
+    if oracle.needs_local_view() && !local_view {
+        anyhow::bail!(
+            "the {} objective needs machine-local evaluation views under partition \
+             shipping (run with local_view, the §6.4 scheme) — a shard cannot \
+             evaluate against the full dataset",
+            oracle.name()
+        );
+    }
+    let (constraint, _k) =
+        crate::coordinator::experiment::build_constraint(&cfg, oracle.n())?;
+    Ok(WorkerProblem::Partition { oracle, constraint })
 }
 
 fn reply(output: &mut impl Write, msg: &FromWorker) -> crate::Result<()> {
     write_frame(output, &msg.to_value()).map_err(|e| anyhow::anyhow!("{e}"))
 }
 
-/// The command loop: one superstep role per frame.
+/// The command loop: one superstep role per frame.  All ids on the wire
+/// are global; under partition shipping the oracle facade translates to
+/// the shard's local dense space internally, and this loop only adds the
+/// data-shard handling — extract on `Ship`, ingest on `Recv`.
 fn serve(
     input: &mut impl Read,
     output: &mut impl Write,
-    oracle: &dyn crate::objective::Oracle,
-    constraint: &dyn crate::constraint::Constraint,
+    problem: &mut WorkerProblem,
     params: &NodeParams,
     machine: MachineId,
 ) -> crate::Result<()> {
@@ -226,7 +323,22 @@ fn serve(
         let cmd = ToWorker::from_value(&frame).map_err(|e| anyhow::anyhow!("{e}"))?;
         match cmd {
             ToWorker::Leaf { part } => {
-                match leaf_step(oracle, constraint, params, machine, &part) {
+                if let Some(p) = problem.partition() {
+                    // Pre-validate so a coordinator that forgot to ship an
+                    // element fails the protocol, not the process.
+                    if let Some(&missing) = part.iter().find(|&&e| !p.holds(e)) {
+                        reply(
+                            output,
+                            &FromWorker::Fail(DistError::backend(format!(
+                                "worker {machine}: partition element {missing} is \
+                                 not in the shipped shard"
+                            ))),
+                        )?;
+                        continue;
+                    }
+                }
+                match leaf_step(problem.oracle(), problem.constraint(), params, machine, &part)
+                {
                     Ok((s, report)) => {
                         state = Some(s);
                         reply(output, &FromWorker::Step(report))?;
@@ -236,7 +348,24 @@ fn serve(
             }
             ToWorker::Ship => match state.as_mut() {
                 Some(s) => {
-                    let msg = s.ship();
+                    let mut msg = s.ship();
+                    // Partition shipping: the solution travels with its
+                    // extracted data shard, so a parent that holds only
+                    // its own partition can evaluate it.
+                    if let Some(p) = problem.partition() {
+                        match p.extract(&msg.sol) {
+                            Ok(payload) => msg.data = Some(payload),
+                            Err(e) => {
+                                reply(
+                                    output,
+                                    &FromWorker::Fail(DistError::backend(format!(
+                                        "worker {machine}: {e}"
+                                    ))),
+                                )?;
+                                continue;
+                            }
+                        }
+                    }
                     reply(output, &FromWorker::Sol(msg))?;
                 }
                 None => reply(
@@ -247,15 +376,45 @@ fn serve(
                 )?,
             },
             ToWorker::Recv { level, children } => {
+                if let Some(p) = problem.partition_mut() {
+                    // Absorb each child's data before acking — the Ack is
+                    // the receipt that the payload (solutions *and* their
+                    // shards) has fully arrived.
+                    let mut failed = None;
+                    for child in &children {
+                        let result = match &child.data {
+                            Some(payload) => p.ingest(payload),
+                            None => Err(format!(
+                                "child {} shipped a solution without its data shard \
+                                 (mixed ship modes?)",
+                                child.from
+                            )),
+                        };
+                        if let Err(e) = result {
+                            failed = Some(format!("worker {machine}: recv: {e}"));
+                            break;
+                        }
+                    }
+                    if let Some(msg) = failed {
+                        reply(output, &FromWorker::Fail(DistError::backend(msg)))?;
+                        continue;
+                    }
+                }
                 pending = Some((level, children));
                 reply(output, &FromWorker::Ack)?;
             }
             ToWorker::Accum { level, comm_secs } => {
                 let took = pending.take();
                 let result = match (state.as_mut(), took) {
-                    (Some(s), Some((lvl, children))) if lvl == level => {
-                        accum_step(oracle, constraint, params, s, level, &children, comm_secs)
-                    }
+                    (Some(s), Some((lvl, children))) if lvl == level => accum_step(
+                        problem.oracle(),
+                        problem.constraint(),
+                        params,
+                        s,
+                        level,
+                        &children,
+                        comm_secs,
+                    ),
                     _ => Err(DistError::backend(format!(
                         "worker {machine}: accum at level {level} without matching recv"
                     ))),
@@ -284,7 +443,7 @@ fn serve(
                 }
                 return Ok(());
             }
-            ToWorker::Init { .. } => {
+            ToWorker::Init { .. } | ToWorker::InitPart { .. } => {
                 reply(
                     output,
                     &FromWorker::Fail(DistError::backend(format!(
@@ -325,13 +484,21 @@ mod tests {
         }
     }
 
+    /// Wrap an oracle/constraint pair the way a spec-shipped session does.
+    fn spec_problem(
+        oracle: impl crate::objective::Oracle + 'static,
+        constraint: impl crate::constraint::Constraint + 'static,
+    ) -> WorkerProblem {
+        WorkerProblem::Spec { oracle: Arc::new(oracle), constraint: Box::new(constraint) }
+    }
+
     #[test]
     fn spawn_with_missing_binary_is_a_backend_error() {
         let err = ProcessBackend::spawn(
             2,
             &params(),
             1,
-            "dataset.kind = retail\ndataset.n = 100\n",
+            ShipPlan::Spec("dataset.kind = retail\ndataset.n = 100\n"),
             Some("/nonexistent/greedyml-worker-binary"),
         )
         .unwrap_err();
@@ -364,7 +531,8 @@ mod tests {
         write_frame(&mut input, &ToWorker::Leaf { part }.to_value()).unwrap();
         write_frame(&mut input, &ToWorker::Finish.to_value()).unwrap();
         let mut output = Vec::new();
-        serve(&mut input.as_slice(), &mut output, &oracle, &constraint, &params(), 0).unwrap();
+        let mut problem = spec_problem(oracle, constraint);
+        serve(&mut input.as_slice(), &mut output, &mut problem, &params(), 0).unwrap();
 
         let mut cursor = output.as_slice();
         let step = read_frame(&mut cursor).unwrap().unwrap();
@@ -405,11 +573,96 @@ mod tests {
         let mut output = Vec::new();
         // Ship before leaf: the worker answers Fail and keeps serving
         // (the EOF after it ends the loop cleanly).
-        serve(&mut input.as_slice(), &mut output, &oracle, &constraint, &params(), 7).unwrap();
+        let mut problem = spec_problem(oracle, constraint);
+        serve(&mut input.as_slice(), &mut output, &mut problem, &params(), 7).unwrap();
         let v = read_frame(&mut output.as_slice()).unwrap().unwrap();
         match FromWorker::from_value(&v).unwrap() {
             FromWorker::Fail(DistError::Backend { message }) => {
                 assert!(message.contains("ship before leaf"), "{message}")
+            }
+            other => panic!("expected fail, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn init_part_session_serves_a_shard_without_rebuilding_the_dataset() {
+        // A full in-memory partition-shipped session: InitPart carries a
+        // 2-element modular shard of a "global" 50-element problem the
+        // worker never sees; Leaf runs on those global ids; the shipped
+        // solution carries its extracted data.
+        let oracle = crate::objective::Modular::new(
+            (0..50).map(|i| i as f64 + 1.0).collect::<Vec<_>>(),
+        );
+        let p = crate::objective::Oracle::partitionable(&oracle).unwrap();
+        let payload = p.extract_partition(&[40, 7]);
+        let mut input = Vec::new();
+        write_frame(
+            &mut input,
+            &ToWorker::InitPart {
+                machine: 0,
+                threads: 1,
+                params: NodeParams { n: 50, ..params() },
+                spec: "problem.k = 1\n".to_string(),
+                payload,
+            }
+            .to_value(),
+        )
+        .unwrap();
+        write_frame(&mut input, &ToWorker::Leaf { part: vec![40, 7] }.to_value()).unwrap();
+        write_frame(&mut input, &ToWorker::Ship.to_value()).unwrap();
+        let mut output = Vec::new();
+        serve_session(&mut input.as_slice(), &mut output).unwrap();
+
+        let mut cursor = output.as_slice();
+        let ready = read_frame(&mut cursor).unwrap().unwrap();
+        match FromWorker::from_value(&ready).unwrap() {
+            FromWorker::Ready { n } => assert_eq!(n, 2, "shard size, not the ground set"),
+            other => panic!("expected ready, got {other:?}"),
+        }
+        let step = read_frame(&mut cursor).unwrap().unwrap();
+        match FromWorker::from_value(&step).unwrap() {
+            FromWorker::Step(r) => assert!(r.calls > 0),
+            other => panic!("expected step, got {other:?}"),
+        }
+        let sol = read_frame(&mut cursor).unwrap().unwrap();
+        match FromWorker::from_value(&sol).unwrap() {
+            FromWorker::Sol(msg) => {
+                assert_eq!(msg.sol, vec![40], "k = 1 argmax is the heaviest global id");
+                let data = msg.data.expect("partition mode ships solution data");
+                assert_eq!(data.elems, vec![40]);
+            }
+            other => panic!("expected sol, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn init_part_leaf_outside_the_shard_is_a_fail_not_a_panic() {
+        let oracle = crate::objective::Modular::new(vec![1.0; 20]);
+        let p = crate::objective::Oracle::partitionable(&oracle).unwrap();
+        let payload = p.extract_partition(&[3, 4]);
+        let mut input = Vec::new();
+        write_frame(
+            &mut input,
+            &ToWorker::InitPart {
+                machine: 2,
+                threads: 1,
+                params: NodeParams { n: 20, ..params() },
+                spec: "problem.k = 1\n".to_string(),
+                payload,
+            }
+            .to_value(),
+        )
+        .unwrap();
+        write_frame(&mut input, &ToWorker::Leaf { part: vec![3, 19] }.to_value()).unwrap();
+        let mut output = Vec::new();
+        serve_session(&mut input.as_slice(), &mut output).unwrap();
+        let mut cursor = output.as_slice();
+        let _ready = read_frame(&mut cursor).unwrap().unwrap();
+        let fail = read_frame(&mut cursor).unwrap().unwrap();
+        match FromWorker::from_value(&fail).unwrap() {
+            FromWorker::Fail(DistError::Backend { message }) => {
+                assert!(message.contains("19"), "{message}");
+                assert!(message.contains("shard"), "{message}");
             }
             other => panic!("expected fail, got {other:?}"),
         }

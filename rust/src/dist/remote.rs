@@ -6,15 +6,17 @@
 //! is the transport-generic half they share: a [`FramedWorker`] wraps one
 //! worker's read/write byte streams behind typed `send`/`recv`, and
 //! [`RemoteBackend`] drives a fleet of them through the
-//! [`Backend`] contract — Init/Ready handshake, leaf fan-out, the
-//! Ship → Recv gather (whose wall time *is* the measured `comm_secs`),
-//! accumulation kick-off, and final collection.
+//! [`Backend`] contract — Init/Ready handshake (shipping either the
+//! problem spec or each machine's dataset shard, per
+//! [`ShipPlan`]), leaf fan-out, the Ship → Recv gather (whose wall time
+//! *is* the measured `comm_secs`), accumulation kick-off, and final
+//! collection.
 //!
 //! Keeping this logic in one place is what keeps the transports
 //! interchangeable: a backend cannot drift in superstep ordering or error
 //! semantics when it only supplies `Read`/`Write` endpoints.
 
-use super::backend::{AccumTask, Backend, BackendOutcome};
+use super::backend::{AccumTask, Backend, BackendOutcome, ShipPlan};
 use super::node::{ChildMsg, NodeParams, StepReport};
 use super::wire::{read_frame, write_frame, FromWorker, ToWorker};
 use super::{DistError, MachineStats};
@@ -24,10 +26,13 @@ use std::time::Instant;
 
 /// One remote worker (= one simulated machine) behind a framed byte
 /// stream: `reader` carries worker → coordinator replies, `writer`
-/// coordinator → worker commands.
+/// coordinator → worker commands.  `peer` (the tcp backend sets it to the
+/// worker's `host:port`) labels every transport error, so a multi-host
+/// failure names the offending worker, not just its machine number.
 pub(crate) struct FramedWorker<R, W> {
     /// The machine this worker simulates (also its index in the fleet).
     pub machine: MachineId,
+    peer: Option<String>,
     reader: R,
     writer: W,
 }
@@ -35,13 +40,28 @@ pub(crate) struct FramedWorker<R, W> {
 impl<R: Read, W: Write> FramedWorker<R, W> {
     /// Wrap a worker's byte streams.
     pub fn new(machine: MachineId, reader: R, writer: W) -> Self {
-        Self { machine, reader, writer }
+        Self { machine, peer: None, reader, writer }
+    }
+
+    /// Label this worker with its transport endpoint (`host:port`) for
+    /// error messages.
+    pub fn with_peer(mut self, peer: impl Into<String>) -> Self {
+        self.peer = Some(peer.into());
+        self
+    }
+
+    /// "worker 3" / "worker 3 at 10.0.0.2:7401" — the error-message label.
+    pub fn who(&self) -> String {
+        match &self.peer {
+            Some(p) => format!("worker {} at {p}", self.machine),
+            None => format!("worker {}", self.machine),
+        }
     }
 
     /// Send one command frame.
     pub fn send(&mut self, msg: &ToWorker) -> Result<(), DistError> {
         write_frame(&mut self.writer, &msg.to_value())
-            .map_err(|e| DistError::backend(format!("worker {}: {e}", self.machine)))
+            .map_err(|e| DistError::backend(format!("{}: {e}", self.who())))
     }
 
     /// Receive one reply frame; a closed stream (worker death, dropped
@@ -51,10 +71,10 @@ impl<R: Read, W: Write> FramedWorker<R, W> {
         match read_frame(&mut self.reader) {
             Ok(Some(v)) => FromWorker::from_value(&v),
             Ok(None) => Err(DistError::backend(format!(
-                "worker {} disconnected before replying",
-                self.machine
+                "{} disconnected before replying",
+                self.who()
             ))),
-            Err(e) => Err(DistError::backend(format!("worker {}: {e}", self.machine))),
+            Err(e) => Err(DistError::backend(format!("{}: {e}", self.who()))),
         }
     }
 
@@ -76,43 +96,77 @@ pub(crate) struct RemoteBackend<R, W> {
 }
 
 impl<R: Read, W: Write> RemoteBackend<R, W> {
-    /// Initialize a fleet: send every `Init` before reading any `Ready`,
-    /// so the `m` per-worker dataset rebuilds run concurrently, then
-    /// verify each worker rebuilt the coordinator's ground set.
+    /// Initialize a fleet: send every `Init`/`InitPart` before reading any
+    /// `Ready`, so the `m` per-worker rebuilds (dataset regeneration under
+    /// spec shipping, shard deserialization under partition shipping) run
+    /// concurrently, then verify each worker holds what the coordinator
+    /// thinks it shipped.
     ///
     /// `workers` must arrive in machine order (worker `i` simulates
-    /// machine `i`) — superstep routing indexes the fleet by machine id.
+    /// machine `i`) — superstep routing indexes the fleet by machine id,
+    /// and under partition shipping `payloads[i]` is machine `i`'s shard.
     pub fn init(
         name: &'static str,
         workers: Vec<FramedWorker<R, W>>,
         params: &NodeParams,
         threads: usize,
-        problem: &str,
+        plan: ShipPlan<'_>,
     ) -> Result<Self, DistError> {
         let mut backend = Self { name, workers };
-        for w in &mut backend.workers {
-            let init = ToWorker::Init {
-                machine: w.machine,
-                threads,
-                params: params.clone(),
-                problem: problem.to_string(),
-            };
-            w.send(&init)?;
+        // Per-worker expected Ready{n}: the global ground set under spec
+        // shipping, the shard size under partition shipping.
+        let expected: Vec<usize> = match &plan {
+            ShipPlan::Spec(_) => vec![params.n; backend.workers.len()],
+            ShipPlan::Partition { payloads, .. } => {
+                if payloads.len() != backend.workers.len() {
+                    return Err(DistError::backend(format!(
+                        "{} shards for {} workers",
+                        payloads.len(),
+                        backend.workers.len()
+                    )));
+                }
+                payloads.iter().map(|p| p.len()).collect()
+            }
+        };
+        match plan {
+            ShipPlan::Spec(problem) => {
+                for w in &mut backend.workers {
+                    let init = ToWorker::Init {
+                        machine: w.machine,
+                        threads,
+                        params: params.clone(),
+                        problem: problem.to_string(),
+                    };
+                    w.send(&init)?;
+                }
+            }
+            ShipPlan::Partition { spec, payloads } => {
+                for (w, payload) in backend.workers.iter_mut().zip(payloads) {
+                    let init = ToWorker::InitPart {
+                        machine: w.machine,
+                        threads,
+                        params: params.clone(),
+                        spec: spec.to_string(),
+                        payload,
+                    };
+                    w.send(&init)?;
+                }
+            }
         }
-        for w in &mut backend.workers {
+        for (w, want) in backend.workers.iter_mut().zip(expected) {
             match w.recv_ok()? {
-                FromWorker::Ready { n } if n == params.n => {}
+                FromWorker::Ready { n } if n == want => {}
                 FromWorker::Ready { n } => {
                     return Err(DistError::backend(format!(
-                        "worker {} rebuilt a ground set of {n} elements, coordinator has {}; \
-                         the problem spec does not describe this oracle",
-                        w.machine, params.n
+                        "{} holds {n} elements, coordinator shipped {want}; \
+                         the shipped problem does not describe this oracle",
+                        w.who()
                     )))
                 }
                 other => {
                     return Err(DistError::backend(format!(
-                        "worker {}: expected ready, got {other:?}",
-                        w.machine
+                        "{}: expected ready, got {other:?}",
+                        w.who()
                     )))
                 }
             }
@@ -147,8 +201,8 @@ impl<R: Read, W: Write> Backend for RemoteBackend<R, W> {
                 FromWorker::Fail(e) => first_err = first_err.take().or(Some(e)),
                 other => {
                     return Err(DistError::backend(format!(
-                        "worker {}: expected step, got {other:?}",
-                        w.machine
+                        "{}: expected step, got {other:?}",
+                        w.who()
                     )))
                 }
             }
@@ -168,7 +222,10 @@ impl<R: Read, W: Write> Backend for RemoteBackend<R, W> {
         // solutions and forward them.  The clock runs from the first Ship
         // request to the parent's Recv receipt — serialization, two
         // transport hops and deserialization are all inside it, which is
-        // exactly the cost the α–β model approximates.
+        // exactly the cost the α–β model approximates.  Under partition
+        // shipping the forwarded ChildMsg additionally carries the
+        // solution's data shard; the clock covers those bytes too, which
+        // is the point — that data movement *is* §4.2's communication.
         for task in tasks {
             let t0 = Instant::now();
             let mut children: Vec<ChildMsg> = Vec::with_capacity(task.children.len());
@@ -178,7 +235,8 @@ impl<R: Read, W: Write> Backend for RemoteBackend<R, W> {
                     FromWorker::Sol(msg) => children.push(msg),
                     other => {
                         return Err(DistError::backend(format!(
-                            "worker {c}: expected sol, got {other:?}"
+                            "{}: expected sol, got {other:?}",
+                            self.workers[c as usize].who()
                         )))
                     }
                 }
@@ -189,8 +247,8 @@ impl<R: Read, W: Write> Backend for RemoteBackend<R, W> {
                 FromWorker::Ack => {}
                 other => {
                     return Err(DistError::backend(format!(
-                        "worker {}: expected ack, got {other:?}",
-                        task.parent
+                        "{}: expected ack, got {other:?}",
+                        parent.who()
                     )))
                 }
             }
@@ -210,8 +268,8 @@ impl<R: Read, W: Write> Backend for RemoteBackend<R, W> {
                 FromWorker::Fail(e) => first_err = first_err.take().or(Some(e)),
                 other => {
                     return Err(DistError::backend(format!(
-                        "worker {}: expected step, got {other:?}",
-                        task.parent
+                        "{}: expected step, got {other:?}",
+                        parent.who()
                     )))
                 }
             }
@@ -234,8 +292,9 @@ impl<R: Read, W: Write> Backend for RemoteBackend<R, W> {
                 FromWorker::Final { stats, sol, value: v } => {
                     if stats.id != w.machine {
                         return Err(DistError::backend(format!(
-                            "worker {} reported stats for machine {}",
-                            w.machine, stats.id
+                            "{} reported stats for machine {}",
+                            w.who(),
+                            stats.id
                         )));
                     }
                     if w.machine == 0 {
@@ -246,8 +305,8 @@ impl<R: Read, W: Write> Backend for RemoteBackend<R, W> {
                 }
                 other => {
                     return Err(DistError::backend(format!(
-                        "worker {}: expected final, got {other:?}",
-                        w.machine
+                        "{}: expected final, got {other:?}",
+                        w.who()
                     )))
                 }
             }
@@ -265,6 +324,7 @@ impl<R: Read, W: Write> Backend for RemoteBackend<R, W> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::objective::{PartitionData, PartitionPayload};
 
     /// Drive a RemoteBackend against in-memory byte buffers: scripted
     /// worker replies on the read side, captured commands on the write
@@ -289,16 +349,58 @@ mod tests {
         }
     }
 
+    fn shard(n_global: usize, elems: Vec<ElemId>) -> PartitionPayload {
+        let weights = vec![1.0; elems.len()];
+        PartitionPayload { n_global, elems, data: PartitionData::Modular { weights } }
+    }
+
     #[test]
     fn init_rejects_a_divergent_ground_set() {
         let replies = scripted(&[FromWorker::Ready { n: 7 }]);
         let worker = FramedWorker::new(0, replies.as_slice(), Vec::<u8>::new());
-        let err = RemoteBackend::init("test", vec![worker], &params(100), 1, "spec")
-            .err()
-            .expect("ground-set mismatch must fail");
+        let err =
+            RemoteBackend::init("test", vec![worker], &params(100), 1, ShipPlan::Spec("spec"))
+                .err()
+                .expect("ground-set mismatch must fail");
         let msg = err.to_string();
         assert!(msg.contains("7 elements"), "{msg}");
         assert!(msg.contains("100"), "{msg}");
+    }
+
+    #[test]
+    fn partition_init_checks_the_shard_size_not_the_ground_set() {
+        // The worker acknowledges its 3-element shard of a 100-element
+        // problem; Ready{3} must pass where spec shipping would demand 100.
+        let replies = scripted(&[FromWorker::Ready { n: 3 }]);
+        let worker = FramedWorker::new(0, replies.as_slice(), Vec::<u8>::new());
+        let plan = ShipPlan::Partition {
+            spec: "problem.k = 2\n",
+            payloads: vec![shard(100, vec![5, 50, 99])],
+        };
+        RemoteBackend::init("test", vec![worker], &params(100), 1, plan)
+            .expect("shard-sized Ready is correct under partition shipping");
+
+        let replies = scripted(&[FromWorker::Ready { n: 100 }]);
+        let worker = FramedWorker::new(0, replies.as_slice(), Vec::<u8>::new());
+        let plan = ShipPlan::Partition {
+            spec: "problem.k = 2\n",
+            payloads: vec![shard(100, vec![5, 50, 99])],
+        };
+        let err = RemoteBackend::init("test", vec![worker], &params(100), 1, plan)
+            .err()
+            .expect("a worker claiming the full ground set diverged");
+        assert!(err.to_string().contains("coordinator shipped 3"), "{err}");
+    }
+
+    #[test]
+    fn partition_init_requires_one_shard_per_worker() {
+        let replies = scripted(&[FromWorker::Ready { n: 1 }]);
+        let worker = FramedWorker::new(0, replies.as_slice(), Vec::<u8>::new());
+        let plan = ShipPlan::Partition { spec: "", payloads: Vec::new() };
+        let err = RemoteBackend::init("test", vec![worker], &params(10), 1, plan)
+            .err()
+            .expect("0 shards for 1 worker must fail");
+        assert!(err.to_string().contains("0 shards"), "{err}");
     }
 
     #[test]
@@ -306,19 +408,34 @@ mod tests {
         // An empty reply stream = the worker died before Ready.
         let empty: &[u8] = &[];
         let worker = FramedWorker::new(3, empty, Vec::<u8>::new());
-        let err = RemoteBackend::init("test", vec![worker], &params(10), 1, "spec")
-            .err()
-            .expect("EOF must fail");
+        let err =
+            RemoteBackend::init("test", vec![worker], &params(10), 1, ShipPlan::Spec("spec"))
+                .err()
+                .expect("EOF must fail");
         assert!(err.to_string().contains("worker 3 disconnected"), "{err}");
+    }
+
+    #[test]
+    fn peer_label_names_the_host_in_errors() {
+        let empty: &[u8] = &[];
+        let worker =
+            FramedWorker::new(2, empty, Vec::<u8>::new()).with_peer("10.0.0.7:7401");
+        let err =
+            RemoteBackend::init("test", vec![worker], &params(10), 1, ShipPlan::Spec("spec"))
+                .err()
+                .expect("EOF must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("worker 2 at 10.0.0.7:7401"), "{msg}");
     }
 
     #[test]
     fn worker_fail_reply_surfaces_as_the_inner_error() {
         let replies = scripted(&[FromWorker::Fail(DistError::backend("no such dataset"))]);
         let worker = FramedWorker::new(1, replies.as_slice(), Vec::<u8>::new());
-        let err = RemoteBackend::init("test", vec![worker], &params(10), 1, "spec")
-            .err()
-            .expect("Fail must propagate");
+        let err =
+            RemoteBackend::init("test", vec![worker], &params(10), 1, ShipPlan::Spec("spec"))
+                .err()
+                .expect("Fail must propagate");
         assert!(err.to_string().contains("no such dataset"), "{err}");
     }
 }

@@ -42,7 +42,7 @@
 //! handshake, oracle rebuild, real socket shipping — runs on one machine,
 //! which is how the tier-1 suite exercises it without a cluster.
 
-use super::backend::{AccumTask, Backend, BackendOutcome};
+use super::backend::{AccumTask, Backend, BackendOutcome, ShipPlan};
 use super::node::{NodeParams, StepReport};
 use super::proc::serve_session;
 use super::remote::{FramedWorker, RemoteBackend};
@@ -192,16 +192,17 @@ pub struct TcpBackend {
 
 impl TcpBackend {
     /// Connect `machines` sessions round-robin over `hosts`, handshake
-    /// protocol versions, ship the problem spec, and verify every worker
-    /// rebuilt the coordinator's ground set.
+    /// protocol versions, ship the [`ShipPlan`] (the problem spec, or each
+    /// machine's dataset shard), and verify every worker holds what the
+    /// coordinator shipped.
     pub fn connect(
         hosts: &[String],
         machines: u32,
         params: &NodeParams,
         threads: usize,
-        problem: &str,
+        plan: ShipPlan<'_>,
     ) -> Result<Self, DistError> {
-        Self::connect_with_retry(hosts, machines, params, threads, problem, CONNECT_RETRY_WINDOW)
+        Self::connect_with_retry(hosts, machines, params, threads, plan, CONNECT_RETRY_WINDOW)
     }
 
     /// [`TcpBackend::connect`] with an explicit retry window (tests use a
@@ -211,7 +212,7 @@ impl TcpBackend {
         machines: u32,
         params: &NodeParams,
         threads: usize,
-        problem: &str,
+        plan: ShipPlan<'_>,
         retry: Duration,
     ) -> Result<Self, DistError> {
         if hosts.is_empty() {
@@ -230,12 +231,15 @@ impl TcpBackend {
             let reader = stream
                 .try_clone()
                 .map_err(|e| DistError::backend(format!("worker at {host}: clone socket: {e}")))?;
+            // The peer label puts `host:port` into every later transport
+            // error, so a mid-run failure names the offending daemon.
             let mut worker =
-                FramedWorker::new(machine, BufReader::new(reader), BufWriter::new(stream));
+                FramedWorker::new(machine, BufReader::new(reader), BufWriter::new(stream))
+                    .with_peer(host.clone());
             handshake(&mut worker, host)?;
             workers.push(worker);
         }
-        Ok(Self { inner: RemoteBackend::init("tcp", workers, params, threads, problem)? })
+        Ok(Self { inner: RemoteBackend::init("tcp", workers, params, threads, plan)? })
     }
 }
 
@@ -471,7 +475,7 @@ mod tests {
             1,
             &params(),
             1,
-            SPEC,
+            ShipPlan::Spec(SPEC),
             Duration::from_millis(200),
         )
         .unwrap_err();
@@ -510,7 +514,7 @@ mod tests {
             1,
             &params(),
             1,
-            SPEC,
+            ShipPlan::Spec(SPEC),
             Duration::from_secs(5),
         )
         .unwrap();
@@ -538,7 +542,7 @@ mod tests {
             1,
             &params(),
             1,
-            bad_spec,
+            ShipPlan::Spec(bad_spec),
             Duration::from_secs(5),
         )
         .unwrap_err();

@@ -21,7 +21,9 @@
 //! coordinator → worker          worker → coordinator
 //! ------------------          --------------------
 //! Hello{version}               Welcome{version} | Fail(err)   (TCP only)
-//! Init{machine,params,spec}    Ready{n}
+//! Init{machine,params,spec}    Ready{n}       (spec shipping: full rebuild)
+//! InitPart{machine,params,
+//!          spec,payload}       Ready{n}       (partition shipping: n = shard size)
 //! Leaf{part}                   Step(report) | Fail(err)
 //! Ship                         Sol(child msg)
 //! Recv{level,children}         Ack            (receipt — ends the comm timer)
@@ -32,6 +34,7 @@
 use super::node::{ChildMsg, NodeParams, StepReport};
 use super::{DistError, MachineStats};
 use crate::greedy::GreedyKind;
+use crate::objective::PartitionPayload;
 use crate::{ElemId, MachineId};
 use serde_json::{json, Value};
 use std::io::{Read, Write};
@@ -47,7 +50,11 @@ const MAX_FRAME: u32 = 1 << 30;
 /// faithfully serve instead of desyncing mid-run.  The process backend
 /// skips the handshake — both pipe endpoints are the same binary, so the
 /// versions are trivially equal.
-pub const PROTOCOL_VERSION: u32 = 1;
+///
+/// v2: partition shipping — the `init_part` command (a worker receives
+/// its dataset shard instead of a rebuild recipe) and the optional `data`
+/// field on shipped child solutions.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Write one length-prefixed JSON frame.
 pub fn write_frame(w: &mut impl Write, v: &Value) -> Result<(), DistError> {
@@ -107,6 +114,26 @@ pub enum ToWorker {
         params: NodeParams,
         /// Flat `key = value` problem spec the worker rebuilds from.
         problem: String,
+    },
+    /// Partition-shipping handshake (`--ship partition`): instead of a
+    /// rebuild recipe the worker receives its O(n/m) dataset shard — its
+    /// leaf partition plus the §6.4 added elements it will draw — and
+    /// rebuilds only a [`PartitionPayload`]-backed facade oracle.  The
+    /// spec still travels, but solely for the constraint and objective
+    /// settings; no dataset is regenerated.  Replies `Ready` with the
+    /// *shard* element count (not the global ground-set size), which the
+    /// coordinator checks against what it shipped.
+    InitPart {
+        /// The simulated machine this worker becomes.
+        machine: MachineId,
+        /// Executor width for the worker's nested gain scans.
+        threads: usize,
+        /// The node program's parameters.
+        params: NodeParams,
+        /// Flat `key = value` spec for the constraint/objective settings.
+        spec: String,
+        /// The machine's dataset shard.
+        payload: PartitionPayload,
     },
     /// Level-0 superstep: GREEDY on this partition.
     Leaf {
@@ -181,6 +208,14 @@ impl ToWorker {
                 "params": params_to_value(params),
                 "problem": problem,
             }),
+            Self::InitPart { machine, threads, params, spec, payload } => json!({
+                "t": "init_part",
+                "machine": machine,
+                "threads": threads,
+                "params": params_to_value(params),
+                "spec": spec,
+                "payload": payload.to_value(),
+            }),
             Self::Leaf { part } => json!({ "t": "leaf", "part": part }),
             Self::Ship => json!({ "t": "ship" }),
             Self::Recv { level, children } => json!({
@@ -204,6 +239,14 @@ impl ToWorker {
                 threads: u64_field(v, "threads")? as usize,
                 params: params_from_value(field(v, "params")?)?,
                 problem: str_field(v, "problem")?.to_string(),
+            }),
+            "init_part" => Ok(Self::InitPart {
+                machine: u64_field(v, "machine")? as MachineId,
+                threads: u64_field(v, "threads")? as usize,
+                params: params_from_value(field(v, "params")?)?,
+                spec: str_field(v, "spec")?.to_string(),
+                payload: PartitionPayload::from_value(field(v, "payload")?)
+                    .map_err(|e| DistError::backend(format!("partition payload: {e}")))?,
             }),
             "leaf" => Ok(Self::Leaf { part: elems_field(v, "part")? }),
             "ship" => Ok(Self::Ship),
@@ -347,7 +390,11 @@ fn params_from_value(v: &Value) -> Result<NodeParams, DistError> {
 }
 
 fn child_to_value(m: &ChildMsg) -> Value {
-    json!({ "from": m.from, "sol": m.sol, "value": m.value, "bytes": m.bytes })
+    let mut v = json!({ "from": m.from, "sol": m.sol, "value": m.value, "bytes": m.bytes });
+    if let Some(data) = &m.data {
+        v["data"] = data.to_value();
+    }
+    v
 }
 
 fn child_from_value(v: &Value) -> Result<ChildMsg, DistError> {
@@ -356,6 +403,13 @@ fn child_from_value(v: &Value) -> Result<ChildMsg, DistError> {
         sol: elems_field(v, "sol")?,
         value: f64_field(v, "value")?,
         bytes: u64_field(v, "bytes")?,
+        data: match v.get("data") {
+            None | Some(Value::Null) => None,
+            Some(d) => Some(
+                PartitionPayload::from_value(d)
+                    .map_err(|e| DistError::backend(format!("child data payload: {e}")))?,
+            ),
+        },
     })
 }
 
@@ -446,6 +500,23 @@ fn error_from_value(v: &Value) -> Result<DistError, DistError> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::objective::PartitionData;
+
+    /// A small shard payload for codec samples.
+    fn sample_payload() -> PartitionPayload {
+        PartitionPayload {
+            n_global: 1000,
+            elems: vec![9, 2, 511],
+            data: PartitionData::Cover {
+                universe: 40,
+                offsets: vec![0, 2, 2, 5],
+                items: vec![1, 3, 0, 7, 39],
+                weights: None,
+                self_cover: false,
+                dominating: false,
+            },
+        }
+    }
 
     fn roundtrip_cmd(msg: ToWorker) {
         let mut buf = Vec::new();
@@ -481,11 +552,37 @@ mod tests {
                 },
                 problem: "dataset.kind = retail\ndataset.n = 300\n".to_string(),
             },
+            ToWorker::InitPart {
+                machine: 1,
+                threads: 2,
+                params: NodeParams {
+                    kind: GreedyKind::Lazy,
+                    seed: 42,
+                    n: 1000,
+                    mem_limit: None,
+                    local_view: false,
+                    added_elements: 0,
+                    compare_all_children: false,
+                },
+                spec: "problem.k = 4\n".to_string(),
+                payload: sample_payload(),
+            },
             ToWorker::Leaf { part: vec![5, 1, 999] },
             ToWorker::Ship,
             ToWorker::Recv {
                 level: 2,
-                children: vec![ChildMsg { from: 4, sol: vec![7, 8], value: 12.5, bytes: 64 }],
+                children: vec![
+                    ChildMsg { from: 4, sol: vec![7, 8], value: 12.5, bytes: 64, data: None },
+                    // Partition shipping: the solution travels with its
+                    // extracted data shard.
+                    ChildMsg {
+                        from: 5,
+                        sol: vec![9],
+                        value: 3.25,
+                        bytes: 20,
+                        data: Some(sample_payload()),
+                    },
+                ],
             },
             ToWorker::Accum { level: 2, comm_secs: 0.125 },
             ToWorker::Finish,
@@ -507,7 +604,13 @@ mod tests {
                 peak_mem: 4096,
             }),
             FromWorker::Ack,
-            FromWorker::Sol(ChildMsg { from: 0, sol: vec![1, 2, 3], value: 7.25, bytes: 96 }),
+            FromWorker::Sol(ChildMsg {
+                from: 0,
+                sol: vec![1, 2, 3],
+                value: 7.25,
+                bytes: 96,
+                data: None,
+            }),
             FromWorker::Final {
                 stats: MachineStats { id: 6, calls: 10, peak_mem: 77, ..MachineStats::new(6) },
                 sol: vec![9],
@@ -597,7 +700,13 @@ mod tests {
         // The parity suite compares f(S) with to_bits(); ryu's shortest
         // representation must reproduce the exact double.
         for v in [1.0 / 3.0, 1e-300, 123456789.123456789, f64::MIN_POSITIVE] {
-            let msg = FromWorker::Sol(ChildMsg { from: 0, sol: vec![], value: v, bytes: 0 });
+            let msg = FromWorker::Sol(ChildMsg {
+                from: 0,
+                sol: vec![],
+                value: v,
+                bytes: 0,
+                data: None,
+            });
             let mut buf = Vec::new();
             write_frame(&mut buf, &msg.to_value()).unwrap();
             let parsed = read_frame(&mut buf.as_slice()).unwrap().unwrap();

@@ -48,9 +48,10 @@ fn real_main() -> greedyml::Result<()> {
 
 const USAGE: &str = "usage: greedyml <run|sweep|serve|tree|datasets|artifacts|model> [flags]
   run       --config <file> [--set key=value]… [--json <out.json>] [--pjrt]
-            [--backend thread|process|tcp] [--hosts h1:port,h2:port]
+            [--backend thread|process|tcp] [--hosts h1:port,h2:port] [--ship spec|partition]
   sweep     --config <file> (with a [sweep] section) [--set key=value]… [--json <out.json>]
             [--csv <dir>] [--backend thread|process|tcp] [--hosts h1:port,h2:port]
+            [--ship spec|partition]
   serve     --bind <addr>   (tcp-backend worker daemon; --bind 127.0.0.1:0 picks a free port)
   tree      --machines <m> --branching <b>
   datasets  (no flags)
@@ -58,7 +59,7 @@ const USAGE: &str = "usage: greedyml <run|sweep|serve|tree|datasets|artifacts|mo
   model     --n <n> --k <k> --machines <m> --levels <L> [--delta <d>]";
 
 fn cmd_run(args: &Args) -> greedyml::Result<()> {
-    args.check_known(&["config", "set", "json", "pjrt", "trace", "backend", "hosts"])?;
+    args.check_known(&["config", "set", "json", "pjrt", "trace", "backend", "hosts", "ship"])?;
     let mut cfg = Config::load(args.require("config")?)?;
     for kv in args.get_all("set") {
         cfg.set_kv(kv)?;
@@ -68,6 +69,9 @@ fn cmd_run(args: &Args) -> greedyml::Result<()> {
     }
     if let Some(hosts) = args.get("hosts") {
         cfg.set("run.hosts", hosts);
+    }
+    if let Some(ship) = args.get("ship") {
+        cfg.set("run.ship", ship);
     }
     let engine = if args.has("pjrt") || cfg.str_or("objective.backend", "cpu") == "pjrt" {
         if args.has("pjrt") {
@@ -122,7 +126,7 @@ fn cmd_run(args: &Args) -> greedyml::Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
-    args.check_known(&["config", "set", "json", "pjrt", "csv", "backend", "hosts"])?;
+    args.check_known(&["config", "set", "json", "pjrt", "csv", "backend", "hosts", "ship"])?;
     let mut cfg = Config::load(args.require("config")?)?;
     for kv in args.get_all("set") {
         cfg.set_kv(kv)?;
@@ -132,6 +136,9 @@ fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
     }
     if let Some(hosts) = args.get("hosts") {
         cfg.set("sweep.hosts", hosts);
+    }
+    if let Some(ship) = args.get("ship") {
+        cfg.set("sweep.ship", ship);
     }
     let engine = if args.has("pjrt") || cfg.str_or("objective.backend", "cpu") == "pjrt" {
         Some(Arc::new(Engine::load(&greedyml::runtime::artifact_dir())?))

@@ -7,6 +7,7 @@
 //! construction (`n × n` weight matrix), so it also gives the brute-force
 //! OPT tests a fast oracle.
 
+use super::problem::{PartitionData, PartitionPayload, Partitionable};
 use super::{GainState, Oracle};
 use crate::ElemId;
 
@@ -59,6 +60,29 @@ impl Oracle for FacilityLocation {
 
     fn elem_bytes(&self, _e: ElemId) -> usize {
         8 + 8 * self.clients // id + its benefit column
+    }
+
+    fn partitionable(&self) -> Option<&dyn Partitionable> {
+        Some(self)
+    }
+}
+
+impl Partitionable for FacilityLocation {
+    fn extract_partition(&self, elems: &[ElemId]) -> PartitionPayload {
+        // One benefit column per shipped facility; clients are a separate
+        // axis, so every shard evaluates against all of them and the view
+        // never matters.
+        let mut columns = Vec::with_capacity(elems.len() * self.clients);
+        for &e in elems {
+            for c in 0..self.clients {
+                columns.push(self.benefit(c, e));
+            }
+        }
+        PartitionPayload {
+            n_global: self.n,
+            elems: elems.to_vec(),
+            data: PartitionData::Facility { clients: self.clients, columns },
+        }
     }
 }
 

@@ -5,6 +5,7 @@
 //! marginal gain of transaction `t` is the count of its items not yet
 //! covered — `O(δ)` per call with a packed bitmap (Table 1).
 
+use super::problem::{PartitionData, PartitionPayload, Partitionable};
 use super::{GainState, Oracle};
 use crate::data::itemsets::ItemsetCollection;
 use crate::util::bitset::BitSet;
@@ -51,6 +52,28 @@ impl Oracle for KCover {
 
     fn elem_bytes(&self, e: ElemId) -> usize {
         self.data.elem_bytes(e)
+    }
+
+    fn partitionable(&self) -> Option<&dyn Partitionable> {
+        Some(self)
+    }
+}
+
+impl Partitionable for KCover {
+    fn extract_partition(&self, elems: &[ElemId]) -> PartitionPayload {
+        let (offsets, items) = self.data.slice_sets(elems);
+        PartitionPayload {
+            n_global: self.data.num_sets(),
+            elems: elems.to_vec(),
+            data: PartitionData::Cover {
+                universe: self.data.num_items(),
+                offsets,
+                items,
+                weights: None,
+                self_cover: false,
+                dominating: false,
+            },
+        }
     }
 }
 

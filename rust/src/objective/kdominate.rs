@@ -6,6 +6,7 @@
 //! vertex itself (the more common textbook definition); the benches use the
 //! paper's open variant.
 
+use super::problem::{PartitionData, PartitionPayload, Partitionable};
 use super::{GainState, Oracle};
 use crate::data::graph::CsrGraph;
 use crate::util::bitset::BitSet;
@@ -57,6 +58,33 @@ impl Oracle for KDominatingSet {
 
     fn elem_bytes(&self, e: ElemId) -> usize {
         self.graph.elem_bytes(e)
+    }
+
+    fn partitionable(&self) -> Option<&dyn Partitionable> {
+        Some(self)
+    }
+}
+
+impl Partitionable for KDominatingSet {
+    fn extract_partition(&self, elems: &[ElemId]) -> PartitionPayload {
+        // Per-vertex adjacency lists in global vertex ids: the covered
+        // universe is the whole graph even though only the shard's
+        // vertices are candidates.  The closed variant's self-domination
+        // rides on the payload's `self_cover` flag (the self "item" is the
+        // element's own global id, which the shard carries in `elems`).
+        let (offsets, items) = self.graph.neighborhoods(elems);
+        PartitionPayload {
+            n_global: self.graph.num_vertices(),
+            elems: elems.to_vec(),
+            data: PartitionData::Cover {
+                universe: self.graph.num_vertices(),
+                offsets,
+                items,
+                weights: None,
+                self_cover: self.closed,
+                dominating: true,
+            },
+        }
     }
 }
 

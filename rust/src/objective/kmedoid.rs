@@ -20,6 +20,7 @@
 //! existing `mind` sqrt-elision pruning.  The Pallas/PJRT kernel
 //! (`runtime::kmedoid_pjrt`) is the accelerator-side counterpart.
 
+use super::problem::{PartitionData, PartitionPayload, Partitionable};
 use super::{GainState, Oracle};
 use crate::data::vectors::{dot4_fast, dot_fast, VectorSet};
 use crate::ElemId;
@@ -79,6 +80,29 @@ impl Oracle for KMedoid {
 
     fn elem_bytes(&self, _e: ElemId) -> usize {
         self.data.elem_bytes()
+    }
+
+    fn partitionable(&self) -> Option<&dyn Partitionable> {
+        Some(self)
+    }
+}
+
+impl Partitionable for KMedoid {
+    fn extract_partition(&self, elems: &[ElemId]) -> PartitionPayload {
+        PartitionPayload {
+            n_global: self.data.len(),
+            elems: elems.to_vec(),
+            data: PartitionData::Vectors {
+                dim: self.data.dim(),
+                flat: self.data.gather_flat(elems),
+            },
+        }
+    }
+
+    fn needs_local_view(&self) -> bool {
+        // f(S) scans the evaluation view; without the §6.4 machine-local
+        // scheme a shard cannot reproduce the full-dataset objective.
+        true
     }
 }
 

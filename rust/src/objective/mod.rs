@@ -21,6 +21,7 @@ pub mod kcover;
 pub mod kdominate;
 pub mod kmedoid;
 pub mod modular;
+pub mod problem;
 pub mod wcover;
 
 pub use facility::FacilityLocation;
@@ -28,6 +29,7 @@ pub use kcover::KCover;
 pub use kdominate::KDominatingSet;
 pub use kmedoid::KMedoid;
 pub use modular::Modular;
+pub use problem::{PartitionData, PartitionOracle, PartitionPayload, Partitionable};
 pub use wcover::WeightedCover;
 
 /// A monotone submodular objective over ground set `0..n`.
@@ -55,6 +57,15 @@ pub trait Oracle: Send + Sync {
             st.commit(e);
         }
         st.value()
+    }
+
+    /// Partition-shipping hook ([`problem`]): oracles whose dataset can be
+    /// sliced into serde-stable shards return themselves as a
+    /// [`Partitionable`].  The default `None` means the oracle only
+    /// travels as a rebuild recipe (`--ship spec`) — the PJRT-backed
+    /// oracles stay there because their data lives in AOT device buffers.
+    fn partitionable(&self) -> Option<&dyn Partitionable> {
+        None
     }
 }
 

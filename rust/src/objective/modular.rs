@@ -6,6 +6,7 @@
 //! calibration oracle for the test suite: any algorithm bug that loses
 //! elements or miscounts gains shows up as a hard equality failure.
 
+use super::problem::{PartitionData, PartitionPayload, Partitionable};
 use super::{GainState, Oracle};
 use crate::ElemId;
 
@@ -49,6 +50,22 @@ impl Oracle for Modular {
 
     fn elem_bytes(&self, _e: ElemId) -> usize {
         16 // id + weight
+    }
+
+    fn partitionable(&self) -> Option<&dyn Partitionable> {
+        Some(self)
+    }
+}
+
+impl Partitionable for Modular {
+    fn extract_partition(&self, elems: &[ElemId]) -> PartitionPayload {
+        PartitionPayload {
+            n_global: self.weights.len(),
+            elems: elems.to_vec(),
+            data: PartitionData::Modular {
+                weights: elems.iter().map(|&e| self.weights[e as usize]).collect(),
+            },
+        }
     }
 }
 

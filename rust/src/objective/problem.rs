@@ -1,0 +1,1201 @@
+//! The partition-native problem layer: ship dataset **shards**, not
+//! rebuild recipes.
+//!
+//! The paper's premise is that no single machine holds the full dataset
+//! (§1, §4.2): each of the `m` machines stores only its random partition,
+//! O(n/m) elements.  The process/tcp backends originally shipped a flat
+//! problem *spec* and had every worker regenerate the entire dataset
+//! before restricting to its part — O(n) memory per worker, which caps
+//! the `dist` layer at what one host can regenerate.  This module is the
+//! API that removes that cap:
+//!
+//! * [`PartitionPayload`] — a serde-stable shard of one oracle's dataset:
+//!   the global ids of the shipped elements plus their renumbered,
+//!   worker-locally-dense data (`offsets`/`items` CSR for the coverage
+//!   family, row-major `f32` for vectors, benefit columns for facility
+//!   location, weights for modular).
+//! * [`Partitionable`] — the extraction half, implemented by every CPU
+//!   oracle: [`Partitionable::extract_partition`] slices the payload for
+//!   an arbitrary element list (a leaf partition at Init, a shipped
+//!   solution at Ship).
+//! * [`PartitionOracle`] — the rebuild half: an [`Oracle`] facade a worker
+//!   constructs from a payload.  Internally the data is renumbered into a
+//!   dense local ground set `0..len_local` with an id map back to global
+//!   [`ElemId`]s; **externally the facade speaks global ids** — `n()` is
+//!   the global ground-set size and every gain/commit/`elem_bytes` call
+//!   translates through the id map.  Keeping the algorithm layer in
+//!   global-id space is what preserves bit-parity with the thread
+//!   backend: lazy-greedy tie-breaking, `dedup_candidates`, partition
+//!   matroid group assignment and §6.4 added-element draws all key on id
+//!   *values*, so renumbering must never leak past the data access.
+//!
+//! A worker's shard grows over the run: child solutions arriving for an
+//! accumulation step carry their own extracted payloads
+//! ([`crate::dist::node::ChildMsg::data`]), which the parent
+//! [`PartitionOracle::ingest`]s before running GREEDY on the union — the
+//! exact data movement §4.2's communication complexity accounts for.
+
+use super::{GainState, Oracle};
+use crate::util::bitset::BitSet;
+use crate::ElemId;
+use serde_json::{json, Value};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One oracle family's sliced dataset, renumbered to the shard's local
+/// dense id space (element `i` of the payload is local id `i`; its global
+/// id is `PartitionPayload::elems[i]`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PartitionData {
+    /// Coverage family (k-cover, weighted cover, k-dominating-set):
+    /// per-element item lists in CSR form over a fixed *global* item
+    /// universe (for k-dominating-set the "items" are global vertex ids
+    /// and `universe` is the global vertex count).
+    Cover {
+        /// Size of the global item universe (bitmap width of a state).
+        universe: usize,
+        /// CSR offsets, `len_local + 1` entries.
+        offsets: Vec<u64>,
+        /// Concatenated sorted item lists.
+        items: Vec<u32>,
+        /// `(item, weight)` pairs for every item appearing in `items`
+        /// (weighted cover); `None` = unit weights.
+        weights: Option<Vec<(u32, f64)>>,
+        /// Each element additionally covers its own global id
+        /// (closed-neighbourhood k-dominating-set).
+        self_cover: bool,
+        /// Rebuild under the "k-dominating-set" name (reporting only —
+        /// the gain math is shared with k-cover).
+        dominating: bool,
+    },
+    /// Dense vectors (k-medoid): row-major `f32`, one row per element.
+    Vectors {
+        /// Row dimensionality.
+        dim: usize,
+        /// `len_local * dim` floats.
+        flat: Vec<f32>,
+    },
+    /// Facility location: one benefit column per element.
+    Facility {
+        /// Number of clients (rows of the global benefit matrix).
+        clients: usize,
+        /// `len_local * clients` benefits, element-major
+        /// (`columns[e * clients + c]`).
+        columns: Vec<f64>,
+    },
+    /// Modular: one weight per element.
+    Modular {
+        /// `len_local` weights.
+        weights: Vec<f64>,
+    },
+}
+
+/// A serde-stable shard of a problem: which global elements it holds and
+/// their renumbered data.  This is what crosses the wire in
+/// `InitPart` frames and inside shipped child solutions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionPayload {
+    /// Global ground-set size `n` (the id-space bound; [`Oracle::n`] of
+    /// the rebuilt facade).
+    pub n_global: usize,
+    /// Global ids of the shipped elements, in shard order — the id map
+    /// back from the local dense ground set.
+    pub elems: Vec<ElemId>,
+    /// The renumbered per-family data.
+    pub data: PartitionData,
+}
+
+impl PartitionPayload {
+    /// Number of elements in this shard.
+    pub fn len(&self) -> usize {
+        self.elems.len()
+    }
+
+    /// True when the shard ships no elements.
+    pub fn is_empty(&self) -> bool {
+        self.elems.is_empty()
+    }
+
+    /// Serialized size of this payload in wire bytes (the JSON document
+    /// as framed by `dist::wire`) — what the shipping benchmarks and the
+    /// payload-∝-shard tests measure.
+    pub fn wire_bytes(&self) -> usize {
+        serde_json::to_vec(&self.to_value()).map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Encode as a JSON value (embedded in `init_part` frames and in
+    /// `ChildMsg.data`).  The schema is part of the wire protocol:
+    /// changing it requires a `PROTOCOL_VERSION` bump.
+    pub fn to_value(&self) -> Value {
+        let data = match &self.data {
+            PartitionData::Cover { universe, offsets, items, weights, self_cover, dominating } => {
+                let mut v = json!({
+                    "family": "cover",
+                    "universe": universe,
+                    "offsets": offsets,
+                    "items": items,
+                    "self_cover": self_cover,
+                    "dominating": dominating,
+                });
+                if let Some(w) = weights {
+                    v["weights"] =
+                        Value::Array(w.iter().map(|(i, x)| json!([i, x])).collect());
+                }
+                v
+            }
+            PartitionData::Vectors { dim, flat } => json!({
+                "family": "vectors",
+                "dim": dim,
+                "flat": flat.iter().map(|&x| Value::from(x)).collect::<Vec<_>>(),
+            }),
+            PartitionData::Facility { clients, columns } => json!({
+                "family": "facility",
+                "clients": clients,
+                "columns": columns,
+            }),
+            PartitionData::Modular { weights } => json!({
+                "family": "modular",
+                "weights": weights,
+            }),
+        };
+        json!({ "n_global": self.n_global, "elems": self.elems, "data": data })
+    }
+
+    /// Decode from a JSON value; errors are human-readable strings (the
+    /// wire layer wraps them into `DistError::Backend`).
+    pub fn from_value(v: &Value) -> Result<Self, String> {
+        let n_global = field_u64(v, "n_global")? as usize;
+        let elems: Vec<ElemId> = field_arr(v, "elems")?
+            .iter()
+            .map(|e| {
+                e.as_u64()
+                    .map(|x| x as ElemId)
+                    .ok_or_else(|| "payload field 'elems': non-integer element".to_string())
+            })
+            .collect::<Result<_, _>>()?;
+        let d = v.get("data").ok_or("payload missing field 'data'")?;
+        let family = d
+            .get("family")
+            .and_then(Value::as_str)
+            .ok_or("payload data missing 'family'")?;
+        let data = match family {
+            "cover" => PartitionData::Cover {
+                universe: field_u64(d, "universe")? as usize,
+                offsets: field_arr(d, "offsets")?
+                    .iter()
+                    .map(|x| x.as_u64().ok_or_else(|| "non-integer offset".to_string()))
+                    .collect::<Result<_, _>>()?,
+                items: field_arr(d, "items")?
+                    .iter()
+                    .map(|x| {
+                        x.as_u64()
+                            .map(|i| i as u32)
+                            .ok_or_else(|| "non-integer item".to_string())
+                    })
+                    .collect::<Result<_, _>>()?,
+                weights: match d.get("weights") {
+                    None | Some(Value::Null) => None,
+                    Some(w) => Some(
+                        w.as_array()
+                            .ok_or("payload 'weights' is not an array")?
+                            .iter()
+                            .map(|pair| {
+                                let a = pair.as_array().filter(|a| a.len() == 2);
+                                let a = a.ok_or("weight entry is not an [item, w] pair")?;
+                                let item = a[0]
+                                    .as_u64()
+                                    .ok_or("weight item is not an integer")?
+                                    as u32;
+                                let w =
+                                    a[1].as_f64().ok_or("weight value is not a number")?;
+                                Ok::<(u32, f64), String>((item, w))
+                            })
+                            .collect::<Result<_, _>>()?,
+                    ),
+                },
+                self_cover: field_bool(d, "self_cover")?,
+                dominating: field_bool(d, "dominating")?,
+            },
+            "vectors" => PartitionData::Vectors {
+                dim: field_u64(d, "dim")? as usize,
+                flat: field_arr(d, "flat")?
+                    .iter()
+                    .map(|x| {
+                        x.as_f64()
+                            .map(|f| f as f32)
+                            .ok_or_else(|| "non-numeric vector entry".to_string())
+                    })
+                    .collect::<Result<_, _>>()?,
+            },
+            "facility" => PartitionData::Facility {
+                clients: field_u64(d, "clients")? as usize,
+                columns: field_arr(d, "columns")?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or_else(|| "non-numeric benefit".to_string()))
+                    .collect::<Result<_, _>>()?,
+            },
+            "modular" => PartitionData::Modular {
+                weights: field_arr(d, "weights")?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or_else(|| "non-numeric weight".to_string()))
+                    .collect::<Result<_, _>>()?,
+            },
+            other => return Err(format!("unknown payload family '{other}'")),
+        };
+        let payload = Self { n_global, elems, data };
+        payload.validate()?;
+        Ok(payload)
+    }
+
+    /// Structural consistency: id bounds, no duplicate elements, shape
+    /// agreement between `elems` and the data arrays.  Both rebuild paths
+    /// ([`PartitionOracle::from_payload`] and [`PartitionOracle::ingest`])
+    /// run this, so a malformed frame fails the protocol instead of
+    /// silently corrupting a shard.
+    fn validate(&self) -> Result<(), String> {
+        let n_local = self.elems.len();
+        let mut seen = std::collections::HashSet::with_capacity(n_local);
+        for &e in &self.elems {
+            if (e as usize) >= self.n_global {
+                return Err(format!(
+                    "payload element {e} exceeds the global ground set ({})",
+                    self.n_global
+                ));
+            }
+            if !seen.insert(e) {
+                return Err(format!("payload ships element {e} twice"));
+            }
+        }
+        match &self.data {
+            PartitionData::Cover { offsets, items, universe, weights, .. } => {
+                if offsets.len() != n_local + 1 {
+                    return Err(format!(
+                        "cover payload: {} offsets for {n_local} elements",
+                        offsets.len()
+                    ));
+                }
+                if offsets.first().copied().unwrap_or(1) != 0
+                    || offsets.last().copied().unwrap_or(0) as usize != items.len()
+                    || offsets.windows(2).any(|w| w[0] > w[1])
+                {
+                    return Err("cover payload: malformed CSR offsets".into());
+                }
+                if items.iter().any(|&i| (i as usize) >= *universe) {
+                    return Err("cover payload: item outside the universe".into());
+                }
+                if let Some(w) = weights {
+                    // Every item a gain query can touch must have a
+                    // shipped weight, or the rebuilt state would panic
+                    // mid-scan instead of failing the handshake.
+                    let known: std::collections::HashSet<u32> =
+                        w.iter().map(|&(i, _)| i).collect();
+                    if let Some(&i) = items.iter().find(|i| !known.contains(*i)) {
+                        return Err(format!("cover payload: item {i} has no weight"));
+                    }
+                }
+            }
+            PartitionData::Vectors { dim, flat } => {
+                if *dim == 0 || flat.len() != n_local * dim {
+                    return Err(format!(
+                        "vector payload: {} floats for {n_local} rows of dim {dim}",
+                        flat.len()
+                    ));
+                }
+            }
+            PartitionData::Facility { clients, columns } => {
+                if columns.len() != n_local * clients {
+                    return Err(format!(
+                        "facility payload: {} benefits for {n_local} columns of {clients} clients",
+                        columns.len()
+                    ));
+                }
+            }
+            PartitionData::Modular { weights } => {
+                if weights.len() != n_local {
+                    return Err(format!(
+                        "modular payload: {} weights for {n_local} elements",
+                        weights.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn field_u64(v: &Value, key: &str) -> Result<u64, String> {
+    v.get(key)
+        .and_then(Value::as_u64)
+        .ok_or_else(|| format!("payload field '{key}' missing or not a u64"))
+}
+
+fn field_bool(v: &Value, key: &str) -> Result<bool, String> {
+    v.get(key)
+        .and_then(Value::as_bool)
+        .ok_or_else(|| format!("payload field '{key}' missing or not a bool"))
+}
+
+fn field_arr<'a>(v: &'a Value, key: &str) -> Result<&'a [Value], String> {
+    v.get(key)
+        .and_then(Value::as_array)
+        .map(|a| a.as_slice())
+        .ok_or_else(|| format!("payload field '{key}' missing or not an array"))
+}
+
+/// Slice the `(item, weight)` pairs a weighted cover shard must carry:
+/// the sorted, deduplicated items present in `items`, each with its
+/// weight.  Shared by the coordinator-side [`super::WeightedCover`]
+/// extraction and the worker-side facade re-extraction — the two must
+/// emit identical payloads or re-shipped solutions would not round-trip.
+pub(crate) fn slice_weights(
+    items: &[u32],
+    weight_of: impl Fn(u32) -> f64,
+) -> Vec<(u32, f64)> {
+    let mut present: Vec<u32> = items.to_vec();
+    present.sort_unstable();
+    present.dedup();
+    present.into_iter().map(|i| (i, weight_of(i))).collect()
+}
+
+/// The extraction half of partition shipping, implemented by every CPU
+/// oracle.  Reached from a `dyn Oracle` through
+/// [`Oracle::partitionable`]; oracles that cannot slice their dataset
+/// (the PJRT-backed ones, whose data lives in AOT device buffers) simply
+/// keep the default `None` and fall back to spec shipping.
+pub trait Partitionable {
+    /// Slice a serde-stable shard holding exactly `elems` (global ids),
+    /// renumbered into the shard-local dense id space.
+    fn extract_partition(&self, elems: &[ElemId]) -> PartitionPayload;
+
+    /// True when this objective evaluates against the whole dataset
+    /// unless restricted to a view — under partition shipping such an
+    /// objective is exact only with machine-local evaluation
+    /// (`local_view`, the §6.4 k-medoid scheme; Mirzasoleiman et al.,
+    /// Thm 10 justifies the restriction).
+    fn needs_local_view(&self) -> bool {
+        false
+    }
+}
+
+// ---- the worker-side rebuild: a global-id facade over shard data -------
+
+/// Per-family shard storage inside a [`PartitionOracle`], renumbered to
+/// local dense ids.
+enum LocalData {
+    Cover {
+        offsets: Vec<u64>,
+        items: Vec<u32>,
+        universe: usize,
+        weights: Option<HashMap<u32, f64>>,
+        self_cover: bool,
+        dominating: bool,
+    },
+    /// Master copy of the rows plus the rebuilt oracle (replaced after
+    /// every ingest; norms re-derive deterministically from the rows).
+    Medoid { dim: usize, flat: Vec<f32>, oracle: super::KMedoid },
+    Facility { clients: usize, columns: Vec<f64> },
+    Modular { weights: Vec<f64> },
+}
+
+/// An [`Oracle`] over a worker's shard.
+///
+/// Data is stored renumbered (local dense ids `0..len_local`), but the
+/// facade speaks **global** ids: `n()` is the global ground-set size and
+/// every state call translates candidate/view ids through the internal
+/// map.  A gain query for an element outside the shard is a coordinator
+/// bug (the protocol ships every element a machine will ever evaluate)
+/// and panics with a descriptive message rather than returning a wrong
+/// number.
+pub struct PartitionOracle {
+    n_global: usize,
+    to_global: Vec<ElemId>,
+    to_local: HashMap<ElemId, u32>,
+    data: LocalData,
+}
+
+impl PartitionOracle {
+    /// Rebuild from a shipped payload.
+    pub fn from_payload(payload: &PartitionPayload) -> Result<Self, String> {
+        payload.validate()?;
+        let mut to_local = HashMap::with_capacity(payload.elems.len());
+        for (local, &global) in payload.elems.iter().enumerate() {
+            if to_local.insert(global, local as u32).is_some() {
+                return Err(format!("payload ships element {global} twice"));
+            }
+        }
+        let data = match &payload.data {
+            PartitionData::Cover { universe, offsets, items, weights, self_cover, dominating } => {
+                LocalData::Cover {
+                    offsets: offsets.clone(),
+                    items: items.clone(),
+                    universe: *universe,
+                    weights: weights.as_ref().map(|w| w.iter().copied().collect()),
+                    self_cover: *self_cover,
+                    dominating: *dominating,
+                }
+            }
+            PartitionData::Vectors { dim, flat } => LocalData::Medoid {
+                dim: *dim,
+                flat: flat.clone(),
+                oracle: super::KMedoid::new(Arc::new(
+                    crate::data::vectors::VectorSet::from_flat(flat.clone(), *dim)
+                        .map_err(|e| e.to_string())?,
+                )),
+            },
+            PartitionData::Facility { clients, columns } => {
+                LocalData::Facility { clients: *clients, columns: columns.clone() }
+            }
+            PartitionData::Modular { weights } => {
+                LocalData::Modular { weights: weights.clone() }
+            }
+        };
+        Ok(Self { n_global: payload.n_global, to_global: payload.elems.clone(), to_local, data })
+    }
+
+    /// Number of elements currently held (initial shard + everything
+    /// ingested since).
+    pub fn len_local(&self) -> usize {
+        self.to_global.len()
+    }
+
+    /// Whether the shard currently holds element `e` (global id) — the
+    /// worker session pre-validates incoming partitions against this so a
+    /// coordinator bug surfaces as a protocol `Fail`, not a worker panic.
+    pub fn holds(&self, e: ElemId) -> bool {
+        self.to_local.contains_key(&e)
+    }
+
+    /// Whether this facade's objective is exact only under machine-local
+    /// evaluation views (see [`Partitionable::needs_local_view`]).
+    pub fn needs_local_view(&self) -> bool {
+        matches!(self.data, LocalData::Medoid { .. })
+    }
+
+    /// Absorb another shard (a shipped child solution's data): elements
+    /// already held are skipped, new ones are appended to the local dense
+    /// ground set.
+    pub fn ingest(&mut self, payload: &PartitionPayload) -> Result<(), String> {
+        payload.validate()?;
+        if payload.n_global != self.n_global {
+            return Err(format!(
+                "ingest: payload describes a ground set of {} elements, this shard holds {}",
+                payload.n_global, self.n_global
+            ));
+        }
+        let fresh: Vec<usize> = payload
+            .elems
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| !self.to_local.contains_key(g))
+            .map(|(i, _)| i)
+            .collect();
+        match (&mut self.data, &payload.data) {
+            (
+                LocalData::Cover { offsets, items, universe, weights, self_cover, dominating },
+                PartitionData::Cover {
+                    universe: u2,
+                    offsets: o2,
+                    items: i2,
+                    weights: w2,
+                    self_cover: s2,
+                    dominating: d2,
+                },
+            ) => {
+                if universe != u2 {
+                    return Err(format!(
+                        "ingest: item universe mismatch ({universe} vs {u2})"
+                    ));
+                }
+                // Weight presence and the domination flags are part of the
+                // objective's identity: a mismatch means the peer rebuilt a
+                // *different* function, and absorbing its data would defer
+                // the failure to a mid-scan panic instead of a protocol
+                // Fail here.
+                if weights.is_some() != w2.is_some()
+                    || self_cover != s2
+                    || dominating != d2
+                {
+                    return Err(
+                        "ingest: cover payload describes a different objective \
+                         (weights / self-cover / domination flags disagree)"
+                            .into(),
+                    );
+                }
+                if let (Some(w), Some(incoming)) = (weights.as_mut(), w2.as_ref()) {
+                    for &(item, x) in incoming {
+                        w.insert(item, x);
+                    }
+                }
+                for &i in &fresh {
+                    items.extend_from_slice(
+                        &i2[o2[i] as usize..o2[i + 1] as usize],
+                    );
+                    offsets.push(items.len() as u64);
+                }
+            }
+            (LocalData::Medoid { dim, flat, oracle }, PartitionData::Vectors { dim: d2, flat: f2 }) => {
+                if dim != d2 {
+                    return Err(format!("ingest: vector dim mismatch ({dim} vs {d2})"));
+                }
+                for &i in &fresh {
+                    flat.extend_from_slice(&f2[i * *dim..(i + 1) * *dim]);
+                }
+                if !fresh.is_empty() {
+                    *oracle = super::KMedoid::new(Arc::new(
+                        crate::data::vectors::VectorSet::from_flat(flat.clone(), *dim)
+                            .map_err(|e| e.to_string())?,
+                    ));
+                }
+            }
+            (
+                LocalData::Facility { clients, columns },
+                PartitionData::Facility { clients: c2, columns: x2 },
+            ) => {
+                if clients != c2 {
+                    return Err(format!(
+                        "ingest: client-count mismatch ({clients} vs {c2})"
+                    ));
+                }
+                for &i in &fresh {
+                    columns.extend_from_slice(&x2[i * *clients..(i + 1) * *clients]);
+                }
+            }
+            (LocalData::Modular { weights }, PartitionData::Modular { weights: w2 }) => {
+                for &i in &fresh {
+                    weights.push(w2[i]);
+                }
+            }
+            _ => return Err("ingest: payload family does not match this shard".into()),
+        }
+        for i in fresh {
+            let g = payload.elems[i];
+            self.to_local.insert(g, self.to_global.len() as u32);
+            self.to_global.push(g);
+        }
+        Ok(())
+    }
+
+    /// Extract a payload for `elems` (global ids) from the held shard —
+    /// how a worker packages its solution's data for shipping to the
+    /// parent.  Every element must be held locally.
+    pub fn extract(&self, elems: &[ElemId]) -> Result<PartitionPayload, String> {
+        let locals: Vec<u32> = elems
+            .iter()
+            .map(|e| {
+                self.to_local.get(e).copied().ok_or_else(|| {
+                    format!("extract: element {e} is not in this worker's shard")
+                })
+            })
+            .collect::<Result<_, _>>()?;
+        let data = match &self.data {
+            LocalData::Cover { offsets, items, universe, weights, self_cover, dominating } => {
+                let mut o = Vec::with_capacity(locals.len() + 1);
+                o.push(0u64);
+                let mut out_items = Vec::new();
+                for &l in &locals {
+                    out_items.extend_from_slice(
+                        &items[offsets[l as usize] as usize..offsets[l as usize + 1] as usize],
+                    );
+                    o.push(out_items.len() as u64);
+                }
+                let w = weights.as_ref().map(|w| slice_weights(&out_items, |i| w[&i]));
+                PartitionData::Cover {
+                    universe: *universe,
+                    offsets: o,
+                    items: out_items,
+                    weights: w,
+                    self_cover: *self_cover,
+                    dominating: *dominating,
+                }
+            }
+            LocalData::Medoid { dim, flat, .. } => {
+                let mut out = Vec::with_capacity(locals.len() * dim);
+                for &l in &locals {
+                    out.extend_from_slice(&flat[l as usize * dim..(l as usize + 1) * dim]);
+                }
+                PartitionData::Vectors { dim: *dim, flat: out }
+            }
+            LocalData::Facility { clients, columns } => {
+                let mut out = Vec::with_capacity(locals.len() * clients);
+                for &l in &locals {
+                    out.extend_from_slice(
+                        &columns[l as usize * clients..(l as usize + 1) * clients],
+                    );
+                }
+                PartitionData::Facility { clients: *clients, columns: out }
+            }
+            LocalData::Modular { weights } => PartitionData::Modular {
+                weights: locals.iter().map(|&l| weights[l as usize]).collect(),
+            },
+        };
+        Ok(PartitionPayload { n_global: self.n_global, elems: elems.to_vec(), data })
+    }
+
+    #[inline]
+    fn local(&self, e: ElemId) -> u32 {
+        match self.to_local.get(&e) {
+            Some(&l) => l,
+            None => panic!(
+                "element {e} is not in this worker's shard of {} elements — \
+                 the coordinator failed to ship data the node program needs \
+                 (partition-shipping protocol bug)",
+                self.to_global.len()
+            ),
+        }
+    }
+
+    fn cover_set(&self, l: u32) -> &[u32] {
+        match &self.data {
+            LocalData::Cover { offsets, items, .. } => {
+                &items[offsets[l as usize] as usize..offsets[l as usize + 1] as usize]
+            }
+            _ => unreachable!("cover_set on a non-cover shard"),
+        }
+    }
+}
+
+impl Oracle for PartitionOracle {
+    fn n(&self) -> usize {
+        self.n_global
+    }
+
+    fn name(&self) -> &'static str {
+        match &self.data {
+            LocalData::Cover { dominating: true, .. } => "k-dominating-set",
+            LocalData::Cover { weights: Some(_), .. } => "weighted-cover",
+            LocalData::Cover { .. } => "k-cover",
+            LocalData::Medoid { .. } => "k-medoid",
+            LocalData::Facility { .. } => "facility-location",
+            LocalData::Modular { .. } => "modular",
+        }
+    }
+
+    fn new_state<'a>(&'a self, view: Option<&[ElemId]>) -> Box<dyn GainState + 'a> {
+        match &self.data {
+            LocalData::Cover { universe, weights, self_cover, .. } => {
+                // Coverage ignores the view (items live in a global
+                // universe); gain math mirrors KCover / WeightedCover /
+                // KDominatingSet states exactly.
+                Box::new(CoverFacadeState {
+                    oracle: self,
+                    weights: weights.as_ref(),
+                    self_cover: *self_cover,
+                    covered: BitSet::new(*universe),
+                    covered_count: 0,
+                    value: 0.0,
+                    solution: Vec::new(),
+                })
+            }
+            LocalData::Medoid { oracle, .. } => {
+                let view = view.unwrap_or_else(|| {
+                    panic!(
+                        "the k-medoid partition oracle needs an explicit evaluation \
+                         view (run with local_view; a partition-shipped worker \
+                         cannot evaluate against the full dataset)"
+                    )
+                });
+                let local_view: Vec<ElemId> =
+                    view.iter().map(|&e| self.local(e) as ElemId).collect();
+                Box::new(TranslatedState {
+                    oracle: self,
+                    inner: oracle.new_state(Some(&local_view)),
+                    solution: Vec::new(),
+                })
+            }
+            LocalData::Facility { clients, columns } => Box::new(FacilityFacadeState {
+                oracle: self,
+                clients: *clients,
+                columns,
+                best: vec![0.0; *clients],
+                solution: Vec::new(),
+            }),
+            LocalData::Modular { weights } => Box::new(ModularFacadeState {
+                oracle: self,
+                weights,
+                value: 0.0,
+                solution: Vec::new(),
+            }),
+        }
+    }
+
+    fn elem_bytes(&self, e: ElemId) -> usize {
+        let l = self.local(e);
+        match &self.data {
+            // Identical formulas to ItemsetCollection::elem_bytes /
+            // CsrGraph::elem_bytes — the memory-charge sequences must
+            // match the thread backend byte for byte.
+            LocalData::Cover { offsets, .. } => {
+                8 + 4 * (offsets[l as usize + 1] - offsets[l as usize]) as usize
+            }
+            LocalData::Medoid { dim, .. } => 8 + 4 * dim,
+            LocalData::Facility { clients, .. } => 8 + 8 * clients,
+            LocalData::Modular { .. } => 16,
+        }
+    }
+
+    fn partitionable(&self) -> Option<&dyn Partitionable> {
+        Some(self)
+    }
+}
+
+impl Partitionable for PartitionOracle {
+    fn extract_partition(&self, elems: &[ElemId]) -> PartitionPayload {
+        // Facade extraction is re-slicing the held shard; unknown
+        // elements are a protocol bug, reported like a gain on one.
+        self.extract(elems).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    fn needs_local_view(&self) -> bool {
+        self.needs_local_view()
+    }
+}
+
+/// Coverage-family facade state: the union of KCover / WeightedCover /
+/// KDominatingSet state machines, keyed on global candidate ids.
+struct CoverFacadeState<'a> {
+    oracle: &'a PartitionOracle,
+    weights: Option<&'a HashMap<u32, f64>>,
+    self_cover: bool,
+    covered: BitSet,
+    covered_count: usize,
+    value: f64,
+    solution: Vec<ElemId>,
+}
+
+impl GainState for CoverFacadeState<'_> {
+    fn value(&self) -> f64 {
+        match self.weights {
+            Some(_) => self.value,
+            None => self.covered_count as f64,
+        }
+    }
+
+    #[inline]
+    fn gain(&self, e: ElemId) -> f64 {
+        let set = self.oracle.cover_set(self.oracle.local(e));
+        match self.weights {
+            Some(w) => set
+                .iter()
+                .filter(|&&i| !self.covered.contains(i as usize))
+                .map(|&i| w[&i])
+                .sum(),
+            None => {
+                let mut g = self.covered.union_gain_sparse(set);
+                if self.self_cover {
+                    g += !self.covered.contains(e as usize) as usize;
+                }
+                g as f64
+            }
+        }
+    }
+
+    fn commit(&mut self, e: ElemId) {
+        let l = self.oracle.local(e);
+        match self.weights {
+            Some(w) => {
+                for &i in self.oracle.cover_set(l) {
+                    if self.covered.insert(i as usize) {
+                        self.value += w[&i];
+                    }
+                }
+            }
+            None => {
+                self.covered_count += self.covered.insert_sparse(self.oracle.cover_set(l));
+                if self.self_cover {
+                    self.covered_count += self.covered.insert(e as usize) as usize;
+                }
+            }
+        }
+        self.solution.push(e);
+    }
+
+    fn solution(&self) -> &[ElemId] {
+        &self.solution
+    }
+
+    fn call_cost(&self, e: ElemId) -> u64 {
+        self.oracle.cover_set(self.oracle.local(e)).len() as u64
+    }
+}
+
+/// k-medoid facade state: candidates and the view arrive as global ids,
+/// the inner tiled-kernel state runs on shard-local ids.
+struct TranslatedState<'a> {
+    oracle: &'a PartitionOracle,
+    inner: Box<dyn GainState + 'a>,
+    solution: Vec<ElemId>,
+}
+
+impl GainState for TranslatedState<'_> {
+    fn value(&self) -> f64 {
+        self.inner.value()
+    }
+
+    fn gain(&self, e: ElemId) -> f64 {
+        self.inner.gain(self.oracle.local(e) as ElemId)
+    }
+
+    fn gain_batch(&self, es: &[ElemId], out: &mut Vec<f64>) {
+        let locals: Vec<ElemId> =
+            es.iter().map(|&e| self.oracle.local(e) as ElemId).collect();
+        self.inner.gain_batch(&locals, out);
+    }
+
+    fn commit(&mut self, e: ElemId) {
+        self.inner.commit(self.oracle.local(e) as ElemId);
+        self.solution.push(e);
+    }
+
+    fn solution(&self) -> &[ElemId] {
+        &self.solution
+    }
+
+    fn call_cost(&self, e: ElemId) -> u64 {
+        self.inner.call_cost(self.oracle.local(e) as ElemId)
+    }
+
+    fn parallel_scan(&self) -> bool {
+        self.inner.parallel_scan()
+    }
+}
+
+/// Facility-location facade state (mirrors `facility::FacState`).
+struct FacilityFacadeState<'a> {
+    oracle: &'a PartitionOracle,
+    clients: usize,
+    columns: &'a [f64],
+    best: Vec<f64>,
+    solution: Vec<ElemId>,
+}
+
+impl FacilityFacadeState<'_> {
+    #[inline]
+    fn column(&self, e: ElemId) -> &[f64] {
+        let l = self.oracle.local(e) as usize;
+        &self.columns[l * self.clients..(l + 1) * self.clients]
+    }
+}
+
+impl GainState for FacilityFacadeState<'_> {
+    fn value(&self) -> f64 {
+        self.best.iter().sum()
+    }
+
+    fn gain(&self, e: ElemId) -> f64 {
+        let col = self.column(e);
+        let mut acc = 0.0;
+        for (c, &b) in self.best.iter().enumerate() {
+            if col[c] > b {
+                acc += col[c] - b;
+            }
+        }
+        acc
+    }
+
+    fn commit(&mut self, e: ElemId) {
+        let l = self.oracle.local(e) as usize;
+        for (c, b) in self.best.iter_mut().enumerate() {
+            let w = self.columns[l * self.clients + c];
+            if w > *b {
+                *b = w;
+            }
+        }
+        self.solution.push(e);
+    }
+
+    fn solution(&self) -> &[ElemId] {
+        &self.solution
+    }
+
+    fn call_cost(&self, _e: ElemId) -> u64 {
+        self.clients as u64
+    }
+}
+
+/// Modular facade state (mirrors `modular::ModularState`).
+struct ModularFacadeState<'a> {
+    oracle: &'a PartitionOracle,
+    weights: &'a [f64],
+    value: f64,
+    solution: Vec<ElemId>,
+}
+
+impl GainState for ModularFacadeState<'_> {
+    fn value(&self) -> f64 {
+        self.value
+    }
+
+    fn gain(&self, e: ElemId) -> f64 {
+        if self.solution.contains(&e) {
+            0.0
+        } else {
+            self.weights[self.oracle.local(e) as usize]
+        }
+    }
+
+    fn commit(&mut self, e: ElemId) {
+        if !self.solution.contains(&e) {
+            self.value += self.weights[self.oracle.local(e) as usize];
+            self.solution.push(e);
+        }
+    }
+
+    fn solution(&self) -> &[ElemId] {
+        &self.solution
+    }
+
+    fn call_cost(&self, _e: ElemId) -> u64 {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::{
+        FacilityLocation, KCover, KDominatingSet, KMedoid, Modular, WeightedCover,
+    };
+    use crate::util::rng::Rng;
+
+    /// extract → JSON round-trip → rebuild, then compare gains, commits
+    /// and values against the original oracle over the shipped elements.
+    /// `view` restricts evaluation on *both* sides (the k-medoid local
+    /// scheme); gains must agree to the last bit.
+    fn roundtrip_parity(oracle: &dyn Oracle, elems: &[ElemId], local_view: bool, seed: u64) {
+        let p = oracle.partitionable().expect("oracle must be partitionable");
+        let payload = p.extract_partition(elems);
+        assert_eq!(payload.len(), elems.len());
+        assert_eq!(payload.n_global, oracle.n());
+
+        // Serde stability: the JSON document rebuilds the same payload.
+        let reparsed = PartitionPayload::from_value(&payload.to_value()).unwrap();
+        assert_eq!(reparsed, payload);
+
+        let facade = PartitionOracle::from_payload(&reparsed).unwrap();
+        assert_eq!(facade.n(), oracle.n(), "facade speaks the global id space");
+        assert_eq!(facade.len_local(), elems.len());
+        assert_eq!(facade.name(), oracle.name());
+
+        let view = local_view.then_some(elems);
+        let mut a = oracle.new_state(view);
+        let mut b = facade.new_state(view);
+        let mut order: Vec<ElemId> = elems.to_vec();
+        Rng::new(seed).shuffle(&mut order);
+        for (round, &e) in order.iter().enumerate() {
+            for &q in &order {
+                assert_eq!(
+                    a.gain(q).to_bits(),
+                    b.gain(q).to_bits(),
+                    "{}: gain({q}) diverged at round {round}",
+                    oracle.name()
+                );
+                assert_eq!(a.call_cost(q), b.call_cost(q), "call_cost({q})");
+            }
+            let mut ga = Vec::new();
+            let mut gb = Vec::new();
+            a.gain_batch(&order, &mut ga);
+            b.gain_batch(&order, &mut gb);
+            let bits = |v: &[f64]| v.iter().map(|g| g.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&ga), bits(&gb), "{}: gain_batch", oracle.name());
+            if round < 4 {
+                a.commit(e);
+                b.commit(e);
+                assert_eq!(
+                    a.value().to_bits(),
+                    b.value().to_bits(),
+                    "{}: value after commit {e}",
+                    oracle.name()
+                );
+                assert_eq!(a.solution(), b.solution());
+            }
+        }
+        for &e in elems {
+            assert_eq!(oracle.elem_bytes(e), facade.elem_bytes(e), "elem_bytes({e})");
+        }
+    }
+
+    fn cover_oracle(n: usize) -> KCover {
+        KCover::new(Arc::new(crate::data::gen::transactions(
+            crate::data::gen::TransactionParams {
+                num_sets: n,
+                num_items: n / 2,
+                mean_size: 6.0,
+                zipf_s: 0.9,
+            },
+            7,
+        )))
+    }
+
+    fn shard(n: usize, take: usize, seed: u64) -> Vec<ElemId> {
+        let mut ids: Vec<ElemId> = (0..n as ElemId).collect();
+        Rng::new(seed).shuffle(&mut ids);
+        ids.truncate(take);
+        ids
+    }
+
+    #[test]
+    fn kcover_partition_roundtrip_parity() {
+        let o = cover_oracle(200);
+        roundtrip_parity(&o, &shard(200, 60, 1), false, 11);
+    }
+
+    #[test]
+    fn weighted_cover_partition_roundtrip_parity() {
+        let data = Arc::new(crate::data::gen::transactions(
+            crate::data::gen::TransactionParams {
+                num_sets: 150,
+                num_items: 80,
+                mean_size: 5.0,
+                zipf_s: 1.0,
+            },
+            3,
+        ));
+        let o = WeightedCover::zipf(data, 0.8);
+        roundtrip_parity(&o, &shard(150, 50, 2), false, 12);
+    }
+
+    #[test]
+    fn kdominate_partition_roundtrip_parity_both_variants() {
+        let g = Arc::new(crate::data::gen::barabasi_albert(300, 3, 5));
+        roundtrip_parity(&KDominatingSet::new(g.clone()), &shard(300, 80, 3), false, 13);
+        roundtrip_parity(&KDominatingSet::closed(g), &shard(300, 80, 4), false, 14);
+    }
+
+    #[test]
+    fn kmedoid_partition_roundtrip_parity_under_local_view() {
+        let (vs, _) = crate::data::gen::gaussian_mixture(
+            crate::data::gen::GaussianParams { n: 120, dim: 9, classes: 4, noise: 0.4 },
+            6,
+        );
+        let o = KMedoid::new(Arc::new(vs));
+        assert!(o.partitionable().unwrap().needs_local_view());
+        roundtrip_parity(&o, &shard(120, 40, 5), true, 15);
+    }
+
+    #[test]
+    fn facility_partition_roundtrip_parity() {
+        let o = FacilityLocation::random(12, 60, 9);
+        roundtrip_parity(&o, &shard(60, 20, 6), false, 16);
+    }
+
+    #[test]
+    fn modular_partition_roundtrip_parity() {
+        let o = Modular::random(80, 4);
+        roundtrip_parity(&o, &shard(80, 30, 7), false, 17);
+    }
+
+    #[test]
+    fn payload_wire_bytes_scale_with_the_shard_not_the_dataset() {
+        // The whole point of partition shipping: a worker's Init payload
+        // is ≈ 1/m of the full dataset's footprint, not O(n).
+        let n = 600;
+        let m = 4;
+        let o = cover_oracle(n);
+        let p = o.partitionable().unwrap();
+        let full = p.extract_partition(&(0..n as ElemId).collect::<Vec<_>>()).wire_bytes();
+        let mut ids: Vec<ElemId> = (0..n as ElemId).collect();
+        Rng::new(9).shuffle(&mut ids);
+        let mut total = 0usize;
+        for chunk in ids.chunks(n / m) {
+            let bytes = p.extract_partition(chunk).wire_bytes();
+            assert!(
+                bytes < full * 2 / m,
+                "one shard of {m} weighs {bytes} of {full} full bytes"
+            );
+            total += bytes;
+        }
+        // Shards tile the dataset: together they carry all the data plus
+        // per-shard envelope overhead.
+        assert!(total >= full * 8 / 10, "shards total {total} vs full {full}");
+    }
+
+    #[test]
+    fn ingest_extends_the_shard_and_extract_reslices_it() {
+        let o = cover_oracle(100);
+        let p = o.partitionable().unwrap();
+        let a: Vec<ElemId> = (0..40).collect();
+        let b: Vec<ElemId> = (30..70).collect(); // overlaps a
+        let mut facade = PartitionOracle::from_payload(&p.extract_partition(&a)).unwrap();
+        facade.ingest(&p.extract_partition(&b)).unwrap();
+        assert_eq!(facade.len_local(), 70, "overlap ingested once");
+        // Gains over the union match the full oracle bit for bit.
+        let sa = o.new_state(None);
+        let sb = facade.new_state(None);
+        for e in 0..70u32 {
+            assert_eq!(sa.gain(e).to_bits(), sb.gain(e).to_bits(), "gain({e})");
+        }
+        // Re-extracting a mixed solution round-trips through a fresh facade.
+        let sol = vec![5, 65, 33];
+        let shipped = facade.extract(&sol).unwrap();
+        let rebuilt = PartitionOracle::from_payload(&shipped).unwrap();
+        let sr = rebuilt.new_state(None);
+        for &e in &sol {
+            assert_eq!(sa.gain(e).to_bits(), sr.gain(e).to_bits());
+        }
+        assert!(facade.extract(&[99]).is_err(), "unknown element refuses to extract");
+    }
+
+    #[test]
+    fn f32_rows_survive_the_json_codec_bit_exactly() {
+        let payload = PartitionPayload {
+            n_global: 4,
+            elems: vec![2, 0],
+            data: PartitionData::Vectors {
+                dim: 3,
+                flat: vec![0.1f32, -2.5e-30, 3.4e38, 1.0 / 3.0, f32::MIN_POSITIVE, 0.0],
+            },
+        };
+        let back = PartitionPayload::from_value(&payload.to_value()).unwrap();
+        match (&payload.data, &back.data) {
+            (PartitionData::Vectors { flat: a, .. }, PartitionData::Vectors { flat: b, .. }) => {
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(a), bits(b));
+            }
+            _ => panic!("family changed in flight"),
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_are_rejected() {
+        let bad = PartitionPayload {
+            n_global: 10,
+            elems: vec![3, 11],
+            data: PartitionData::Modular { weights: vec![1.0, 2.0] },
+        };
+        assert!(bad.validate().is_err(), "element beyond n_global");
+        let short = PartitionPayload {
+            n_global: 10,
+            elems: vec![1, 2],
+            data: PartitionData::Modular { weights: vec![1.0] },
+        };
+        assert!(PartitionOracle::from_payload(&short).is_err());
+        let dup = PartitionPayload {
+            n_global: 10,
+            elems: vec![1, 1],
+            data: PartitionData::Modular { weights: vec![1.0, 1.0] },
+        };
+        assert!(PartitionOracle::from_payload(&dup).is_err(), "duplicate element");
+        // Duplicates are caught by validate(), so ingest refuses them too
+        // (a buggy peer must fail the protocol, not bloat the shard).
+        let mut facade = PartitionOracle::from_payload(&PartitionPayload {
+            n_global: 10,
+            elems: vec![0],
+            data: PartitionData::Modular { weights: vec![1.0] },
+        })
+        .unwrap();
+        assert!(facade.ingest(&dup).is_err(), "ingest rejects duplicate elements");
+        let skewed = PartitionPayload {
+            n_global: 10,
+            elems: vec![2],
+            data: PartitionData::Cover {
+                universe: 9,
+                offsets: vec![1, 2], // CSR must start at 0
+                items: vec![7, 8],
+                weights: None,
+                self_cover: false,
+                dominating: false,
+            },
+        };
+        assert!(skewed.validate().is_err(), "nonzero first offset is malformed");
+    }
+}

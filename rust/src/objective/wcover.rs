@@ -4,6 +4,7 @@
 //! `w ≡ 1` special case, which the tests exploit as an oracle-vs-oracle
 //! consistency check.
 
+use super::problem::{slice_weights, PartitionData, PartitionPayload, Partitionable};
 use super::{GainState, Oracle};
 use crate::data::itemsets::ItemsetCollection;
 use crate::util::bitset::BitSet;
@@ -67,6 +68,32 @@ impl Oracle for WeightedCover {
 
     fn elem_bytes(&self, e: ElemId) -> usize {
         self.data.elem_bytes(e)
+    }
+
+    fn partitionable(&self) -> Option<&dyn Partitionable> {
+        Some(self)
+    }
+}
+
+impl Partitionable for WeightedCover {
+    fn extract_partition(&self, elems: &[ElemId]) -> PartitionPayload {
+        let (offsets, items) = self.data.slice_sets(elems);
+        // Ship weights only for the items the shard's sets actually touch
+        // — the full weight vector is O(universe), defeating the O(n/m)
+        // payload; a shard's gain queries never look past its own items.
+        let weights = slice_weights(&items, |i| self.weights[i as usize]);
+        PartitionPayload {
+            n_global: self.data.num_sets(),
+            elems: elems.to_vec(),
+            data: PartitionData::Cover {
+                universe: self.data.num_items(),
+                offsets,
+                items,
+                weights: Some(weights),
+                self_cover: false,
+                dominating: false,
+            },
+        }
     }
 }
 

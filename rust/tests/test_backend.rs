@@ -15,7 +15,7 @@
 use greedyml::algo::{run_dist, DistConfig, DistOutcome, PartitionScheme};
 use greedyml::coordinator::{build_problem, experiment::build_constraint, problem_spec};
 use greedyml::dist::wire::{read_frame, write_frame, FromWorker, ToWorker, PROTOCOL_VERSION};
-use greedyml::dist::{BackendSpec, DistError};
+use greedyml::dist::{BackendSpec, DistError, ShipSpec};
 use greedyml::tree::AccumulationTree;
 use greedyml::util::config::Config;
 use std::io::{BufRead, BufReader, BufWriter};
@@ -225,6 +225,118 @@ fn oom_surfaces_identically_on_both_backends() {
     assert_eq!(te, pe, "identical error payloads");
 }
 
+// ---- partition shipping (--ship partition) ------------------------------
+
+/// Run one config on the thread backend and on the process backend with
+/// partition shipping — workers receive O(n/m) shards instead of rebuild
+/// recipes, and solutions travel with their data.
+fn run_thread_and_partition(spec_text: &str, cfg: &DistConfig) -> (DistOutcome, DistOutcome) {
+    let parsed = Config::parse(spec_text).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+    let thread_cfg = DistConfig { backend: BackendSpec::Thread, ..cfg.clone() };
+    let process_cfg = DistConfig {
+        backend: BackendSpec::Process,
+        ship: ShipSpec::Partition,
+        problem: Some(problem_spec(&parsed)),
+        worker_bin: Some(worker_bin()),
+        ..cfg.clone()
+    };
+    let a = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &thread_cfg)
+        .expect("thread backend run");
+    let b = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &process_cfg)
+        .expect("partition-shipped process backend run");
+    (a, b)
+}
+
+#[test]
+fn partition_shipping_coverage_tree_is_bit_identical() {
+    let cfg = DistConfig::greedyml(AccumulationTree::new(4, 2), 42);
+    let (thread, part) = run_thread_and_partition(COVERAGE_SPEC, &cfg);
+    assert_parity(&thread, &part);
+    assert!(thread.value > 0.0);
+}
+
+#[test]
+fn partition_shipping_graph_dominating_set_parity_with_added_elements() {
+    // Graph data (adjacency shards over a global vertex universe) plus
+    // §6.4 added elements — the coordinator must ship each machine the
+    // extras its accumulation levels are seeded to draw.
+    let spec = "[dataset]\nkind = ba\nn = 400\nattach = 3\nseed = 6\n[problem]\nk = 10\n";
+    let cfg = DistConfig {
+        added_elements: 24,
+        ..DistConfig::greedyml(AccumulationTree::new(4, 2), 17)
+    };
+    let (thread, part) = run_thread_and_partition(spec, &cfg);
+    assert_parity(&thread, &part);
+    assert!(thread.value > 0.0);
+}
+
+#[test]
+fn partition_shipping_kmedoid_local_view_parity() {
+    // Floats through shard extraction, the JSON wire, the rebuilt local
+    // VectorSet (fresh norms cache) and the tiled gain kernel — still
+    // bit-identical to the thread backend.
+    let spec = "[dataset]\nkind = gaussian\nn = 192\ndim = 12\nclasses = 6\nseed = 4\n\
+                [problem]\nk = 8\n";
+    let cfg = DistConfig {
+        local_view: true,
+        added_elements: 16,
+        ..DistConfig::greedyml(AccumulationTree::new(4, 2), 7)
+    };
+    let (thread, part) = run_thread_and_partition(spec, &cfg);
+    assert_parity(&thread, &part);
+    assert!(thread.value > 0.0);
+}
+
+#[test]
+fn partition_shipping_kmedoid_without_local_view_is_refused() {
+    let spec = "[dataset]\nkind = gaussian\nn = 96\ndim = 8\nclasses = 4\nseed = 4\n\
+                [problem]\nk = 4\n";
+    let parsed = Config::parse(spec).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+    let cfg = DistConfig {
+        backend: BackendSpec::Process,
+        ship: ShipSpec::Partition,
+        problem: Some(problem_spec(&parsed)),
+        worker_bin: Some(worker_bin()),
+        ..DistConfig::greedyml(AccumulationTree::new(2, 2), 1)
+    };
+    match run_dist(problem.oracle.as_ref(), constraint.as_ref(), &cfg).unwrap_err() {
+        DistError::Backend { message } => {
+            assert!(message.contains("local_view") || message.contains("local"), "{message}");
+        }
+        other => panic!("expected backend error, got {other:?}"),
+    }
+}
+
+#[test]
+fn init_shards_weigh_about_one_mth_of_the_full_dataset() {
+    // The acceptance criterion in numbers: replay the run's partition
+    // (RandomTape is deterministic in (n, m, seed)) and compare each
+    // machine's Init shard against the spec-rebuilt footprint — the full
+    // dataset extracted the same way.
+    let parsed = Config::parse(COVERAGE_SPEC).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let n = problem.oracle.n();
+    let m = 4u32;
+    let p = problem.oracle.partitionable().expect("k-cover is partitionable");
+    let full = p.extract_partition(&(0..n as u32).collect::<Vec<_>>()).wire_bytes();
+    let parts = greedyml::util::rng::RandomTape::draw(n, m, 42).partition();
+    assert_eq!(parts.len(), m as usize);
+    let mut total = 0usize;
+    for part in &parts {
+        let bytes = p.extract_partition(part).wire_bytes();
+        assert!(
+            bytes * (m as usize) < full * 2,
+            "one of {m} shards weighs {bytes} bytes of a {full}-byte dataset"
+        );
+        total += bytes;
+    }
+    assert!(total >= full * 8 / 10, "shards together must carry the dataset");
+}
+
 #[test]
 fn process_backend_single_machine_tree() {
     // Degenerate m = 1: one worker, no shipping at all.
@@ -282,6 +394,27 @@ fn tcp_kmedoid_local_view_parity() {
     let (thread, tcp) = run_thread_and_tcp(spec, &cfg, 2);
     assert_parity(&thread, &tcp);
     assert!(thread.value > 0.0);
+}
+
+#[test]
+fn tcp_partition_shipping_parity_across_two_local_daemons() {
+    // The satellite case from the issue: `--ship partition` over real
+    // sockets to two `greedyml serve` daemons, m = 4 machines placed
+    // round-robin — shards out, data-carrying solutions up the tree, and
+    // the final solution/value bit-identical to the thread backend.
+    let parsed = Config::parse(COVERAGE_SPEC).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+    let fleet = vec![ServeDaemon::spawn(), ServeDaemon::spawn()];
+    let cfg = DistConfig::greedyml(AccumulationTree::new(4, 2), 42);
+    let thread_cfg = DistConfig { backend: BackendSpec::Thread, ..cfg.clone() };
+    let a = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &thread_cfg)
+        .expect("thread backend run");
+    let tcp = DistConfig { ship: ShipSpec::Partition, ..tcp_cfg(&cfg, &parsed, &fleet) };
+    let b = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &tcp)
+        .expect("partition-shipped tcp run");
+    assert_parity(&a, &b);
+    assert!(b.comm_secs > 0.0, "shard-carrying gathers take nonzero wall time");
 }
 
 #[test]

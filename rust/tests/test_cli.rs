@@ -179,6 +179,39 @@ fn run_command_under_process_backend() {
 }
 
 #[test]
+fn run_command_with_partition_shipping_matches_thread() {
+    // The `--ship partition` flag end to end: workers receive O(n/m)
+    // shards instead of rebuild recipes, and the reported objective is
+    // bit-identical to the thread backend's.
+    let dir = std::env::temp_dir();
+    let cfg = dir.join("greedyml_cli_ship.toml");
+    std::fs::write(
+        &cfg,
+        "name = ship\n[dataset]\nkind = retail\nn = 300\n[problem]\nk = 8\n\
+         [run]\nalgos = greedyml:4:2\nseed = 5\n",
+    )
+    .unwrap();
+    let run = |extra: &[&str], json: &std::path::Path| {
+        let mut args = vec!["run", "--config", cfg.to_str().unwrap(), "--json"];
+        args.push(json.to_str().unwrap());
+        args.extend_from_slice(extra);
+        let out = bin().args(&args).output().unwrap();
+        assert!(out.status.success(), "{extra:?}: {}", String::from_utf8_lossy(&out.stderr));
+        let parsed =
+            greedyml::util::json::Json::parse(&std::fs::read_to_string(json).unwrap()).unwrap();
+        parsed.as_arr().unwrap()[0].get("value").unwrap().as_f64().unwrap()
+    };
+    let tj = dir.join("greedyml_cli_ship_thread.json");
+    let pj = dir.join("greedyml_cli_ship_part.json");
+    let tv = run(&["--backend", "thread"], &tj);
+    let pv = run(&["--backend", "process", "--ship", "partition"], &pj);
+    assert_eq!(tv.to_bits(), pv.to_bits(), "thread {tv} vs partition-shipped {pv}");
+    std::fs::remove_file(&cfg).ok();
+    std::fs::remove_file(&tj).ok();
+    std::fs::remove_file(&pj).ok();
+}
+
+#[test]
 fn sweep_command_emits_figure_csvs() {
     let dir = std::env::temp_dir();
     let cfg = dir.join("greedyml_cli_sweep_csv.toml");
