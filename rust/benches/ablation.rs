@@ -42,13 +42,18 @@ fn ablation_leaf_algorithms() {
     let stoch = greedy_stochastic(&oracle, &c, &cands, None, 0.1, 7);
     let sieve = sieve_streaming(&oracle, &c, &cands, None, 0.2);
     harness::row(&[-18, 14, 14, 12], &cells!["algo", "gain queries", "f(S)", "rel f(%)"]);
-    for (name, out) in [("lazy greedy", &lazy), ("stochastic (e=0.1)", &stoch), ("sieve (e=0.2)", &sieve)] {
+    for (name, out) in
+        [("lazy greedy", &lazy), ("stochastic (e=0.1)", &stoch), ("sieve (e=0.2)", &sieve)]
+    {
         harness::row(
             &[-18, 14, 14, 12],
             &cells![name, out.calls, out.value, format!("{:.2}", 100.0 * out.value / lazy.value)],
         );
     }
-    println!("stochastic trades <15% quality for O(n ln 1/e) calls; sieve holds only O(k log k / e) elements — the edge regime of §6.2.1");
+    println!(
+        "stochastic trades <15% quality for O(n ln 1/e) calls; sieve holds only \
+         O(k log k / e) elements — the edge regime of §6.2.1"
+    );
 }
 
 fn ablation_lazy() {
@@ -62,8 +67,14 @@ fn ablation_lazy() {
     let naive = greedy_naive(&oracle, &c, &cands, None);
     let lazy = greedy_lazy(&oracle, &c, &cands, None);
     harness::row(&[-8, 14, 12, 14], &cells!["algo", "gain queries", "time (s)", "f(S)"]);
-    harness::row(&[-8, 14, 12, 14], &cells!["naive", naive.calls, format!("{:.4}", t_naive.median), naive.value]);
-    harness::row(&[-8, 14, 12, 14], &cells!["lazy", lazy.calls, format!("{:.4}", t_lazy.median), lazy.value]);
+    harness::row(
+        &[-8, 14, 12, 14],
+        &cells!["naive", naive.calls, format!("{:.4}", t_naive.median), naive.value],
+    );
+    harness::row(
+        &[-8, 14, 12, 14],
+        &cells!["lazy", lazy.calls, format!("{:.4}", t_lazy.median), lazy.value],
+    );
     println!(
         "lazy uses {:.1}% of naive's queries at identical value",
         100.0 * lazy.calls as f64 / naive.calls as f64
@@ -80,7 +91,8 @@ fn ablation_partition() {
             sets.push(vec![base, base + 1, base + 2, base + 3, base + 4, base + 5]);
         }
     }
-    let oracle = KCover::new(Arc::new(greedyml::data::itemsets::ItemsetCollection::from_sets(&sets)));
+    let oracle =
+        KCover::new(Arc::new(greedyml::data::itemsets::ItemsetCollection::from_sets(&sets)));
     let c = Cardinality::new(16);
     harness::row(&[-12, 14, 12], &cells!["partition", "f(S)", "crit calls"]);
     for (label, scheme) in
@@ -116,7 +128,10 @@ fn ablation_argmax() {
             );
         }
     }
-    println!("expected: values nearly identical (same α/(L+1) guarantee), Fig-3 variant does no extra evaluation work at the root");
+    println!(
+        "expected: values nearly identical (same α/(L+1) guarantee), Fig-3 variant does no \
+         extra evaluation work at the root"
+    );
 }
 
 fn ablation_backend() {
@@ -142,8 +157,18 @@ fn ablation_backend() {
     let t_cpu = harness::bench(1, 3, || st_cpu.gain_batch(&cands, &mut out));
     let t_pjrt = harness::bench(1, 3, || st_pjrt.gain_batch(&cands, &mut out));
     harness::row(&[-22, 12, 14], &cells!["k-medoid backend", "time (s)", "gains/s"]);
-    harness::row(&[-22, 12, 14], &cells!["cpu", format!("{:.4}", t_cpu.median), format!("{:.0}", 512.0 / t_cpu.median)]);
-    harness::row(&[-22, 12, 14], &cells!["pjrt (pallas AOT)", format!("{:.4}", t_pjrt.median), format!("{:.0}", 512.0 / t_pjrt.median)]);
+    harness::row(
+        &[-22, 12, 14],
+        &cells!["cpu", format!("{:.4}", t_cpu.median), format!("{:.0}", 512.0 / t_cpu.median)],
+    );
+    harness::row(
+        &[-22, 12, 14],
+        &cells![
+            "pjrt (pallas AOT)",
+            format!("{:.4}", t_pjrt.median),
+            format!("{:.0}", 512.0 / t_pjrt.median)
+        ],
+    );
 
     // Sparse: k-cover gains — the host sparse scan vs bitmap kernel.
     let data = Arc::new(gen::transactions(gen::TransactionParams::retail_like(8_000), 9));
@@ -155,7 +180,24 @@ fn ablation_backend() {
     let t_c = harness::bench(1, 3, || sc.gain_batch(&cands, &mut out));
     let t_p = harness::bench(1, 3, || sp.gain_batch(&cands, &mut out));
     harness::row(&[-22, 12, 14], &cells!["k-cover backend", "time (s)", "gains/s"]);
-    harness::row(&[-22, 12, 14], &cells!["cpu (sparse scan)", format!("{:.4}", t_c.median), format!("{:.0}", 2048.0 / t_c.median)]);
-    harness::row(&[-22, 12, 14], &cells!["pjrt (bitmap)", format!("{:.4}", t_p.median), format!("{:.0}", 2048.0 / t_p.median)]);
-    println!("expected: PJRT amortizes on dense k-medoid tiles; sparse coverage favours the host scan (packing is Θ(universe) per call)");
+    harness::row(
+        &[-22, 12, 14],
+        &cells![
+            "cpu (sparse scan)",
+            format!("{:.4}", t_c.median),
+            format!("{:.0}", 2048.0 / t_c.median)
+        ],
+    );
+    harness::row(
+        &[-22, 12, 14],
+        &cells![
+            "pjrt (bitmap)",
+            format!("{:.4}", t_p.median),
+            format!("{:.0}", 2048.0 / t_p.median)
+        ],
+    );
+    println!(
+        "expected: PJRT amortizes on dense k-medoid tiles; sparse coverage favours the host \
+         scan (packing is Θ(universe) per call)"
+    );
 }

@@ -14,7 +14,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use greedyml::algo::{run_dist, DistConfig};
+use greedyml::algo::{run_dist, run_dist_pooled, DistConfig, SessionPool};
 use greedyml::coordinator::{build_problem, experiment::build_constraint, problem_spec};
 use greedyml::dist::{BackendSpec, ShipSpec};
 use greedyml::tree::AccumulationTree;
@@ -100,6 +100,74 @@ fn main() {
     let peak_mem = outcomes.iter().map(|&(_, _, p)| p).max().unwrap_or(0);
     println!("objective {value0:.3}, per-worker peak {peak_mem} B (meter, mode-invariant)");
 
+    // ---- warm vs cold: one resident fleet answering five jobs -----------
+    // The resident-shard session premise in numbers: five (k, same-seed)
+    // queries against one dataset, partition-shipped on the process
+    // backend.  Warm = one SessionPool kept across jobs (shards ship at
+    // establish, never again); cold = the pool cleared before every job
+    // (each job pays a full fleet spawn + shard shipping).  Every job is
+    // asserted bit-identical warm vs cold vs thread.
+    harness::section("warm vs cold: one resident fleet answering 5 jobs");
+    let job_ks: [usize; 5] = [4, 6, 8, 10, 12];
+    let run_job = |k: usize, pool: &mut SessionPool| -> (f64, f64) {
+        let spec = format!("{shipped_spec}problem.k = {k}\n");
+        let spec_cfg = Config::parse(&spec).unwrap();
+        let c = build_constraint(&spec_cfg, n).unwrap().0;
+        let cfg = DistConfig {
+            backend: BackendSpec::Process,
+            ship: ShipSpec::Partition,
+            problem: Some(spec),
+            ..base.clone()
+        };
+        let t0 = std::time::Instant::now();
+        let out = run_dist_pooled(oracle, c.as_ref(), &cfg, pool).expect("pooled job");
+        (t0.elapsed().as_secs_f64(), out.value)
+    };
+
+    let mut warm_pool = SessionPool::new();
+    let warm: Vec<(f64, f64)> = job_ks.iter().map(|&k| run_job(k, &mut warm_pool)).collect();
+    let warm_init = warm_pool.init_bytes_total();
+    assert_eq!(warm_pool.sessions_established(), 1, "one fleet must answer all 5 jobs");
+    assert_eq!(warm_pool.warm_jobs(), job_ks.len() as u64 - 1);
+
+    let mut cold_pool = SessionPool::new();
+    let cold: Vec<(f64, f64)> = job_ks
+        .iter()
+        .map(|&k| {
+            cold_pool.clear();
+            run_job(k, &mut cold_pool)
+        })
+        .collect();
+    let cold_init = cold_pool.init_bytes_total();
+    assert_eq!(
+        warm_init * job_ks.len() as u64,
+        cold_init,
+        "a warm fleet ships each partition shard exactly once; cold ships per job"
+    );
+
+    println!("{:>4} {:>12} {:>12}", "k", "warm secs", "cold secs");
+    for (i, &k) in job_ks.iter().enumerate() {
+        let spec = format!("{shipped_spec}problem.k = {k}\n");
+        let spec_cfg = Config::parse(&spec).unwrap();
+        let c = build_constraint(&spec_cfg, n).unwrap().0;
+        let thread_cfg = DistConfig {
+            backend: BackendSpec::Thread,
+            problem: Some(spec),
+            ..base.clone()
+        };
+        let t = run_dist(oracle, c.as_ref(), &thread_cfg).expect("thread job");
+        assert_eq!(warm[i].1.to_bits(), cold[i].1.to_bits(), "k={k}: warm vs cold");
+        assert_eq!(warm[i].1.to_bits(), t.value.to_bits(), "k={k}: warm vs thread");
+        println!("{k:>4} {:>12.4} {:>12.4}", warm[i].0, cold[i].0);
+    }
+    let warm_secs_mean = warm.iter().map(|j| j.0).sum::<f64>() / warm.len() as f64;
+    let cold_secs_mean = cold.iter().map(|j| j.0).sum::<f64>() / cold.len() as f64;
+    println!(
+        "Init bytes over 5 jobs: warm fleet {warm_init} B (shipped once), \
+         cold fleets {cold_init} B ({}×)",
+        job_ks.len()
+    );
+
     if harness::flag("--json") {
         let doc = Json::obj([
             ("bench", Json::Str("dist_ship".to_string())),
@@ -117,6 +185,11 @@ fn main() {
             ("thread_median_secs", Json::Num(t_thread.median)),
             ("spec_median_secs", Json::Num(t_spec.median)),
             ("partition_median_secs", Json::Num(t_part.median)),
+            ("warm_fleet_jobs", Json::Num(job_ks.len() as f64)),
+            ("warm_init_bytes", Json::Num(warm_init as f64)),
+            ("cold_init_bytes", Json::Num(cold_init as f64)),
+            ("warm_job_secs_mean", Json::Num(warm_secs_mean)),
+            ("cold_job_secs_mean", Json::Num(cold_secs_mean)),
         ]);
         let path = "BENCH_dist_ship.json";
         std::fs::write(path, doc.to_pretty()).expect("write bench json");

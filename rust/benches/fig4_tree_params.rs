@@ -26,11 +26,17 @@ fn datasets() -> Vec<(&'static str, Arc<dyn Oracle>)> {
     vec![
         (
             "road-usa-like",
-            Arc::new(KDominatingSet::new(Arc::new(gen::road(gen::RoadParams::usa_like(1 << 15), 1)))),
+            Arc::new(KDominatingSet::new(Arc::new(gen::road(
+                gen::RoadParams::usa_like(1 << 15),
+                1,
+            )))),
         ),
         (
             "road-cent-like",
-            Arc::new(KDominatingSet::new(Arc::new(gen::road(gen::RoadParams::usa_like(1 << 14), 2)))),
+            Arc::new(KDominatingSet::new(Arc::new(gen::road(
+                gen::RoadParams::usa_like(1 << 14),
+                2,
+            )))),
         ),
         (
             "belgium-like",
@@ -42,7 +48,12 @@ fn datasets() -> Vec<(&'static str, Arc<dyn Oracle>)> {
         (
             "webdocs-like",
             Arc::new(KCover::new(Arc::new(gen::transactions(
-                gen::TransactionParams { num_sets: 3000, num_items: 12_000, mean_size: 177.2, zipf_s: 1.0 },
+                gen::TransactionParams {
+                    num_sets: 3000,
+                    num_items: 12_000,
+                    mean_size: 177.2,
+                    zipf_s: 1.0,
+                },
                 4,
             )))),
         ),

@@ -48,7 +48,18 @@ fn main() {
     ));
     harness::row(
         &[-14, 4, 4, 4, 14, 14, 8, 14, 14, 8],
-        &cells!["algo", "m", "b", "L", "interior|D| meas", "model k*fanin", "check", "comm B meas", "model", "check"],
+        &cells![
+            "algo",
+            "m",
+            "b",
+            "L",
+            "interior|D| meas",
+            "model k*fanin",
+            "check",
+            "comm B meas",
+            "model",
+            "check"
+        ],
     );
 
     let shapes = [(8u32, 8u32), (16, 16), (8, 2), (16, 4), (16, 2), (32, 2), (32, 8)];
@@ -104,7 +115,17 @@ fn main() {
     harness::section("makespan vs BSP model (measured superstep seconds vs modeled cost)");
     harness::row(
         &[-14, 4, 4, 12, 12, 12, 12, 10, 8],
-        &cells!["algo", "m", "b", "makespan s", "comp s", "comm s", "comm model s", "comm", "check"],
+        &cells![
+            "algo",
+            "m",
+            "b",
+            "makespan s",
+            "comp s",
+            "comm s",
+            "comm model s",
+            "comm",
+            "check"
+        ],
     );
     let alpha_beta = greedyml::dist::CommModel::default();
     for (algo, m, b, tree, params, out) in &outcomes {
@@ -161,7 +182,8 @@ fn main() {
     let rg = BspParams { n: n as u64, k: 20_000, m: 32, levels: 1, delta };
     let gml = BspParams { levels: 5, ..rg };
     println!(
-        "for k=20k, m=32: RandGreeDI interior work k^2*m = {:.2e}, GreedyML L*k^2*ceil(m^(1/L)) = {:.2e} ({}x less)",
+        "for k=20k, m=32: RandGreeDI interior work k^2*m = {:.2e}, \
+         GreedyML L*k^2*ceil(m^(1/L)) = {:.2e} ({}x less)",
         (rg.k * rg.k * rg.m) as f64,
         (gml.levels * gml.k * gml.k * gml.fan_in()) as f64,
         (rg.k * rg.k * rg.m) / (gml.levels * gml.k * gml.k * gml.fan_in())

@@ -24,18 +24,29 @@ fn main() {
     let sets: Vec<(&str, Arc<dyn Oracle>, usize)> = vec![
         (
             "friendster-like",
-            Arc::new(KDominatingSet::new(Arc::new(gen::rmat(gen::RmatParams::friendster_like(14), 1)))),
+            Arc::new(KDominatingSet::new(Arc::new(gen::rmat(
+                gen::RmatParams::friendster_like(14),
+                1,
+            )))),
             600,
         ),
         (
             "road-usa-like",
-            Arc::new(KDominatingSet::new(Arc::new(gen::road(gen::RoadParams::usa_like(1 << 15), 2)))),
+            Arc::new(KDominatingSet::new(Arc::new(gen::road(
+                gen::RoadParams::usa_like(1 << 15),
+                2,
+            )))),
             600,
         ),
         (
             "webdocs-like",
             Arc::new(KCover::new(Arc::new(gen::transactions(
-                gen::TransactionParams { num_sets: 4000, num_items: 16_000, mean_size: 177.2, zipf_s: 1.0 },
+                gen::TransactionParams {
+                    num_sets: 4000,
+                    num_items: 16_000,
+                    mean_size: 177.2,
+                    zipf_s: 1.0,
+                },
                 3,
             )))),
             300,
@@ -93,7 +104,10 @@ fn main() {
             ..DistConfig::greedyml(AccumulationTree::randgreedi(8), 4)
         };
         match run_greedyml(oracle.as_ref(), &constraint, &rg_tight) {
-            Err(_) => println!("  [check] RG(m=8) at the GML(32,2) budget {} OOMs as expected", fmt_bytes(tight)),
+            Err(_) => println!(
+                "  [check] RG(m=8) at the GML(32,2) budget {} OOMs as expected",
+                fmt_bytes(tight)
+            ),
             Ok(_) => println!("  [check] WARN: RG(m=8) unexpectedly fit at {}", fmt_bytes(tight)),
         }
     }

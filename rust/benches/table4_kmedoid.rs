@@ -82,7 +82,8 @@ fn main() {
 
     // Fig. 7: exemplar diversity (labels are known for the synthetic mix).
     harness::section("Fig 7 — exemplar diversity");
-    let cfg = DistConfig { local_view: true, ..DistConfig::greedyml(AccumulationTree::new(m, 2), 3) };
+    let cfg =
+        DistConfig { local_view: true, ..DistConfig::greedyml(AccumulationTree::new(m, 2), 3) };
     let out = run_greedyml(&oracle, &constraint, &cfg).unwrap();
     let classes: std::collections::HashSet<u32> =
         out.solution.iter().map(|&e| labels[e as usize]).collect();

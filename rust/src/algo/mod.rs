@@ -25,7 +25,7 @@ pub mod randgreedi;
 pub mod seq;
 
 pub use greedi::{greedi_config, run_greedi};
-pub use greedyml::{run_dist, run_greedyml};
+pub use greedyml::{dataset_fingerprint, run_dist, run_dist_pooled, run_greedyml, SessionPool};
 pub use randgreedi::run_randgreedi;
 pub use seq::run_sequential;
 

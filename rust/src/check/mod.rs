@@ -144,7 +144,9 @@ impl<T: Clone + 'static> Gen<Vec<T>> {
                 // Structural shrinks: drop halves, drop single elements.
                 if v.len() > lo {
                     out.push(v[..lo].to_vec());
-                    out.push(v[..v.len() / 2].to_vec().into_iter().chain(std::iter::empty()).collect());
+                    out.push(
+                        v[..v.len() / 2].to_vec().into_iter().chain(std::iter::empty()).collect(),
+                    );
                     if v.len() > 1 {
                         out.push(v[1..].to_vec());
                         out.push(v[..v.len() - 1].to_vec());

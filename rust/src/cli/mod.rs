@@ -105,7 +105,9 @@ mod tests {
 
     #[test]
     fn commands_positionals_flags() {
-        let a = parse(&["run", "extra", "--config", "exp.toml", "--set", "a=1", "--set=b=2", "--verbose"]);
+        let a = parse(&[
+            "run", "extra", "--config", "exp.toml", "--set", "a=1", "--set=b=2", "--verbose",
+        ]);
         assert_eq!(a.command.as_deref(), Some("run"));
         assert_eq!(a.positional, vec!["extra"]);
         assert_eq!(a.get("config"), Some("exp.toml"));

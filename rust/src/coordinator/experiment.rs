@@ -205,7 +205,8 @@ impl Experiment {
             let label = spec.label();
             let result: Result<RunReport, String> = match *spec {
                 AlgoSpec::Greedy => {
-                    run_sequential(oracle, self.constraint.as_ref(), GreedyKind::Lazy, self.mem_limit)
+                    let constraint = self.constraint.as_ref();
+                    run_sequential(oracle, constraint, GreedyKind::Lazy, self.mem_limit)
                         .map(|out| RunReport {
                             algo: label.clone(),
                             dataset: dataset.clone(),

@@ -1,0 +1,445 @@
+//! The job-queue front door of the always-on submodular service.
+//!
+//! The canonical GreedyML workload is many queries against one dataset —
+//! exemplar clustering and summarization sweeps vary `(k, seed,
+//! constraint)` while the corpus stays fixed.  This module is the
+//! coordinator-side counterpart of the resident-shard sessions in
+//! [`crate::dist`]: a serial [`JobQueue`] that
+//!
+//! 1. answers repeat queries from a **solution cache** (keyed by the
+//!    dataset fingerprint, the constraint spec and every
+//!    result-determining run parameter) without touching a worker,
+//! 2. refuses jobs whose estimated per-machine memory need exceeds the
+//!    queue's **admission budget** *before* any shipping happens —
+//!    reproducing the §6.2 "cannot even hold the data" regime as a
+//!    polite rejection instead of a mid-run abort, and
+//! 3. runs everything else through a [`SessionPool`], so consecutive
+//!    jobs against the same dataset reuse one warm fleet and ship each
+//!    partition shard exactly once.
+//!
+//! `greedyml submit --config <file>` drives a [`JobBatch`] (the `[jobs]`
+//! config section) through one queue, which is the long-lived-coordinator
+//! deployment in miniature: the fleet outlives every individual run.
+
+use super::experiment::build_constraint;
+use super::BuiltProblem;
+use crate::algo::{
+    dataset_fingerprint, run_dist_pooled, DistConfig, SessionPool,
+};
+use crate::dist::{BackendSpec, ShipSpec};
+use crate::tree::AccumulationTree;
+use crate::util::config::Config;
+use crate::ElemId;
+use std::collections::HashMap;
+
+/// What the queue did with one submitted job.
+#[derive(Clone, Debug)]
+pub enum Submission {
+    /// The job ran to completion (`warm`: on a reused resident session).
+    Ran { solution: Vec<ElemId>, value: f64, warm: bool },
+    /// Served from the solution cache; no worker was touched.
+    Cached { solution: Vec<ElemId>, value: f64 },
+    /// Refused by admission control; no worker was touched.
+    Rejected { reason: String },
+}
+
+impl Submission {
+    /// The solution value, if the job produced one.
+    pub fn value(&self) -> Option<f64> {
+        match self {
+            Self::Ran { value, .. } | Self::Cached { value, .. } => Some(*value),
+            Self::Rejected { .. } => None,
+        }
+    }
+
+    /// One-word status for tables and logs.
+    pub fn status(&self) -> &'static str {
+        match self {
+            Self::Ran { warm: true, .. } => "warm",
+            Self::Ran { warm: false, .. } => "cold",
+            Self::Cached { .. } => "cached",
+            Self::Rejected { .. } => "rejected",
+        }
+    }
+}
+
+#[derive(Clone)]
+struct CachedSolution {
+    solution: Vec<ElemId>,
+    value: f64,
+}
+
+/// A serial job queue over one warm [`SessionPool`], with a solution
+/// cache and memory-budget admission control.  See the module docs.
+pub struct JobQueue {
+    pool: SessionPool,
+    cache: HashMap<u64, CachedSolution>,
+    /// Per-machine admission budget in bytes (`None` = admit everything).
+    mem_budget: Option<u64>,
+    submitted: u64,
+    cache_hits: u64,
+    rejected: u64,
+}
+
+impl Default for JobQueue {
+    fn default() -> Self {
+        Self::new(None)
+    }
+}
+
+impl JobQueue {
+    /// A queue with the given per-machine admission budget.
+    pub fn new(mem_budget: Option<u64>) -> Self {
+        Self {
+            pool: SessionPool::new(),
+            cache: HashMap::new(),
+            mem_budget,
+            submitted: 0,
+            cache_hits: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Submit one job: cache lookup → admission control → a run on the
+    /// warm pool.  `cfg.problem` must carry the job's problem spec (it
+    /// defines the constraint and the cache identity); config-built jobs
+    /// ([`JobBatch::dist_config`]) always attach it.
+    pub fn submit(
+        &mut self,
+        problem: &BuiltProblem,
+        cfg: &DistConfig,
+    ) -> crate::Result<Submission> {
+        let spec = cfg
+            .problem
+            .as_deref()
+            .ok_or_else(|| anyhow::anyhow!("job has no problem spec (DistConfig::problem)"))?;
+        self.submitted += 1;
+        let key = job_key(cfg, spec, problem.oracle.n());
+        if let Some(hit) = self.cache.get(&key) {
+            self.cache_hits += 1;
+            return Ok(Submission::Cached {
+                solution: hit.solution.clone(),
+                value: hit.value,
+            });
+        }
+        let spec_cfg = Config::parse(spec)
+            .map_err(|e| anyhow::anyhow!("job problem spec: {e}"))?;
+        let (constraint, k) = build_constraint(&spec_cfg, problem.oracle.n())?;
+        if let Some(budget) = self.mem_budget {
+            let estimate = admission_estimate(problem, cfg, k);
+            if estimate > budget {
+                self.rejected += 1;
+                return Ok(Submission::Rejected {
+                    reason: format!(
+                        "estimated {estimate} bytes per machine exceeds the \
+                         {budget}-byte admission budget (≈{} shard elements + \
+                         {}×{k} fan-in solution elements); raise jobs.mem_budget, \
+                         add machines, or deepen the tree",
+                        shard_elems(problem, cfg),
+                        fan_in(cfg),
+                    ),
+                });
+            }
+        }
+        let out =
+            run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), cfg, &mut self.pool)?;
+        let warm = self.pool.last_was_warm();
+        self.cache.insert(key, CachedSolution { solution: out.solution.clone(), value: out.value });
+        Ok(Submission::Ran { solution: out.solution, value: out.value, warm })
+    }
+
+    /// Jobs submitted (including cached and rejected ones).
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    /// Jobs answered from the solution cache.
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits
+    }
+
+    /// Jobs refused by admission control.
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// The warm fleet store (init-byte and warm/cold counters live there).
+    pub fn pool(&self) -> &SessionPool {
+        &self.pool
+    }
+}
+
+/// FNV-1a over the canonical job identity: the dataset fingerprint, the
+/// `problem.*` constraint keys, and every run parameter that changes the
+/// result.  Two configs that would produce bit-identical outcomes hash
+/// identically; anything result-relevant that differs (k, seed, tree
+/// shape, argmax semantics…) lands in a different slot.
+fn job_key(cfg: &DistConfig, spec: &str, n: usize) -> u64 {
+    let problem_keys: String = match Config::parse(spec) {
+        Ok(c) => c.section("problem").map(|(k, v)| format!("{k}={v}\n")).collect(),
+        Err(_) => spec.to_string(),
+    };
+    let canon = format!(
+        "fp={fp}\n{problem_keys}n={n}\nkind={kind:?}\nseed={seed}\nm={m}\nb={b}\n\
+         scheme={scheme:?}\nlocal_view={lv}\nadded={added}\ncompare={cmp}\n",
+        fp = dataset_fingerprint(spec),
+        n = n,
+        kind = cfg.kind,
+        seed = cfg.seed,
+        m = cfg.tree.machines(),
+        b = cfg.tree.branching(),
+        scheme = cfg.partition,
+        lv = cfg.local_view,
+        added = cfg.added_elements,
+        cmp = cfg.compare_all_children,
+    );
+    let mut h: u64 = 0xcbf29ce484222325;
+    for byte in canon.as_bytes() {
+        h ^= u64::from(*byte);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Elements the largest leaf shard holds: ⌈n/m⌉ plus the §6.4 added
+/// elements a deepest-path machine bakes into its resident shard.
+fn shard_elems(problem: &BuiltProblem, cfg: &DistConfig) -> u64 {
+    let n = problem.oracle.n() as u64;
+    let m = u64::from(cfg.tree.machines()).max(1);
+    n.div_ceil(m) + (cfg.added_elements as u64) * u64::from(cfg.tree.levels())
+}
+
+/// Solution sets an accumulator holds in one superstep: its own plus
+/// (b − 1) retiring children's — b in total, each at most k elements.
+fn fan_in(cfg: &DistConfig) -> u64 {
+    u64::from(cfg.tree.branching().max(2))
+}
+
+/// Per-machine memory the job is estimated to need, in bytes: the
+/// largest resident shard plus one superstep's fan-in of k-element
+/// solutions (shipped with their data under partition shipping), at the
+/// per-element cost probed from a real one-element shard.  Deliberately
+/// coarse — admission control guards against the §6.2 regime where the
+/// data alone overwhelms a machine, not against kilobyte-level drift;
+/// the in-run [`MemoryMeter`](crate::dist::MemoryMeter) stays the
+/// precise enforcer.
+fn admission_estimate(problem: &BuiltProblem, cfg: &DistConfig, k: usize) -> u64 {
+    let per_elem = probe_elem_bytes(problem);
+    (shard_elems(problem, cfg) + fan_in(cfg) * k as u64) * per_elem
+}
+
+/// Serialized bytes of a one-element shard of this problem — an upper
+/// bound on marginal per-element cost (it carries the payload framing
+/// too).  Non-partitionable oracles fall back to a flat guess.
+fn probe_elem_bytes(problem: &BuiltProblem) -> u64 {
+    const FALLBACK: u64 = 64;
+    match problem.oracle.partitionable() {
+        Some(p) if problem.oracle.n() > 0 => {
+            let payload = p.extract_partition(&[0]);
+            serde_json::to_string(&payload.to_value())
+                .map(|s| s.len() as u64)
+                .unwrap_or(FALLBACK)
+                .max(1)
+        }
+        _ => FALLBACK,
+    }
+}
+
+/// The `[jobs]` config section: a batch of `(k, seed)` queries against
+/// one dataset, plus the fleet they run on.  `greedyml submit` drives
+/// this through a [`JobQueue`].
+pub struct JobBatch {
+    /// k values to query (`jobs.ks`, required).
+    pub ks: Vec<usize>,
+    /// Tape seeds (`jobs.seeds`, default `42`).  The batch is the
+    /// cartesian product seeds × ks, seed-major — all of one seed's ks
+    /// run back-to-back so partition-shipped sessions stay warm.
+    pub seeds: Vec<u64>,
+    /// Fleet width (`jobs.machines`, default 8).
+    pub machines: u32,
+    /// Accumulation-tree branching (`jobs.branching`, default 2).
+    pub branching: u32,
+    /// Execution backend (`jobs.backend`, default auto).
+    pub backend: BackendSpec,
+    /// Ship mode (`jobs.ship`, default auto).
+    pub ship: ShipSpec,
+    /// Worker daemons for the tcp backend (`jobs.hosts`).
+    pub hosts: Option<Vec<String>>,
+    /// Machine-local evaluation views (`jobs.local_view`, default false).
+    pub local_view: bool,
+    /// Executor width (`jobs.threads`; 0 or absent = auto).
+    pub threads: Option<usize>,
+    /// Admission budget in bytes (`jobs.mem_budget`, e.g. `64mb`;
+    /// absent = admit everything).
+    pub mem_budget: Option<u64>,
+}
+
+impl JobBatch {
+    /// Parse the `[jobs]` section.
+    pub fn from_config(cfg: &Config) -> crate::Result<Self> {
+        let ks = cfg
+            .u64_list("jobs.ks")?
+            .into_iter()
+            .map(|k| k as usize)
+            .collect::<Vec<_>>();
+        anyhow::ensure!(!ks.is_empty(), "jobs.ks is empty");
+        let seeds = match cfg.get("jobs.seeds") {
+            None => vec![42],
+            Some(_) => cfg.u64_list("jobs.seeds")?,
+        };
+        anyhow::ensure!(!seeds.is_empty(), "jobs.seeds is empty");
+        let backend = BackendSpec::parse(cfg.str_or("jobs.backend", "auto"))
+            .map_err(|e| anyhow::anyhow!("jobs.backend: {e}"))?;
+        let ship = ShipSpec::parse(cfg.str_or("jobs.ship", "auto"))
+            .map_err(|e| anyhow::anyhow!("jobs.ship: {e}"))?;
+        let mem_budget = match cfg.get("jobs.mem_budget") {
+            None | Some("none") => None,
+            Some(v) => Some(
+                crate::util::config::parse_u64(v)
+                    .map_err(|m| anyhow::anyhow!("jobs.mem_budget: {m}"))?,
+            ),
+        };
+        Ok(Self {
+            ks,
+            seeds,
+            machines: cfg.u64_or("jobs.machines", 8)? as u32,
+            branching: cfg.u64_or("jobs.branching", 2)? as u32,
+            backend,
+            ship,
+            hosts: crate::dist::tcp::hosts_from_config(cfg, "jobs.hosts")?,
+            local_view: cfg.bool_or("jobs.local_view", false)?,
+            threads: match cfg.u64_or("jobs.threads", 0)? {
+                0 => None,
+                t => Some(t as usize),
+            },
+            mem_budget,
+        })
+    }
+
+    /// Every `(seed, k)` job in submission order (seed-major).
+    pub fn jobs(&self) -> Vec<(u64, usize)> {
+        let mut out = Vec::with_capacity(self.seeds.len() * self.ks.len());
+        for &seed in &self.seeds {
+            for &k in &self.ks {
+                out.push((seed, k));
+            }
+        }
+        out
+    }
+
+    /// The engine config of one job.  The job's `problem.k` is appended
+    /// to the shipped spec (later keys win), so remote workers rebuild
+    /// the constraint this job actually runs.
+    pub fn dist_config(&self, cfg: &Config, k: usize, seed: u64) -> DistConfig {
+        let spec = format!("{}problem.k = {k}\n", super::problem_spec(cfg));
+        DistConfig {
+            backend: self.backend,
+            ship: self.ship,
+            hosts: self.hosts.clone(),
+            problem: Some(spec),
+            threads: self.threads,
+            local_view: self.local_view,
+            ..DistConfig::greedyml(
+                AccumulationTree::new(self.machines, self.branching),
+                seed,
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::build_problem;
+
+    fn retail_config(n: usize) -> Config {
+        Config::parse(&format!(
+            "[dataset]\nkind = retail\nn = {n}\nseed = 2\n[problem]\nk = 6\n\
+             [jobs]\nks = 4, 6\nseeds = 1, 2\nmachines = 4\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn batch_parses_the_jobs_section() {
+        let cfg = retail_config(200);
+        let batch = JobBatch::from_config(&cfg).unwrap();
+        assert_eq!(batch.ks, vec![4, 6]);
+        assert_eq!(batch.seeds, vec![1, 2]);
+        assert_eq!(batch.machines, 4);
+        assert_eq!(batch.branching, 2);
+        assert_eq!(batch.jobs(), vec![(1, 4), (1, 6), (2, 4), (2, 6)]);
+        assert!(JobBatch::from_config(&Config::parse("[jobs]\nks = \n").unwrap()).is_err());
+    }
+
+    #[test]
+    fn repeat_jobs_hit_the_solution_cache() {
+        let cfg = retail_config(200);
+        let problem = build_problem(&cfg, None).unwrap();
+        let batch = JobBatch::from_config(&cfg).unwrap();
+        let mut queue = JobQueue::new(None);
+        let dist = batch.dist_config(&cfg, 4, 1);
+        let first = queue.submit(&problem, &dist).unwrap();
+        let again = queue.submit(&problem, &dist).unwrap();
+        let (Submission::Ran { solution: a, value: va, .. },
+             Submission::Cached { solution: b, value: vb }) = (first, again)
+        else {
+            panic!("expected Ran then Cached");
+        };
+        assert_eq!(a, b);
+        assert_eq!(va.to_bits(), vb.to_bits(), "cache replay is bit-identical");
+        assert_eq!(queue.cache_hits(), 1);
+        assert_eq!(queue.submitted(), 2);
+    }
+
+    #[test]
+    fn distinct_jobs_do_not_collide_in_the_cache() {
+        let cfg = retail_config(200);
+        let problem = build_problem(&cfg, None).unwrap();
+        let batch = JobBatch::from_config(&cfg).unwrap();
+        let mut queue = JobQueue::new(None);
+        for (seed, k) in batch.jobs() {
+            let sub = queue.submit(&problem, &batch.dist_config(&cfg, k, seed)).unwrap();
+            assert!(matches!(sub, Submission::Ran { .. }), "each distinct job runs");
+        }
+        assert_eq!(queue.cache_hits(), 0);
+        let k4 = queue
+            .submit(&problem, &batch.dist_config(&cfg, 4, 1))
+            .unwrap();
+        match k4 {
+            Submission::Cached { solution, .. } => assert!(solution.len() <= 4),
+            other => panic!("expected a cache hit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn admission_control_rejects_before_touching_workers() {
+        let cfg = retail_config(400);
+        let problem = build_problem(&cfg, None).unwrap();
+        let batch = JobBatch::from_config(&cfg).unwrap();
+        let mut queue = JobQueue::new(Some(16));
+        let sub = queue.submit(&problem, &batch.dist_config(&cfg, 4, 1)).unwrap();
+        match sub {
+            Submission::Rejected { reason } => {
+                assert!(reason.contains("admission budget"), "{reason}");
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        assert_eq!(queue.rejected(), 1);
+        assert_eq!(queue.pool().jobs_run(), 0, "no worker was touched");
+        // A rejected job is not cached: raising the budget lets it run.
+        queue.mem_budget = Some(u64::MAX);
+        let sub = queue.submit(&problem, &batch.dist_config(&cfg, 4, 1)).unwrap();
+        assert!(matches!(sub, Submission::Ran { .. }), "re-submission after raise runs");
+    }
+
+    #[test]
+    fn submission_status_words() {
+        let ran = Submission::Ran { solution: vec![], value: 1.0, warm: true };
+        assert_eq!(ran.status(), "warm");
+        assert!(ran.value().is_some());
+        let rej = Submission::Rejected { reason: "x".into() };
+        assert_eq!(rej.status(), "rejected");
+        assert!(rej.value().is_none());
+    }
+}

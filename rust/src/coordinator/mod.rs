@@ -4,10 +4,12 @@
 
 pub mod dataset;
 pub mod experiment;
+pub mod jobs;
 pub mod sweep;
 
 pub use dataset::{build_problem, Backend, BuiltProblem};
 pub use experiment::{AlgoSpec, Experiment};
+pub use jobs::{JobBatch, JobQueue, Submission};
 pub use sweep::Sweep;
 
 use crate::metrics::RunReport;

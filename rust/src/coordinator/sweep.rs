@@ -5,7 +5,7 @@
 
 use super::experiment::AlgoSpec;
 use super::BuiltProblem;
-use crate::algo::{greedi_config, run_dist, run_sequential, DistConfig};
+use crate::algo::{greedi_config, run_dist_pooled, run_sequential, DistConfig, SessionPool};
 use crate::constraint::Cardinality;
 use crate::dist::{BackendSpec, ShipSpec};
 use crate::greedy::GreedyKind;
@@ -100,8 +100,16 @@ impl Sweep {
     /// Run the grid. Each (k, algo) cell is repeated `reps` times with
     /// seeds `seed + r`; values/calls/times are geomean-aggregated into one
     /// report row. Failed cells (OOM) are returned separately.
+    ///
+    /// All cells share one [`SessionPool`]: on the process/tcp backends
+    /// the dataset ships to the fleet once and every grid cell is a job
+    /// against the resident shards, so a p-point sweep pays 1×shard of
+    /// Init traffic instead of p×shard.  (Cells that pin different shard
+    /// splits — different rep seeds under partition shipping — establish
+    /// their own sessions, as they must.)
     pub fn run(&self, problem: &BuiltProblem) -> (Vec<RunReport>, Vec<(String, String)>) {
         let oracle = problem.oracle.as_ref();
+        let mut pool = SessionPool::new();
         let mut reports = Vec::new();
         let mut failures = Vec::new();
         for &k in &self.ks {
@@ -133,9 +141,15 @@ impl Sweep {
                         }
                         AlgoSpec::GreeDi { m } => {
                             let cfg = self.with_backend(greedi_config(m, self.mem_limit), k);
-                            run_dist(oracle, &constraint, &cfg)
+                            run_dist_pooled(oracle, &constraint, &cfg, &mut pool)
                                 .map(|o| {
-                                    (o.value, o.critical_calls, o.comp_secs, o.comm_secs, o.peak_mem())
+                                    (
+                                        o.value,
+                                        o.critical_calls,
+                                        o.comp_secs,
+                                        o.comm_secs,
+                                        o.peak_mem(),
+                                    )
                                 })
                                 .map_err(|e| e.to_string())
                         }
@@ -146,9 +160,15 @@ impl Sweep {
                                 ..crate::algo::randgreedi::RandGreediOpts::new(m, self.seed + r)
                             };
                             let cfg = self.with_backend(opts.to_config(), k);
-                            run_dist(oracle, &constraint, &cfg)
+                            run_dist_pooled(oracle, &constraint, &cfg, &mut pool)
                                 .map(|o| {
-                                    (o.value, o.critical_calls, o.comp_secs, o.comm_secs, o.peak_mem())
+                                    (
+                                        o.value,
+                                        o.critical_calls,
+                                        o.comp_secs,
+                                        o.comm_secs,
+                                        o.peak_mem(),
+                                    )
                                 })
                                 .map_err(|e| e.to_string())
                         }
@@ -164,9 +184,15 @@ impl Sweep {
                                 },
                                 k,
                             );
-                            run_dist(oracle, &constraint, &cfg)
+                            run_dist_pooled(oracle, &constraint, &cfg, &mut pool)
                                 .map(|o| {
-                                    (o.value, o.critical_calls, o.comp_secs, o.comm_secs, o.peak_mem())
+                                    (
+                                        o.value,
+                                        o.critical_calls,
+                                        o.comp_secs,
+                                        o.comm_secs,
+                                        o.peak_mem(),
+                                    )
                                 })
                                 .map_err(|e| e.to_string())
                         }

@@ -105,7 +105,8 @@ mod tests {
         let p = GaussianParams { n: 300, dim: 32, classes: 3, noise: 0.15 };
         let (vs, labels) = gaussian_mixture(p, 11);
         // Average intra-class distance should be well below inter-class.
-        let (mut intra, mut inter) = (crate::util::stats::Running::new(), crate::util::stats::Running::new());
+        let (mut intra, mut inter) =
+            (crate::util::stats::Running::new(), crate::util::stats::Running::new());
         let mut rng = crate::util::rng::Rng::new(1);
         for _ in 0..2000 {
             let i = rng.below(300) as usize;

@@ -21,6 +21,15 @@
 //!   protocol-version handshake, connect retry and per-frame timeouts;
 //!   `comm_secs` is measured over a real network hop.
 //!
+//! The remote backends are **session-holding**: construction
+//! (`ProcessBackend::spawn` / `TcpBackend::connect`) establishes the
+//! sessions and ships the dataset exactly once, `begin_job` starts one
+//! run against the resident shards, and [`Backend::finish`] ends the
+//! *job* while the fleet stays warm for the next `begin_job` — until
+//! `release` lets the workers go.  The thread backend shares one address
+//! space, so it has no session to keep warm; `run_dist` builds it fresh
+//! per run.
+//!
 //! Every backend runs the identical node program ([`super::node`]), so
 //! solutions, values and call counts are bit-identical across them — the
 //! property `tests/test_backend.rs` locks down.  An MPI backend slots in
@@ -184,18 +193,17 @@ pub enum ShipMode {
     Partition,
 }
 
-/// What the coordinator hands a remote backend at Init time: either the
-/// rebuild recipe for every worker, or the per-machine dataset shards
-/// (`payloads[i]` belongs to machine `i`; the spec still rides along for
-/// the constraint/objective settings).
+/// What the coordinator ships a remote backend when the **session** is
+/// established: either the rebuild recipe for every worker, or the
+/// per-machine dataset shards (`payloads[i]` belongs to machine `i`).
+/// Shipped exactly once — the constraint spec and node parameters travel
+/// later, on each `Job` frame, so one resident shard serves many runs.
 #[derive(Clone, Debug)]
 pub enum ShipPlan<'a> {
     /// Spec shipping: one flat `key = value` problem spec for all workers.
     Spec(&'a str),
-    /// Partition shipping: one shard per machine plus the settings spec.
+    /// Partition shipping: one dataset shard per machine.
     Partition {
-        /// Constraint/objective settings (no dataset rebuild).
-        spec: &'a str,
         /// Machine-ordered shards.
         payloads: Vec<crate::objective::PartitionPayload>,
     },
@@ -247,7 +255,10 @@ pub trait Backend {
         tasks: &[AccumTask],
     ) -> Result<Vec<StepReport>, DistError>;
 
-    /// Tear down and collect the final solution + per-machine stats.
+    /// End the **job** and collect the final solution + per-machine
+    /// stats.  Remote fleets stay warm afterwards — the resident shards
+    /// survive for the next `begin_job`; only the thread backend (built
+    /// fresh per run) has nothing to keep.
     fn finish(&mut self) -> Result<BackendOutcome, DistError>;
 
     /// Whether `comm_secs` in this backend's reports is measured wall time
@@ -347,8 +358,15 @@ impl Backend for ThreadBackend<'_> {
         let results = self.exec.map(work, |mut w| {
             let msg_bytes: Vec<u64> = w.children.iter().map(|c| c.bytes).collect();
             let comm_secs = comm.gather_time(&msg_bytes);
-            let report =
-                accum_step(oracle, constraint, params, &mut w.state, level, &w.children, comm_secs)?;
+            let report = accum_step(
+                oracle,
+                constraint,
+                params,
+                &mut w.state,
+                level,
+                &w.children,
+                comm_secs,
+            )?;
             Ok::<(NodeState, StepReport), DistError>((w.state, report))
         });
         let mut reports = Vec::with_capacity(results.len());

@@ -21,6 +21,13 @@
 //!   `run.hosts` / `GREEDYML_HOSTS`), with a version handshake, connect
 //!   retry and per-frame timeouts.  Same frames, same session loop, same
 //!   bit-identical results — `comm_secs` measured over a real network.
+//!
+//!   Both remote backends hold **resident-shard sessions** (wire protocol
+//!   v3): the dataset ships once when the fleet is established, and any
+//!   number of *jobs* — each a full GreedyML run with its own parameters,
+//!   constraint and seed — execute against the resident shards before the
+//!   session is released.  [`crate::algo::SessionPool`] keeps warm fleets
+//!   across `run_dist` calls; sweeps and the job queue ride on it.
 //! * [`node`] — the per-machine node program (leaf GREEDY, accumulate,
 //!   ship) every backend executes bit-identically.
 //! * [`wire`] — the length-prefixed JSON frames of the worker protocol

@@ -31,7 +31,7 @@
 
 use super::backend::{AccumTask, Backend, BackendOutcome, ShipPlan};
 use super::node::{accum_step, leaf_step, ChildMsg, NodeParams, NodeState};
-use super::remote::{FramedWorker, RemoteBackend};
+use super::remote::{FramedWorker, RemoteFleet};
 use super::wire::{read_frame, write_frame, FromWorker, ToWorker};
 use super::{pool, DistError};
 use crate::constraint::Constraint;
@@ -78,24 +78,32 @@ impl Drop for Children {
 }
 
 /// The fleet driver over pipe transports.
-type PipeFleet = RemoteBackend<BufReader<ChildStdout>, BufWriter<ChildStdin>>;
+type PipeFleet = RemoteFleet<BufReader<ChildStdout>, BufWriter<ChildStdin>>;
 
-/// The process-per-machine [`Backend`].
+/// The process-per-machine [`Backend`]: a session fleet of forked
+/// workers.  [`ProcessBackend::spawn`] ships the dataset once; each run
+/// is then a [`ProcessBackend::begin_job`] followed by the usual
+/// [`Backend`] supersteps, and the fleet stays warm across jobs until
+/// [`ProcessBackend::release`] (or drop — the [`Children`] guard kills
+/// whatever is left).
 pub struct ProcessBackend {
     children: Children,
     inner: PipeFleet,
 }
 
 impl ProcessBackend {
-    /// Fork `machines` workers, handshake each with the node parameters
-    /// and the [`ShipPlan`] (the problem spec, or each machine's dataset
-    /// shard), and verify each rebuilt what the coordinator shipped.
+    /// Fork `machines` workers and open the session: each worker receives
+    /// its [`ShipPlan`] half (the problem spec, or its dataset shard) and
+    /// acks what it rebuilt.  `n` is the global ground-set size the spec
+    /// describes.  No job is started — call
+    /// [`begin_job`](ProcessBackend::begin_job) per run.
     pub fn spawn(
         machines: u32,
-        params: &NodeParams,
         threads: usize,
         plan: ShipPlan<'_>,
+        n: usize,
         worker_bin: Option<&str>,
+        session: u64,
     ) -> Result<Self, DistError> {
         let bin = worker_binary(worker_bin)?;
         let mut children = Children(Vec::with_capacity(machines as usize));
@@ -115,8 +123,27 @@ impl ProcessBackend {
             children.0.push(child);
             workers.push(FramedWorker::new(machine, stdout, stdin));
         }
-        let inner = RemoteBackend::init("process", workers, params, threads, plan)?;
+        let inner = RemoteFleet::establish("process", workers, threads, plan, n, session)?;
         Ok(Self { children, inner })
+    }
+
+    /// Start one job on the warm fleet (see [`RemoteFleet::begin_job`]).
+    pub fn begin_job(&mut self, params: &NodeParams, spec: &str) -> Result<(), DistError> {
+        self.inner.begin_job(params, spec)
+    }
+
+    /// Wire bytes the session init put on the pipes (dataset shipped once).
+    pub fn init_bytes(&self) -> u64 {
+        self.inner.init_bytes()
+    }
+
+    /// End the session: `Release` every worker and reap the processes so
+    /// the [`Children`] drop guard has nothing to kill.
+    pub fn release(&mut self) {
+        self.inner.release();
+        for child in &mut self.children.0 {
+            let _ = child.wait();
+        }
     }
 }
 
@@ -138,12 +165,9 @@ impl Backend for ProcessBackend {
     }
 
     fn finish(&mut self) -> Result<BackendOutcome, DistError> {
-        let outcome = self.inner.finish()?;
-        // Workers exit after Final; reap them so Drop has nothing to kill.
-        for child in &mut self.children.0 {
-            let _ = child.wait();
-        }
-        Ok(outcome)
+        // Ends the job, not the session — workers stay resident for the
+        // next begin_job; release() tears the fleet down.
+        self.inner.finish()
     }
 
     fn measures_comm(&self) -> bool {
@@ -154,7 +178,7 @@ impl Backend for ProcessBackend {
 // ---- worker side -------------------------------------------------------
 
 /// Entry point of the hidden `greedyml worker` subcommand: serve one
-/// simulated machine over stdin/stdout until `Finish` or EOF.
+/// simulated machine over stdin/stdout until `Release` or EOF.
 pub fn run_worker() -> crate::Result<()> {
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
@@ -163,65 +187,63 @@ pub fn run_worker() -> crate::Result<()> {
     serve_session(&mut input, &mut output)
 }
 
-/// What a worker holds for one session: either the whole dataset rebuilt
-/// from a spec, or a [`PartitionOracle`] over its shipped shard — which
-/// grows as child solutions arrive with their data.
+/// What a worker holds **resident for the whole session**: either the
+/// whole dataset rebuilt from a spec, or a [`PartitionOracle`] over its
+/// shipped shard — which grows as child solutions arrive with their data.
+/// Constraints are per-job (they arrive inside [`ToWorker::Job`]), so the
+/// resident problem is data only.
 pub(crate) enum WorkerProblem {
     /// Spec shipping: the full oracle, regenerated locally.
     Spec {
         /// The rebuilt oracle.
         oracle: Arc<dyn Oracle>,
-        /// The rebuilt constraint.
-        constraint: Box<dyn Constraint>,
     },
     /// Partition shipping: the shard facade (mutable — `Recv` ingests
     /// child-solution data into it between supersteps).
     Partition {
         /// The shard-backed oracle facade.
         oracle: PartitionOracle,
-        /// The rebuilt constraint (global element ids, like everything
-        /// the facade speaks, so id-keyed constraints stay exact).
-        constraint: Box<dyn Constraint>,
     },
 }
 
 impl WorkerProblem {
     fn oracle(&self) -> &dyn Oracle {
         match self {
-            Self::Spec { oracle, .. } => oracle.as_ref(),
-            Self::Partition { oracle, .. } => oracle,
-        }
-    }
-
-    fn constraint(&self) -> &dyn Constraint {
-        match self {
-            Self::Spec { constraint, .. } => constraint.as_ref(),
-            Self::Partition { constraint, .. } => constraint.as_ref(),
+            Self::Spec { oracle } => oracle.as_ref(),
+            Self::Partition { oracle } => oracle,
         }
     }
 
     fn partition(&self) -> Option<&PartitionOracle> {
         match self {
             Self::Spec { .. } => None,
-            Self::Partition { oracle, .. } => Some(oracle),
+            Self::Partition { oracle } => Some(oracle),
         }
     }
 
     fn partition_mut(&mut self) -> Option<&mut PartitionOracle> {
         match self {
             Self::Spec { .. } => None,
-            Self::Partition { oracle, .. } => Some(oracle),
+            Self::Partition { oracle } => Some(oracle),
         }
     }
 }
 
+/// The per-job context of the command loop: the node parameters and the
+/// constraint the current [`ToWorker::Job`] rebuilt.  Dropped and rebuilt
+/// on every job; the dataset ([`WorkerProblem`]) outlives it.
+struct JobCtx {
+    params: NodeParams,
+    constraint: Box<dyn Constraint>,
+}
+
 /// One worker session over any framed byte stream: read `Init` (spec
-/// shipping — rebuild the whole problem) or `InitPart` (partition
-/// shipping — adopt the shipped shard), reply `Ready`, then serve
-/// supersteps until `Finish` or EOF.  The process backend runs this over
-/// a worker's stdio; the tcp backend's `greedyml serve` daemon runs it
-/// per accepted connection (after the `Hello`/`Welcome` version
-/// handshake).
+/// shipping — rebuild the whole dataset) or `InitPart` (partition
+/// shipping — adopt the shipped shard), reply `Ready`, then serve jobs —
+/// each a `Job` … supersteps … `JobDone` sequence against the resident
+/// oracle — until `Release` or EOF.  The process backend runs this over a
+/// worker's stdio; the tcp backend's `greedyml serve` daemon runs it per
+/// accepted connection (after the `Hello`/`Welcome` version handshake).
 pub(crate) fn serve_session(
     input: &mut impl Read,
     output: &mut impl Write,
@@ -229,14 +251,13 @@ pub(crate) fn serve_session(
     let first = read_frame(input)
         .map_err(|e| anyhow::anyhow!("{e}"))?
         .ok_or_else(|| anyhow::anyhow!("worker: EOF before init"))?;
-    let (machine, threads, params, built) =
+    let (machine, threads, built) =
         match ToWorker::from_value(&first).map_err(|e| anyhow::anyhow!("{e}"))? {
-            ToWorker::Init { machine, threads, params, problem } => {
-                (machine, threads, params, build_worker_problem(&problem))
+            ToWorker::Init { session: _, machine, threads, problem } => {
+                (machine, threads, build_worker_problem(&problem))
             }
-            ToWorker::InitPart { machine, threads, params, spec, payload } => {
-                let built = build_partition_problem(&spec, &payload, params.local_view);
-                (machine, threads, params, built)
+            ToWorker::InitPart { session: _, machine, threads, payload } => {
+                (machine, threads, build_partition_problem(&payload))
             }
             _ => anyhow::bail!("worker: first frame must be init or init_part"),
         };
@@ -251,69 +272,79 @@ pub(crate) fn serve_session(
     let ready = match &problem {
         // Spec shipping acknowledges the rebuilt global ground set;
         // partition shipping acknowledges the shard size it received.
-        WorkerProblem::Spec { oracle, .. } => oracle.n(),
-        WorkerProblem::Partition { oracle, .. } => oracle.len_local(),
+        WorkerProblem::Spec { oracle } => oracle.n(),
+        WorkerProblem::Partition { oracle } => oracle.len_local(),
     };
     reply(output, &FromWorker::Ready { n: ready })?;
 
     // The worker's own two-level executor serves the nested gain scans;
     // the machine-level parallelism lives in the worker fan-out, so one
     // thread per worker is the default.
-    pool::with_pool(threads.max(1), |_exec| {
-        serve(input, output, &mut problem, &params, machine)
-    })
+    pool::with_pool(threads.max(1), |_exec| serve(input, output, &mut problem, machine))
 }
 
-/// Rebuild the oracle + constraint a worker simulates, from the flat
-/// config text the coordinator shipped.
+/// Rebuild the resident oracle a worker simulates, from the flat config
+/// text the coordinator shipped.
 fn build_worker_problem(problem: &str) -> crate::Result<WorkerProblem> {
     let cfg = crate::util::config::Config::parse(problem)
         .map_err(|e| anyhow::anyhow!("problem spec: {e}"))?;
     let built = crate::coordinator::build_problem(&cfg, None)?;
-    let (constraint, _k) =
-        crate::coordinator::experiment::build_constraint(&cfg, built.oracle.n())?;
-    Ok(WorkerProblem::Spec { oracle: built.oracle, constraint })
+    Ok(WorkerProblem::Spec { oracle: built.oracle })
 }
 
 /// Adopt a shipped shard: no dataset regeneration — the payload *is* the
-/// data.  The spec text only supplies the constraint/objective settings.
+/// data.
 fn build_partition_problem(
-    spec: &str,
     payload: &crate::objective::PartitionPayload,
-    local_view: bool,
 ) -> crate::Result<WorkerProblem> {
-    let cfg = crate::util::config::Config::parse(spec)
-        .map_err(|e| anyhow::anyhow!("problem spec: {e}"))?;
     let oracle = PartitionOracle::from_payload(payload)
         .map_err(|e| anyhow::anyhow!("partition payload: {e}"))?;
-    if oracle.needs_local_view() && !local_view {
-        anyhow::bail!(
-            "the {} objective needs machine-local evaluation views under partition \
-             shipping (run with local_view, the §6.4 scheme) — a shard cannot \
-             evaluate against the full dataset",
-            oracle.name()
-        );
+    Ok(WorkerProblem::Partition { oracle })
+}
+
+/// Admit one job against the resident problem: rebuild the constraint
+/// from the job's spec text and re-check the shard/objective contract.
+/// An `Err` fails *the job*, not the session.
+fn setup_job(
+    problem: &WorkerProblem,
+    params: &NodeParams,
+    spec: &str,
+) -> crate::Result<Box<dyn Constraint>> {
+    if let Some(p) = problem.partition() {
+        if p.needs_local_view() && !params.local_view {
+            anyhow::bail!(
+                "the {} objective needs machine-local evaluation views under partition \
+                 shipping (run with local_view, the §6.4 scheme) — a shard cannot \
+                 evaluate against the full dataset",
+                p.name()
+            );
+        }
     }
+    let cfg = crate::util::config::Config::parse(spec)
+        .map_err(|e| anyhow::anyhow!("problem spec: {e}"))?;
     let (constraint, _k) =
-        crate::coordinator::experiment::build_constraint(&cfg, oracle.n())?;
-    Ok(WorkerProblem::Partition { oracle, constraint })
+        crate::coordinator::experiment::build_constraint(&cfg, problem.oracle().n())?;
+    Ok(constraint)
 }
 
 fn reply(output: &mut impl Write, msg: &FromWorker) -> crate::Result<()> {
     write_frame(output, &msg.to_value()).map_err(|e| anyhow::anyhow!("{e}"))
 }
 
-/// The command loop: one superstep role per frame.  All ids on the wire
-/// are global; under partition shipping the oracle facade translates to
-/// the shard's local dense space internally, and this loop only adds the
-/// data-shard handling — extract on `Ship`, ingest on `Recv`.
+/// The command loop: one superstep role per frame, grouped into jobs.
+/// All ids on the wire are global; under partition shipping the oracle
+/// facade translates to the shard's local dense space internally, and
+/// this loop only adds the data-shard handling — extract on `Ship`,
+/// ingest on `Recv`.  Superstep commands outside an active job are
+/// protocol violations answered with `Fail`; `JobDone` ships the final
+/// state and keeps the session alive for the next `Job`.
 fn serve(
     input: &mut impl Read,
     output: &mut impl Write,
     problem: &mut WorkerProblem,
-    params: &NodeParams,
     machine: MachineId,
 ) -> crate::Result<()> {
+    let mut job: Option<JobCtx> = None;
     let mut state: Option<NodeState> = None;
     let mut pending: Option<(u32, Vec<ChildMsg>)> = None;
     loop {
@@ -322,7 +353,40 @@ fn serve(
         };
         let cmd = ToWorker::from_value(&frame).map_err(|e| anyhow::anyhow!("{e}"))?;
         match cmd {
+            ToWorker::Job { job: _, params, spec } => {
+                // Every job starts from a clean slate: per-job state dies
+                // here, the resident dataset does not.
+                state = None;
+                pending = None;
+                match setup_job(problem, &params, &spec) {
+                    Ok(constraint) => {
+                        job = Some(JobCtx { params, constraint });
+                        // Ack with the *global* ground-set size — stable
+                        // across jobs even as a resident partition shard
+                        // grows by ingesting child data.
+                        reply(output, &FromWorker::Ready { n: problem.oracle().n() })?;
+                    }
+                    Err(e) => {
+                        job = None;
+                        reply(
+                            output,
+                            &FromWorker::Fail(DistError::backend(format!(
+                                "worker {machine}: {e:#}"
+                            ))),
+                        )?;
+                    }
+                }
+            }
             ToWorker::Leaf { part } => {
+                let Some(ctx) = job.as_ref() else {
+                    reply(
+                        output,
+                        &FromWorker::Fail(DistError::backend(format!(
+                            "worker {machine}: leaf without an active job"
+                        ))),
+                    )?;
+                    continue;
+                };
                 if let Some(p) = problem.partition() {
                     // Pre-validate so a coordinator that forgot to ship an
                     // element fails the protocol, not the process.
@@ -337,8 +401,13 @@ fn serve(
                         continue;
                     }
                 }
-                match leaf_step(problem.oracle(), problem.constraint(), params, machine, &part)
-                {
+                match leaf_step(
+                    problem.oracle(),
+                    ctx.constraint.as_ref(),
+                    &ctx.params,
+                    machine,
+                    &part,
+                ) {
                     Ok((s, report)) => {
                         state = Some(s);
                         reply(output, &FromWorker::Step(report))?;
@@ -376,6 +445,15 @@ fn serve(
                 )?,
             },
             ToWorker::Recv { level, children } => {
+                if job.is_none() {
+                    reply(
+                        output,
+                        &FromWorker::Fail(DistError::backend(format!(
+                            "worker {machine}: recv without an active job"
+                        ))),
+                    )?;
+                    continue;
+                }
                 if let Some(p) = problem.partition_mut() {
                     // Absorb each child's data before acking — the Ack is
                     // the receipt that the payload (solutions *and* their
@@ -404,12 +482,21 @@ fn serve(
                 reply(output, &FromWorker::Ack)?;
             }
             ToWorker::Accum { level, comm_secs } => {
+                let Some(ctx) = job.as_ref() else {
+                    reply(
+                        output,
+                        &FromWorker::Fail(DistError::backend(format!(
+                            "worker {machine}: accum without an active job"
+                        ))),
+                    )?;
+                    continue;
+                };
                 let took = pending.take();
                 let result = match (state.as_mut(), took) {
                     (Some(s), Some((lvl, children))) if lvl == level => accum_step(
                         problem.oracle(),
-                        problem.constraint(),
-                        params,
+                        ctx.constraint.as_ref(),
+                        &ctx.params,
                         s,
                         level,
                         &children,
@@ -424,7 +511,9 @@ fn serve(
                     Err(e) => reply(output, &FromWorker::Fail(e))?,
                 }
             }
-            ToWorker::Finish => {
+            ToWorker::JobDone => {
+                // End of one job: ship the final state, stay resident for
+                // the next Job on this session.
                 match state.take() {
                     Some(s) => reply(
                         output,
@@ -437,11 +526,15 @@ fn serve(
                     None => reply(
                         output,
                         &FromWorker::Fail(DistError::backend(format!(
-                            "worker {machine}: finish before any superstep"
+                            "worker {machine}: job_done before any superstep"
                         ))),
                     )?,
                 }
-                return Ok(());
+                job = None;
+                pending = None;
+            }
+            ToWorker::Release => {
+                return Ok(()); // explicit end of session, no reply
             }
             ToWorker::Init { .. } | ToWorker::InitPart { .. } => {
                 reply(
@@ -484,22 +577,32 @@ mod tests {
         }
     }
 
-    /// Wrap an oracle/constraint pair the way a spec-shipped session does.
-    fn spec_problem(
-        oracle: impl crate::objective::Oracle + 'static,
-        constraint: impl crate::constraint::Constraint + 'static,
-    ) -> WorkerProblem {
-        WorkerProblem::Spec { oracle: Arc::new(oracle), constraint: Box::new(constraint) }
+    /// Wrap an oracle the way a spec-shipped session does.
+    fn spec_problem(oracle: impl crate::objective::Oracle + 'static) -> WorkerProblem {
+        WorkerProblem::Spec { oracle: Arc::new(oracle) }
+    }
+
+    fn job_frame(params: NodeParams, spec: &str) -> ToWorker {
+        ToWorker::Job { job: 0, params, spec: spec.to_string() }
+    }
+
+    fn expect_ready(cursor: &mut &[u8], want: usize, what: &str) {
+        let v = read_frame(cursor).unwrap().unwrap();
+        match FromWorker::from_value(&v).unwrap() {
+            FromWorker::Ready { n } => assert_eq!(n, want, "{what}"),
+            other => panic!("expected ready ({what}), got {other:?}"),
+        }
     }
 
     #[test]
     fn spawn_with_missing_binary_is_a_backend_error() {
         let err = ProcessBackend::spawn(
             2,
-            &params(),
             1,
             ShipPlan::Spec("dataset.kind = retail\ndataset.n = 100\n"),
+            100,
             Some("/nonexistent/greedyml-worker-binary"),
+            0,
         )
         .unwrap_err();
         match err {
@@ -510,11 +613,11 @@ mod tests {
         }
     }
 
-    /// Drive `serve` in-process over byte buffers: a 1-machine session is
-    /// leaf → finish, no child traffic — the protocol state machine works
-    /// without forking anything.
+    /// Drive `serve` in-process over byte buffers: a 1-machine job is
+    /// job → leaf → job_done, no child traffic — the protocol state
+    /// machine works without forking anything.
     #[test]
-    fn serve_runs_a_single_machine_session_in_memory() {
+    fn serve_runs_a_single_machine_job_in_memory() {
         let data = crate::data::gen::transactions(
             crate::data::gen::TransactionParams {
                 num_sets: 100,
@@ -525,16 +628,17 @@ mod tests {
             5,
         );
         let oracle = crate::objective::KCover::new(std::sync::Arc::new(data));
-        let constraint = crate::constraint::Cardinality::new(4);
         let mut input = Vec::new();
+        write_frame(&mut input, &job_frame(params(), "problem.k = 4\n").to_value()).unwrap();
         let part: Vec<ElemId> = (0..100).collect();
         write_frame(&mut input, &ToWorker::Leaf { part }.to_value()).unwrap();
-        write_frame(&mut input, &ToWorker::Finish.to_value()).unwrap();
+        write_frame(&mut input, &ToWorker::JobDone.to_value()).unwrap();
         let mut output = Vec::new();
-        let mut problem = spec_problem(oracle, constraint);
-        serve(&mut input.as_slice(), &mut output, &mut problem, &params(), 0).unwrap();
+        let mut problem = spec_problem(oracle);
+        serve(&mut input.as_slice(), &mut output, &mut problem, 0).unwrap();
 
         let mut cursor = output.as_slice();
+        expect_ready(&mut cursor, 100, "job ack");
         let step = read_frame(&mut cursor).unwrap().unwrap();
         match FromWorker::from_value(&step).unwrap() {
             FromWorker::Step(r) => {
@@ -555,6 +659,54 @@ mod tests {
         assert!(read_frame(&mut cursor).unwrap().is_none(), "no trailing frames");
     }
 
+    /// The tentpole at its smallest: one resident oracle, two jobs on it,
+    /// bit-identical Finals — no re-init between them.
+    #[test]
+    fn serve_runs_two_jobs_on_one_resident_session_bit_identically() {
+        let data = crate::data::gen::transactions(
+            crate::data::gen::TransactionParams {
+                num_sets: 80,
+                num_items: 40,
+                mean_size: 5.0,
+                zipf_s: 0.9,
+            },
+            5,
+        );
+        let oracle = crate::objective::KCover::new(std::sync::Arc::new(data));
+        let mut input = Vec::new();
+        let part: Vec<ElemId> = (0..80).collect();
+        for _ in 0..2 {
+            write_frame(
+                &mut input,
+                &job_frame(NodeParams { n: 80, ..params() }, "problem.k = 4\n").to_value(),
+            )
+            .unwrap();
+            write_frame(&mut input, &ToWorker::Leaf { part: part.clone() }.to_value())
+                .unwrap();
+            write_frame(&mut input, &ToWorker::JobDone.to_value()).unwrap();
+        }
+        let mut output = Vec::new();
+        let mut problem = spec_problem(oracle);
+        serve(&mut input.as_slice(), &mut output, &mut problem, 0).unwrap();
+
+        let mut cursor = output.as_slice();
+        let mut finals = Vec::new();
+        for round in 0..2 {
+            expect_ready(&mut cursor, 80, "job ack");
+            let step = read_frame(&mut cursor).unwrap().unwrap();
+            assert!(
+                matches!(FromWorker::from_value(&step).unwrap(), FromWorker::Step(_)),
+                "round {round}"
+            );
+            let fin = read_frame(&mut cursor).unwrap().unwrap();
+            match FromWorker::from_value(&fin).unwrap() {
+                FromWorker::Final { sol, value, .. } => finals.push((sol, value.to_bits())),
+                other => panic!("expected final, got {other:?}"),
+            }
+        }
+        assert_eq!(finals[0], finals[1], "a warm second job must be bit-identical");
+    }
+
     #[test]
     fn serve_reports_protocol_misuse_as_fail() {
         let data = crate::data::gen::transactions(
@@ -567,15 +719,17 @@ mod tests {
             5,
         );
         let oracle = crate::objective::KCover::new(std::sync::Arc::new(data));
-        let constraint = crate::constraint::Cardinality::new(3);
         let mut input = Vec::new();
+        write_frame(&mut input, &job_frame(params(), "problem.k = 3\n").to_value()).unwrap();
         write_frame(&mut input, &ToWorker::Ship.to_value()).unwrap();
         let mut output = Vec::new();
         // Ship before leaf: the worker answers Fail and keeps serving
         // (the EOF after it ends the loop cleanly).
-        let mut problem = spec_problem(oracle, constraint);
-        serve(&mut input.as_slice(), &mut output, &mut problem, &params(), 7).unwrap();
-        let v = read_frame(&mut output.as_slice()).unwrap().unwrap();
+        let mut problem = spec_problem(oracle);
+        serve(&mut input.as_slice(), &mut output, &mut problem, 7).unwrap();
+        let mut cursor = output.as_slice();
+        let _ready = read_frame(&mut cursor).unwrap().unwrap();
+        let v = read_frame(&mut cursor).unwrap().unwrap();
         match FromWorker::from_value(&v).unwrap() {
             FromWorker::Fail(DistError::Backend { message }) => {
                 assert!(message.contains("ship before leaf"), "{message}")
@@ -585,11 +739,33 @@ mod tests {
     }
 
     #[test]
+    fn superstep_commands_without_a_job_are_fails_not_panics() {
+        let oracle = crate::objective::Modular::new(vec![1.0; 10]);
+        let mut input = Vec::new();
+        write_frame(&mut input, &ToWorker::Leaf { part: vec![0, 1] }.to_value()).unwrap();
+        write_frame(&mut input, &ToWorker::JobDone.to_value()).unwrap();
+        let mut output = Vec::new();
+        let mut problem = spec_problem(oracle);
+        serve(&mut input.as_slice(), &mut output, &mut problem, 3).unwrap();
+        let mut cursor = output.as_slice();
+        for want in ["leaf without an active job", "job_done before any superstep"] {
+            let v = read_frame(&mut cursor).unwrap().unwrap();
+            match FromWorker::from_value(&v).unwrap() {
+                FromWorker::Fail(DistError::Backend { message }) => {
+                    assert!(message.contains(want), "{message}")
+                }
+                other => panic!("expected fail ({want}), got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn init_part_session_serves_a_shard_without_rebuilding_the_dataset() {
         // A full in-memory partition-shipped session: InitPart carries a
         // 2-element modular shard of a "global" 50-element problem the
-        // worker never sees; Leaf runs on those global ids; the shipped
-        // solution carries its extracted data.
+        // worker never sees; the Job supplies the constraint; Leaf runs on
+        // those global ids; the shipped solution carries its extracted
+        // data.
         let oracle = crate::objective::Modular::new(
             (0..50).map(|i| i as f64 + 1.0).collect::<Vec<_>>(),
         );
@@ -598,14 +774,12 @@ mod tests {
         let mut input = Vec::new();
         write_frame(
             &mut input,
-            &ToWorker::InitPart {
-                machine: 0,
-                threads: 1,
-                params: NodeParams { n: 50, ..params() },
-                spec: "problem.k = 1\n".to_string(),
-                payload,
-            }
-            .to_value(),
+            &ToWorker::InitPart { session: 0, machine: 0, threads: 1, payload }.to_value(),
+        )
+        .unwrap();
+        write_frame(
+            &mut input,
+            &job_frame(NodeParams { n: 50, ..params() }, "problem.k = 1\n").to_value(),
         )
         .unwrap();
         write_frame(&mut input, &ToWorker::Leaf { part: vec![40, 7] }.to_value()).unwrap();
@@ -614,11 +788,8 @@ mod tests {
         serve_session(&mut input.as_slice(), &mut output).unwrap();
 
         let mut cursor = output.as_slice();
-        let ready = read_frame(&mut cursor).unwrap().unwrap();
-        match FromWorker::from_value(&ready).unwrap() {
-            FromWorker::Ready { n } => assert_eq!(n, 2, "shard size, not the ground set"),
-            other => panic!("expected ready, got {other:?}"),
-        }
+        expect_ready(&mut cursor, 2, "session ack: shard size, not the ground set");
+        expect_ready(&mut cursor, 50, "job ack: the global ground set");
         let step = read_frame(&mut cursor).unwrap().unwrap();
         match FromWorker::from_value(&step).unwrap() {
             FromWorker::Step(r) => assert!(r.calls > 0),
@@ -643,21 +814,20 @@ mod tests {
         let mut input = Vec::new();
         write_frame(
             &mut input,
-            &ToWorker::InitPart {
-                machine: 2,
-                threads: 1,
-                params: NodeParams { n: 20, ..params() },
-                spec: "problem.k = 1\n".to_string(),
-                payload,
-            }
-            .to_value(),
+            &ToWorker::InitPart { session: 0, machine: 2, threads: 1, payload }.to_value(),
+        )
+        .unwrap();
+        write_frame(
+            &mut input,
+            &job_frame(NodeParams { n: 20, ..params() }, "problem.k = 1\n").to_value(),
         )
         .unwrap();
         write_frame(&mut input, &ToWorker::Leaf { part: vec![3, 19] }.to_value()).unwrap();
         let mut output = Vec::new();
         serve_session(&mut input.as_slice(), &mut output).unwrap();
         let mut cursor = output.as_slice();
-        let _ready = read_frame(&mut cursor).unwrap().unwrap();
+        let _session_ready = read_frame(&mut cursor).unwrap().unwrap();
+        let _job_ready = read_frame(&mut cursor).unwrap().unwrap();
         let fail = read_frame(&mut cursor).unwrap().unwrap();
         match FromWorker::from_value(&fail).unwrap() {
             FromWorker::Fail(DistError::Backend { message }) => {

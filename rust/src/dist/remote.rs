@@ -5,12 +5,21 @@
 //! [`super::wire`] and differ only in what carries the bytes.  This module
 //! is the transport-generic half they share: a [`FramedWorker`] wraps one
 //! worker's read/write byte streams behind typed `send`/`recv`, and
-//! [`RemoteBackend`] drives a fleet of them through the
-//! [`Backend`] contract — Init/Ready handshake (shipping either the
-//! problem spec or each machine's dataset shard, per
-//! [`ShipPlan`]), leaf fan-out, the Ship → Recv gather (whose wall time
-//! *is* the measured `comm_secs`), accumulation kick-off, and final
-//! collection.
+//! [`RemoteFleet`] drives a fleet of them through the session/job split of
+//! protocol v3:
+//!
+//! * [`RemoteFleet::establish`] opens the **session** — one `Init` /
+//!   `InitPart` per worker ships the dataset (or its shard) exactly once
+//!   and verifies each `Ready`; the fleet then stays warm,
+//! * [`RemoteFleet::begin_job`] starts one **job** on the warm fleet — a
+//!   `Job` frame per worker carrying only the node parameters and
+//!   constraint spec,
+//! * the [`Backend`] impl runs the job's supersteps (leaf fan-out, the
+//!   Ship → Recv gather whose wall time *is* the measured `comm_secs`,
+//!   accumulation kick-off) and its `finish` collects `Final`s via
+//!   `JobDone` — after which the fleet is ready for the next
+//!   `begin_job`,
+//! * [`RemoteFleet::release`] ends the session (best-effort `Release`).
 //!
 //! Keeping this logic in one place is what keeps the transports
 //! interchangeable: a backend cannot drift in superstep ordering or error
@@ -58,8 +67,9 @@ impl<R: Read, W: Write> FramedWorker<R, W> {
         }
     }
 
-    /// Send one command frame.
-    pub fn send(&mut self, msg: &ToWorker) -> Result<(), DistError> {
+    /// Send one command frame; returns the bytes put on the wire so
+    /// session-level shipping cost (Init payloads) can be accounted.
+    pub fn send(&mut self, msg: &ToWorker) -> Result<u64, DistError> {
         write_frame(&mut self.writer, &msg.to_value())
             .map_err(|e| DistError::backend(format!("{}: {e}", self.who())))
     }
@@ -87,42 +97,48 @@ impl<R: Read, W: Write> FramedWorker<R, W> {
     }
 }
 
-/// A [`Backend`] over any fleet of framed workers.  The transport layer
-/// (process spawn, TCP connect + handshake) builds the [`FramedWorker`]s;
-/// everything protocol-shaped lives here.
-pub(crate) struct RemoteBackend<R, W> {
+/// A warm fleet of framed workers holding one **session**: the dataset
+/// shipped once at [`RemoteFleet::establish`], any number of jobs run
+/// against it via [`RemoteFleet::begin_job`] + the [`Backend`] contract.
+/// The transport layer (process spawn, TCP connect + handshake) builds
+/// the [`FramedWorker`]s; everything protocol-shaped lives here.
+pub(crate) struct RemoteFleet<R, W> {
     name: &'static str,
     workers: Vec<FramedWorker<R, W>>,
+    next_job: u64,
+    init_bytes: u64,
 }
 
-impl<R: Read, W: Write> RemoteBackend<R, W> {
-    /// Initialize a fleet: send every `Init`/`InitPart` before reading any
+impl<R: Read, W: Write> RemoteFleet<R, W> {
+    /// Open a session: send every `Init`/`InitPart` before reading any
     /// `Ready`, so the `m` per-worker rebuilds (dataset regeneration under
     /// spec shipping, shard deserialization under partition shipping) run
     /// concurrently, then verify each worker holds what the coordinator
-    /// thinks it shipped.
+    /// thinks it shipped.  `n` is the global ground-set size — the
+    /// expected `Ready` under spec shipping.
     ///
     /// `workers` must arrive in machine order (worker `i` simulates
     /// machine `i`) — superstep routing indexes the fleet by machine id,
     /// and under partition shipping `payloads[i]` is machine `i`'s shard.
-    pub fn init(
+    pub fn establish(
         name: &'static str,
         workers: Vec<FramedWorker<R, W>>,
-        params: &NodeParams,
         threads: usize,
         plan: ShipPlan<'_>,
+        n: usize,
+        session: u64,
     ) -> Result<Self, DistError> {
-        let mut backend = Self { name, workers };
+        let mut fleet = Self { name, workers, next_job: 0, init_bytes: 0 };
         // Per-worker expected Ready{n}: the global ground set under spec
         // shipping, the shard size under partition shipping.
         let expected: Vec<usize> = match &plan {
-            ShipPlan::Spec(_) => vec![params.n; backend.workers.len()],
-            ShipPlan::Partition { payloads, .. } => {
-                if payloads.len() != backend.workers.len() {
+            ShipPlan::Spec(_) => vec![n; fleet.workers.len()],
+            ShipPlan::Partition { payloads } => {
+                if payloads.len() != fleet.workers.len() {
                     return Err(DistError::backend(format!(
                         "{} shards for {} workers",
                         payloads.len(),
-                        backend.workers.len()
+                        fleet.workers.len()
                     )));
                 }
                 payloads.iter().map(|p| p.len()).collect()
@@ -130,30 +146,29 @@ impl<R: Read, W: Write> RemoteBackend<R, W> {
         };
         match plan {
             ShipPlan::Spec(problem) => {
-                for w in &mut backend.workers {
+                for w in &mut fleet.workers {
                     let init = ToWorker::Init {
+                        session,
                         machine: w.machine,
                         threads,
-                        params: params.clone(),
                         problem: problem.to_string(),
                     };
-                    w.send(&init)?;
+                    fleet.init_bytes += w.send(&init)?;
                 }
             }
-            ShipPlan::Partition { spec, payloads } => {
-                for (w, payload) in backend.workers.iter_mut().zip(payloads) {
+            ShipPlan::Partition { payloads } => {
+                for (w, payload) in fleet.workers.iter_mut().zip(payloads) {
                     let init = ToWorker::InitPart {
+                        session,
                         machine: w.machine,
                         threads,
-                        params: params.clone(),
-                        spec: spec.to_string(),
                         payload,
                     };
-                    w.send(&init)?;
+                    fleet.init_bytes += w.send(&init)?;
                 }
             }
         }
-        for (w, want) in backend.workers.iter_mut().zip(expected) {
+        for (w, want) in fleet.workers.iter_mut().zip(expected) {
             match w.recv_ok()? {
                 FromWorker::Ready { n } if n == want => {}
                 FromWorker::Ready { n } => {
@@ -171,11 +186,65 @@ impl<R: Read, W: Write> RemoteBackend<R, W> {
                 }
             }
         }
-        Ok(backend)
+        Ok(fleet)
+    }
+
+    /// Start one job on the warm fleet: a `Job` frame per worker carrying
+    /// the node parameters and constraint spec.  Every worker must ack
+    /// with its resident oracle's global ground-set size (`params.n`) —
+    /// anything else means the session does not serve this problem.
+    pub fn begin_job(&mut self, params: &NodeParams, spec: &str) -> Result<(), DistError> {
+        let job = self.next_job;
+        self.next_job += 1;
+        for w in &mut self.workers {
+            let cmd =
+                ToWorker::Job { job, params: params.clone(), spec: spec.to_string() };
+            w.send(&cmd)?;
+        }
+        for w in &mut self.workers {
+            match w.recv_ok()? {
+                FromWorker::Ready { n } if n == params.n => {}
+                FromWorker::Ready { n } => {
+                    return Err(DistError::backend(format!(
+                        "{} serves a ground set of {n} elements, the job wants {}; \
+                         the resident session does not hold this problem",
+                        w.who(),
+                        params.n
+                    )))
+                }
+                other => {
+                    return Err(DistError::backend(format!(
+                        "{}: expected ready, got {other:?}",
+                        w.who()
+                    )))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Wire bytes the session `Init`/`InitPart` frames put on the
+    /// transport — the dataset-shipping cost paid exactly once per
+    /// session, however many jobs follow.
+    pub fn init_bytes(&self) -> u64 {
+        self.init_bytes
+    }
+
+    /// Jobs started on this session so far.
+    pub fn jobs_started(&self) -> u64 {
+        self.next_job
+    }
+
+    /// End the session: best-effort `Release` to every worker (a worker
+    /// that already died is ignored — the session is over either way).
+    pub fn release(&mut self) {
+        for w in &mut self.workers {
+            let _ = w.send(&ToWorker::Release);
+        }
     }
 }
 
-impl<R: Read, W: Write> Backend for RemoteBackend<R, W> {
+impl<R: Read, W: Write> Backend for RemoteFleet<R, W> {
     fn name(&self) -> &'static str {
         self.name
     }
@@ -281,8 +350,10 @@ impl<R: Read, W: Write> Backend for RemoteBackend<R, W> {
     }
 
     fn finish(&mut self) -> Result<BackendOutcome, DistError> {
+        // End of the *job*, not the session: JobDone collects every
+        // worker's Final and the fleet stays warm for the next begin_job.
         for w in &mut self.workers {
-            w.send(&ToWorker::Finish)?;
+            w.send(&ToWorker::JobDone)?;
         }
         let mut machines: Vec<MachineStats> = Vec::with_capacity(self.workers.len());
         let mut solution = Vec::new();
@@ -326,7 +397,7 @@ mod tests {
     use super::*;
     use crate::objective::{PartitionData, PartitionPayload};
 
-    /// Drive a RemoteBackend against in-memory byte buffers: scripted
+    /// Drive a RemoteFleet against in-memory byte buffers: scripted
     /// worker replies on the read side, captured commands on the write
     /// side.  No processes, no sockets — pure protocol logic.
     fn scripted(replies: &[FromWorker]) -> Vec<u8> {
@@ -355,49 +426,42 @@ mod tests {
     }
 
     #[test]
-    fn init_rejects_a_divergent_ground_set() {
+    fn establish_rejects_a_divergent_ground_set() {
         let replies = scripted(&[FromWorker::Ready { n: 7 }]);
         let worker = FramedWorker::new(0, replies.as_slice(), Vec::<u8>::new());
-        let err =
-            RemoteBackend::init("test", vec![worker], &params(100), 1, ShipPlan::Spec("spec"))
-                .err()
-                .expect("ground-set mismatch must fail");
+        let err = RemoteFleet::establish("test", vec![worker], 1, ShipPlan::Spec("spec"), 100, 0)
+            .err()
+            .expect("ground-set mismatch must fail");
         let msg = err.to_string();
         assert!(msg.contains("7 elements"), "{msg}");
         assert!(msg.contains("100"), "{msg}");
     }
 
     #[test]
-    fn partition_init_checks_the_shard_size_not_the_ground_set() {
+    fn partition_establish_checks_the_shard_size_not_the_ground_set() {
         // The worker acknowledges its 3-element shard of a 100-element
         // problem; Ready{3} must pass where spec shipping would demand 100.
         let replies = scripted(&[FromWorker::Ready { n: 3 }]);
         let worker = FramedWorker::new(0, replies.as_slice(), Vec::<u8>::new());
-        let plan = ShipPlan::Partition {
-            spec: "problem.k = 2\n",
-            payloads: vec![shard(100, vec![5, 50, 99])],
-        };
-        RemoteBackend::init("test", vec![worker], &params(100), 1, plan)
+        let plan = ShipPlan::Partition { payloads: vec![shard(100, vec![5, 50, 99])] };
+        RemoteFleet::establish("test", vec![worker], 1, plan, 100, 0)
             .expect("shard-sized Ready is correct under partition shipping");
 
         let replies = scripted(&[FromWorker::Ready { n: 100 }]);
         let worker = FramedWorker::new(0, replies.as_slice(), Vec::<u8>::new());
-        let plan = ShipPlan::Partition {
-            spec: "problem.k = 2\n",
-            payloads: vec![shard(100, vec![5, 50, 99])],
-        };
-        let err = RemoteBackend::init("test", vec![worker], &params(100), 1, plan)
+        let plan = ShipPlan::Partition { payloads: vec![shard(100, vec![5, 50, 99])] };
+        let err = RemoteFleet::establish("test", vec![worker], 1, plan, 100, 0)
             .err()
             .expect("a worker claiming the full ground set diverged");
         assert!(err.to_string().contains("coordinator shipped 3"), "{err}");
     }
 
     #[test]
-    fn partition_init_requires_one_shard_per_worker() {
+    fn partition_establish_requires_one_shard_per_worker() {
         let replies = scripted(&[FromWorker::Ready { n: 1 }]);
         let worker = FramedWorker::new(0, replies.as_slice(), Vec::<u8>::new());
-        let plan = ShipPlan::Partition { spec: "", payloads: Vec::new() };
-        let err = RemoteBackend::init("test", vec![worker], &params(10), 1, plan)
+        let plan = ShipPlan::Partition { payloads: Vec::new() };
+        let err = RemoteFleet::establish("test", vec![worker], 1, plan, 10, 0)
             .err()
             .expect("0 shards for 1 worker must fail");
         assert!(err.to_string().contains("0 shards"), "{err}");
@@ -408,10 +472,9 @@ mod tests {
         // An empty reply stream = the worker died before Ready.
         let empty: &[u8] = &[];
         let worker = FramedWorker::new(3, empty, Vec::<u8>::new());
-        let err =
-            RemoteBackend::init("test", vec![worker], &params(10), 1, ShipPlan::Spec("spec"))
-                .err()
-                .expect("EOF must fail");
+        let err = RemoteFleet::establish("test", vec![worker], 1, ShipPlan::Spec("spec"), 10, 0)
+            .err()
+            .expect("EOF must fail");
         assert!(err.to_string().contains("worker 3 disconnected"), "{err}");
     }
 
@@ -420,10 +483,9 @@ mod tests {
         let empty: &[u8] = &[];
         let worker =
             FramedWorker::new(2, empty, Vec::<u8>::new()).with_peer("10.0.0.7:7401");
-        let err =
-            RemoteBackend::init("test", vec![worker], &params(10), 1, ShipPlan::Spec("spec"))
-                .err()
-                .expect("EOF must fail");
+        let err = RemoteFleet::establish("test", vec![worker], 1, ShipPlan::Spec("spec"), 10, 0)
+            .err()
+            .expect("EOF must fail");
         let msg = err.to_string();
         assert!(msg.contains("worker 2 at 10.0.0.7:7401"), "{msg}");
     }
@@ -432,10 +494,67 @@ mod tests {
     fn worker_fail_reply_surfaces_as_the_inner_error() {
         let replies = scripted(&[FromWorker::Fail(DistError::backend("no such dataset"))]);
         let worker = FramedWorker::new(1, replies.as_slice(), Vec::<u8>::new());
-        let err =
-            RemoteBackend::init("test", vec![worker], &params(10), 1, ShipPlan::Spec("spec"))
-                .err()
-                .expect("Fail must propagate");
+        let err = RemoteFleet::establish("test", vec![worker], 1, ShipPlan::Spec("spec"), 10, 0)
+            .err()
+            .expect("Fail must propagate");
         assert!(err.to_string().contains("no such dataset"), "{err}");
+    }
+
+    #[test]
+    fn establish_counts_the_init_wire_bytes() {
+        // init_bytes must equal exactly what write_frame put on the wire
+        // for the session's Init frames — the dist_ship bench asserts the
+        // 1×shard-per-session property on this number.
+        let replies = scripted(&[FromWorker::Ready { n: 100 }]);
+        let worker = FramedWorker::new(0, replies.as_slice(), Vec::<u8>::new());
+        let fleet =
+            RemoteFleet::establish("test", vec![worker], 1, ShipPlan::Spec("the spec"), 100, 0)
+                .expect("establish");
+        let mut expected = Vec::new();
+        let init = ToWorker::Init {
+            session: 0,
+            machine: 0,
+            threads: 1,
+            problem: "the spec".to_string(),
+        };
+        write_frame(&mut expected, &init.to_value()).unwrap();
+        assert_eq!(fleet.init_bytes(), expected.len() as u64);
+    }
+
+    #[test]
+    fn begin_job_acks_the_global_ground_set_and_counts_jobs() {
+        // Session Ready, then two job Readys — both acking the *global* n.
+        let replies = scripted(&[
+            FromWorker::Ready { n: 100 },
+            FromWorker::Ready { n: 100 },
+            FromWorker::Ready { n: 100 },
+        ]);
+        let worker = FramedWorker::new(0, replies.as_slice(), Vec::<u8>::new());
+        let mut fleet =
+            RemoteFleet::establish("test", vec![worker], 1, ShipPlan::Spec("spec"), 100, 0)
+                .expect("establish");
+        assert_eq!(fleet.jobs_started(), 0);
+        fleet.begin_job(&params(100), "problem.k = 2\n").expect("job 0");
+        fleet.begin_job(&params(100), "problem.k = 4\n").expect("job 1");
+        assert_eq!(fleet.jobs_started(), 2);
+    }
+
+    #[test]
+    fn begin_job_rejects_a_session_holding_a_different_problem() {
+        let replies = scripted(&[
+            FromWorker::Ready { n: 100 },
+            FromWorker::Ready { n: 100 },
+        ]);
+        let worker = FramedWorker::new(0, replies.as_slice(), Vec::<u8>::new());
+        let mut fleet =
+            RemoteFleet::establish("test", vec![worker], 1, ShipPlan::Spec("spec"), 100, 0)
+                .expect("establish");
+        let err = fleet
+            .begin_job(&params(60), "problem.k = 2\n")
+            .err()
+            .expect("a job for a 60-element problem cannot run on a 100-element session");
+        let msg = err.to_string();
+        assert!(msg.contains("100 elements"), "{msg}");
+        assert!(msg.contains("wants 60"), "{msg}");
     }
 }

@@ -7,10 +7,13 @@
 //! places the `m` machines onto the configured hosts round-robin
 //! (machine `i` → `hosts[i % hosts.len()]`) and drives them with the
 //! same length-prefixed frames as the process backend ([`super::wire`]),
-//! through the same transport-generic driver (`RemoteBackend` in
+//! through the same transport-generic session fleet (`RemoteFleet` in
 //! `dist/remote.rs`) and the same worker-side session loop — so
 //! solutions stay bit-identical to the thread backend while `comm_secs`
-//! becomes *measured* wall time over a real network hop.
+//! becomes *measured* wall time over a real network hop.  A connected
+//! fleet is a *session*: the shipped dataset stays resident in the
+//! daemons, and [`TcpBackend::begin_job`] runs any number of jobs
+//! against it before [`TcpBackend::release`] lets the workers go.
 //!
 //! What is TCP-specific, and lives here:
 //!
@@ -22,10 +25,11 @@
 //! * **Connect retry** — a worker daemon that is still starting (tests
 //!   and CI spawn `serve` right before the run) gets
 //!   [`CONNECT_RETRY_WINDOW`] of reconnect attempts; after that the run
-//!   fails into [`DistError::Backend`].  There is no mid-run reconnect:
-//!   a worker's state (its partition, its `S_prev`) dies with its
-//!   connection, so a dropped socket fails the run rather than silently
-//!   recomputing.
+//!   fails into [`DistError::Backend`].  There is no mid-session
+//!   reconnect: a worker's state (its resident shard, its `S_prev`) dies
+//!   with its connection, so a dropped socket fails the session — and
+//!   every job still queued on it — rather than silently recomputing.
+//!   The next session re-ships and recovers.
 //! * **Per-frame timeouts** — coordinator-side socket reads and writes
 //!   time out after [`frame_timeout`] (default 600 s, tune with
 //!   `GREEDYML_TCP_TIMEOUT`, `0` disables), so a wedged-but-open remote
@@ -45,7 +49,7 @@
 use super::backend::{AccumTask, Backend, BackendOutcome, ShipPlan};
 use super::node::{NodeParams, StepReport};
 use super::proc::serve_session;
-use super::remote::{FramedWorker, RemoteBackend};
+use super::remote::{FramedWorker, RemoteFleet};
 use super::wire::{read_frame, write_frame, FromWorker, ToWorker, PROTOCOL_VERSION};
 use super::DistError;
 use crate::ElemId;
@@ -181,11 +185,14 @@ pub fn hosts_from_config(
     }
 }
 
-/// The fleet driver over socket transports.
-type TcpFleet = RemoteBackend<BufReader<TcpStream>, BufWriter<TcpStream>>;
+/// The session fleet over socket transports.
+type TcpFleet = RemoteFleet<BufReader<TcpStream>, BufWriter<TcpStream>>;
 
 /// The multi-host [`Backend`]: one TCP session per simulated machine,
-/// placed round-robin over `greedyml serve` daemons.
+/// placed round-robin over `greedyml serve` daemons.  The shipped
+/// dataset stays resident in the daemons until [`TcpBackend::release`];
+/// each run is a [`TcpBackend::begin_job`] + `run_dist_on` pass over
+/// the warm sessions.
 pub struct TcpBackend {
     inner: TcpFleet,
 }
@@ -193,16 +200,18 @@ pub struct TcpBackend {
 impl TcpBackend {
     /// Connect `machines` sessions round-robin over `hosts`, handshake
     /// protocol versions, ship the [`ShipPlan`] (the problem spec, or each
-    /// machine's dataset shard), and verify every worker holds what the
-    /// coordinator shipped.
+    /// machine's dataset shard) exactly once, and verify every worker
+    /// holds what the coordinator shipped.  `n` is the global ground-set
+    /// size the shipped problem must rebuild to.
     pub fn connect(
         hosts: &[String],
         machines: u32,
-        params: &NodeParams,
         threads: usize,
         plan: ShipPlan<'_>,
+        n: usize,
+        session: u64,
     ) -> Result<Self, DistError> {
-        Self::connect_with_retry(hosts, machines, params, threads, plan, CONNECT_RETRY_WINDOW)
+        Self::connect_with_retry(hosts, machines, threads, plan, n, session, CONNECT_RETRY_WINDOW)
     }
 
     /// [`TcpBackend::connect`] with an explicit retry window (tests use a
@@ -210,9 +219,10 @@ impl TcpBackend {
     pub(crate) fn connect_with_retry(
         hosts: &[String],
         machines: u32,
-        params: &NodeParams,
         threads: usize,
         plan: ShipPlan<'_>,
+        n: usize,
+        session: u64,
         retry: Duration,
     ) -> Result<Self, DistError> {
         if hosts.is_empty() {
@@ -239,7 +249,25 @@ impl TcpBackend {
             handshake(&mut worker, host)?;
             workers.push(worker);
         }
-        Ok(Self { inner: RemoteBackend::init("tcp", workers, params, threads, plan)? })
+        Ok(Self { inner: RemoteFleet::establish("tcp", workers, threads, plan, n, session)? })
+    }
+
+    /// Start one job against the resident sessions — see
+    /// [`RemoteFleet::begin_job`].
+    pub fn begin_job(&mut self, params: &NodeParams, spec: &str) -> Result<(), DistError> {
+        self.inner.begin_job(params, spec)
+    }
+
+    /// Wire bytes the session's `Init`/`InitPart` frames cost — paid once,
+    /// however many jobs follow.
+    pub fn init_bytes(&self) -> u64 {
+        self.inner.init_bytes()
+    }
+
+    /// End the session: best-effort `Release` to every daemon, which
+    /// drops its resident oracle and closes the connection.
+    pub fn release(&mut self) {
+        self.inner.release();
     }
 }
 
@@ -334,9 +362,10 @@ impl Backend for TcpBackend {
 /// resolved address (`greedyml serve: listening on <ip>:<port>` — the one
 /// stdout line, so spawners can `--bind 127.0.0.1:0` and read the port
 /// back), then accept connections forever.  Each connection is one worker
-/// session — handshake, `Init`, supersteps — served on its own thread, so
-/// a single daemon hosts as many simulated machines as coordinators place
-/// on it, across any number of runs.  Session errors are logged to stderr
+/// session — handshake, `Init` shipping the dataset once, then any number
+/// of `Job` runs against the resident shard until `Release` — served on
+/// its own thread, so a single daemon hosts as many simulated machines as
+/// coordinators place on it.  Session errors are logged to stderr
 /// and never take the daemon down; stop it with SIGTERM/Ctrl-C.
 pub fn run_serve(bind: &str) -> crate::Result<()> {
     let listener =
@@ -473,9 +502,10 @@ mod tests {
         let err = TcpBackend::connect_with_retry(
             &hosts,
             1,
-            &params(),
             1,
             ShipPlan::Spec(SPEC),
+            100,
+            0,
             Duration::from_millis(200),
         )
         .unwrap_err();
@@ -504,29 +534,42 @@ mod tests {
     }
 
     #[test]
-    fn single_machine_session_runs_end_to_end_over_a_socket() {
+    fn single_machine_session_runs_two_jobs_over_a_socket() {
         // The full coordinator path — connect, handshake, Init/Ready with
-        // a worker that rebuilds the oracle, leaf superstep, Final — over
-        // a real localhost socket, no child processes.
+        // a worker that rebuilds the oracle once, then two complete jobs
+        // against the resident session — over a real localhost socket, no
+        // child processes.  The second job re-ships nothing and must
+        // reproduce the first bit-for-bit.
         let (addr, handle) = local_daemon(1);
         let mut backend = TcpBackend::connect_with_retry(
             &[addr],
             1,
-            &params(),
             1,
             ShipPlan::Spec(SPEC),
+            100,
+            0,
             Duration::from_secs(5),
         )
         .unwrap();
         assert_eq!(backend.name(), "tcp");
         assert!(backend.measures_comm());
-        let reports = backend.run_leaves(vec![(0..100).collect()]).unwrap();
-        assert_eq!(reports.len(), 1);
-        assert!(reports[0].calls > 0);
-        let outcome = backend.finish().unwrap();
-        assert_eq!(outcome.machines.len(), 1);
-        assert_eq!(outcome.solution.len(), 4, "k = 4 cardinality constraint");
-        assert!(outcome.value > 0.0);
+        let shipped_once = backend.init_bytes();
+        assert!(shipped_once > 0);
+        let mut outcomes = Vec::new();
+        for _ in 0..2 {
+            backend.begin_job(&params(), SPEC).unwrap();
+            let reports = backend.run_leaves(vec![(0..100).collect()]).unwrap();
+            assert_eq!(reports.len(), 1);
+            assert!(reports[0].calls > 0);
+            let outcome = backend.finish().unwrap();
+            assert_eq!(outcome.machines.len(), 1);
+            assert_eq!(outcome.solution.len(), 4, "k = 4 cardinality constraint");
+            assert!(outcome.value > 0.0);
+            outcomes.push((outcome.solution, outcome.value.to_bits()));
+        }
+        assert_eq!(outcomes[0], outcomes[1], "warm job must be bit-identical");
+        assert_eq!(backend.init_bytes(), shipped_once, "no re-shipping between jobs");
+        backend.release();
         drop(backend);
         handle.join().unwrap();
     }
@@ -534,15 +577,16 @@ mod tests {
     #[test]
     fn ground_set_mismatch_is_reported_against_the_rebuilt_oracle() {
         // Coordinator claims n = 100 but ships a 60-element problem: the
-        // Ready{n} check must catch the divergence.
+        // session-establish Ready{n} check must catch the divergence.
         let (addr, handle) = local_daemon(1);
         let bad_spec = "dataset.kind = retail\ndataset.n = 60\ndataset.seed = 2\nproblem.k = 4\n";
         let err = TcpBackend::connect_with_retry(
             &[addr],
             1,
-            &params(),
             1,
             ShipPlan::Spec(bad_spec),
+            100,
+            0,
             Duration::from_secs(5),
         )
         .unwrap_err();

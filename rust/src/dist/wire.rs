@@ -15,20 +15,29 @@
 //!
 //! Message flow (one worker = one simulated machine; the `Hello`/`Welcome`
 //! handshake only happens on TCP connections, where the two endpoints may
-//! be different builds):
+//! be different builds).  Since v3 a worker's lifetime is split into a
+//! **session** — the dataset travels once and stays resident — and any
+//! number of **jobs** run against the resident oracle:
 //!
 //! ```text
 //! coordinator → worker          worker → coordinator
-//! ------------------          --------------------
-//! Hello{version}               Welcome{version} | Fail(err)   (TCP only)
-//! Init{machine,params,spec}    Ready{n}       (spec shipping: full rebuild)
-//! InitPart{machine,params,
-//!          spec,payload}       Ready{n}       (partition shipping: n = shard size)
-//! Leaf{part}                   Step(report) | Fail(err)
-//! Ship                         Sol(child msg)
-//! Recv{level,children}         Ack            (receipt — ends the comm timer)
-//! Accum{level,comm_secs}       Step(report) | Fail(err)
-//! Finish                       Final{stats,sol,value}
+//! --------------------          --------------------
+//! Hello{version}                Welcome{version} | Fail(err)  (TCP only)
+//! Init{session,machine,
+//!      threads,problem}         Ready{n}   (spec shipping: full rebuild)
+//! InitPart{session,machine,
+//!          threads,payload}     Ready{n}   (partition shipping: n = shard size)
+//! ── per job, repeatable ──────────────────────────────────────────────
+//! Job{job,params,spec}          Ready{n} | Fail(err)  (state reset,
+//!                                          constraint rebuilt from spec)
+//! Leaf{part}                    Step(report) | Fail(err)
+//! Ship                          Sol(child msg)
+//! Recv{level,children}          Ack        (receipt — ends the comm timer)
+//! Accum{level,comm_secs}        Step(report) | Fail(err)
+//! JobDone                       Final{stats,sol,value}  (worker stays
+//!                                          resident for the next Job)
+//! ── end of session ───────────────────────────────────────────────────
+//! Release                       (no reply; the worker exits)
 //! ```
 
 use super::node::{ChildMsg, NodeParams, StepReport};
@@ -54,10 +63,19 @@ const MAX_FRAME: u32 = 1 << 30;
 /// v2: partition shipping — the `init_part` command (a worker receives
 /// its dataset shard instead of a rebuild recipe) and the optional `data`
 /// field on shipped child solutions.
-pub const PROTOCOL_VERSION: u32 = 2;
+///
+/// v3: resident-shard job sessions — `init`/`init_part` carry a session
+/// id and ship the dataset *once* (node parameters and the constraint
+/// spec moved off the init frames), the new `job` command starts one run
+/// against the resident oracle, `job_done` replaces per-run `finish`
+/// (the worker stays resident), and `release` ends the session.  The
+/// one-shot `finish` command is gone.
+pub const PROTOCOL_VERSION: u32 = 3;
 
-/// Write one length-prefixed JSON frame.
-pub fn write_frame(w: &mut impl Write, v: &Value) -> Result<(), DistError> {
+/// Write one length-prefixed JSON frame.  Returns the total number of
+/// bytes put on the wire (4-byte length prefix + payload) so callers can
+/// account shipping cost without re-encoding.
+pub fn write_frame(w: &mut impl Write, v: &Value) -> Result<u64, DistError> {
     let bytes = serde_json::to_vec(v)
         .map_err(|e| DistError::backend(format!("frame encode: {e}")))?;
     let len = u32::try_from(bytes.len())
@@ -67,7 +85,8 @@ pub fn write_frame(w: &mut impl Write, v: &Value) -> Result<(), DistError> {
     w.write_all(&len.to_le_bytes())
         .and_then(|_| w.write_all(&bytes))
         .and_then(|_| w.flush())
-        .map_err(|e| DistError::backend(format!("frame write: {e}")))
+        .map_err(|e| DistError::backend(format!("frame write: {e}")))?;
+    Ok(4 + bytes.len() as u64)
 }
 
 /// Read one frame; `Ok(None)` on clean EOF at a frame boundary.
@@ -102,38 +121,54 @@ pub enum ToWorker {
         /// The coordinator's [`PROTOCOL_VERSION`].
         version: u32,
     },
-    /// Handshake: which machine this worker simulates, the node program
-    /// parameters, the executor width for its in-worker gain scans, and
-    /// the problem spec (flat config text) to rebuild the oracle from.
+    /// Session open (spec shipping): which machine this worker simulates,
+    /// the executor width for its in-worker gain scans, and the problem
+    /// spec (flat config text) to rebuild the oracle from.  The rebuilt
+    /// oracle stays **resident** for the whole session and serves every
+    /// subsequent [`ToWorker::Job`]; run parameters travel per job, not
+    /// here.
     Init {
+        /// Coordinator-chosen session id (echoed in errors/logs only).
+        session: u64,
         /// The simulated machine this worker becomes.
         machine: MachineId,
         /// Executor width for the worker's nested gain scans.
         threads: usize,
-        /// The node program's parameters.
-        params: NodeParams,
         /// Flat `key = value` problem spec the worker rebuilds from.
         problem: String,
     },
-    /// Partition-shipping handshake (`--ship partition`): instead of a
-    /// rebuild recipe the worker receives its O(n/m) dataset shard — its
-    /// leaf partition plus the §6.4 added elements it will draw — and
-    /// rebuilds only a [`PartitionPayload`]-backed facade oracle.  The
-    /// spec still travels, but solely for the constraint and objective
-    /// settings; no dataset is regenerated.  Replies `Ready` with the
-    /// *shard* element count (not the global ground-set size), which the
-    /// coordinator checks against what it shipped.
+    /// Session open (partition shipping, `--ship partition`): instead of
+    /// a rebuild recipe the worker receives its O(n/m) dataset shard —
+    /// its leaf partition plus the §6.4 added elements it will draw — and
+    /// builds a [`PartitionPayload`]-backed facade oracle that stays
+    /// **resident** across jobs; nothing is regenerated and the shard is
+    /// never re-shipped.  Replies `Ready` with the *shard* element count
+    /// (not the global ground-set size), which the coordinator checks
+    /// against what it shipped.
     InitPart {
+        /// Coordinator-chosen session id (echoed in errors/logs only).
+        session: u64,
         /// The simulated machine this worker becomes.
         machine: MachineId,
         /// Executor width for the worker's nested gain scans.
         threads: usize,
-        /// The node program's parameters.
+        /// The machine's dataset shard.
+        payload: PartitionPayload,
+    },
+    /// Start one run against the resident oracle: the node program's
+    /// parameters plus the flat spec text the constraint is rebuilt from.
+    /// Resets any per-job worker state (solution, pending children) and
+    /// replies `Ready` with the resident oracle's *global* ground-set
+    /// size, or `Fail` if the job is unservable (e.g. a dataset-view
+    /// objective without `local_view` under partition shipping) — the
+    /// session survives a failed job admission.
+    Job {
+        /// Coordinator-chosen job id, unique within the session.
+        job: u64,
+        /// The node program's parameters for this run.
         params: NodeParams,
         /// Flat `key = value` spec for the constraint/objective settings.
         spec: String,
-        /// The machine's dataset shard.
-        payload: PartitionPayload,
     },
     /// Level-0 superstep: GREEDY on this partition.
     Leaf {
@@ -158,8 +193,13 @@ pub enum ToWorker {
         /// Coordinator-measured Ship → Recv wall seconds to book.
         comm_secs: f64,
     },
-    /// Ship final stats (and the solution, for the root) and exit.
-    Finish,
+    /// End the current job: ship final stats (and the solution, for the
+    /// root).  The worker replies `Final` and **stays resident**, ready
+    /// for the next [`ToWorker::Job`].
+    JobDone,
+    /// End the session: the worker exits without replying.  Best-effort —
+    /// a dropped connection (EOF) releases the session just the same.
+    Release,
 }
 
 /// Worker → coordinator replies.
@@ -201,20 +241,25 @@ impl ToWorker {
     pub fn to_value(&self) -> Value {
         match self {
             Self::Hello { version } => json!({ "t": "hello", "version": version }),
-            Self::Init { machine, threads, params, problem } => json!({
+            Self::Init { session, machine, threads, problem } => json!({
                 "t": "init",
+                "session": session,
                 "machine": machine,
                 "threads": threads,
-                "params": params_to_value(params),
                 "problem": problem,
             }),
-            Self::InitPart { machine, threads, params, spec, payload } => json!({
+            Self::InitPart { session, machine, threads, payload } => json!({
                 "t": "init_part",
+                "session": session,
                 "machine": machine,
                 "threads": threads,
+                "payload": payload.to_value(),
+            }),
+            Self::Job { job, params, spec } => json!({
+                "t": "job",
+                "job": job,
                 "params": params_to_value(params),
                 "spec": spec,
-                "payload": payload.to_value(),
             }),
             Self::Leaf { part } => json!({ "t": "leaf", "part": part }),
             Self::Ship => json!({ "t": "ship" }),
@@ -226,7 +271,8 @@ impl ToWorker {
             Self::Accum { level, comm_secs } => {
                 json!({ "t": "accum", "level": level, "comm_secs": comm_secs })
             }
-            Self::Finish => json!({ "t": "finish" }),
+            Self::JobDone => json!({ "t": "job_done" }),
+            Self::Release => json!({ "t": "release" }),
         }
     }
 
@@ -235,18 +281,22 @@ impl ToWorker {
         match str_field(v, "t")? {
             "hello" => Ok(Self::Hello { version: u64_field(v, "version")? as u32 }),
             "init" => Ok(Self::Init {
+                session: u64_field(v, "session")?,
                 machine: u64_field(v, "machine")? as MachineId,
                 threads: u64_field(v, "threads")? as usize,
-                params: params_from_value(field(v, "params")?)?,
                 problem: str_field(v, "problem")?.to_string(),
             }),
             "init_part" => Ok(Self::InitPart {
+                session: u64_field(v, "session")?,
                 machine: u64_field(v, "machine")? as MachineId,
                 threads: u64_field(v, "threads")? as usize,
-                params: params_from_value(field(v, "params")?)?,
-                spec: str_field(v, "spec")?.to_string(),
                 payload: PartitionPayload::from_value(field(v, "payload")?)
                     .map_err(|e| DistError::backend(format!("partition payload: {e}")))?,
+            }),
+            "job" => Ok(Self::Job {
+                job: u64_field(v, "job")?,
+                params: params_from_value(field(v, "params")?)?,
+                spec: str_field(v, "spec")?.to_string(),
             }),
             "leaf" => Ok(Self::Leaf { part: elems_field(v, "part")? }),
             "ship" => Ok(Self::Ship),
@@ -261,7 +311,8 @@ impl ToWorker {
                 level: u64_field(v, "level")? as u32,
                 comm_secs: f64_field(v, "comm_secs")?,
             }),
-            "finish" => Ok(Self::Finish),
+            "job_done" => Ok(Self::JobDone),
+            "release" => Ok(Self::Release),
             other => Err(DistError::backend(format!("unknown command '{other}'"))),
         }
     }
@@ -539,8 +590,19 @@ mod tests {
         vec![
             ToWorker::Hello { version: PROTOCOL_VERSION },
             ToWorker::Init {
+                session: 7,
                 machine: 3,
                 threads: 2,
+                problem: "dataset.kind = retail\ndataset.n = 300\n".to_string(),
+            },
+            ToWorker::InitPart {
+                session: 7,
+                machine: 1,
+                threads: 2,
+                payload: sample_payload(),
+            },
+            ToWorker::Job {
+                job: 2,
                 params: NodeParams {
                     kind: GreedyKind::Lazy,
                     seed: 42,
@@ -550,22 +612,7 @@ mod tests {
                     added_elements: 50,
                     compare_all_children: false,
                 },
-                problem: "dataset.kind = retail\ndataset.n = 300\n".to_string(),
-            },
-            ToWorker::InitPart {
-                machine: 1,
-                threads: 2,
-                params: NodeParams {
-                    kind: GreedyKind::Lazy,
-                    seed: 42,
-                    n: 1000,
-                    mem_limit: None,
-                    local_view: false,
-                    added_elements: 0,
-                    compare_all_children: false,
-                },
                 spec: "problem.k = 4\n".to_string(),
-                payload: sample_payload(),
             },
             ToWorker::Leaf { part: vec![5, 1, 999] },
             ToWorker::Ship,
@@ -585,7 +632,8 @@ mod tests {
                 ],
             },
             ToWorker::Accum { level: 2, comm_secs: 0.125 },
-            ToWorker::Finish,
+            ToWorker::JobDone,
+            ToWorker::Release,
         ]
     }
 
@@ -693,6 +741,34 @@ mod tests {
              0x70, 0x22, 0x7d],
             "Ship frame no longer matches the hex dump in docs/wire-protocol.md"
         );
+    }
+
+    #[test]
+    fn job_done_frame_bytes_match_the_documented_hex_dump() {
+        // docs/wire-protocol.md pins the session-layer frames the same way
+        // it pins `Ship`.
+        let mut buf = Vec::new();
+        let written = write_frame(&mut buf, &ToWorker::JobDone.to_value()).unwrap();
+        assert_eq!(
+            buf,
+            [0x10, 0x00, 0x00, 0x00, 0x7b, 0x22, 0x74, 0x22, 0x3a, 0x22, 0x6a, 0x6f, 0x62,
+             0x5f, 0x64, 0x6f, 0x6e, 0x65, 0x22, 0x7d],
+            "JobDone frame no longer matches the hex dump in docs/wire-protocol.md"
+        );
+        assert_eq!(written, buf.len() as u64, "write_frame must report the on-wire size");
+    }
+
+    #[test]
+    fn release_frame_bytes_match_the_documented_hex_dump() {
+        let mut buf = Vec::new();
+        let written = write_frame(&mut buf, &ToWorker::Release.to_value()).unwrap();
+        assert_eq!(
+            buf,
+            [0x0f, 0x00, 0x00, 0x00, 0x7b, 0x22, 0x74, 0x22, 0x3a, 0x22, 0x72, 0x65, 0x6c,
+             0x65, 0x61, 0x73, 0x65, 0x22, 0x7d],
+            "Release frame no longer matches the hex dump in docs/wire-protocol.md"
+        );
+        assert_eq!(written, buf.len() as u64, "write_frame must report the on-wire size");
     }
 
     #[test]

@@ -133,7 +133,12 @@ mod tests {
     #[test]
     fn fewer_calls_than_naive_on_coverage() {
         let data = crate::data::gen::transactions(
-            crate::data::gen::TransactionParams { num_sets: 300, num_items: 150, mean_size: 8.0, zipf_s: 1.0 },
+            crate::data::gen::TransactionParams {
+                num_sets: 300,
+                num_items: 150,
+                mean_size: 8.0,
+                zipf_s: 1.0,
+            },
             11,
         );
         let o = KCover::new(Arc::new(data));

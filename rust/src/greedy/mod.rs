@@ -97,7 +97,12 @@ mod tests {
     #[test]
     fn lazy_matches_naive_value() {
         let data = crate::data::gen::transactions(
-            crate::data::gen::TransactionParams { num_sets: 120, num_items: 80, mean_size: 6.0, zipf_s: 0.9 },
+            crate::data::gen::TransactionParams {
+                num_sets: 120,
+                num_items: 80,
+                mean_size: 6.0,
+                zipf_s: 0.9,
+            },
             5,
         );
         let o = KCover::new(Arc::new(data));

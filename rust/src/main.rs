@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   run       — run an experiment config:   greedyml run --config configs/fig4.toml [--set k=v]…
 //!   sweep     — run an experiment grid (k values × algorithms)
+//!   submit    — drive a [jobs] batch through the warm-session job queue
 //!   serve     — host tcp-backend worker sessions: greedyml serve --bind 0.0.0.0:7401
 //!   tree      — inspect an accumulation tree: greedyml tree --machines 8 --branching 2
 //!   datasets  — print Table-2-style summaries of the synthetic presets
@@ -29,6 +30,7 @@ fn real_main() -> greedyml::Result<()> {
     match args.command.as_deref() {
         Some("run") => cmd_run(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("submit") => cmd_submit(&args),
         Some("serve") => cmd_serve(&args),
         Some("tree") => cmd_tree(&args),
         Some("datasets") => cmd_datasets(),
@@ -46,12 +48,14 @@ fn real_main() -> greedyml::Result<()> {
     }
 }
 
-const USAGE: &str = "usage: greedyml <run|sweep|serve|tree|datasets|artifacts|model> [flags]
+const USAGE: &str = "usage: greedyml <run|sweep|submit|serve|tree|datasets|artifacts|model> [flags]
   run       --config <file> [--set key=value]… [--json <out.json>] [--pjrt]
             [--backend thread|process|tcp] [--hosts h1:port,h2:port] [--ship spec|partition]
   sweep     --config <file> (with a [sweep] section) [--set key=value]… [--json <out.json>]
             [--csv <dir>] [--backend thread|process|tcp] [--hosts h1:port,h2:port]
             [--ship spec|partition]
+  submit    --config <file> (with a [jobs] section) [--set key=value]…
+            [--backend thread|process|tcp] [--hosts h1:port,h2:port] [--ship spec|partition]
   serve     --bind <addr>   (tcp-backend worker daemon; --bind 127.0.0.1:0 picks a free port)
   tree      --machines <m> --branching <b>
   datasets  (no flags)
@@ -168,6 +172,60 @@ fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
     Ok(())
 }
 
+fn cmd_submit(args: &Args) -> greedyml::Result<()> {
+    args.check_known(&["config", "set", "backend", "hosts", "ship"])?;
+    let mut cfg = Config::load(args.require("config")?)?;
+    for kv in args.get_all("set") {
+        cfg.set_kv(kv)?;
+    }
+    if let Some(backend) = args.get("backend") {
+        cfg.set("jobs.backend", backend);
+    }
+    if let Some(hosts) = args.get("hosts") {
+        cfg.set("jobs.hosts", hosts);
+    }
+    if let Some(ship) = args.get("ship") {
+        cfg.set("jobs.ship", ship);
+    }
+    let problem = greedyml::coordinator::build_problem(&cfg, None)?;
+    let batch = greedyml::coordinator::JobBatch::from_config(&cfg)?;
+    let jobs = batch.jobs();
+    println!(
+        "submitting {} jobs against {} (n={}, fleet {}×b{})",
+        jobs.len(),
+        problem.summary.name,
+        greedyml::util::fmt_count(problem.summary.n as u64),
+        batch.machines,
+        batch.branching
+    );
+    let mut queue = greedyml::coordinator::JobQueue::new(batch.mem_budget);
+    println!("{:>6} {:>6}  {:<8} {}", "k", "seed", "status", "value");
+    for (seed, k) in jobs {
+        let dist = batch.dist_config(&cfg, k, seed);
+        match queue.submit(&problem, &dist)? {
+            greedyml::coordinator::Submission::Rejected { reason } => {
+                println!("{k:>6} {seed:>6}  {:<8} — {reason}", "rejected");
+            }
+            sub => {
+                println!("{k:>6} {seed:>6}  {:<8} {:.6}", sub.status(), sub.value().unwrap());
+            }
+        }
+    }
+    let pool = queue.pool();
+    println!(
+        "queue: {} submitted, {} cached, {} rejected; fleet: {} sessions established, \
+         {} of {} pooled jobs warm, {} init bytes shipped",
+        queue.submitted(),
+        queue.cache_hits(),
+        queue.rejected(),
+        pool.sessions_established(),
+        pool.warm_jobs(),
+        pool.jobs_run(),
+        pool.init_bytes_total()
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> greedyml::Result<()> {
     args.check_known(&["bind"])?;
     // 127.0.0.1:0 binds an ephemeral port and prints it — handy for tests
@@ -239,7 +297,10 @@ fn cmd_model(args: &Args) -> greedyml::Result<()> {
         levels: args.u64_or("levels", 2)?,
         delta: args.get("delta").map(|d| d.parse()).transpose()?.unwrap_or(8.0),
     };
-    println!("BSP model (Table 1) for n={} k={} m={} L={} delta={}", p.n, p.k, p.m, p.levels, p.delta);
+    println!(
+        "BSP model (Table 1) for n={} k={} m={} L={} delta={}",
+        p.n, p.k, p.m, p.levels, p.delta
+    );
     println!("  fan-in ceil(m^(1/L))      : {}", p.fan_in());
     println!("  Greedy total calls        : {}", greedyml::util::fmt_count(p.greedy_calls()));
     println!("  RandGreeDI calls/machine  : {}", greedyml::util::fmt_count(p.randgreedi_calls()));

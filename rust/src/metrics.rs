@@ -95,7 +95,8 @@ impl RunReport {
     pub fn header() -> String {
         format!(
             "{:<14} {:<14} {:>9} {:>4} {:>3} {:>3} {:>14} {:>8} {:>12} {:>10} {:>10} {:>12}",
-            "algo", "dataset", "k", "m", "b", "L", "f(S)", "rel", "crit.calls", "comp(s)", "comm(s)", "peak mem"
+            "algo", "dataset", "k", "m", "b", "L", "f(S)", "rel", "crit.calls", "comp(s)",
+            "comm(s)", "peak mem"
         )
     }
 

@@ -533,7 +533,10 @@ impl PartitionOracle {
                     offsets.push(items.len() as u64);
                 }
             }
-            (LocalData::Medoid { dim, flat, oracle }, PartitionData::Vectors { dim: d2, flat: f2 }) => {
+            (
+                LocalData::Medoid { dim, flat, oracle },
+                PartitionData::Vectors { dim: d2, flat: f2 },
+            ) => {
                 if dim != d2 {
                     return Err(format!("ingest: vector dim mismatch ({dim} vs {d2})"));
                 }

@@ -106,7 +106,12 @@ impl Manifest {
                 Ok(Entry { name, file, inputs: specs("inputs")?, outputs: specs("outputs")? })
             })
             .collect::<crate::Result<Vec<_>>>()?;
-        Ok(Self { n_tile: grab("n_tile")?, c_tile: grab("c_tile")?, w_tile: grab("w_tile")?, entries })
+        Ok(Self {
+            n_tile: grab("n_tile")?,
+            c_tile: grab("c_tile")?,
+            w_tile: grab("w_tile")?,
+            entries,
+        })
     }
 
     /// Load from `<dir>/manifest.json`.

@@ -160,7 +160,10 @@ impl Config {
     pub fn u64_list(&self, key: &str) -> Result<Vec<u64>, ConfigError> {
         self.str(key)?
             .split(',')
-            .map(|s| parse_u64(s.trim()).map_err(|m| ConfigError { msg: format!("key '{key}': {m}") }))
+            .map(|s| {
+                parse_u64(s.trim())
+                    .map_err(|m| ConfigError { msg: format!("key '{key}': {m}") })
+            })
             .collect()
     }
 
@@ -216,7 +219,10 @@ fn strip_comment(line: &str) -> &str {
 
 fn unquote(s: &str) -> &str {
     let b = s.as_bytes();
-    if b.len() >= 2 && ((b[0] == b'"' && b[b.len() - 1] == b'"') || (b[0] == b'\'' && b[b.len() - 1] == b'\'')) {
+    if b.len() >= 2
+        && ((b[0] == b'"' && b[b.len() - 1] == b'"')
+            || (b[0] == b'\'' && b[b.len() - 1] == b'\''))
+    {
         &s[1..s.len() - 1]
     } else {
         s

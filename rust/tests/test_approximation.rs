@@ -72,7 +72,8 @@ fn expected_value_clears_theorem_bound_kcover() {
             let avg = sum / reps as f64;
             assert!(
                 avg >= bound - 1e-9,
-                "trial {trial} T({m},{b}): E[f] = {avg:.3} below α/(L+1)·OPT = {bound:.3} (OPT {opt})"
+                "trial {trial} T({m},{b}): E[f] = {avg:.3} below \
+                 α/(L+1)·OPT = {bound:.3} (OPT {opt})"
             );
             // Empirical observation (§6): far better than the worst case.
             assert!(

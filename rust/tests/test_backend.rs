@@ -12,7 +12,9 @@
 //! `127.0.0.1:0` and read the bound port back from their first stdout
 //! line — the full multi-host path, no cluster needed.
 
-use greedyml::algo::{run_dist, DistConfig, DistOutcome, PartitionScheme};
+use greedyml::algo::{
+    run_dist, run_dist_pooled, DistConfig, DistOutcome, PartitionScheme, SessionPool,
+};
 use greedyml::coordinator::{build_problem, experiment::build_constraint, problem_spec};
 use greedyml::dist::wire::{read_frame, write_frame, FromWorker, ToWorker, PROTOCOL_VERSION};
 use greedyml::dist::{BackendSpec, DistError, ShipSpec};
@@ -455,13 +457,15 @@ fn tcp_oom_coordinates_cross_the_wire_identically() {
 
 #[test]
 fn tcp_worker_death_mid_superstep_is_an_error_not_a_hang() {
-    // A scripted rogue worker: completes the handshake and Init, then
-    // drops the connection at the Leaf command — exactly what a crashed
-    // or OOM-killed remote host looks like.  The coordinator must fail
-    // with DistError::Backend instead of blocking forever.
+    // A scripted rogue worker: completes the handshake, the session Init
+    // and the Job ack, then drops the connection at the Leaf command —
+    // exactly what a crashed or OOM-killed remote host looks like.  The
+    // coordinator must fail with DistError::Backend instead of blocking
+    // forever.
     let parsed = Config::parse(COVERAGE_SPEC).unwrap();
     let problem = build_problem(&parsed, None).unwrap();
     let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+    let n = problem.oracle.n();
 
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
@@ -477,10 +481,16 @@ fn tcp_worker_death_mid_superstep_is_an_error_not_a_hang() {
         write_frame(&mut output, &FromWorker::Welcome { version: PROTOCOL_VERSION }.to_value())
             .unwrap();
         let init = read_frame(&mut input).unwrap().expect("init frame");
-        let n = match ToWorker::from_value(&init).unwrap() {
-            ToWorker::Init { params, .. } => params.n,
+        match ToWorker::from_value(&init).unwrap() {
+            ToWorker::Init { .. } => {}
             other => panic!("expected init, got {other:?}"),
-        };
+        }
+        write_frame(&mut output, &FromWorker::Ready { n }.to_value()).unwrap();
+        let job = read_frame(&mut input).unwrap().expect("job frame");
+        match ToWorker::from_value(&job).unwrap() {
+            ToWorker::Job { .. } => {}
+            other => panic!("expected job, got {other:?}"),
+        }
         write_frame(&mut output, &FromWorker::Ready { n }.to_value()).unwrap();
         // Read the Leaf command, then die without replying.
         let _ = read_frame(&mut input);
@@ -515,6 +525,117 @@ fn tcp_daemon_survives_across_runs() {
     let b = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &tcp).expect("second run");
     assert_eq!(a.solution, b.solution);
     assert_eq!(a.value.to_bits(), b.value.to_bits());
+}
+
+// ---- resident-shard sessions (warm fleets) ------------------------------
+
+#[test]
+fn warm_process_fleet_matches_cold_and_thread_bit_for_bit() {
+    // One process fleet answers two jobs with different k; each job must
+    // be bit-identical to a cold fleet (fresh workers, full Init) and to
+    // the thread backend — a warm session changes shipping cost only,
+    // never results.
+    let parsed = Config::parse(COVERAGE_SPEC).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let mut pool = SessionPool::new();
+    for (i, k) in [6usize, 10].into_iter().enumerate() {
+        let spec = format!("{}problem.k = {k}\n", problem_spec(&parsed));
+        let spec_cfg = Config::parse(&spec).unwrap();
+        let (constraint, _) = build_constraint(&spec_cfg, problem.oracle.n()).unwrap();
+        let cfg = DistConfig {
+            backend: BackendSpec::Process,
+            problem: Some(spec),
+            worker_bin: Some(worker_bin()),
+            ..DistConfig::greedyml(AccumulationTree::new(4, 2), 42)
+        };
+        let pooled = run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), &cfg, &mut pool)
+            .expect("pooled run");
+        assert_eq!(pool.last_was_warm(), i > 0, "first job establishes, later jobs reuse");
+        let cold = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &cfg).expect("cold run");
+        let thread_cfg = DistConfig { backend: BackendSpec::Thread, ..cfg.clone() };
+        let thread = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &thread_cfg)
+            .expect("thread run");
+        assert_parity(&thread, &pooled);
+        assert_parity(&thread, &cold);
+    }
+    assert_eq!(pool.sessions_established(), 1, "one fleet answers both jobs");
+    assert_eq!(pool.jobs_run(), 2);
+    assert_eq!(pool.warm_jobs(), 1);
+}
+
+#[test]
+fn warm_tcp_partition_fleet_ships_shards_once_and_stays_bit_identical() {
+    // The acceptance case over real sockets: partition-shipped shards go
+    // out when the session is established and never again — later jobs
+    // add zero Init bytes — while every job stays bit-identical to a
+    // cold fleet and to the thread backend.
+    let parsed = Config::parse(COVERAGE_SPEC).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let fleet: Vec<ServeDaemon> = (0..2).map(|_| ServeDaemon::spawn()).collect();
+    let mut pool = SessionPool::new();
+    let mut shipped_once = 0u64;
+    for (i, k) in [6usize, 10].into_iter().enumerate() {
+        let spec = format!("{}problem.k = {k}\n", problem_spec(&parsed));
+        let spec_cfg = Config::parse(&spec).unwrap();
+        let (constraint, _) = build_constraint(&spec_cfg, problem.oracle.n()).unwrap();
+        let base = DistConfig::greedyml(AccumulationTree::new(4, 2), 42);
+        let cfg = DistConfig {
+            ship: ShipSpec::Partition,
+            problem: Some(spec),
+            ..tcp_cfg(&base, &parsed, &fleet)
+        };
+        let pooled = run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), &cfg, &mut pool)
+            .expect("warm tcp run");
+        if i == 0 {
+            shipped_once = pool.init_bytes_total();
+            assert!(shipped_once > 0, "establishing ships the shards");
+        }
+        assert_eq!(pool.init_bytes_total(), shipped_once, "later jobs re-ship nothing");
+        let cold = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &cfg)
+            .expect("cold tcp run");
+        let thread_cfg = DistConfig { backend: BackendSpec::Thread, ..cfg.clone() };
+        let thread = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &thread_cfg)
+            .expect("thread run");
+        assert_parity(&thread, &pooled);
+        assert_parity(&thread, &cold);
+    }
+    assert_eq!(pool.sessions_established(), 1, "both jobs share one resident session");
+}
+
+#[test]
+fn tcp_daemon_death_between_jobs_poisons_the_session_and_the_pool_recovers() {
+    // A daemon dies while its fleet sits warm between jobs.  The next
+    // submission must fail cleanly (no hang), the poisoned session must
+    // leave the pool, and a fresh fleet must serve the same query again
+    // with the same bits.
+    let parsed = Config::parse(COVERAGE_SPEC).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+    let mut pool = SessionPool::new();
+    let base = DistConfig::greedyml(AccumulationTree::new(2, 2), 11);
+
+    let mut daemons = vec![ServeDaemon::spawn()];
+    let cfg = tcp_cfg(&base, &parsed, &daemons);
+    let first = run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), &cfg, &mut pool)
+        .expect("first job");
+    assert_eq!(pool.sessions_established(), 1);
+
+    daemons[0].child.kill().unwrap();
+    daemons[0].child.wait().unwrap();
+
+    let err = run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), &cfg, &mut pool)
+        .expect_err("a dead resident session must error, not hang");
+    assert!(matches!(err, DistError::Backend { .. }), "{err}");
+    assert_eq!(pool.jobs_run(), 2);
+    assert_eq!(pool.warm_jobs(), 0, "the failed reuse is not a warm job");
+
+    let daemons = vec![ServeDaemon::spawn()];
+    let cfg = tcp_cfg(&base, &parsed, &daemons);
+    let third = run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), &cfg, &mut pool)
+        .expect("recovered job on a fresh fleet");
+    assert_eq!(pool.sessions_established(), 2, "recovery re-establishes from scratch");
+    assert_eq!(third.solution, first.solution);
+    assert_eq!(third.value.to_bits(), first.value.to_bits());
 }
 
 #[test]

@@ -69,7 +69,8 @@ fn run_command_with_inline_config_and_overrides() {
     assert!(text.contains("k=6"), "override not applied:\n{text}");
     assert!(text.contains("Greedy"));
     assert!(text.contains("GML(m=4,b=2,L=2)"));
-    let parsed = greedyml::util::json::Json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+    let parsed =
+        greedyml::util::json::Json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
     assert_eq!(parsed.as_arr().unwrap().len(), 2);
     std::fs::remove_file(&cfg).ok();
     std::fs::remove_file(&json).ok();

@@ -108,7 +108,8 @@ fn comm_bytes_conserved_and_root_receives_most() {
         |&(seed, b)| {
             let oracle = random_instance(seed, 200, 100);
             let cfg = DistConfig::greedyml(AccumulationTree::new(8, b as u32), seed);
-            let out = run_greedyml(&oracle, &Cardinality::new(6), &cfg).map_err(|e| format!("{e}"))?;
+            let out =
+                run_greedyml(&oracle, &Cardinality::new(6), &cfg).map_err(|e| format!("{e}"))?;
             let sent: u64 = out.machines.iter().map(|s| s.bytes_sent).sum();
             let recv: u64 = out.machines.iter().map(|s| s.bytes_received).sum();
             ensure(sent == recv, format!("sent {sent} != received {recv}"))?;
@@ -132,7 +133,8 @@ fn adding_machines_partitions_all_elements() {
                 kind: greedyml::greedy::GreedyKind::Naive,
                 ..DistConfig::greedyml(AccumulationTree::new(m as u32, 2), seed)
             };
-            let out = run_greedyml(&oracle, &Cardinality::new(1), &cfg).map_err(|e| format!("{e}"))?;
+            let out =
+                run_greedyml(&oracle, &Cardinality::new(1), &cfg).map_err(|e| format!("{e}"))?;
             // With k=1, each leaf does exactly |P_i| gain queries.
             let leaf_calls: u64 = out.levels[0].total_calls;
             ensure(

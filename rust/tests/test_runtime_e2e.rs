@@ -38,7 +38,8 @@ fn distributed_greedyml_over_pjrt_kmedoid() {
     let cpu = KMedoid::new(vs.clone());
     let pjrt = KMedoidPjrt::new(vs, engine).unwrap();
     let constraint = Cardinality::new(10);
-    let cfg = DistConfig { local_view: true, ..DistConfig::greedyml(AccumulationTree::new(4, 2), 5) };
+    let cfg =
+        DistConfig { local_view: true, ..DistConfig::greedyml(AccumulationTree::new(4, 2), 5) };
     let a = run_greedyml(&cpu, &constraint, &cfg).unwrap();
     let b = run_greedyml(&pjrt, &constraint, &cfg).unwrap();
     // Same algorithm, same tape; only the gain arithmetic differs (f64 vs
@@ -79,7 +80,8 @@ fn pjrt_engine_is_shareable_across_superstep_threads() {
     let pjrt = KMedoidPjrt::new(Arc::new(vs), engine).unwrap();
     let constraint = Cardinality::new(6);
     // 8 leaves → 8 concurrent threads issuing kernel launches.
-    let cfg = DistConfig { local_view: true, ..DistConfig::greedyml(AccumulationTree::new(8, 2), 2) };
+    let cfg =
+        DistConfig { local_view: true, ..DistConfig::greedyml(AccumulationTree::new(8, 2), 2) };
     let out = run_greedyml(&pjrt, &constraint, &cfg).unwrap();
     assert!(out.value > 0.0);
     assert_eq!(out.machines.len(), 8);

@@ -1,0 +1,90 @@
+#!/usr/bin/env bash
+# perf_compare.sh <baseline.json> <current.json>
+#
+# Compare a bench JSON report against its committed baseline: every
+# numeric leaf (walked recursively, dotted paths) is checked for drift.
+#   >10%  -> warning
+#   >30%  -> failure (exit 1)
+#
+# Wall-clock keys (*_secs) are warn-only by default — CI runners are too
+# noisy to gate on time — unless PERF_COMPARE_STRICT=1.  A baseline whose
+# "provenance" is "committed-unverified-baseline" (hand-pinned, never
+# measured on the reference machine) downgrades every failure to a
+# warning: the first verified run should refresh the baseline and drop
+# the provenance marker.
+set -euo pipefail
+
+if [ "$#" -ne 2 ]; then
+    echo "usage: $0 <baseline.json> <current.json>" >&2
+    exit 2
+fi
+
+BASELINE="$1" CURRENT="$2" python3 - <<'PYEOF'
+import json
+import os
+import sys
+
+baseline_path = os.environ["BASELINE"]
+current_path = os.environ["CURRENT"]
+strict = os.environ.get("PERF_COMPARE_STRICT") == "1"
+
+with open(baseline_path) as f:
+    baseline = json.load(f)
+with open(current_path) as f:
+    current = json.load(f)
+
+
+def leaves(doc, prefix=""):
+    """Flatten to {dotted.path: number} over the numeric leaves."""
+    out = {}
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            out.update(leaves(v, f"{prefix}{k}." if not prefix else f"{prefix}{k}."))
+    elif isinstance(doc, list):
+        for i, v in enumerate(doc):
+            out.update(leaves(v, f"{prefix}{i}."))
+    elif isinstance(doc, (int, float)) and not isinstance(doc, bool):
+        out[prefix.rstrip(".")] = float(doc)
+    return out
+
+
+base = leaves(baseline)
+cur = leaves(current)
+unverified = baseline.get("provenance") == "committed-unverified-baseline"
+
+warnings, failures = [], []
+for path in sorted(set(base) | set(cur)):
+    if path not in base:
+        warnings.append(f"{path}: only in current ({cur[path]:g})")
+        continue
+    if path not in cur:
+        warnings.append(f"{path}: only in baseline ({base[path]:g})")
+        continue
+    b, c = base[path], cur[path]
+    drift = abs(c - b) / max(abs(b), 1e-12)
+    if drift <= 0.10:
+        continue
+    msg = f"{path}: {b:g} -> {c:g} ({drift:+.0%} drift)"
+    time_key = path.endswith("_secs") or "_secs." in path
+    if time_key and not strict:
+        warnings.append(msg + " [wall-clock, warn-only]")
+    elif drift > 0.30:
+        failures.append(msg)
+    else:
+        warnings.append(msg)
+
+name = os.path.basename(current_path)
+for w in warnings:
+    print(f"perf_compare WARN  {name}: {w}")
+if failures and unverified:
+    for f_ in failures:
+        print(f"perf_compare WARN  {name}: {f_} [baseline unverified, downgraded]")
+    print(f"perf_compare: {name}: baseline is provenance-marked unverified; "
+          "refresh it from a real run to arm the gate")
+elif failures:
+    for f_ in failures:
+        print(f"perf_compare FAIL  {name}: {f_}")
+    sys.exit(1)
+if not failures and not warnings:
+    print(f"perf_compare OK    {name}: all numeric leaves within 10% of baseline")
+PYEOF
