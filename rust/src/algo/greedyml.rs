@@ -21,8 +21,9 @@
 use super::{DistConfig, DistOutcome, LevelStats, PartitionScheme};
 use crate::constraint::Constraint;
 use crate::dist::{
-    pool, tcp, AccumTask, Backend, BackendSpec, DistError, NodeParams, NodeStep, ProcessBackend,
-    ResolvedBackend, ShipMode, ShipPlan, StepReport, TcpBackend, ThreadBackend, Trace,
+    pool, tcp, AccumTask, Backend, BackendSpec, DistError, FaultPolicy, NodeParams, NodeStep,
+    ProcessBackend, ResolvedBackend, ShipMode, ShipPlan, StepReport, TcpBackend, ThreadBackend,
+    Trace,
 };
 use crate::objective::{Oracle, PartitionPayload, Partitionable};
 use crate::tree::AccumulationTree;
@@ -104,6 +105,7 @@ pub fn run_dist(
         // established session, which is why warm == cold bit-for-bit.
         ResolvedBackend::Process => {
             let problem = problem_spec(cfg, "process")?;
+            let fault = cfg.on_fault.resolve()?;
             let plan = ship_plan(oracle, cfg, &params, problem, &parts)?;
             let mut fleet = ProcessBackend::spawn(
                 cfg.tree.machines(),
@@ -112,6 +114,7 @@ pub fn run_dist(
                 oracle.n(),
                 cfg.worker_bin.as_deref(),
                 0,
+                fault,
             )?;
             fleet.begin_job(&params, problem)?;
             let out = run_dist_on(&mut fleet, cfg, parts);
@@ -120,6 +123,7 @@ pub fn run_dist(
         }
         ResolvedBackend::Tcp => {
             let problem = problem_spec(cfg, "tcp")?;
+            let fault = cfg.on_fault.resolve()?;
             let hosts = tcp_hosts(cfg)?;
             let plan = ship_plan(oracle, cfg, &params, problem, &parts)?;
             let mut fleet = TcpBackend::connect(
@@ -129,6 +133,7 @@ pub fn run_dist(
                 plan,
                 oracle.n(),
                 0,
+                fault,
             )?;
             fleet.begin_job(&params, problem)?;
             let out = run_dist_on(&mut fleet, cfg, parts);
@@ -337,6 +342,13 @@ impl PoolFleet {
         }
     }
 
+    fn ping_all(&mut self) -> Result<(), DistError> {
+        match self {
+            Self::Process(f) => f.ping_all(),
+            Self::Tcp(f) => f.ping_all(),
+        }
+    }
+
     fn as_backend(&mut self) -> &mut dyn Backend {
         match self {
             Self::Process(f) => f,
@@ -355,8 +367,13 @@ impl PoolFleet {
 /// session, evicting the oldest when full.  A fleet whose job *fails* is
 /// dropped, not returned — a worker that died or desynced mid-run must
 /// not poison the next job — so the next identical run transparently
-/// re-establishes.  Thread-backend runs never pool (one address space, no
-/// shipping to save) and delegate straight to [`run_dist`].
+/// re-establishes.  Under [`crate::dist::FaultPolicy::Retry`] the pool
+/// goes one step further: a job lost to a *retryable* (transport) fault
+/// is re-run once against a freshly-established session before the error
+/// is surfaced, and warm fleets are pinged before reuse so a daemon that
+/// died idle costs a re-establish, not a failed job.  Thread-backend runs
+/// never pool (one address space, no shipping to save) and delegate
+/// straight to [`run_dist`].
 pub struct SessionPool {
     entries: Vec<(SessionKey, PoolFleet)>,
     capacity: usize,
@@ -365,6 +382,7 @@ pub struct SessionPool {
     sessions_established: u64,
     jobs_run: u64,
     warm_jobs: u64,
+    retried_jobs: u64,
     last_was_warm: bool,
 }
 
@@ -394,6 +412,7 @@ impl SessionPool {
             sessions_established: 0,
             jobs_run: 0,
             warm_jobs: 0,
+            retried_jobs: 0,
             last_was_warm: false,
         }
     }
@@ -418,6 +437,23 @@ impl SessionPool {
     /// Jobs that reused a resident session.
     pub fn warm_jobs(&self) -> u64 {
         self.warm_jobs
+    }
+
+    /// Jobs re-run on a fresh session after a retryable fault poisoned
+    /// their first attempt (non-zero only under `--on-fault retry`).
+    pub fn retried_jobs(&self) -> u64 {
+        self.retried_jobs
+    }
+
+    /// Evict until a slot is free and hand out the next session id.
+    fn take_slot(&mut self) -> u64 {
+        while self.entries.len() >= self.capacity {
+            let (_, mut old) = self.entries.remove(0);
+            old.release();
+        }
+        let session = self.next_session;
+        self.next_session += 1;
+        session
     }
 
     /// Whether the most recent pooled run reused a resident session.
@@ -497,17 +533,33 @@ pub fn run_dist_pooled(
         compare_all_children: cfg.compare_all_children,
     };
     let parts = make_parts(cfg, oracle.n());
+    let fault = cfg.on_fault.resolve()?;
 
-    let (mut fleet, warm) = match pool.entries.iter().position(|(k, _)| *k == key) {
-        Some(i) => (pool.entries.remove(i).1, true),
-        None => {
-            while pool.entries.len() >= pool.capacity {
-                let (_, mut old) = pool.entries.remove(0);
-                old.release();
+    let mut resident = pool
+        .entries
+        .iter()
+        .position(|(k, _)| *k == key)
+        .map(|i| pool.entries.remove(i).1);
+    if fault != FaultPolicy::Fail {
+        // Ping-before-reuse: under a recovering policy a stale warm fleet
+        // (daemon restarted, worker died idle between jobs) is detected
+        // *before* the job commits to it, and costs a re-establish instead
+        // of a failed or silently-degraded run.  A non-retryable ping
+        // failure is real and surfaces.
+        if let Some(f) = resident.as_mut() {
+            match f.ping_all() {
+                Ok(()) => {}
+                Err(e) if e.is_retryable() => resident = None,
+                Err(e) => return Err(e),
             }
-            let session = pool.next_session;
-            pool.next_session += 1;
-            let plan = ship_plan(oracle, cfg, &params, problem, &parts)?;
+        }
+    }
+    let warm = resident.is_some();
+
+    let establish =
+        |pool: &mut SessionPool, parts: &[Vec<ElemId>]| -> Result<PoolFleet, DistError> {
+            let session = pool.take_slot();
+            let plan = ship_plan(oracle, cfg, &params, problem, parts)?;
             let fleet = match resolved {
                 ResolvedBackend::Process => PoolFleet::Process(ProcessBackend::spawn(
                     cfg.tree.machines(),
@@ -516,6 +568,7 @@ pub fn run_dist_pooled(
                     oracle.n(),
                     cfg.worker_bin.as_deref(),
                     session,
+                    fault,
                 )?),
                 ResolvedBackend::Tcp => PoolFleet::Tcp(TcpBackend::connect(
                     key.hosts.as_deref().expect("tcp key carries hosts"),
@@ -524,15 +577,19 @@ pub fn run_dist_pooled(
                     plan,
                     oracle.n(),
                     session,
+                    fault,
                 )?),
                 ResolvedBackend::Thread => unreachable!(),
             };
             pool.init_bytes_total += fleet.init_bytes();
             pool.sessions_established += 1;
-            (fleet, false)
-        }
-    };
+            Ok(fleet)
+        };
 
+    let mut fleet = match resident {
+        Some(f) => f,
+        None => establish(pool, &parts)?,
+    };
     let out = fleet
         .begin_job(&params, problem)
         .and_then(|()| run_dist_on(fleet.as_backend(), cfg, parts));
@@ -546,6 +603,34 @@ pub fn run_dist_pooled(
             // The fleet survived the job — most-recently-used slot.
             pool.entries.push((key, fleet));
             Ok(outcome)
+        }
+        Err(e) if fault == FaultPolicy::Retry && e.is_retryable() => {
+            // The fleet's own supervisor already retried worker-level
+            // revival; reaching here means the session itself is beyond
+            // saving (revival attempts exhausted, or the fault hit during
+            // admission).  Un-poison at the pool level: drop the fleet,
+            // establish a fresh session, and re-run the job exactly once —
+            // the replayed job is deterministic, so a success here is
+            // bit-identical to an unfaulted run.
+            drop(fleet);
+            pool.retried_jobs += 1;
+            let reparts = make_parts(cfg, oracle.n());
+            let mut fresh = establish(pool, &reparts)?;
+            let retry = fresh
+                .begin_job(&params, problem)
+                .and_then(|()| run_dist_on(fresh.as_backend(), cfg, reparts));
+            pool.jobs_run += 1;
+            pool.last_was_warm = false;
+            match retry {
+                Ok(outcome) => {
+                    pool.entries.push((key, fresh));
+                    Ok(outcome)
+                }
+                Err(e2) => {
+                    drop(fresh);
+                    Err(e2)
+                }
+            }
         }
         Err(e) => {
             // Poisoned: drop the fleet (workers reaped / sockets closed on
@@ -609,6 +694,7 @@ fn run_dist_on(
         comm_measured: backend.measures_comm(),
         max_accum_elems,
         trace: Trace::new(trace_steps),
+        faults: fin.faults,
     })
 }
 

@@ -14,7 +14,7 @@
 //! partition scheme, tree shape and argmax semantics, so comparisons
 //! measure the algorithmic difference and nothing else.
 
-use crate::dist::{BackendSpec, CommModel, MachineStats, ShipSpec};
+use crate::dist::{BackendSpec, CommModel, FaultReport, FaultSpec, MachineStats, ShipSpec};
 use crate::greedy::GreedyKind;
 use crate::tree::AccumulationTree;
 use crate::ElemId;
@@ -100,6 +100,18 @@ pub struct DistConfig {
     /// error.  Config key `run.hosts` (`sweep.hosts` for sweeps) / CLI
     /// flag `--hosts`.
     pub hosts: Option<Vec<String>>,
+    /// What a remote run does when a worker dies mid-job
+    /// ([`FaultSpec::Fail`]: fail the run, the historical behavior;
+    /// [`FaultSpec::Retry`]: re-dispatch the dead machine's work onto a
+    /// fresh worker and replay deterministically — bit-identical results;
+    /// [`FaultSpec::Degrade`]: drop the dead machine's subtree from the
+    /// accumulation and finish on the survivors, with the loss accounted
+    /// in [`DistOutcome::faults`]).  [`FaultSpec::Auto`] defers to the
+    /// `GREEDYML_ON_FAULT` environment variable.  Config key
+    /// `run.on_fault` (`sweep.on_fault` / `jobs.on_fault`) / CLI flag
+    /// `--on-fault`.  The thread backend cannot lose workers and ignores
+    /// it.  See `docs/failure-model.md`.
+    pub on_fault: FaultSpec,
 }
 
 impl DistConfig {
@@ -121,6 +133,7 @@ impl DistConfig {
             ship: ShipSpec::Auto,
             worker_bin: None,
             hosts: None,
+            on_fault: FaultSpec::Auto,
         }
     }
 }
@@ -172,6 +185,15 @@ pub struct DistOutcome {
     pub max_accum_elems: usize,
     /// Per-(machine, level) timeline (Chrome-trace exportable).
     pub trace: crate::dist::Trace,
+    /// Faults survived on the way to this outcome: empty unless a
+    /// supervised remote run ([`DistConfig::on_fault`]) recovered from
+    /// worker loss.  Non-empty `machines_dropped` means the run *degraded*
+    /// — the solution is feasible but was computed without the dropped
+    /// machines' elements ([`FaultReport::elements_lost`] of them), so the
+    /// paper's approximation guarantee applies to the surviving ground
+    /// set only.  Retried faults (`retries > 0`, nothing dropped) cost
+    /// wall time, never solution quality.
+    pub faults: FaultReport,
 }
 
 impl DistOutcome {

@@ -8,7 +8,7 @@ use crate::algo::{
     greedi_config, run_dist, run_sequential, randgreedi::RandGreediOpts, DistConfig,
 };
 use crate::constraint::{Cardinality, Constraint, PartitionMatroid};
-use crate::dist::{BackendSpec, ShipSpec};
+use crate::dist::{BackendSpec, FaultSpec, ShipSpec};
 use crate::greedy::GreedyKind;
 use crate::metrics::RunReport;
 use crate::runtime::Engine;
@@ -98,6 +98,9 @@ pub struct Experiment {
     /// `greedyml serve` worker daemons for the tcp backend (`run.hosts`
     /// config key / `--hosts` flag; `None` defers to `GREEDYML_HOSTS`).
     pub hosts: Option<Vec<String>>,
+    /// Worker-loss policy for remote backends (`run.on_fault` config key
+    /// / `--on-fault` flag / `GREEDYML_ON_FAULT`): fail, retry, degrade.
+    pub on_fault: FaultSpec,
 }
 
 /// Build the constraint described by the `[problem]` section.  Shared by
@@ -140,6 +143,8 @@ impl Experiment {
             .map_err(|e| anyhow::anyhow!("run.backend: {e}"))?;
         let ship = ShipSpec::parse(cfg.str_or("run.ship", "auto"))
             .map_err(|e| anyhow::anyhow!("run.ship: {e}"))?;
+        let on_fault = FaultSpec::parse(cfg.str_or("run.on_fault", "auto"))
+            .map_err(|e| anyhow::anyhow!("run.on_fault: {e}"))?;
         Ok(Self {
             name: cfg.str_or("name", "experiment").to_string(),
             problem,
@@ -158,6 +163,7 @@ impl Experiment {
             ship,
             problem_spec: super::problem_spec(cfg),
             hosts: crate::dist::tcp::hosts_from_config(cfg, "run.hosts")?,
+            on_fault,
         })
     }
 
@@ -168,6 +174,7 @@ impl Experiment {
         cfg.ship = self.ship;
         cfg.threads = cfg.threads.or(self.threads);
         cfg.hosts = self.hosts.clone();
+        cfg.on_fault = self.on_fault;
         cfg
     }
 
@@ -221,6 +228,7 @@ impl Experiment {
                             comp_secs: out.secs,
                             comm_secs: 0.0,
                             peak_mem: out.peak_mem,
+                            faults: None,
                         })
                         .map_err(|e| e.to_string())
                 }

@@ -26,7 +26,7 @@ use super::BuiltProblem;
 use crate::algo::{
     dataset_fingerprint, run_dist_pooled, DistConfig, SessionPool,
 };
-use crate::dist::{BackendSpec, ShipSpec};
+use crate::dist::{BackendSpec, FaultSpec, ShipSpec};
 use crate::tree::AccumulationTree;
 use crate::util::config::Config;
 use crate::ElemId;
@@ -79,6 +79,7 @@ pub struct JobQueue {
     submitted: u64,
     cache_hits: u64,
     rejected: u64,
+    failed: u64,
 }
 
 impl Default for JobQueue {
@@ -97,6 +98,7 @@ impl JobQueue {
             submitted: 0,
             cache_hits: 0,
             rejected: 0,
+            failed: 0,
         }
     }
 
@@ -142,9 +144,19 @@ impl JobQueue {
             }
         }
         let out =
-            run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), cfg, &mut self.pool)?;
+            run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), cfg, &mut self.pool)
+                .map_err(|e| {
+                    self.failed += 1;
+                    anyhow::anyhow!(e)
+                })?;
         let warm = self.pool.last_was_warm();
-        self.cache.insert(key, CachedSolution { solution: out.solution.clone(), value: out.value });
+        // A *degraded* solution (machines dropped mid-run) is feasible but
+        // not this job's canonical answer — never cache it, so a repeat
+        // submission recomputes against a healthy fleet.
+        if out.faults.machines_dropped.is_empty() {
+            self.cache
+                .insert(key, CachedSolution { solution: out.solution.clone(), value: out.value });
+        }
         Ok(Submission::Ran { solution: out.solution, value: out.value, warm })
     }
 
@@ -161,6 +173,12 @@ impl JobQueue {
     /// Jobs refused by admission control.
     pub fn rejected(&self) -> u64 {
         self.rejected
+    }
+
+    /// Jobs that errored in flight (after admission, after the pool's own
+    /// retry policy gave up).
+    pub fn failed(&self) -> u64 {
+        self.failed
     }
 
     /// The warm fleet store (init-byte and warm/cold counters live there).
@@ -272,6 +290,9 @@ pub struct JobBatch {
     /// Admission budget in bytes (`jobs.mem_budget`, e.g. `64mb`;
     /// absent = admit everything).
     pub mem_budget: Option<u64>,
+    /// Worker-loss policy for remote backends (`jobs.on_fault`, default
+    /// auto → `GREEDYML_ON_FAULT` → fail).
+    pub on_fault: FaultSpec,
 }
 
 impl JobBatch {
@@ -299,6 +320,8 @@ impl JobBatch {
                     .map_err(|m| anyhow::anyhow!("jobs.mem_budget: {m}"))?,
             ),
         };
+        let on_fault = FaultSpec::parse(cfg.str_or("jobs.on_fault", "auto"))
+            .map_err(|e| anyhow::anyhow!("jobs.on_fault: {e}"))?;
         Ok(Self {
             ks,
             seeds,
@@ -313,6 +336,7 @@ impl JobBatch {
                 t => Some(t as usize),
             },
             mem_budget,
+            on_fault,
         })
     }
 
@@ -339,6 +363,7 @@ impl JobBatch {
             problem: Some(spec),
             threads: self.threads,
             local_view: self.local_view,
+            on_fault: self.on_fault,
             ..DistConfig::greedyml(
                 AccumulationTree::new(self.machines, self.branching),
                 seed,
@@ -441,5 +466,94 @@ mod tests {
         let rej = Submission::Rejected { reason: "x".into() };
         assert_eq!(rej.status(), "rejected");
         assert!(rej.value().is_none());
+    }
+
+    #[test]
+    fn estimate_exactly_at_budget_is_admitted() {
+        // Admission rejects on `estimate > budget`: a job that needs the
+        // whole budget and not a byte more must run, not bounce — the
+        // boundary belongs to the user.
+        let cfg = retail_config(200);
+        let problem = build_problem(&cfg, None).unwrap();
+        let batch = JobBatch::from_config(&cfg).unwrap();
+        let dist = batch.dist_config(&cfg, 4, 1);
+        let estimate = admission_estimate(&problem, &dist, 4);
+        let mut queue = JobQueue::new(Some(estimate));
+        let sub = queue.submit(&problem, &dist).unwrap();
+        assert!(matches!(sub, Submission::Ran { .. }), "estimate == budget admits");
+        assert_eq!(queue.rejected(), 0);
+        let mut tight = JobQueue::new(Some(estimate - 1));
+        let sub = tight.submit(&problem, &dist).unwrap();
+        assert!(matches!(sub, Submission::Rejected { .. }), "one byte less rejects");
+    }
+
+    #[test]
+    fn zero_budget_rejects_everything_without_workers() {
+        let cfg = retail_config(200);
+        let problem = build_problem(&cfg, None).unwrap();
+        let batch = JobBatch::from_config(&cfg).unwrap();
+        let mut queue = JobQueue::new(Some(0));
+        for (seed, k) in batch.jobs() {
+            let sub = queue.submit(&problem, &batch.dist_config(&cfg, k, seed)).unwrap();
+            assert!(matches!(sub, Submission::Rejected { .. }));
+        }
+        assert_eq!(queue.rejected(), 4);
+        assert_eq!(queue.pool().jobs_run(), 0, "no worker was ever touched");
+        assert_eq!(queue.cache_hits(), 0, "rejected jobs are never cached");
+    }
+
+    #[test]
+    fn cache_keys_distinguish_constraint_specs() {
+        // Two jobs identical in every engine parameter but the constraint
+        // spec (cardinality vs matroid over the same k) must not share a
+        // cache slot — the constraint lives only in the problem text.
+        let cfg = retail_config(200);
+        let problem = build_problem(&cfg, None).unwrap();
+        let batch = JobBatch::from_config(&cfg).unwrap();
+        let card = batch.dist_config(&cfg, 4, 1);
+        let matroid = DistConfig {
+            problem: Some(format!(
+                "{}problem.constraint = matroid\nproblem.groups = 2\n",
+                card.problem.as_deref().unwrap()
+            )),
+            ..card.clone()
+        };
+        let n = problem.oracle.n();
+        assert_ne!(
+            job_key(&card, card.problem.as_deref().unwrap(), n),
+            job_key(&matroid, matroid.problem.as_deref().unwrap(), n),
+            "constraint keys are part of the cache identity"
+        );
+        let mut queue = JobQueue::new(None);
+        let first = queue.submit(&problem, &card).unwrap();
+        let second = queue.submit(&problem, &matroid).unwrap();
+        assert!(matches!(first, Submission::Ran { .. }));
+        assert!(matches!(second, Submission::Ran { .. }), "no false cache hit");
+        assert_eq!(queue.cache_hits(), 0);
+    }
+
+    #[test]
+    fn counters_reconcile_over_a_mixed_sequence() {
+        let cfg = retail_config(200);
+        let problem = build_problem(&cfg, None).unwrap();
+        let batch = JobBatch::from_config(&cfg).unwrap();
+        let dist = batch.dist_config(&cfg, 4, 1);
+        let mut queue = JobQueue::new(None);
+        queue.submit(&problem, &dist).unwrap(); // ran
+        queue.submit(&problem, &dist).unwrap(); // cached
+        queue.mem_budget = Some(0);
+        queue.submit(&problem, &batch.dist_config(&cfg, 6, 1)).unwrap(); // rejected
+        queue.submit(&problem, &dist).unwrap(); // cached — cache precedes admission
+        queue.mem_budget = None;
+        queue.submit(&problem, &batch.dist_config(&cfg, 6, 1)).unwrap(); // ran
+        assert_eq!(queue.submitted(), 5);
+        assert_eq!(queue.cache_hits(), 2);
+        assert_eq!(queue.rejected(), 1);
+        assert_eq!(queue.failed(), 0);
+        assert_eq!(
+            queue.submitted(),
+            queue.cache_hits() + queue.rejected() + queue.failed() + 2,
+            "every submission is accounted exactly once (2 ran)"
+        );
     }
 }

@@ -61,6 +61,11 @@ pub fn render_table(reports: &[RunReport], failures: &[(String, String)]) -> Str
         out.push_str(&r.row());
         out.push('\n');
     }
+    for r in reports {
+        if let Some(f) = &r.faults {
+            out.push_str(&format!("{:<14} DEGRADED/FAULTS: {f}\n", r.algo));
+        }
+    }
     for (algo, msg) in failures {
         out.push_str(&format!("{algo:<14} FAILED: {msg}\n"));
     }
@@ -77,6 +82,32 @@ mod tests {
         assert!(t.contains("FAILED"));
         assert!(t.contains("out of memory"));
         assert!(t.lines().count() >= 2);
+    }
+
+    #[test]
+    fn table_renders_fault_notes() {
+        let mut r = crate::metrics::RunReport {
+            algo: "GML(4,2)".into(),
+            dataset: "retail".into(),
+            k: 10,
+            machines: 4,
+            branching: 2,
+            levels: 2,
+            value: 12.0,
+            rel_value_pct: None,
+            critical_calls: 10,
+            total_calls: 40,
+            comp_secs: 0.1,
+            comm_secs: 0.01,
+            peak_mem: 1024,
+            faults: Some("faults 1 retries 0 dropped [3] elements lost 120".into()),
+        };
+        let t = render_table(std::slice::from_ref(&r), &[]);
+        assert!(t.contains("DEGRADED/FAULTS"), "{t}");
+        assert!(t.contains("elements lost 120"), "{t}");
+        r.faults = None;
+        let t = render_table(&[r], &[]);
+        assert!(!t.contains("DEGRADED"), "fault-free table stays clean:\n{t}");
     }
 
     #[test]

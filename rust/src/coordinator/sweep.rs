@@ -7,7 +7,7 @@ use super::experiment::AlgoSpec;
 use super::BuiltProblem;
 use crate::algo::{greedi_config, run_dist_pooled, run_sequential, DistConfig, SessionPool};
 use crate::constraint::Cardinality;
-use crate::dist::{BackendSpec, ShipSpec};
+use crate::dist::{BackendSpec, FaultReport, FaultSpec, ShipSpec};
 use crate::greedy::GreedyKind;
 use crate::metrics::RunReport;
 use crate::tree::AccumulationTree;
@@ -39,6 +39,9 @@ pub struct Sweep {
     /// `greedyml serve` worker daemons for the tcp backend (`sweep.hosts`
     /// config key / `--hosts` flag; `None` defers to `GREEDYML_HOSTS`).
     pub hosts: Option<Vec<String>>,
+    /// Worker-loss policy for remote backends (`sweep.on_fault` config
+    /// key / `--on-fault` flag / `GREEDYML_ON_FAULT`).
+    pub on_fault: FaultSpec,
 }
 
 impl Sweep {
@@ -68,6 +71,8 @@ impl Sweep {
             .map_err(|e| anyhow::anyhow!("sweep.backend: {e}"))?;
         let ship = ShipSpec::parse(cfg.str_or("sweep.ship", "auto"))
             .map_err(|e| anyhow::anyhow!("sweep.ship: {e}"))?;
+        let on_fault = FaultSpec::parse(cfg.str_or("sweep.on_fault", "auto"))
+            .map_err(|e| anyhow::anyhow!("sweep.on_fault: {e}"))?;
         Ok(Self {
             ks,
             algos,
@@ -79,6 +84,7 @@ impl Sweep {
             ship,
             problem_spec: super::problem_spec(cfg),
             hosts: crate::dist::tcp::hosts_from_config(cfg, "sweep.hosts")?,
+            on_fault,
         })
     }
 
@@ -94,6 +100,7 @@ impl Sweep {
         ));
         dist.ship = self.ship;
         dist.hosts = self.hosts.clone();
+        dist.on_fault = self.on_fault;
         dist
     }
 
@@ -124,6 +131,7 @@ impl Sweep {
                 let mut comps = Vec::new();
                 let mut comms = Vec::new();
                 let mut peak = 0u64;
+                let mut fault_notes: Vec<String> = Vec::new();
                 let mut failed = None;
                 let (m, b, l) = match *spec {
                     AlgoSpec::Greedy => (1, 0, 0),
@@ -135,7 +143,14 @@ impl Sweep {
                         AlgoSpec::Greedy => {
                             run_sequential(oracle, &constraint, GreedyKind::Lazy, self.mem_limit)
                                 .map(|s| {
-                                    (s.greedy.value, s.greedy.calls, s.secs, 0.0, s.peak_mem)
+                                    (
+                                        s.greedy.value,
+                                        s.greedy.calls,
+                                        s.secs,
+                                        0.0,
+                                        s.peak_mem,
+                                        FaultReport::default(),
+                                    )
                                 })
                                 .map_err(|e| e.to_string())
                         }
@@ -149,6 +164,7 @@ impl Sweep {
                                         o.comp_secs,
                                         o.comm_secs,
                                         o.peak_mem(),
+                                        o.faults,
                                     )
                                 })
                                 .map_err(|e| e.to_string())
@@ -168,6 +184,7 @@ impl Sweep {
                                         o.comp_secs,
                                         o.comm_secs,
                                         o.peak_mem(),
+                                        o.faults,
                                     )
                                 })
                                 .map_err(|e| e.to_string())
@@ -192,18 +209,22 @@ impl Sweep {
                                         o.comp_secs,
                                         o.comm_secs,
                                         o.peak_mem(),
+                                        o.faults,
                                     )
                                 })
                                 .map_err(|e| e.to_string())
                         }
                     };
                     match result {
-                        Ok((v, c, comp, comm, p)) => {
+                        Ok((v, c, comp, comm, p, faults)) => {
                             vals.push(v.max(1e-12));
                             calls.push(c.max(1) as f64);
                             comps.push(comp.max(1e-9));
                             comms.push(comm.max(1e-12));
                             peak = peak.max(p);
+                            if !faults.is_empty() {
+                                fault_notes.push(format!("rep {r}: {faults}"));
+                            }
                         }
                         Err(e) => {
                             failed = Some(e);
@@ -228,6 +249,7 @@ impl Sweep {
                             comp_secs: geomean(&comps),
                             comm_secs: geomean(&comms),
                             peak_mem: peak,
+                            faults: (!fault_notes.is_empty()).then(|| fault_notes.join("; ")),
                         }
                         .with_baseline(baseline);
                         reports.push(report);

@@ -66,6 +66,7 @@
 //! assert!(!out.comm_measured, "the thread backend models communication");
 //! ```
 
+use super::fault::FaultReport;
 use super::node::{accum_step, leaf_step, NodeParams, NodeState, StepReport};
 use super::pool::Executor;
 use super::{CommModel, DistError, MachineStats};
@@ -229,6 +230,11 @@ pub struct BackendOutcome {
     pub value: f64,
     /// Per-machine lifetime statistics, indexed by machine id.
     pub machines: Vec<MachineStats>,
+    /// Fault accounting for this job: empty unless a supervised remote
+    /// fleet ([`FaultPolicy`](super::FaultPolicy) retry/degrade) saw
+    /// transport faults.  The thread backend cannot fault and always
+    /// reports empty.
+    pub faults: FaultReport,
 }
 
 /// The three responsibilities the engine delegates: superstep fan-out,
@@ -394,7 +400,7 @@ impl Backend for ThreadBackend<'_> {
             .iter_mut()
             .map(|s| s.take().expect("machine stats missing"))
             .collect();
-        Ok(BackendOutcome { solution, value, machines })
+        Ok(BackendOutcome { solution, value, machines, faults: FaultReport::default() })
     }
 
     fn measures_comm(&self) -> bool {

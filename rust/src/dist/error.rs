@@ -1,16 +1,29 @@
-//! Failures of a distributed run.
+//! Failures of a distributed run, classified by what recovery they admit.
 //!
 //! Out-of-memory is the failure mode the runtime semantics produce: the
 //! paper's §6.2 experiments *expect* runs to die when a machine's budget
 //! cannot hold the data or the accumulated child solutions, and the
 //! coordinator reports such runs as failures rather than panicking.  The
-//! framed backends add a second mode — [`DistError::Backend`] — for the
-//! machinery itself: worker spawn and wire-protocol faults on the
-//! process backend; unreachable hosts, version-handshake mismatches,
-//! dropped connections and per-frame timeouts on the tcp backend.  Those
-//! are bugs or environment problems, never an expected experimental
-//! outcome, and the two kinds must never be confused — a §6.2 memory
-//! result is a finding, a dead worker is an incident.
+//! framed backends add two more modes for the machinery itself, split by
+//! the taxonomy [`DistError::is_retryable`] encodes:
+//!
+//! * [`DistError::Transport`] — **retryable**: the *conversation* with a
+//!   worker broke (connection refused or timed out, a worker died
+//!   mid-session, a frame read hit the socket timeout).  The machine's
+//!   work is deterministic and replayable from the ship plan, so a
+//!   supervisor may re-dispatch it to a fresh session
+//!   ([`FaultPolicy::Retry`](super::FaultPolicy)) or drop the machine's
+//!   contribution with accounting
+//!   ([`FaultPolicy::Degrade`](super::FaultPolicy)).
+//! * [`DistError::Backend`] — **fatal**: the machinery is *wrong*, not
+//!   unlucky — spawn failures, protocol misuse, version-handshake
+//!   mismatches, unbuildable problem specs, oracle errors.  Retrying
+//!   replays the same bug.
+//!
+//! [`DistError::OutOfMemory`] is likewise fatal to the run: it is a §6.2
+//! memory *result*, not an incident, and must never be confused with an
+//! infrastructure fault — a memory result is a finding, a dead worker is
+//! an incident, and only the incident is worth retrying.
 
 use crate::util::fmt_bytes;
 use crate::MachineId;
@@ -37,21 +50,47 @@ pub enum DistError {
         /// The per-machine limit.
         limit: u64,
     },
-    /// The execution backend itself failed (worker spawn, wire protocol,
-    /// missing problem spec, unreachable or version-mismatched TCP
-    /// workers, connection loss, frame timeout) — distinct from
-    /// algorithmic OOM because the experiments must never confuse an
-    /// infrastructure fault with a §6.2 memory result.
+    /// The execution backend itself failed in a way retrying cannot fix
+    /// (worker spawn, wire-protocol misuse, version-handshake mismatch,
+    /// missing or unbuildable problem spec) — distinct from algorithmic
+    /// OOM because the experiments must never confuse an infrastructure
+    /// fault with a §6.2 memory result.
     Backend {
         /// Human-readable description of the fault.
+        message: String,
+    },
+    /// The conversation with a worker broke: connection refused or timed
+    /// out, a worker died before replying, a frame read hit the socket
+    /// timeout.  **Retryable** — the machine's work replays
+    /// deterministically from the ship plan, so a supervisor may
+    /// re-dispatch it ([`super::FaultPolicy::Retry`]) or drop its
+    /// contribution with accounting ([`super::FaultPolicy::Degrade`]).
+    Transport {
+        /// Human-readable description of the fault, naming the worker.
         message: String,
     },
 }
 
 impl DistError {
-    /// Shorthand for a backend-infrastructure error.
+    /// Shorthand for a fatal backend-infrastructure error.
     pub fn backend(message: impl Into<String>) -> Self {
         DistError::Backend { message: message.into() }
+    }
+
+    /// Shorthand for a retryable transport fault.
+    pub fn transport(message: impl Into<String>) -> Self {
+        DistError::Transport { message: message.into() }
+    }
+
+    /// Whether a supervisor may retry (or degrade past) this failure.
+    ///
+    /// Only [`DistError::Transport`] qualifies: the fault is in the
+    /// *conversation*, not the work, and the work replays
+    /// deterministically.  [`DistError::OutOfMemory`] is an expected
+    /// experimental result and [`DistError::Backend`] is a bug or a
+    /// misconfiguration — retrying either replays the same outcome.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, DistError::Transport { .. })
     }
 }
 
@@ -69,6 +108,7 @@ impl std::fmt::Display for DistError {
                 )
             }
             DistError::Backend { message } => write!(f, "backend failure: {message}"),
+            DistError::Transport { message } => write!(f, "transport failure: {message}"),
         }
     }
 }
@@ -100,5 +140,27 @@ mod tests {
         let e = DistError::backend("worker 3 exited before replying");
         assert!(e.to_string().contains("backend failure"), "{e}");
         assert!(e.to_string().contains("worker 3"), "{e}");
+    }
+
+    #[test]
+    fn only_transport_faults_are_retryable() {
+        assert!(DistError::transport("worker 1 disconnected").is_retryable());
+        assert!(!DistError::backend("protocol violation").is_retryable());
+        let oom = DistError::OutOfMemory {
+            machine: 2,
+            level: 0,
+            label: "partition data".to_string(),
+            requested: 1,
+            in_use: 0,
+            limit: 1,
+        };
+        assert!(!oom.is_retryable(), "a §6.2 memory result is a finding, not an incident");
+    }
+
+    #[test]
+    fn transport_errors_display_distinctly_from_backend_errors() {
+        let e = DistError::transport("worker 1 at 10.0.0.2:9000 disconnected");
+        assert!(e.to_string().contains("transport failure"), "{e}");
+        assert!(e.to_string().contains("10.0.0.2:9000"), "{e}");
     }
 }

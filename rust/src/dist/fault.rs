@@ -1,0 +1,467 @@
+//! Fault policy, fault accounting, and the deterministic fault-injection
+//! harness.
+//!
+//! Three pieces live here, shared by the supervisor
+//! ([`RemoteFleet`](super::remote)) and the worker side
+//! ([`proc`](super::proc)):
+//!
+//! * [`FaultSpec`] / [`FaultPolicy`] — what the coordinator does when a
+//!   worker dies mid-run (`--on-fault {fail,retry,degrade}` /
+//!   `run.on_fault` / `GREEDYML_ON_FAULT`).  `fail` preserves the
+//!   pre-supervision behavior: first transport fault aborts the run.
+//!   `retry` re-dispatches the dead machine's work to a fresh session
+//!   with bounded attempts and exponential backoff — bit-identical to
+//!   the fault-free run, because the partition and every seeded draw
+//!   replay deterministically from the ship plan.  `degrade` drops the
+//!   dead machine's contribution from its parent's accumulation and
+//!   keeps going, with full accounting in the [`FaultReport`].
+//! * [`FaultReport`] — the accounting a degraded (or retried) run
+//!   carries out: faults seen, retries spent, machines dropped, data
+//!   elements lost with them.
+//! * [`FaultPlan`] — a deterministic fault-injection plan
+//!   (`GREEDYML_FAULT_PLAN`, e.g.
+//!   `kill:m2@leaf,delay:m0@ship:200ms,drop-frame:m1@recv`) consulted by
+//!   the worker-side command loop, so every recovery path is testable in
+//!   CI without real crashes.  The plan is pure data: which machine,
+//!   which protocol point, what to do — no wall clock, no RNG — so a
+//!   faulty run replays exactly.
+//!
+//! # Fault-plan grammar
+//!
+//! ```text
+//! plan    := entry ("," entry)*
+//! entry   := action ":" "m" machine "@" point [":" arg]
+//! action  := "kill" | "delay" | "drop-frame"
+//! point   := "init" | "job" | "leaf" | "superstep" N | "ship" | "recv"
+//! arg     := duration for delay, e.g. "200ms" | "1s" | "50" (ms)
+//! ```
+//!
+//! Points name the worker-side command about to be handled: `init` the
+//! session `Init`/`InitPart`, `job` the `Job` frame, `leaf` (alias
+//! `superstep0`) the `Leaf` command, `superstepN` the `Accum` of level
+//! `N`, `ship` the `Ship`, `recv` the `Recv`.  Each entry fires **once**
+//! per session; a revived replacement session does not inherit the plan
+//! (the supervisor's reconnects scrub `GREEDYML_FAULT_PLAN` from
+//! respawned process workers, and tcp retries dial the next host).
+//!
+//! What each action does at its point: `kill` drops the connection
+//! without replying (the worker process exits; a `greedyml serve` daemon
+//! only loses the one session) — exactly what a crashed or OOM-killed
+//! host looks like from the coordinator.  `delay` sleeps the given
+//! duration, then handles the command normally — for exercising timeout
+//! paths.  `drop-frame` swallows the command without replying, so the
+//! coordinator's frame timeout turns it into a retryable
+//! [`DistError::Transport`]; only meaningful on the tcp backend (process
+//! pipes have no read timeout).
+
+use super::DistError;
+use crate::MachineId;
+use std::time::Duration;
+
+/// How many times the supervisor attempts to revive one dead machine
+/// before giving up (per fault, not per run).
+pub const RETRY_ATTEMPTS: u32 = 3;
+
+/// Base delay of the supervisor's exponential backoff between revival
+/// attempts: attempt `a` sleeps `RETRY_BACKOFF_BASE << a`.
+pub const RETRY_BACKOFF_BASE: Duration = Duration::from_millis(50);
+
+/// What the coordinator does when a worker dies mid-run — the
+/// `--on-fault` flag / `run.on_fault` config key / `GREEDYML_ON_FAULT`
+/// environment variable, before `Auto` is resolved.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FaultSpec {
+    /// Defer to `GREEDYML_ON_FAULT` (`fail` | `retry` | `degrade`),
+    /// defaulting to [`FaultPolicy::Fail`].
+    #[default]
+    Auto,
+    /// First transport fault aborts the run (the pre-supervision
+    /// behavior).
+    Fail,
+    /// Re-dispatch a dead machine's work to a fresh session, bounded
+    /// attempts with exponential backoff; results stay bit-identical.
+    Retry,
+    /// Drop a dead machine's contribution and keep going, accounting
+    /// for the loss in the run's [`FaultReport`].
+    Degrade,
+}
+
+impl FaultSpec {
+    /// Parse a config/CLI token (`auto` | `fail` | `retry` | `degrade`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" | "" => Ok(Self::Auto),
+            "fail" => Ok(Self::Fail),
+            "retry" => Ok(Self::Retry),
+            "degrade" => Ok(Self::Degrade),
+            other => Err(format!("unknown fault policy '{other}' (auto | fail | retry | degrade)")),
+        }
+    }
+
+    /// Resolve `Auto` through `GREEDYML_ON_FAULT`; an unparsable variable
+    /// is an error, not a silent fallback — a mis-spelt policy must not
+    /// quietly change how an experiment treats worker loss.
+    pub fn resolve(self) -> Result<FaultPolicy, DistError> {
+        match self {
+            Self::Fail => Ok(FaultPolicy::Fail),
+            Self::Retry => Ok(FaultPolicy::Retry),
+            Self::Degrade => Ok(FaultPolicy::Degrade),
+            Self::Auto => match std::env::var("GREEDYML_ON_FAULT") {
+                Err(_) => Ok(FaultPolicy::Fail),
+                Ok(v) => match Self::parse(&v) {
+                    Ok(Self::Retry) => Ok(FaultPolicy::Retry),
+                    Ok(Self::Degrade) => Ok(FaultPolicy::Degrade),
+                    Ok(_) => Ok(FaultPolicy::Fail),
+                    Err(e) => Err(DistError::backend(format!("GREEDYML_ON_FAULT: {e}"))),
+                },
+            },
+        }
+    }
+}
+
+/// A [`FaultSpec`] with `Auto` already resolved.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FaultPolicy {
+    /// Abort the run on the first transport fault.
+    #[default]
+    Fail,
+    /// Revive dead machines and replay their work.
+    Retry,
+    /// Drop dead machines' contributions with accounting.
+    Degrade,
+}
+
+impl FaultPolicy {
+    /// The config/CLI token for this policy.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Fail => "fail",
+            Self::Retry => "retry",
+            Self::Degrade => "degrade",
+        }
+    }
+}
+
+/// The fault accounting a supervised run carries out in its
+/// [`DistOutcome`](crate::algo::DistOutcome): what went wrong, what the
+/// supervisor spent recovering, and what (under
+/// [`FaultPolicy::Degrade`]) the answer no longer covers.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultReport {
+    /// Transport faults observed during the run (a machine that failed,
+    /// was revived, and failed again counts once per failure).
+    pub faults_seen: u64,
+    /// Revival attempts that *succeeded* — each one re-established a
+    /// session and replayed the dead machine's command log.
+    pub retries: u64,
+    /// Machines whose contribution was dropped under
+    /// [`FaultPolicy::Degrade`], in drop order.
+    pub machines_dropped: Vec<MachineId>,
+    /// Ground-set elements that were only covered by dropped machines'
+    /// partitions — the data the degraded answer never saw.
+    pub elements_lost: u64,
+}
+
+impl FaultReport {
+    /// True when the run saw no faults at all.
+    pub fn is_empty(&self) -> bool {
+        self.faults_seen == 0
+            && self.retries == 0
+            && self.machines_dropped.is_empty()
+            && self.elements_lost == 0
+    }
+
+    /// Fold another report into this one (per-job accounting summed into
+    /// a batch total).
+    pub fn absorb(&mut self, other: &FaultReport) {
+        self.faults_seen += other.faults_seen;
+        self.retries += other.retries;
+        self.machines_dropped.extend_from_slice(&other.machines_dropped);
+        self.elements_lost += other.elements_lost;
+    }
+}
+
+impl std::fmt::Display for FaultReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "faults {} retries {} dropped {:?} elements lost {}",
+            self.faults_seen, self.retries, self.machines_dropped, self.elements_lost
+        )
+    }
+}
+
+/// What an injected fault does when its point is reached.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Drop the connection without replying — a crashed host.
+    Kill,
+    /// Sleep this long, then handle the command normally.
+    Delay(Duration),
+    /// Swallow the command without replying (tcp frame timeout fodder).
+    DropFrame,
+}
+
+/// A protocol point at which an injected fault can fire, named from the
+/// worker's side: the command it is about to handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// The session `Init` / `InitPart` frame.
+    Init,
+    /// The `Job` frame.
+    Job,
+    /// Superstep `N`: the `Leaf` command for `N = 0` (alias `leaf`), the
+    /// `Accum` of level `N` for `N ≥ 1`.
+    Superstep(u32),
+    /// The `Ship` command.
+    Ship,
+    /// The `Recv` command.
+    Recv,
+}
+
+/// One parsed plan entry, one-shot.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct PlanEntry {
+    action: FaultAction,
+    machine: MachineId,
+    point: FaultPoint,
+    fired: bool,
+}
+
+/// A deterministic fault-injection plan: which machines fail, where in
+/// the protocol, and how.  Parsed from `GREEDYML_FAULT_PLAN` by each
+/// worker session; entries fire at most once.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    entries: Vec<PlanEntry>,
+}
+
+impl FaultPlan {
+    /// Parse a plan string (see the module docs for the grammar).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut entries = Vec::new();
+        for raw in s.split(',') {
+            let raw = raw.trim();
+            if raw.is_empty() {
+                continue;
+            }
+            entries.push(Self::parse_entry(raw)?);
+        }
+        Ok(FaultPlan { entries })
+    }
+
+    fn parse_entry(raw: &str) -> Result<PlanEntry, String> {
+        let mut pieces = raw.splitn(2, ':');
+        let action_tok = pieces.next().unwrap_or_default().trim();
+        let rest = pieces
+            .next()
+            .ok_or_else(|| format!("fault entry '{raw}': expected action:mN@point[:arg]"))?;
+        let (target, arg) = match rest.split_once(':') {
+            Some((t, a)) => (t.trim(), Some(a.trim())),
+            None => (rest.trim(), None),
+        };
+        let (machine_tok, point_tok) = target
+            .split_once('@')
+            .ok_or_else(|| format!("fault entry '{raw}': expected mN@point after the action"))?;
+        let machine: MachineId = machine_tok
+            .trim()
+            .strip_prefix('m')
+            .and_then(|d| d.parse().ok())
+            .ok_or_else(|| format!("fault entry '{raw}': bad machine '{machine_tok}' (mN)"))?;
+        let point = Self::parse_point(point_tok.trim())
+            .ok_or_else(|| format!("fault entry '{raw}': unknown point '{point_tok}'"))?;
+        let action = match action_tok.to_ascii_lowercase().as_str() {
+            "kill" => {
+                if arg.is_some() {
+                    return Err(format!("fault entry '{raw}': kill takes no argument"));
+                }
+                FaultAction::Kill
+            }
+            "drop-frame" => {
+                if arg.is_some() {
+                    return Err(format!("fault entry '{raw}': drop-frame takes no argument"));
+                }
+                FaultAction::DropFrame
+            }
+            "delay" => {
+                let arg =
+                    arg.ok_or_else(|| format!("fault entry '{raw}': delay needs a duration"))?;
+                FaultAction::Delay(Self::parse_duration(arg).ok_or_else(|| {
+                    format!("fault entry '{raw}': bad duration '{arg}' (e.g. 200ms, 1s)")
+                })?)
+            }
+            other => {
+                return Err(format!(
+                    "fault entry '{raw}': unknown action '{other}' (kill | delay | drop-frame)"
+                ))
+            }
+        };
+        Ok(PlanEntry { action, machine, point, fired: false })
+    }
+
+    fn parse_point(tok: &str) -> Option<FaultPoint> {
+        let tok = tok.to_ascii_lowercase();
+        match tok.as_str() {
+            "init" => Some(FaultPoint::Init),
+            "job" => Some(FaultPoint::Job),
+            "leaf" => Some(FaultPoint::Superstep(0)),
+            "ship" => Some(FaultPoint::Ship),
+            "recv" => Some(FaultPoint::Recv),
+            _ => {
+                let n = tok.strip_prefix("superstep")?;
+                n.parse().ok().map(FaultPoint::Superstep)
+            }
+        }
+    }
+
+    fn parse_duration(tok: &str) -> Option<Duration> {
+        if let Some(ms) = tok.strip_suffix("ms") {
+            return ms.trim().parse().ok().map(Duration::from_millis);
+        }
+        if let Some(s) = tok.strip_suffix('s') {
+            return s.trim().parse().ok().map(Duration::from_secs);
+        }
+        tok.parse().ok().map(Duration::from_millis)
+    }
+
+    /// The plan a worker session should follow, from
+    /// `GREEDYML_FAULT_PLAN`.  `Ok(None)` when the variable is unset or
+    /// the plan is empty; an unparsable plan is an error (a mis-spelt
+    /// plan must not silently run fault-free).
+    pub fn from_env() -> Result<Option<Self>, DistError> {
+        match std::env::var("GREEDYML_FAULT_PLAN") {
+            Err(_) => Ok(None),
+            Ok(v) => match Self::parse(&v) {
+                Ok(plan) if plan.entries.is_empty() => Ok(None),
+                Ok(plan) => Ok(Some(plan)),
+                Err(e) => Err(DistError::backend(format!("GREEDYML_FAULT_PLAN: {e}"))),
+            },
+        }
+    }
+
+    /// Consult the plan at a protocol point: returns the action of the
+    /// first unfired entry matching `(machine, point)` and marks it
+    /// fired, or `None`.
+    pub fn trigger(&mut self, machine: MachineId, point: FaultPoint) -> Option<FaultAction> {
+        let entry = self
+            .entries
+            .iter_mut()
+            .find(|e| !e.fired && e.machine == machine && e.point == point)?;
+        entry.fired = true;
+        Some(entry.action)
+    }
+
+    /// True when no entries remain unfired.
+    pub fn exhausted(&self) -> bool {
+        self.entries.iter().all(|e| e.fired)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_spec_parses_tokens() {
+        assert_eq!(FaultSpec::parse("auto").unwrap(), FaultSpec::Auto);
+        assert_eq!(FaultSpec::parse(" Fail ").unwrap(), FaultSpec::Fail);
+        assert_eq!(FaultSpec::parse("retry").unwrap(), FaultSpec::Retry);
+        assert_eq!(FaultSpec::parse("degrade").unwrap(), FaultSpec::Degrade);
+        assert!(FaultSpec::parse("panic").is_err());
+    }
+
+    #[test]
+    fn explicit_fault_specs_resolve_without_env() {
+        assert_eq!(FaultSpec::Fail.resolve().unwrap(), FaultPolicy::Fail);
+        assert_eq!(FaultSpec::Retry.resolve().unwrap(), FaultPolicy::Retry);
+        assert_eq!(FaultSpec::Degrade.resolve().unwrap(), FaultPolicy::Degrade);
+    }
+
+    #[test]
+    fn plan_parses_the_documented_example() {
+        let mut plan = FaultPlan::parse("kill:m2@leaf,delay:m0@ship:200ms,drop-frame:m1@recv")
+            .expect("documented plan parses");
+        assert_eq!(plan.trigger(2, FaultPoint::Superstep(0)), Some(FaultAction::Kill));
+        assert_eq!(
+            plan.trigger(0, FaultPoint::Ship),
+            Some(FaultAction::Delay(Duration::from_millis(200)))
+        );
+        assert_eq!(plan.trigger(1, FaultPoint::Recv), Some(FaultAction::DropFrame));
+        assert!(plan.exhausted());
+    }
+
+    #[test]
+    fn superstep_points_parse_and_leaf_is_superstep_zero() {
+        let mut plan = FaultPlan::parse("kill:m1@superstep2,kill:m3@superstep0").unwrap();
+        assert_eq!(plan.trigger(1, FaultPoint::Superstep(2)), Some(FaultAction::Kill));
+        assert_eq!(plan.trigger(3, FaultPoint::Superstep(0)), Some(FaultAction::Kill));
+    }
+
+    #[test]
+    fn entries_fire_once_and_filter_by_machine() {
+        let mut plan = FaultPlan::parse("kill:m2@leaf").unwrap();
+        assert_eq!(plan.trigger(0, FaultPoint::Superstep(0)), None, "wrong machine");
+        assert_eq!(plan.trigger(2, FaultPoint::Ship), None, "wrong point");
+        assert_eq!(plan.trigger(2, FaultPoint::Superstep(0)), Some(FaultAction::Kill));
+        assert_eq!(plan.trigger(2, FaultPoint::Superstep(0)), None, "one-shot");
+    }
+
+    #[test]
+    fn bad_plans_are_rejected_with_the_offending_entry() {
+        for bad in [
+            "explode:m0@leaf",
+            "kill:m0",
+            "kill:x0@leaf",
+            "kill:m0@nowhere",
+            "delay:m0@ship",
+            "delay:m0@ship:fast",
+            "kill:m0@leaf:why",
+        ] {
+            let err = FaultPlan::parse(bad).expect_err(bad);
+            assert!(err.contains(bad.split(',').next().unwrap()), "{err}");
+        }
+    }
+
+    #[test]
+    fn empty_and_whitespace_plans_are_empty() {
+        assert!(FaultPlan::parse("").unwrap().exhausted());
+        assert!(FaultPlan::parse(" , ").unwrap().exhausted());
+    }
+
+    #[test]
+    fn durations_parse_ms_seconds_and_bare_millis() {
+        let mut plan =
+            FaultPlan::parse("delay:m0@job:1s,delay:m1@job:250ms,delay:m2@job:50").unwrap();
+        assert_eq!(
+            plan.trigger(0, FaultPoint::Job),
+            Some(FaultAction::Delay(Duration::from_secs(1)))
+        );
+        assert_eq!(
+            plan.trigger(1, FaultPoint::Job),
+            Some(FaultAction::Delay(Duration::from_millis(250)))
+        );
+        assert_eq!(
+            plan.trigger(2, FaultPoint::Job),
+            Some(FaultAction::Delay(Duration::from_millis(50)))
+        );
+    }
+
+    #[test]
+    fn fault_report_absorbs_and_knows_emptiness() {
+        let mut total = FaultReport::default();
+        assert!(total.is_empty());
+        let job = FaultReport {
+            faults_seen: 2,
+            retries: 1,
+            machines_dropped: vec![3],
+            elements_lost: 120,
+        };
+        total.absorb(&job);
+        total.absorb(&job);
+        assert_eq!(total.faults_seen, 4);
+        assert_eq!(total.retries, 2);
+        assert_eq!(total.machines_dropped, vec![3, 3]);
+        assert_eq!(total.elements_lost, 240);
+        assert!(!total.is_empty());
+    }
+}

@@ -28,6 +28,14 @@
 //!   constraint and seed — execute against the resident shards before the
 //!   session is released.  [`crate::algo::SessionPool`] keeps warm fleets
 //!   across `run_dist` calls; sweeps and the job queue ride on it.
+//! * [`fault`] — fault tolerance for those remote fleets: the
+//!   retryable/fatal error taxonomy's policy side ([`FaultSpec`] /
+//!   [`FaultPolicy`]: `--on-fault` / `run.on_fault` /
+//!   `GREEDYML_ON_FAULT` — fail, retry with deterministic re-dispatch,
+//!   or degrade with [`FaultReport`] accounting), and the seeded
+//!   fault-injection harness ([`FaultPlan`], `GREEDYML_FAULT_PLAN`) the
+//!   worker side consults so every recovery path is CI-testable without
+//!   real crashes.
 //! * [`node`] — the per-machine node program (leaf GREEDY, accumulate,
 //!   ship) every backend executes bit-identically.
 //! * [`wire`] — the length-prefixed JSON frames of the worker protocol
@@ -65,6 +73,7 @@
 pub mod backend;
 pub mod comm;
 pub mod error;
+pub mod fault;
 pub mod memory;
 pub mod node;
 pub mod pool;
@@ -81,6 +90,7 @@ pub use backend::{
 };
 pub use comm::CommModel;
 pub use error::DistError;
+pub use fault::{FaultPlan, FaultPolicy, FaultReport, FaultSpec};
 pub use memory::MemoryMeter;
 pub use node::{ChildMsg, NodeParams, NodeState, StepReport};
 pub use pool::{parallel_map, Executor};

@@ -30,6 +30,7 @@
 //! the same sessions over sockets.
 
 use super::backend::{AccumTask, Backend, BackendOutcome, ShipPlan};
+use super::fault::{FaultAction, FaultPlan, FaultPoint, FaultPolicy};
 use super::node::{accum_step, leaf_step, ChildMsg, NodeParams, NodeState};
 use super::remote::{FramedWorker, RemoteFleet};
 use super::wire::{read_frame, write_frame, FromWorker, ToWorker};
@@ -39,7 +40,7 @@ use crate::objective::{Oracle, PartitionOracle};
 use crate::{ElemId, MachineId};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Resolve the worker executable: explicit config value, then the
 /// `GREEDYML_WORKER_BIN` environment variable, then this very binary.
@@ -58,14 +59,17 @@ fn worker_binary(explicit: Option<&str>) -> Result<std::path::PathBuf, DistError
 
 /// The forked worker processes, killed on drop unless already exited.
 /// Separate from [`ProcessBackend`] so an error during the Init/Ready
-/// handshake (which consumes the guard) still reaps every child.
-struct Children(Vec<Child>);
+/// handshake (which consumes the guard) still reaps every child.  Shared
+/// (`Arc<Mutex<…>>`) with the supervisor's respawn closure, which pushes
+/// replacement workers here so they are reaped the same way.
+struct Children(Arc<Mutex<Vec<Child>>>);
 
 impl Drop for Children {
     fn drop(&mut self) {
         // On the success path the workers have already exited after Final;
         // on error paths make sure no orphans linger.
-        for child in &mut self.0 {
+        let mut children = self.0.lock().unwrap_or_else(|e| e.into_inner());
+        for child in children.iter_mut() {
             match child.try_wait() {
                 Ok(Some(_)) => {}
                 _ => {
@@ -75,6 +79,28 @@ impl Drop for Children {
             }
         }
     }
+}
+
+/// Fork one `greedyml worker` process and frame its stdio.  Replacement
+/// workers (`scrub_fault_plan`) do not inherit `GREEDYML_FAULT_PLAN` —
+/// a revived machine simulates a healthy spare host, and an injected
+/// fault must not re-fire forever.
+fn spawn_worker(
+    bin: &std::path::Path,
+    machine: MachineId,
+    scrub_fault_plan: bool,
+) -> Result<(Child, FramedWorker<BufReader<ChildStdout>, BufWriter<ChildStdin>>), DistError> {
+    let mut cmd = Command::new(bin);
+    cmd.arg("worker").stdin(Stdio::piped()).stdout(Stdio::piped()).stderr(Stdio::inherit());
+    if scrub_fault_plan {
+        cmd.env_remove("GREEDYML_FAULT_PLAN");
+    }
+    let mut child = cmd
+        .spawn()
+        .map_err(|e| DistError::backend(format!("cannot spawn worker {}: {e}", bin.display())))?;
+    let stdin = BufWriter::new(child.stdin.take().expect("piped stdin"));
+    let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
+    Ok((child, FramedWorker::new(machine, stdout, stdin)))
 }
 
 /// The fleet driver over pipe transports.
@@ -97,6 +123,13 @@ impl ProcessBackend {
     /// acks what it rebuilt.  `n` is the global ground-set size the spec
     /// describes.  No job is started — call
     /// [`begin_job`](ProcessBackend::begin_job) per run.
+    ///
+    /// Under [`FaultPolicy::Retry`] or [`FaultPolicy::Degrade`] the fleet
+    /// is supervised: a worker that dies mid-run is respawned (a fresh
+    /// `greedyml worker`, its session re-established and its command log
+    /// replayed — bit-identical, since the shipped problem and every
+    /// seeded draw replay deterministically) or dropped with accounting.
+    /// Replacement workers do not inherit `GREEDYML_FAULT_PLAN`.
     pub fn spawn(
         machines: u32,
         threads: usize,
@@ -104,26 +137,28 @@ impl ProcessBackend {
         n: usize,
         worker_bin: Option<&str>,
         session: u64,
+        fault: FaultPolicy,
     ) -> Result<Self, DistError> {
         let bin = worker_binary(worker_bin)?;
-        let mut children = Children(Vec::with_capacity(machines as usize));
+        let children = Children(Arc::new(Mutex::new(Vec::with_capacity(machines as usize))));
         let mut workers = Vec::with_capacity(machines as usize);
         for machine in 0..machines {
-            let mut child = Command::new(&bin)
-                .arg("worker")
-                .stdin(Stdio::piped())
-                .stdout(Stdio::piped())
-                .stderr(Stdio::inherit())
-                .spawn()
-                .map_err(|e| {
-                    DistError::backend(format!("cannot spawn worker {}: {e}", bin.display()))
-                })?;
-            let stdin = BufWriter::new(child.stdin.take().expect("piped stdin"));
-            let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
-            children.0.push(child);
-            workers.push(FramedWorker::new(machine, stdout, stdin));
+            let (child, worker) = spawn_worker(&bin, machine, false)?;
+            children.0.lock().unwrap_or_else(|e| e.into_inner()).push(child);
+            workers.push(worker);
         }
-        let inner = RemoteFleet::establish("process", workers, threads, plan, n, session)?;
+        let mut inner = RemoteFleet::establish("process", workers, threads, plan, n, session)?;
+        if fault != FaultPolicy::Fail {
+            let roster = Arc::clone(&children.0);
+            inner.supervise(
+                fault,
+                Box::new(move |machine, _attempt| {
+                    let (child, worker) = spawn_worker(&bin, machine, true)?;
+                    roster.lock().unwrap_or_else(|e| e.into_inner()).push(child);
+                    Ok(worker)
+                }),
+            );
+        }
         Ok(Self { children, inner })
     }
 
@@ -141,9 +176,21 @@ impl ProcessBackend {
     /// the [`Children`] drop guard has nothing to kill.
     pub fn release(&mut self) {
         self.inner.release();
-        for child in &mut self.children.0 {
+        let mut children = self.children.0.lock().unwrap_or_else(|e| e.into_inner());
+        for child in children.iter_mut() {
             let _ = child.wait();
         }
+    }
+
+    /// Probe every live machine with `Ping` (see [`RemoteFleet::ping_all`]).
+    pub fn ping_all(&mut self) -> Result<(), DistError> {
+        self.inner.ping_all()
+    }
+
+    /// The fault accounting of the most recent job (see
+    /// [`RemoteFleet::fault_report`]).
+    pub fn fault_report(&self) -> super::FaultReport {
+        self.inner.fault_report()
     }
 }
 
@@ -262,6 +309,28 @@ pub(crate) fn serve_session(
             _ => anyhow::bail!("worker: first frame must be init or init_part"),
         };
 
+    // The deterministic fault-injection plan this session follows
+    // (`GREEDYML_FAULT_PLAN`); an unparsable plan is a hard error — it
+    // must not silently run fault-free.
+    let mut fault = match FaultPlan::from_env() {
+        Ok(f) => f,
+        Err(e) => {
+            reply(output, &FromWorker::Fail(e.clone()))?;
+            anyhow::bail!("{e}");
+        }
+    };
+    let mut suppress_ready = false;
+    if let Some(plan) = fault.as_mut() {
+        match plan.trigger(machine, FaultPoint::Init) {
+            Some(FaultAction::Kill) => {
+                anyhow::bail!("fault-injected kill: machine {machine} at init")
+            }
+            Some(FaultAction::Delay(d)) => std::thread::sleep(d),
+            Some(FaultAction::DropFrame) => suppress_ready = true,
+            None => {}
+        }
+    }
+
     let mut problem = match built {
         Ok(p) => p,
         Err(e) => {
@@ -275,12 +344,16 @@ pub(crate) fn serve_session(
         WorkerProblem::Spec { oracle } => oracle.n(),
         WorkerProblem::Partition { oracle } => oracle.len_local(),
     };
-    reply(output, &FromWorker::Ready { n: ready })?;
+    if !suppress_ready {
+        reply(output, &FromWorker::Ready { n: ready })?;
+    }
 
     // The worker's own two-level executor serves the nested gain scans;
     // the machine-level parallelism lives in the worker fan-out, so one
     // thread per worker is the default.
-    pool::with_pool(threads.max(1), |_exec| serve(input, output, &mut problem, machine))
+    pool::with_pool(threads.max(1), |_exec| {
+        serve(input, output, &mut problem, machine, &mut fault)
+    })
 }
 
 /// Rebuild the resident oracle a worker simulates, from the flat config
@@ -338,11 +411,17 @@ fn reply(output: &mut impl Write, msg: &FromWorker) -> crate::Result<()> {
 /// ingest on `Recv`.  Superstep commands outside an active job are
 /// protocol violations answered with `Fail`; `JobDone` ships the final
 /// state and keeps the session alive for the next `Job`.
+///
+/// Before each command is handled the session's [`FaultPlan`] (if any)
+/// is consulted: `kill` drops the connection without replying, `delay`
+/// sleeps, `drop-frame` swallows the command — the deterministic
+/// injection points every recovery path is tested through.
 fn serve(
     input: &mut impl Read,
     output: &mut impl Write,
     problem: &mut WorkerProblem,
     machine: MachineId,
+    fault: &mut Option<FaultPlan>,
 ) -> crate::Result<()> {
     let mut job: Option<JobCtx> = None;
     let mut state: Option<NodeState> = None;
@@ -352,6 +431,24 @@ fn serve(
             return Ok(()); // coordinator went away — exit quietly
         };
         let cmd = ToWorker::from_value(&frame).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let point = match &cmd {
+            ToWorker::Job { .. } => Some(FaultPoint::Job),
+            ToWorker::Leaf { .. } => Some(FaultPoint::Superstep(0)),
+            ToWorker::Ship => Some(FaultPoint::Ship),
+            ToWorker::Recv { .. } => Some(FaultPoint::Recv),
+            ToWorker::Accum { level, .. } => Some(FaultPoint::Superstep(*level)),
+            _ => None,
+        };
+        if let (Some(plan), Some(point)) = (fault.as_mut(), point) {
+            match plan.trigger(machine, point) {
+                Some(FaultAction::Kill) => {
+                    anyhow::bail!("fault-injected kill: machine {machine} at {point:?}")
+                }
+                Some(FaultAction::Delay(d)) => std::thread::sleep(d),
+                Some(FaultAction::DropFrame) => continue,
+                None => {}
+            }
+        }
         match cmd {
             ToWorker::Job { job: _, params, spec } => {
                 // Every job starts from a clean slate: per-job state dies
@@ -533,6 +630,10 @@ fn serve(
                 job = None;
                 pending = None;
             }
+            ToWorker::Ping => {
+                // Liveness probe — answerable at any point in the session.
+                reply(output, &FromWorker::Pong)?;
+            }
             ToWorker::Release => {
                 return Ok(()); // explicit end of session, no reply
             }
@@ -603,6 +704,7 @@ mod tests {
             100,
             Some("/nonexistent/greedyml-worker-binary"),
             0,
+            FaultPolicy::Fail,
         )
         .unwrap_err();
         match err {
@@ -635,7 +737,7 @@ mod tests {
         write_frame(&mut input, &ToWorker::JobDone.to_value()).unwrap();
         let mut output = Vec::new();
         let mut problem = spec_problem(oracle);
-        serve(&mut input.as_slice(), &mut output, &mut problem, 0).unwrap();
+        serve(&mut input.as_slice(), &mut output, &mut problem, 0, &mut None).unwrap();
 
         let mut cursor = output.as_slice();
         expect_ready(&mut cursor, 100, "job ack");
@@ -687,7 +789,7 @@ mod tests {
         }
         let mut output = Vec::new();
         let mut problem = spec_problem(oracle);
-        serve(&mut input.as_slice(), &mut output, &mut problem, 0).unwrap();
+        serve(&mut input.as_slice(), &mut output, &mut problem, 0, &mut None).unwrap();
 
         let mut cursor = output.as_slice();
         let mut finals = Vec::new();
@@ -726,7 +828,7 @@ mod tests {
         // Ship before leaf: the worker answers Fail and keeps serving
         // (the EOF after it ends the loop cleanly).
         let mut problem = spec_problem(oracle);
-        serve(&mut input.as_slice(), &mut output, &mut problem, 7).unwrap();
+        serve(&mut input.as_slice(), &mut output, &mut problem, 7, &mut None).unwrap();
         let mut cursor = output.as_slice();
         let _ready = read_frame(&mut cursor).unwrap().unwrap();
         let v = read_frame(&mut cursor).unwrap().unwrap();
@@ -746,7 +848,7 @@ mod tests {
         write_frame(&mut input, &ToWorker::JobDone.to_value()).unwrap();
         let mut output = Vec::new();
         let mut problem = spec_problem(oracle);
-        serve(&mut input.as_slice(), &mut output, &mut problem, 3).unwrap();
+        serve(&mut input.as_slice(), &mut output, &mut problem, 3, &mut None).unwrap();
         let mut cursor = output.as_slice();
         for want in ["leaf without an active job", "job_done before any superstep"] {
             let v = read_frame(&mut cursor).unwrap().unwrap();
@@ -850,5 +952,86 @@ mod tests {
         let mut output = Vec::new();
         let err = serve_session(&mut input.as_slice(), &mut output).unwrap_err();
         assert!(err.to_string().contains("first frame must be init"), "{err}");
+    }
+
+    #[test]
+    fn serve_answers_ping_with_pong_at_any_point() {
+        let oracle = crate::objective::Modular::new(vec![1.0; 10]);
+        let mut input = Vec::new();
+        write_frame(&mut input, &ToWorker::Ping.to_value()).unwrap();
+        let mut output = Vec::new();
+        let mut problem = spec_problem(oracle);
+        serve(&mut input.as_slice(), &mut output, &mut problem, 0, &mut None).unwrap();
+        let mut cursor = output.as_slice();
+        let v = read_frame(&mut cursor).unwrap().unwrap();
+        assert!(matches!(FromWorker::from_value(&v).unwrap(), FromWorker::Pong));
+    }
+
+    #[test]
+    fn injected_kill_drops_the_connection_without_replying() {
+        // The fault plan kills machine 0 at its leaf: the job is acked,
+        // then the worker dies mid-superstep — from the coordinator's
+        // side, an EOF where the Step should be (a retryable transport
+        // fault, exactly what a crashed host looks like).
+        let oracle = crate::objective::Modular::new(vec![1.0; 100]);
+        let mut input = Vec::new();
+        write_frame(&mut input, &job_frame(params(), "problem.k = 2\n").to_value()).unwrap();
+        let part: Vec<ElemId> = (0..100).collect();
+        write_frame(&mut input, &ToWorker::Leaf { part }.to_value()).unwrap();
+        let mut output = Vec::new();
+        let mut problem = spec_problem(oracle);
+        let mut plan = Some(FaultPlan::parse("kill:m0@leaf").unwrap());
+        let err = serve(&mut input.as_slice(), &mut output, &mut problem, 0, &mut plan)
+            .unwrap_err();
+        assert!(err.to_string().contains("fault-injected kill"), "{err}");
+        let mut cursor = output.as_slice();
+        expect_ready(&mut cursor, 100, "the job was still admitted");
+        assert!(
+            read_frame(&mut cursor).unwrap().is_none(),
+            "no Step may follow the kill"
+        );
+    }
+
+    #[test]
+    fn injected_kill_fires_once_and_filters_by_machine() {
+        // The same plan on machine 1 is inert: entries are per-machine.
+        let oracle = crate::objective::Modular::new(vec![1.0; 100]);
+        let mut input = Vec::new();
+        write_frame(&mut input, &job_frame(params(), "problem.k = 2\n").to_value()).unwrap();
+        let part: Vec<ElemId> = (0..100).collect();
+        write_frame(&mut input, &ToWorker::Leaf { part }.to_value()).unwrap();
+        write_frame(&mut input, &ToWorker::JobDone.to_value()).unwrap();
+        let mut output = Vec::new();
+        let mut problem = spec_problem(oracle);
+        let mut plan = Some(FaultPlan::parse("kill:m0@leaf").unwrap());
+        serve(&mut input.as_slice(), &mut output, &mut problem, 1, &mut plan).unwrap();
+        let mut cursor = output.as_slice();
+        expect_ready(&mut cursor, 100, "job ack");
+        let step = read_frame(&mut cursor).unwrap().unwrap();
+        assert!(matches!(FromWorker::from_value(&step).unwrap(), FromWorker::Step(_)));
+    }
+
+    #[test]
+    fn injected_drop_frame_swallows_the_command_without_replying() {
+        // drop-frame at the leaf: the command vanishes, the session lives
+        // on — the coordinator's frame timeout is what turns the silence
+        // into a transport fault (tcp backend).
+        let oracle = crate::objective::Modular::new(vec![1.0; 10]);
+        let mut input = Vec::new();
+        write_frame(&mut input, &job_frame(params(), "problem.k = 1\n").to_value()).unwrap();
+        write_frame(&mut input, &ToWorker::Leaf { part: vec![0, 1] }.to_value()).unwrap();
+        write_frame(&mut input, &ToWorker::Ping.to_value()).unwrap();
+        let mut output = Vec::new();
+        let mut problem = spec_problem(oracle);
+        let mut plan = Some(FaultPlan::parse("drop-frame:m0@leaf").unwrap());
+        serve(&mut input.as_slice(), &mut output, &mut problem, 0, &mut plan).unwrap();
+        let mut cursor = output.as_slice();
+        let v = read_frame(&mut cursor).unwrap().unwrap();
+        assert!(matches!(FromWorker::from_value(&v).unwrap(), FromWorker::Ready { .. }));
+        let v = read_frame(&mut cursor).unwrap().unwrap();
+        assert!(
+            matches!(FromWorker::from_value(&v).unwrap(), FromWorker::Pong),
+            "the Leaf was swallowed — the next reply is the Ping's Pong"
+        );
     }
 }

@@ -24,14 +24,50 @@
 //! Keeping this logic in one place is what keeps the transports
 //! interchangeable: a backend cannot drift in superstep ordering or error
 //! semantics when it only supplies `Read`/`Write` endpoints.
+//!
+//! # Supervision
+//!
+//! Under [`RemoteFleet::supervise`] the fleet also owns fault recovery.
+//! Every transport-level failure (send, EOF, frame timeout) classifies as
+//! a retryable [`DistError::Transport`]; what happens next is the
+//! session's [`FaultPolicy`]:
+//!
+//! * **fail** (unsupervised) — the first fault aborts the run, exactly
+//!   the pre-supervision behavior.
+//! * **retry** — the supervisor revives the machine through a
+//!   transport-supplied reconnect closure (respawn a worker process,
+//!   dial the next host), re-ships its session `Init`/`InitPart`, and
+//!   replays its job-scoped command log.  The partition and every seeded
+//!   draw replay deterministically from the ship plan, so the revived
+//!   machine's replies are bit-identical to the ones the dead machine
+//!   would have sent.  Bounded attempts
+//!   ([`RETRY_ATTEMPTS`](super::fault::RETRY_ATTEMPTS)) with exponential
+//!   backoff.
+//! * **degrade** — the dead machine's contribution is dropped from its
+//!   parent's accumulation and the run completes on the survivors, with
+//!   full accounting in the [`FaultReport`] (machine 0 holds the root
+//!   and can never be dropped).
+//!
+//! To make replay possible the fleet retains each machine's init frame
+//! for the lifetime of the session (under partition shipping that is the
+//! machine's O(n/m) shard — the memory price of re-dispatch) and, only
+//! while supervised, logs the current job's commands per machine.
 
 use super::backend::{AccumTask, Backend, BackendOutcome, ShipPlan};
+use super::fault::{FaultPolicy, FaultReport, RETRY_ATTEMPTS, RETRY_BACKOFF_BASE};
 use super::node::{ChildMsg, NodeParams, StepReport};
 use super::wire::{read_frame, write_frame, FromWorker, ToWorker};
 use super::{DistError, MachineStats};
 use crate::{ElemId, MachineId};
 use std::io::{Read, Write};
 use std::time::Instant;
+
+/// How a supervised fleet obtains a replacement session for a dead
+/// machine: respawn a worker process (process backend) or dial a spare /
+/// surviving host (tcp backend).  Called with the machine id and the
+/// zero-based revival attempt.
+pub(crate) type Reconnect<R, W> =
+    Box<dyn FnMut(MachineId, u32) -> Result<FramedWorker<R, W>, DistError> + Send>;
 
 /// One remote worker (= one simulated machine) behind a framed byte
 /// stream: `reader` carries worker → coordinator replies, `writer`
@@ -68,23 +104,28 @@ impl<R: Read, W: Write> FramedWorker<R, W> {
     }
 
     /// Send one command frame; returns the bytes put on the wire so
-    /// session-level shipping cost (Init payloads) can be accounted.
+    /// session-level shipping cost (Init payloads) can be accounted.  A
+    /// write failure (broken pipe, reset connection) is a retryable
+    /// [`DistError::Transport`].
     pub fn send(&mut self, msg: &ToWorker) -> Result<u64, DistError> {
         write_frame(&mut self.writer, &msg.to_value())
-            .map_err(|e| DistError::backend(format!("{}: {e}", self.who())))
+            .map_err(|e| DistError::transport(format!("{}: {e}", self.who())))
     }
 
     /// Receive one reply frame; a closed stream (worker death, dropped
     /// connection) is an error, not a hang — the transport's per-frame
     /// timeout bounds how long a silent-but-open stream can stall this.
+    /// EOF and I/O failures (including that timeout) are retryable
+    /// [`DistError::Transport`]s; a frame that arrives but does not parse
+    /// is a fatal protocol error.
     pub fn recv(&mut self) -> Result<FromWorker, DistError> {
         match read_frame(&mut self.reader) {
             Ok(Some(v)) => FromWorker::from_value(&v),
-            Ok(None) => Err(DistError::backend(format!(
+            Ok(None) => Err(DistError::transport(format!(
                 "{} disconnected before replying",
                 self.who()
             ))),
-            Err(e) => Err(DistError::backend(format!("{}: {e}", self.who()))),
+            Err(e) => Err(DistError::transport(format!("{}: {e}", self.who()))),
         }
     }
 
@@ -107,6 +148,80 @@ pub(crate) struct RemoteFleet<R, W> {
     workers: Vec<FramedWorker<R, W>>,
     next_job: u64,
     init_bytes: u64,
+    /// Each machine's session `Init`/`InitPart`, retained for re-dispatch
+    /// (under partition shipping this keeps the machine's shard resident
+    /// at the coordinator — the memory price of being able to revive).
+    init_cmds: Vec<ToWorker>,
+    /// The `Ready{n}` each machine must ack for its init on replay.
+    expected_ready: Vec<usize>,
+    /// Per-machine log of the current job's commands; populated only
+    /// while supervised, cleared by `begin_job` and a successful
+    /// `finish`.
+    logs: Vec<Vec<ToWorker>>,
+    /// Machines dropped by [`FaultPolicy::Degrade`]; dead machines are
+    /// skipped by every superstep and synthesized in reports.
+    dead: Vec<bool>,
+    /// Ground-set elements riding on each machine: its partition size
+    /// plus every child subtree that successfully shipped into it — what
+    /// `elements_lost` charges when the machine is dropped.
+    subtree_elems: Vec<u64>,
+    supervisor: Option<Supervisor<R, W>>,
+}
+
+/// Supervision state, present only under retry/degrade policies.
+struct Supervisor<R, W> {
+    policy: FaultPolicy,
+    reconnect: Reconnect<R, W>,
+    report: FaultReport,
+}
+
+/// What a supervised operation did about a transport fault.
+enum Recovered {
+    /// Retry: the machine was revived and its log replayed; the reply to
+    /// the in-flight command, when the caller was waiting on one.
+    Reply(Option<FromWorker>),
+    /// Degrade: the machine was dropped with accounting; the caller
+    /// synthesizes its part of the superstep.
+    Dropped,
+}
+
+/// The zeroed [`StepReport`] standing in for a dropped machine's
+/// superstep — shape-compatible with traces and stats, zero cost booked.
+fn dropped_step(machine: MachineId, level: u32) -> StepReport {
+    StepReport { machine, level, ..StepReport::default() }
+}
+
+/// The wire name of a command, for replay error messages.
+fn cmd_name(cmd: &ToWorker) -> &'static str {
+    match cmd {
+        ToWorker::Hello { .. } => "hello",
+        ToWorker::Init { .. } => "init",
+        ToWorker::InitPart { .. } => "init-part",
+        ToWorker::Job { .. } => "job",
+        ToWorker::Leaf { .. } => "leaf",
+        ToWorker::Ship => "ship",
+        ToWorker::Recv { .. } => "recv",
+        ToWorker::Accum { .. } => "accum",
+        ToWorker::JobDone => "job-done",
+        ToWorker::Release => "release",
+        ToWorker::Ping => "ping",
+    }
+}
+
+/// Whether `reply` is the kind of frame the protocol defines for `cmd` —
+/// the type check replay applies to every re-driven command.
+fn replay_reply_matches(cmd: &ToWorker, reply: &FromWorker) -> bool {
+    matches!(
+        (cmd, reply),
+        (
+            ToWorker::Init { .. } | ToWorker::InitPart { .. } | ToWorker::Job { .. },
+            FromWorker::Ready { .. }
+        ) | (ToWorker::Leaf { .. } | ToWorker::Accum { .. }, FromWorker::Step(_))
+            | (ToWorker::Ship, FromWorker::Sol(_))
+            | (ToWorker::Recv { .. }, FromWorker::Ack)
+            | (ToWorker::JobDone, FromWorker::Final { .. })
+            | (ToWorker::Ping, FromWorker::Pong)
+    )
 }
 
 impl<R: Read, W: Write> RemoteFleet<R, W> {
@@ -128,7 +243,19 @@ impl<R: Read, W: Write> RemoteFleet<R, W> {
         n: usize,
         session: u64,
     ) -> Result<Self, DistError> {
-        let mut fleet = Self { name, workers, next_job: 0, init_bytes: 0 };
+        let machines = workers.len();
+        let mut fleet = Self {
+            name,
+            workers,
+            next_job: 0,
+            init_bytes: 0,
+            init_cmds: Vec::with_capacity(machines),
+            expected_ready: Vec::new(),
+            logs: vec![Vec::new(); machines],
+            dead: vec![false; machines],
+            subtree_elems: vec![0; machines],
+            supervisor: None,
+        };
         // Per-worker expected Ready{n}: the global ground set under spec
         // shipping, the shard size under partition shipping.
         let expected: Vec<usize> = match &plan {
@@ -154,6 +281,7 @@ impl<R: Read, W: Write> RemoteFleet<R, W> {
                         problem: problem.to_string(),
                     };
                     fleet.init_bytes += w.send(&init)?;
+                    fleet.init_cmds.push(init);
                 }
             }
             ShipPlan::Partition { payloads } => {
@@ -165,9 +293,11 @@ impl<R: Read, W: Write> RemoteFleet<R, W> {
                         payload,
                     };
                     fleet.init_bytes += w.send(&init)?;
+                    fleet.init_cmds.push(init);
                 }
             }
         }
+        fleet.expected_ready = expected.clone();
         for (w, want) in fleet.workers.iter_mut().zip(expected) {
             match w.recv_ok()? {
                 FromWorker::Ready { n } if n == want => {}
@@ -192,30 +322,44 @@ impl<R: Read, W: Write> RemoteFleet<R, W> {
     /// Start one job on the warm fleet: a `Job` frame per worker carrying
     /// the node parameters and constraint spec.  Every worker must ack
     /// with its resident oracle's global ground-set size (`params.n`) —
-    /// anything else means the session does not serve this problem.
+    /// anything else means the session does not serve this problem.  A
+    /// fleet that lost machines to an earlier degraded job refuses new
+    /// work: the pool must re-establish a whole session instead.
     pub fn begin_job(&mut self, params: &NodeParams, spec: &str) -> Result<(), DistError> {
+        if let Some(m) = self.dead.iter().position(|&d| d) {
+            return Err(DistError::transport(format!(
+                "machine {m} was dropped by an earlier degraded job; \
+                 re-establish the session"
+            )));
+        }
+        for log in &mut self.logs {
+            log.clear();
+        }
         let job = self.next_job;
         self.next_job += 1;
-        for w in &mut self.workers {
-            let cmd =
-                ToWorker::Job { job, params: params.clone(), spec: spec.to_string() };
-            w.send(&cmd)?;
+        for m in 0..self.workers.len() {
+            let cmd = ToWorker::Job { job, params: params.clone(), spec: spec.to_string() };
+            self.sup_send(m as MachineId, cmd)?;
         }
-        for w in &mut self.workers {
-            match w.recv_ok()? {
-                FromWorker::Ready { n } if n == params.n => {}
-                FromWorker::Ready { n } => {
+        for m in 0..self.workers.len() {
+            match self.sup_recv(m as MachineId)? {
+                // Dropped during admission (degrade) — its partition loss
+                // is charged when run_leaves assigns the partitions.
+                None => {}
+                Some(FromWorker::Ready { n }) if n == params.n => {}
+                Some(FromWorker::Ready { n }) => {
                     return Err(DistError::backend(format!(
                         "{} serves a ground set of {n} elements, the job wants {}; \
                          the resident session does not hold this problem",
-                        w.who(),
+                        self.workers[m].who(),
                         params.n
                     )))
                 }
-                other => {
+                Some(FromWorker::Fail(e)) => return Err(e),
+                Some(other) => {
                     return Err(DistError::backend(format!(
                         "{}: expected ready, got {other:?}",
-                        w.who()
+                        self.workers[m].who()
                     )))
                 }
             }
@@ -242,6 +386,239 @@ impl<R: Read, W: Write> RemoteFleet<R, W> {
             let _ = w.send(&ToWorker::Release);
         }
     }
+
+    /// Put the fleet under supervision: transport faults are no longer
+    /// immediately fatal but handled per `policy` (see the module docs).
+    /// `reconnect` is how the transport layer obtains a replacement
+    /// session for a dead machine.
+    pub fn supervise(&mut self, policy: FaultPolicy, reconnect: Reconnect<R, W>) {
+        self.supervisor =
+            Some(Supervisor { policy, reconnect, report: FaultReport::default() });
+    }
+
+    /// The fault accounting accumulated since the last job finished
+    /// (empty for an unsupervised or fault-free fleet).
+    pub fn fault_report(&self) -> FaultReport {
+        self.supervisor.as_ref().map(|s| s.report.clone()).unwrap_or_default()
+    }
+
+    /// Probe every worker with a `Ping`.  Deliberately does **not**
+    /// recover: a warm fleet that fails its probe — or that lost machines
+    /// to a degraded job — is for the pool to discard and re-establish,
+    /// not to patch mid-idle.
+    pub fn ping_all(&mut self) -> Result<(), DistError> {
+        if let Some(m) = self.dead.iter().position(|&d| d) {
+            return Err(DistError::transport(format!(
+                "machine {m} was dropped by an earlier degraded job"
+            )));
+        }
+        for w in &mut self.workers {
+            w.send(&ToWorker::Ping)?;
+        }
+        for w in &mut self.workers {
+            match w.recv()? {
+                FromWorker::Pong => {}
+                FromWorker::Fail(e) => return Err(e),
+                other => {
+                    return Err(DistError::backend(format!(
+                        "{}: expected pong, got {other:?}",
+                        w.who()
+                    )))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Send `cmd` to `machine`, logging it for replay when supervised.
+    /// `Ok(false)` means the machine is (or just became) dead under
+    /// degrade — the caller must skip its reply.
+    fn sup_send(&mut self, machine: MachineId, cmd: ToWorker) -> Result<bool, DistError> {
+        let m = machine as usize;
+        if self.dead[m] {
+            return Ok(false);
+        }
+        let sent = self.workers[m].send(&cmd);
+        if self.supervisor.is_some() {
+            self.logs[m].push(cmd);
+        }
+        match sent {
+            Ok(_) => Ok(true),
+            Err(e) => match self.handle_fault(machine, e, false)? {
+                // Revived: the replay re-delivered the logged command.
+                Recovered::Reply(_) => Ok(true),
+                Recovered::Dropped => Ok(false),
+            },
+        }
+    }
+
+    /// Receive the pending reply from `machine`.  `Ok(None)` means the
+    /// machine is dead under degrade — the caller synthesizes its report.
+    fn sup_recv(&mut self, machine: MachineId) -> Result<Option<FromWorker>, DistError> {
+        let m = machine as usize;
+        if self.dead[m] {
+            return Ok(None);
+        }
+        match self.workers[m].recv() {
+            Ok(reply) => Ok(Some(reply)),
+            Err(e) => match self.handle_fault(machine, e, true)? {
+                Recovered::Reply(r) => Ok(r),
+                Recovered::Dropped => Ok(None),
+            },
+        }
+    }
+
+    /// Apply the fault policy to a transport failure on `machine`.
+    /// `consume_last` says whether the caller was waiting on a reply to
+    /// the machine's last logged command (recv) or had only sent (send).
+    fn handle_fault(
+        &mut self,
+        machine: MachineId,
+        err: DistError,
+        consume_last: bool,
+    ) -> Result<Recovered, DistError> {
+        if !err.is_retryable() {
+            return Err(err);
+        }
+        let policy = match &mut self.supervisor {
+            None => return Err(err),
+            Some(sup) => {
+                sup.report.faults_seen += 1;
+                sup.policy
+            }
+        };
+        match policy {
+            FaultPolicy::Fail => Err(err),
+            FaultPolicy::Retry => {
+                self.revive(machine, consume_last).map(Recovered::Reply)
+            }
+            FaultPolicy::Degrade => {
+                if machine == 0 {
+                    return Err(DistError::transport(format!(
+                        "machine 0 holds the root of the accumulation tree \
+                         and cannot be dropped: {err}"
+                    )));
+                }
+                self.dead[machine as usize] = true;
+                self.drop_contribution(machine);
+                Ok(Recovered::Dropped)
+            }
+        }
+    }
+
+    /// Account a machine whose contribution will never reach the root:
+    /// the machine itself when it dies under degrade, and its orphaned
+    /// live children when their parent is already dead.
+    fn drop_contribution(&mut self, machine: MachineId) {
+        let elems = self.subtree_elems[machine as usize];
+        let sup = self.supervisor.as_mut().expect("degrade implies supervision");
+        sup.report.machines_dropped.push(machine);
+        sup.report.elements_lost += elems;
+    }
+
+    /// Revive a dead machine under retry: reconnect through the
+    /// supervisor's closure, then replay — bounded attempts, exponential
+    /// backoff (attempt `a > 0` sleeps `RETRY_BACKOFF_BASE << (a-1)`).
+    /// Returns the in-flight reply when `consume_last`.
+    fn revive(
+        &mut self,
+        machine: MachineId,
+        consume_last: bool,
+    ) -> Result<Option<FromWorker>, DistError> {
+        let m = machine as usize;
+        let mut last_err = DistError::transport(format!("machine {machine} lost"));
+        for attempt in 0..RETRY_ATTEMPTS {
+            if attempt > 0 {
+                std::thread::sleep(RETRY_BACKOFF_BASE * (1 << (attempt - 1)));
+            }
+            let fresh = {
+                let sup = self.supervisor.as_mut().expect("retry implies supervision");
+                match (sup.reconnect)(machine, attempt) {
+                    Ok(w) => w,
+                    Err(e) if e.is_retryable() => {
+                        last_err = e;
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                }
+            };
+            self.workers[m] = fresh;
+            match self.replay(machine, consume_last) {
+                Ok(reply) => {
+                    let sup =
+                        self.supervisor.as_mut().expect("retry implies supervision");
+                    sup.report.retries += 1;
+                    return Ok(reply);
+                }
+                Err(e) if e.is_retryable() => {
+                    last_err = e;
+                    continue;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(DistError::transport(format!(
+            "machine {machine} could not be revived after {RETRY_ATTEMPTS} attempts: \
+             {last_err}"
+        )))
+    }
+
+    /// Re-drive a replacement session to where the dead one stood: the
+    /// machine's session init, then the current job's command log.  Every
+    /// reply but the last is consumed and type-checked; the last is
+    /// returned when `consume_last` (the caller was mid-recv) and left
+    /// pending otherwise (the caller had only sent).  The replies are
+    /// bit-identical to the originals — partition and seeded draws replay
+    /// deterministically — so discarding them is sound.
+    fn replay(
+        &mut self,
+        machine: MachineId,
+        consume_last: bool,
+    ) -> Result<Option<FromWorker>, DistError> {
+        let m = machine as usize;
+        let script: Vec<&ToWorker> =
+            std::iter::once(&self.init_cmds[m]).chain(self.logs[m].iter()).collect();
+        let last = script.len() - 1;
+        for (i, cmd) in script.into_iter().enumerate() {
+            self.workers[m].send(cmd)?;
+            if i == last && !consume_last {
+                return Ok(None);
+            }
+            let reply = self.workers[m].recv()?;
+            if let FromWorker::Fail(e) = reply {
+                return Err(e);
+            }
+            if !replay_reply_matches(cmd, &reply) {
+                return Err(DistError::backend(format!(
+                    "{}: replay of {} produced {reply:?}",
+                    self.workers[m].who(),
+                    cmd_name(cmd)
+                )));
+            }
+            // The revived session must hold exactly what the original
+            // acked when the coordinator shipped it.
+            let want = match cmd {
+                ToWorker::Init { .. } | ToWorker::InitPart { .. } => {
+                    Some(self.expected_ready[m])
+                }
+                ToWorker::Job { params, .. } => Some(params.n),
+                _ => None,
+            };
+            if let (Some(want), FromWorker::Ready { n }) = (want, &reply) {
+                if *n != want {
+                    return Err(DistError::backend(format!(
+                        "{}: replayed {} acked {n} elements, expected {want}",
+                        self.workers[m].who(),
+                        cmd_name(cmd)
+                    )));
+                }
+            }
+            if i == last {
+                return Ok(Some(reply));
+            }
+        }
+        unreachable!("the script always contains at least the init command")
+    }
 }
 
 impl<R: Read, W: Write> Backend for RemoteFleet<R, W> {
@@ -257,21 +634,34 @@ impl<R: Read, W: Write> Backend for RemoteFleet<R, W> {
                 self.workers.len()
             )));
         }
-        for (w, part) in self.workers.iter_mut().zip(parts) {
-            w.send(&ToWorker::Leaf { part })?;
+        for (m, part) in parts.into_iter().enumerate() {
+            // The machine's subtree weight starts at its partition size
+            // and absorbs child subtrees as they ship into it — the
+            // degrade accounting's charge if the machine is dropped.
+            self.subtree_elems[m] = part.len() as u64;
+            if self.dead[m] {
+                // Died during job admission: its partition now has an
+                // owner and is charged as lost.
+                if let Some(sup) = self.supervisor.as_mut() {
+                    sup.report.elements_lost += part.len() as u64;
+                }
+                continue;
+            }
+            self.sup_send(m as MachineId, ToWorker::Leaf { part })?;
         }
         // Every rank finishes its superstep; first failure in machine
         // order wins (same semantics as the thread backend).
         let mut reports = Vec::with_capacity(self.workers.len());
         let mut first_err: Option<DistError> = None;
-        for w in &mut self.workers {
-            match w.recv()? {
-                FromWorker::Step(r) => reports.push(r),
-                FromWorker::Fail(e) => first_err = first_err.take().or(Some(e)),
-                other => {
+        for m in 0..self.workers.len() {
+            match self.sup_recv(m as MachineId)? {
+                None => reports.push(dropped_step(m as MachineId, 0)),
+                Some(FromWorker::Step(r)) => reports.push(r),
+                Some(FromWorker::Fail(e)) => first_err = first_err.take().or(Some(e)),
+                Some(other) => {
                     return Err(DistError::backend(format!(
                         "{}: expected step, got {other:?}",
-                        w.who()
+                        self.workers[m].who()
                     )))
                 }
             }
@@ -296,13 +686,35 @@ impl<R: Read, W: Write> Backend for RemoteFleet<R, W> {
         // solution's data shard; the clock covers those bytes too, which
         // is the point — that data movement *is* §4.2's communication.
         for task in tasks {
+            if self.dead[task.parent as usize] {
+                // The parent died earlier: its surviving children have no
+                // one to ship to — their contributions are lost too, but
+                // the workers themselves stay healthy (they idle until
+                // JobDone and still report their stats).
+                for &c in &task.children {
+                    if !self.dead[c as usize] {
+                        self.drop_contribution(c);
+                    }
+                }
+                continue;
+            }
             let t0 = Instant::now();
             let mut children: Vec<ChildMsg> = Vec::with_capacity(task.children.len());
             for &c in &task.children {
-                self.workers[c as usize].send(&ToWorker::Ship)?;
-                match self.workers[c as usize].recv_ok()? {
-                    FromWorker::Sol(msg) => children.push(msg),
-                    other => {
+                if !self.sup_send(c, ToWorker::Ship)? {
+                    continue;
+                }
+                match self.sup_recv(c)? {
+                    // Died shipping; dropped with accounting by the
+                    // supervisor — the parent accumulates the survivors.
+                    None => continue,
+                    Some(FromWorker::Sol(msg)) => {
+                        self.subtree_elems[task.parent as usize] +=
+                            self.subtree_elems[c as usize];
+                        children.push(msg);
+                    }
+                    Some(FromWorker::Fail(e)) => return Err(e),
+                    Some(other) => {
                         return Err(DistError::backend(format!(
                             "{}: expected sol, got {other:?}",
                             self.workers[c as usize].who()
@@ -310,35 +722,38 @@ impl<R: Read, W: Write> Backend for RemoteFleet<R, W> {
                     }
                 }
             }
-            let parent = &mut self.workers[task.parent as usize];
-            parent.send(&ToWorker::Recv { level, children })?;
-            match parent.recv_ok()? {
-                FromWorker::Ack => {}
-                other => {
+            if !self.sup_send(task.parent, ToWorker::Recv { level, children })? {
+                continue;
+            }
+            match self.sup_recv(task.parent)? {
+                None => continue,
+                Some(FromWorker::Ack) => {}
+                Some(FromWorker::Fail(e)) => return Err(e),
+                Some(other) => {
                     return Err(DistError::backend(format!(
                         "{}: expected ack, got {other:?}",
-                        parent.who()
+                        self.workers[task.parent as usize].who()
                     )))
                 }
             }
             let comm_secs = t0.elapsed().as_secs_f64();
             // Kick off the accumulation and move on — parents of this
             // superstep compute concurrently in their own workers.
-            parent.send(&ToWorker::Accum { level, comm_secs })?;
+            self.sup_send(task.parent, ToWorker::Accum { level, comm_secs })?;
         }
 
         // Collection phase, in task order.
         let mut reports = Vec::with_capacity(tasks.len());
         let mut first_err: Option<DistError> = None;
         for task in tasks {
-            let parent = &mut self.workers[task.parent as usize];
-            match parent.recv()? {
-                FromWorker::Step(r) => reports.push(r),
-                FromWorker::Fail(e) => first_err = first_err.take().or(Some(e)),
-                other => {
+            match self.sup_recv(task.parent)? {
+                None => reports.push(dropped_step(task.parent, level)),
+                Some(FromWorker::Step(r)) => reports.push(r),
+                Some(FromWorker::Fail(e)) => first_err = first_err.take().or(Some(e)),
+                Some(other) => {
                     return Err(DistError::backend(format!(
                         "{}: expected step, got {other:?}",
-                        parent.who()
+                        self.workers[task.parent as usize].who()
                     )))
                 }
             }
@@ -352,37 +767,52 @@ impl<R: Read, W: Write> Backend for RemoteFleet<R, W> {
     fn finish(&mut self) -> Result<BackendOutcome, DistError> {
         // End of the *job*, not the session: JobDone collects every
         // worker's Final and the fleet stays warm for the next begin_job.
-        for w in &mut self.workers {
-            w.send(&ToWorker::JobDone)?;
+        for m in 0..self.workers.len() {
+            self.sup_send(m as MachineId, ToWorker::JobDone)?;
         }
         let mut machines: Vec<MachineStats> = Vec::with_capacity(self.workers.len());
         let mut solution = Vec::new();
         let mut value = 0.0;
-        for w in &mut self.workers {
-            match w.recv_ok()? {
-                FromWorker::Final { stats, sol, value: v } => {
-                    if stats.id != w.machine {
+        for m in 0..self.workers.len() {
+            let machine = m as MachineId;
+            match self.sup_recv(machine)? {
+                // A dropped machine reports zeroed stats — the degraded
+                // run's accounting lives in the FaultReport, not here.
+                None => machines.push(MachineStats::new(machine)),
+                Some(FromWorker::Final { stats, sol, value: v }) => {
+                    if stats.id != machine {
                         return Err(DistError::backend(format!(
                             "{} reported stats for machine {}",
-                            w.who(),
+                            self.workers[m].who(),
                             stats.id
                         )));
                     }
-                    if w.machine == 0 {
+                    if machine == 0 {
                         solution = sol;
                         value = v;
                     }
                     machines.push(stats);
                 }
-                other => {
+                Some(FromWorker::Fail(e)) => return Err(e),
+                Some(other) => {
                     return Err(DistError::backend(format!(
                         "{}: expected final, got {other:?}",
-                        w.who()
+                        self.workers[m].who()
                     )))
                 }
             }
         }
-        Ok(BackendOutcome { solution, value, machines })
+        // The job is over: its replay log has served its purpose, and the
+        // report resets so a pooled fleet accounts per job.
+        for log in &mut self.logs {
+            log.clear();
+        }
+        let faults = self
+            .supervisor
+            .as_mut()
+            .map(|s| std::mem::take(&mut s.report))
+            .unwrap_or_default();
+        Ok(BackendOutcome { solution, value, machines, faults })
     }
 
     fn measures_comm(&self) -> bool {
@@ -476,6 +906,7 @@ mod tests {
             .err()
             .expect("EOF must fail");
         assert!(err.to_string().contains("worker 3 disconnected"), "{err}");
+        assert!(err.is_retryable(), "a worker death is a transport fault: {err}");
     }
 
     #[test]
@@ -556,5 +987,181 @@ mod tests {
         let msg = err.to_string();
         assert!(msg.contains("100 elements"), "{msg}");
         assert!(msg.contains("wants 60"), "{msg}");
+    }
+
+    // ---- supervision -----------------------------------------------------
+
+    use std::io::Cursor;
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::sync::Arc;
+
+    type MemWorker = FramedWorker<Cursor<Vec<u8>>, Vec<u8>>;
+
+    /// A worker over owned buffers (`'static`, so reconnect closures can
+    /// hand out replacements): scripted replies in, captured commands out.
+    fn mem_worker(machine: MachineId, replies: &[FromWorker]) -> MemWorker {
+        FramedWorker::new(machine, Cursor::new(scripted(replies)), Vec::new())
+    }
+
+    fn ready(n: usize) -> FromWorker {
+        FromWorker::Ready { n }
+    }
+
+    fn step(machine: MachineId, level: u32, calls: u64) -> FromWorker {
+        FromWorker::Step(StepReport { machine, level, calls, ..StepReport::default() })
+    }
+
+    #[test]
+    fn retry_revives_a_dead_worker_and_replays_its_log() {
+        let w0 = mem_worker(0, &[ready(100), ready(100), step(0, 0, 3)]);
+        // Machine 1 dies after acking the job: EOF where its leaf Step
+        // should be.
+        let w1 = mem_worker(1, &[ready(100), ready(100)]);
+        let mut fleet =
+            RemoteFleet::establish("test", vec![w0, w1], 1, ShipPlan::Spec("spec"), 100, 0)
+                .expect("establish");
+        let mut spare = Some(mem_worker(1, &[ready(100), ready(100), step(1, 0, 7)]));
+        fleet.supervise(
+            FaultPolicy::Retry,
+            Box::new(move |machine, _attempt| {
+                assert_eq!(machine, 1, "only machine 1 dies");
+                spare.take().ok_or_else(|| DistError::transport("out of spares"))
+            }),
+        );
+        fleet.begin_job(&params(100), "problem.k = 2\n").expect("job");
+        let reports = fleet
+            .run_leaves(vec![(0..50).collect(), (50..100).collect()])
+            .expect("revival must recover the leaf superstep");
+        assert_eq!(reports[1].calls, 7, "the replayed Step is the one reported");
+        let report = fleet.fault_report();
+        assert_eq!(report.faults_seen, 1);
+        assert_eq!(report.retries, 1);
+        assert!(report.machines_dropped.is_empty());
+        assert_eq!(report.elements_lost, 0);
+        // The replacement was re-driven through the full script: session
+        // init, then the job log — the re-dispatch the paper's
+        // determinism makes sound.
+        let mut cursor = fleet.workers[1].writer.as_slice();
+        let mut cmds = Vec::new();
+        while let Some(v) = read_frame(&mut cursor).unwrap() {
+            cmds.push(ToWorker::from_value(&v).unwrap());
+        }
+        assert_eq!(cmds.len(), 3, "init + job + leaf, no more: {cmds:?}");
+        assert!(matches!(cmds[0], ToWorker::Init { machine: 1, .. }), "{:?}", cmds[0]);
+        assert!(matches!(cmds[1], ToWorker::Job { .. }), "{:?}", cmds[1]);
+        assert!(
+            matches!(&cmds[2], ToWorker::Leaf { part } if part.len() == 50),
+            "{:?}",
+            cmds[2]
+        );
+    }
+
+    #[test]
+    fn retry_gives_up_after_bounded_attempts() {
+        let w0 = mem_worker(0, &[ready(10), ready(10), step(0, 0, 1)]);
+        let w1 = mem_worker(1, &[ready(10), ready(10)]);
+        let mut fleet =
+            RemoteFleet::establish("test", vec![w0, w1], 1, ShipPlan::Spec("spec"), 10, 0)
+                .expect("establish");
+        let attempts = Arc::new(AtomicU32::new(0));
+        let seen = Arc::clone(&attempts);
+        fleet.supervise(
+            FaultPolicy::Retry,
+            Box::new(move |_machine, _attempt| {
+                seen.fetch_add(1, Ordering::SeqCst);
+                Err(DistError::transport("host pool exhausted"))
+            }),
+        );
+        fleet.begin_job(&params(10), "problem.k = 1\n").expect("job");
+        let err = fleet
+            .run_leaves(vec![(0..5).collect(), (5..10).collect()])
+            .expect_err("no replacement can be found");
+        assert!(err.to_string().contains("could not be revived"), "{err}");
+        assert_eq!(attempts.load(Ordering::SeqCst), RETRY_ATTEMPTS);
+    }
+
+    #[test]
+    fn degrade_drops_a_dead_machine_and_accounts_the_loss() {
+        let w0 = mem_worker(
+            0,
+            &[
+                ready(100),
+                ready(100),
+                step(0, 0, 2),
+                FromWorker::Ack,
+                step(0, 1, 4),
+                FromWorker::Final {
+                    stats: MachineStats::new(0),
+                    sol: vec![1, 2],
+                    value: 5.0,
+                },
+            ],
+        );
+        // Machine 1 computes its leaf, then dies when asked to Ship.
+        let w1 = mem_worker(1, &[ready(100), ready(100), step(1, 0, 3)]);
+        let mut fleet =
+            RemoteFleet::establish("test", vec![w0, w1], 1, ShipPlan::Spec("spec"), 100, 0)
+                .expect("establish");
+        fleet.supervise(
+            FaultPolicy::Degrade,
+            Box::new(|_machine, _attempt| Err(DistError::backend("degrade never reconnects"))),
+        );
+        fleet.begin_job(&params(100), "problem.k = 2\n").expect("job");
+        fleet.run_leaves(vec![(0..40).collect(), (40..100).collect()]).expect("leaves");
+        let reports = fleet
+            .run_superstep(1, &[AccumTask { parent: 0, children: vec![1] }])
+            .expect("degrade completes the superstep on the survivors");
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].calls, 4, "the root accumulated without the dead child");
+        let outcome = fleet.finish().expect("finish");
+        assert_eq!(outcome.solution, vec![1, 2]);
+        assert_eq!(outcome.machines.len(), 2, "stats stay shape-compatible");
+        assert_eq!(outcome.machines[1].calls, 0, "dropped machine reports zeroed stats");
+        assert_eq!(outcome.faults.machines_dropped, vec![1]);
+        assert_eq!(outcome.faults.elements_lost, 60, "machine 1 owned 60 elements");
+        assert_eq!(outcome.faults.faults_seen, 1);
+        assert_eq!(outcome.faults.retries, 0);
+        // A fleet that lost machines must not be reused warm.
+        let err = fleet.ping_all().expect_err("dropped machines poison the fleet");
+        assert!(err.to_string().contains("degraded"), "{err}");
+        let err = fleet
+            .begin_job(&params(100), "problem.k = 2\n")
+            .expect_err("no new jobs on a degraded fleet");
+        assert!(err.to_string().contains("re-establish"), "{err}");
+    }
+
+    #[test]
+    fn degrade_never_drops_machine_zero() {
+        // Machine 0 dies at its leaf step; machine 1 stays healthy.
+        let w0 = mem_worker(0, &[ready(10), ready(10)]);
+        let w1 = mem_worker(1, &[ready(10), ready(10), step(1, 0, 1)]);
+        let mut fleet =
+            RemoteFleet::establish("test", vec![w0, w1], 1, ShipPlan::Spec("spec"), 10, 0)
+                .expect("establish");
+        fleet.supervise(
+            FaultPolicy::Degrade,
+            Box::new(|_machine, _attempt| Err(DistError::backend("no reconnect"))),
+        );
+        fleet.begin_job(&params(10), "problem.k = 1\n").expect("job");
+        let err = fleet
+            .run_leaves(vec![(0..5).collect(), (5..10).collect()])
+            .expect_err("the root's machine cannot be dropped");
+        assert!(err.to_string().contains("machine 0"), "{err}");
+        assert!(err.to_string().contains("cannot be dropped"), "{err}");
+    }
+
+    #[test]
+    fn ping_all_probes_every_worker() {
+        let w0 = mem_worker(0, &[ready(10), FromWorker::Pong]);
+        let w1 = mem_worker(1, &[ready(10), FromWorker::Pong]);
+        let mut fleet =
+            RemoteFleet::establish("test", vec![w0, w1], 1, ShipPlan::Spec("spec"), 10, 0)
+                .expect("establish");
+        fleet.ping_all().expect("both workers pong");
+        // The next probe hits EOF — a worker that died while the fleet
+        // sat idle fails the probe instead of hanging a job.
+        let err = fleet.ping_all().expect_err("dead worker fails the probe");
+        assert!(err.to_string().contains("disconnected"), "{err}");
+        assert!(err.is_retryable(), "{err}");
     }
 }

@@ -23,22 +23,34 @@
 //!   session instead of desyncing mid-run.  The pipe transport skips
 //!   this (both ends are the same binary).
 //! * **Connect retry** — a worker daemon that is still starting (tests
-//!   and CI spawn `serve` right before the run) gets
-//!   [`CONNECT_RETRY_WINDOW`] of reconnect attempts; after that the run
-//!   fails into [`DistError::Backend`].  There is no mid-session
-//!   reconnect: a worker's state (its resident shard, its `S_prev`) dies
-//!   with its connection, so a dropped socket fails the session — and
+//!   and CI spawn `serve` right before the run) gets a window of
+//!   reconnect attempts with capped exponential backoff and
+//!   deterministic jitter ([`connect_window`]: default
+//!   [`CONNECT_RETRY_WINDOW`], tune with
+//!   `GREEDYML_TCP_CONNECT_TIMEOUT` seconds); after that the run fails
+//!   into a *retryable* [`DistError::Transport`] naming the `host:port`
+//!   it could not reach.
+//! * **Mid-session reconnect** — a worker's state (its resident shard,
+//!   its `S_prev`) dies with its connection, so by default
+//!   ([`FaultPolicy::Fail`]) a dropped socket fails the session — and
 //!   every job still queued on it — rather than silently recomputing.
-//!   The next session re-ships and recovers.
+//!   Under `--on-fault retry`/`degrade` the fleet is *supervised*
+//!   (`RemoteFleet::supervise`): a machine whose socket dies mid-job is
+//!   re-dialed onto the **next host in the ring**
+//!   (`hosts[(machine + attempt + 1) % hosts.len()]` — on a multi-host
+//!   fleet a crashed daemon's machines land on its neighbours; with one
+//!   host we re-dial it), re-handshaken, and replayed
+//!   deterministically from the retained init + job log, so the
+//!   recovered run stays bit-identical.  See `docs/failure-model.md`.
 //! * **Per-frame timeouts** — coordinator-side socket reads and writes
 //!   time out after [`frame_timeout`] (default 600 s, tune with
 //!   `GREEDYML_TCP_TIMEOUT`, `0` disables), so a wedged-but-open remote
-//!   worker becomes a [`DistError::Backend`] instead of a hang.  Daemon
-//!   sessions use a short pre-handshake timeout (port scans must not pin
-//!   threads) and a generous multi-hour one afterwards — a worker
-//!   legitimately idles while other machines compute, but a coordinator
-//!   that vanished without closing the socket must not leak the session
-//!   forever.
+//!   worker becomes a retryable [`DistError::Transport`] instead of a
+//!   hang.  Daemon sessions use a short pre-handshake timeout (port
+//!   scans must not pin threads) and a generous multi-hour one
+//!   afterwards — a worker legitimately idles while other machines
+//!   compute, but a coordinator that vanished without closing the
+//!   socket must not leak the session forever.
 //!
 //! Hosts come from [`DistConfig::hosts`](crate::algo::DistConfig::hosts)
 //! (the `--hosts` flag / `run.hosts` config key) or the `GREEDYML_HOSTS`
@@ -47,24 +59,32 @@
 //! which is how the tier-1 suite exercises it without a cluster.
 
 use super::backend::{AccumTask, Backend, BackendOutcome, ShipPlan};
+use super::fault::{FaultPolicy, FaultReport};
 use super::node::{NodeParams, StepReport};
 use super::proc::serve_session;
 use super::remote::{FramedWorker, RemoteFleet};
 use super::wire::{read_frame, write_frame, FromWorker, ToWorker, PROTOCOL_VERSION};
 use super::DistError;
-use crate::ElemId;
+use crate::{ElemId, MachineId};
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
-/// How long [`TcpBackend::connect`] keeps retrying a refused connection
-/// before failing the run — long enough for a just-spawned `greedyml
-/// serve` to reach `accept`, short enough that a wrong `--hosts` entry
-/// fails visibly.
+/// Default window [`TcpBackend::connect`] keeps retrying a refused
+/// connection before failing the run — long enough for a just-spawned
+/// `greedyml serve` to reach `accept`, short enough that a wrong
+/// `--hosts` entry fails visibly.  Override with
+/// `GREEDYML_TCP_CONNECT_TIMEOUT` (see [`connect_window`]).
 pub const CONNECT_RETRY_WINDOW: Duration = Duration::from_secs(5);
 
-/// Pause between connect attempts within the retry window.
-const CONNECT_POLL: Duration = Duration::from_millis(50);
+/// First pause between connect attempts; doubles per attempt up to
+/// [`CONNECT_BACKOFF_CAP`], plus deterministic jitter
+/// ([`connect_backoff`]).
+const CONNECT_BACKOFF_BASE: Duration = Duration::from_millis(25);
+
+/// Ceiling on the exponential connect backoff, so a long window polls
+/// about once a second instead of stretching into multi-minute gaps.
+const CONNECT_BACKOFF_CAP: Duration = Duration::from_millis(800);
 
 /// Default per-frame socket timeout (seconds) — see [`frame_timeout`].
 const DEFAULT_FRAME_TIMEOUT_SECS: u64 = 600;
@@ -99,6 +119,24 @@ pub fn frame_timeout() -> Result<Option<Duration>, DistError> {
             Ok(secs) => Ok(Some(Duration::from_secs(secs))),
             Err(_) => Err(DistError::backend(format!(
                 "GREEDYML_TCP_TIMEOUT: '{v}' is not a whole number of seconds (0 disables)"
+            ))),
+        },
+    }
+}
+
+/// The connect-retry window: `GREEDYML_TCP_CONNECT_TIMEOUT` seconds when
+/// set, else [`CONNECT_RETRY_WINDOW`] (5 s).  Raise it when daemons are
+/// provisioned on demand and legitimately take longer than 5 s to come
+/// up.  Zero and unparsable values are errors, not silent fall-backs —
+/// a connect window of nothing can never succeed, and a user who set
+/// `2m` must not have their override quietly replaced by the default.
+pub fn connect_window() -> Result<Duration, DistError> {
+    match std::env::var("GREEDYML_TCP_CONNECT_TIMEOUT") {
+        Err(_) => Ok(CONNECT_RETRY_WINDOW),
+        Ok(v) => match v.trim().parse::<u64>() {
+            Ok(secs) if secs > 0 => Ok(Duration::from_secs(secs)),
+            _ => Err(DistError::backend(format!(
+                "GREEDYML_TCP_CONNECT_TIMEOUT: '{v}' is not a positive whole number of seconds"
             ))),
         },
     }
@@ -203,6 +241,13 @@ impl TcpBackend {
     /// machine's dataset shard) exactly once, and verify every worker
     /// holds what the coordinator shipped.  `n` is the global ground-set
     /// size the shipped problem must rebuild to.
+    ///
+    /// Under [`FaultPolicy::Retry`] or [`FaultPolicy::Degrade`] the fleet
+    /// is supervised: a machine whose socket dies mid-run is re-dialed
+    /// onto the next host in the ring and replayed deterministically
+    /// (retry), or dropped from the accumulation tree with its loss
+    /// accounted (degrade).  [`FaultPolicy::Fail`] keeps the historical
+    /// fail-the-session behavior.
     pub fn connect(
         hosts: &[String],
         machines: u32,
@@ -210,12 +255,15 @@ impl TcpBackend {
         plan: ShipPlan<'_>,
         n: usize,
         session: u64,
+        fault: FaultPolicy,
     ) -> Result<Self, DistError> {
-        Self::connect_with_retry(hosts, machines, threads, plan, n, session, CONNECT_RETRY_WINDOW)
+        let window = connect_window()?;
+        Self::connect_with_retry(hosts, machines, threads, plan, n, session, window, fault)
     }
 
     /// [`TcpBackend::connect`] with an explicit retry window (tests use a
     /// short one so a dead host fails fast).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn connect_with_retry(
         hosts: &[String],
         machines: u32,
@@ -224,6 +272,7 @@ impl TcpBackend {
         n: usize,
         session: u64,
         retry: Duration,
+        fault: FaultPolicy,
     ) -> Result<Self, DistError> {
         if hosts.is_empty() {
             return Err(DistError::backend("the tcp backend needs at least one worker host"));
@@ -232,24 +281,28 @@ impl TcpBackend {
         let mut workers = Vec::with_capacity(machines as usize);
         for machine in 0..machines {
             let host = &hosts[machine as usize % hosts.len()];
-            let stream = connect_retry(host, retry)?;
-            let _ = stream.set_nodelay(true);
-            stream
-                .set_read_timeout(timeout)
-                .and_then(|_| stream.set_write_timeout(timeout))
-                .map_err(|e| DistError::backend(format!("worker at {host}: set timeout: {e}")))?;
-            let reader = stream
-                .try_clone()
-                .map_err(|e| DistError::backend(format!("worker at {host}: clone socket: {e}")))?;
-            // The peer label puts `host:port` into every later transport
-            // error, so a mid-run failure names the offending daemon.
-            let mut worker =
-                FramedWorker::new(machine, BufReader::new(reader), BufWriter::new(stream))
-                    .with_peer(host.clone());
-            handshake(&mut worker, host)?;
-            workers.push(worker);
+            workers.push(dial(host, machine, timeout, retry)?);
         }
-        Ok(Self { inner: RemoteFleet::establish("tcp", workers, threads, plan, n, session)? })
+        let mut inner = RemoteFleet::establish("tcp", workers, threads, plan, n, session)?;
+        if fault != FaultPolicy::Fail {
+            // The reconnect closure revives machine `m` on attempt `a` by
+            // dialing `hosts[(m + a + 1) % hosts.len()]` — the *next* host
+            // in the placement ring, then its successor, and so on.  On a
+            // multi-host fleet a crashed daemon's machines migrate to its
+            // neighbours; with a single host every attempt re-dials it
+            // (covering daemon restarts).  The fresh session replays the
+            // retained init + job log, so placement never affects results.
+            let ring: Vec<String> = hosts.to_vec();
+            inner.supervise(
+                fault,
+                Box::new(move |machine: MachineId, attempt: u32| {
+                    let host =
+                        &ring[(machine as usize + attempt as usize + 1) % ring.len()];
+                    dial(host, machine, frame_timeout()?, connect_window()?)
+                }),
+            );
+        }
+        Ok(Self { inner })
     }
 
     /// Start one job against the resident sessions — see
@@ -264,6 +317,19 @@ impl TcpBackend {
         self.inner.init_bytes()
     }
 
+    /// Probe every live session with `Ping` (see
+    /// [`RemoteFleet::ping_all`]) — how the session pool validates a warm
+    /// fleet before reusing it.
+    pub fn ping_all(&mut self) -> Result<(), DistError> {
+        self.inner.ping_all()
+    }
+
+    /// Faults absorbed by the current job so far (see
+    /// [`RemoteFleet::fault_report`]).
+    pub fn fault_report(&self) -> FaultReport {
+        self.inner.fault_report()
+    }
+
     /// End the session: best-effort `Release` to every daemon, which
     /// drops its resident oracle and closes the connection.
     pub fn release(&mut self) {
@@ -271,21 +337,71 @@ impl TcpBackend {
     }
 }
 
-/// Dial `host` until it accepts or the retry window closes.  Each
-/// attempt uses [`TcpStream::connect_timeout`] bounded by the remaining
-/// window, so a blackholed host (dropped SYNs, no RST) fails within
-/// ~`retry` instead of blocking on the kernel's minutes-long connect
-/// timeout.
+/// Dial one worker session: connect (with retry), set per-frame
+/// timeouts, handshake protocol versions, and label the worker with its
+/// `host:port` so every later transport error names the offending
+/// daemon.  Shared by the initial placement loop and the supervised
+/// reconnect path, so a revived session is configured exactly like the
+/// one it replaces.
+fn dial(
+    host: &str,
+    machine: MachineId,
+    timeout: Option<Duration>,
+    retry: Duration,
+) -> Result<FramedWorker<BufReader<TcpStream>, BufWriter<TcpStream>>, DistError> {
+    let stream = connect_retry(host, retry)?;
+    let _ = stream.set_nodelay(true);
+    stream
+        .set_read_timeout(timeout)
+        .and_then(|_| stream.set_write_timeout(timeout))
+        .map_err(|e| DistError::transport(format!("worker at {host}: set timeout: {e}")))?;
+    let reader = stream
+        .try_clone()
+        .map_err(|e| DistError::transport(format!("worker at {host}: clone socket: {e}")))?;
+    let mut worker = FramedWorker::new(machine, BufReader::new(reader), BufWriter::new(stream))
+        .with_peer(host.to_string());
+    handshake(&mut worker, host)?;
+    Ok(worker)
+}
+
+/// The pause before connect attempt `attempt + 1` against `host`:
+/// exponential from [`CONNECT_BACKOFF_BASE`], capped at
+/// [`CONNECT_BACKOFF_CAP`], plus up to 50% *deterministic* jitter
+/// hashed from `(host, attempt)`.  The jitter de-synchronizes a fleet
+/// of coordinators (or one coordinator's machines) hammering the same
+/// just-restarting daemon, without introducing an RNG: the same
+/// host/attempt pair always backs off identically, so fault-injection
+/// runs replay bit-for-bit.
+fn connect_backoff(host: &str, attempt: u32) -> Duration {
+    use std::hash::{Hash, Hasher};
+    let base = CONNECT_BACKOFF_BASE.as_millis() as u64;
+    let cap = CONNECT_BACKOFF_CAP.as_millis() as u64;
+    let exp = base.saturating_mul(1u64 << attempt.min(16)).min(cap);
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    host.hash(&mut h);
+    attempt.hash(&mut h);
+    Duration::from_millis(exp + h.finish() % (exp / 2 + 1))
+}
+
+/// Dial `host` until it accepts or the retry window closes, backing off
+/// between attempts ([`connect_backoff`]).  Each attempt uses
+/// [`TcpStream::connect_timeout`] bounded by the remaining window, so a
+/// blackholed host (dropped SYNs, no RST) fails within ~`retry` instead
+/// of blocking on the kernel's minutes-long connect timeout.  Giving up
+/// is a *retryable* [`DistError::Transport`] naming the `host:port` —
+/// under supervision the next revival attempt may reach a different
+/// host in the ring.
 fn connect_retry(host: &str, retry: Duration) -> Result<TcpStream, DistError> {
     use std::net::ToSocketAddrs;
     let deadline = Instant::now() + retry;
+    let mut attempt: u32 = 0;
     loop {
-        let attempt = (|| -> std::io::Result<TcpStream> {
+        let result = (|| -> std::io::Result<TcpStream> {
             let mut last: Option<std::io::Error> = None;
             for addr in host.to_socket_addrs()? {
                 let left = deadline
                     .saturating_duration_since(Instant::now())
-                    .max(CONNECT_POLL);
+                    .max(CONNECT_BACKOFF_BASE);
                 match TcpStream::connect_timeout(&addr, left) {
                     Ok(stream) => return Ok(stream),
                     Err(e) => last = Some(e),
@@ -295,17 +411,21 @@ fn connect_retry(host: &str, retry: Duration) -> Result<TcpStream, DistError> {
                 std::io::Error::new(std::io::ErrorKind::NotFound, "no addresses resolved")
             }))
         })();
-        match attempt {
+        match result {
             Ok(stream) => return Ok(stream),
             Err(e) => {
                 if Instant::now() >= deadline {
-                    return Err(DistError::backend(format!(
-                        "cannot reach worker at {host} after {:.1}s: {e} \
+                    return Err(DistError::transport(format!(
+                        "cannot reach worker at {host} after {:.1}s ({} attempts): {e} \
                          (is `greedyml serve --bind {host}` running?)",
-                        retry.as_secs_f64()
+                        retry.as_secs_f64(),
+                        attempt + 1
                     )));
                 }
-                std::thread::sleep(CONNECT_POLL);
+                let pause = connect_backoff(host, attempt)
+                    .min(deadline.saturating_duration_since(Instant::now()));
+                std::thread::sleep(pause);
+                attempt += 1;
             }
         }
     }
@@ -507,11 +627,31 @@ mod tests {
             100,
             0,
             Duration::from_millis(200),
+            FaultPolicy::Fail,
         )
         .unwrap_err();
+        assert!(err.is_retryable(), "an unreachable host is a transport fault: {err}");
         let msg = err.to_string();
         assert!(msg.contains("cannot reach worker"), "{msg}");
+        assert!(msg.contains(&format!("127.0.0.1:{port}")), "names the host:port: {msg}");
         assert!(msg.contains("greedyml serve"), "{msg}");
+    }
+
+    #[test]
+    fn connect_backoff_is_deterministic_capped_and_growing() {
+        let a = connect_backoff("10.0.0.1:7401", 3);
+        assert_eq!(a, connect_backoff("10.0.0.1:7401", 3), "same (host, attempt) → same pause");
+        assert_ne!(
+            connect_backoff("10.0.0.1:7401", 0),
+            connect_backoff("10.0.0.2:7401", 0),
+            "jitter separates hosts retrying in lockstep"
+        );
+        // Exponential base under the cap: attempt 0 starts at BASE, and
+        // even with full jitter a later attempt never exceeds 1.5 × cap.
+        assert!(connect_backoff("h:1", 0) >= CONNECT_BACKOFF_BASE);
+        for attempt in 0..40 {
+            assert!(connect_backoff("h:1", attempt) <= CONNECT_BACKOFF_CAP * 3 / 2);
+        }
     }
 
     #[test]
@@ -549,10 +689,13 @@ mod tests {
             100,
             0,
             Duration::from_secs(5),
+            FaultPolicy::Retry,
         )
         .unwrap();
         assert_eq!(backend.name(), "tcp");
         assert!(backend.measures_comm());
+        backend.ping_all().expect("a fresh fleet answers pings");
+        assert!(backend.fault_report().is_empty(), "no faults were injected");
         let shipped_once = backend.init_bytes();
         assert!(shipped_once > 0);
         let mut outcomes = Vec::new();
@@ -588,6 +731,7 @@ mod tests {
             100,
             0,
             Duration::from_secs(5),
+            FaultPolicy::Fail,
         )
         .unwrap_err();
         let msg = err.to_string();

@@ -28,6 +28,8 @@
 //! InitPart{session,machine,
 //!          threads,payload}     Ready{n}   (partition shipping: n = shard size)
 //! ── per job, repeatable ──────────────────────────────────────────────
+//! Ping                          Pong       (liveness probe, any time
+//!                                          after the session opens)
 //! Job{job,params,spec}          Ready{n} | Fail(err)  (state reset,
 //!                                          constraint rebuilt from spec)
 //! Leaf{part}                    Step(report) | Fail(err)
@@ -70,7 +72,13 @@ const MAX_FRAME: u32 = 1 << 30;
 /// against the resident oracle, `job_done` replaces per-run `finish`
 /// (the worker stays resident), and `release` ends the session.  The
 /// one-shot `finish` command is gone.
-pub const PROTOCOL_VERSION: u32 = 3;
+///
+/// v4: fault tolerance — the `ping`/`pong` liveness probe (the
+/// coordinator checks a warm fleet is still alive before reusing it or
+/// after reviving a machine) and the `transport` error kind
+/// ([`DistError::Transport`], the retryable class of the fault
+/// taxonomy).
+pub const PROTOCOL_VERSION: u32 = 4;
 
 /// Write one length-prefixed JSON frame.  Returns the total number of
 /// bytes put on the wire (4-byte length prefix + payload) so callers can
@@ -200,6 +208,12 @@ pub enum ToWorker {
     /// End the session: the worker exits without replying.  Best-effort —
     /// a dropped connection (EOF) releases the session just the same.
     Release,
+    /// Liveness probe: the worker replies [`FromWorker::Pong`]
+    /// immediately, at any point in the session where a command is legal.
+    /// The coordinator pings a warm fleet before reusing it (a daemon may
+    /// have died while the fleet sat idle) and a revived session after
+    /// replaying its command log.
+    Ping,
 }
 
 /// Worker → coordinator replies.
@@ -234,6 +248,8 @@ pub enum FromWorker {
     },
     /// The node program failed (OOM) or the worker itself did.
     Fail(DistError),
+    /// Liveness probe reply to [`ToWorker::Ping`].
+    Pong,
 }
 
 impl ToWorker {
@@ -273,6 +289,7 @@ impl ToWorker {
             }
             Self::JobDone => json!({ "t": "job_done" }),
             Self::Release => json!({ "t": "release" }),
+            Self::Ping => json!({ "t": "ping" }),
         }
     }
 
@@ -313,6 +330,7 @@ impl ToWorker {
             }),
             "job_done" => Ok(Self::JobDone),
             "release" => Ok(Self::Release),
+            "ping" => Ok(Self::Ping),
             other => Err(DistError::backend(format!("unknown command '{other}'"))),
         }
     }
@@ -334,6 +352,7 @@ impl FromWorker {
                 "value": value,
             }),
             Self::Fail(e) => json!({ "t": "fail", "error": error_to_value(e) }),
+            Self::Pong => json!({ "t": "pong" }),
         }
     }
 
@@ -351,6 +370,7 @@ impl FromWorker {
                 value: f64_field(v, "value")?,
             }),
             "fail" => Ok(Self::Fail(error_from_value(field(v, "error")?)?)),
+            "pong" => Ok(Self::Pong),
             other => Err(DistError::backend(format!("unknown reply '{other}'"))),
         }
     }
@@ -530,6 +550,7 @@ fn error_to_value(e: &DistError) -> Value {
             "limit": limit,
         }),
         DistError::Backend { message } => json!({ "kind": "backend", "message": message }),
+        DistError::Transport { message } => json!({ "kind": "transport", "message": message }),
     }
 }
 
@@ -544,6 +565,7 @@ fn error_from_value(v: &Value) -> Result<DistError, DistError> {
             limit: u64_field(v, "limit")?,
         }),
         "backend" => Ok(DistError::backend(str_field(v, "message")?)),
+        "transport" => Ok(DistError::transport(str_field(v, "message")?)),
         other => Err(DistError::backend(format!("unknown error kind '{other}'"))),
     }
 }
@@ -634,6 +656,7 @@ mod tests {
             ToWorker::Accum { level: 2, comm_secs: 0.125 },
             ToWorker::JobDone,
             ToWorker::Release,
+            ToWorker::Ping,
         ]
     }
 
@@ -672,6 +695,7 @@ mod tests {
                 in_use: 50,
                 limit: 120,
             }),
+            FromWorker::Pong,
         ]
     }
 
@@ -688,6 +712,7 @@ mod tests {
             roundtrip_reply(reply);
         }
         roundtrip_reply(FromWorker::Fail(DistError::backend("spawn failed")));
+        roundtrip_reply(FromWorker::Fail(DistError::transport("worker 1 disconnected")));
     }
 
     /// Every `"t"` tag scanned out of a document (the prose spec quotes

@@ -51,11 +51,13 @@ fn real_main() -> greedyml::Result<()> {
 const USAGE: &str = "usage: greedyml <run|sweep|submit|serve|tree|datasets|artifacts|model> [flags]
   run       --config <file> [--set key=value]… [--json <out.json>] [--pjrt]
             [--backend thread|process|tcp] [--hosts h1:port,h2:port] [--ship spec|partition]
+            [--on-fault fail|retry|degrade]
   sweep     --config <file> (with a [sweep] section) [--set key=value]… [--json <out.json>]
             [--csv <dir>] [--backend thread|process|tcp] [--hosts h1:port,h2:port]
-            [--ship spec|partition]
+            [--ship spec|partition] [--on-fault fail|retry|degrade]
   submit    --config <file> (with a [jobs] section) [--set key=value]…
             [--backend thread|process|tcp] [--hosts h1:port,h2:port] [--ship spec|partition]
+            [--on-fault fail|retry|degrade]
   serve     --bind <addr>   (tcp-backend worker daemon; --bind 127.0.0.1:0 picks a free port)
   tree      --machines <m> --branching <b>
   datasets  (no flags)
@@ -63,7 +65,9 @@ const USAGE: &str = "usage: greedyml <run|sweep|submit|serve|tree|datasets|artif
   model     --n <n> --k <k> --machines <m> --levels <L> [--delta <d>]";
 
 fn cmd_run(args: &Args) -> greedyml::Result<()> {
-    args.check_known(&["config", "set", "json", "pjrt", "trace", "backend", "hosts", "ship"])?;
+    args.check_known(&[
+        "config", "set", "json", "pjrt", "trace", "backend", "hosts", "ship", "on-fault",
+    ])?;
     let mut cfg = Config::load(args.require("config")?)?;
     for kv in args.get_all("set") {
         cfg.set_kv(kv)?;
@@ -76,6 +80,9 @@ fn cmd_run(args: &Args) -> greedyml::Result<()> {
     }
     if let Some(ship) = args.get("ship") {
         cfg.set("run.ship", ship);
+    }
+    if let Some(on_fault) = args.get("on-fault") {
+        cfg.set("run.on_fault", on_fault);
     }
     let engine = if args.has("pjrt") || cfg.str_or("objective.backend", "cpu") == "pjrt" {
         if args.has("pjrt") {
@@ -130,7 +137,9 @@ fn cmd_run(args: &Args) -> greedyml::Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
-    args.check_known(&["config", "set", "json", "pjrt", "csv", "backend", "hosts", "ship"])?;
+    args.check_known(&[
+        "config", "set", "json", "pjrt", "csv", "backend", "hosts", "ship", "on-fault",
+    ])?;
     let mut cfg = Config::load(args.require("config")?)?;
     for kv in args.get_all("set") {
         cfg.set_kv(kv)?;
@@ -143,6 +152,9 @@ fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
     }
     if let Some(ship) = args.get("ship") {
         cfg.set("sweep.ship", ship);
+    }
+    if let Some(on_fault) = args.get("on-fault") {
+        cfg.set("sweep.on_fault", on_fault);
     }
     let engine = if args.has("pjrt") || cfg.str_or("objective.backend", "cpu") == "pjrt" {
         Some(Arc::new(Engine::load(&greedyml::runtime::artifact_dir())?))
@@ -173,7 +185,7 @@ fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
 }
 
 fn cmd_submit(args: &Args) -> greedyml::Result<()> {
-    args.check_known(&["config", "set", "backend", "hosts", "ship"])?;
+    args.check_known(&["config", "set", "backend", "hosts", "ship", "on-fault"])?;
     let mut cfg = Config::load(args.require("config")?)?;
     for kv in args.get_all("set") {
         cfg.set_kv(kv)?;
@@ -186,6 +198,9 @@ fn cmd_submit(args: &Args) -> greedyml::Result<()> {
     }
     if let Some(ship) = args.get("ship") {
         cfg.set("jobs.ship", ship);
+    }
+    if let Some(on_fault) = args.get("on-fault") {
+        cfg.set("jobs.on_fault", on_fault);
     }
     let problem = greedyml::coordinator::build_problem(&cfg, None)?;
     let batch = greedyml::coordinator::JobBatch::from_config(&cfg)?;
@@ -202,27 +217,45 @@ fn cmd_submit(args: &Args) -> greedyml::Result<()> {
     println!("{:>6} {:>6}  {:<8} {}", "k", "seed", "status", "value");
     for (seed, k) in jobs {
         let dist = batch.dist_config(&cfg, k, seed);
-        match queue.submit(&problem, &dist)? {
-            greedyml::coordinator::Submission::Rejected { reason } => {
+        // One job failing must not strand the rest of the batch — or eat
+        // the final accounting.  Report the row, keep draining.
+        match queue.submit(&problem, &dist) {
+            Ok(greedyml::coordinator::Submission::Rejected { reason }) => {
                 println!("{k:>6} {seed:>6}  {:<8} — {reason}", "rejected");
             }
-            sub => {
+            Ok(sub) => {
                 println!("{k:>6} {seed:>6}  {:<8} {:.6}", sub.status(), sub.value().unwrap());
+            }
+            Err(e) => {
+                println!("{k:>6} {seed:>6}  {:<8} — {e}", "failed");
             }
         }
     }
     let pool = queue.pool();
     println!(
-        "queue: {} submitted, {} cached, {} rejected; fleet: {} sessions established, \
-         {} of {} pooled jobs warm, {} init bytes shipped",
+        "queue: {} submitted, {} cached, {} rejected, {} failed; fleet: {} sessions \
+         established, {} of {} pooled jobs warm, {} retried, {} init bytes shipped",
         queue.submitted(),
         queue.cache_hits(),
         queue.rejected(),
+        queue.failed(),
         pool.sessions_established(),
         pool.warm_jobs(),
         pool.jobs_run(),
+        pool.retried_jobs(),
         pool.init_bytes_total()
     );
+    // A batch with refused or failed work is not a success: exit nonzero
+    // so CI and scripts notice, after the full accounting has printed.
+    if queue.rejected() > 0 || queue.failed() > 0 {
+        anyhow::bail!(
+            "{} of {} jobs did not complete ({} rejected by admission, {} failed)",
+            queue.rejected() + queue.failed(),
+            queue.submitted(),
+            queue.rejected(),
+            queue.failed()
+        );
+    }
     Ok(())
 }
 

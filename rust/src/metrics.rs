@@ -34,6 +34,11 @@ pub struct RunReport {
     pub comm_secs: f64,
     /// Peak per-machine memory in bytes.
     pub peak_mem: u64,
+    /// Human-readable fault accounting when the run saw worker faults
+    /// (`None` = fault-free).  A report mentioning dropped machines
+    /// marks a **degraded** answer — computed without the lost
+    /// machines' data (see docs/failure-model.md).
+    pub faults: Option<String>,
 }
 
 impl RunReport {
@@ -61,6 +66,7 @@ impl RunReport {
             comp_secs: out.comp_secs,
             comm_secs: out.comm_secs,
             peak_mem: out.peak_mem(),
+            faults: (!out.faults.is_empty()).then(|| out.faults.to_string()),
         }
     }
 
@@ -119,6 +125,7 @@ impl RunReport {
             ("comp_secs", Json::from(self.comp_secs)),
             ("comm_secs", Json::from(self.comm_secs)),
             ("peak_mem", Json::from(self.peak_mem)),
+            ("faults", self.faults.clone().map_or(Json::Null, Json::from)),
         ])
     }
 }
@@ -248,6 +255,7 @@ mod tests {
             comp_secs: 0.5,
             comm_secs: 0.01,
             peak_mem: 2048,
+            faults: None,
         }
     }
 

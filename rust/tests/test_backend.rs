@@ -460,7 +460,8 @@ fn tcp_worker_death_mid_superstep_is_an_error_not_a_hang() {
     // A scripted rogue worker: completes the handshake, the session Init
     // and the Job ack, then drops the connection at the Leaf command —
     // exactly what a crashed or OOM-killed remote host looks like.  The
-    // coordinator must fail with DistError::Backend instead of blocking
+    // coordinator must fail with a retryable DistError::Transport (under
+    // the default fail policy nothing retries it) instead of blocking
     // forever.
     let parsed = Config::parse(COVERAGE_SPEC).unwrap();
     let problem = build_problem(&parsed, None).unwrap();
@@ -502,11 +503,13 @@ fn tcp_worker_death_mid_superstep_is_an_error_not_a_hang() {
         hosts: Some(vec![addr]),
         ..DistConfig::greedyml(AccumulationTree::new(1, 2), 1)
     };
-    match run_dist(problem.oracle.as_ref(), constraint.as_ref(), &cfg).unwrap_err() {
-        DistError::Backend { message } => {
+    let err = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &cfg).unwrap_err();
+    assert!(err.is_retryable(), "worker death is retryable: {err}");
+    match err {
+        DistError::Transport { message } => {
             assert!(message.contains("disconnected"), "{message}");
         }
-        other => panic!("expected backend error, got {other:?}"),
+        other => panic!("expected transport error, got {other:?}"),
     }
     rogue.join().unwrap();
 }
@@ -625,7 +628,7 @@ fn tcp_daemon_death_between_jobs_poisons_the_session_and_the_pool_recovers() {
 
     let err = run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), &cfg, &mut pool)
         .expect_err("a dead resident session must error, not hang");
-    assert!(matches!(err, DistError::Backend { .. }), "{err}");
+    assert!(matches!(err, DistError::Transport { .. }), "{err}");
     assert_eq!(pool.jobs_run(), 2);
     assert_eq!(pool.warm_jobs(), 0, "the failed reuse is not a warm job");
 

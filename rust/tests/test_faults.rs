@@ -1,0 +1,237 @@
+//! Deterministic fault injection end to end: `GREEDYML_FAULT_PLAN` kills
+//! workers at scripted protocol points, and the three `--on-fault`
+//! policies must do exactly what `docs/failure-model.md` promises —
+//! `retry` re-dispatches the dead machine and stays bit-identical to the
+//! fault-free thread backend, `degrade` completes with a feasible
+//! solution and full accounting, `fail` surfaces the first fault as a
+//! retryable transport error.
+//!
+//! Process-backend plans travel through this test process's own
+//! environment (spawned workers inherit it), so those tests serialize on
+//! a lock and scrub the variable when done.  Tcp-backend plans are set on
+//! individual `greedyml serve` daemons instead — the coordinator's
+//! environment stays clean and daemons can be faulted selectively.
+
+use greedyml::algo::{run_dist, DistConfig, DistOutcome};
+use greedyml::coordinator::{build_problem, experiment::build_constraint, problem_spec};
+use greedyml::dist::{BackendSpec, DistError, FaultSpec};
+use greedyml::tree::AccumulationTree;
+use greedyml::util::config::Config;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::{Mutex, MutexGuard};
+
+/// The real `greedyml` binary — process-backend workers and tcp `serve`
+/// daemons.
+fn worker_bin() -> String {
+    env!("CARGO_BIN_EXE_greedyml").to_string()
+}
+
+/// Serializes the tests whose fault plans live in this process's
+/// environment (the process backend spawns workers that inherit it).
+static FAULT_PLAN_ENV: Mutex<()> = Mutex::new(());
+
+/// Sets `GREEDYML_FAULT_PLAN` for the guard's lifetime; process-backend
+/// workers spawned while it lives inherit the plan.
+struct PlanEnv<'a>(#[allow(dead_code)] MutexGuard<'a, ()>);
+
+impl PlanEnv<'_> {
+    fn set(plan: &str) -> Self {
+        let guard = FAULT_PLAN_ENV.lock().unwrap_or_else(|e| e.into_inner());
+        std::env::set_var("GREEDYML_FAULT_PLAN", plan);
+        PlanEnv(guard)
+    }
+}
+
+impl Drop for PlanEnv<'_> {
+    fn drop(&mut self) {
+        std::env::remove_var("GREEDYML_FAULT_PLAN");
+    }
+}
+
+/// One spawned `greedyml serve` daemon on an ephemeral localhost port
+/// with its own extra environment, killed on drop.  The daemon never
+/// inherits this process's `GREEDYML_FAULT_PLAN` — a concurrently
+/// running process-backend test must not fault someone else's daemon.
+struct ServeDaemon {
+    child: Child,
+    addr: String,
+}
+
+impl ServeDaemon {
+    fn spawn(env: &[(&str, &str)]) -> Self {
+        let mut cmd = Command::new(worker_bin());
+        cmd.args(["serve", "--bind", "127.0.0.1:0"])
+            .env_remove("GREEDYML_FAULT_PLAN")
+            .stdout(Stdio::piped());
+        for (k, v) in env {
+            cmd.env(k, v);
+        }
+        let mut child = cmd.spawn().expect("spawn greedyml serve");
+        let mut line = String::new();
+        BufReader::new(child.stdout.as_mut().expect("piped stdout"))
+            .read_line(&mut line)
+            .expect("read listen line");
+        let addr = line
+            .trim()
+            .rsplit(' ')
+            .next()
+            .unwrap_or_default()
+            .to_string();
+        assert!(
+            line.contains("listening on") && addr.contains(':'),
+            "unexpected serve banner: {line:?}"
+        );
+        ServeDaemon { child, addr }
+    }
+}
+
+impl Drop for ServeDaemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+const SPEC: &str = "[dataset]\nkind = retail\nn = 500\nseed = 2\n[problem]\nk = 10\n";
+
+/// Build the shared workload and run it under `cfg`.
+fn run(cfg: &DistConfig) -> Result<DistOutcome, DistError> {
+    let parsed = Config::parse(SPEC).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+    run_dist(problem.oracle.as_ref(), constraint.as_ref(), cfg)
+}
+
+fn thread_cfg() -> DistConfig {
+    DistConfig {
+        backend: BackendSpec::Thread,
+        ..DistConfig::greedyml(AccumulationTree::new(4, 2), 42)
+    }
+}
+
+fn process_cfg(on_fault: FaultSpec) -> DistConfig {
+    let parsed = Config::parse(SPEC).unwrap();
+    DistConfig {
+        backend: BackendSpec::Process,
+        problem: Some(problem_spec(&parsed)),
+        worker_bin: Some(worker_bin()),
+        on_fault,
+        ..DistConfig::greedyml(AccumulationTree::new(4, 2), 42)
+    }
+}
+
+fn tcp_cfg(on_fault: FaultSpec, daemons: &[ServeDaemon]) -> DistConfig {
+    let parsed = Config::parse(SPEC).unwrap();
+    DistConfig {
+        backend: BackendSpec::Tcp,
+        problem: Some(problem_spec(&parsed)),
+        hosts: Some(daemons.iter().map(|d| d.addr.clone()).collect()),
+        on_fault,
+        ..DistConfig::greedyml(AccumulationTree::new(4, 2), 42)
+    }
+}
+
+// ---- process backend ----------------------------------------------------
+
+#[test]
+fn process_retry_replays_a_killed_worker_bit_identically() {
+    // Machine 1's worker dies the moment it receives its Leaf command;
+    // the supervisor respawns it (scrubbed of the plan), replays the
+    // session log, and the run must end bit-identical to the fault-free
+    // thread backend — retries cost wall time, never quality.
+    let plan = PlanEnv::set("kill:m1@leaf");
+    let retried = run(&process_cfg(FaultSpec::Retry)).expect("supervised process run");
+    drop(plan);
+    let thread = run(&thread_cfg()).expect("thread run");
+    assert_eq!(retried.solution, thread.solution, "retry must not change the answer");
+    assert_eq!(retried.value.to_bits(), thread.value.to_bits());
+    assert_eq!(retried.critical_calls, thread.critical_calls);
+    assert_eq!(retried.total_calls, thread.total_calls);
+    assert!(retried.faults.faults_seen >= 1, "{:?}", retried.faults);
+    assert!(retried.faults.retries >= 1, "{:?}", retried.faults);
+    assert!(retried.faults.machines_dropped.is_empty(), "retry drops nobody");
+}
+
+#[test]
+fn process_degrade_completes_with_accounting() {
+    // Machine 3 (a pure leaf) dies; degrade drops its contribution and
+    // finishes with a feasible solution plus honest accounting for what
+    // the answer never saw.
+    let plan = PlanEnv::set("kill:m3@leaf");
+    let degraded = run(&process_cfg(FaultSpec::Degrade)).expect("degraded run completes");
+    drop(plan);
+    assert!(!degraded.solution.is_empty());
+    assert!(degraded.solution.len() <= 10, "k = 10 must still bind");
+    assert!(degraded.value > 0.0);
+    assert_eq!(degraded.faults.machines_dropped, vec![3]);
+    assert!(degraded.faults.elements_lost > 0, "{:?}", degraded.faults);
+    assert!(degraded.faults.faults_seen >= 1, "{:?}", degraded.faults);
+}
+
+#[test]
+fn process_fail_policy_surfaces_the_injected_fault() {
+    // The pre-supervision behavior, verbatim: first transport fault
+    // aborts the run with a retryable error that nothing retries.
+    let plan = PlanEnv::set("kill:m1@leaf");
+    let err = run(&process_cfg(FaultSpec::Fail)).expect_err("fail must abort");
+    drop(plan);
+    assert!(err.is_retryable(), "worker death is a transport fault: {err}");
+    assert!(matches!(err, DistError::Transport { .. }), "{err}");
+}
+
+#[test]
+fn injected_delay_changes_timing_but_never_bits() {
+    // A delay is jitter, not a fault: no report entries, and the answer
+    // is bit-identical to the undelayed thread run.
+    let plan = PlanEnv::set("delay:m2@job:50ms");
+    let delayed = run(&process_cfg(FaultSpec::Retry)).expect("delayed run");
+    drop(plan);
+    let thread = run(&thread_cfg()).expect("thread run");
+    assert_eq!(delayed.solution, thread.solution);
+    assert_eq!(delayed.value.to_bits(), thread.value.to_bits());
+    assert!(delayed.faults.is_empty(), "a delay is not a fault: {:?}", delayed.faults);
+}
+
+// ---- tcp backend --------------------------------------------------------
+
+#[test]
+fn tcp_retry_migrates_a_killed_session_to_the_next_host_bit_identically() {
+    // Machines 0 and 2 land on the healthy daemon, 1 and 3 on the doomed
+    // one (round-robin placement).  Machine 1's session is killed at its
+    // Leaf command; the revival ring dials the *next* host — the healthy
+    // daemon, which carries no plan — replays the session log there, and
+    // the run ends bit-identical to the thread backend.
+    let healthy = ServeDaemon::spawn(&[]);
+    let doomed = ServeDaemon::spawn(&[("GREEDYML_FAULT_PLAN", "kill:m1@leaf")]);
+    let daemons = [healthy, doomed];
+    let retried = run(&tcp_cfg(FaultSpec::Retry, &daemons)).expect("supervised tcp run");
+    let thread = run(&thread_cfg()).expect("thread run");
+    assert_eq!(retried.solution, thread.solution, "migration must not change the answer");
+    assert_eq!(retried.value.to_bits(), thread.value.to_bits());
+    assert_eq!(retried.critical_calls, thread.critical_calls);
+    assert!(retried.faults.faults_seen >= 1, "{:?}", retried.faults);
+    assert!(retried.faults.retries >= 1, "{:?}", retried.faults);
+}
+
+#[test]
+fn tcp_degrade_reports_the_lost_machine_and_finishes() {
+    // All four machines on one daemon whose plan kills machine 3's
+    // session at its Leaf command; the other sessions are untouched
+    // (plans filter by machine) and the run completes degraded.
+    let daemons = [ServeDaemon::spawn(&[("GREEDYML_FAULT_PLAN", "kill:m3@leaf")])];
+    let degraded = run(&tcp_cfg(FaultSpec::Degrade, &daemons)).expect("degraded tcp run");
+    assert!(!degraded.solution.is_empty());
+    assert!(degraded.solution.len() <= 10, "k = 10 must still bind");
+    assert!(degraded.value > 0.0);
+    assert_eq!(degraded.faults.machines_dropped, vec![3]);
+    assert!(degraded.faults.elements_lost > 0, "{:?}", degraded.faults);
+}
+
+#[test]
+fn tcp_fail_policy_preserves_fail_fast() {
+    let daemons = [ServeDaemon::spawn(&[("GREEDYML_FAULT_PLAN", "kill:m1@leaf")])];
+    let err = run(&tcp_cfg(FaultSpec::Fail, &daemons)).expect_err("fail must abort");
+    assert!(matches!(err, DistError::Transport { .. }), "{err}");
+    assert!(err.is_retryable(), "so `--on-fault retry` could have handled it: {err}");
+}

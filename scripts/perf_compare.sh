@@ -80,7 +80,7 @@ if failures and unverified:
     for f_ in failures:
         print(f"perf_compare WARN  {name}: {f_} [baseline unverified, downgraded]")
     print(f"perf_compare: {name}: baseline is provenance-marked unverified; "
-          "refresh it from a real run to arm the gate")
+          "run scripts/refresh_baselines.sh on the reference machine to arm the gate")
 elif failures:
     for f_ in failures:
         print(f"perf_compare FAIL  {name}: {f_}")

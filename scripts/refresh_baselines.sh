@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# refresh_baselines.sh — re-measure the committed bench baselines.
+#
+# Runs the two bench smokes at the same --tiny sizes CI pins
+# (.github/workflows/ci.yml), then copies the freshly-written
+# rust/BENCH_*.json over the repo-root baselines WITHOUT the
+# "committed-unverified-baseline" provenance marker — from then on
+# scripts/perf_compare.sh enforces (>30% drift on non-wall-clock keys
+# fails CI) instead of downgrading every failure to a warning.
+#
+# Run it on the reference machine (the CI runner class, so the numbers
+# gate the machines that actually check them), eyeball the diff, commit
+# the two JSON files it rewrites. That's the whole refresh.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+(cd rust && cargo bench --bench perf_micro -- --tiny --json)
+(cd rust && cargo bench --bench dist_ship -- --tiny --json)
+
+for name in BENCH_perf_micro.json BENCH_dist_ship.json; do
+    python3 - "$name" <<'PYEOF'
+import json
+import sys
+
+name = sys.argv[1]
+with open(f"rust/{name}") as f:
+    doc = json.load(f)
+doc.pop("provenance", None)
+with open(name, "w") as f:
+    json.dump(doc, f, indent=2)
+    f.write("\n")
+print(f"refreshed {name} (provenance marker dropped; perf gate armed)")
+PYEOF
+done
