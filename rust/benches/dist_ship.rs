@@ -109,7 +109,7 @@ fn main() {
     // asserted bit-identical warm vs cold vs thread.
     harness::section("warm vs cold: one resident fleet answering 5 jobs");
     let job_ks: [usize; 5] = [4, 6, 8, 10, 12];
-    let run_job = |k: usize, pool: &mut SessionPool| -> (f64, f64) {
+    let run_job = |k: usize, pool: &SessionPool| -> (f64, f64) {
         let spec = format!("{shipped_spec}problem.k = {k}\n");
         let spec_cfg = Config::parse(&spec).unwrap();
         let c = build_constraint(&spec_cfg, n).unwrap().0;
@@ -124,18 +124,18 @@ fn main() {
         (t0.elapsed().as_secs_f64(), out.value)
     };
 
-    let mut warm_pool = SessionPool::new();
-    let warm: Vec<(f64, f64)> = job_ks.iter().map(|&k| run_job(k, &mut warm_pool)).collect();
+    let warm_pool = SessionPool::new();
+    let warm: Vec<(f64, f64)> = job_ks.iter().map(|&k| run_job(k, &warm_pool)).collect();
     let warm_init = warm_pool.init_bytes_total();
     assert_eq!(warm_pool.sessions_established(), 1, "one fleet must answer all 5 jobs");
     assert_eq!(warm_pool.warm_jobs(), job_ks.len() as u64 - 1);
 
-    let mut cold_pool = SessionPool::new();
+    let cold_pool = SessionPool::new();
     let cold: Vec<(f64, f64)> = job_ks
         .iter()
         .map(|&k| {
             cold_pool.clear();
-            run_job(k, &mut cold_pool)
+            run_job(k, &cold_pool)
         })
         .collect();
     let cold_init = cold_pool.init_bytes_total();

@@ -29,6 +29,7 @@ use crate::objective::{Oracle, PartitionPayload, Partitionable};
 use crate::tree::AccumulationTree;
 use crate::util::rng::RandomTape;
 use crate::{ElemId, MachineId};
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 /// Run GreedyML with the given config (Algorithm 3.1).
 pub fn run_greedyml(
@@ -374,7 +375,24 @@ impl PoolFleet {
 /// died idle costs a re-establish, not a failed job.  Thread-backend runs
 /// never pool (one address space, no shipping to save) and delegate
 /// straight to [`run_dist`].
+///
+/// The pool is **shareable across threads** (`&self` everywhere): the
+/// gateway daemon's scheduler runs concurrent jobs against one pool.
+/// Each [`run_dist_pooled`] call *checks out* its matching fleet under a
+/// short internal lock, runs the whole job with the lock released, and
+/// checks the fleet back in afterwards — so N concurrent same-key jobs
+/// simply hold N fleets at once (the pool may transiently exceed its
+/// capacity; overflow is evicted oldest-first at check-in).  All socket
+/// and process I/O — establishing, releasing, pinging, the job itself —
+/// happens outside the lock.
 pub struct SessionPool {
+    state: Mutex<PoolState>,
+}
+
+/// The lock-guarded innards of a [`SessionPool`].  Fleets held by an
+/// in-flight checkout are *not* in `entries`; every counter lives here so
+/// one lock keeps them mutually consistent.
+struct PoolState {
     entries: Vec<(SessionKey, PoolFleet)>,
     capacity: usize,
     next_session: u64,
@@ -405,68 +423,122 @@ impl SessionPool {
     /// An empty pool holding at most `capacity` warm fleets.
     pub fn with_capacity(capacity: usize) -> Self {
         Self {
-            entries: Vec::new(),
-            capacity: capacity.max(1),
-            next_session: 0,
-            init_bytes_total: 0,
-            sessions_established: 0,
-            jobs_run: 0,
-            warm_jobs: 0,
-            retried_jobs: 0,
-            last_was_warm: false,
+            state: Mutex::new(PoolState {
+                entries: Vec::new(),
+                capacity: capacity.max(1),
+                next_session: 0,
+                init_bytes_total: 0,
+                sessions_established: 0,
+                jobs_run: 0,
+                warm_jobs: 0,
+                retried_jobs: 0,
+                last_was_warm: false,
+            }),
         }
+    }
+
+    /// Lock the pool state.  A poisoned lock is recovered, not propagated:
+    /// the state is a table of fleets and counters that is never left
+    /// half-updated across an unwind point, and a long-lived daemon must
+    /// not brick its pool because one job's thread panicked.
+    fn state(&self) -> MutexGuard<'_, PoolState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
     /// Total `Init`/`InitPart` wire bytes across every session this pool
     /// ever established — the dist_ship bench asserts a 5-job warm sweep
     /// pays exactly one session's worth.
     pub fn init_bytes_total(&self) -> u64 {
-        self.init_bytes_total
+        self.state().init_bytes_total
     }
 
     /// Sessions established (cache misses).
     pub fn sessions_established(&self) -> u64 {
-        self.sessions_established
+        self.state().sessions_established
     }
 
     /// Remote jobs run through the pool (warm + cold).
     pub fn jobs_run(&self) -> u64 {
-        self.jobs_run
+        self.state().jobs_run
     }
 
     /// Jobs that reused a resident session.
     pub fn warm_jobs(&self) -> u64 {
-        self.warm_jobs
+        self.state().warm_jobs
     }
 
     /// Jobs re-run on a fresh session after a retryable fault poisoned
     /// their first attempt (non-zero only under `--on-fault retry`).
     pub fn retried_jobs(&self) -> u64 {
-        self.retried_jobs
-    }
-
-    /// Evict until a slot is free and hand out the next session id.
-    fn take_slot(&mut self) -> u64 {
-        while self.entries.len() >= self.capacity {
-            let (_, mut old) = self.entries.remove(0);
-            old.release();
-        }
-        let session = self.next_session;
-        self.next_session += 1;
-        session
+        self.state().retried_jobs
     }
 
     /// Whether the most recent pooled run reused a resident session.
+    /// Under concurrent submission this is a last-writer-wins display
+    /// value — concurrent callers that need their *own* run's warmth use
+    /// [`run_dist_pooled_tracked`].
     pub fn last_was_warm(&self) -> bool {
-        self.last_was_warm
+        self.state().last_was_warm
     }
 
     /// Release every resident fleet.  The next pooled run re-establishes
     /// from scratch — benches use this to compare cold against warm.
-    pub fn clear(&mut self) {
-        for (_, mut fleet) in self.entries.drain(..) {
+    /// Fleets checked out by in-flight jobs are untouched (they check
+    /// back in afterwards).
+    pub fn clear(&self) {
+        let drained: Vec<(SessionKey, PoolFleet)> = {
+            let mut st = self.state();
+            st.entries.drain(..).collect()
+        };
+        for (_, mut fleet) in drained {
             fleet.release();
         }
+    }
+
+    /// Remove the resident fleet matching `key`, if any, for exclusive
+    /// use by one job.  The caller must check it back in (or drop it).
+    fn check_out(&self, key: &SessionKey) -> Option<PoolFleet> {
+        let mut st = self.state();
+        st.entries
+            .iter()
+            .position(|(k, _)| k == key)
+            .map(|i| st.entries.remove(i).1)
+    }
+
+    /// Return a fleet that survived its job to the most-recently-used
+    /// slot, then release any overflow (oldest first) outside the lock.
+    fn check_in(&self, key: SessionKey, fleet: PoolFleet) {
+        let overflow: Vec<PoolFleet> = {
+            let mut st = self.state();
+            st.entries.push((key, fleet));
+            let mut out = Vec::new();
+            while st.entries.len() > st.capacity {
+                out.push(st.entries.remove(0).1);
+            }
+            out
+        };
+        for mut old in overflow {
+            old.release();
+        }
+    }
+
+    /// Evict until a slot is free (releasing outside the lock) and hand
+    /// out the next session id.
+    fn take_slot(&self) -> u64 {
+        let (session, evicted) = {
+            let mut st = self.state();
+            let mut evicted = Vec::new();
+            while st.entries.len() >= st.capacity {
+                evicted.push(st.entries.remove(0).1);
+            }
+            let session = st.next_session;
+            st.next_session += 1;
+            (session, evicted)
+        };
+        for mut old in evicted {
+            old.release();
+        }
+        session
     }
 }
 
@@ -474,6 +546,19 @@ impl Drop for SessionPool {
     fn drop(&mut self) {
         self.clear();
     }
+}
+
+/// What [`run_dist_pooled_tracked`] hands back: the outcome plus the
+/// per-run pool facts a concurrent caller cannot read from the pool's
+/// shared counters without racing other jobs.
+pub struct PooledRun {
+    /// The run's outcome, bit-identical to [`run_dist`]'s.
+    pub outcome: DistOutcome,
+    /// Whether *this* run reused a resident session.
+    pub warm: bool,
+    /// Whether this run was re-driven on a fresh session after a
+    /// retryable fault (`--on-fault retry`).
+    pub retried: bool,
 }
 
 /// [`run_dist`] against a [`SessionPool`]: a run whose session key matches
@@ -484,16 +569,29 @@ pub fn run_dist_pooled(
     oracle: &dyn Oracle,
     constraint: &dyn Constraint,
     cfg: &DistConfig,
-    pool: &mut SessionPool,
+    pool: &SessionPool,
 ) -> Result<DistOutcome, DistError> {
+    run_dist_pooled_tracked(oracle, constraint, cfg, pool).map(|run| run.outcome)
+}
+
+/// [`run_dist_pooled`] with per-run pool facts attached — the form the
+/// thread-shared job queue uses, where `pool.last_was_warm()` would be a
+/// race against concurrently-finishing jobs.
+pub fn run_dist_pooled_tracked(
+    oracle: &dyn Oracle,
+    constraint: &dyn Constraint,
+    cfg: &DistConfig,
+    pool: &SessionPool,
+) -> Result<PooledRun, DistError> {
     let resolved = cfg.backend.resolve()?;
     if resolved == ResolvedBackend::Thread
         || (cfg.backend == BackendSpec::Auto && cfg.problem.is_none())
     {
         // No session to keep warm (or run_dist's env-advisory fallback
         // applies); the thread backend is rebuilt per run by design.
-        pool.last_was_warm = false;
-        return run_dist(oracle, constraint, cfg);
+        pool.state().last_was_warm = false;
+        return run_dist(oracle, constraint, cfg)
+            .map(|outcome| PooledRun { outcome, warm: false, retried: false });
     }
     let backend_name = match resolved {
         ResolvedBackend::Process => "process",
@@ -535,11 +633,11 @@ pub fn run_dist_pooled(
     let parts = make_parts(cfg, oracle.n());
     let fault = cfg.on_fault.resolve()?;
 
-    let mut resident = pool
-        .entries
-        .iter()
-        .position(|(k, _)| *k == key)
-        .map(|i| pool.entries.remove(i).1);
+    // Checkout: the matching fleet (if any) leaves the pool for this
+    // job's exclusive use, under a lock held only for the table scan.
+    // Everything below — ping, establish, the job itself — runs with the
+    // pool unlocked, so concurrent jobs only contend for microseconds.
+    let mut resident = pool.check_out(&key);
     if fault != FaultPolicy::Fail {
         // Ping-before-reuse: under a recovering policy a stale warm fleet
         // (daemon restarted, worker died idle between jobs) is detected
@@ -556,53 +654,56 @@ pub fn run_dist_pooled(
     }
     let warm = resident.is_some();
 
-    let establish =
-        |pool: &mut SessionPool, parts: &[Vec<ElemId>]| -> Result<PoolFleet, DistError> {
-            let session = pool.take_slot();
-            let plan = ship_plan(oracle, cfg, &params, problem, parts)?;
-            let fleet = match resolved {
-                ResolvedBackend::Process => PoolFleet::Process(ProcessBackend::spawn(
-                    cfg.tree.machines(),
-                    key.threads,
-                    plan,
-                    oracle.n(),
-                    cfg.worker_bin.as_deref(),
-                    session,
-                    fault,
-                )?),
-                ResolvedBackend::Tcp => PoolFleet::Tcp(TcpBackend::connect(
-                    key.hosts.as_deref().expect("tcp key carries hosts"),
-                    cfg.tree.machines(),
-                    key.threads,
-                    plan,
-                    oracle.n(),
-                    session,
-                    fault,
-                )?),
-                ResolvedBackend::Thread => unreachable!(),
-            };
-            pool.init_bytes_total += fleet.init_bytes();
-            pool.sessions_established += 1;
-            Ok(fleet)
+    let establish = |parts: &[Vec<ElemId>]| -> Result<PoolFleet, DistError> {
+        let session = pool.take_slot();
+        let plan = ship_plan(oracle, cfg, &params, problem, parts)?;
+        let fleet = match resolved {
+            ResolvedBackend::Process => PoolFleet::Process(ProcessBackend::spawn(
+                cfg.tree.machines(),
+                key.threads,
+                plan,
+                oracle.n(),
+                cfg.worker_bin.as_deref(),
+                session,
+                fault,
+            )?),
+            ResolvedBackend::Tcp => PoolFleet::Tcp(TcpBackend::connect(
+                key.hosts.as_deref().expect("tcp key carries hosts"),
+                cfg.tree.machines(),
+                key.threads,
+                plan,
+                oracle.n(),
+                session,
+                fault,
+            )?),
+            ResolvedBackend::Thread => unreachable!(),
         };
+        let mut st = pool.state();
+        st.init_bytes_total += fleet.init_bytes();
+        st.sessions_established += 1;
+        Ok(fleet)
+    };
 
     let mut fleet = match resident {
         Some(f) => f,
-        None => establish(pool, &parts)?,
+        None => establish(&parts)?,
     };
     let out = fleet
         .begin_job(&params, problem)
         .and_then(|()| run_dist_on(fleet.as_backend(), cfg, parts));
-    pool.jobs_run += 1;
-    pool.last_was_warm = warm;
+    {
+        let mut st = pool.state();
+        st.jobs_run += 1;
+        st.last_was_warm = warm;
+    }
     match out {
         Ok(outcome) => {
             if warm {
-                pool.warm_jobs += 1;
+                pool.state().warm_jobs += 1;
             }
             // The fleet survived the job — most-recently-used slot.
-            pool.entries.push((key, fleet));
-            Ok(outcome)
+            pool.check_in(key, fleet);
+            Ok(PooledRun { outcome, warm, retried: false })
         }
         Err(e) if fault == FaultPolicy::Retry && e.is_retryable() => {
             // The fleet's own supervisor already retried worker-level
@@ -613,18 +714,21 @@ pub fn run_dist_pooled(
             // the replayed job is deterministic, so a success here is
             // bit-identical to an unfaulted run.
             drop(fleet);
-            pool.retried_jobs += 1;
+            pool.state().retried_jobs += 1;
             let reparts = make_parts(cfg, oracle.n());
-            let mut fresh = establish(pool, &reparts)?;
+            let mut fresh = establish(&reparts)?;
             let retry = fresh
                 .begin_job(&params, problem)
                 .and_then(|()| run_dist_on(fresh.as_backend(), cfg, reparts));
-            pool.jobs_run += 1;
-            pool.last_was_warm = false;
+            {
+                let mut st = pool.state();
+                st.jobs_run += 1;
+                st.last_was_warm = false;
+            }
             match retry {
                 Ok(outcome) => {
-                    pool.entries.push((key, fresh));
-                    Ok(outcome)
+                    pool.check_in(key, fresh);
+                    Ok(PooledRun { outcome, warm: false, retried: true })
                 }
                 Err(e2) => {
                     drop(fresh);
@@ -968,8 +1072,8 @@ mod tests {
         let o = cover_oracle(300, 3);
         let c = Cardinality::new(8);
         let cfg = DistConfig::greedyml(AccumulationTree::new(4, 2), 11);
-        let mut pool = SessionPool::new();
-        let pooled = run_dist_pooled(&o, &c, &cfg, &mut pool).unwrap();
+        let pool = SessionPool::new();
+        let pooled = run_dist_pooled(&o, &c, &cfg, &pool).unwrap();
         let direct = run_dist(&o, &c, &cfg).unwrap();
         assert_eq!(pooled.solution, direct.solution);
         assert_eq!(pooled.value.to_bits(), direct.value.to_bits());
@@ -980,6 +1084,30 @@ mod tests {
     }
 
     #[test]
+    fn session_pool_is_shareable_across_threads() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<SessionPool>();
+        // Concurrent pooled runs through one shared pool (thread backend:
+        // the pool is bypassed, but the checkout/counter paths still run
+        // under contention) stay bit-identical to a direct run.
+        let o = cover_oracle(200, 7);
+        let c = Cardinality::new(6);
+        let cfg = DistConfig::greedyml(AccumulationTree::new(4, 2), 5);
+        let pool = SessionPool::new();
+        let direct = run_dist(&o, &c, &cfg).unwrap();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..2)
+                .map(|_| s.spawn(|| run_dist_pooled(&o, &c, &cfg, &pool).unwrap()))
+                .collect();
+            for h in handles {
+                let out = h.join().unwrap();
+                assert_eq!(out.solution, direct.solution);
+                assert_eq!(out.value.to_bits(), direct.value.to_bits());
+            }
+        });
+    }
+
+    #[test]
     fn pooled_run_surfaces_the_same_config_errors_as_run_dist() {
         let o = cover_oracle(100, 2);
         let c = Cardinality::new(4);
@@ -987,8 +1115,8 @@ mod tests {
             backend: crate::dist::BackendSpec::Process,
             ..DistConfig::greedyml(AccumulationTree::new(2, 2), 1)
         };
-        let mut pool = SessionPool::new();
-        match run_dist_pooled(&o, &c, &cfg, &mut pool).unwrap_err() {
+        let pool = SessionPool::new();
+        match run_dist_pooled(&o, &c, &cfg, &pool).unwrap_err() {
             DistError::Backend { message } => {
                 assert!(message.contains("problem"), "{message}")
             }

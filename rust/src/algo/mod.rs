@@ -25,7 +25,10 @@ pub mod randgreedi;
 pub mod seq;
 
 pub use greedi::{greedi_config, run_greedi};
-pub use greedyml::{dataset_fingerprint, run_dist, run_dist_pooled, run_greedyml, SessionPool};
+pub use greedyml::{
+    dataset_fingerprint, run_dist, run_dist_pooled, run_dist_pooled_tracked, run_greedyml,
+    PooledRun, SessionPool,
+};
 pub use randgreedi::run_randgreedi;
 pub use seq::run_sequential;
 

@@ -1,0 +1,1112 @@
+//! The gateway daemon: a network front door for the job service.
+//!
+//! The paper's deployment story is a long-lived service answering a
+//! stream of maximization queries against one resident corpus.  PR 6/7
+//! built everything *behind* that door — resident-shard sessions
+//! ([`crate::dist`]), the warm [`SessionPool`](crate::algo::SessionPool)
+//! and the [`JobQueue`](super::JobQueue) with its solution cache and
+//! admission control.  This module is the door itself:
+//!
+//! * `greedyml gateway --bind <addr>` runs [`run_gateway`] — an accept
+//!   loop speaking a small length-prefixed job protocol (the same
+//!   4-byte-LE + JSON framing as the worker wire,
+//!   [`crate::dist::wire`]), scheduling admitted jobs onto a bounded
+//!   worker-thread pool that drives **one shared** [`JobQueue`]: jobs
+//!   from different clients run concurrently on warm fleets, arbitrate
+//!   one admission budget, and share one solution cache.
+//! * `greedyml submit --gateway <addr>` is the matching client
+//!   ([`GatewayClient`]): it streams job results back as they complete,
+//!   not in submission order.
+//!
+//! The protocol is specified prose-first in `docs/gateway-protocol.md`;
+//! the `gateway_doc_stays_in_lockstep_with_the_codec` test fails if a
+//! message variant exists in one place but not the other.
+//!
+//! Message flow (one connection = one client; results interleave):
+//!
+//! ```text
+//! client → gateway              gateway → client
+//! ----------------              ----------------
+//! Hello{version}                Welcome{version} | Error{message}
+//! ── per job, pipelined ───────────────────────────────────────────────
+//! Submit{job}                   Accepted{id} | Rejected{id,reason}
+//!                               … then exactly one terminal frame per
+//!                               accepted id, in completion order:
+//!                               Result{id,solution,value,warm,cached,
+//!                                      faults}
+//!                               | Rejected{id,reason}   (admission)
+//!                               | Failed{id,error}
+//! Stats                         Stats{counters}
+//! ── end ──────────────────────────────────────────────────────────────
+//! EOF                           (connection closes; queued jobs finish)
+//! ```
+//!
+//! A job is `Accepted` the moment its spec parses — *before* admission
+//! control, which runs on a worker thread and may still answer
+//! `Rejected` (over budget) as the job's terminal frame.  A worker-fleet
+//! fault inside one job is that job's problem alone: the pool evicts the
+//! poisoned fleet, the job retries or fails per its `on_fault` policy,
+//! and every other in-flight job keeps its own fleet and its own answer.
+
+use super::jobs::Submission;
+use super::{BuiltProblem, JobQueue};
+use crate::algo::{dataset_fingerprint, DistConfig};
+use crate::dist::wire::{read_frame, write_frame};
+use crate::dist::{BackendSpec, FaultSpec, ShipSpec};
+use crate::metrics::{GatewayCounters, GatewaySnapshot};
+use crate::tree::AccumulationTree;
+use crate::util::config::Config;
+use crate::ElemId;
+use serde_json::{json, Value};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+/// Gateway-protocol version, checked by the `Hello`/`Welcome` handshake
+/// as the very first exchange on every connection.  Bump whenever a
+/// frame is added, removed, or changes field semantics: a gateway from a
+/// different build must refuse a client it cannot faithfully serve
+/// instead of desyncing mid-stream.  Independent of the worker wire's
+/// [`crate::dist::wire::PROTOCOL_VERSION`] — the two protocols evolve
+/// separately.
+pub const GATEWAY_PROTOCOL_VERSION: u32 = 1;
+
+/// A client must complete the handshake within this window.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Idle cutoff after the handshake: a client holding a connection open
+/// between batches is fine; a half-dead peer is reaped.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(6 * 3600);
+
+/// Built problems kept resident, keyed by dataset fingerprint — clients
+/// querying the same corpus share one oracle build.
+const PROBLEM_CACHE: usize = 4;
+
+/// Lock with poison recovery: one panicking connection or worker thread
+/// must not brick the daemon's shared state (every guarded structure is
+/// valid after any partial update).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn send(w: &mut impl Write, v: &Value) -> crate::Result<()> {
+    write_frame(w, v).map(|_| ()).map_err(|e| anyhow::anyhow!(e))
+}
+
+/// One job as it crosses the wire: the problem spec (flat config text,
+/// the same `key = value` shape workers rebuild from) plus every
+/// `[jobs]`-surface run parameter.  This is deliberately the
+/// [`JobBatch`](super::JobBatch) shape — engine knobs outside it
+/// (greedy kind, partition scheme, §6.4 variants…) take their GreedyML
+/// defaults, exactly as `greedyml submit` jobs do.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Client-chosen id, echoed on every frame about this job.
+    pub id: u64,
+    /// Flat problem spec (`dataset.*` / `problem.*` / `objective.*`,
+    /// including this job's `problem.k`).
+    pub spec: String,
+    /// Random-tape seed.
+    pub seed: u64,
+    /// Fleet width.
+    pub machines: u32,
+    /// Accumulation-tree branching.
+    pub branching: u32,
+    /// Execution backend (`auto` | `thread` | `process` | `tcp`).
+    pub backend: String,
+    /// Ship mode (`auto` | `spec` | `partition`).
+    pub ship: String,
+    /// Worker daemons for the tcp backend (`None` = the gateway's
+    /// `GREEDYML_HOSTS` environment).
+    pub hosts: Option<Vec<String>>,
+    /// Executor width (0 = auto).
+    pub threads: u64,
+    /// Machine-local evaluation views.
+    pub local_view: bool,
+    /// Worker-loss policy (`auto` | `fail` | `retry` | `degrade`).
+    pub on_fault: String,
+}
+
+fn backend_str(b: BackendSpec) -> &'static str {
+    match b {
+        BackendSpec::Auto => "auto",
+        BackendSpec::Thread => "thread",
+        BackendSpec::Process => "process",
+        BackendSpec::Tcp => "tcp",
+    }
+}
+
+fn ship_str(s: ShipSpec) -> &'static str {
+    match s {
+        ShipSpec::Auto => "auto",
+        ShipSpec::Spec => "spec",
+        ShipSpec::Partition => "partition",
+    }
+}
+
+fn fault_str(f: FaultSpec) -> &'static str {
+    match f {
+        FaultSpec::Auto => "auto",
+        FaultSpec::Fail => "fail",
+        FaultSpec::Retry => "retry",
+        FaultSpec::Degrade => "degrade",
+    }
+}
+
+impl JobSpec {
+    /// Build from an engine config (the `submit --gateway` client path:
+    /// [`JobBatch::dist_config`](super::JobBatch::dist_config) output).
+    /// Fails if the config has no problem spec attached.
+    pub fn from_dist(id: u64, cfg: &DistConfig) -> crate::Result<Self> {
+        let spec = match &cfg.problem {
+            Some(s) => s.clone(),
+            None => anyhow::bail!("job has no problem spec (DistConfig::problem)"),
+        };
+        Ok(Self {
+            id,
+            spec,
+            seed: cfg.seed,
+            machines: cfg.tree.machines(),
+            branching: cfg.tree.branching(),
+            backend: backend_str(cfg.backend).to_string(),
+            ship: ship_str(cfg.ship).to_string(),
+            hosts: cfg.hosts.clone(),
+            threads: cfg.threads.unwrap_or(0) as u64,
+            local_view: cfg.local_view,
+            on_fault: fault_str(cfg.on_fault).to_string(),
+        })
+    }
+
+    /// The engine config this job asks for.  Validates every parsed
+    /// field — a malformed spec is a polite `Rejected`, never a daemon
+    /// panic.
+    pub fn dist_config(&self) -> crate::Result<DistConfig> {
+        let backend = BackendSpec::parse(&self.backend)
+            .map_err(|e| anyhow::anyhow!("job {}: backend: {e}", self.id))?;
+        let ship = ShipSpec::parse(&self.ship)
+            .map_err(|e| anyhow::anyhow!("job {}: ship: {e}", self.id))?;
+        let on_fault = FaultSpec::parse(&self.on_fault)
+            .map_err(|e| anyhow::anyhow!("job {}: on_fault: {e}", self.id))?;
+        anyhow::ensure!(self.machines >= 1, "job {}: need at least one machine", self.id);
+        anyhow::ensure!(
+            self.branching >= 2 || self.machines == 1,
+            "job {}: branching factor must be ≥ 2",
+            self.id
+        );
+        Ok(DistConfig {
+            backend,
+            ship,
+            hosts: self.hosts.clone(),
+            problem: Some(self.spec.clone()),
+            threads: match self.threads {
+                0 => None,
+                t => Some(t as usize),
+            },
+            local_view: self.local_view,
+            on_fault,
+            ..DistConfig::greedyml(AccumulationTree::new(self.machines, self.branching), self.seed)
+        })
+    }
+
+    fn to_value(&self) -> Value {
+        json!({
+            "id": self.id,
+            "spec": self.spec,
+            "seed": self.seed,
+            "machines": self.machines,
+            "branching": self.branching,
+            "backend": self.backend,
+            "ship": self.ship,
+            "hosts": self.hosts,
+            "threads": self.threads,
+            "local_view": self.local_view,
+            "on_fault": self.on_fault,
+        })
+    }
+
+    fn from_value(v: &Value) -> crate::Result<Self> {
+        Ok(Self {
+            id: u64_field(v, "id")?,
+            spec: str_field(v, "spec")?.to_string(),
+            seed: u64_field(v, "seed")?,
+            machines: u64_field(v, "machines")? as u32,
+            branching: u64_field(v, "branching")? as u32,
+            backend: str_field(v, "backend")?.to_string(),
+            ship: str_field(v, "ship")?.to_string(),
+            hosts: hosts_field(v)?,
+            threads: u64_field(v, "threads")?,
+            local_view: bool_field(v, "local_view")?,
+            on_fault: str_field(v, "on_fault")?.to_string(),
+        })
+    }
+}
+
+/// Client → gateway requests.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ToGateway {
+    /// Connection handshake: the client announces its
+    /// [`GATEWAY_PROTOCOL_VERSION`] as the very first frame.  The
+    /// gateway replies [`FromGateway::Welcome`] on a match and
+    /// [`FromGateway::Error`] (then closes) on a mismatch.
+    Hello {
+        /// The client's [`GATEWAY_PROTOCOL_VERSION`].
+        version: u32,
+    },
+    /// Submit one job.  Answered immediately with
+    /// [`FromGateway::Accepted`] (spec parsed; the job is queued) or
+    /// [`FromGateway::Rejected`] (malformed); every accepted job later
+    /// gets exactly one terminal frame.
+    Submit(JobSpec),
+    /// Ask for the daemon's live counters ([`FromGateway::Stats`]).
+    Stats,
+}
+
+/// Gateway → client replies.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FromGateway {
+    /// Handshake reply: the gateway's [`GATEWAY_PROTOCOL_VERSION`].
+    Welcome {
+        /// The gateway's [`GATEWAY_PROTOCOL_VERSION`].
+        version: u32,
+    },
+    /// The job's spec parsed and it is queued for scheduling.
+    Accepted {
+        /// The client-chosen job id.
+        id: u64,
+    },
+    /// The job will not run: malformed spec (immediate) or refused by
+    /// admission control (terminal, after `Accepted`).
+    Rejected {
+        /// The client-chosen job id.
+        id: u64,
+        /// Why the job was refused.
+        reason: String,
+    },
+    /// Terminal: the job completed.  `warm`: ran on a reused resident
+    /// fleet; `cached`: answered from the solution cache (no worker was
+    /// touched); `faults`: human-readable fault accounting, empty for a
+    /// clean run — non-empty with dropped machines marks a **degraded**
+    /// answer (see `docs/failure-model.md`).
+    Result {
+        /// The client-chosen job id.
+        id: u64,
+        /// The solution element ids.
+        solution: Vec<ElemId>,
+        /// f(solution) — bit-exact across the wire (ryu).
+        value: f64,
+        /// Whether a warm fleet served the run.
+        warm: bool,
+        /// Whether the solution cache answered without running.
+        cached: bool,
+        /// Fault summary (empty = fault-free).
+        faults: String,
+    },
+    /// Terminal: the job errored in flight (after admission, after the
+    /// pool's own retry policy gave up).  The daemon survives; other
+    /// jobs are untouched.
+    Failed {
+        /// The client-chosen job id.
+        id: u64,
+        /// The error chain.
+        error: String,
+    },
+    /// The daemon's live counters.
+    Stats(GatewaySnapshot),
+    /// Connection-level failure (handshake refusal, unreadable frame).
+    /// The gateway closes the connection after sending it.
+    Error {
+        /// What went wrong.
+        message: String,
+    },
+}
+
+impl ToGateway {
+    /// Encode as a JSON frame body.
+    pub fn to_value(&self) -> Value {
+        match self {
+            Self::Hello { version } => json!({ "t": "hello", "version": version }),
+            Self::Submit(job) => json!({ "t": "submit", "job": job.to_value() }),
+            Self::Stats => json!({ "t": "stats" }),
+        }
+    }
+
+    /// Decode from a JSON frame body.
+    pub fn from_value(v: &Value) -> crate::Result<Self> {
+        match str_field(v, "t")? {
+            "hello" => Ok(Self::Hello { version: u64_field(v, "version")? as u32 }),
+            "submit" => Ok(Self::Submit(JobSpec::from_value(field(v, "job")?)?)),
+            "stats" => Ok(Self::Stats),
+            other => anyhow::bail!("unknown gateway request '{other}'"),
+        }
+    }
+}
+
+impl FromGateway {
+    /// Encode as a JSON frame body.
+    pub fn to_value(&self) -> Value {
+        match self {
+            Self::Welcome { version } => json!({ "t": "welcome", "version": version }),
+            Self::Accepted { id } => json!({ "t": "accepted", "id": id }),
+            Self::Rejected { id, reason } => {
+                json!({ "t": "rejected", "id": id, "reason": reason })
+            }
+            Self::Result { id, solution, value, warm, cached, faults } => json!({
+                "t": "result",
+                "id": id,
+                "solution": solution,
+                "value": value,
+                "warm": warm,
+                "cached": cached,
+                "faults": faults,
+            }),
+            Self::Failed { id, error } => json!({ "t": "failed", "id": id, "error": error }),
+            Self::Stats(s) => json!({
+                "t": "stats",
+                "queued": s.queued,
+                "running": s.running,
+                "completed": s.completed,
+                "warm": s.warm,
+                "cached": s.cached,
+                "rejected": s.rejected,
+                "failed": s.failed,
+                "faulted": s.faulted,
+                "submitted": s.submitted,
+                "sessions": s.sessions,
+                "init_bytes": s.init_bytes,
+            }),
+            Self::Error { message } => json!({ "t": "error", "message": message }),
+        }
+    }
+
+    /// Decode from a JSON frame body.
+    pub fn from_value(v: &Value) -> crate::Result<Self> {
+        match str_field(v, "t")? {
+            "welcome" => Ok(Self::Welcome { version: u64_field(v, "version")? as u32 }),
+            "accepted" => Ok(Self::Accepted { id: u64_field(v, "id")? }),
+            "rejected" => Ok(Self::Rejected {
+                id: u64_field(v, "id")?,
+                reason: str_field(v, "reason")?.to_string(),
+            }),
+            "result" => Ok(Self::Result {
+                id: u64_field(v, "id")?,
+                solution: elems_field(v, "solution")?,
+                value: f64_field(v, "value")?,
+                warm: bool_field(v, "warm")?,
+                cached: bool_field(v, "cached")?,
+                faults: str_field(v, "faults")?.to_string(),
+            }),
+            "failed" => Ok(Self::Failed {
+                id: u64_field(v, "id")?,
+                error: str_field(v, "error")?.to_string(),
+            }),
+            "stats" => Ok(Self::Stats(GatewaySnapshot {
+                queued: u64_field(v, "queued")?,
+                running: u64_field(v, "running")?,
+                completed: u64_field(v, "completed")?,
+                warm: u64_field(v, "warm")?,
+                cached: u64_field(v, "cached")?,
+                rejected: u64_field(v, "rejected")?,
+                failed: u64_field(v, "failed")?,
+                faulted: u64_field(v, "faulted")?,
+                submitted: u64_field(v, "submitted")?,
+                sessions: u64_field(v, "sessions")?,
+                init_bytes: u64_field(v, "init_bytes")?,
+            })),
+            "error" => Ok(Self::Error { message: str_field(v, "message")?.to_string() }),
+            other => anyhow::bail!("unknown gateway reply '{other}'"),
+        }
+    }
+}
+
+// ---- field helpers ----------------------------------------------------
+
+fn field<'a>(v: &'a Value, key: &str) -> crate::Result<&'a Value> {
+    v.get(key)
+        .ok_or_else(|| anyhow::anyhow!("frame missing field '{key}'"))
+}
+
+fn str_field<'a>(v: &'a Value, key: &str) -> crate::Result<&'a str> {
+    field(v, key)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a string"))
+}
+
+fn u64_field(v: &Value, key: &str) -> crate::Result<u64> {
+    field(v, key)?
+        .as_u64()
+        .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a u64"))
+}
+
+fn f64_field(v: &Value, key: &str) -> crate::Result<f64> {
+    field(v, key)?
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a number"))
+}
+
+fn bool_field(v: &Value, key: &str) -> crate::Result<bool> {
+    field(v, key)?
+        .as_bool()
+        .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a bool"))
+}
+
+fn elems_field(v: &Value, key: &str) -> crate::Result<Vec<ElemId>> {
+    field(v, key)?
+        .as_array()
+        .ok_or_else(|| anyhow::anyhow!("field '{key}' is not an array"))?
+        .iter()
+        .map(|e| {
+            e.as_u64()
+                .map(|x| x as ElemId)
+                .ok_or_else(|| anyhow::anyhow!("field '{key}': non-integer element"))
+        })
+        .collect()
+}
+
+/// `hosts` is the one nullable field: absent or `null` means "defer to
+/// the gateway's environment".
+fn hosts_field(v: &Value) -> crate::Result<Option<Vec<String>>> {
+    let arr = match v.get("hosts") {
+        None | Some(Value::Null) => return Ok(None),
+        Some(h) => match h.as_array() {
+            Some(arr) => arr,
+            None => anyhow::bail!("field 'hosts' is not an array"),
+        },
+    };
+    let mut hosts = Vec::with_capacity(arr.len());
+    for e in arr {
+        match e.as_str() {
+            Some(s) => hosts.push(s.to_string()),
+            None => anyhow::bail!("field 'hosts': non-string entry"),
+        }
+    }
+    Ok(Some(hosts))
+}
+
+// ---- client -----------------------------------------------------------
+
+/// A connected gateway client: submit jobs, stream replies.  One
+/// connection pipelines any number of jobs; [`GatewayClient::next`]
+/// yields frames in the order the gateway wrote them (results arrive in
+/// completion order, not submission order — match on the echoed id).
+pub struct GatewayClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl GatewayClient {
+    /// Connect and complete the version handshake.
+    pub fn connect(addr: &str) -> crate::Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| anyhow::anyhow!("cannot connect to gateway {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        let reader = stream.try_clone()?;
+        let mut client = Self { reader: BufReader::new(reader), writer: BufWriter::new(stream) };
+        client.send(&ToGateway::Hello { version: GATEWAY_PROTOCOL_VERSION })?;
+        match client.next()? {
+            FromGateway::Welcome { .. } => Ok(client),
+            FromGateway::Error { message } => {
+                anyhow::bail!("gateway refused the handshake: {message}")
+            }
+            other => anyhow::bail!("expected welcome from the gateway, got {other:?}"),
+        }
+    }
+
+    /// Submit one job (replies arrive via [`GatewayClient::next`]).
+    pub fn submit(&mut self, job: &JobSpec) -> crate::Result<()> {
+        self.send(&ToGateway::Submit(job.clone()))
+    }
+
+    /// Ask for the daemon's counters (the reply arrives via
+    /// [`GatewayClient::next`], after any frames already in flight).
+    pub fn request_stats(&mut self) -> crate::Result<()> {
+        self.send(&ToGateway::Stats)
+    }
+
+    /// The next gateway frame; an error if the gateway hung up.
+    pub fn next(&mut self) -> crate::Result<FromGateway> {
+        match read_frame(&mut self.reader).map_err(|e| anyhow::anyhow!(e))? {
+            Some(v) => FromGateway::from_value(&v),
+            None => anyhow::bail!("gateway closed the connection"),
+        }
+    }
+
+    fn send(&mut self, msg: &ToGateway) -> crate::Result<()> {
+        send(&mut self.writer, &msg.to_value())
+    }
+}
+
+// ---- daemon -----------------------------------------------------------
+
+/// `greedyml gateway` settings.
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    /// Listen address (`--bind`; `127.0.0.1:0` picks a free port and
+    /// prints it).
+    pub bind: String,
+    /// Worker threads draining the job queue (`--workers`): the maximum
+    /// number of jobs in flight at once.
+    pub workers: usize,
+    /// Per-machine admission budget in bytes (`--mem-budget`; `None` =
+    /// admit everything).  Concurrent jobs arbitrate this one budget.
+    pub mem_budget: Option<u64>,
+    /// Solution-cache capacity in entries (`--cache-entries`).
+    pub cache_entries: usize,
+}
+
+/// Everything the daemon's threads share.
+struct Shared {
+    queue: JobQueue,
+    counters: GatewayCounters,
+    /// Built problems by dataset fingerprint (LRU, capacity
+    /// [`PROBLEM_CACHE`]): clients querying the same corpus share one
+    /// resident oracle build.
+    problems: Mutex<Vec<(String, Arc<BuiltProblem>)>>,
+}
+
+/// An admitted job on its way to a worker thread.
+struct ScheduledJob {
+    job: JobSpec,
+    dist: DistConfig,
+    writer: Arc<Mutex<BufWriter<TcpStream>>>,
+}
+
+/// Run the gateway daemon: bind, print exactly one
+/// `greedyml gateway: listening on <addr>` banner on stdout, then serve
+/// forever.  Connection- and job-level failures go to stderr; nothing a
+/// client sends brings the daemon down.
+pub fn run_gateway(gc: &GatewayConfig) -> crate::Result<()> {
+    let listener = TcpListener::bind(&gc.bind)
+        .map_err(|e| anyhow::anyhow!("cannot bind {}: {e}", gc.bind))?;
+    let addr = listener.local_addr()?;
+    println!("greedyml gateway: listening on {addr}");
+    serve_loop(listener, gc.clone())
+}
+
+/// The accept loop over an already-bound listener (separated from
+/// [`run_gateway`] so tests can bind an ephemeral port themselves).
+fn serve_loop(listener: TcpListener, gc: GatewayConfig) -> crate::Result<()> {
+    let shared = Arc::new(Shared {
+        queue: JobQueue::with_cache_entries(gc.mem_budget, gc.cache_entries),
+        counters: GatewayCounters::default(),
+        problems: Mutex::new(Vec::new()),
+    });
+    let (tx, rx) = mpsc::channel::<ScheduledJob>();
+    let rx = Arc::new(Mutex::new(rx));
+    for _ in 0..gc.workers.max(1) {
+        let shared = Arc::clone(&shared);
+        let rx = Arc::clone(&rx);
+        std::thread::spawn(move || worker_loop(&shared, &rx));
+    }
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let shared = Arc::clone(&shared);
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    if let Err(e) = serve_client(stream, &shared, &tx) {
+                        eprintln!("greedyml gateway: client {peer}: {e:#}");
+                    }
+                });
+            }
+            Err(e) => {
+                // A persistent accept failure (e.g. EMFILE) must degrade
+                // to slow retries, not a hot stderr-spamming spin.
+                eprintln!("greedyml gateway: accept: {e}");
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Serve one client connection: handshake, then requests until EOF.
+/// The connection's writer is shared (behind a mutex) with the worker
+/// threads finishing this client's jobs, so `Accepted`/`Stats` replies
+/// interleave with `Result` frames — each frame is written atomically.
+fn serve_client(
+    stream: TcpStream,
+    shared: &Shared,
+    tx: &Sender<ScheduledJob>,
+) -> crate::Result<()> {
+    let _ = stream.set_nodelay(true);
+    // Read timeout only until the handshake completes (SO_RCVTIMEO is a
+    // property of the socket, shared with the cloned reader below).
+    let _ = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+    let reader = stream.try_clone()?;
+    let mut input = BufReader::new(reader);
+    let writer = Arc::new(Mutex::new(BufWriter::new(stream)));
+
+    let first = read_frame(&mut input)
+        .map_err(|e| anyhow::anyhow!(e))?
+        .ok_or_else(|| anyhow::anyhow!("EOF before hello"))?;
+    match ToGateway::from_value(&first)? {
+        ToGateway::Hello { version } if version == GATEWAY_PROTOCOL_VERSION => {
+            let welcome = FromGateway::Welcome { version: GATEWAY_PROTOCOL_VERSION };
+            send(&mut *lock(&writer), &welcome.to_value())?;
+            let _ = input.get_ref().set_read_timeout(Some(IDLE_TIMEOUT));
+        }
+        ToGateway::Hello { version } => {
+            let message = format!(
+                "client speaks gateway-protocol v{version}, this daemon speaks \
+                 v{GATEWAY_PROTOCOL_VERSION} — deploy matching greedyml builds"
+            );
+            let refusal = FromGateway::Error { message: message.clone() };
+            let _ = send(&mut *lock(&writer), &refusal.to_value());
+            anyhow::bail!("{message}");
+        }
+        other => {
+            let message = "expected hello as the first frame".to_string();
+            let _ = send(&mut *lock(&writer), &FromGateway::Error { message }.to_value());
+            anyhow::bail!("expected hello as the first frame, got {other:?}");
+        }
+    }
+
+    while let Some(frame) = read_frame(&mut input).map_err(|e| anyhow::anyhow!(e))? {
+        match ToGateway::from_value(&frame)? {
+            ToGateway::Submit(job) => {
+                let id = job.id;
+                match job.dist_config() {
+                    // Malformed spec: immediate terminal rejection,
+                    // nothing is queued.
+                    Err(e) => {
+                        let reply = FromGateway::Rejected { id, reason: format!("{e:#}") };
+                        send(&mut *lock(&writer), &reply.to_value())?;
+                    }
+                    Ok(dist) => {
+                        // Accepted is on the wire *before* the job can
+                        // possibly produce a terminal frame.
+                        send(&mut *lock(&writer), &FromGateway::Accepted { id }.to_value())?;
+                        shared.counters.queued.fetch_add(1, Relaxed);
+                        let scheduled = ScheduledJob { job, dist, writer: Arc::clone(&writer) };
+                        if tx.send(scheduled).is_err() {
+                            shared.counters.queued.fetch_sub(1, Relaxed);
+                            shared.counters.failed.fetch_add(1, Relaxed);
+                            let error = "gateway worker pool is gone".to_string();
+                            let reply = FromGateway::Failed { id, error };
+                            send(&mut *lock(&writer), &reply.to_value())?;
+                        }
+                    }
+                }
+            }
+            ToGateway::Stats => {
+                let mut snap = shared.counters.snapshot();
+                snap.submitted = shared.queue.submitted();
+                snap.sessions = shared.queue.pool().sessions_established();
+                snap.init_bytes = shared.queue.pool().init_bytes_total();
+                send(&mut *lock(&writer), &FromGateway::Stats(snap).to_value())?;
+            }
+            ToGateway::Hello { .. } => {
+                let message = "unexpected hello after the handshake".to_string();
+                let _ = send(&mut *lock(&writer), &FromGateway::Error { message }.to_value());
+                anyhow::bail!("unexpected hello after the handshake");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One worker thread: pull admitted jobs, run them through the shared
+/// queue, write the terminal frame back to the submitting connection.
+/// Job failures are frames, never daemon exits.
+fn worker_loop(shared: &Shared, rx: &Mutex<Receiver<ScheduledJob>>) {
+    loop {
+        // Hold the receiver lock only while *waiting* — jobs run with
+        // every worker free to pick up the next one.
+        let next = lock(rx).recv();
+        let Ok(scheduled) = next else { return };
+        shared.counters.queued.fetch_sub(1, Relaxed);
+        shared.counters.running.fetch_add(1, Relaxed);
+        let reply = run_one(shared, &scheduled);
+        shared.counters.running.fetch_sub(1, Relaxed);
+        match &reply {
+            FromGateway::Result { warm, cached, faults, .. } => {
+                shared.counters.completed.fetch_add(1, Relaxed);
+                if *warm {
+                    shared.counters.warm.fetch_add(1, Relaxed);
+                }
+                if *cached {
+                    shared.counters.cached.fetch_add(1, Relaxed);
+                }
+                if !faults.is_empty() {
+                    shared.counters.faulted.fetch_add(1, Relaxed);
+                }
+            }
+            FromGateway::Rejected { .. } => {
+                shared.counters.rejected.fetch_add(1, Relaxed);
+            }
+            _ => {
+                shared.counters.failed.fetch_add(1, Relaxed);
+            }
+        }
+        if let Err(e) = send(&mut *lock(&scheduled.writer), &reply.to_value()) {
+            // The client hung up before its answer arrived; the job's
+            // side effects (cache entry, warm fleet) are still useful.
+            eprintln!("greedyml gateway: job {}: undeliverable result: {e:#}", scheduled.job.id);
+        }
+    }
+}
+
+/// Run one admitted job to its terminal frame.
+fn run_one(shared: &Shared, scheduled: &ScheduledJob) -> FromGateway {
+    let id = scheduled.job.id;
+    let outcome = problem_for(shared, &scheduled.job.spec)
+        .and_then(|problem| shared.queue.submit(&problem, &scheduled.dist));
+    match outcome {
+        Ok(Submission::Ran { solution, value, warm, faults }) => {
+            FromGateway::Result { id, solution, value, warm, cached: false, faults }
+        }
+        Ok(Submission::Cached { solution, value }) => FromGateway::Result {
+            id,
+            solution,
+            value,
+            warm: false,
+            cached: true,
+            faults: String::new(),
+        },
+        Ok(Submission::Rejected { reason }) => FromGateway::Rejected { id, reason },
+        Err(e) => FromGateway::Failed { id, error: format!("{e:#}") },
+    }
+}
+
+/// The resident problem for a job spec: LRU lookup by dataset
+/// fingerprint, else build and insert.  The build happens outside the
+/// lock (it can take seconds on a large corpus); a concurrent build of
+/// the same corpus keeps the first copy inserted.
+fn problem_for(shared: &Shared, spec: &str) -> crate::Result<Arc<BuiltProblem>> {
+    let fp = dataset_fingerprint(spec);
+    {
+        let mut cache = lock(&shared.problems);
+        if let Some(pos) = cache.iter().position(|(f, _)| *f == fp) {
+            let entry = cache.remove(pos);
+            let problem = Arc::clone(&entry.1);
+            cache.push(entry); // most recently used
+            return Ok(problem);
+        }
+    }
+    let cfg = Config::parse(spec).map_err(|e| anyhow::anyhow!("job problem spec: {e}"))?;
+    let built = Arc::new(super::build_problem(&cfg, None)?);
+    let mut cache = lock(&shared.problems);
+    if let Some((_, existing)) = cache.iter().find(|(f, _)| *f == fp) {
+        return Ok(Arc::clone(existing));
+    }
+    cache.push((fp, Arc::clone(&built)));
+    while cache.len() > PROBLEM_CACHE {
+        cache.remove(0); // evict the coldest corpus
+    }
+    Ok(built)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::build_constraint;
+
+    const SPEC: &str = "dataset.kind = retail\ndataset.n = 150\ndataset.seed = 2\n\
+                        problem.k = 4\n";
+
+    fn sample_job() -> JobSpec {
+        JobSpec {
+            id: 3,
+            spec: SPEC.to_string(),
+            seed: 1,
+            machines: 4,
+            branching: 2,
+            backend: "thread".to_string(),
+            ship: "auto".to_string(),
+            hosts: Some(vec!["127.0.0.1:7401".to_string(), "127.0.0.1:7402".to_string()]),
+            threads: 2,
+            local_view: false,
+            on_fault: "retry".to_string(),
+        }
+    }
+
+    fn sample_snapshot() -> GatewaySnapshot {
+        GatewaySnapshot {
+            queued: 1,
+            running: 2,
+            completed: 9,
+            warm: 5,
+            cached: 3,
+            rejected: 1,
+            failed: 0,
+            faulted: 1,
+            submitted: 11,
+            sessions: 2,
+            init_bytes: 4096,
+        }
+    }
+
+    fn roundtrip_request(msg: ToGateway) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg.to_value()).unwrap();
+        let v = read_frame(&mut buf.as_slice()).unwrap().expect("frame present");
+        assert_eq!(ToGateway::from_value(&v).unwrap(), msg);
+    }
+
+    fn roundtrip_reply(msg: FromGateway) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg.to_value()).unwrap();
+        let v = read_frame(&mut buf.as_slice()).unwrap().expect("frame present");
+        assert_eq!(FromGateway::from_value(&v).unwrap(), msg);
+    }
+
+    /// One sample of every client → gateway request (the lockstep test
+    /// derives the live tag set from this list — extend it when adding a
+    /// variant).
+    fn all_requests() -> Vec<ToGateway> {
+        vec![
+            ToGateway::Hello { version: GATEWAY_PROTOCOL_VERSION },
+            ToGateway::Submit(sample_job()),
+            ToGateway::Stats,
+        ]
+    }
+
+    /// One sample of every gateway → client reply (see [`all_requests`]).
+    fn all_replies() -> Vec<FromGateway> {
+        vec![
+            FromGateway::Welcome { version: GATEWAY_PROTOCOL_VERSION },
+            FromGateway::Accepted { id: 3 },
+            FromGateway::Rejected { id: 3, reason: "over the admission budget".to_string() },
+            FromGateway::Result {
+                id: 3,
+                solution: vec![9, 2, 511],
+                value: 12.5,
+                warm: true,
+                cached: false,
+                faults: "1 fault seen, 1 retry".to_string(),
+            },
+            FromGateway::Failed { id: 3, error: "worker fleet died".to_string() },
+            FromGateway::Stats(sample_snapshot()),
+            FromGateway::Error { message: "expected hello as the first frame".to_string() },
+        ]
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        for msg in all_requests() {
+            roundtrip_request(msg);
+        }
+        // A job with no hosts crosses the wire as null and comes back None.
+        roundtrip_request(ToGateway::Submit(JobSpec { hosts: None, ..sample_job() }));
+    }
+
+    #[test]
+    fn replies_roundtrip() {
+        for msg in all_replies() {
+            roundtrip_reply(msg);
+        }
+    }
+
+    /// Every `"t"` tag scanned out of a document (the prose spec quotes
+    /// each frame's tag as `"t": "<tag>"`).
+    fn doc_tags(doc: &str) -> std::collections::BTreeSet<String> {
+        let mut tags = std::collections::BTreeSet::new();
+        let needle = "\"t\": \"";
+        let mut rest = doc;
+        while let Some(pos) = rest.find(needle) {
+            rest = &rest[pos + needle.len()..];
+            if let Some(end) = rest.find('"') {
+                tags.insert(rest[..end].to_string());
+            }
+        }
+        tags
+    }
+
+    #[test]
+    fn gateway_doc_stays_in_lockstep_with_the_codec() {
+        // Keep `docs/gateway-protocol.md` honest: every message variant
+        // the codec speaks must be named in the spec (as `"t": "<tag>"`),
+        // the spec must not describe tags the codec does not speak, and
+        // every variant must round-trip through its own frame.
+        let doc = include_str!("../../../docs/gateway-protocol.md");
+        let documented = doc_tags(doc);
+        let mut live = std::collections::BTreeSet::new();
+        for msg in all_requests() {
+            live.insert(msg.to_value()["t"].as_str().unwrap().to_string());
+            roundtrip_request(msg);
+        }
+        for msg in all_replies() {
+            live.insert(msg.to_value()["t"].as_str().unwrap().to_string());
+            roundtrip_reply(msg);
+        }
+        assert_eq!(
+            live, documented,
+            "docs/gateway-protocol.md and coordinator/gateway.rs disagree on the message \
+             set (left = codec, right = doc) — update both together"
+        );
+    }
+
+    #[test]
+    fn stats_request_bytes_match_the_documented_hex_dump() {
+        // The annotated hex dump in docs/gateway-protocol.md shows this
+        // exact frame; if the encoding ever changes, the doc must change
+        // with it.
+        let mut buf = Vec::new();
+        let written = write_frame(&mut buf, &ToGateway::Stats.to_value()).unwrap();
+        assert_eq!(
+            buf,
+            [0x0d, 0x00, 0x00, 0x00, 0x7b, 0x22, 0x74, 0x22, 0x3a, 0x22, 0x73, 0x74, 0x61,
+             0x74, 0x73, 0x22, 0x7d],
+            "Stats frame no longer matches the hex dump in docs/gateway-protocol.md"
+        );
+        assert_eq!(written, buf.len() as u64, "write_frame must report the on-wire size");
+    }
+
+    #[test]
+    fn hello_frame_bytes_match_the_documented_hex_dump() {
+        // Pinned at v1 like the doc's dump — a version bump must touch
+        // the doc, this test, and GATEWAY_PROTOCOL_VERSION together.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &ToGateway::Hello { version: 1 }.to_value()).unwrap();
+        assert_eq!(
+            buf,
+            [0x19, 0x00, 0x00, 0x00, 0x7b, 0x22, 0x74, 0x22, 0x3a, 0x22, 0x68, 0x65, 0x6c,
+             0x6c, 0x6f, 0x22, 0x2c, 0x22, 0x76, 0x65, 0x72, 0x73, 0x69, 0x6f, 0x6e, 0x22,
+             0x3a, 0x31, 0x7d],
+            "Hello frame no longer matches the hex dump in docs/gateway-protocol.md"
+        );
+    }
+
+    #[test]
+    fn f64_values_cross_the_wire_bit_exactly() {
+        // Clients compare gateway values against thread-backend runs with
+        // to_bits(); ryu's shortest representation must reproduce the
+        // exact double.
+        for v in [1.0 / 3.0, 1e-300, 123456789.123456789, f64::MIN_POSITIVE] {
+            let msg = FromGateway::Result {
+                id: 0,
+                solution: vec![],
+                value: v,
+                warm: false,
+                cached: false,
+                faults: String::new(),
+            };
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &msg.to_value()).unwrap();
+            let parsed = read_frame(&mut buf.as_slice()).unwrap().unwrap();
+            match FromGateway::from_value(&parsed).unwrap() {
+                FromGateway::Result { value, .. } => assert_eq!(value.to_bits(), v.to_bits()),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_frames_are_polite_errors() {
+        assert!(ToGateway::from_value(&json!({ "t": "bogus" })).is_err());
+        assert!(FromGateway::from_value(&json!({ "t": "result", "id": 1 })).is_err());
+        assert!(ToGateway::from_value(&json!({ "version": 1 })).is_err(), "missing tag");
+        let job = JobSpec { machines: 0, ..sample_job() };
+        assert!(job.dist_config().is_err(), "zero machines rejects instead of panicking");
+        let job = JobSpec { backend: "quantum".to_string(), ..sample_job() };
+        assert!(job.dist_config().is_err(), "unknown backend rejects");
+    }
+
+    #[test]
+    fn job_spec_survives_the_dist_config_roundtrip() {
+        let job = sample_job();
+        let dist = job.dist_config().unwrap();
+        assert_eq!(dist.seed, 1);
+        assert_eq!(dist.tree.machines(), 4);
+        assert_eq!(dist.tree.branching(), 2);
+        assert!(matches!(dist.backend, BackendSpec::Thread));
+        assert!(matches!(dist.ship, ShipSpec::Auto));
+        assert!(matches!(dist.on_fault, FaultSpec::Retry));
+        assert_eq!(dist.threads, Some(2));
+        assert_eq!(dist.problem.as_deref(), Some(SPEC));
+        assert_eq!(JobSpec::from_dist(3, &dist).unwrap(), job);
+    }
+
+    #[test]
+    fn gateway_serves_thread_backend_jobs_end_to_end() {
+        // A live daemon on an ephemeral port: submit → accepted → result,
+        // bit-identical to a direct thread-backend run; an identical
+        // resubmission is served from the cache; stats reconcile.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let gc = GatewayConfig {
+            bind: String::new(),
+            workers: 2,
+            mem_budget: None,
+            cache_entries: 8,
+        };
+        std::thread::spawn(move || serve_loop(listener, gc));
+        let mut client = GatewayClient::connect(&addr).unwrap();
+
+        let job = JobSpec { id: 0, hosts: None, ..sample_job() };
+        client.submit(&job).unwrap();
+        assert_eq!(client.next().unwrap(), FromGateway::Accepted { id: 0 });
+        let (solution, value) = match client.next().unwrap() {
+            FromGateway::Result { id: 0, solution, value, cached: false, .. } => {
+                (solution, value)
+            }
+            other => panic!("expected a fresh result, got {other:?}"),
+        };
+
+        let cfg = Config::parse(SPEC).unwrap();
+        let problem = super::super::build_problem(&cfg, None).unwrap();
+        let (constraint, _) = build_constraint(&cfg, problem.oracle.n()).unwrap();
+        let direct = crate::algo::run_dist(
+            problem.oracle.as_ref(),
+            constraint.as_ref(),
+            &job.dist_config().unwrap(),
+        )
+        .unwrap();
+        assert_eq!(solution, direct.solution, "gateway solution matches the thread backend");
+        assert_eq!(value.to_bits(), direct.value.to_bits(), "f(S) is bit-identical");
+
+        client.submit(&JobSpec { id: 1, ..job.clone() }).unwrap();
+        assert_eq!(client.next().unwrap(), FromGateway::Accepted { id: 1 });
+        match client.next().unwrap() {
+            FromGateway::Result { id: 1, value: v, cached: true, .. } => {
+                assert_eq!(v.to_bits(), value.to_bits(), "cache replay is bit-identical");
+            }
+            other => panic!("expected a cached result, got {other:?}"),
+        }
+
+        client.request_stats().unwrap();
+        match client.next().unwrap() {
+            FromGateway::Stats(s) => {
+                assert_eq!(s.completed, 2);
+                assert_eq!(s.cached, 1);
+                assert_eq!(s.submitted, 2);
+                assert_eq!(s.queued, 0);
+                assert_eq!(s.running, 0);
+            }
+            other => panic!("expected stats, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_submissions_reject_without_touching_the_daemon() {
+        // A zero-machine job bounces immediately; the connection and the
+        // daemon both survive to serve the next, valid job.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let gc = GatewayConfig {
+            bind: String::new(),
+            workers: 1,
+            mem_budget: None,
+            cache_entries: 8,
+        };
+        std::thread::spawn(move || serve_loop(listener, gc));
+        let mut client = GatewayClient::connect(&addr).unwrap();
+        let doomed = JobSpec { id: 7, machines: 0, hosts: None, ..sample_job() };
+        client.submit(&doomed).unwrap();
+        match client.next().unwrap() {
+            FromGateway::Rejected { id: 7, reason } => {
+                assert!(reason.contains("machine"), "{reason}");
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        let fine = JobSpec { id: 8, hosts: None, ..sample_job() };
+        client.submit(&fine).unwrap();
+        assert_eq!(client.next().unwrap(), FromGateway::Accepted { id: 8 });
+        assert!(
+            matches!(client.next().unwrap(), FromGateway::Result { id: 8, .. }),
+            "the daemon still runs valid jobs"
+        );
+    }
+}

@@ -4,39 +4,48 @@
 //! exemplar clustering and summarization sweeps vary `(k, seed,
 //! constraint)` while the corpus stays fixed.  This module is the
 //! coordinator-side counterpart of the resident-shard sessions in
-//! [`crate::dist`]: a serial [`JobQueue`] that
+//! [`crate::dist`]: a thread-shareable [`JobQueue`] that
 //!
-//! 1. answers repeat queries from a **solution cache** (keyed by the
-//!    dataset fingerprint, the constraint spec and every
+//! 1. answers repeat queries from a bounded **LRU solution cache**
+//!    (keyed by the dataset fingerprint, the constraint spec and every
 //!    result-determining run parameter) without touching a worker,
 //! 2. refuses jobs whose estimated per-machine memory need exceeds the
 //!    queue's **admission budget** *before* any shipping happens —
 //!    reproducing the §6.2 "cannot even hold the data" regime as a
-//!    polite rejection instead of a mid-run abort, and
+//!    polite rejection instead of a mid-run abort — and makes jobs that
+//!    fit individually but not *together* wait for in-flight
+//!    reservations to drain instead of bouncing them, and
 //! 3. runs everything else through a [`SessionPool`], so consecutive
 //!    jobs against the same dataset reuse one warm fleet and ship each
 //!    partition shard exactly once.
 //!
-//! `greedyml submit --config <file>` drives a [`JobBatch`] (the `[jobs]`
-//! config section) through one queue, which is the long-lived-coordinator
-//! deployment in miniature: the fleet outlives every individual run.
+//! Every method takes `&self`: one queue serves concurrent submitters
+//! (the gateway daemon's worker threads drive exactly this), with the
+//! cache, the counters and the budget ledger guarded by one short-held
+//! internal lock — never across a run.  `greedyml submit --config
+//! <file>` drives a [`JobBatch`] (the `[jobs]` config section) through
+//! one queue, which is the long-lived-coordinator deployment in
+//! miniature: the fleet outlives every individual run.
 
 use super::experiment::build_constraint;
 use super::BuiltProblem;
-use crate::algo::{
-    dataset_fingerprint, run_dist_pooled, DistConfig, SessionPool,
-};
+use crate::algo::{dataset_fingerprint, run_dist_pooled_tracked, DistConfig, SessionPool};
 use crate::dist::{BackendSpec, FaultSpec, ShipSpec};
 use crate::tree::AccumulationTree;
 use crate::util::config::Config;
 use crate::ElemId;
-use std::collections::HashMap;
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Default capacity of the solution cache, in entries
+/// (`jobs.cache_entries`).
+pub const DEFAULT_CACHE_ENTRIES: usize = 256;
 
 /// What the queue did with one submitted job.
 #[derive(Clone, Debug)]
 pub enum Submission {
-    /// The job ran to completion (`warm`: on a reused resident session).
-    Ran { solution: Vec<ElemId>, value: f64, warm: bool },
+    /// The job ran to completion (`warm`: on a reused resident session;
+    /// `faults`: human-readable fault summary, empty for a clean run).
+    Ran { solution: Vec<ElemId>, value: f64, warm: bool, faults: String },
     /// Served from the solution cache; no worker was touched.
     Cached { solution: Vec<ElemId>, value: f64 },
     /// Refused by admission control; no worker was touched.
@@ -69,17 +78,30 @@ struct CachedSolution {
     value: f64,
 }
 
-/// A serial job queue over one warm [`SessionPool`], with a solution
-/// cache and memory-budget admission control.  See the module docs.
-pub struct JobQueue {
-    pool: SessionPool,
-    cache: HashMap<u64, CachedSolution>,
-    /// Per-machine admission budget in bytes (`None` = admit everything).
-    mem_budget: Option<u64>,
+/// Everything the queue mutates, behind one short-held lock.
+struct QueueState {
+    /// LRU order: front = coldest, back = most recently used.
+    cache: Vec<(u64, CachedSolution)>,
+    /// Bytes reserved by admitted jobs still in flight (budget ledger).
+    in_flight: u64,
     submitted: u64,
     cache_hits: u64,
     rejected: u64,
     failed: u64,
+}
+
+/// A job queue over one warm [`SessionPool`], with a bounded LRU
+/// solution cache and memory-budget admission control, shareable across
+/// submitter threads.  See the module docs.
+pub struct JobQueue {
+    pool: SessionPool,
+    state: Mutex<QueueState>,
+    /// Signalled whenever an in-flight reservation is returned.
+    space: Condvar,
+    /// Per-machine admission budget in bytes (`None` = admit everything).
+    mem_budget: Option<u64>,
+    /// Solution-cache capacity in entries (0 disables caching).
+    cache_entries: usize,
 }
 
 impl Default for JobQueue {
@@ -88,97 +110,158 @@ impl Default for JobQueue {
     }
 }
 
+/// Admission-budget bytes held by one in-flight job.  Dropping it — on
+/// completion, failure or panic alike — returns the bytes to the ledger
+/// and wakes every submitter waiting for space.
+struct Reservation<'a> {
+    queue: &'a JobQueue,
+    estimate: u64,
+}
+
+impl Drop for Reservation<'_> {
+    fn drop(&mut self) {
+        let mut st = self.queue.state();
+        st.in_flight = st.in_flight.saturating_sub(self.estimate);
+        self.queue.space.notify_all();
+    }
+}
+
 impl JobQueue {
-    /// A queue with the given per-machine admission budget.
+    /// A queue with the given per-machine admission budget and the
+    /// default cache capacity ([`DEFAULT_CACHE_ENTRIES`]).
     pub fn new(mem_budget: Option<u64>) -> Self {
+        Self::with_cache_entries(mem_budget, DEFAULT_CACHE_ENTRIES)
+    }
+
+    /// A queue with an explicit solution-cache capacity (`0` disables
+    /// caching entirely — every submission runs).
+    pub fn with_cache_entries(mem_budget: Option<u64>, cache_entries: usize) -> Self {
         Self {
             pool: SessionPool::new(),
-            cache: HashMap::new(),
+            state: Mutex::new(QueueState {
+                cache: Vec::new(),
+                in_flight: 0,
+                submitted: 0,
+                cache_hits: 0,
+                rejected: 0,
+                failed: 0,
+            }),
+            space: Condvar::new(),
             mem_budget,
-            submitted: 0,
-            cache_hits: 0,
-            rejected: 0,
-            failed: 0,
+            cache_entries,
         }
+    }
+
+    /// The internal lock, recovering from poisoning: a submitter panic
+    /// must not brick a long-lived daemon's queue (counters and the LRU
+    /// list are valid after any partial update).
+    fn state(&self) -> MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
     /// Submit one job: cache lookup → admission control → a run on the
     /// warm pool.  `cfg.problem` must carry the job's problem spec (it
     /// defines the constraint and the cache identity); config-built jobs
     /// ([`JobBatch::dist_config`]) always attach it.
-    pub fn submit(
-        &mut self,
-        problem: &BuiltProblem,
-        cfg: &DistConfig,
-    ) -> crate::Result<Submission> {
+    ///
+    /// Under a budget, a job whose estimate exceeds it outright is
+    /// rejected; a job that fits the budget but not the *remaining*
+    /// space (other submitters' reservations) blocks until in-flight
+    /// jobs return their bytes, then runs.  Concurrent submitters thus
+    /// compete for one ledger instead of overcommitting the fleet.
+    pub fn submit(&self, problem: &BuiltProblem, cfg: &DistConfig) -> crate::Result<Submission> {
         let spec = cfg
             .problem
             .as_deref()
             .ok_or_else(|| anyhow::anyhow!("job has no problem spec (DistConfig::problem)"))?;
-        self.submitted += 1;
         let key = job_key(cfg, spec, problem.oracle.n());
-        if let Some(hit) = self.cache.get(&key) {
-            self.cache_hits += 1;
-            return Ok(Submission::Cached {
-                solution: hit.solution.clone(),
-                value: hit.value,
-            });
-        }
-        let spec_cfg = Config::parse(spec)
-            .map_err(|e| anyhow::anyhow!("job problem spec: {e}"))?;
-        let (constraint, k) = build_constraint(&spec_cfg, problem.oracle.n())?;
-        if let Some(budget) = self.mem_budget {
-            let estimate = admission_estimate(problem, cfg, k);
-            if estimate > budget {
-                self.rejected += 1;
-                return Ok(Submission::Rejected {
-                    reason: format!(
-                        "estimated {estimate} bytes per machine exceeds the \
-                         {budget}-byte admission budget (≈{} shard elements + \
-                         {}×{k} fan-in solution elements); raise jobs.mem_budget, \
-                         add machines, or deepen the tree",
-                        shard_elems(problem, cfg),
-                        fan_in(cfg),
-                    ),
-                });
+        {
+            let mut st = self.state();
+            st.submitted += 1;
+            if let Some(pos) = st.cache.iter().position(|(k, _)| *k == key) {
+                let entry = st.cache.remove(pos);
+                let hit = entry.1.clone();
+                st.cache.push(entry); // most recently used
+                st.cache_hits += 1;
+                return Ok(Submission::Cached { solution: hit.solution, value: hit.value });
             }
         }
-        let out =
-            run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), cfg, &mut self.pool)
+        let spec_cfg =
+            Config::parse(spec).map_err(|e| anyhow::anyhow!("job problem spec: {e}"))?;
+        let (constraint, k) = build_constraint(&spec_cfg, problem.oracle.n())?;
+        let _reservation = match self.mem_budget {
+            None => None,
+            Some(budget) => {
+                let estimate = admission_estimate(problem, cfg, k);
+                if estimate > budget {
+                    self.state().rejected += 1;
+                    return Ok(Submission::Rejected {
+                        reason: format!(
+                            "estimated {estimate} bytes per machine exceeds the \
+                             {budget}-byte admission budget (≈{} shard elements + \
+                             {}×{k} fan-in solution elements); raise jobs.mem_budget, \
+                             add machines, or deepen the tree",
+                            shard_elems(problem, cfg),
+                            fan_in(cfg),
+                        ),
+                    });
+                }
+                let mut st = self.state();
+                while estimate > budget.saturating_sub(st.in_flight) {
+                    st = self.space.wait(st).unwrap_or_else(PoisonError::into_inner);
+                }
+                st.in_flight += estimate;
+                Some(Reservation { queue: self, estimate })
+            }
+        };
+        let run =
+            run_dist_pooled_tracked(problem.oracle.as_ref(), constraint.as_ref(), cfg, &self.pool)
                 .map_err(|e| {
-                    self.failed += 1;
+                    self.state().failed += 1;
                     anyhow::anyhow!(e)
                 })?;
-        let warm = self.pool.last_was_warm();
+        let out = run.outcome;
+        let faults =
+            (!out.faults.is_empty()).then(|| out.faults.to_string()).unwrap_or_default();
         // A *degraded* solution (machines dropped mid-run) is feasible but
         // not this job's canonical answer — never cache it, so a repeat
         // submission recomputes against a healthy fleet.
-        if out.faults.machines_dropped.is_empty() {
-            self.cache
-                .insert(key, CachedSolution { solution: out.solution.clone(), value: out.value });
+        if self.cache_entries > 0 && out.faults.machines_dropped.is_empty() {
+            let mut st = self.state();
+            st.cache.retain(|(k, _)| *k != key);
+            st.cache
+                .push((key, CachedSolution { solution: out.solution.clone(), value: out.value }));
+            while st.cache.len() > self.cache_entries {
+                st.cache.remove(0); // evict the coldest
+            }
         }
-        Ok(Submission::Ran { solution: out.solution, value: out.value, warm })
+        Ok(Submission::Ran { solution: out.solution, value: out.value, warm: run.warm, faults })
     }
 
     /// Jobs submitted (including cached and rejected ones).
     pub fn submitted(&self) -> u64 {
-        self.submitted
+        self.state().submitted
     }
 
     /// Jobs answered from the solution cache.
     pub fn cache_hits(&self) -> u64 {
-        self.cache_hits
+        self.state().cache_hits
     }
 
     /// Jobs refused by admission control.
     pub fn rejected(&self) -> u64 {
-        self.rejected
+        self.state().rejected
     }
 
     /// Jobs that errored in flight (after admission, after the pool's own
     /// retry policy gave up).
     pub fn failed(&self) -> u64 {
-        self.failed
+        self.state().failed
+    }
+
+    /// Solutions currently cached (≤ the configured capacity).
+    pub fn cache_len(&self) -> usize {
+        self.state().cache.len()
     }
 
     /// The warm fleet store (init-byte and warm/cold counters live there).
@@ -290,6 +373,9 @@ pub struct JobBatch {
     /// Admission budget in bytes (`jobs.mem_budget`, e.g. `64mb`;
     /// absent = admit everything).
     pub mem_budget: Option<u64>,
+    /// Solution-cache capacity in entries (`jobs.cache_entries`,
+    /// default [`DEFAULT_CACHE_ENTRIES`]; 0 disables caching).
+    pub cache_entries: usize,
     /// Worker-loss policy for remote backends (`jobs.on_fault`, default
     /// auto → `GREEDYML_ON_FAULT` → fail).
     pub on_fault: FaultSpec,
@@ -336,6 +422,8 @@ impl JobBatch {
                 t => Some(t as usize),
             },
             mem_budget,
+            cache_entries: cfg.u64_or("jobs.cache_entries", DEFAULT_CACHE_ENTRIES as u64)?
+                as usize,
             on_fault,
         })
     }
@@ -393,8 +481,11 @@ mod tests {
         assert_eq!(batch.seeds, vec![1, 2]);
         assert_eq!(batch.machines, 4);
         assert_eq!(batch.branching, 2);
+        assert_eq!(batch.cache_entries, DEFAULT_CACHE_ENTRIES);
         assert_eq!(batch.jobs(), vec![(1, 4), (1, 6), (2, 4), (2, 6)]);
         assert!(JobBatch::from_config(&Config::parse("[jobs]\nks = \n").unwrap()).is_err());
+        let capped = Config::parse("[jobs]\nks = 4\ncache_entries = 3\n").unwrap();
+        assert_eq!(JobBatch::from_config(&capped).unwrap().cache_entries, 3);
     }
 
     #[test]
@@ -402,7 +493,7 @@ mod tests {
         let cfg = retail_config(200);
         let problem = build_problem(&cfg, None).unwrap();
         let batch = JobBatch::from_config(&cfg).unwrap();
-        let mut queue = JobQueue::new(None);
+        let queue = JobQueue::new(None);
         let dist = batch.dist_config(&cfg, 4, 1);
         let first = queue.submit(&problem, &dist).unwrap();
         let again = queue.submit(&problem, &dist).unwrap();
@@ -422,7 +513,7 @@ mod tests {
         let cfg = retail_config(200);
         let problem = build_problem(&cfg, None).unwrap();
         let batch = JobBatch::from_config(&cfg).unwrap();
-        let mut queue = JobQueue::new(None);
+        let queue = JobQueue::new(None);
         for (seed, k) in batch.jobs() {
             let sub = queue.submit(&problem, &batch.dist_config(&cfg, k, seed)).unwrap();
             assert!(matches!(sub, Submission::Ran { .. }), "each distinct job runs");
@@ -435,6 +526,67 @@ mod tests {
             Submission::Cached { solution, .. } => assert!(solution.len() <= 4),
             other => panic!("expected a cache hit, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used_entry() {
+        // Capacity 1: the second distinct job evicts the first, so the
+        // first runs again on re-submission while the second stays hot.
+        let cfg = retail_config(200);
+        let problem = build_problem(&cfg, None).unwrap();
+        let batch = JobBatch::from_config(&cfg).unwrap();
+        let queue = JobQueue::with_cache_entries(None, 1);
+        let a = batch.dist_config(&cfg, 4, 1);
+        let b = batch.dist_config(&cfg, 6, 1);
+        assert!(matches!(queue.submit(&problem, &a).unwrap(), Submission::Ran { .. }));
+        assert!(matches!(queue.submit(&problem, &b).unwrap(), Submission::Ran { .. }));
+        assert_eq!(queue.cache_len(), 1, "capacity bounds the cache");
+        assert!(
+            matches!(queue.submit(&problem, &b).unwrap(), Submission::Cached { .. }),
+            "most recent entry stays hot"
+        );
+        assert!(
+            matches!(queue.submit(&problem, &a).unwrap(), Submission::Ran { .. }),
+            "evicted entry reruns"
+        );
+    }
+
+    #[test]
+    fn cache_hits_refresh_recency() {
+        // Capacity 2: touching A makes B the coldest, so a third job
+        // evicts B and A survives.
+        let cfg = retail_config(200);
+        let problem = build_problem(&cfg, None).unwrap();
+        let batch = JobBatch::from_config(&cfg).unwrap();
+        let queue = JobQueue::with_cache_entries(None, 2);
+        let a = batch.dist_config(&cfg, 4, 1);
+        let b = batch.dist_config(&cfg, 6, 1);
+        let c = batch.dist_config(&cfg, 4, 2);
+        queue.submit(&problem, &a).unwrap();
+        queue.submit(&problem, &b).unwrap();
+        assert!(matches!(queue.submit(&problem, &a).unwrap(), Submission::Cached { .. }));
+        queue.submit(&problem, &c).unwrap(); // evicts b, the coldest
+        assert!(matches!(queue.submit(&problem, &a).unwrap(), Submission::Cached { .. }));
+        assert!(
+            matches!(queue.submit(&problem, &b).unwrap(), Submission::Ran { .. }),
+            "the coldest entry was evicted"
+        );
+    }
+
+    #[test]
+    fn zero_cache_entries_disables_caching() {
+        let cfg = retail_config(200);
+        let problem = build_problem(&cfg, None).unwrap();
+        let batch = JobBatch::from_config(&cfg).unwrap();
+        let queue = JobQueue::with_cache_entries(None, 0);
+        let dist = batch.dist_config(&cfg, 4, 1);
+        assert!(matches!(queue.submit(&problem, &dist).unwrap(), Submission::Ran { .. }));
+        assert!(
+            matches!(queue.submit(&problem, &dist).unwrap(), Submission::Ran { .. }),
+            "nothing is ever cached at capacity 0"
+        );
+        assert_eq!(queue.cache_len(), 0);
+        assert_eq!(queue.cache_hits(), 0);
     }
 
     #[test]
@@ -460,7 +612,8 @@ mod tests {
 
     #[test]
     fn submission_status_words() {
-        let ran = Submission::Ran { solution: vec![], value: 1.0, warm: true };
+        let ran =
+            Submission::Ran { solution: vec![], value: 1.0, warm: true, faults: String::new() };
         assert_eq!(ran.status(), "warm");
         assert!(ran.value().is_some());
         let rej = Submission::Rejected { reason: "x".into() };
@@ -478,11 +631,11 @@ mod tests {
         let batch = JobBatch::from_config(&cfg).unwrap();
         let dist = batch.dist_config(&cfg, 4, 1);
         let estimate = admission_estimate(&problem, &dist, 4);
-        let mut queue = JobQueue::new(Some(estimate));
+        let queue = JobQueue::new(Some(estimate));
         let sub = queue.submit(&problem, &dist).unwrap();
         assert!(matches!(sub, Submission::Ran { .. }), "estimate == budget admits");
         assert_eq!(queue.rejected(), 0);
-        let mut tight = JobQueue::new(Some(estimate - 1));
+        let tight = JobQueue::new(Some(estimate - 1));
         let sub = tight.submit(&problem, &dist).unwrap();
         assert!(matches!(sub, Submission::Rejected { .. }), "one byte less rejects");
     }
@@ -492,7 +645,7 @@ mod tests {
         let cfg = retail_config(200);
         let problem = build_problem(&cfg, None).unwrap();
         let batch = JobBatch::from_config(&cfg).unwrap();
-        let mut queue = JobQueue::new(Some(0));
+        let queue = JobQueue::new(Some(0));
         for (seed, k) in batch.jobs() {
             let sub = queue.submit(&problem, &batch.dist_config(&cfg, k, seed)).unwrap();
             assert!(matches!(sub, Submission::Rejected { .. }));
@@ -524,7 +677,7 @@ mod tests {
             job_key(&matroid, matroid.problem.as_deref().unwrap(), n),
             "constraint keys are part of the cache identity"
         );
-        let mut queue = JobQueue::new(None);
+        let queue = JobQueue::new(None);
         let first = queue.submit(&problem, &card).unwrap();
         let second = queue.submit(&problem, &matroid).unwrap();
         assert!(matches!(first, Submission::Ran { .. }));
@@ -555,5 +708,67 @@ mod tests {
             queue.cache_hits() + queue.rejected() + queue.failed() + 2,
             "every submission is accounted exactly once (2 ran)"
         );
+    }
+
+    #[test]
+    fn concurrent_submitters_share_one_queue() {
+        // Two threads drive distinct jobs through one &JobQueue — the
+        // gateway worker pool in miniature.  Counters reconcile and each
+        // job's solution is immediately replayable from the cache.
+        let cfg = retail_config(200);
+        let problem = build_problem(&cfg, None).unwrap();
+        let batch = JobBatch::from_config(&cfg).unwrap();
+        let queue = JobQueue::new(None);
+        let firsts = std::thread::scope(|scope| {
+            let handles = [(1u64, 4usize), (2, 6)].map(|(seed, k)| {
+                let (queue, problem, batch, cfg) = (&queue, &problem, &batch, &cfg);
+                scope.spawn(move || {
+                    let dist = batch.dist_config(cfg, k, seed);
+                    let sub = queue.submit(problem, &dist).unwrap();
+                    match sub {
+                        Submission::Ran { value, .. } => (dist, value),
+                        other => panic!("expected Ran, got {other:?}"),
+                    }
+                })
+            });
+            handles.map(|h| h.join().unwrap())
+        });
+        assert_eq!(queue.submitted(), 2);
+        assert_eq!(queue.cache_hits(), 0);
+        assert_eq!(queue.failed(), 0);
+        for (dist, value) in &firsts {
+            match queue.submit(&problem, dist).unwrap() {
+                Submission::Cached { value: v, .. } => {
+                    assert_eq!(v.to_bits(), value.to_bits(), "cache replay is bit-identical");
+                }
+                other => panic!("expected Cached, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn budget_arbitration_waits_instead_of_rejecting() {
+        // A budget that fits exactly one job at a time: two concurrent
+        // submitters must serialize on the ledger — both complete, none
+        // is rejected, the fleet is never overcommitted.
+        let cfg = retail_config(200);
+        let problem = build_problem(&cfg, None).unwrap();
+        let batch = JobBatch::from_config(&cfg).unwrap();
+        let a = batch.dist_config(&cfg, 4, 1);
+        let b = batch.dist_config(&cfg, 6, 2);
+        let budget = admission_estimate(&problem, &a, 4).max(admission_estimate(&problem, &b, 6));
+        let queue = JobQueue::new(Some(budget));
+        std::thread::scope(|scope| {
+            for dist in [&a, &b] {
+                let (queue, problem) = (&queue, &problem);
+                scope.spawn(move || {
+                    let sub = queue.submit(problem, dist).unwrap();
+                    assert!(matches!(sub, Submission::Ran { .. }), "admitted after waiting");
+                });
+            }
+        });
+        assert_eq!(queue.rejected(), 0, "fitting jobs wait for space, never bounce");
+        assert_eq!(queue.failed(), 0);
+        assert_eq!(queue.submitted(), 2);
     }
 }

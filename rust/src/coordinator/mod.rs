@@ -4,11 +4,13 @@
 
 pub mod dataset;
 pub mod experiment;
+pub mod gateway;
 pub mod jobs;
 pub mod sweep;
 
 pub use dataset::{build_problem, Backend, BuiltProblem};
 pub use experiment::{AlgoSpec, Experiment};
+pub use gateway::{run_gateway, GatewayClient, GatewayConfig, JobSpec};
 pub use jobs::{JobBatch, JobQueue, Submission};
 pub use sweep::Sweep;
 

@@ -116,7 +116,7 @@ impl Sweep {
     /// their own sessions, as they must.)
     pub fn run(&self, problem: &BuiltProblem) -> (Vec<RunReport>, Vec<(String, String)>) {
         let oracle = problem.oracle.as_ref();
-        let mut pool = SessionPool::new();
+        let pool = SessionPool::new();
         let mut reports = Vec::new();
         let mut failures = Vec::new();
         for &k in &self.ks {
@@ -156,7 +156,7 @@ impl Sweep {
                         }
                         AlgoSpec::GreeDi { m } => {
                             let cfg = self.with_backend(greedi_config(m, self.mem_limit), k);
-                            run_dist_pooled(oracle, &constraint, &cfg, &mut pool)
+                            run_dist_pooled(oracle, &constraint, &cfg, &pool)
                                 .map(|o| {
                                     (
                                         o.value,
@@ -176,7 +176,7 @@ impl Sweep {
                                 ..crate::algo::randgreedi::RandGreediOpts::new(m, self.seed + r)
                             };
                             let cfg = self.with_backend(opts.to_config(), k);
-                            run_dist_pooled(oracle, &constraint, &cfg, &mut pool)
+                            run_dist_pooled(oracle, &constraint, &cfg, &pool)
                                 .map(|o| {
                                     (
                                         o.value,
@@ -201,7 +201,7 @@ impl Sweep {
                                 },
                                 k,
                             );
-                            run_dist_pooled(oracle, &constraint, &cfg, &mut pool)
+                            run_dist_pooled(oracle, &constraint, &cfg, &pool)
                                 .map(|o| {
                                     (
                                         o.value,

@@ -4,18 +4,26 @@
 //!   run       — run an experiment config:   greedyml run --config configs/fig4.toml [--set k=v]…
 //!   sweep     — run an experiment grid (k values × algorithms)
 //!   submit    — drive a [jobs] batch through the warm-session job queue
+//!               (add --gateway <addr> to ship it to a gateway daemon instead)
 //!   serve     — host tcp-backend worker sessions: greedyml serve --bind 0.0.0.0:7401
+//!   gateway   — network front door: greedyml gateway --bind 0.0.0.0:7500
+//!               accepts concurrent `submit --gateway` clients and schedules
+//!               their jobs onto one shared warm-session pool
 //!   tree      — inspect an accumulation tree: greedyml tree --machines 8 --branching 2
 //!   datasets  — print Table-2-style summaries of the synthetic presets
 //!   artifacts — validate the AOT artifact bundle and report entry points
 //!   model     — print the BSP cost model (Table 1) for given parameters
 
 use greedyml::cli::Args;
-use greedyml::coordinator::{render_table, Experiment};
+use greedyml::coordinator::gateway::FromGateway;
+use greedyml::coordinator::{
+    render_table, Experiment, GatewayClient, JobBatch, JobQueue, JobSpec, Submission,
+};
 use greedyml::metrics::write_reports;
 use greedyml::runtime::Engine;
 use greedyml::tree::AccumulationTree;
 use greedyml::util::config::Config;
+use greedyml::util::json::Json;
 use std::sync::Arc;
 
 fn main() {
@@ -32,6 +40,7 @@ fn real_main() -> greedyml::Result<()> {
         Some("sweep") => cmd_sweep(&args),
         Some("submit") => cmd_submit(&args),
         Some("serve") => cmd_serve(&args),
+        Some("gateway") => cmd_gateway(&args),
         Some("tree") => cmd_tree(&args),
         Some("datasets") => cmd_datasets(),
         Some("artifacts") => cmd_artifacts(&args),
@@ -48,17 +57,20 @@ fn real_main() -> greedyml::Result<()> {
     }
 }
 
-const USAGE: &str = "usage: greedyml <run|sweep|submit|serve|tree|datasets|artifacts|model> [flags]
+const USAGE: &str =
+    "usage: greedyml <run|sweep|submit|serve|gateway|tree|datasets|artifacts|model> [flags]
   run       --config <file> [--set key=value]… [--json <out.json>] [--pjrt]
             [--backend thread|process|tcp] [--hosts h1:port,h2:port] [--ship spec|partition]
             [--on-fault fail|retry|degrade]
   sweep     --config <file> (with a [sweep] section) [--set key=value]… [--json <out.json>]
             [--csv <dir>] [--backend thread|process|tcp] [--hosts h1:port,h2:port]
             [--ship spec|partition] [--on-fault fail|retry|degrade]
-  submit    --config <file> (with a [jobs] section) [--set key=value]…
-            [--backend thread|process|tcp] [--hosts h1:port,h2:port] [--ship spec|partition]
-            [--on-fault fail|retry|degrade]
+  submit    --config <file> (with a [jobs] section) [--set key=value]… [--json]
+            [--gateway <addr>] [--backend thread|process|tcp] [--hosts h1:port,h2:port]
+            [--ship spec|partition] [--on-fault fail|retry|degrade]
   serve     --bind <addr>   (tcp-backend worker daemon; --bind 127.0.0.1:0 picks a free port)
+  gateway   --bind <addr> [--workers <n>] [--mem-budget <bytes>] [--cache-entries <n>]
+            (job-service daemon: schedules concurrent submit clients onto warm fleets)
   tree      --machines <m> --branching <b>
   datasets  (no flags)
   artifacts [--dir <artifacts/>]
@@ -185,7 +197,9 @@ fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
 }
 
 fn cmd_submit(args: &Args) -> greedyml::Result<()> {
-    args.check_known(&["config", "set", "backend", "hosts", "ship", "on-fault"])?;
+    args.check_known(&[
+        "config", "set", "backend", "hosts", "ship", "on-fault", "gateway", "json",
+    ])?;
     let mut cfg = Config::load(args.require("config")?)?;
     for kv in args.get_all("set") {
         cfg.set_kv(kv)?;
@@ -202,49 +216,138 @@ fn cmd_submit(args: &Args) -> greedyml::Result<()> {
     if let Some(on_fault) = args.get("on-fault") {
         cfg.set("jobs.on_fault", on_fault);
     }
-    let problem = greedyml::coordinator::build_problem(&cfg, None)?;
-    let batch = greedyml::coordinator::JobBatch::from_config(&cfg)?;
+    let batch = JobBatch::from_config(&cfg)?;
+    let json = args.has("json");
+    match args.get("gateway") {
+        Some(addr) => submit_gateway(&cfg, &batch, addr, json),
+        None => submit_local(&cfg, &batch, json),
+    }
+}
+
+/// One `submit` table row as a JSON record (`--json` mode).  `value` is
+/// null for jobs that produced none (rejected/failed); `faults` is the
+/// run's fault summary (empty for a clean run); `detail` carries the
+/// rejection reason or error text.
+fn job_row(
+    id: u64,
+    k: usize,
+    seed: u64,
+    status: &str,
+    value: Option<f64>,
+    faults: &str,
+    detail: &str,
+) -> Json {
+    Json::obj([
+        ("id", Json::from(id)),
+        ("k", Json::from(k)),
+        ("seed", Json::from(seed)),
+        ("status", Json::from(status)),
+        ("value", value.map_or(Json::Null, Json::from)),
+        ("faults", Json::from(faults)),
+        ("detail", Json::from(detail)),
+    ])
+}
+
+/// The final queue counters of a `submit` run (`--json` mode).  Same six
+/// keys whether the batch ran in-process or through a gateway daemon.
+fn queue_counters(
+    submitted: u64,
+    cached: u64,
+    rejected: u64,
+    failed: u64,
+    warm_jobs: u64,
+    init_bytes_total: u64,
+) -> Json {
+    Json::obj([
+        ("submitted", Json::from(submitted)),
+        ("cached", Json::from(cached)),
+        ("rejected", Json::from(rejected)),
+        ("failed", Json::from(failed)),
+        ("warm_jobs", Json::from(warm_jobs)),
+        ("init_bytes_total", Json::from(init_bytes_total)),
+    ])
+}
+
+/// Drive the batch through an in-process [`JobQueue`] — the historical
+/// `submit` path, still the right tool when the fleet belongs to this
+/// process alone.
+fn submit_local(cfg: &Config, batch: &JobBatch, json: bool) -> greedyml::Result<()> {
+    let problem = greedyml::coordinator::build_problem(cfg, None)?;
     let jobs = batch.jobs();
-    println!(
-        "submitting {} jobs against {} (n={}, fleet {}×b{})",
-        jobs.len(),
-        problem.summary.name,
-        greedyml::util::fmt_count(problem.summary.n as u64),
-        batch.machines,
-        batch.branching
-    );
-    let mut queue = greedyml::coordinator::JobQueue::new(batch.mem_budget);
-    println!("{:>6} {:>6}  {:<8} {}", "k", "seed", "status", "value");
-    for (seed, k) in jobs {
-        let dist = batch.dist_config(&cfg, k, seed);
+    if !json {
+        println!(
+            "submitting {} jobs against {} (n={}, fleet {}×b{})",
+            jobs.len(),
+            problem.summary.name,
+            greedyml::util::fmt_count(problem.summary.n as u64),
+            batch.machines,
+            batch.branching
+        );
+        println!("{:>6} {:>6}  {:<8} {}", "k", "seed", "status", "value");
+    }
+    let queue = JobQueue::with_cache_entries(batch.mem_budget, batch.cache_entries);
+    let mut rows = Vec::new();
+    for (id, &(seed, k)) in jobs.iter().enumerate() {
+        let dist = batch.dist_config(cfg, k, seed);
         // One job failing must not strand the rest of the batch — or eat
         // the final accounting.  Report the row, keep draining.
-        match queue.submit(&problem, &dist) {
-            Ok(greedyml::coordinator::Submission::Rejected { reason }) => {
-                println!("{k:>6} {seed:>6}  {:<8} — {reason}", "rejected");
+        let (status, value, faults, detail) = match queue.submit(&problem, &dist) {
+            Ok(Submission::Rejected { reason }) => {
+                if !json {
+                    println!("{k:>6} {seed:>6}  {:<8} — {reason}", "rejected");
+                }
+                ("rejected", None, String::new(), reason)
             }
             Ok(sub) => {
-                println!("{k:>6} {seed:>6}  {:<8} {:.6}", sub.status(), sub.value().unwrap());
+                let value = sub.value();
+                if !json {
+                    println!("{k:>6} {seed:>6}  {:<8} {:.6}", sub.status(), value.unwrap());
+                }
+                let faults = match &sub {
+                    Submission::Ran { faults, .. } => faults.clone(),
+                    _ => String::new(),
+                };
+                if !json && !faults.is_empty() {
+                    println!("{:>6} {:>6}  faults: {faults}", "", "");
+                }
+                (sub.status(), value, faults, String::new())
             }
             Err(e) => {
-                println!("{k:>6} {seed:>6}  {:<8} — {e}", "failed");
+                if !json {
+                    println!("{k:>6} {seed:>6}  {:<8} — {e}", "failed");
+                }
+                ("failed", None, String::new(), format!("{e:#}"))
             }
-        }
+        };
+        rows.push(job_row(id as u64, k, seed, status, value, &faults, &detail));
     }
     let pool = queue.pool();
-    println!(
-        "queue: {} submitted, {} cached, {} rejected, {} failed; fleet: {} sessions \
-         established, {} of {} pooled jobs warm, {} retried, {} init bytes shipped",
-        queue.submitted(),
-        queue.cache_hits(),
-        queue.rejected(),
-        queue.failed(),
-        pool.sessions_established(),
-        pool.warm_jobs(),
-        pool.jobs_run(),
-        pool.retried_jobs(),
-        pool.init_bytes_total()
-    );
+    if json {
+        let counters = queue_counters(
+            queue.submitted(),
+            queue.cache_hits(),
+            queue.rejected(),
+            queue.failed(),
+            pool.warm_jobs(),
+            pool.init_bytes_total(),
+        );
+        let doc = Json::obj([("jobs", Json::Arr(rows)), ("queue", counters)]);
+        println!("{}", doc.to_pretty());
+    } else {
+        println!(
+            "queue: {} submitted, {} cached, {} rejected, {} failed; fleet: {} sessions \
+             established, {} of {} pooled jobs warm, {} retried, {} init bytes shipped",
+            queue.submitted(),
+            queue.cache_hits(),
+            queue.rejected(),
+            queue.failed(),
+            pool.sessions_established(),
+            pool.warm_jobs(),
+            pool.jobs_run(),
+            pool.retried_jobs(),
+            pool.init_bytes_total()
+        );
+    }
     // A batch with refused or failed work is not a success: exit nonzero
     // so CI and scripts notice, after the full accounting has printed.
     if queue.rejected() > 0 || queue.failed() > 0 {
@@ -259,6 +362,119 @@ fn cmd_submit(args: &Args) -> greedyml::Result<()> {
     Ok(())
 }
 
+/// Ship the batch to a `greedyml gateway` daemon and stream results back
+/// as they complete — completion order, not submission order, because the
+/// daemon runs admitted jobs concurrently.  The problem is built daemon-side
+/// from the shipped spec, so this process never touches the dataset.
+fn submit_gateway(cfg: &Config, batch: &JobBatch, addr: &str, json: bool) -> greedyml::Result<()> {
+    let jobs = batch.jobs();
+    if !json {
+        println!(
+            "submitting {} jobs to gateway {addr} (fleet {}×b{})",
+            jobs.len(),
+            batch.machines,
+            batch.branching
+        );
+    }
+    let mut client = GatewayClient::connect(addr)?;
+    for (id, &(seed, k)) in jobs.iter().enumerate() {
+        let dist = batch.dist_config(cfg, k, seed);
+        client.submit(&JobSpec::from_dist(id as u64, &dist)?)?;
+    }
+    if !json {
+        println!("{:>6} {:>6}  {:<8} {}", "k", "seed", "status", "value");
+    }
+    let mut rows: Vec<Option<Json>> = vec![None; jobs.len()];
+    let mut pending = jobs.len();
+    let (mut rejected, mut failed) = (0u64, 0u64);
+    while pending > 0 {
+        let (id, status, value, faults, detail) = match client.next()? {
+            // Admission acks are bookkeeping, not terminal outcomes.
+            FromGateway::Accepted { .. } => continue,
+            FromGateway::Result { id, value, warm, cached, faults, .. } => {
+                let status = match (cached, warm) {
+                    (true, _) => "cached",
+                    (false, true) => "warm",
+                    (false, false) => "cold",
+                };
+                (id, status, Some(value), faults, String::new())
+            }
+            FromGateway::Rejected { id, reason } => {
+                rejected += 1;
+                (id, "rejected", None, String::new(), reason)
+            }
+            FromGateway::Failed { id, error } => {
+                failed += 1;
+                (id, "failed", None, String::new(), error)
+            }
+            other => anyhow::bail!("unexpected gateway frame {other:?}"),
+        };
+        let &(seed, k) = jobs
+            .get(id as usize)
+            .ok_or_else(|| anyhow::anyhow!("gateway answered unknown job id {id}"))?;
+        if !json {
+            match value {
+                Some(v) => println!("{k:>6} {seed:>6}  {status:<8} {v:.6}"),
+                None => println!("{k:>6} {seed:>6}  {status:<8} — {detail}"),
+            }
+            if !faults.is_empty() {
+                println!("{:>6} {:>6}  faults: {faults}", "", "");
+            }
+        }
+        if rows[id as usize].is_none() {
+            pending -= 1;
+        }
+        rows[id as usize] = Some(job_row(id, k, seed, status, value, &faults, &detail));
+    }
+    // Daemon-wide tallies: they cover every client of this gateway, not
+    // just the batch we shipped.
+    client.request_stats()?;
+    let snap = loop {
+        match client.next()? {
+            FromGateway::Stats(s) => break s,
+            FromGateway::Accepted { .. } => continue,
+            other => anyhow::bail!("expected stats from the gateway, got {other:?}"),
+        }
+    };
+    if json {
+        let counters = queue_counters(
+            snap.submitted,
+            snap.cached,
+            snap.rejected,
+            snap.failed,
+            snap.warm,
+            snap.init_bytes,
+        );
+        let jobs_json: Vec<Json> = rows.into_iter().flatten().collect();
+        let doc = Json::obj([("jobs", Json::Arr(jobs_json)), ("queue", counters)]);
+        println!("{}", doc.to_pretty());
+    } else {
+        println!(
+            "gateway: {} submitted, {} cached, {} rejected, {} failed; fleet: {} sessions \
+             established, {} warm jobs, {} init bytes shipped",
+            snap.submitted,
+            snap.cached,
+            snap.rejected,
+            snap.failed,
+            snap.sessions,
+            snap.warm,
+            snap.init_bytes
+        );
+    }
+    // Same contract as the local path: refused or failed work exits
+    // nonzero after the accounting has printed.
+    if rejected > 0 || failed > 0 {
+        anyhow::bail!(
+            "{} of {} jobs did not complete ({} rejected by admission, {} failed)",
+            rejected + failed,
+            jobs.len(),
+            rejected,
+            failed
+        );
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> greedyml::Result<()> {
     args.check_known(&["bind"])?;
     // 127.0.0.1:0 binds an ephemeral port and prints it — handy for tests
@@ -266,6 +482,23 @@ fn cmd_serve(args: &Args) -> greedyml::Result<()> {
     // `--bind 0.0.0.0:<port>`.
     let bind = args.get("bind").unwrap_or("127.0.0.1:0");
     greedyml::dist::tcp::run_serve(bind)
+}
+
+fn cmd_gateway(args: &Args) -> greedyml::Result<()> {
+    args.check_known(&["bind", "workers", "mem-budget", "cache-entries"])?;
+    // Same ephemeral-port convention as `serve`: --bind 127.0.0.1:0 picks a
+    // free port and the banner prints the resolved address.
+    let bind = args.get("bind").unwrap_or("127.0.0.1:0").to_string();
+    let workers = args.u64_or("workers", 4)? as usize;
+    // No --mem-budget means unlimited admission, mirroring `jobs.mem_budget`.
+    let mem_budget = match args.get("mem-budget") {
+        None | Some("none") => None,
+        Some(_) => Some(args.u64_or("mem-budget", 0)?),
+    };
+    let default_cache = greedyml::coordinator::jobs::DEFAULT_CACHE_ENTRIES as u64;
+    let cache_entries = args.u64_or("cache-entries", default_cache)? as usize;
+    let gc = greedyml::coordinator::GatewayConfig { bind, workers, mem_budget, cache_entries };
+    greedyml::coordinator::run_gateway(&gc)
 }
 
 fn cmd_tree(args: &Args) -> greedyml::Result<()> {

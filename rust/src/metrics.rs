@@ -1,9 +1,11 @@
 //! Run-level metric reporting: turning [`DistOutcome`]s into the rows the
 //! paper's tables and figures print, plus JSON export for machine-readable
-//! results.
+//! results — and the gateway daemon's live counters
+//! ([`GatewayCounters`] / [`GatewaySnapshot`]).
 
 use crate::algo::DistOutcome;
 use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// A named experiment measurement (one table row / figure point).
 #[derive(Clone, Debug)]
@@ -126,6 +128,103 @@ impl RunReport {
             ("comm_secs", Json::from(self.comm_secs)),
             ("peak_mem", Json::from(self.peak_mem)),
             ("faults", self.faults.clone().map_or(Json::Null, Json::from)),
+        ])
+    }
+}
+
+/// Live counters of a running gateway daemon, bumped lock-free by its
+/// connection and worker threads (relaxed ordering — each counter is an
+/// independent tally, not a synchronization point).  `queued`/`running`
+/// are gauges of in-flight work; the rest are monotone totals.  Exported
+/// over the wire as a [`GatewaySnapshot`].
+#[derive(Debug, Default)]
+pub struct GatewayCounters {
+    /// Jobs accepted and waiting for a worker thread.
+    pub queued: AtomicU64,
+    /// Jobs currently executing on a worker thread.
+    pub running: AtomicU64,
+    /// Jobs that reached a `result` frame (fresh or cached).
+    pub completed: AtomicU64,
+    /// Completed jobs served by a reused warm fleet.
+    pub warm: AtomicU64,
+    /// Completed jobs answered from the solution cache.
+    pub cached: AtomicU64,
+    /// Jobs refused by admission control (post-accept rejections only —
+    /// malformed specs bounce before they are queued and are not
+    /// counted).
+    pub rejected: AtomicU64,
+    /// Jobs that errored in flight.
+    pub failed: AtomicU64,
+    /// Completed jobs whose run survived worker faults.
+    pub faulted: AtomicU64,
+}
+
+impl GatewayCounters {
+    /// A point-in-time copy.  The queue-level fields (`submitted`,
+    /// `sessions`, `init_bytes`) are zero here — the daemon fills them
+    /// from its [`JobQueue`](crate::coordinator::JobQueue) before
+    /// answering a `stats` request, since they live in the queue and the
+    /// session pool rather than in these counters.
+    pub fn snapshot(&self) -> GatewaySnapshot {
+        GatewaySnapshot {
+            queued: self.queued.load(Ordering::Relaxed),
+            running: self.running.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            warm: self.warm.load(Ordering::Relaxed),
+            cached: self.cached.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            faulted: self.faulted.load(Ordering::Relaxed),
+            submitted: 0,
+            sessions: 0,
+            init_bytes: 0,
+        }
+    }
+}
+
+/// A point-in-time view of a gateway daemon's counters: what a `stats`
+/// frame carries and what `submit --json` prints as queue totals.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GatewaySnapshot {
+    /// Jobs accepted and waiting for a worker thread.
+    pub queued: u64,
+    /// Jobs currently executing.
+    pub running: u64,
+    /// Jobs that reached a `result` frame.
+    pub completed: u64,
+    /// Completed jobs served by a reused warm fleet.
+    pub warm: u64,
+    /// Completed jobs answered from the solution cache.
+    pub cached: u64,
+    /// Jobs refused by admission control.
+    pub rejected: u64,
+    /// Jobs that errored in flight.
+    pub failed: u64,
+    /// Completed jobs whose run survived worker faults.
+    pub faulted: u64,
+    /// Jobs the shared queue has seen (including cache hits).
+    pub submitted: u64,
+    /// Worker sessions the pool established over its lifetime.
+    pub sessions: u64,
+    /// Bytes of problem data shipped establishing those sessions.
+    pub init_bytes: u64,
+}
+
+impl GatewaySnapshot {
+    /// JSON export (`submit --json` queue block, dashboards).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("queued", Json::from(self.queued)),
+            ("running", Json::from(self.running)),
+            ("completed", Json::from(self.completed)),
+            ("warm", Json::from(self.warm)),
+            ("cached", Json::from(self.cached)),
+            ("rejected", Json::from(self.rejected)),
+            ("failed", Json::from(self.failed)),
+            ("faulted", Json::from(self.faulted)),
+            ("submitted", Json::from(self.submitted)),
+            ("sessions", Json::from(self.sessions)),
+            ("init_bytes", Json::from(self.init_bytes)),
         ])
     }
 }
@@ -307,6 +406,33 @@ mod tests {
         let fig6 = std::fs::read_to_string(format!("{dir}/fig6_strong_scaling.csv")).unwrap();
         assert!(fig6.contains(",0.51,"), "total_secs = comp + comm");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gateway_counters_snapshot_copies_every_tally() {
+        let c = GatewayCounters::default();
+        c.queued.fetch_add(3, Ordering::Relaxed);
+        c.running.fetch_add(2, Ordering::Relaxed);
+        c.completed.fetch_add(9, Ordering::Relaxed);
+        c.warm.fetch_add(5, Ordering::Relaxed);
+        c.cached.fetch_add(4, Ordering::Relaxed);
+        c.rejected.fetch_add(1, Ordering::Relaxed);
+        c.failed.fetch_add(1, Ordering::Relaxed);
+        c.faulted.fetch_add(1, Ordering::Relaxed);
+        let s = c.snapshot();
+        assert_eq!(s.queued, 3);
+        assert_eq!(s.running, 2);
+        assert_eq!(s.completed, 9);
+        assert_eq!(s.warm, 5);
+        assert_eq!(s.cached, 4);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.faulted, 1);
+        assert_eq!(s.submitted, 0, "queue-level fields are filled by the daemon");
+        let j = s.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("completed").unwrap().as_u64(), Some(9));
+        assert_eq!(parsed.get("init_bytes").unwrap().as_u64(), Some(0));
     }
 
     #[test]

@@ -540,7 +540,7 @@ fn warm_process_fleet_matches_cold_and_thread_bit_for_bit() {
     // never results.
     let parsed = Config::parse(COVERAGE_SPEC).unwrap();
     let problem = build_problem(&parsed, None).unwrap();
-    let mut pool = SessionPool::new();
+    let pool = SessionPool::new();
     for (i, k) in [6usize, 10].into_iter().enumerate() {
         let spec = format!("{}problem.k = {k}\n", problem_spec(&parsed));
         let spec_cfg = Config::parse(&spec).unwrap();
@@ -551,7 +551,7 @@ fn warm_process_fleet_matches_cold_and_thread_bit_for_bit() {
             worker_bin: Some(worker_bin()),
             ..DistConfig::greedyml(AccumulationTree::new(4, 2), 42)
         };
-        let pooled = run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), &cfg, &mut pool)
+        let pooled = run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), &cfg, &pool)
             .expect("pooled run");
         assert_eq!(pool.last_was_warm(), i > 0, "first job establishes, later jobs reuse");
         let cold = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &cfg).expect("cold run");
@@ -575,7 +575,7 @@ fn warm_tcp_partition_fleet_ships_shards_once_and_stays_bit_identical() {
     let parsed = Config::parse(COVERAGE_SPEC).unwrap();
     let problem = build_problem(&parsed, None).unwrap();
     let fleet: Vec<ServeDaemon> = (0..2).map(|_| ServeDaemon::spawn()).collect();
-    let mut pool = SessionPool::new();
+    let pool = SessionPool::new();
     let mut shipped_once = 0u64;
     for (i, k) in [6usize, 10].into_iter().enumerate() {
         let spec = format!("{}problem.k = {k}\n", problem_spec(&parsed));
@@ -587,7 +587,7 @@ fn warm_tcp_partition_fleet_ships_shards_once_and_stays_bit_identical() {
             problem: Some(spec),
             ..tcp_cfg(&base, &parsed, &fleet)
         };
-        let pooled = run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), &cfg, &mut pool)
+        let pooled = run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), &cfg, &pool)
             .expect("warm tcp run");
         if i == 0 {
             shipped_once = pool.init_bytes_total();
@@ -614,19 +614,19 @@ fn tcp_daemon_death_between_jobs_poisons_the_session_and_the_pool_recovers() {
     let parsed = Config::parse(COVERAGE_SPEC).unwrap();
     let problem = build_problem(&parsed, None).unwrap();
     let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
-    let mut pool = SessionPool::new();
+    let pool = SessionPool::new();
     let base = DistConfig::greedyml(AccumulationTree::new(2, 2), 11);
 
     let mut daemons = vec![ServeDaemon::spawn()];
     let cfg = tcp_cfg(&base, &parsed, &daemons);
-    let first = run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), &cfg, &mut pool)
+    let first = run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), &cfg, &pool)
         .expect("first job");
     assert_eq!(pool.sessions_established(), 1);
 
     daemons[0].child.kill().unwrap();
     daemons[0].child.wait().unwrap();
 
-    let err = run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), &cfg, &mut pool)
+    let err = run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), &cfg, &pool)
         .expect_err("a dead resident session must error, not hang");
     assert!(matches!(err, DistError::Transport { .. }), "{err}");
     assert_eq!(pool.jobs_run(), 2);
@@ -634,7 +634,7 @@ fn tcp_daemon_death_between_jobs_poisons_the_session_and_the_pool_recovers() {
 
     let daemons = vec![ServeDaemon::spawn()];
     let cfg = tcp_cfg(&base, &parsed, &daemons);
-    let third = run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), &cfg, &mut pool)
+    let third = run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), &cfg, &pool)
         .expect("recovered job on a fresh fleet");
     assert_eq!(pool.sessions_established(), 2, "recovery re-establishes from scratch");
     assert_eq!(third.solution, first.solution);

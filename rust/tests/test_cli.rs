@@ -213,6 +213,75 @@ fn run_command_with_partition_shipping_matches_thread() {
 }
 
 #[test]
+fn submit_command_gateway_json_matches_local_json() {
+    use std::io::{BufRead, BufReader};
+    use std::process::Stdio;
+    // One [jobs] batch through a live gateway daemon and through the
+    // in-process queue: the per-job `--json` records must agree, id for
+    // id and bit for bit.  Status words are not compared — the gateway
+    // schedules concurrently, so its warm/cold split may legitimately
+    // differ from the sequential local run's.
+    let dir = std::env::temp_dir();
+    let cfg = dir.join("greedyml_cli_gateway.toml");
+    std::fs::write(
+        &cfg,
+        "[dataset]\nkind = retail\nn = 300\nseed = 2\n\
+         [jobs]\nks = 4, 8\nseeds = 5, 6\nmachines = 4\nbackend = thread\n",
+    )
+    .unwrap();
+    let mut daemon = bin()
+        .args(["gateway", "--bind", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .spawn()
+        .unwrap();
+    let mut banner = String::new();
+    BufReader::new(daemon.stdout.as_mut().unwrap()).read_line(&mut banner).unwrap();
+    let addr = banner.trim().rsplit(' ').next().unwrap_or_default().to_string();
+    assert!(banner.contains("listening on") && addr.contains(':'), "{banner:?}");
+
+    let submit = |extra: &[&str]| {
+        let mut args = vec!["submit", "--config", cfg.to_str().unwrap(), "--json"];
+        args.extend_from_slice(extra);
+        let out = bin().args(&args).output().unwrap();
+        assert!(out.status.success(), "{extra:?}: {}", String::from_utf8_lossy(&out.stderr));
+        greedyml::util::json::Json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap()
+    };
+    let local = submit(&[]);
+    let remote = submit(&["--gateway", &addr]);
+    let _ = daemon.kill();
+    let _ = daemon.wait();
+
+    let rows = |doc: &greedyml::util::json::Json| {
+        doc.get("jobs")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|r| {
+                (
+                    r.get("id").unwrap().as_u64().unwrap(),
+                    r.get("k").unwrap().as_u64().unwrap(),
+                    r.get("seed").unwrap().as_u64().unwrap(),
+                    r.get("value").unwrap().as_f64().unwrap().to_bits(),
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(rows(&local), rows(&remote), "gateway and local runs must agree per job");
+    // The queue blocks carry the same six counters on both paths; the
+    // daemon was fresh, so its daemon-wide tallies equal this batch's.
+    for doc in [&local, &remote] {
+        let q = doc.get("queue").unwrap();
+        assert_eq!(q.get("submitted").unwrap().as_u64().unwrap(), 4);
+        assert_eq!(q.get("cached").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(q.get("rejected").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(q.get("failed").unwrap().as_u64().unwrap(), 0);
+        assert!(q.get("warm_jobs").is_some() && q.get("init_bytes_total").is_some());
+    }
+    std::fs::remove_file(&cfg).ok();
+}
+
+#[test]
 fn sweep_command_emits_figure_csvs() {
     let dir = std::env::temp_dir();
     let cfg = dir.join("greedyml_cli_sweep_csv.toml");

@@ -1,0 +1,230 @@
+//! The gateway daemon end to end, over real processes and real sockets:
+//! a `greedyml gateway` binary schedules concurrent clients' jobs onto
+//! live `greedyml serve` worker daemons, and every answer must be
+//! bit-identical to the same job run directly on the thread backend —
+//! the backend-parity guarantee extended through the network front door.
+//!
+//! Fault isolation is the second contract under test: one client's
+//! worker fleet dying (scripted via a `GREEDYML_FAULT_PLAN` on its
+//! daemon) must not poison another client's in-flight job, and must not
+//! kill the gateway.
+
+use greedyml::algo::{run_dist, DistConfig};
+use greedyml::coordinator::experiment::build_constraint;
+use greedyml::coordinator::gateway::FromGateway;
+use greedyml::coordinator::{build_problem, GatewayClient, JobSpec};
+use greedyml::dist::BackendSpec;
+use greedyml::tree::AccumulationTree;
+use greedyml::util::config::Config;
+use greedyml::ElemId;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+
+/// One spawned `greedyml` daemon (`serve` or `gateway`) on an ephemeral
+/// localhost port, killed on drop.  Never inherits this process's
+/// `GREEDYML_FAULT_PLAN`: only the daemons given a plan explicitly are
+/// doomed.
+struct Daemon {
+    child: Child,
+    addr: String,
+}
+
+impl Daemon {
+    fn spawn(args: &[&str], env: &[(&str, &str)]) -> Self {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_greedyml"));
+        cmd.args(args).env_remove("GREEDYML_FAULT_PLAN").stdout(Stdio::piped());
+        for (k, v) in env {
+            cmd.env(k, v);
+        }
+        let mut child = cmd.spawn().expect("spawn greedyml daemon");
+        let mut line = String::new();
+        BufReader::new(child.stdout.as_mut().expect("piped stdout"))
+            .read_line(&mut line)
+            .expect("read listen banner");
+        let addr = line.trim().rsplit(' ').next().unwrap_or_default().to_string();
+        assert!(
+            line.contains("listening on") && addr.contains(':'),
+            "unexpected daemon banner: {line:?}"
+        );
+        Daemon { child, addr }
+    }
+
+    fn serve(env: &[(&str, &str)]) -> Self {
+        Self::spawn(&["serve", "--bind", "127.0.0.1:0"], env)
+    }
+
+    fn gateway() -> Self {
+        Self::spawn(&["gateway", "--bind", "127.0.0.1:0", "--workers", "2"], &[])
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spec_with_k(k: usize) -> String {
+    format!("dataset.kind = retail\ndataset.n = 400\ndataset.seed = 2\nproblem.k = {k}\n")
+}
+
+/// A 4×b2 job over `spec`; `hosts`/`seed` are patched per test via
+/// struct update.
+fn job(id: u64, spec: &str, backend: &str, on_fault: &str) -> JobSpec {
+    JobSpec {
+        id,
+        spec: spec.to_string(),
+        seed: 42,
+        machines: 4,
+        branching: 2,
+        backend: backend.to_string(),
+        ship: "auto".to_string(),
+        hosts: None,
+        threads: 2,
+        local_view: false,
+        on_fault: on_fault.to_string(),
+    }
+}
+
+/// The ground truth: the same job run directly on the thread backend.
+fn direct_thread_run(spec: &str, seed: u64) -> (Vec<ElemId>, f64) {
+    let cfg = Config::parse(spec).unwrap();
+    let problem = build_problem(&cfg, None).unwrap();
+    let (constraint, _k) = build_constraint(&cfg, problem.oracle.n()).unwrap();
+    let dist = DistConfig {
+        backend: BackendSpec::Thread,
+        ..DistConfig::greedyml(AccumulationTree::new(4, 2), seed)
+    };
+    let out = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &dist).unwrap();
+    (out.solution, out.value)
+}
+
+/// Drain acks until the next terminal frame (result/rejected/failed).
+fn next_terminal(client: &mut GatewayClient) -> FromGateway {
+    loop {
+        match client.next().expect("gateway reply") {
+            FromGateway::Accepted { .. } => continue,
+            other => return other,
+        }
+    }
+}
+
+#[test]
+fn concurrent_clients_get_bit_identical_answers_and_share_the_cache() {
+    // Two serve daemons form the worker fleet; one gateway schedules two
+    // clients' tcp-backend jobs onto it concurrently (two scheduler
+    // workers, two different ks so neither is a cache hit of the other).
+    // Each client then resubmits its job verbatim and must be answered
+    // from the shared solution cache, bit-identically.
+    let serve_a = Daemon::serve(&[]);
+    let serve_b = Daemon::serve(&[]);
+    let gateway = Daemon::gateway();
+    let hosts = vec![serve_a.addr.clone(), serve_b.addr.clone()];
+
+    let clients: Vec<_> = [6usize, 9]
+        .into_iter()
+        .map(|k| {
+            let addr = gateway.addr.clone();
+            let hosts = hosts.clone();
+            std::thread::spawn(move || {
+                let spec = spec_with_k(k);
+                let mut client = GatewayClient::connect(&addr).unwrap();
+                let fresh = JobSpec { hosts: Some(hosts), ..job(0, &spec, "tcp", "fail") };
+                client.submit(&fresh).unwrap();
+                let (solution, value) = match next_terminal(&mut client) {
+                    FromGateway::Result { solution, value, cached: false, faults, .. } => {
+                        assert!(faults.is_empty(), "clean run, no faults: {faults}");
+                        (solution, value)
+                    }
+                    other => panic!("k={k}: expected a fresh result, got {other:?}"),
+                };
+                client.submit(&JobSpec { id: 1, ..fresh }).unwrap();
+                match next_terminal(&mut client) {
+                    FromGateway::Result { id: 1, solution: s, value: v, cached: true, .. } => {
+                        assert_eq!(s, solution, "k={k}: cache replays the solution");
+                        assert_eq!(v.to_bits(), value.to_bits(), "k={k}: cache replays f(S)");
+                    }
+                    other => panic!("k={k}: expected a cached result, got {other:?}"),
+                }
+                (k, solution, value)
+            })
+        })
+        .collect();
+
+    for handle in clients {
+        let (k, solution, value) = handle.join().expect("client thread");
+        let (direct_sol, direct_val) = direct_thread_run(&spec_with_k(k), 42);
+        assert_eq!(solution, direct_sol, "k={k}: gateway answer matches the thread backend");
+        assert_eq!(value.to_bits(), direct_val.to_bits(), "k={k}: f(S) is bit-identical");
+    }
+}
+
+#[test]
+fn a_killed_fleet_is_one_jobs_problem_not_the_daemons() {
+    // Machines 1 and 3 of the faulted client's fleet land on the doomed
+    // daemon (round-robin over the hosts ring); its plan kills machine
+    // 1's session at its Leaf command.  Under `on_fault = retry` the
+    // session pool migrates the dead machine to the next host in the
+    // ring — the healthy daemon — and the answer must not change.  A
+    // bystander client's thread-backend job in flight at the same time
+    // (different seed, so the shared cache cannot serve it) must be
+    // untouched, and the gateway must survive to serve a third job.
+    let healthy = Daemon::serve(&[]);
+    let doomed = Daemon::serve(&[("GREEDYML_FAULT_PLAN", "kill:m1@leaf")]);
+    let gateway = Daemon::gateway();
+    let spec = spec_with_k(8);
+    let hosts = vec![healthy.addr.clone(), doomed.addr.clone()];
+
+    let faulted = std::thread::spawn({
+        let addr = gateway.addr.clone();
+        let (spec, hosts) = (spec.clone(), hosts.clone());
+        move || {
+            let mut client = GatewayClient::connect(&addr).unwrap();
+            let tcp_job = JobSpec { hosts: Some(hosts), ..job(0, &spec, "tcp", "retry") };
+            client.submit(&tcp_job).unwrap();
+            next_terminal(&mut client)
+        }
+    });
+    let bystander = std::thread::spawn({
+        let addr = gateway.addr.clone();
+        let spec = spec.clone();
+        move || {
+            let mut client = GatewayClient::connect(&addr).unwrap();
+            let clean = JobSpec { seed: 7, ..job(0, &spec, "thread", "fail") };
+            client.submit(&clean).unwrap();
+            next_terminal(&mut client)
+        }
+    });
+
+    let (retry_sol, retry_val) = direct_thread_run(&spec, 42);
+    match faulted.join().expect("faulted client thread") {
+        FromGateway::Result { solution, value, faults, .. } => {
+            assert_eq!(solution, retry_sol, "retry must not change the answer");
+            assert_eq!(value.to_bits(), retry_val.to_bits());
+            assert!(!faults.is_empty(), "the survived fault must be accounted");
+        }
+        other => panic!("faulted client expected a result, got {other:?}"),
+    }
+    let (clean_sol, clean_val) = direct_thread_run(&spec, 7);
+    match bystander.join().expect("bystander client thread") {
+        FromGateway::Result { solution, value, faults, .. } => {
+            assert_eq!(solution, clean_sol, "the bystander's answer is its own");
+            assert_eq!(value.to_bits(), clean_val.to_bits());
+            assert!(faults.is_empty(), "the bystander saw no fault: {faults}");
+        }
+        other => panic!("bystander expected a result, got {other:?}"),
+    }
+
+    let mut client = GatewayClient::connect(&gateway.addr).unwrap();
+    let probe = JobSpec { seed: 11, ..job(2, &spec, "thread", "fail") };
+    client.submit(&probe).unwrap();
+    let (third_sol, third_val) = direct_thread_run(&spec, 11);
+    match next_terminal(&mut client) {
+        FromGateway::Result { solution, value, .. } => {
+            assert_eq!(solution, third_sol, "the daemon still serves jobs after the fault");
+            assert_eq!(value.to_bits(), third_val.to_bits());
+        }
+        other => panic!("the daemon must survive a poisoned fleet, got {other:?}"),
+    }
+}
