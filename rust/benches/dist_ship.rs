@@ -8,15 +8,21 @@
 //! vs shard), the meter's per-worker peak, end-to-end wall time on the
 //! process backend, and the shard/full ratio checked against the ideal
 //! 1/m (the paper's whole premise, §1/§4.2: no machine holds the full
-//! dataset).  Flags: `--json` writes `BENCH_dist_ship.json`, `--tiny`
-//! shrinks sizes for the CI smoke invocation.
+//! dataset).  A third dimension is the wire encoding (v5): the same
+//! `init_part` frames are encoded under `--wire json` and `--wire
+//! binary` and the byte ratio asserted at ≤ 45% for coverage shards —
+//! the binary codec's compactness criterion lives here, the correctness
+//! battery in `rust/tests/test_wire_binary.rs`.  Flags: `--json` writes
+//! `BENCH_dist_ship.json`, `--tiny` shrinks sizes for the CI smoke
+//! invocation.
 
 #[path = "harness.rs"]
 mod harness;
 
 use greedyml::algo::{run_dist, run_dist_pooled, DistConfig, SessionPool};
 use greedyml::coordinator::{build_problem, experiment::build_constraint, problem_spec};
-use greedyml::dist::{BackendSpec, ShipSpec};
+use greedyml::dist::wire::{write_cmd, ToWorker};
+use greedyml::dist::{BackendSpec, ShipSpec, WireMode, WireSpec};
 use greedyml::tree::AccumulationTree;
 use greedyml::util::config::Config;
 use greedyml::util::json::Json;
@@ -59,6 +65,42 @@ fn main() {
         harness::shape_check(shard_mean, ideal, 2.0)
     );
 
+    // ---- wire encoding (v5): binary vs json init_part frames ------------
+    // The exact frames the coordinator puts on the wire under partition
+    // shipping — envelope plus shard, one per worker, through the same
+    // `write_cmd` the backends use.  The ≤ 45% bound for coverage shards
+    // is the binary codec's compactness criterion; the codec test suite
+    // checks correctness, not size, so the gate lives here.
+    let init_frames = |mode: WireMode| -> usize {
+        parts
+            .iter()
+            .enumerate()
+            .map(|(i, part)| {
+                let init = ToWorker::InitPart {
+                    session: 1,
+                    machine: i as u32,
+                    threads: 1,
+                    payload: p.extract_partition(part),
+                };
+                let mut buf = Vec::new();
+                write_cmd(&mut buf, &init, mode).expect("encode init_part");
+                buf.len()
+            })
+            .sum()
+    };
+    let json_wire_bytes = init_frames(WireMode::Json);
+    let binary_wire_bytes = init_frames(WireMode::Binary);
+    let wire_ratio = binary_wire_bytes as f64 / json_wire_bytes as f64;
+    println!(
+        "init_part frames, all {m} workers: json {json_wire_bytes} B, \
+         binary {binary_wire_bytes} B (ratio {wire_ratio:.2})"
+    );
+    assert!(
+        wire_ratio <= 0.45,
+        "binary init_part frames must stay at or under 45% of json for coverage \
+         shards, got {wire_ratio:.3}"
+    );
+
     // ---- end-to-end wall time on the process backend --------------------
     let base = DistConfig {
         problem: Some(shipped_spec.clone()),
@@ -86,6 +128,15 @@ fn main() {
         DistConfig {
             backend: BackendSpec::Process,
             ship: ShipSpec::Partition,
+            ..base.clone()
+        },
+    );
+    let t_bin = measure(
+        "process --wire binary",
+        DistConfig {
+            backend: BackendSpec::Process,
+            ship: ShipSpec::Partition,
+            wire: WireSpec::Binary,
             ..base.clone()
         },
     );
@@ -180,11 +231,15 @@ fn main() {
             ("partition_shard_bytes_max", Json::Num(shard_max as f64)),
             ("shard_over_full_ratio", Json::Num(shard_mean / full_bytes as f64)),
             ("ideal_ratio", Json::Num(1.0 / m as f64)),
+            ("init_json_wire_bytes", Json::Num(json_wire_bytes as f64)),
+            ("init_binary_wire_bytes", Json::Num(binary_wire_bytes as f64)),
+            ("binary_over_json_wire_ratio", Json::Num(wire_ratio)),
             ("peak_mem_bytes", Json::Num(peak_mem as f64)),
             ("value", Json::Num(value0)),
             ("thread_median_secs", Json::Num(t_thread.median)),
             ("spec_median_secs", Json::Num(t_spec.median)),
             ("partition_median_secs", Json::Num(t_part.median)),
+            ("binary_median_secs", Json::Num(t_bin.median)),
             ("warm_fleet_jobs", Json::Num(job_ks.len() as f64)),
             ("warm_init_bytes", Json::Num(warm_init as f64)),
             ("cold_init_bytes", Json::Num(cold_init as f64)),

@@ -23,7 +23,7 @@ use crate::constraint::Constraint;
 use crate::dist::{
     pool, tcp, AccumTask, Backend, BackendSpec, DistError, FaultPolicy, NodeParams, NodeStep,
     ProcessBackend, ResolvedBackend, ShipMode, ShipPlan, StepReport, TcpBackend, ThreadBackend,
-    Trace,
+    Trace, WireMode,
 };
 use crate::objective::{Oracle, PartitionPayload, Partitionable};
 use crate::tree::AccumulationTree;
@@ -107,6 +107,7 @@ pub fn run_dist(
         ResolvedBackend::Process => {
             let problem = problem_spec(cfg, "process")?;
             let fault = cfg.on_fault.resolve()?;
+            let wire = cfg.wire.resolve()?;
             let plan = ship_plan(oracle, cfg, &params, problem, &parts)?;
             let mut fleet = ProcessBackend::spawn(
                 cfg.tree.machines(),
@@ -116,6 +117,7 @@ pub fn run_dist(
                 cfg.worker_bin.as_deref(),
                 0,
                 fault,
+                wire,
             )?;
             fleet.begin_job(&params, problem)?;
             let out = run_dist_on(&mut fleet, cfg, parts);
@@ -125,6 +127,7 @@ pub fn run_dist(
         ResolvedBackend::Tcp => {
             let problem = problem_spec(cfg, "tcp")?;
             let fault = cfg.on_fault.resolve()?;
+            let wire = cfg.wire.resolve()?;
             let hosts = tcp_hosts(cfg)?;
             let plan = ship_plan(oracle, cfg, &params, problem, &parts)?;
             let mut fleet = TcpBackend::connect(
@@ -135,6 +138,7 @@ pub fn run_dist(
                 oracle.n(),
                 0,
                 fault,
+                wire,
             )?;
             fleet.begin_job(&params, problem)?;
             let out = run_dist_on(&mut fleet, cfg, parts);
@@ -267,6 +271,10 @@ fn make_parts(cfg: &DistConfig, n: usize) -> Vec<Vec<ElemId>> {
 struct SessionKey {
     backend: ResolvedBackend,
     ship: ShipMode,
+    /// Resolved frame encoding: a fleet whose workers adopted one mode at
+    /// session-open speaks it for the session's lifetime, so a job asking
+    /// for the other mode needs a fresh fleet.
+    wire: WireMode,
     tree: AccumulationTree,
     threads: usize,
     /// Canonical dataset/objective fingerprint — [`dataset_fingerprint`].
@@ -600,9 +608,11 @@ pub fn run_dist_pooled_tracked(
     };
     let problem = problem_spec(cfg, backend_name)?;
     let ship = cfg.ship.resolve()?;
+    let wire = cfg.wire.resolve()?;
     let key = SessionKey {
         backend: resolved,
         ship,
+        wire,
         tree: cfg.tree,
         threads: cfg.threads.unwrap_or(1),
         fingerprint: dataset_fingerprint(problem),
@@ -666,6 +676,7 @@ pub fn run_dist_pooled_tracked(
                 cfg.worker_bin.as_deref(),
                 session,
                 fault,
+                wire,
             )?),
             ResolvedBackend::Tcp => PoolFleet::Tcp(TcpBackend::connect(
                 key.hosts.as_deref().expect("tcp key carries hosts"),
@@ -675,6 +686,7 @@ pub fn run_dist_pooled_tracked(
                 oracle.n(),
                 session,
                 fault,
+                wire,
             )?),
             ResolvedBackend::Thread => unreachable!(),
         };

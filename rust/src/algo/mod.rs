@@ -14,7 +14,9 @@
 //! partition scheme, tree shape and argmax semantics, so comparisons
 //! measure the algorithmic difference and nothing else.
 
-use crate::dist::{BackendSpec, CommModel, FaultReport, FaultSpec, MachineStats, ShipSpec};
+use crate::dist::{
+    BackendSpec, CommModel, FaultReport, FaultSpec, MachineStats, ShipSpec, WireSpec,
+};
 use crate::greedy::GreedyKind;
 use crate::tree::AccumulationTree;
 use crate::ElemId;
@@ -115,6 +117,15 @@ pub struct DistConfig {
     /// `--on-fault`.  The thread backend cannot lose workers and ignores
     /// it.  See `docs/failure-model.md`.
     pub on_fault: FaultSpec,
+    /// How payload-bearing frames are encoded on the worker wire
+    /// ([`WireSpec::Json`]: serde_json everywhere, debuggable;
+    /// [`WireSpec::Binary`]: raw little-endian sections for `init_part`
+    /// and shipped solutions, control frames stay JSON).
+    /// [`WireSpec::Auto`] defers to the `GREEDYML_WIRE` environment
+    /// variable.  Config key `run.wire` (`sweep.wire` / `jobs.wire`) /
+    /// CLI flag `--wire`.  The thread backend ignores it; results are
+    /// bit-identical across modes.  See `docs/wire-protocol.md`.
+    pub wire: WireSpec,
 }
 
 impl DistConfig {
@@ -137,6 +148,7 @@ impl DistConfig {
             worker_bin: None,
             hosts: None,
             on_fault: FaultSpec::Auto,
+            wire: WireSpec::Auto,
         }
     }
 }

@@ -8,7 +8,7 @@ use crate::algo::{
     greedi_config, run_dist, run_sequential, randgreedi::RandGreediOpts, DistConfig,
 };
 use crate::constraint::{Cardinality, Constraint, PartitionMatroid};
-use crate::dist::{BackendSpec, FaultSpec, ShipSpec};
+use crate::dist::{BackendSpec, FaultSpec, ShipSpec, WireSpec};
 use crate::greedy::GreedyKind;
 use crate::metrics::RunReport;
 use crate::runtime::Engine;
@@ -101,6 +101,9 @@ pub struct Experiment {
     /// Worker-loss policy for remote backends (`run.on_fault` config key
     /// / `--on-fault` flag / `GREEDYML_ON_FAULT`): fail, retry, degrade.
     pub on_fault: FaultSpec,
+    /// Frame encoding on the worker wire (`run.wire` config key /
+    /// `--wire` flag / `GREEDYML_WIRE`): json or binary.
+    pub wire: WireSpec,
 }
 
 /// Build the constraint described by the `[problem]` section.  Shared by
@@ -145,6 +148,8 @@ impl Experiment {
             .map_err(|e| anyhow::anyhow!("run.ship: {e}"))?;
         let on_fault = FaultSpec::parse(cfg.str_or("run.on_fault", "auto"))
             .map_err(|e| anyhow::anyhow!("run.on_fault: {e}"))?;
+        let wire = WireSpec::parse(cfg.str_or("run.wire", "auto"))
+            .map_err(|e| anyhow::anyhow!("run.wire: {e}"))?;
         Ok(Self {
             name: cfg.str_or("name", "experiment").to_string(),
             problem,
@@ -164,6 +169,7 @@ impl Experiment {
             problem_spec: super::problem_spec(cfg),
             hosts: crate::dist::tcp::hosts_from_config(cfg, "run.hosts")?,
             on_fault,
+            wire,
         })
     }
 
@@ -175,6 +181,7 @@ impl Experiment {
         cfg.threads = cfg.threads.or(self.threads);
         cfg.hosts = self.hosts.clone();
         cfg.on_fault = self.on_fault;
+        cfg.wire = self.wire;
         cfg
     }
 

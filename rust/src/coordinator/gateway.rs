@@ -52,7 +52,7 @@ use super::jobs::Submission;
 use super::{BuiltProblem, JobQueue};
 use crate::algo::{dataset_fingerprint, DistConfig};
 use crate::dist::wire::{read_frame, write_frame};
-use crate::dist::{BackendSpec, FaultSpec, ShipSpec};
+use crate::dist::{BackendSpec, FaultSpec, ShipSpec, WireSpec};
 use crate::metrics::{GatewayCounters, GatewaySnapshot};
 use crate::tree::AccumulationTree;
 use crate::util::config::Config;
@@ -72,7 +72,11 @@ use std::time::Duration;
 /// instead of desyncing mid-stream.  Independent of the worker wire's
 /// [`crate::dist::wire::PROTOCOL_VERSION`] — the two protocols evolve
 /// separately.
-pub const GATEWAY_PROTOCOL_VERSION: u32 = 1;
+///
+/// * v1 — initial release: hello/submit/stats requests.
+/// * v2 — `submit` jobs carry a `wire` field (worker frame encoding,
+///   `--wire json|binary`).
+pub const GATEWAY_PROTOCOL_VERSION: u32 = 2;
 
 /// A client must complete the handshake within this window.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
@@ -128,6 +132,8 @@ pub struct JobSpec {
     pub local_view: bool,
     /// Worker-loss policy (`auto` | `fail` | `retry` | `degrade`).
     pub on_fault: String,
+    /// Worker frame encoding (`auto` | `json` | `binary`).
+    pub wire: String,
 }
 
 fn backend_str(b: BackendSpec) -> &'static str {
@@ -156,6 +162,14 @@ fn fault_str(f: FaultSpec) -> &'static str {
     }
 }
 
+fn wire_str(w: WireSpec) -> &'static str {
+    match w {
+        WireSpec::Auto => "auto",
+        WireSpec::Json => "json",
+        WireSpec::Binary => "binary",
+    }
+}
+
 impl JobSpec {
     /// Build from an engine config (the `submit --gateway` client path:
     /// [`JobBatch::dist_config`](super::JobBatch::dist_config) output).
@@ -177,6 +191,7 @@ impl JobSpec {
             threads: cfg.threads.unwrap_or(0) as u64,
             local_view: cfg.local_view,
             on_fault: fault_str(cfg.on_fault).to_string(),
+            wire: wire_str(cfg.wire).to_string(),
         })
     }
 
@@ -190,6 +205,8 @@ impl JobSpec {
             .map_err(|e| anyhow::anyhow!("job {}: ship: {e}", self.id))?;
         let on_fault = FaultSpec::parse(&self.on_fault)
             .map_err(|e| anyhow::anyhow!("job {}: on_fault: {e}", self.id))?;
+        let wire = WireSpec::parse(&self.wire)
+            .map_err(|e| anyhow::anyhow!("job {}: wire: {e}", self.id))?;
         anyhow::ensure!(self.machines >= 1, "job {}: need at least one machine", self.id);
         anyhow::ensure!(
             self.branching >= 2 || self.machines == 1,
@@ -207,6 +224,7 @@ impl JobSpec {
             },
             local_view: self.local_view,
             on_fault,
+            wire,
             ..DistConfig::greedyml(AccumulationTree::new(self.machines, self.branching), self.seed)
         })
     }
@@ -224,6 +242,7 @@ impl JobSpec {
             "threads": self.threads,
             "local_view": self.local_view,
             "on_fault": self.on_fault,
+            "wire": self.wire,
         })
     }
 
@@ -240,6 +259,7 @@ impl JobSpec {
             threads: u64_field(v, "threads")?,
             local_view: bool_field(v, "local_view")?,
             on_fault: str_field(v, "on_fault")?.to_string(),
+            wire: str_field(v, "wire")?.to_string(),
         })
     }
 }
@@ -819,6 +839,7 @@ mod tests {
             threads: 2,
             local_view: false,
             on_fault: "retry".to_string(),
+            wire: "binary".to_string(),
         }
     }
 
@@ -947,8 +968,8 @@ mod tests {
         let written = write_frame(&mut buf, &ToGateway::Stats.to_value()).unwrap();
         assert_eq!(
             buf,
-            [0x0d, 0x00, 0x00, 0x00, 0x7b, 0x22, 0x74, 0x22, 0x3a, 0x22, 0x73, 0x74, 0x61,
-             0x74, 0x73, 0x22, 0x7d],
+            [0x0d, 0x00, 0x00, 0x00, 0x01, 0x7b, 0x22, 0x74, 0x22, 0x3a, 0x22, 0x73, 0x74,
+             0x61, 0x74, 0x73, 0x22, 0x7d],
             "Stats frame no longer matches the hex dump in docs/gateway-protocol.md"
         );
         assert_eq!(written, buf.len() as u64, "write_frame must report the on-wire size");
@@ -956,15 +977,15 @@ mod tests {
 
     #[test]
     fn hello_frame_bytes_match_the_documented_hex_dump() {
-        // Pinned at v1 like the doc's dump — a version bump must touch
+        // Pinned at v2 like the doc's dump — a version bump must touch
         // the doc, this test, and GATEWAY_PROTOCOL_VERSION together.
         let mut buf = Vec::new();
-        write_frame(&mut buf, &ToGateway::Hello { version: 1 }.to_value()).unwrap();
+        write_frame(&mut buf, &ToGateway::Hello { version: 2 }.to_value()).unwrap();
         assert_eq!(
             buf,
-            [0x19, 0x00, 0x00, 0x00, 0x7b, 0x22, 0x74, 0x22, 0x3a, 0x22, 0x68, 0x65, 0x6c,
-             0x6c, 0x6f, 0x22, 0x2c, 0x22, 0x76, 0x65, 0x72, 0x73, 0x69, 0x6f, 0x6e, 0x22,
-             0x3a, 0x31, 0x7d],
+            [0x19, 0x00, 0x00, 0x00, 0x01, 0x7b, 0x22, 0x74, 0x22, 0x3a, 0x22, 0x68, 0x65,
+             0x6c, 0x6c, 0x6f, 0x22, 0x2c, 0x22, 0x76, 0x65, 0x72, 0x73, 0x69, 0x6f, 0x6e,
+             0x22, 0x3a, 0x32, 0x7d],
             "Hello frame no longer matches the hex dump in docs/gateway-protocol.md"
         );
     }

@@ -30,7 +30,7 @@
 use super::experiment::build_constraint;
 use super::BuiltProblem;
 use crate::algo::{dataset_fingerprint, run_dist_pooled_tracked, DistConfig, SessionPool};
-use crate::dist::{BackendSpec, FaultSpec, ShipSpec};
+use crate::dist::{BackendSpec, FaultSpec, ShipSpec, WireSpec};
 use crate::tree::AccumulationTree;
 use crate::util::config::Config;
 use crate::ElemId;
@@ -379,6 +379,10 @@ pub struct JobBatch {
     /// Worker-loss policy for remote backends (`jobs.on_fault`, default
     /// auto → `GREEDYML_ON_FAULT` → fail).
     pub on_fault: FaultSpec,
+    /// Frame encoding on the worker wire (`jobs.wire`, default auto →
+    /// `GREEDYML_WIRE` → json).  Deliberately *not* part of the job
+    /// cache key ([`job_key`]): results are bit-identical across modes.
+    pub wire: WireSpec,
 }
 
 impl JobBatch {
@@ -408,6 +412,8 @@ impl JobBatch {
         };
         let on_fault = FaultSpec::parse(cfg.str_or("jobs.on_fault", "auto"))
             .map_err(|e| anyhow::anyhow!("jobs.on_fault: {e}"))?;
+        let wire = WireSpec::parse(cfg.str_or("jobs.wire", "auto"))
+            .map_err(|e| anyhow::anyhow!("jobs.wire: {e}"))?;
         Ok(Self {
             ks,
             seeds,
@@ -425,6 +431,7 @@ impl JobBatch {
             cache_entries: cfg.u64_or("jobs.cache_entries", DEFAULT_CACHE_ENTRIES as u64)?
                 as usize,
             on_fault,
+            wire,
         })
     }
 
@@ -452,6 +459,7 @@ impl JobBatch {
             threads: self.threads,
             local_view: self.local_view,
             on_fault: self.on_fault,
+            wire: self.wire,
             ..DistConfig::greedyml(
                 AccumulationTree::new(self.machines, self.branching),
                 seed,

@@ -7,7 +7,7 @@ use super::experiment::AlgoSpec;
 use super::BuiltProblem;
 use crate::algo::{greedi_config, run_dist_pooled, run_sequential, DistConfig, SessionPool};
 use crate::constraint::Cardinality;
-use crate::dist::{BackendSpec, FaultReport, FaultSpec, ShipSpec};
+use crate::dist::{BackendSpec, FaultReport, FaultSpec, ShipSpec, WireSpec};
 use crate::greedy::GreedyKind;
 use crate::metrics::RunReport;
 use crate::tree::AccumulationTree;
@@ -42,6 +42,9 @@ pub struct Sweep {
     /// Worker-loss policy for remote backends (`sweep.on_fault` config
     /// key / `--on-fault` flag / `GREEDYML_ON_FAULT`).
     pub on_fault: FaultSpec,
+    /// Frame encoding on the worker wire (`sweep.wire` config key /
+    /// `--wire` flag / `GREEDYML_WIRE`).
+    pub wire: WireSpec,
 }
 
 impl Sweep {
@@ -73,6 +76,8 @@ impl Sweep {
             .map_err(|e| anyhow::anyhow!("sweep.ship: {e}"))?;
         let on_fault = FaultSpec::parse(cfg.str_or("sweep.on_fault", "auto"))
             .map_err(|e| anyhow::anyhow!("sweep.on_fault: {e}"))?;
+        let wire = WireSpec::parse(cfg.str_or("sweep.wire", "auto"))
+            .map_err(|e| anyhow::anyhow!("sweep.wire: {e}"))?;
         Ok(Self {
             ks,
             algos,
@@ -85,6 +90,7 @@ impl Sweep {
             problem_spec: super::problem_spec(cfg),
             hosts: crate::dist::tcp::hosts_from_config(cfg, "sweep.hosts")?,
             on_fault,
+            wire,
         })
     }
 
@@ -101,6 +107,7 @@ impl Sweep {
         dist.ship = self.ship;
         dist.hosts = self.hosts.clone();
         dist.on_fault = self.on_fault;
+        dist.wire = self.wire;
         dist
     }
 

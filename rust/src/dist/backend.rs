@@ -194,6 +194,66 @@ pub enum ShipMode {
     Partition,
 }
 
+/// How payload-bearing frames are encoded on the worker wire — the
+/// `--wire` flag / `run.wire` config key / `GREEDYML_WIRE` environment
+/// variable.  The thread backend shares one address space and ignores
+/// it; results are bit-identical across modes either way, so this only
+/// changes bytes-on-wire and decode cost, never the answer.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WireSpec {
+    /// Defer to `GREEDYML_WIRE` (`json` | `binary`), defaulting to
+    /// [`WireMode::Json`].
+    #[default]
+    Auto,
+    /// serde_json frames for every message (content type `0x01`) —
+    /// debuggable, replayable by hand.
+    Json,
+    /// Raw little-endian section frames (content type `0x02`) for the
+    /// payload-bearing messages (`init_part`, shipped solutions);
+    /// control frames stay JSON.
+    Binary,
+}
+
+impl WireSpec {
+    /// Parse a config/CLI token (`auto` | `json` | `binary`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" | "" => Ok(Self::Auto),
+            "json" => Ok(Self::Json),
+            "binary" | "bin" => Ok(Self::Binary),
+            other => Err(format!("unknown wire mode '{other}' (auto | json | binary)")),
+        }
+    }
+
+    /// Resolve `Auto` through `GREEDYML_WIRE`; an unparsable variable is
+    /// an error, not a silent fallback — a mis-spelt mode must not
+    /// quietly change what an experiment measured.
+    pub fn resolve(self) -> Result<WireMode, DistError> {
+        match self {
+            Self::Json => Ok(WireMode::Json),
+            Self::Binary => Ok(WireMode::Binary),
+            Self::Auto => match std::env::var("GREEDYML_WIRE") {
+                Err(_) => Ok(WireMode::Json),
+                Ok(v) => match Self::parse(&v) {
+                    Ok(Self::Binary) => Ok(WireMode::Binary),
+                    Ok(_) => Ok(WireMode::Json),
+                    Err(e) => Err(DistError::backend(format!("GREEDYML_WIRE: {e}"))),
+                },
+            },
+        }
+    }
+}
+
+/// A [`WireSpec`] with `Auto` already resolved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireMode {
+    /// JSON frames throughout (content type `0x01`).
+    Json,
+    /// Binary payload frames (content type `0x02`); control frames stay
+    /// JSON.
+    Binary,
+}
+
 /// What the coordinator ships a remote backend when the **session** is
 /// established: either the rebuild recipe for every worker, or the
 /// per-machine dataset shards (`payloads[i]` belongs to machine `i`).
@@ -441,5 +501,20 @@ mod tests {
     fn explicit_ship_specs_resolve_without_env() {
         assert_eq!(ShipSpec::Spec.resolve().unwrap(), ShipMode::Spec);
         assert_eq!(ShipSpec::Partition.resolve().unwrap(), ShipMode::Partition);
+    }
+
+    #[test]
+    fn wire_spec_parses_tokens() {
+        assert_eq!(WireSpec::parse("auto").unwrap(), WireSpec::Auto);
+        assert_eq!(WireSpec::parse(" Json ").unwrap(), WireSpec::Json);
+        assert_eq!(WireSpec::parse("binary").unwrap(), WireSpec::Binary);
+        assert_eq!(WireSpec::parse("bin").unwrap(), WireSpec::Binary);
+        assert!(WireSpec::parse("carrier-pigeon").is_err());
+    }
+
+    #[test]
+    fn explicit_wire_specs_resolve_without_env() {
+        assert_eq!(WireSpec::Json.resolve().unwrap(), WireMode::Json);
+        assert_eq!(WireSpec::Binary.resolve().unwrap(), WireMode::Binary);
     }
 }

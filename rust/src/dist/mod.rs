@@ -86,7 +86,7 @@ pub mod wire;
 
 pub use backend::{
     AccumTask, Backend, BackendOutcome, BackendSpec, ResolvedBackend, ShipMode, ShipPlan,
-    ShipSpec, ThreadBackend,
+    ShipSpec, ThreadBackend, WireMode, WireSpec,
 };
 pub use comm::CommModel;
 pub use error::DistError;

@@ -29,11 +29,11 @@
 //! shared with the tcp backend's `greedyml serve` daemon, which serves
 //! the same sessions over sockets.
 
-use super::backend::{AccumTask, Backend, BackendOutcome, ShipPlan};
+use super::backend::{AccumTask, Backend, BackendOutcome, ShipPlan, WireMode};
 use super::fault::{FaultAction, FaultPlan, FaultPoint, FaultPolicy};
 use super::node::{accum_step, leaf_step, ChildMsg, NodeParams, NodeState};
 use super::remote::{FramedWorker, RemoteFleet};
-use super::wire::{read_frame, write_frame, FromWorker, ToWorker};
+use super::wire::{read_cmd, read_session_init, write_frame, write_reply, FromWorker, ToWorker};
 use super::{pool, DistError};
 use crate::constraint::Constraint;
 use crate::objective::{Oracle, PartitionOracle};
@@ -88,6 +88,7 @@ impl Drop for Children {
 fn spawn_worker(
     bin: &std::path::Path,
     machine: MachineId,
+    wire: WireMode,
     scrub_fault_plan: bool,
 ) -> Result<(Child, FramedWorker<BufReader<ChildStdout>, BufWriter<ChildStdin>>), DistError> {
     let mut cmd = Command::new(bin);
@@ -100,7 +101,7 @@ fn spawn_worker(
         .map_err(|e| DistError::backend(format!("cannot spawn worker {}: {e}", bin.display())))?;
     let stdin = BufWriter::new(child.stdin.take().expect("piped stdin"));
     let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
-    Ok((child, FramedWorker::new(machine, stdout, stdin)))
+    Ok((child, FramedWorker::new(machine, stdout, stdin).with_mode(wire)))
 }
 
 /// The fleet driver over pipe transports.
@@ -138,12 +139,13 @@ impl ProcessBackend {
         worker_bin: Option<&str>,
         session: u64,
         fault: FaultPolicy,
+        wire: WireMode,
     ) -> Result<Self, DistError> {
         let bin = worker_binary(worker_bin)?;
         let children = Children(Arc::new(Mutex::new(Vec::with_capacity(machines as usize))));
         let mut workers = Vec::with_capacity(machines as usize);
         for machine in 0..machines {
-            let (child, worker) = spawn_worker(&bin, machine, false)?;
+            let (child, worker) = spawn_worker(&bin, machine, wire, false)?;
             children.0.lock().unwrap_or_else(|e| e.into_inner()).push(child);
             workers.push(worker);
         }
@@ -153,7 +155,7 @@ impl ProcessBackend {
             inner.supervise(
                 fault,
                 Box::new(move |machine, _attempt| {
-                    let (child, worker) = spawn_worker(&bin, machine, true)?;
+                    let (child, worker) = spawn_worker(&bin, machine, wire, true)?;
                     roster.lock().unwrap_or_else(|e| e.into_inner()).push(child);
                     Ok(worker)
                 }),
@@ -291,23 +293,27 @@ struct JobCtx {
 /// oracle — until `Release` or EOF.  The process backend runs this over a
 /// worker's stdio; the tcp backend's `greedyml serve` daemon runs it per
 /// accepted connection (after the `Hello`/`Welcome` version handshake).
+///
+/// The session adopts its **wire mode** from the opening frame's content
+/// type (a binary `init_part` ingests its shard incrementally via
+/// [`read_session_init`]'s streaming path) and mirrors that mode in its
+/// replies for the rest of the session.
 pub(crate) fn serve_session(
     input: &mut impl Read,
     output: &mut impl Write,
 ) -> crate::Result<()> {
-    let first = read_frame(input)
+    let (first, mode) = read_session_init(input)
         .map_err(|e| anyhow::anyhow!("{e}"))?
         .ok_or_else(|| anyhow::anyhow!("worker: EOF before init"))?;
-    let (machine, threads, built) =
-        match ToWorker::from_value(&first).map_err(|e| anyhow::anyhow!("{e}"))? {
-            ToWorker::Init { session: _, machine, threads, problem } => {
-                (machine, threads, build_worker_problem(&problem))
-            }
-            ToWorker::InitPart { session: _, machine, threads, payload } => {
-                (machine, threads, build_partition_problem(&payload))
-            }
-            _ => anyhow::bail!("worker: first frame must be init or init_part"),
-        };
+    let (machine, threads, built) = match first {
+        ToWorker::Init { session: _, machine, threads, problem } => {
+            (machine, threads, build_worker_problem(&problem))
+        }
+        ToWorker::InitPart { session: _, machine, threads, payload } => {
+            (machine, threads, build_partition_problem(&payload))
+        }
+        _ => anyhow::bail!("worker: first frame must be init or init_part"),
+    };
 
     // The deterministic fault-injection plan this session follows
     // (`GREEDYML_FAULT_PLAN`); an unparsable plan is a hard error — it
@@ -352,7 +358,7 @@ pub(crate) fn serve_session(
     // the machine-level parallelism lives in the worker fan-out, so one
     // thread per worker is the default.
     pool::with_pool(threads.max(1), |_exec| {
-        serve(input, output, &mut problem, machine, &mut fault)
+        serve(input, output, &mut problem, machine, mode, &mut fault)
     })
 }
 
@@ -404,6 +410,14 @@ fn reply(output: &mut impl Write, msg: &FromWorker) -> crate::Result<()> {
     write_frame(output, &msg.to_value()).map_err(|e| anyhow::anyhow!("{e}"))
 }
 
+/// Mode-aware reply for the messages that have a binary form (`Sol`):
+/// under a binary session the shipped solution — with its extracted data
+/// shard — travels as a binary frame; every other reply is JSON either
+/// way, so [`reply`] covers them.
+fn reply_in(output: &mut impl Write, msg: &FromWorker, mode: WireMode) -> crate::Result<()> {
+    write_reply(output, msg, mode).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
 /// The command loop: one superstep role per frame, grouped into jobs.
 /// All ids on the wire are global; under partition shipping the oracle
 /// facade translates to the shard's local dense space internally, and
@@ -421,16 +435,16 @@ fn serve(
     output: &mut impl Write,
     problem: &mut WorkerProblem,
     machine: MachineId,
+    mode: WireMode,
     fault: &mut Option<FaultPlan>,
 ) -> crate::Result<()> {
     let mut job: Option<JobCtx> = None;
     let mut state: Option<NodeState> = None;
     let mut pending: Option<(u32, Vec<ChildMsg>)> = None;
     loop {
-        let Some(frame) = read_frame(input).map_err(|e| anyhow::anyhow!("{e}"))? else {
+        let Some((cmd, _ctype)) = read_cmd(input).map_err(|e| anyhow::anyhow!("{e}"))? else {
             return Ok(()); // coordinator went away — exit quietly
         };
-        let cmd = ToWorker::from_value(&frame).map_err(|e| anyhow::anyhow!("{e}"))?;
         let point = match &cmd {
             ToWorker::Job { .. } => Some(FaultPoint::Job),
             ToWorker::Leaf { .. } => Some(FaultPoint::Superstep(0)),
@@ -532,7 +546,7 @@ fn serve(
                             }
                         }
                     }
-                    reply(output, &FromWorker::Sol(msg))?;
+                    reply_in(output, &FromWorker::Sol(msg), mode)?;
                 }
                 None => reply(
                     output,
@@ -664,6 +678,7 @@ fn serve(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dist::wire::{read_frame, read_reply, write_cmd};
     use crate::greedy::GreedyKind;
 
     fn params() -> NodeParams {
@@ -705,6 +720,7 @@ mod tests {
             Some("/nonexistent/greedyml-worker-binary"),
             0,
             FaultPolicy::Fail,
+            WireMode::Json,
         )
         .unwrap_err();
         match err {
@@ -737,7 +753,8 @@ mod tests {
         write_frame(&mut input, &ToWorker::JobDone.to_value()).unwrap();
         let mut output = Vec::new();
         let mut problem = spec_problem(oracle);
-        serve(&mut input.as_slice(), &mut output, &mut problem, 0, &mut None).unwrap();
+        serve(&mut input.as_slice(), &mut output, &mut problem, 0, WireMode::Json, &mut None)
+            .unwrap();
 
         let mut cursor = output.as_slice();
         expect_ready(&mut cursor, 100, "job ack");
@@ -789,7 +806,8 @@ mod tests {
         }
         let mut output = Vec::new();
         let mut problem = spec_problem(oracle);
-        serve(&mut input.as_slice(), &mut output, &mut problem, 0, &mut None).unwrap();
+        serve(&mut input.as_slice(), &mut output, &mut problem, 0, WireMode::Json, &mut None)
+            .unwrap();
 
         let mut cursor = output.as_slice();
         let mut finals = Vec::new();
@@ -828,7 +846,8 @@ mod tests {
         // Ship before leaf: the worker answers Fail and keeps serving
         // (the EOF after it ends the loop cleanly).
         let mut problem = spec_problem(oracle);
-        serve(&mut input.as_slice(), &mut output, &mut problem, 7, &mut None).unwrap();
+        serve(&mut input.as_slice(), &mut output, &mut problem, 7, WireMode::Json, &mut None)
+            .unwrap();
         let mut cursor = output.as_slice();
         let _ready = read_frame(&mut cursor).unwrap().unwrap();
         let v = read_frame(&mut cursor).unwrap().unwrap();
@@ -848,7 +867,8 @@ mod tests {
         write_frame(&mut input, &ToWorker::JobDone.to_value()).unwrap();
         let mut output = Vec::new();
         let mut problem = spec_problem(oracle);
-        serve(&mut input.as_slice(), &mut output, &mut problem, 3, &mut None).unwrap();
+        serve(&mut input.as_slice(), &mut output, &mut problem, 3, WireMode::Json, &mut None)
+            .unwrap();
         let mut cursor = output.as_slice();
         for want in ["leaf without an active job", "job_done before any superstep"] {
             let v = read_frame(&mut cursor).unwrap().unwrap();
@@ -909,6 +929,65 @@ mod tests {
     }
 
     #[test]
+    fn binary_session_adopts_the_wire_mode_and_ships_sol_in_binary() {
+        // The v5 wire end to end: a binary InitPart opens the session, so
+        // the worker answers the Ship with a binary Sol frame — control
+        // replies stay JSON under either mode.
+        let oracle = crate::objective::Modular::new(
+            (0..50).map(|i| i as f64 + 1.0).collect::<Vec<_>>(),
+        );
+        let p = crate::objective::Oracle::partitionable(&oracle).unwrap();
+        let payload = p.extract_partition(&[40, 7]);
+        let mut input = Vec::new();
+        let init = ToWorker::InitPart { session: 0, machine: 0, threads: 1, payload };
+        write_cmd(&mut input, &init, WireMode::Binary).unwrap();
+        write_cmd(
+            &mut input,
+            &job_frame(NodeParams { n: 50, ..params() }, "problem.k = 1\n"),
+            WireMode::Binary,
+        )
+        .unwrap();
+        write_cmd(&mut input, &ToWorker::Leaf { part: vec![40, 7] }, WireMode::Binary).unwrap();
+        write_cmd(&mut input, &ToWorker::Ship, WireMode::Binary).unwrap();
+        let mut output = Vec::new();
+        serve_session(&mut input.as_slice(), &mut output).unwrap();
+
+        // Frame-level: Ready, Ready, Step travel as JSON (0x01); the
+        // payload-bearing Sol is the only binary frame (0x02).
+        let mut ctypes = Vec::new();
+        let mut at = 0usize;
+        while at + 5 <= output.len() {
+            let len = u32::from_le_bytes(output[at..at + 4].try_into().unwrap()) as usize;
+            ctypes.push(output[at + 4]);
+            at += 5 + len;
+        }
+        assert_eq!(at, output.len(), "replies split cleanly into v5 frames");
+        assert_eq!(ctypes, vec![0x01, 0x01, 0x01, 0x02]);
+
+        // Message-level: read_reply decodes the mixed stream and the
+        // binary Sol matches what the JSON session produces.
+        let mut cursor = output.as_slice();
+        match read_reply(&mut cursor).unwrap().unwrap() {
+            FromWorker::Ready { n } => assert_eq!(n, 2, "session ack: shard size"),
+            other => panic!("expected ready, got {other:?}"),
+        }
+        match read_reply(&mut cursor).unwrap().unwrap() {
+            FromWorker::Ready { n } => assert_eq!(n, 50, "job ack: global ground set"),
+            other => panic!("expected ready, got {other:?}"),
+        }
+        assert!(matches!(read_reply(&mut cursor).unwrap().unwrap(), FromWorker::Step(_)));
+        match read_reply(&mut cursor).unwrap().unwrap() {
+            FromWorker::Sol(msg) => {
+                assert_eq!(msg.sol, vec![40]);
+                let data = msg.data.expect("partition mode ships solution data");
+                assert_eq!(data.elems, vec![40]);
+            }
+            other => panic!("expected sol, got {other:?}"),
+        }
+        assert!(read_reply(&mut cursor).unwrap().is_none(), "clean EOF after the Sol");
+    }
+
+    #[test]
     fn init_part_leaf_outside_the_shard_is_a_fail_not_a_panic() {
         let oracle = crate::objective::Modular::new(vec![1.0; 20]);
         let p = crate::objective::Oracle::partitionable(&oracle).unwrap();
@@ -961,7 +1040,8 @@ mod tests {
         write_frame(&mut input, &ToWorker::Ping.to_value()).unwrap();
         let mut output = Vec::new();
         let mut problem = spec_problem(oracle);
-        serve(&mut input.as_slice(), &mut output, &mut problem, 0, &mut None).unwrap();
+        serve(&mut input.as_slice(), &mut output, &mut problem, 0, WireMode::Json, &mut None)
+            .unwrap();
         let mut cursor = output.as_slice();
         let v = read_frame(&mut cursor).unwrap().unwrap();
         assert!(matches!(FromWorker::from_value(&v).unwrap(), FromWorker::Pong));
@@ -981,8 +1061,9 @@ mod tests {
         let mut output = Vec::new();
         let mut problem = spec_problem(oracle);
         let mut plan = Some(FaultPlan::parse("kill:m0@leaf").unwrap());
-        let err = serve(&mut input.as_slice(), &mut output, &mut problem, 0, &mut plan)
-            .unwrap_err();
+        let err =
+            serve(&mut input.as_slice(), &mut output, &mut problem, 0, WireMode::Json, &mut plan)
+                .unwrap_err();
         assert!(err.to_string().contains("fault-injected kill"), "{err}");
         let mut cursor = output.as_slice();
         expect_ready(&mut cursor, 100, "the job was still admitted");
@@ -1004,7 +1085,8 @@ mod tests {
         let mut output = Vec::new();
         let mut problem = spec_problem(oracle);
         let mut plan = Some(FaultPlan::parse("kill:m0@leaf").unwrap());
-        serve(&mut input.as_slice(), &mut output, &mut problem, 1, &mut plan).unwrap();
+        serve(&mut input.as_slice(), &mut output, &mut problem, 1, WireMode::Json, &mut plan)
+            .unwrap();
         let mut cursor = output.as_slice();
         expect_ready(&mut cursor, 100, "job ack");
         let step = read_frame(&mut cursor).unwrap().unwrap();
@@ -1024,7 +1106,8 @@ mod tests {
         let mut output = Vec::new();
         let mut problem = spec_problem(oracle);
         let mut plan = Some(FaultPlan::parse("drop-frame:m0@leaf").unwrap());
-        serve(&mut input.as_slice(), &mut output, &mut problem, 0, &mut plan).unwrap();
+        serve(&mut input.as_slice(), &mut output, &mut problem, 0, WireMode::Json, &mut plan)
+            .unwrap();
         let mut cursor = output.as_slice();
         let v = read_frame(&mut cursor).unwrap().unwrap();
         assert!(matches!(FromWorker::from_value(&v).unwrap(), FromWorker::Ready { .. }));

@@ -53,10 +53,10 @@
 //! machine's O(n/m) shard — the memory price of re-dispatch) and, only
 //! while supervised, logs the current job's commands per machine.
 
-use super::backend::{AccumTask, Backend, BackendOutcome, ShipPlan};
+use super::backend::{AccumTask, Backend, BackendOutcome, ShipPlan, WireMode};
 use super::fault::{FaultPolicy, FaultReport, RETRY_ATTEMPTS, RETRY_BACKOFF_BASE};
 use super::node::{ChildMsg, NodeParams, StepReport};
-use super::wire::{read_frame, write_frame, FromWorker, ToWorker};
+use super::wire::{read_reply, write_cmd, FromWorker, ToWorker};
 use super::{DistError, MachineStats};
 use crate::{ElemId, MachineId};
 use std::io::{Read, Write};
@@ -78,20 +78,29 @@ pub(crate) struct FramedWorker<R, W> {
     /// The machine this worker simulates (also its index in the fleet).
     pub machine: MachineId,
     peer: Option<String>,
+    /// Frame encoding for payload-bearing commands (`--wire`); results
+    /// are bit-identical either way.
+    mode: WireMode,
     reader: R,
     writer: W,
 }
 
 impl<R: Read, W: Write> FramedWorker<R, W> {
-    /// Wrap a worker's byte streams.
+    /// Wrap a worker's byte streams (JSON wire mode).
     pub fn new(machine: MachineId, reader: R, writer: W) -> Self {
-        Self { machine, peer: None, reader, writer }
+        Self { machine, peer: None, mode: WireMode::Json, reader, writer }
     }
 
     /// Label this worker with its transport endpoint (`host:port`) for
     /// error messages.
     pub fn with_peer(mut self, peer: impl Into<String>) -> Self {
         self.peer = Some(peer.into());
+        self
+    }
+
+    /// Select the wire mode for this worker's payload-bearing frames.
+    pub fn with_mode(mut self, mode: WireMode) -> Self {
+        self.mode = mode;
         self
     }
 
@@ -108,19 +117,20 @@ impl<R: Read, W: Write> FramedWorker<R, W> {
     /// write failure (broken pipe, reset connection) is a retryable
     /// [`DistError::Transport`].
     pub fn send(&mut self, msg: &ToWorker) -> Result<u64, DistError> {
-        write_frame(&mut self.writer, &msg.to_value())
+        write_cmd(&mut self.writer, msg, self.mode)
             .map_err(|e| DistError::transport(format!("{}: {e}", self.who())))
     }
 
     /// Receive one reply frame; a closed stream (worker death, dropped
     /// connection) is an error, not a hang — the transport's per-frame
     /// timeout bounds how long a silent-but-open stream can stall this.
-    /// EOF and I/O failures (including that timeout) are retryable
-    /// [`DistError::Transport`]s; a frame that arrives but does not parse
-    /// is a fatal protocol error.
+    /// EOF, I/O failures (including that timeout) and undecodable frames
+    /// all classify as retryable [`DistError::Transport`]s: supervision
+    /// replays the machine, and a peer that keeps sending garbage
+    /// exhausts its bounded retries.
     pub fn recv(&mut self) -> Result<FromWorker, DistError> {
-        match read_frame(&mut self.reader) {
-            Ok(Some(v)) => FromWorker::from_value(&v),
+        match read_reply(&mut self.reader) {
+            Ok(Some(msg)) => Ok(msg),
             Ok(None) => Err(DistError::transport(format!(
                 "{} disconnected before replying",
                 self.who()
@@ -825,6 +835,7 @@ impl<R: Read, W: Write> Backend for RemoteFleet<R, W> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dist::wire::{read_cmd, read_frame, write_frame};
     use crate::objective::{PartitionData, PartitionPayload};
 
     /// Drive a RemoteFleet against in-memory byte buffers: scripted
@@ -1054,6 +1065,53 @@ mod tests {
             "{:?}",
             cmds[2]
         );
+    }
+
+    #[test]
+    fn retry_replays_binary_init_part_frames() {
+        // Under `--wire binary` the retained session init re-encodes as a
+        // binary frame on revival: the replacement worker must receive a
+        // byte-exact re-dispatch of its shard, in the session's mode.
+        let w0 = mem_worker(0, &[ready(2), ready(100), step(0, 0, 3)])
+            .with_mode(WireMode::Binary);
+        // Machine 1 dies after acking the job: EOF where its Step should be.
+        let w1 = mem_worker(1, &[ready(2), ready(100)]).with_mode(WireMode::Binary);
+        let payloads = vec![shard(100, vec![0, 1]), shard(100, vec![2, 3])];
+        let plan = ShipPlan::Partition { payloads: payloads.clone() };
+        let mut fleet =
+            RemoteFleet::establish("test", vec![w0, w1], 1, plan, 100, 0).expect("establish");
+        let mut spare = Some(
+            mem_worker(1, &[ready(2), ready(100), step(1, 0, 7)]).with_mode(WireMode::Binary),
+        );
+        fleet.supervise(
+            FaultPolicy::Retry,
+            Box::new(move |machine, _attempt| {
+                assert_eq!(machine, 1, "only machine 1 dies");
+                spare.take().ok_or_else(|| DistError::transport("out of spares"))
+            }),
+        );
+        fleet.begin_job(&params(100), "problem.k = 2\n").expect("job");
+        let reports = fleet
+            .run_leaves(vec![(0..50).collect(), (50..100).collect()])
+            .expect("revival must recover the leaf superstep");
+        assert_eq!(reports[1].calls, 7, "the replayed Step is the one reported");
+        // The replacement's stream decodes with the mode-aware reader: the
+        // shard arrived as a binary frame, the control frames as JSON.
+        let mut cursor = fleet.workers[1].writer.as_slice();
+        let (init, mode) = read_cmd(&mut cursor).unwrap().expect("replayed init_part");
+        assert_eq!(mode, WireMode::Binary, "the shard must replay as a binary frame");
+        match init {
+            ToWorker::InitPart { machine: 1, payload, .. } => {
+                assert_eq!(payload, payloads[1], "the replayed shard must be bit-identical");
+            }
+            other => panic!("expected init_part, got {other:?}"),
+        }
+        let (job, mode) = read_cmd(&mut cursor).unwrap().expect("replayed job");
+        assert_eq!(mode, WireMode::Json, "control frames stay JSON under binary mode");
+        assert!(matches!(job, ToWorker::Job { .. }), "{job:?}");
+        let (leaf, _) = read_cmd(&mut cursor).unwrap().expect("replayed leaf");
+        assert!(matches!(&leaf, ToWorker::Leaf { part } if part.len() == 50), "{leaf:?}");
+        assert!(read_cmd(&mut cursor).unwrap().is_none(), "no further commands");
     }
 
     #[test]

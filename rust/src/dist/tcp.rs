@@ -58,7 +58,7 @@
 //! handshake, oracle rebuild, real socket shipping — runs on one machine,
 //! which is how the tier-1 suite exercises it without a cluster.
 
-use super::backend::{AccumTask, Backend, BackendOutcome, ShipPlan};
+use super::backend::{AccumTask, Backend, BackendOutcome, ShipPlan, WireMode};
 use super::fault::{FaultPolicy, FaultReport};
 use super::node::{NodeParams, StepReport};
 use super::proc::serve_session;
@@ -248,6 +248,7 @@ impl TcpBackend {
     /// (retry), or dropped from the accumulation tree with its loss
     /// accounted (degrade).  [`FaultPolicy::Fail`] keeps the historical
     /// fail-the-session behavior.
+    #[allow(clippy::too_many_arguments)]
     pub fn connect(
         hosts: &[String],
         machines: u32,
@@ -256,9 +257,10 @@ impl TcpBackend {
         n: usize,
         session: u64,
         fault: FaultPolicy,
+        wire: WireMode,
     ) -> Result<Self, DistError> {
         let window = connect_window()?;
-        Self::connect_with_retry(hosts, machines, threads, plan, n, session, window, fault)
+        Self::connect_with_retry(hosts, machines, threads, plan, n, session, window, fault, wire)
     }
 
     /// [`TcpBackend::connect`] with an explicit retry window (tests use a
@@ -273,6 +275,7 @@ impl TcpBackend {
         session: u64,
         retry: Duration,
         fault: FaultPolicy,
+        wire: WireMode,
     ) -> Result<Self, DistError> {
         if hosts.is_empty() {
             return Err(DistError::backend("the tcp backend needs at least one worker host"));
@@ -281,7 +284,7 @@ impl TcpBackend {
         let mut workers = Vec::with_capacity(machines as usize);
         for machine in 0..machines {
             let host = &hosts[machine as usize % hosts.len()];
-            workers.push(dial(host, machine, timeout, retry)?);
+            workers.push(dial(host, machine, timeout, retry, wire)?);
         }
         let mut inner = RemoteFleet::establish("tcp", workers, threads, plan, n, session)?;
         if fault != FaultPolicy::Fail {
@@ -298,7 +301,7 @@ impl TcpBackend {
                 Box::new(move |machine: MachineId, attempt: u32| {
                     let host =
                         &ring[(machine as usize + attempt as usize + 1) % ring.len()];
-                    dial(host, machine, frame_timeout()?, connect_window()?)
+                    dial(host, machine, frame_timeout()?, connect_window()?, wire)
                 }),
             );
         }
@@ -348,6 +351,7 @@ fn dial(
     machine: MachineId,
     timeout: Option<Duration>,
     retry: Duration,
+    wire: WireMode,
 ) -> Result<FramedWorker<BufReader<TcpStream>, BufWriter<TcpStream>>, DistError> {
     let stream = connect_retry(host, retry)?;
     let _ = stream.set_nodelay(true);
@@ -359,7 +363,8 @@ fn dial(
         .try_clone()
         .map_err(|e| DistError::transport(format!("worker at {host}: clone socket: {e}")))?;
     let mut worker = FramedWorker::new(machine, BufReader::new(reader), BufWriter::new(stream))
-        .with_peer(host.to_string());
+        .with_peer(host.to_string())
+        .with_mode(wire);
     handshake(&mut worker, host)?;
     Ok(worker)
 }
@@ -628,6 +633,7 @@ mod tests {
             0,
             Duration::from_millis(200),
             FaultPolicy::Fail,
+            WireMode::Json,
         )
         .unwrap_err();
         assert!(err.is_retryable(), "an unreachable host is a transport fault: {err}");
@@ -690,6 +696,7 @@ mod tests {
             0,
             Duration::from_secs(5),
             FaultPolicy::Retry,
+            WireMode::Json,
         )
         .unwrap();
         assert_eq!(backend.name(), "tcp");
@@ -732,6 +739,7 @@ mod tests {
             0,
             Duration::from_secs(5),
             FaultPolicy::Fail,
+            WireMode::Json,
         )
         .unwrap_err();
         let msg = err.to_string();

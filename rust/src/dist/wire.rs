@@ -1,13 +1,20 @@
 //! The worker wire protocol shared by every framed-transport backend.
 //!
-//! Coordinator and workers speak length-prefixed JSON frames — a 4-byte
-//! little-endian payload length followed by one `serde_json` document —
+//! Coordinator and workers speak length-prefixed frames — a 4-byte
+//! little-endian payload length, a content-type byte, then the payload —
 //! over the worker's stdin/stdout (process backend) or a `TcpStream`
-//! (tcp backend).  JSON keeps the protocol debuggable (any frame can be
-//! printed and a session replayed by hand) and `serde_json`'s
+//! (tcp backend).  Content type [`CONTENT_JSON`] (`0x01`) is a
+//! `serde_json` document: it keeps the protocol debuggable (any frame
+//! can be printed and a session replayed by hand) and `serde_json`'s
 //! shortest-roundtrip float formatting (ryu) guarantees `f64` values
 //! cross the boundary bit-exactly — the backend-parity suite depends on
-//! `f(S)` surviving serialization.
+//! `f(S)` surviving serialization.  Content type [`CONTENT_BINARY`]
+//! (`0x02`, since v5) is the compact raw-little-endian encoding used —
+//! when the session runs `--wire binary` ([`super::WireMode`]) — for the
+//! *payload-bearing* messages only (`init_part`, shipped solutions);
+//! every control frame stays JSON under either mode, and results are
+//! bit-identical across modes.  A worker adopts the wire mode from its
+//! session-opening frame's content type and mirrors it in replies.
 //!
 //! The protocol is specified prose-first in `docs/wire-protocol.md`; the
 //! `wire_doc_stays_in_lockstep_with_the_codec` test fails if a message
@@ -42,10 +49,11 @@
 //! Release                       (no reply; the worker exits)
 //! ```
 
+use super::backend::WireMode;
 use super::node::{ChildMsg, NodeParams, StepReport};
 use super::{DistError, MachineStats};
 use crate::greedy::GreedyKind;
-use crate::objective::PartitionPayload;
+use crate::objective::{PartitionDecoder, PartitionPayload};
 use crate::{ElemId, MachineId};
 use serde_json::{json, Value};
 use std::io::{Read, Write};
@@ -53,6 +61,20 @@ use std::io::{Read, Write};
 /// Hard cap on one frame's payload (a corrupt length prefix must not make
 /// the reader allocate gigabytes).
 const MAX_FRAME: u32 = 1 << 30;
+
+/// Content-type byte of a JSON frame (the debuggable encoding; all
+/// control frames use it under either wire mode).
+pub const CONTENT_JSON: u8 = 0x01;
+
+/// Content-type byte of a binary frame (v5): a one-byte message tag
+/// followed by raw little-endian fields, with [`PartitionPayload`]s in
+/// their section encoding ([`PartitionPayload::encode_binary`]).
+pub const CONTENT_BINARY: u8 = 0x02;
+
+/// Read chunk size of the streaming `init_part` ingestion path
+/// ([`read_session_init`]): the decoder sees bytes in socket-read-sized
+/// chunks, so section conversion overlaps the transfer.
+const STREAM_CHUNK: usize = 64 * 1024;
 
 /// Wire-protocol version, checked by the TCP handshake
 /// ([`ToWorker::Hello`] / [`FromWorker::Welcome`]).  Bump whenever a frame
@@ -78,27 +100,45 @@ const MAX_FRAME: u32 = 1 << 30;
 /// after reviving a machine) and the `transport` error kind
 /// ([`DistError::Transport`], the retryable class of the fault
 /// taxonomy).
-pub const PROTOCOL_VERSION: u32 = 4;
+///
+/// v5: binary streamed payloads — every frame gains a content-type byte
+/// after the length prefix ([`CONTENT_JSON`] keeps the v4 JSON documents
+/// verbatim; [`CONTENT_BINARY`] is the raw-little-endian section
+/// encoding of [`PartitionPayload`]-bearing messages, selected with
+/// `--wire binary`), and the worker's `init_part` receive path ingests
+/// the shard incrementally ([`read_session_init`]) instead of buffering
+/// and parsing the whole frame first.
+pub const PROTOCOL_VERSION: u32 = 5;
 
-/// Write one length-prefixed JSON frame.  Returns the total number of
-/// bytes put on the wire (4-byte length prefix + payload) so callers can
-/// account shipping cost without re-encoding.
-pub fn write_frame(w: &mut impl Write, v: &Value) -> Result<u64, DistError> {
-    let bytes = serde_json::to_vec(v)
-        .map_err(|e| DistError::backend(format!("frame encode: {e}")))?;
+/// Write one frame with an explicit content type.  Returns the total
+/// number of bytes put on the wire (4-byte length prefix + content-type
+/// byte + payload) so callers can account shipping cost without
+/// re-encoding.  The length prefix counts the payload only, excluding
+/// the content-type byte.
+fn write_raw_frame(w: &mut impl Write, ctype: u8, bytes: &[u8]) -> Result<u64, DistError> {
     let len = u32::try_from(bytes.len())
         .ok()
         .filter(|&l| l <= MAX_FRAME)
         .ok_or_else(|| DistError::backend(format!("frame of {} bytes too large", bytes.len())))?;
     w.write_all(&len.to_le_bytes())
-        .and_then(|_| w.write_all(&bytes))
+        .and_then(|_| w.write_all(&[ctype]))
+        .and_then(|_| w.write_all(bytes))
         .and_then(|_| w.flush())
         .map_err(|e| DistError::backend(format!("frame write: {e}")))?;
-    Ok(4 + bytes.len() as u64)
+    Ok(5 + bytes.len() as u64)
 }
 
-/// Read one frame; `Ok(None)` on clean EOF at a frame boundary.
-pub fn read_frame(r: &mut impl Read) -> Result<Option<Value>, DistError> {
+/// Write one JSON frame (content type [`CONTENT_JSON`]).
+pub fn write_frame(w: &mut impl Write, v: &Value) -> Result<u64, DistError> {
+    let bytes = serde_json::to_vec(v)
+        .map_err(|e| DistError::backend(format!("frame encode: {e}")))?;
+    write_raw_frame(w, CONTENT_JSON, &bytes)
+}
+
+/// Read one frame's prefix: its payload length and content-type byte.
+/// `Ok(None)` on clean EOF at a frame boundary; EOF after the length
+/// prefix is a protocol error.
+fn read_frame_prefix(r: &mut impl Read) -> Result<Option<(u32, u8)>, DistError> {
     let mut len_buf = [0u8; 4];
     match r.read_exact(&mut len_buf) {
         Ok(()) => {}
@@ -109,12 +149,41 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Value>, DistError> {
     if len > MAX_FRAME {
         return Err(DistError::backend(format!("frame length {len} exceeds cap")));
     }
+    let mut ctype = [0u8; 1];
+    r.read_exact(&mut ctype)
+        .map_err(|e| DistError::backend(format!("frame content-type read: {e}")))?;
+    if ctype[0] != CONTENT_JSON && ctype[0] != CONTENT_BINARY {
+        return Err(DistError::backend(format!(
+            "unknown frame content type {:#04x} (peer speaks a different wire version?)",
+            ctype[0]
+        )));
+    }
+    Ok(Some((len, ctype[0])))
+}
+
+/// Read one frame as `(content type, payload bytes)`; `Ok(None)` on
+/// clean EOF at a frame boundary.
+fn read_frame_raw(r: &mut impl Read) -> Result<Option<(u8, Vec<u8>)>, DistError> {
+    let Some((len, ctype)) = read_frame_prefix(r)? else { return Ok(None) };
     let mut buf = vec![0u8; len as usize];
     r.read_exact(&mut buf)
         .map_err(|e| DistError::backend(format!("frame body read: {e}")))?;
-    serde_json::from_slice(&buf)
-        .map(Some)
-        .map_err(|e| DistError::backend(format!("frame decode: {e}")))
+    Ok(Some((ctype, buf)))
+}
+
+/// Read one JSON frame; `Ok(None)` on clean EOF at a frame boundary.  A
+/// binary frame on a JSON-only channel (the gateway protocol, handshake
+/// frames) is a protocol error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Value>, DistError> {
+    match read_frame_raw(r)? {
+        None => Ok(None),
+        Some((CONTENT_JSON, buf)) => serde_json::from_slice(&buf)
+            .map(Some)
+            .map_err(|e| DistError::backend(format!("frame decode: {e}"))),
+        Some((ctype, _)) => Err(DistError::backend(format!(
+            "unexpected content type {ctype:#04x} on a JSON-only channel"
+        ))),
+    }
 }
 
 /// Coordinator → worker commands.
@@ -373,6 +442,300 @@ impl FromWorker {
             "pong" => Ok(Self::Pong),
             other => Err(DistError::backend(format!("unknown reply '{other}'"))),
         }
+    }
+}
+
+// ---- mode-aware message framing (v5) -----------------------------------
+
+/// Binary-envelope message tags (the first payload byte of a
+/// [`CONTENT_BINARY`] frame).
+const BIN_INIT_PART: u8 = 1;
+const BIN_SOL: u8 = 2;
+const BIN_RECV: u8 = 3;
+
+/// Write one coordinator → worker command under `mode`.  Binary mode
+/// binary-encodes the payload-bearing commands (`init_part`, `recv`);
+/// everything else stays a JSON frame under either mode.
+pub fn write_cmd(w: &mut impl Write, cmd: &ToWorker, mode: WireMode) -> Result<u64, DistError> {
+    if mode == WireMode::Binary {
+        if let Some(bytes) = encode_binary_cmd(cmd) {
+            return write_raw_frame(w, CONTENT_BINARY, &bytes);
+        }
+    }
+    write_frame(w, &cmd.to_value())
+}
+
+/// Read one command, reporting the content type it arrived with (how a
+/// worker adopts its session's wire mode).  `Ok(None)` on clean EOF.
+pub fn read_cmd(r: &mut impl Read) -> Result<Option<(ToWorker, WireMode)>, DistError> {
+    match read_frame_raw(r)? {
+        None => Ok(None),
+        Some((CONTENT_BINARY, buf)) => Ok(Some((decode_binary_cmd(&buf)?, WireMode::Binary))),
+        Some((_, buf)) => {
+            let v: Value = serde_json::from_slice(&buf)
+                .map_err(|e| DistError::backend(format!("frame decode: {e}")))?;
+            Ok(Some((ToWorker::from_value(&v)?, WireMode::Json)))
+        }
+    }
+}
+
+/// Write one worker → coordinator reply under `mode`.  Binary mode
+/// binary-encodes shipped solutions (`sol`); every other reply stays a
+/// JSON frame.
+pub fn write_reply(w: &mut impl Write, msg: &FromWorker, mode: WireMode) -> Result<u64, DistError> {
+    if mode == WireMode::Binary {
+        if let Some(bytes) = encode_binary_reply(msg) {
+            return write_raw_frame(w, CONTENT_BINARY, &bytes);
+        }
+    }
+    write_frame(w, &msg.to_value())
+}
+
+/// Read one reply under either content type; `Ok(None)` on clean EOF.
+pub fn read_reply(r: &mut impl Read) -> Result<Option<FromWorker>, DistError> {
+    match read_frame_raw(r)? {
+        None => Ok(None),
+        Some((CONTENT_BINARY, buf)) => Ok(Some(decode_binary_reply(&buf)?)),
+        Some((_, buf)) => {
+            let v: Value = serde_json::from_slice(&buf)
+                .map_err(|e| DistError::backend(format!("frame decode: {e}")))?;
+            Ok(Some(FromWorker::from_value(&v)?))
+        }
+    }
+}
+
+/// Read a session-opening command (`init` / `init_part` / `hello` …) the
+/// streaming way: a binary `init_part` frame's shard bytes are fed
+/// through an incremental [`PartitionDecoder`] in socket-read-sized
+/// chunks, so the under-construction shard grows section by section as
+/// bytes land instead of waiting for the whole frame.  Returns the
+/// command plus the wire mode the frame arrived in — the worker mirrors
+/// that mode on its replies for the rest of the session.
+pub fn read_session_init(r: &mut impl Read) -> Result<Option<(ToWorker, WireMode)>, DistError> {
+    let Some((len, ctype)) = read_frame_prefix(r)? else { return Ok(None) };
+    if ctype != CONTENT_BINARY {
+        let mut buf = vec![0u8; len as usize];
+        r.read_exact(&mut buf)
+            .map_err(|e| DistError::backend(format!("frame body read: {e}")))?;
+        let v: Value = serde_json::from_slice(&buf)
+            .map_err(|e| DistError::backend(format!("frame decode: {e}")))?;
+        return Ok(Some((ToWorker::from_value(&v)?, WireMode::Json)));
+    }
+    // Binary session opener: fixed envelope prefix, then the shard
+    // streamed through the incremental decoder.
+    let envelope = 1 + 8 + 4 + 4;
+    if (len as usize) < envelope {
+        return Err(DistError::backend(format!(
+            "binary session frame of {len} bytes is shorter than its envelope"
+        )));
+    }
+    let mut head = [0u8; 17];
+    r.read_exact(&mut head)
+        .map_err(|e| DistError::backend(format!("frame body read: {e}")))?;
+    if head[0] != BIN_INIT_PART {
+        return Err(DistError::backend(format!(
+            "binary frame tag {} cannot open a session (expected init_part)",
+            head[0]
+        )));
+    }
+    let session = u64::from_le_bytes(head[1..9].try_into().unwrap());
+    let machine = u32::from_le_bytes(head[9..13].try_into().unwrap()) as MachineId;
+    let threads = u32::from_le_bytes(head[13..17].try_into().unwrap()) as usize;
+    let mut decoder = PartitionDecoder::new(len as usize - envelope);
+    let mut remaining = len as usize - envelope;
+    let mut chunk = vec![0u8; STREAM_CHUNK.min(remaining.max(1))];
+    while remaining > 0 {
+        let take = remaining.min(chunk.len());
+        r.read_exact(&mut chunk[..take])
+            .map_err(|e| DistError::backend(format!("frame body read: {e}")))?;
+        decoder
+            .feed(&chunk[..take])
+            .map_err(|e| DistError::backend(format!("partition payload: {e}")))?;
+        remaining -= take;
+    }
+    let payload = decoder
+        .finish()
+        .map_err(|e| DistError::backend(format!("partition payload: {e}")))?;
+    Ok(Some((ToWorker::InitPart { session, machine, threads, payload }, WireMode::Binary)))
+}
+
+/// Binary-encode a command, or `None` when the command has no binary
+/// form (control frames travel as JSON under either mode).
+fn encode_binary_cmd(cmd: &ToWorker) -> Option<Vec<u8>> {
+    match cmd {
+        ToWorker::InitPart { session, machine, threads, payload } => {
+            let mut out = Vec::with_capacity(17 + payload.binary_len());
+            out.push(BIN_INIT_PART);
+            out.extend_from_slice(&session.to_le_bytes());
+            out.extend_from_slice(&machine.to_le_bytes());
+            out.extend_from_slice(&(*threads as u32).to_le_bytes());
+            payload.encode_binary(&mut out);
+            Some(out)
+        }
+        ToWorker::Recv { level, children } => {
+            let mut out = vec![BIN_RECV];
+            out.extend_from_slice(&level.to_le_bytes());
+            out.extend_from_slice(&(children.len() as u32).to_le_bytes());
+            for child in children {
+                encode_binary_child(&mut out, child);
+            }
+            Some(out)
+        }
+        _ => None,
+    }
+}
+
+fn decode_binary_cmd(bytes: &[u8]) -> Result<ToWorker, DistError> {
+    let mut cur = Cursor::new(bytes);
+    match cur.u8()? {
+        BIN_INIT_PART => {
+            let session = cur.u64()?;
+            let machine = cur.u32()? as MachineId;
+            let threads = cur.u32()? as usize;
+            let payload = PartitionPayload::decode_binary(cur.rest())
+                .map_err(|e| DistError::backend(format!("partition payload: {e}")))?;
+            Ok(ToWorker::InitPart { session, machine, threads, payload })
+        }
+        BIN_RECV => {
+            let level = cur.u32()?;
+            let n = cur.u32()? as usize;
+            let mut children = Vec::new();
+            for _ in 0..n {
+                children.push(decode_binary_child(&mut cur)?);
+            }
+            cur.done()?;
+            Ok(ToWorker::Recv { level, children })
+        }
+        other => Err(DistError::backend(format!("unknown binary command tag {other}"))),
+    }
+}
+
+/// Binary-encode a reply, or `None` when it has no binary form.
+fn encode_binary_reply(msg: &FromWorker) -> Option<Vec<u8>> {
+    match msg {
+        FromWorker::Sol(child) => {
+            let mut out = vec![BIN_SOL];
+            encode_binary_child(&mut out, child);
+            Some(out)
+        }
+        _ => None,
+    }
+}
+
+fn decode_binary_reply(bytes: &[u8]) -> Result<FromWorker, DistError> {
+    let mut cur = Cursor::new(bytes);
+    match cur.u8()? {
+        BIN_SOL => {
+            let child = decode_binary_child(&mut cur)?;
+            cur.done()?;
+            Ok(FromWorker::Sol(child))
+        }
+        other => Err(DistError::backend(format!("unknown binary reply tag {other}"))),
+    }
+}
+
+/// A shipped child solution inside a binary envelope: fixed fields, the
+/// solution ids, then (optionally) its extracted shard, length-prefixed
+/// so multiple children pack into one `recv` frame.
+fn encode_binary_child(out: &mut Vec<u8>, m: &ChildMsg) {
+    out.extend_from_slice(&m.from.to_le_bytes());
+    out.extend_from_slice(&m.value.to_bits().to_le_bytes());
+    out.extend_from_slice(&m.bytes.to_le_bytes());
+    out.extend_from_slice(&(m.sol.len() as u32).to_le_bytes());
+    out.push(m.data.is_some() as u8);
+    for &e in &m.sol {
+        out.extend_from_slice(&e.to_le_bytes());
+    }
+    if let Some(data) = &m.data {
+        out.extend_from_slice(&(data.binary_len() as u64).to_le_bytes());
+        data.encode_binary(out);
+    }
+}
+
+fn decode_binary_child(cur: &mut Cursor<'_>) -> Result<ChildMsg, DistError> {
+    let from = cur.u32()? as MachineId;
+    let value = f64::from_bits(cur.u64()?);
+    let bytes = cur.u64()?;
+    let sol_len = cur.u32()? as usize;
+    let has_data = match cur.u8()? {
+        0 => false,
+        1 => true,
+        other => return Err(DistError::backend(format!("binary child: bad data flag {other}"))),
+    };
+    let sol_bytes = cur.take(sol_len.checked_mul(4).ok_or_else(|| {
+        DistError::backend(format!("binary child: solution length {sol_len} overflows"))
+    })?)?;
+    let sol = sol_bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as ElemId)
+        .collect();
+    let data = if has_data {
+        let plen = cur.u64()?;
+        let plen = usize::try_from(plen).map_err(|_| {
+            DistError::backend(format!("binary child: payload length {plen} overflows"))
+        })?;
+        let payload = PartitionPayload::decode_binary(cur.take(plen)?)
+            .map_err(|e| DistError::backend(format!("child data payload: {e}")))?;
+        Some(payload)
+    } else {
+        None
+    };
+    Ok(ChildMsg { from, sol, value, bytes, data })
+}
+
+/// Bounds-checked reader over a binary frame's payload: every read is
+/// validated against the bytes actually present, so a hostile length
+/// field can produce a [`DistError`] but never a panic or a
+/// frame-unbacked allocation.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DistError> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len()).ok_or_else(|| {
+            DistError::backend(format!(
+                "binary frame truncated: wanted {n} bytes at offset {} of {}",
+                self.pos,
+                self.buf.len()
+            ))
+        })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, DistError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, DistError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, DistError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
+    fn done(&self) -> Result<(), DistError> {
+        if self.pos != self.buf.len() {
+            return Err(DistError::backend(format!(
+                "binary frame has {} trailing bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -762,8 +1125,8 @@ mod tests {
         write_frame(&mut buf, &ToWorker::Ship.to_value()).unwrap();
         assert_eq!(
             buf,
-            [0x0c, 0x00, 0x00, 0x00, 0x7b, 0x22, 0x74, 0x22, 0x3a, 0x22, 0x73, 0x68, 0x69,
-             0x70, 0x22, 0x7d],
+            [0x0c, 0x00, 0x00, 0x00, 0x01, 0x7b, 0x22, 0x74, 0x22, 0x3a, 0x22, 0x73, 0x68,
+             0x69, 0x70, 0x22, 0x7d],
             "Ship frame no longer matches the hex dump in docs/wire-protocol.md"
         );
     }
@@ -776,8 +1139,8 @@ mod tests {
         let written = write_frame(&mut buf, &ToWorker::JobDone.to_value()).unwrap();
         assert_eq!(
             buf,
-            [0x10, 0x00, 0x00, 0x00, 0x7b, 0x22, 0x74, 0x22, 0x3a, 0x22, 0x6a, 0x6f, 0x62,
-             0x5f, 0x64, 0x6f, 0x6e, 0x65, 0x22, 0x7d],
+            [0x10, 0x00, 0x00, 0x00, 0x01, 0x7b, 0x22, 0x74, 0x22, 0x3a, 0x22, 0x6a, 0x6f,
+             0x62, 0x5f, 0x64, 0x6f, 0x6e, 0x65, 0x22, 0x7d],
             "JobDone frame no longer matches the hex dump in docs/wire-protocol.md"
         );
         assert_eq!(written, buf.len() as u64, "write_frame must report the on-wire size");
@@ -789,8 +1152,8 @@ mod tests {
         let written = write_frame(&mut buf, &ToWorker::Release.to_value()).unwrap();
         assert_eq!(
             buf,
-            [0x0f, 0x00, 0x00, 0x00, 0x7b, 0x22, 0x74, 0x22, 0x3a, 0x22, 0x72, 0x65, 0x6c,
-             0x65, 0x61, 0x73, 0x65, 0x22, 0x7d],
+            [0x0f, 0x00, 0x00, 0x00, 0x01, 0x7b, 0x22, 0x74, 0x22, 0x3a, 0x22, 0x72, 0x65,
+             0x6c, 0x65, 0x61, 0x73, 0x65, 0x22, 0x7d],
             "Release frame no longer matches the hex dump in docs/wire-protocol.md"
         );
         assert_eq!(written, buf.len() as u64, "write_frame must report the on-wire size");
@@ -836,5 +1199,203 @@ mod tests {
     fn oversized_length_prefix_rejected() {
         let buf = (MAX_FRAME + 1).to_le_bytes().to_vec();
         assert!(read_frame(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn binary_mode_roundtrips_every_command_and_reports_its_content_type() {
+        // Under `--wire binary` only the payload-bearing commands change
+        // encoding; control frames stay JSON and every command still
+        // round-trips through `write_cmd`/`read_cmd`.
+        for cmd in all_commands() {
+            let mut buf = Vec::new();
+            let written = write_cmd(&mut buf, &cmd, WireMode::Binary).unwrap();
+            assert_eq!(written, buf.len() as u64, "write_cmd must report the on-wire size");
+            let expect_binary =
+                matches!(cmd, ToWorker::InitPart { .. } | ToWorker::Recv { .. });
+            let expect_ctype = if expect_binary { CONTENT_BINARY } else { CONTENT_JSON };
+            assert_eq!(buf[4], expect_ctype, "wrong content type for {cmd:?}");
+            let (decoded, mode) = read_cmd(&mut buf.as_slice()).unwrap().expect("frame");
+            assert_eq!(decoded, cmd);
+            let expect_mode = if expect_binary { WireMode::Binary } else { WireMode::Json };
+            assert_eq!(mode, expect_mode);
+        }
+    }
+
+    #[test]
+    fn binary_mode_roundtrips_every_reply() {
+        // Only shipped solutions have a binary form; all other replies
+        // stay JSON frames under either mode.
+        for reply in all_replies() {
+            let mut buf = Vec::new();
+            let written = write_reply(&mut buf, &reply, WireMode::Binary).unwrap();
+            assert_eq!(written, buf.len() as u64, "write_reply must report the on-wire size");
+            let expect_ctype =
+                if matches!(reply, FromWorker::Sol(_)) { CONTENT_BINARY } else { CONTENT_JSON };
+            assert_eq!(buf[4], expect_ctype, "wrong content type for {reply:?}");
+            let decoded = read_reply(&mut buf.as_slice()).unwrap().expect("frame");
+            assert_eq!(decoded, reply);
+        }
+    }
+
+    #[test]
+    fn binary_sol_carries_its_extracted_shard() {
+        // Partition shipping: the retiring machine's solution travels
+        // with its extracted data, which must survive the binary child
+        // codec bit-exactly.
+        let msg = FromWorker::Sol(ChildMsg {
+            from: 3,
+            sol: vec![9, 2],
+            value: 0.1 + 0.2, // not exactly representable — bit-exactness matters
+            bytes: 123,
+            data: Some(sample_payload()),
+        });
+        let mut buf = Vec::new();
+        write_reply(&mut buf, &msg, WireMode::Binary).unwrap();
+        assert_eq!(buf[4], CONTENT_BINARY);
+        assert_eq!(read_reply(&mut buf.as_slice()).unwrap().unwrap(), msg);
+    }
+
+    #[test]
+    fn json_mode_never_emits_binary_frames() {
+        for cmd in all_commands() {
+            let mut buf = Vec::new();
+            write_cmd(&mut buf, &cmd, WireMode::Json).unwrap();
+            assert_eq!(buf[4], CONTENT_JSON, "JSON mode leaked a binary frame for {cmd:?}");
+        }
+        for reply in all_replies() {
+            let mut buf = Vec::new();
+            write_reply(&mut buf, &reply, WireMode::Json).unwrap();
+            assert_eq!(buf[4], CONTENT_JSON, "JSON mode leaked a binary frame for {reply:?}");
+        }
+    }
+
+    #[test]
+    fn json_only_channels_reject_binary_frames() {
+        // The gateway protocol and the TCP handshake read with
+        // `read_frame`, which must refuse a v5 binary frame instead of
+        // parsing garbage.
+        let init = ToWorker::InitPart {
+            session: 1,
+            machine: 0,
+            threads: 1,
+            payload: sample_payload(),
+        };
+        let mut buf = Vec::new();
+        write_cmd(&mut buf, &init, WireMode::Binary).unwrap();
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(
+            err.to_string().contains("JSON-only"),
+            "want a JSON-only channel error, got: {err}"
+        );
+    }
+
+    #[test]
+    fn unknown_content_type_is_a_typed_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &ToWorker::Ship.to_value()).unwrap();
+        buf[4] = 0x7f;
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(
+            err.to_string().contains("content type"),
+            "want a content-type error, got: {err}"
+        );
+    }
+
+    #[test]
+    fn session_init_streams_binary_init_part_and_adopts_the_mode() {
+        let init = ToWorker::InitPart {
+            session: 99,
+            machine: 2,
+            threads: 4,
+            payload: sample_payload(),
+        };
+        let mut buf = Vec::new();
+        write_cmd(&mut buf, &init, WireMode::Binary).unwrap();
+        let (decoded, mode) =
+            read_session_init(&mut buf.as_slice()).unwrap().expect("frame present");
+        assert_eq!(decoded, init);
+        assert_eq!(mode, WireMode::Binary);
+
+        // The JSON path reports Json so a v4-style session runs unchanged.
+        let mut buf = Vec::new();
+        write_cmd(&mut buf, &init, WireMode::Json).unwrap();
+        let (decoded, mode) =
+            read_session_init(&mut buf.as_slice()).unwrap().expect("frame present");
+        assert_eq!(decoded, init);
+        assert_eq!(mode, WireMode::Json);
+
+        // And clean EOF at the frame boundary is a clean None.
+        let empty: &[u8] = &[];
+        assert!(read_session_init(&mut &*empty).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_binary_session_frame_is_a_typed_error() {
+        let init = ToWorker::InitPart {
+            session: 99,
+            machine: 2,
+            threads: 4,
+            payload: sample_payload(),
+        };
+        let mut full = Vec::new();
+        write_cmd(&mut full, &init, WireMode::Binary).unwrap();
+        // Cut inside the envelope, inside the payload header, and inside
+        // a section: every truncation must surface as a DistError.
+        for cut in [6, 12, 30, full.len() - 1] {
+            let buf = &full[..cut];
+            assert!(
+                read_session_init(&mut &*buf).is_err(),
+                "truncation at {cut} of {} must error",
+                full.len()
+            );
+        }
+    }
+
+    #[test]
+    fn binary_init_part_frame_bytes_match_the_documented_hex_dump() {
+        // The annotated v5 binary dump in docs/wire-protocol.md shows this
+        // exact frame; if the encoding ever changes, the doc must change
+        // with it.
+        let init = ToWorker::InitPart {
+            session: 7,
+            machine: 1,
+            threads: 2,
+            payload: PartitionPayload {
+                n_global: 4,
+                elems: vec![2, 0],
+                data: PartitionData::Modular { weights: vec![1.5, -2.0] },
+            },
+        };
+        let mut buf = Vec::new();
+        let written = write_cmd(&mut buf, &init, WireMode::Binary).unwrap();
+        let expect: Vec<u8> = [
+            // frame prefix: payload length 73, content type binary
+            &[0x49, 0x00, 0x00, 0x00, 0x02][..],
+            // envelope: tag, session = 7, machine = 1, threads = 2
+            &[0x01],
+            &[0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00],
+            &[0x01, 0x00, 0x00, 0x00],
+            &[0x02, 0x00, 0x00, 0x00],
+            // payload header: family modular, flags 0, 2 sections, reserved
+            &[0x04, 0x00, 0x02, 0x00],
+            // n_global = 4, meta = 0
+            &[0x04, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00],
+            &[0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00],
+            // section 0 (elems): 2 bytes, width 1
+            &[0x02, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x01],
+            // section 1 (weights): 16 bytes, width 8
+            &[0x10, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x08],
+            // elems = [2, 0]
+            &[0x02, 0x00],
+            // weights: 1.5 and -2.0 as f64 bits, little-endian
+            &[0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xf8, 0x3f],
+            &[0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xc0],
+        ]
+        .concat();
+        assert_eq!(
+            buf, expect,
+            "binary init_part frame no longer matches the hex dump in docs/wire-protocol.md"
+        );
+        assert_eq!(written, buf.len() as u64, "write_cmd must report the on-wire size");
     }
 }

@@ -61,13 +61,13 @@ const USAGE: &str =
     "usage: greedyml <run|sweep|submit|serve|gateway|tree|datasets|artifacts|model> [flags]
   run       --config <file> [--set key=value]… [--json <out.json>] [--pjrt]
             [--backend thread|process|tcp] [--hosts h1:port,h2:port] [--ship spec|partition]
-            [--on-fault fail|retry|degrade]
+            [--on-fault fail|retry|degrade] [--wire json|binary]
   sweep     --config <file> (with a [sweep] section) [--set key=value]… [--json <out.json>]
             [--csv <dir>] [--backend thread|process|tcp] [--hosts h1:port,h2:port]
-            [--ship spec|partition] [--on-fault fail|retry|degrade]
+            [--ship spec|partition] [--on-fault fail|retry|degrade] [--wire json|binary]
   submit    --config <file> (with a [jobs] section) [--set key=value]… [--json]
             [--gateway <addr>] [--backend thread|process|tcp] [--hosts h1:port,h2:port]
-            [--ship spec|partition] [--on-fault fail|retry|degrade]
+            [--ship spec|partition] [--on-fault fail|retry|degrade] [--wire json|binary]
   serve     --bind <addr>   (tcp-backend worker daemon; --bind 127.0.0.1:0 picks a free port)
   gateway   --bind <addr> [--workers <n>] [--mem-budget <bytes>] [--cache-entries <n>]
             (job-service daemon: schedules concurrent submit clients onto warm fleets)
@@ -78,7 +78,7 @@ const USAGE: &str =
 
 fn cmd_run(args: &Args) -> greedyml::Result<()> {
     args.check_known(&[
-        "config", "set", "json", "pjrt", "trace", "backend", "hosts", "ship", "on-fault",
+        "config", "set", "json", "pjrt", "trace", "backend", "hosts", "ship", "on-fault", "wire",
     ])?;
     let mut cfg = Config::load(args.require("config")?)?;
     for kv in args.get_all("set") {
@@ -95,6 +95,9 @@ fn cmd_run(args: &Args) -> greedyml::Result<()> {
     }
     if let Some(on_fault) = args.get("on-fault") {
         cfg.set("run.on_fault", on_fault);
+    }
+    if let Some(wire) = args.get("wire") {
+        cfg.set("run.wire", wire);
     }
     let engine = if args.has("pjrt") || cfg.str_or("objective.backend", "cpu") == "pjrt" {
         if args.has("pjrt") {
@@ -150,7 +153,7 @@ fn cmd_run(args: &Args) -> greedyml::Result<()> {
 
 fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
     args.check_known(&[
-        "config", "set", "json", "pjrt", "csv", "backend", "hosts", "ship", "on-fault",
+        "config", "set", "json", "pjrt", "csv", "backend", "hosts", "ship", "on-fault", "wire",
     ])?;
     let mut cfg = Config::load(args.require("config")?)?;
     for kv in args.get_all("set") {
@@ -167,6 +170,9 @@ fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
     }
     if let Some(on_fault) = args.get("on-fault") {
         cfg.set("sweep.on_fault", on_fault);
+    }
+    if let Some(wire) = args.get("wire") {
+        cfg.set("sweep.wire", wire);
     }
     let engine = if args.has("pjrt") || cfg.str_or("objective.backend", "cpu") == "pjrt" {
         Some(Arc::new(Engine::load(&greedyml::runtime::artifact_dir())?))
@@ -198,7 +204,7 @@ fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
 
 fn cmd_submit(args: &Args) -> greedyml::Result<()> {
     args.check_known(&[
-        "config", "set", "backend", "hosts", "ship", "on-fault", "gateway", "json",
+        "config", "set", "backend", "hosts", "ship", "on-fault", "gateway", "json", "wire",
     ])?;
     let mut cfg = Config::load(args.require("config")?)?;
     for kv in args.get_all("set") {
@@ -215,6 +221,9 @@ fn cmd_submit(args: &Args) -> greedyml::Result<()> {
     }
     if let Some(on_fault) = args.get("on-fault") {
         cfg.set("jobs.on_fault", on_fault);
+    }
+    if let Some(wire) = args.get("wire") {
+        cfg.set("jobs.wire", wire);
     }
     let batch = JobBatch::from_config(&cfg)?;
     let json = args.has("json");

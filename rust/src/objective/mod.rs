@@ -29,7 +29,9 @@ pub use kcover::KCover;
 pub use kdominate::KDominatingSet;
 pub use kmedoid::KMedoid;
 pub use modular::Modular;
-pub use problem::{PartitionData, PartitionOracle, PartitionPayload, Partitionable};
+pub use problem::{
+    PartitionData, PartitionDecoder, PartitionOracle, PartitionPayload, Partitionable,
+};
 pub use wcover::WeightedCover;
 
 /// A monotone submodular objective over ground set `0..n`.

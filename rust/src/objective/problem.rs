@@ -323,6 +323,534 @@ impl PartitionPayload {
     }
 }
 
+// ---- binary wire codec (wire v5, content type 0x02) --------------------
+//
+// The JSON document above stays the debuggable encoding; this is the
+// compact one.  A payload is a fixed 20-byte header, a 9-byte descriptor
+// per section, then the sections back-to-back as raw little-endian
+// slices — no intermediate tree on either side:
+//
+//   [0]      family   (1 = cover, 2 = vectors, 3 = facility, 4 = modular)
+//   [1]      flags    (cover only: bit0 self_cover, bit1 dominating,
+//                      bit2 weighted; must be 0 otherwise)
+//   [2]      n_sections
+//   [3]      reserved, must be 0
+//   [4..12]  n_global  u64 LE
+//   [12..20] meta      u64 LE (cover: universe; vectors: dim;
+//                      facility: clients; modular: 0)
+//   then per section: [byte_len u64 LE][width u8]
+//
+// Section 0 is always `elems`.  Integer sections (elems, cover row
+// lengths, cover items) use the minimal width in {1, 2, 4, 8} that fits
+// the section's largest value; cover CSR offsets travel as per-row
+// *lengths* (reconstructed by prefix sum), which keeps them width-1 for
+// realistic shards.  Float sections are fixed width (f32 = 4, f64 = 8,
+// bit-exact via to_bits), and weighted-cover pairs use a 12-byte stride
+// (u32 item + f64 bits).  A decoder must verify the declared section
+// lengths sum exactly to the frame's payload length *before* allocating
+// anything sized by them — that is the cap against hostile length
+// fields.
+
+const FAMILY_COVER: u8 = 1;
+const FAMILY_VECTORS: u8 = 2;
+const FAMILY_FACILITY: u8 = 3;
+const FAMILY_MODULAR: u8 = 4;
+const FLAG_SELF_COVER: u8 = 1;
+const FLAG_DOMINATING: u8 = 2;
+const FLAG_WEIGHTED: u8 = 4;
+/// Fixed header bytes before the per-section descriptors.
+const HEADER_FIXED: usize = 20;
+/// Bytes per section descriptor (u64 length + u8 width).
+const SECTION_DESC: usize = 9;
+/// Width byte of a weighted-cover pair section (u32 item + f64 bits).
+const WEIGHT_STRIDE: u8 = 12;
+
+/// Minimal little-endian width in {1, 2, 4, 8} that holds `max`.
+fn int_width(max: u64) -> u8 {
+    if max < 1 << 8 {
+        1
+    } else if max < 1 << 16 {
+        2
+    } else if max < 1 << 32 {
+        4
+    } else {
+        8
+    }
+}
+
+fn push_ints(out: &mut Vec<u8>, vals: impl Iterator<Item = u64>, width: u8) {
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes()[..width as usize]);
+    }
+}
+
+fn decode_ints(bytes: &[u8], width: u8) -> Vec<u64> {
+    bytes
+        .chunks_exact(width as usize)
+        .map(|c| {
+            let mut v = [0u8; 8];
+            v[..c.len()].copy_from_slice(c);
+            u64::from_le_bytes(v)
+        })
+        .collect()
+}
+
+/// What a section's raw bytes decode to, per family and position.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SectionKind {
+    Ints,
+    F32s,
+    F64s,
+    Weights,
+}
+
+impl SectionKind {
+    fn width_ok(self, width: u8) -> bool {
+        match self {
+            Self::Ints => matches!(width, 1 | 2 | 4 | 8),
+            Self::F32s => width == 4,
+            Self::F64s => width == 8,
+            Self::Weights => width == WEIGHT_STRIDE,
+        }
+    }
+}
+
+/// The section layout a family declares (section 0, `elems`, included).
+fn section_plan(family: u8, flags: u8) -> Result<Vec<SectionKind>, String> {
+    match family {
+        FAMILY_COVER => {
+            if flags & !(FLAG_SELF_COVER | FLAG_DOMINATING | FLAG_WEIGHTED) != 0 {
+                return Err(format!("binary payload: unknown cover flags {flags:#04x}"));
+            }
+            let mut plan = vec![SectionKind::Ints, SectionKind::Ints, SectionKind::Ints];
+            if flags & FLAG_WEIGHTED != 0 {
+                plan.push(SectionKind::Weights);
+            }
+            Ok(plan)
+        }
+        FAMILY_VECTORS | FAMILY_FACILITY | FAMILY_MODULAR => {
+            if flags != 0 {
+                return Err(format!(
+                    "binary payload: family {family} carries no flags, got {flags:#04x}"
+                ));
+            }
+            let second =
+                if family == FAMILY_VECTORS { SectionKind::F32s } else { SectionKind::F64s };
+            Ok(vec![SectionKind::Ints, second])
+        }
+        other => Err(format!("unknown binary payload family {other}")),
+    }
+}
+
+/// One fully-decoded section, typed by its [`SectionKind`].
+enum TypedSection {
+    Ints(Vec<u64>),
+    F32s(Vec<f32>),
+    F64s(Vec<f64>),
+    Weights(Vec<(u32, f64)>),
+}
+
+struct BinHeader {
+    family: u8,
+    flags: u8,
+    n_global: u64,
+    meta: u64,
+    /// `(byte_len, width)` per section.
+    sections: Vec<(usize, u8)>,
+    kinds: Vec<SectionKind>,
+}
+
+/// Incremental decoder for the binary payload encoding: feed arriving
+/// byte chunks in any sizes and each section is converted to its typed
+/// form the moment its last byte lands, so decode work overlaps socket
+/// reads instead of following them.  `new` takes the payload's declared
+/// total byte length (from the already-capped frame prefix); nothing
+/// sized by a declared *section* length is allocated until the section
+/// table is proven to sum exactly to that total, so a hostile header
+/// cannot force an over-allocation.
+pub struct PartitionDecoder {
+    expected: usize,
+    fed: usize,
+    header_buf: Vec<u8>,
+    header: Option<BinHeader>,
+    /// Raw bytes of the section currently filling.
+    pending: Vec<u8>,
+    done: Vec<TypedSection>,
+    cur: usize,
+}
+
+impl PartitionDecoder {
+    /// Start decoding a payload of exactly `expected` bytes.
+    pub fn new(expected: usize) -> Self {
+        Self {
+            expected,
+            fed: 0,
+            header_buf: Vec::new(),
+            header: None,
+            pending: Vec::new(),
+            done: Vec::new(),
+            cur: 0,
+        }
+    }
+
+    /// Number of sections whose bytes have fully arrived and been
+    /// converted.  Monotone non-decreasing across `feed` calls.
+    pub fn ready_sections(&self) -> usize {
+        self.done.len()
+    }
+
+    /// Total section count, known once the header has arrived.
+    pub fn total_sections(&self) -> Option<usize> {
+        self.header.as_ref().map(|h| h.sections.len())
+    }
+
+    /// True once every declared byte has arrived.
+    pub fn is_complete(&self) -> bool {
+        match &self.header {
+            Some(h) => self.cur == h.sections.len(),
+            None => false,
+        }
+    }
+
+    /// Absorb the next chunk of payload bytes.
+    pub fn feed(&mut self, mut chunk: &[u8]) -> Result<(), String> {
+        if self.fed + chunk.len() > self.expected {
+            return Err(format!(
+                "binary payload: fed {} bytes past the declared length {}",
+                self.fed + chunk.len(),
+                self.expected
+            ));
+        }
+        self.fed += chunk.len();
+        while !chunk.is_empty() {
+            if self.header.is_none() {
+                // The header's own length is only known once byte [2]
+                // (n_sections) has arrived.
+                let goal = if self.header_buf.len() < 3 {
+                    3
+                } else {
+                    HEADER_FIXED + SECTION_DESC * self.header_buf[2] as usize
+                };
+                let take = (goal - self.header_buf.len()).min(chunk.len());
+                self.header_buf.extend_from_slice(&chunk[..take]);
+                chunk = &chunk[take..];
+                if self.header_buf.len() >= 3 {
+                    let full = HEADER_FIXED + SECTION_DESC * self.header_buf[2] as usize;
+                    if self.header_buf.len() == full {
+                        self.parse_header()?;
+                        self.advance_empty();
+                    }
+                }
+            } else {
+                let Some(&(len, _)) = self.header.as_ref().and_then(|h| h.sections.get(self.cur))
+                else {
+                    return Err("binary payload: bytes past the last section".into());
+                };
+                if self.pending.is_empty() {
+                    // Bounded by the sum check in parse_header.
+                    self.pending.reserve_exact(len);
+                }
+                let take = (len - self.pending.len()).min(chunk.len());
+                self.pending.extend_from_slice(&chunk[..take]);
+                chunk = &chunk[take..];
+                if self.pending.len() == len {
+                    self.complete_section();
+                    self.advance_empty();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse and validate the fully-buffered header.  Every check that
+    /// gates allocation happens here, before any section buffer exists.
+    fn parse_header(&mut self) -> Result<(), String> {
+        let b = &self.header_buf;
+        let (family, flags, n_sections, reserved) = (b[0], b[1], b[2] as usize, b[3]);
+        if reserved != 0 {
+            return Err(format!("binary payload: reserved header byte is {reserved}, not 0"));
+        }
+        let kinds = section_plan(family, flags)?;
+        if n_sections != kinds.len() {
+            return Err(format!(
+                "binary payload: family {family} declares {n_sections} sections, expected {}",
+                kinds.len()
+            ));
+        }
+        let n_global = u64::from_le_bytes(b[4..12].try_into().unwrap());
+        let meta = u64::from_le_bytes(b[12..20].try_into().unwrap());
+        if family == FAMILY_MODULAR && meta != 0 {
+            return Err(format!("binary payload: modular meta must be 0, got {meta}"));
+        }
+        let mut sections = Vec::with_capacity(n_sections);
+        let mut declared = b.len();
+        for (i, kind) in kinds.iter().enumerate() {
+            let at = HEADER_FIXED + SECTION_DESC * i;
+            let len = u64::from_le_bytes(b[at..at + 8].try_into().unwrap());
+            let width = b[at + 8];
+            if !kind.width_ok(width) {
+                return Err(format!("binary payload: section {i} has invalid width {width}"));
+            }
+            if len % width as u64 != 0 {
+                return Err(format!(
+                    "binary payload: section {i} length {len} is not a multiple of width {width}"
+                ));
+            }
+            let len = usize::try_from(len)
+                .map_err(|_| format!("binary payload: section {i} length {len} overflows"))?;
+            declared = declared
+                .checked_add(len)
+                .ok_or_else(|| "binary payload: section lengths overflow".to_string())?;
+            sections.push((len, width));
+        }
+        // The hostile-length cap: the header must account for the frame's
+        // payload bytes exactly, or nothing gets allocated.
+        if declared != self.expected {
+            return Err(format!(
+                "binary payload: header declares {declared} bytes, frame carries {}",
+                self.expected
+            ));
+        }
+        self.header = Some(BinHeader { family, flags, n_global, meta, sections, kinds });
+        Ok(())
+    }
+
+    /// Convert the just-finished section's raw bytes to its typed form.
+    fn complete_section(&mut self) {
+        let h = self.header.as_ref().expect("section completed before the header");
+        let (_, width) = h.sections[self.cur];
+        let bytes = std::mem::take(&mut self.pending);
+        let typed = match h.kinds[self.cur] {
+            SectionKind::Ints => TypedSection::Ints(decode_ints(&bytes, width)),
+            SectionKind::F32s => TypedSection::F32s(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+                    .collect(),
+            ),
+            SectionKind::F64s => TypedSection::F64s(
+                bytes
+                    .chunks_exact(8)
+                    .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+                    .collect(),
+            ),
+            SectionKind::Weights => TypedSection::Weights(
+                bytes
+                    .chunks_exact(WEIGHT_STRIDE as usize)
+                    .map(|c| {
+                        (
+                            u32::from_le_bytes(c[..4].try_into().unwrap()),
+                            f64::from_bits(u64::from_le_bytes(c[4..].try_into().unwrap())),
+                        )
+                    })
+                    .collect(),
+            ),
+        };
+        self.done.push(typed);
+        self.cur += 1;
+    }
+
+    /// Zero-length sections complete the moment they are reached —
+    /// including a run of them at the very end of the payload, where no
+    /// further `feed` bytes will arrive to drive the loop.
+    fn advance_empty(&mut self) {
+        while let Some(&(0, _)) = self.header.as_ref().and_then(|h| h.sections.get(self.cur)) {
+            self.complete_section();
+        }
+    }
+
+    /// Assemble the payload.  Errors if any declared byte is missing, if
+    /// a value does not fit its field, or if the payload fails the same
+    /// [`PartitionPayload::validate`] the JSON path runs.
+    pub fn finish(self) -> Result<PartitionPayload, String> {
+        let Some(h) = self.header else {
+            return Err(format!(
+                "binary payload truncated: {} of {} bytes arrived before the header completed",
+                self.fed, self.expected
+            ));
+        };
+        if self.cur < h.sections.len() {
+            return Err(format!(
+                "binary payload truncated in section {} of {} ({} of {} bytes arrived)",
+                self.cur + 1,
+                h.sections.len(),
+                self.fed,
+                self.expected
+            ));
+        }
+        let mut done = self.done.into_iter();
+        let elems = match done.next() {
+            Some(TypedSection::Ints(vals)) => vals
+                .into_iter()
+                .map(|v| {
+                    ElemId::try_from(v)
+                        .map_err(|_| format!("binary payload: element id {v} exceeds u32"))
+                })
+                .collect::<Result<Vec<ElemId>, String>>()?,
+            _ => unreachable!("section 0 is always integer elems"),
+        };
+        let data = match h.family {
+            FAMILY_COVER => {
+                let Some(TypedSection::Ints(row_lens)) = done.next() else { unreachable!() };
+                let Some(TypedSection::Ints(raw_items)) = done.next() else { unreachable!() };
+                let mut offsets = Vec::with_capacity(row_lens.len() + 1);
+                let mut acc = 0u64;
+                offsets.push(0);
+                for len in row_lens {
+                    acc = acc
+                        .checked_add(len)
+                        .ok_or_else(|| "binary payload: row lengths overflow".to_string())?;
+                    offsets.push(acc);
+                }
+                let items = raw_items
+                    .into_iter()
+                    .map(|v| {
+                        u32::try_from(v)
+                            .map_err(|_| format!("binary payload: item {v} exceeds u32"))
+                    })
+                    .collect::<Result<Vec<u32>, String>>()?;
+                let weights = match done.next() {
+                    None => None,
+                    Some(TypedSection::Weights(w)) => Some(w),
+                    Some(_) => unreachable!("cover section 3 is always weights"),
+                };
+                PartitionData::Cover {
+                    universe: h.meta as usize,
+                    offsets,
+                    items,
+                    weights,
+                    self_cover: h.flags & FLAG_SELF_COVER != 0,
+                    dominating: h.flags & FLAG_DOMINATING != 0,
+                }
+            }
+            FAMILY_VECTORS => {
+                let Some(TypedSection::F32s(flat)) = done.next() else { unreachable!() };
+                PartitionData::Vectors { dim: h.meta as usize, flat }
+            }
+            FAMILY_FACILITY => {
+                let Some(TypedSection::F64s(columns)) = done.next() else { unreachable!() };
+                PartitionData::Facility { clients: h.meta as usize, columns }
+            }
+            FAMILY_MODULAR => {
+                let Some(TypedSection::F64s(weights)) = done.next() else { unreachable!() };
+                PartitionData::Modular { weights }
+            }
+            _ => unreachable!("parse_header admits only known families"),
+        };
+        let n_global = usize::try_from(h.n_global)
+            .map_err(|_| format!("binary payload: n_global {} overflows", h.n_global))?;
+        let payload = PartitionPayload { n_global, elems, data };
+        payload.validate()?;
+        Ok(payload)
+    }
+}
+
+impl PartitionPayload {
+    /// `(family, flags, meta)` header fields of the binary encoding.
+    fn binary_family(&self) -> (u8, u8, u64) {
+        match &self.data {
+            PartitionData::Cover { universe, weights, self_cover, dominating, .. } => (
+                FAMILY_COVER,
+                (*self_cover as u8) * FLAG_SELF_COVER
+                    | (*dominating as u8) * FLAG_DOMINATING
+                    | (weights.is_some() as u8) * FLAG_WEIGHTED,
+                *universe as u64,
+            ),
+            PartitionData::Vectors { dim, .. } => (FAMILY_VECTORS, 0, *dim as u64),
+            PartitionData::Facility { clients, .. } => (FAMILY_FACILITY, 0, *clients as u64),
+            PartitionData::Modular { .. } => (FAMILY_MODULAR, 0, 0),
+        }
+    }
+
+    /// The `(byte_len, width)` section table, plus the cover per-row
+    /// lengths (computed once; the encoder needs them twice).
+    fn binary_section_table(&self) -> (Vec<(usize, u8)>, Vec<u64>) {
+        let ew = int_width(self.elems.iter().map(|&e| e as u64).max().unwrap_or(0));
+        let mut sections = vec![(self.elems.len() * ew as usize, ew)];
+        let mut row_lens = Vec::new();
+        match &self.data {
+            PartitionData::Cover { offsets, items, weights, .. } => {
+                row_lens = offsets.windows(2).map(|w| w[1] - w[0]).collect();
+                let rw = int_width(row_lens.iter().copied().max().unwrap_or(0));
+                sections.push((row_lens.len() * rw as usize, rw));
+                let iw = int_width(items.iter().map(|&i| i as u64).max().unwrap_or(0));
+                sections.push((items.len() * iw as usize, iw));
+                if let Some(w) = weights {
+                    sections.push((w.len() * WEIGHT_STRIDE as usize, WEIGHT_STRIDE));
+                }
+            }
+            PartitionData::Vectors { flat, .. } => sections.push((flat.len() * 4, 4)),
+            PartitionData::Facility { columns, .. } => sections.push((columns.len() * 8, 8)),
+            PartitionData::Modular { weights } => sections.push((weights.len() * 8, 8)),
+        }
+        (sections, row_lens)
+    }
+
+    /// Exact byte length of [`PartitionPayload::encode_binary`]'s output,
+    /// without encoding — envelope writers size their frames with this.
+    pub fn binary_len(&self) -> usize {
+        let (sections, _) = self.binary_section_table();
+        HEADER_FIXED
+            + SECTION_DESC * sections.len()
+            + sections.iter().map(|&(len, _)| len).sum::<usize>()
+    }
+
+    /// Append the binary encoding (header, section table, raw sections)
+    /// to `out`, section by section — no intermediate tree.
+    pub fn encode_binary(&self, out: &mut Vec<u8>) {
+        let (family, flags, meta) = self.binary_family();
+        let (sections, row_lens) = self.binary_section_table();
+        out.reserve(
+            HEADER_FIXED
+                + SECTION_DESC * sections.len()
+                + sections.iter().map(|&(len, _)| len).sum::<usize>(),
+        );
+        out.extend_from_slice(&[family, flags, sections.len() as u8, 0]);
+        out.extend_from_slice(&(self.n_global as u64).to_le_bytes());
+        out.extend_from_slice(&meta.to_le_bytes());
+        for &(len, width) in &sections {
+            out.extend_from_slice(&(len as u64).to_le_bytes());
+            out.push(width);
+        }
+        push_ints(out, self.elems.iter().map(|&e| e as u64), sections[0].1);
+        match &self.data {
+            PartitionData::Cover { items, weights, .. } => {
+                push_ints(out, row_lens.iter().copied(), sections[1].1);
+                push_ints(out, items.iter().map(|&i| i as u64), sections[2].1);
+                if let Some(w) = weights {
+                    for &(item, x) in w {
+                        out.extend_from_slice(&item.to_le_bytes());
+                        out.extend_from_slice(&x.to_bits().to_le_bytes());
+                    }
+                }
+            }
+            PartitionData::Vectors { flat, .. } => {
+                for &x in flat {
+                    out.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+            PartitionData::Facility { columns, .. } => {
+                for &x in columns {
+                    out.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+            PartitionData::Modular { weights } => {
+                for &x in weights {
+                    out.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// One-shot decode: a [`PartitionDecoder`] fed the whole buffer at
+    /// once, which also guarantees streaming and one-shot decodes agree.
+    pub fn decode_binary(bytes: &[u8]) -> Result<Self, String> {
+        let mut dec = PartitionDecoder::new(bytes.len());
+        dec.feed(bytes)?;
+        dec.finish()
+    }
+}
+
 fn field_u64(v: &Value, key: &str) -> Result<u64, String> {
     v.get(key)
         .and_then(Value::as_u64)
@@ -974,6 +1502,13 @@ mod tests {
         let reparsed = PartitionPayload::from_value(&payload.to_value()).unwrap();
         assert_eq!(reparsed, payload);
 
+        // Binary stability: the v5 section encoding rebuilds it too, and
+        // binary_len predicts the encoded size exactly.
+        let mut bin = Vec::new();
+        payload.encode_binary(&mut bin);
+        assert_eq!(bin.len(), payload.binary_len(), "binary_len must match the encoding");
+        assert_eq!(PartitionPayload::decode_binary(&bin).unwrap(), payload);
+
         let facade = PartitionOracle::from_payload(&reparsed).unwrap();
         assert_eq!(facade.n(), oracle.n(), "facade speaks the global id space");
         assert_eq!(facade.len_local(), elems.len());
@@ -1136,6 +1671,153 @@ mod tests {
             assert_eq!(sa.gain(e).to_bits(), sr.gain(e).to_bits());
         }
         assert!(facade.extract(&[99]).is_err(), "unknown element refuses to extract");
+    }
+
+    #[test]
+    fn streaming_decode_matches_one_shot_byte_at_a_time() {
+        // The overlap path's contract: feeding the frame 1 byte at a time
+        // builds exactly the payload a one-shot decode builds, and the
+        // ready-section count only ever moves forward.
+        let o = cover_oracle(120);
+        let payload = o.partitionable().unwrap().extract_partition(&shard(120, 40, 21));
+        let mut bin = Vec::new();
+        payload.encode_binary(&mut bin);
+        let mut dec = PartitionDecoder::new(bin.len());
+        let mut ready = 0;
+        for (i, b) in bin.iter().enumerate() {
+            assert!(!dec.is_complete(), "complete before byte {i} of {}", bin.len());
+            dec.feed(std::slice::from_ref(b)).unwrap();
+            let now = dec.ready_sections();
+            assert!(now >= ready, "ready sections regressed at byte {i}");
+            ready = now;
+        }
+        assert!(dec.is_complete());
+        assert_eq!(dec.total_sections(), Some(3));
+        assert_eq!(ready, 3, "every section completed");
+        let streamed = dec.finish().unwrap();
+        assert_eq!(streamed, PartitionPayload::decode_binary(&bin).unwrap());
+        assert_eq!(streamed, payload);
+        // The incrementally-built oracle serves the same gains.
+        let facade = PartitionOracle::from_payload(&streamed).unwrap();
+        let (sa, sb) = (o.new_state(None), facade.new_state(None));
+        for &e in &payload.elems {
+            assert_eq!(sa.gain(e).to_bits(), sb.gain(e).to_bits(), "gain({e})");
+        }
+    }
+
+    #[test]
+    fn streaming_decode_matches_one_shot_in_random_chunks() {
+        let o = FacilityLocation::random(9, 70, 5);
+        let payload = o.partitionable().unwrap().extract_partition(&shard(70, 25, 22));
+        let mut bin = Vec::new();
+        payload.encode_binary(&mut bin);
+        let mut rng = Rng::new(404);
+        for _ in 0..20 {
+            let mut dec = PartitionDecoder::new(bin.len());
+            let mut at = 0;
+            let mut ready = 0;
+            while at < bin.len() {
+                let take = 1 + rng.below((bin.len() - at).min(37) as u64) as usize;
+                dec.feed(&bin[at..at + take]).unwrap();
+                assert!(dec.ready_sections() >= ready, "ready sections regressed");
+                ready = dec.ready_sections();
+                at += take;
+            }
+            assert!(dec.is_complete());
+            assert_eq!(dec.finish().unwrap(), payload);
+        }
+    }
+
+    #[test]
+    fn empty_shard_binary_roundtrip() {
+        // Zero-length sections at the tail must complete without any
+        // further feed bytes arriving to drive them.
+        let payload = PartitionPayload {
+            n_global: 10,
+            elems: vec![],
+            data: PartitionData::Modular { weights: vec![] },
+        };
+        let mut bin = Vec::new();
+        payload.encode_binary(&mut bin);
+        assert_eq!(bin.len(), HEADER_FIXED + 2 * SECTION_DESC, "header only");
+        let mut dec = PartitionDecoder::new(bin.len());
+        dec.feed(&bin).unwrap();
+        assert!(dec.is_complete());
+        assert_eq!(dec.ready_sections(), 2);
+        assert_eq!(dec.finish().unwrap(), payload);
+    }
+
+    #[test]
+    fn decoder_overfeed_and_truncation_are_errors_not_panics() {
+        let payload = PartitionPayload {
+            n_global: 8,
+            elems: vec![1, 4],
+            data: PartitionData::Modular { weights: vec![0.5, 2.5] },
+        };
+        let mut bin = Vec::new();
+        payload.encode_binary(&mut bin);
+        // One byte past the declared length is refused at feed time.
+        let mut dec = PartitionDecoder::new(bin.len() - 1);
+        let mut extra = bin.clone();
+        extra.push(0);
+        assert!(dec.feed(&extra).is_err(), "overfeed must be refused");
+        // A short frame finishes with a truncation error, never a panic.
+        for cut in 0..bin.len() {
+            let mut dec = PartitionDecoder::new(cut);
+            let err = dec
+                .feed(&bin[..cut])
+                .err()
+                .or_else(|| dec.finish().err())
+                .expect("truncated payload must be an error");
+            assert!(err.contains("binary payload"), "untyped error: {err}");
+        }
+    }
+
+    #[test]
+    fn hostile_section_lengths_are_rejected_before_allocation() {
+        // A header declaring gigabytes in its section table must be
+        // refused by the sum check — the frame is tiny, so nothing sized
+        // by the declared lengths may be allocated.
+        let payload = PartitionPayload {
+            n_global: 8,
+            elems: vec![1, 4],
+            data: PartitionData::Modular { weights: vec![0.5, 2.5] },
+        };
+        let mut bin = Vec::new();
+        payload.encode_binary(&mut bin);
+        let mut hostile = bin.clone();
+        // Section 0's declared length → 2^40 bytes.
+        hostile[HEADER_FIXED..HEADER_FIXED + 8]
+            .copy_from_slice(&(1u64 << 40).to_le_bytes());
+        let mut dec = PartitionDecoder::new(hostile.len());
+        let err = dec
+            .feed(&hostile)
+            .err()
+            .or_else(|| dec.finish().err())
+            .expect("oversized declared length must be an error");
+        assert!(err.contains("declares"), "sum check should trip: {err}");
+    }
+
+    #[test]
+    fn f32_rows_survive_the_binary_codec_bit_exactly() {
+        let payload = PartitionPayload {
+            n_global: 4,
+            elems: vec![2, 0],
+            data: PartitionData::Vectors {
+                dim: 3,
+                flat: vec![0.1f32, -2.5e-30, 3.4e38, 1.0 / 3.0, f32::MIN_POSITIVE, -0.0],
+            },
+        };
+        let mut bin = Vec::new();
+        payload.encode_binary(&mut bin);
+        let back = PartitionPayload::decode_binary(&bin).unwrap();
+        match (&payload.data, &back.data) {
+            (PartitionData::Vectors { flat: a, .. }, PartitionData::Vectors { flat: b, .. }) => {
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(a), bits(b));
+            }
+            _ => panic!("family changed in flight"),
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@ use greedyml::algo::{
 };
 use greedyml::coordinator::{build_problem, experiment::build_constraint, problem_spec};
 use greedyml::dist::wire::{read_frame, write_frame, FromWorker, ToWorker, PROTOCOL_VERSION};
-use greedyml::dist::{BackendSpec, DistError, ShipSpec};
+use greedyml::dist::{BackendSpec, DistError, FaultSpec, ShipSpec, WireSpec};
 use greedyml::tree::AccumulationTree;
 use greedyml::util::config::Config;
 use std::io::{BufRead, BufReader, BufWriter};
@@ -40,11 +40,18 @@ struct ServeDaemon {
 
 impl ServeDaemon {
     fn spawn() -> Self {
-        let mut child = Command::new(worker_bin())
-            .args(["serve", "--bind", "127.0.0.1:0"])
-            .stdout(Stdio::piped())
-            .spawn()
-            .expect("spawn greedyml serve");
+        Self::spawn_env(&[])
+    }
+
+    /// Spawn with extra environment — how the fault-injection tests hand
+    /// one specific daemon its `GREEDYML_FAULT_PLAN`.
+    fn spawn_env(env: &[(&str, &str)]) -> Self {
+        let mut cmd = Command::new(worker_bin());
+        cmd.args(["serve", "--bind", "127.0.0.1:0"]).stdout(Stdio::piped());
+        for (k, v) in env {
+            cmd.env(k, v);
+        }
+        let mut child = cmd.spawn().expect("spawn greedyml serve");
         // The daemon's one stdout line: "greedyml serve: listening on <addr>".
         let mut line = String::new();
         BufReader::new(child.stdout.as_mut().expect("piped stdout"))
@@ -639,6 +646,137 @@ fn tcp_daemon_death_between_jobs_poisons_the_session_and_the_pool_recovers() {
     assert_eq!(pool.sessions_established(), 2, "recovery re-establishes from scratch");
     assert_eq!(third.solution, first.solution);
     assert_eq!(third.value.to_bits(), first.value.to_bits());
+}
+
+// ---- binary wire (--wire binary, protocol v5) ---------------------------
+
+#[test]
+fn binary_wire_matches_json_and_thread_across_process_and_tcp() {
+    // The v5 cross-format parity matrix: {process, tcp} × {json, binary}
+    // under partition shipping, every cell bit-identical to the thread
+    // backend (and hence to every other cell) — the frame encoding
+    // decides bytes on the wire, never results.
+    let parsed = Config::parse(COVERAGE_SPEC).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+    let base = DistConfig::greedyml(AccumulationTree::new(4, 2), 42);
+    let thread_cfg = DistConfig { backend: BackendSpec::Thread, ..base.clone() };
+    let thread = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &thread_cfg)
+        .expect("thread backend run");
+    let fleet: Vec<ServeDaemon> = (0..2).map(|_| ServeDaemon::spawn()).collect();
+    for wire in [WireSpec::Json, WireSpec::Binary] {
+        let process_cfg = DistConfig {
+            backend: BackendSpec::Process,
+            ship: ShipSpec::Partition,
+            problem: Some(problem_spec(&parsed)),
+            worker_bin: Some(worker_bin()),
+            wire,
+            ..base.clone()
+        };
+        let process = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &process_cfg)
+            .unwrap_or_else(|e| panic!("process backend under {wire:?}: {e}"));
+        assert_parity(&thread, &process);
+        let tcp =
+            DistConfig { ship: ShipSpec::Partition, wire, ..tcp_cfg(&base, &parsed, &fleet) };
+        let tcp_out = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &tcp)
+            .unwrap_or_else(|e| panic!("tcp backend under {wire:?}: {e}"));
+        assert_parity(&thread, &tcp_out);
+    }
+}
+
+#[test]
+fn binary_wire_spec_shipping_and_kmedoid_floats_stay_bit_identical() {
+    // Binary framing must be inert under spec shipping (only shipped
+    // solutions change encoding) and bit-exact for the float-heavy
+    // k-medoid local-view path under partition shipping.
+    let cfg = DistConfig {
+        wire: WireSpec::Binary,
+        ..DistConfig::greedyml(AccumulationTree::new(4, 2), 42)
+    };
+    let (thread, process) = run_both(COVERAGE_SPEC, &cfg);
+    assert_parity(&thread, &process);
+
+    let spec = "[dataset]\nkind = gaussian\nn = 192\ndim = 12\nclasses = 6\nseed = 4\n\
+                [problem]\nk = 8\n";
+    let cfg = DistConfig {
+        local_view: true,
+        added_elements: 16,
+        wire: WireSpec::Binary,
+        ..DistConfig::greedyml(AccumulationTree::new(4, 2), 7)
+    };
+    let (thread, part) = run_thread_and_partition(spec, &cfg);
+    assert_parity(&thread, &part);
+    assert!(thread.value > 0.0);
+}
+
+#[test]
+fn warm_fleet_reuse_under_binary_wire_and_json_jobs_get_a_separate_fleet() {
+    // A fleet speaks the wire mode it was established with for its whole
+    // lifetime: two binary jobs share one resident session, while a json
+    // job — same problem, same tree — must establish its own fleet.  All
+    // three stay bit-identical to the thread backend.
+    let parsed = Config::parse(COVERAGE_SPEC).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let pool = SessionPool::new();
+    let jobs = [(6usize, WireSpec::Binary), (10, WireSpec::Binary), (10, WireSpec::Json)];
+    for (i, (k, wire)) in jobs.into_iter().enumerate() {
+        let spec = format!("{}problem.k = {k}\n", problem_spec(&parsed));
+        let spec_cfg = Config::parse(&spec).unwrap();
+        let (constraint, _) = build_constraint(&spec_cfg, problem.oracle.n()).unwrap();
+        let cfg = DistConfig {
+            backend: BackendSpec::Process,
+            ship: ShipSpec::Partition,
+            problem: Some(spec),
+            worker_bin: Some(worker_bin()),
+            wire,
+            ..DistConfig::greedyml(AccumulationTree::new(4, 2), 42)
+        };
+        let pooled = run_dist_pooled(problem.oracle.as_ref(), constraint.as_ref(), &cfg, &pool)
+            .expect("pooled run");
+        assert_eq!(pool.last_was_warm(), i == 1, "only the second binary job reuses a fleet");
+        let thread_cfg = DistConfig { backend: BackendSpec::Thread, ..cfg.clone() };
+        let thread = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &thread_cfg)
+            .expect("thread run");
+        assert_parity(&thread, &pooled);
+    }
+    assert_eq!(pool.sessions_established(), 2, "binary and json fleets never mix");
+    assert_eq!(pool.jobs_run(), 3);
+    assert_eq!(pool.warm_jobs(), 1);
+}
+
+#[test]
+fn tcp_retry_revives_a_killed_binary_session_bit_identically() {
+    // `--on-fault retry` under `--wire binary`: machine 1 lands on the
+    // doomed daemon (round-robin placement), whose plan kills the session
+    // at its Leaf command.  The supervisor dials the next host and
+    // replays the command log — the binary init_part frame included — and
+    // the run must end bit-identical to the fault-free thread backend.
+    let parsed = Config::parse(COVERAGE_SPEC).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+    let base = DistConfig::greedyml(AccumulationTree::new(4, 2), 42);
+    let thread_cfg = DistConfig { backend: BackendSpec::Thread, ..base.clone() };
+    let thread = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &thread_cfg)
+        .expect("thread run");
+    let daemons = [
+        ServeDaemon::spawn(),
+        ServeDaemon::spawn_env(&[("GREEDYML_FAULT_PLAN", "kill:m1@leaf")]),
+    ];
+    let cfg = DistConfig {
+        ship: ShipSpec::Partition,
+        wire: WireSpec::Binary,
+        on_fault: FaultSpec::Retry,
+        ..tcp_cfg(&base, &parsed, &daemons)
+    };
+    let retried = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &cfg)
+        .expect("supervised binary tcp run");
+    assert_eq!(retried.solution, thread.solution, "revival must not change the answer");
+    assert_eq!(retried.value.to_bits(), thread.value.to_bits());
+    assert_eq!(retried.critical_calls, thread.critical_calls);
+    assert_eq!(retried.total_calls, thread.total_calls);
+    assert!(retried.faults.faults_seen >= 1, "{:?}", retried.faults);
+    assert!(retried.faults.retries >= 1, "{:?}", retried.faults);
+    assert!(retried.faults.machines_dropped.is_empty(), "retry drops nobody");
 }
 
 #[test]

@@ -84,6 +84,7 @@ fn job(id: u64, spec: &str, backend: &str, on_fault: &str) -> JobSpec {
         threads: 2,
         local_view: false,
         on_fault: on_fault.to_string(),
+        wire: "auto".to_string(),
     }
 }
 

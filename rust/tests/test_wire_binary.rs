@@ -1,0 +1,472 @@
+//! The binary wire codec battery (wire protocol v5).
+//!
+//! Locks down the `--wire binary` encoding from the outside: seeded
+//! arbitrary payloads across every oracle family round-trip bitwise
+//! through `encode_binary`/`decode_binary` and through the framed
+//! `write_cmd`/`read_cmd`/`read_session_init` paths, and a mutation fuzz
+//! battery (truncations at every section boundary, header byte flips,
+//! oversized declared lengths) proves hostile bytes surface as *typed*
+//! errors — `Err(String)` at the payload layer, `DistError` at the frame
+//! layer — and never as a panic or an unbounded allocation.
+
+use greedyml::dist::wire::{read_cmd, read_reply, read_session_init, write_cmd, write_reply};
+use greedyml::dist::WireMode;
+use greedyml::objective::{PartitionData, PartitionDecoder, PartitionPayload};
+use greedyml::util::rng::Rng;
+
+// ---- seeded payload generator -----------------------------------------
+
+/// Draw `len` global element ids: distinct, shard-ordered arbitrarily,
+/// bounded by `n_global`.
+fn gen_elems(rng: &mut Rng, n_global: usize, len: usize) -> Vec<u32> {
+    let mut elems: Vec<u32> =
+        rng.sample_distinct(n_global, len).into_iter().map(|e| e as u32).collect();
+    rng.shuffle(&mut elems);
+    elems
+}
+
+/// Coverage-family shard with ragged CSR rows (including empty rows and,
+/// sometimes, a trailing run of empty rows — the case that exercises the
+/// decoder's zero-length-section handling).
+fn gen_cover(
+    rng: &mut Rng,
+    weighted: bool,
+    self_cover: bool,
+    dominating: bool,
+) -> PartitionPayload {
+    let n_global = 4 + rng.below(2000) as usize;
+    let len = rng.below(n_global.min(40) as u64 + 1) as usize;
+    let universe = if dominating { n_global } else { 1 + rng.below(500) as usize };
+    let elems = gen_elems(rng, n_global, len);
+    let mut offsets = vec![0u64];
+    let mut items = Vec::new();
+    for i in 0..len {
+        // Ragged: empty rows are common, and the last rows are often empty.
+        let row = if rng.bool(0.3) || (i + 2 >= len && rng.bool(0.5)) {
+            0
+        } else {
+            rng.below(12) as usize
+        };
+        let mut row_items: Vec<u32> = rng
+            .sample_distinct(universe, row.min(universe))
+            .into_iter()
+            .map(|x| x as u32)
+            .collect();
+        row_items.sort_unstable();
+        offsets.push(offsets.last().unwrap() + row_items.len() as u64);
+        items.extend(row_items);
+    }
+    let weights = weighted.then(|| {
+        let mut present: Vec<u32> = items.clone();
+        present.sort_unstable();
+        present.dedup();
+        present.into_iter().map(|i| (i, rng.f64() * 10.0 - 5.0)).collect()
+    });
+    PartitionPayload {
+        n_global,
+        elems,
+        data: PartitionData::Cover { universe, offsets, items, weights, self_cover, dominating },
+    }
+}
+
+fn gen_vectors(rng: &mut Rng) -> PartitionPayload {
+    let n_global = 2 + rng.below(3000) as usize;
+    let len = rng.below(n_global.min(30) as u64 + 1) as usize;
+    let dim = 1 + rng.below(16) as usize;
+    let flat = (0..len * dim).map(|_| rng.f32() * 8.0 - 4.0).collect();
+    PartitionPayload {
+        n_global,
+        elems: gen_elems(rng, n_global, len),
+        data: PartitionData::Vectors { dim, flat },
+    }
+}
+
+fn gen_facility(rng: &mut Rng) -> PartitionPayload {
+    let n_global = 2 + rng.below(1000) as usize;
+    let len = rng.below(n_global.min(20) as u64 + 1) as usize;
+    let clients = 1 + rng.below(12) as usize;
+    let columns = (0..len * clients).map(|_| rng.f64() * 3.0).collect();
+    PartitionPayload {
+        n_global,
+        elems: gen_elems(rng, n_global, len),
+        data: PartitionData::Facility { clients, columns },
+    }
+}
+
+fn gen_modular(rng: &mut Rng) -> PartitionPayload {
+    let n_global = 1 + rng.below(100_000) as usize;
+    let len = rng.below(n_global.min(25) as u64 + 1) as usize;
+    let weights = (0..len).map(|_| rng.f64() * 100.0 - 50.0).collect();
+    PartitionPayload {
+        n_global,
+        elems: gen_elems(rng, n_global, len),
+        data: PartitionData::Modular { weights },
+    }
+}
+
+/// One arbitrary payload; `pick` cycles through every family and flag
+/// combination so a seeded loop covers them all.
+fn gen_payload(rng: &mut Rng, pick: u64) -> PartitionPayload {
+    match pick % 8 {
+        0 => gen_cover(rng, false, false, false), // k-cover
+        1 => gen_cover(rng, true, false, false),  // weighted cover
+        2 => gen_cover(rng, false, true, true),   // k-dominating-set
+        3 => gen_cover(rng, false, false, true),  // open-neighbourhood dominating
+        4 => gen_cover(rng, true, true, false),   // weighted + self-cover
+        5 => gen_vectors(rng),                    // k-medoid
+        6 => gen_facility(rng),
+        _ => gen_modular(rng),
+    }
+}
+
+/// The hand-picked edge cases every run must cover regardless of seed.
+fn edge_payloads() -> Vec<PartitionPayload> {
+    vec![
+        // Empty shard (a machine the tape assigned nothing to).
+        PartitionPayload {
+            n_global: 100,
+            elems: vec![],
+            data: PartitionData::Modular { weights: vec![] },
+        },
+        // Empty cover shard: every section has length zero.
+        PartitionPayload {
+            n_global: 50,
+            elems: vec![],
+            data: PartitionData::Cover {
+                universe: 9,
+                offsets: vec![0],
+                items: vec![],
+                weights: None,
+                self_cover: false,
+                dominating: false,
+            },
+        },
+        // Single element, empty row: the items section is the zero-length
+        // *last* section, completed with no trailing feed bytes.
+        PartitionPayload {
+            n_global: 10,
+            elems: vec![7],
+            data: PartitionData::Cover {
+                universe: 4,
+                offsets: vec![0, 0],
+                items: vec![],
+                weights: None,
+                self_cover: true,
+                dominating: false,
+            },
+        },
+        // Single element, single weight.
+        PartitionPayload {
+            n_global: 2,
+            elems: vec![1],
+            data: PartitionData::Modular { weights: vec![-0.0] },
+        },
+        // Ragged CSR: a fat row between empties, items needing width 4.
+        PartitionPayload {
+            n_global: 1 << 20,
+            elems: vec![0, 1 << 19, 3],
+            data: PartitionData::Cover {
+                universe: 1 << 18,
+                offsets: vec![0, 0, 300, 300],
+                items: (0..300).map(|i| i * 800).collect(),
+                weights: None,
+                self_cover: false,
+                dominating: false,
+            },
+        },
+        // Weighted cover with non-finite-adjacent bit patterns.
+        PartitionPayload {
+            n_global: 8,
+            elems: vec![2, 5],
+            data: PartitionData::Cover {
+                universe: 3,
+                offsets: vec![0, 1, 3],
+                items: vec![1, 0, 2],
+                weights: Some(vec![(0, f64::MIN_POSITIVE), (1, 1e300), (2, -0.0)]),
+                self_cover: false,
+                dominating: true,
+            },
+        },
+        // Tiny vector shard with subnormal-adjacent f32 bit patterns.
+        PartitionPayload {
+            n_global: 5,
+            elems: vec![0, 4],
+            data: PartitionData::Vectors { dim: 2, flat: vec![0.5, -0.5, f32::MIN_POSITIVE, 3.0] },
+        },
+    ]
+}
+
+/// Every payload the battery runs: seeded arbitraries plus the edges.
+fn battery(seed: u64, arbitrary: usize) -> Vec<PartitionPayload> {
+    let mut rng = Rng::new(seed);
+    let mut all = edge_payloads();
+    for pick in 0..arbitrary as u64 {
+        all.push(gen_payload(&mut rng, pick));
+    }
+    all
+}
+
+fn encode(p: &PartitionPayload) -> Vec<u8> {
+    let mut out = Vec::new();
+    p.encode_binary(&mut out);
+    out
+}
+
+/// Byte offsets of the section boundaries inside an encoded payload
+/// (derived from the self-describing header, not the encoder internals).
+fn section_boundaries(bytes: &[u8]) -> Vec<usize> {
+    let n_sections = bytes[2] as usize;
+    let mut at = 20 + 9 * n_sections;
+    let mut cuts = vec![at];
+    for i in 0..n_sections {
+        let desc = 20 + 9 * i;
+        let len = u64::from_le_bytes(bytes[desc..desc + 8].try_into().unwrap()) as usize;
+        at += len;
+        cuts.push(at);
+    }
+    cuts
+}
+
+// ---- round-trip ------------------------------------------------------
+
+#[test]
+fn seeded_payloads_roundtrip_bitwise() {
+    for payload in battery(0xB1AB, 64) {
+        let bytes = encode(&payload);
+        assert_eq!(bytes.len(), payload.binary_len(), "binary_len must predict the encoding");
+        let back = PartitionPayload::decode_binary(&bytes).unwrap_or_else(|e| {
+            panic!("decode failed for {payload:?}: {e}");
+        });
+        // PartitionData's PartialEq compares floats with ==, which is
+        // bitwise for every value the generator emits except NaN (never
+        // generated); the f64 sections travel as to_bits so equality here
+        // is bit-exactness.
+        assert_eq!(back, payload);
+        assert_eq!(encode(&back), bytes, "re-encoding must reproduce the exact bytes");
+    }
+}
+
+#[test]
+fn streaming_decode_agrees_with_one_shot_for_every_chunking() {
+    // The worker's streaming ingest path must produce the same payload
+    // regardless of how the transport slices the bytes.
+    let mut rng = Rng::new(77);
+    for payload in battery(0xFEED, 24) {
+        let bytes = encode(&payload);
+        for chunk_size in [1, 2, 7, 64, bytes.len().max(1)] {
+            let mut dec = PartitionDecoder::new(bytes.len());
+            for chunk in bytes.chunks(chunk_size.min(bytes.len()).max(1)) {
+                dec.feed(chunk).unwrap();
+            }
+            assert!(dec.is_complete());
+            assert_eq!(dec.finish().unwrap(), payload);
+        }
+        // And one random ragged chunking.
+        let mut dec = PartitionDecoder::new(bytes.len());
+        let mut at = 0;
+        while at < bytes.len() {
+            let take = 1 + rng.below((bytes.len() - at) as u64) as usize;
+            dec.feed(&bytes[at..at + take]).unwrap();
+            at += take;
+        }
+        assert_eq!(dec.finish().unwrap(), payload);
+    }
+}
+
+#[test]
+fn framed_init_part_roundtrips_through_both_read_paths() {
+    use greedyml::dist::wire::ToWorker;
+    for (i, payload) in battery(0xCAFE, 16).into_iter().enumerate() {
+        let cmd = ToWorker::InitPart { session: i as u64, machine: 3, threads: 2, payload };
+        let mut buf = Vec::new();
+        write_cmd(&mut buf, &cmd, WireMode::Binary).unwrap();
+        let (via_read_cmd, mode) = read_cmd(&mut buf.as_slice()).unwrap().expect("frame");
+        assert_eq!(via_read_cmd, cmd);
+        assert_eq!(mode, WireMode::Binary);
+        let (via_stream, mode) = read_session_init(&mut buf.as_slice()).unwrap().expect("frame");
+        assert_eq!(via_stream, cmd, "streaming and buffered reads must agree");
+        assert_eq!(mode, WireMode::Binary);
+    }
+}
+
+#[test]
+fn framed_sol_roundtrips_with_extracted_shard() {
+    use greedyml::dist::node::ChildMsg;
+    use greedyml::dist::wire::FromWorker;
+    for (i, payload) in battery(0xD00D, 12).into_iter().enumerate() {
+        let sol = payload.elems.clone();
+        let msg = FromWorker::Sol(ChildMsg {
+            from: i as u32,
+            sol,
+            value: 0.1 + i as f64 / 3.0,
+            bytes: 17 * i as u64,
+            data: Some(payload),
+        });
+        let mut buf = Vec::new();
+        write_reply(&mut buf, &msg, WireMode::Binary).unwrap();
+        assert_eq!(read_reply(&mut buf.as_slice()).unwrap().unwrap(), msg);
+    }
+}
+
+// ---- mutation fuzz ---------------------------------------------------
+
+#[test]
+fn truncation_at_every_section_boundary_is_a_typed_error() {
+    for payload in battery(0x7E57, 12) {
+        let bytes = encode(&payload);
+        let mut cuts = section_boundaries(&bytes);
+        // Also cut inside the fixed header and inside the section table.
+        cuts.extend([1, 3, 12, 21]);
+        for cut in cuts {
+            if cut >= bytes.len() {
+                continue;
+            }
+            // One-shot decode of a short buffer: the header's declared
+            // total no longer matches, or a section never completes.
+            let err = PartitionPayload::decode_binary(&bytes[..cut])
+                .expect_err("truncated payload must not decode");
+            assert!(!err.is_empty());
+            // Streaming decode that is told the true length but starved
+            // of the tail: finish() reports the truncation.
+            let mut dec = PartitionDecoder::new(bytes.len());
+            dec.feed(&bytes[..cut]).unwrap();
+            let err = dec.finish().expect_err("starved decoder must not finish");
+            assert!(err.contains("truncated"), "want a truncation error, got: {err}");
+        }
+    }
+}
+
+#[test]
+fn feeding_past_the_declared_length_is_rejected() {
+    let bytes = encode(&edge_payloads()[0]);
+    let mut dec = PartitionDecoder::new(bytes.len());
+    dec.feed(&bytes).unwrap();
+    let err = dec.feed(&[0]).expect_err("overfeed must error");
+    assert!(err.contains("past the declared length"), "got: {err}");
+}
+
+#[test]
+fn hostile_header_fields_error_without_allocating() {
+    let payload = &edge_payloads()[4]; // the ragged wide-id cover shard
+    let base = encode(payload);
+
+    let mutate = |at: usize, to: u8| {
+        let mut b = base.clone();
+        b[at] = to;
+        b
+    };
+    // Unknown family tags.
+    for fam in [0u8, 5, 99, 255] {
+        let err = PartitionPayload::decode_binary(&mutate(0, fam)).unwrap_err();
+        assert!(err.contains("family"), "family {fam}: got {err}");
+    }
+    // Unknown flag bits on a cover payload; any flags on a modular one.
+    let err = PartitionPayload::decode_binary(&mutate(1, 0x80)).unwrap_err();
+    assert!(err.contains("flags"), "got {err}");
+    let modular = encode(&edge_payloads()[3]);
+    let mut b = modular.clone();
+    b[1] = 1;
+    let err = PartitionPayload::decode_binary(&b).unwrap_err();
+    assert!(err.contains("flags"), "got {err}");
+    // Wrong section counts.
+    for n in [0u8, 2, 4, 255] {
+        let err = PartitionPayload::decode_binary(&mutate(2, n)).unwrap_err();
+        assert!(!err.is_empty(), "n_sections {n} must error");
+    }
+    // Nonzero reserved byte.
+    let err = PartitionPayload::decode_binary(&mutate(3, 1)).unwrap_err();
+    assert!(err.contains("reserved"), "got {err}");
+    // Invalid section widths: 0, 3 and 16 are all outside {1, 2, 4, 8}.
+    for (desc, w) in [(28, 0u8), (28, 3), (37, 16)] {
+        let err = PartitionPayload::decode_binary(&mutate(desc, w)).unwrap_err();
+        assert!(err.contains("width"), "width {w} at {desc}: got {err}");
+    }
+    // Oversized declared section length: the sum check must fire before
+    // anything allocates, even when the length is absurd.
+    let mut b = base.clone();
+    b[20..28].copy_from_slice(&u64::MAX.to_le_bytes());
+    b[28] = 1; // keep the width divisibility check satisfied
+    let err = PartitionPayload::decode_binary(&b).unwrap_err();
+    assert!(!err.is_empty(), "oversized length must error, not allocate");
+    let mut b = base.clone();
+    b[20..28].copy_from_slice(&(1u64 << 33).to_le_bytes());
+    b[28] = 1;
+    let err = PartitionPayload::decode_binary(&b).unwrap_err();
+    assert!(err.contains("declares"), "got {err}");
+}
+
+#[test]
+fn every_single_byte_flip_is_an_error_or_a_valid_payload_never_a_panic() {
+    // The blanket no-panic sweep: a flipped byte may still decode (data
+    // bytes are arbitrary), but it must never panic, hang, or allocate
+    // beyond the buffer it was handed.
+    for payload in battery(0xF1B, 6) {
+        let bytes = encode(&payload);
+        for at in 0..bytes.len() {
+            for flip in [0x01u8, 0x80, 0xff] {
+                let mut b = bytes.clone();
+                b[at] ^= flip;
+                let _ = PartitionPayload::decode_binary(&b);
+            }
+        }
+    }
+}
+
+#[test]
+fn mutated_frames_surface_as_dist_errors_at_the_wire_layer() {
+    use greedyml::dist::wire::ToWorker;
+    let cmd = ToWorker::InitPart {
+        session: 5,
+        machine: 0,
+        threads: 1,
+        payload: edge_payloads().remove(5),
+    };
+    let mut full = Vec::new();
+    write_cmd(&mut full, &cmd, WireMode::Binary).unwrap();
+
+    // Corrupt envelope tag: neither read path may panic.
+    let mut b = full.clone();
+    b[5] = 0x63;
+    assert!(read_cmd(&mut b.as_slice()).is_err());
+    assert!(read_session_init(&mut b.as_slice()).is_err());
+
+    // Truncations across the whole frame (prefix, ctype, envelope,
+    // payload): EOF inside the 4-byte length prefix is treated as a clean
+    // frame boundary (Ok(None)); everything past it is a typed DistError
+    // from both the buffered and the streaming reader.
+    for cut in 0..full.len() {
+        let b = &full[..cut];
+        if cut < 4 {
+            assert!(read_cmd(&mut &*b).unwrap().is_none());
+            assert!(read_session_init(&mut &*b).unwrap().is_none());
+        } else {
+            read_cmd(&mut &*b).expect_err("truncated frame must error");
+            read_session_init(&mut &*b).expect_err("truncated frame must error");
+        }
+    }
+
+    // A length prefix promising more than the cap is refused up front.
+    let mut b = full.clone();
+    b[0..4].copy_from_slice(&(1u32 << 31).to_le_bytes());
+    let err = read_cmd(&mut b.as_slice()).unwrap_err();
+    assert!(err.to_string().contains("exceeds cap"), "got {err}");
+
+    // A shortened length prefix leaves payload-header/frame disagreement
+    // for the codec's sum check; a lengthened one starves the reader.
+    let mut b = full.clone();
+    b[0..4].copy_from_slice(&(full.len() as u32 - 5 - 4).to_le_bytes());
+    b.truncate(full.len() - 4);
+    assert!(read_cmd(&mut b.as_slice()).is_err());
+    assert!(read_session_init(&mut b.as_slice()).is_err());
+
+    // Flip every header/envelope byte of the frame: typed error or valid
+    // decode, never a panic (buffered and streaming paths both).
+    for at in 0..(full.len().min(64)) {
+        for flip in [0x01u8, 0xff] {
+            let mut b = full.clone();
+            b[at] ^= flip;
+            let _ = read_cmd(&mut b.as_slice());
+            let _ = read_session_init(&mut b.as_slice());
+        }
+    }
+}
