@@ -22,7 +22,7 @@ mod harness;
 use greedyml::algo::{run_dist, run_dist_pooled, DistConfig, SessionPool};
 use greedyml::coordinator::{build_problem, experiment::build_constraint, problem_spec};
 use greedyml::dist::wire::{write_cmd, ToWorker};
-use greedyml::dist::{BackendSpec, ShipSpec, WireMode, WireSpec};
+use greedyml::dist::{BackendSpec, CoresetSpec, ShipSpec, WireMode, WireSpec};
 use greedyml::tree::AccumulationTree;
 use greedyml::util::config::Config;
 use greedyml::util::json::Json;
@@ -219,6 +219,61 @@ fn main() {
         job_ks.len()
     );
 
+    // ---- coreset mode: what moves through the accumulation tree ---------
+    // The streaming premise (docs/streaming.md): in coreset mode every
+    // message up the tree is a sieve coreset — a subset of the sender's
+    // input — so total accumulation bytes must come in strictly below
+    // full-shard shipping (moving whole O(n/m) shards through the tree),
+    // and the meter's leaf charge drops from the shard to the coreset.
+    harness::section("coreset vs full: accumulation bytes and peak memory");
+    let accum_bytes = |out: &greedyml::algo::DistOutcome| -> u64 {
+        out.machines.iter().map(|s| s.bytes_sent).sum()
+    };
+    let full_run = run_dist(
+        oracle,
+        constraint.as_ref(),
+        &DistConfig { backend: BackendSpec::Thread, ..base.clone() },
+    )
+    .expect("full-mode run");
+    let coreset_run = run_dist(
+        oracle,
+        constraint.as_ref(),
+        &DistConfig { backend: BackendSpec::Thread, coreset: CoresetSpec::On, ..base.clone() },
+    )
+    .expect("coreset-mode run");
+    let shard_total: usize = shard_bytes.iter().sum();
+    let accum_full = accum_bytes(&full_run);
+    let accum_coreset = accum_bytes(&coreset_run);
+    let accum_over_shard = accum_coreset as f64 / shard_total as f64;
+    println!(
+        "accumulation bytes: full-shard shipping {shard_total} B, coreset {accum_coreset} B \
+         (ratio {accum_over_shard:.3}); full-mode solution shipping {accum_full} B"
+    );
+    println!(
+        "per-worker peak:    full {} B, coreset {} B; value full {:.3}, coreset {:.3}",
+        full_run.peak_mem(),
+        coreset_run.peak_mem(),
+        full_run.value,
+        coreset_run.value
+    );
+    assert!(
+        (accum_coreset as usize) < shard_total,
+        "coreset accumulation bytes ({accum_coreset}) must be strictly below full-shard \
+         shipping ({shard_total})"
+    );
+    assert!(
+        coreset_run.peak_mem() <= full_run.peak_mem(),
+        "coreset peak mem {} exceeds full-run peak {}",
+        coreset_run.peak_mem(),
+        full_run.peak_mem()
+    );
+    assert!(
+        coreset_run.value >= 0.4 * full_run.value,
+        "coreset value {} fell out of the sieve band of {}",
+        coreset_run.value,
+        full_run.value
+    );
+
     if harness::flag("--json") {
         let doc = Json::obj([
             ("bench", Json::Str("dist_ship".to_string())),
@@ -245,6 +300,12 @@ fn main() {
             ("cold_init_bytes", Json::Num(cold_init as f64)),
             ("warm_job_secs_mean", Json::Num(warm_secs_mean)),
             ("cold_job_secs_mean", Json::Num(cold_secs_mean)),
+            ("full_shard_ship_bytes", Json::Num(shard_total as f64)),
+            ("accum_full_mode_bytes", Json::Num(accum_full as f64)),
+            ("accum_coreset_bytes", Json::Num(accum_coreset as f64)),
+            ("accum_coreset_over_shard_ratio", Json::Num(accum_over_shard)),
+            ("coreset_peak_mem_bytes", Json::Num(coreset_run.peak_mem() as f64)),
+            ("coreset_value", Json::Num(coreset_run.value)),
         ]);
         let path = "BENCH_dist_ship.json";
         std::fs::write(path, doc.to_pretty()).expect("write bench json");

@@ -64,10 +64,11 @@ pub fn run_dist(
         local_view: cfg.local_view,
         added_elements: cfg.added_elements,
         compare_all_children: cfg.compare_all_children,
+        coreset: cfg.coreset.resolve()?,
     };
     // Line 2 of Algorithm 3.1, computed once: the same split feeds the
     // partition-shipping Init shards and the engine's Leaf fan-out.
-    let parts = make_parts(cfg, oracle.n());
+    let parts = make_parts(cfg, oracle.n())?;
     let mut resolved = cfg.backend.resolve()?;
     if resolved != ResolvedBackend::Thread
         && cfg.backend == BackendSpec::Auto
@@ -247,10 +248,21 @@ fn ship_payloads(
 /// Line 2 of Algorithm 3.1: split the ground set over the `m` leaves.
 /// Deterministic in `(cfg.seed, cfg.partition, n, m)` — the partition-
 /// shipping coordinator builds Init shards from the same split the
-/// engine later hands to `Backend::run_leaves`.
-fn make_parts(cfg: &DistConfig, n: usize) -> Vec<Vec<ElemId>> {
+/// engine later hands to `Backend::run_leaves`.  An explicit
+/// [`DistConfig::parts`] pin (live runs keep a fleet's resident shards
+/// in lockstep with the coordinator across deltas) overrides the draw.
+fn make_parts(cfg: &DistConfig, n: usize) -> Result<Vec<Vec<ElemId>>, DistError> {
     let m = cfg.tree.machines();
-    match cfg.partition {
+    if let Some(parts) = &cfg.parts {
+        if parts.len() != m as usize {
+            return Err(DistError::backend(format!(
+                "DistConfig::parts pins {} partitions for {m} machines",
+                parts.len()
+            )));
+        }
+        return Ok(parts.clone());
+    }
+    Ok(match cfg.partition {
         PartitionScheme::Random => RandomTape::draw(n, m, cfg.seed).partition(),
         PartitionScheme::Contiguous => {
             let mut parts = vec![Vec::new(); m as usize];
@@ -259,7 +271,7 @@ fn make_parts(cfg: &DistConfig, n: usize) -> Vec<Vec<ElemId>> {
             }
             parts
         }
-    }
+    })
 }
 
 // ---- resident-shard session pool ---------------------------------------
@@ -284,6 +296,11 @@ struct SessionKey {
     worker_bin: Option<String>,
     /// Pinned shard split (partition shipping only).
     part: Option<PartPin>,
+    /// Dataset epoch the resident shards are at.  A fleet holding
+    /// pre-delta data never key-matches a post-delta job — it is either
+    /// advanced in place ([`run_dist_pooled_live`]) or evicted, so stale
+    /// shards are structurally unreachable.
+    epoch: u64,
 }
 
 /// Under partition shipping the resident shards were cut for exactly one
@@ -355,6 +372,18 @@ impl PoolFleet {
         match self {
             Self::Process(f) => f.ping_all(),
             Self::Tcp(f) => f.ping_all(),
+        }
+    }
+
+    fn advance_epoch(
+        &mut self,
+        epoch: u64,
+        deltas: Vec<crate::objective::PartitionDelta>,
+        fresh: Vec<PartitionPayload>,
+    ) -> Result<u64, DistError> {
+        match self {
+            Self::Process(f) => f.advance_epoch(epoch, deltas, fresh),
+            Self::Tcp(f) => f.advance_epoch(epoch, deltas, fresh),
         }
     }
 
@@ -513,6 +542,32 @@ impl SessionPool {
             .map(|i| st.entries.remove(i).1)
     }
 
+    /// Remove a resident fleet matching `key` in everything but the
+    /// dataset epoch (and the epoch-dependent ground-set size of the
+    /// partition pin), holding an *older* epoch — the candidate for an
+    /// in-place [`PoolFleet::advance_epoch`].  Returns the epoch the
+    /// fleet is at along with the fleet; the caller advances it or
+    /// releases it, never serves it as-is.
+    fn check_out_stale(&self, key: &SessionKey) -> Option<(u64, PoolFleet)> {
+        let mut st = self.state();
+        let pos = st.entries.iter().position(|(k, _)| {
+            k.epoch < key.epoch
+                && match (&k.part, &key.part) {
+                    // Live sessions are partition-shipped by construction;
+                    // deltas change n, so the pin matches on the draw only.
+                    (Some(a), Some(b)) => {
+                        a.seed == b.seed
+                            && a.scheme == b.scheme
+                            && a.added_elements == b.added_elements
+                    }
+                    _ => false,
+                }
+                && SessionKey { epoch: k.epoch, part: k.part.clone(), ..key.clone() } == *k
+        })?;
+        let (k, fleet) = st.entries.remove(pos);
+        Some((k.epoch, fleet))
+    }
+
     /// Return a fleet that survived its job to the most-recently-used
     /// slot, then release any overflow (oldest first) outside the lock.
     fn check_in(&self, key: SessionKey, fleet: PoolFleet) {
@@ -591,15 +646,64 @@ pub fn run_dist_pooled_tracked(
     cfg: &DistConfig,
     pool: &SessionPool,
 ) -> Result<PooledRun, DistError> {
+    run_dist_pooled_live(oracle, constraint, cfg, pool, None)
+}
+
+/// [`run_dist_pooled_tracked`] over a live dataset: `oracle` must be the
+/// live problem's current oracle and `cfg.epoch` its current epoch.  A
+/// resident fleet at the same epoch is reused as usual; a fleet exactly
+/// one epoch behind is **advanced in place** — the newest delta's
+/// per-machine sub-deltas ship over the warm connections
+/// ([`crate::dist::ProcessBackend::advance_epoch`] /
+/// [`crate::dist::TcpBackend::advance_epoch`]) and only the solve
+/// re-runs, not the dataset shipping.  A fleet that is staler, or whose
+/// advance fails, is released and the session re-established cold;
+/// pre-delta shards are never served either way.  The leaf partition
+/// replays the delta history over the epoch-0 draw
+/// ([`crate::stream::LiveProblem::parts_for`]), so the incremental
+/// re-solve is bit-identical to a cold run on the post-delta dataset.
+pub fn run_dist_pooled_live(
+    oracle: &dyn Oracle,
+    constraint: &dyn Constraint,
+    cfg: &DistConfig,
+    pool: &SessionPool,
+    live: Option<&crate::stream::LiveProblem>,
+) -> Result<PooledRun, DistError> {
+    if let Some(l) = live {
+        if cfg.epoch != l.epoch() {
+            return Err(DistError::backend(format!(
+                "DistConfig::epoch is {} but the live dataset is at epoch {}",
+                cfg.epoch,
+                l.epoch()
+            )));
+        }
+        if cfg.added_elements != 0 {
+            return Err(DistError::backend(
+                "live runs do not support added_elements: the §6.4 draws are \
+                 baked into resident shards at session-open and cannot follow \
+                 the dataset across deltas",
+            ));
+        }
+    }
     let resolved = cfg.backend.resolve()?;
     if resolved == ResolvedBackend::Thread
         || (cfg.backend == BackendSpec::Auto && cfg.problem.is_none())
     {
         // No session to keep warm (or run_dist's env-advisory fallback
-        // applies); the thread backend is rebuilt per run by design.
+        // applies); the thread backend is rebuilt per run by design.  A
+        // live run still pins the replayed partition: a fresh draw over
+        // the post-delta id space would scatter deleted ids into leaf
+        // streams and diverge from the resident-shard split.
         pool.state().last_was_warm = false;
-        return run_dist(oracle, constraint, cfg)
-            .map(|outcome| PooledRun { outcome, warm: false, retried: false });
+        let outcome = match live {
+            Some(l) if cfg.parts.is_none() => {
+                let mut pinned = cfg.clone();
+                pinned.parts = Some(l.parts_for(make_parts(cfg, l.n0())?, cfg.seed));
+                run_dist(oracle, constraint, &pinned)?
+            }
+            _ => run_dist(oracle, constraint, cfg)?,
+        };
+        return Ok(PooledRun { outcome, warm: false, retried: false });
     }
     let backend_name = match resolved {
         ResolvedBackend::Process => "process",
@@ -608,6 +712,12 @@ pub fn run_dist_pooled_tracked(
     };
     let problem = problem_spec(cfg, backend_name)?;
     let ship = cfg.ship.resolve()?;
+    if live.is_some() && ship != ShipMode::Partition {
+        return Err(DistError::backend(
+            "live runs need partition shipping (--ship partition): deltas \
+             patch resident shards, and spec-shipped workers hold none",
+        ));
+    }
     let wire = cfg.wire.resolve()?;
     let key = SessionKey {
         backend: resolved,
@@ -630,6 +740,7 @@ pub fn run_dist_pooled_tracked(
             }),
             ShipMode::Spec => None,
         },
+        epoch: cfg.epoch,
     };
     let params = NodeParams {
         kind: cfg.kind,
@@ -639,8 +750,19 @@ pub fn run_dist_pooled_tracked(
         local_view: cfg.local_view,
         added_elements: cfg.added_elements,
         compare_all_children: cfg.compare_all_children,
+        coreset: cfg.coreset.resolve()?,
     };
-    let parts = make_parts(cfg, oracle.n());
+    let compute_parts = || -> Result<Vec<Vec<ElemId>>, DistError> {
+        match live {
+            // Replay the delta history over the epoch-0 draw: the same
+            // split the fleet's resident shards evolved through.
+            Some(l) if cfg.parts.is_none() => {
+                Ok(l.parts_for(make_parts(cfg, l.n0())?, cfg.seed))
+            }
+            _ => make_parts(cfg, oracle.n()),
+        }
+    };
+    let parts = compute_parts()?;
     let fault = cfg.on_fault.resolve()?;
 
     // Checkout: the matching fleet (if any) leaves the pool for this
@@ -659,6 +781,28 @@ pub fn run_dist_pooled_tracked(
                 Ok(()) => {}
                 Err(e) if e.is_retryable() => resident = None,
                 Err(e) => return Err(e),
+            }
+        }
+    }
+    // A live session exactly one epoch behind advances in place: only
+    // the newest delta ships, over the already-warm connections.  Staler
+    // fleets — and a fleet whose advance fails for any reason — are
+    // released, never reused: serving pre-delta shards silently is the
+    // failure mode this path exists to prevent, and a cold re-establish
+    // is always correct.
+    if resident.is_none() && key.epoch > 0 {
+        if let Some((old_epoch, mut stale)) = pool.check_out_stale(&key) {
+            let advanced = live.filter(|l| old_epoch + 1 == l.epoch()).and_then(|l| {
+                let d = l.history().last()?;
+                let subs = l.sub_deltas(d, cfg.tree.machines(), cfg.seed).ok()?;
+                let fresh: Vec<PartitionPayload> =
+                    parts.iter().map(|p| l.shard(p)).collect::<Result<_, _>>().ok()?;
+                stale.advance_epoch(l.epoch(), subs, fresh).ok()
+            });
+            if advanced.is_some() {
+                resident = Some(stale);
+            } else {
+                stale.release();
             }
         }
     }
@@ -727,7 +871,7 @@ pub fn run_dist_pooled_tracked(
             // bit-identical to an unfaulted run.
             drop(fleet);
             pool.state().retried_jobs += 1;
-            let reparts = make_parts(cfg, oracle.n());
+            let reparts = compute_parts()?;
             let mut fresh = establish(&reparts)?;
             let retry = fresh
                 .begin_job(&params, problem)
@@ -1117,6 +1261,52 @@ mod tests {
                 assert_eq!(out.value.to_bits(), direct.value.to_bits());
             }
         });
+    }
+
+    #[test]
+    fn explicit_parts_pin_overrides_the_seeded_draw() {
+        let o = cover_oracle(200, 11);
+        let c = Cardinality::new(6);
+        // The pin reproduces the contiguous split exactly, so the pinned
+        // run must agree with the drawn one bit-for-bit.
+        let custom: Vec<Vec<ElemId>> = vec![(0..100).collect(), (100..200).collect()];
+        let cfg = DistConfig {
+            parts: Some(custom),
+            partition: PartitionScheme::Contiguous,
+            ..DistConfig::greedyml(AccumulationTree::new(2, 2), 5)
+        };
+        let out = run_greedyml(&o, &c, &cfg).unwrap();
+        let drawn = DistConfig { parts: None, ..cfg.clone() };
+        let base = run_greedyml(&o, &c, &drawn).unwrap();
+        assert_eq!(out.solution, base.solution);
+        assert_eq!(out.value.to_bits(), base.value.to_bits());
+
+        let bad = DistConfig { parts: Some(vec![(0..200).collect()]), ..cfg };
+        let err = run_greedyml(&o, &c, &bad).unwrap_err();
+        assert!(err.to_string().contains("2 machines"), "{err}");
+    }
+
+    #[test]
+    fn live_pooled_runs_validate_epoch_and_ship_mode() {
+        let o = cover_oracle(100, 2);
+        let c = Cardinality::new(4);
+        let pool = SessionPool::new();
+        let live = crate::stream::LiveProblem::new(&o).unwrap();
+        // An epoch mismatch is caught before any backend work.
+        let cfg =
+            DistConfig { epoch: 3, ..DistConfig::greedyml(AccumulationTree::new(2, 2), 1) };
+        let err = run_dist_pooled_live(&o, &c, &cfg, &pool, Some(&live)).unwrap_err();
+        assert!(err.to_string().contains("epoch"), "{err}");
+        // Live + spec shipping is rejected with a pointer at --ship.
+        let cfg = DistConfig {
+            backend: crate::dist::BackendSpec::Process,
+            problem: Some("dataset.kind = retail\ndataset.n = 100\n".to_string()),
+            ship: crate::dist::ShipSpec::Spec,
+            ..DistConfig::greedyml(AccumulationTree::new(2, 2), 1)
+        };
+        let err = run_dist_pooled_live(&o, &c, &cfg, &pool, Some(&live)).unwrap_err();
+        assert!(err.to_string().contains("partition shipping"), "{err}");
+        assert_eq!(pool.sessions_established(), 0, "nothing was established");
     }
 
     #[test]

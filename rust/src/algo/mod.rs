@@ -15,7 +15,8 @@
 //! measure the algorithmic difference and nothing else.
 
 use crate::dist::{
-    BackendSpec, CommModel, FaultReport, FaultSpec, MachineStats, ShipSpec, WireSpec,
+    BackendSpec, CommModel, CoresetSpec, FaultReport, FaultSpec, MachineStats, ShipSpec,
+    WireSpec,
 };
 use crate::greedy::GreedyKind;
 use crate::tree::AccumulationTree;
@@ -28,8 +29,8 @@ pub mod seq;
 
 pub use greedi::{greedi_config, run_greedi};
 pub use greedyml::{
-    dataset_fingerprint, run_dist, run_dist_pooled, run_dist_pooled_tracked, run_greedyml,
-    PooledRun, SessionPool,
+    dataset_fingerprint, run_dist, run_dist_pooled, run_dist_pooled_live,
+    run_dist_pooled_tracked, run_greedyml, PooledRun, SessionPool,
 };
 pub use randgreedi::run_randgreedi;
 pub use seq::run_sequential;
@@ -126,6 +127,26 @@ pub struct DistConfig {
     /// CLI flag `--wire`.  The thread backend ignores it; results are
     /// bit-identical across modes.  See `docs/wire-protocol.md`.
     pub wire: WireSpec,
+    /// Coreset mode ([`CoresetSpec::On`]: every node sieve-streams its
+    /// candidate set down to an O(k log n / ε) coreset before the greedy
+    /// pass, so accumulation ships coresets instead of full solutions'
+    /// shards — bounded memory and wire bytes, value within the sieve's
+    /// (1/2 − ε) factor of full GreedyML).  [`CoresetSpec::Auto`] defers
+    /// to the `GREEDYML_CORESET` environment variable (default off).
+    /// Config key `run.coreset` (`sweep.coreset`) / CLI flag `--coreset`.
+    /// See `docs/streaming.md`.
+    pub coreset: CoresetSpec,
+    /// Dataset epoch of this run — 0 for a static dataset, advanced by
+    /// one per applied [`crate::objective::PartitionDelta`] on live runs.
+    /// Joins the session-pool key and the job cache key, so pre-delta
+    /// fleets and cached solutions are never served for post-delta data.
+    pub epoch: u64,
+    /// Explicit leaf partition (global ids per machine), overriding the
+    /// seeded [`PartitionScheme`] draw.  Live runs use this to keep a
+    /// fleet's resident shards and the coordinator's view in lockstep
+    /// across deltas.  Every machine must get one entry; `None` draws
+    /// from the random tape as usual.
+    pub parts: Option<Vec<Vec<ElemId>>>,
 }
 
 impl DistConfig {
@@ -149,6 +170,9 @@ impl DistConfig {
             hosts: None,
             on_fault: FaultSpec::Auto,
             wire: WireSpec::Auto,
+            coreset: CoresetSpec::Auto,
+            epoch: 0,
+            parts: None,
         }
     }
 }

@@ -8,7 +8,7 @@ use crate::algo::{
     greedi_config, run_dist, run_sequential, randgreedi::RandGreediOpts, DistConfig,
 };
 use crate::constraint::{Cardinality, Constraint, PartitionMatroid};
-use crate::dist::{BackendSpec, FaultSpec, ShipSpec, WireSpec};
+use crate::dist::{BackendSpec, CoresetSpec, FaultSpec, ShipSpec, WireSpec};
 use crate::greedy::GreedyKind;
 use crate::metrics::RunReport;
 use crate::runtime::Engine;
@@ -104,6 +104,10 @@ pub struct Experiment {
     /// Frame encoding on the worker wire (`run.wire` config key /
     /// `--wire` flag / `GREEDYML_WIRE`): json or binary.
     pub wire: WireSpec,
+    /// Sieve-streaming coreset mode (`run.coreset` config key /
+    /// `--coreset` flag / `GREEDYML_CORESET`): leaf shards are filtered
+    /// to O(k log n / ε) coresets before accumulation.
+    pub coreset: CoresetSpec,
 }
 
 /// Build the constraint described by the `[problem]` section.  Shared by
@@ -150,6 +154,8 @@ impl Experiment {
             .map_err(|e| anyhow::anyhow!("run.on_fault: {e}"))?;
         let wire = WireSpec::parse(cfg.str_or("run.wire", "auto"))
             .map_err(|e| anyhow::anyhow!("run.wire: {e}"))?;
+        let coreset = CoresetSpec::parse(cfg.str_or("run.coreset", "auto"))
+            .map_err(|e| anyhow::anyhow!("run.coreset: {e}"))?;
         Ok(Self {
             name: cfg.str_or("name", "experiment").to_string(),
             problem,
@@ -170,6 +176,7 @@ impl Experiment {
             hosts: crate::dist::tcp::hosts_from_config(cfg, "run.hosts")?,
             on_fault,
             wire,
+            coreset,
         })
     }
 
@@ -182,6 +189,7 @@ impl Experiment {
         cfg.hosts = self.hosts.clone();
         cfg.on_fault = self.on_fault;
         cfg.wire = self.wire;
+        cfg.coreset = self.coreset;
         cfg
     }
 

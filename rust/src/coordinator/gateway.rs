@@ -36,6 +36,7 @@
 //!                                      faults}
 //!                               | Rejected{id,reason}   (admission)
 //!                               | Failed{id,error}
+//! Delta{spec,delta}             DeltaOk{epoch} | Error{message}
 //! Stats                         Stats{counters}
 //! ── end ──────────────────────────────────────────────────────────────
 //! EOF                           (connection closes; queued jobs finish)
@@ -52,7 +53,9 @@ use super::jobs::Submission;
 use super::{BuiltProblem, JobQueue};
 use crate::algo::{dataset_fingerprint, DistConfig};
 use crate::dist::wire::{read_frame, write_frame};
-use crate::dist::{BackendSpec, FaultSpec, ShipSpec, WireSpec};
+use crate::dist::{BackendSpec, CoresetSpec, FaultSpec, ShipSpec, WireSpec};
+use crate::objective::PartitionDelta;
+use crate::stream::LiveProblem;
 use crate::metrics::{GatewayCounters, GatewaySnapshot};
 use crate::tree::AccumulationTree;
 use crate::util::config::Config;
@@ -76,7 +79,11 @@ use std::time::Duration;
 /// * v1 — initial release: hello/submit/stats requests.
 /// * v2 — `submit` jobs carry a `wire` field (worker frame encoding,
 ///   `--wire json|binary`).
-pub const GATEWAY_PROTOCOL_VERSION: u32 = 2;
+/// * v3 — live datasets: `submit` jobs carry `epoch` and `coreset`
+///   fields; a `delta` request applies a [`PartitionDelta`] to the
+///   daemon's resident corpus and is answered by `delta_ok` with the new
+///   epoch.
+pub const GATEWAY_PROTOCOL_VERSION: u32 = 3;
 
 /// A client must complete the handshake within this window.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
@@ -134,6 +141,12 @@ pub struct JobSpec {
     pub on_fault: String,
     /// Worker frame encoding (`auto` | `json` | `binary`).
     pub wire: String,
+    /// Dataset epoch this job targets: 0 for a static corpus, the
+    /// `delta_ok` epoch after applying deltas.  A job whose epoch trails
+    /// the daemon's live corpus fails instead of answering stale.
+    pub epoch: u64,
+    /// Sieve-streaming coreset mode (`auto` | `on` | `off`).
+    pub coreset: String,
 }
 
 fn backend_str(b: BackendSpec) -> &'static str {
@@ -170,6 +183,14 @@ fn wire_str(w: WireSpec) -> &'static str {
     }
 }
 
+fn coreset_str(c: CoresetSpec) -> &'static str {
+    match c {
+        CoresetSpec::Auto => "auto",
+        CoresetSpec::Off => "off",
+        CoresetSpec::On => "on",
+    }
+}
+
 impl JobSpec {
     /// Build from an engine config (the `submit --gateway` client path:
     /// [`JobBatch::dist_config`](super::JobBatch::dist_config) output).
@@ -192,6 +213,8 @@ impl JobSpec {
             local_view: cfg.local_view,
             on_fault: fault_str(cfg.on_fault).to_string(),
             wire: wire_str(cfg.wire).to_string(),
+            epoch: cfg.epoch,
+            coreset: coreset_str(cfg.coreset).to_string(),
         })
     }
 
@@ -207,6 +230,8 @@ impl JobSpec {
             .map_err(|e| anyhow::anyhow!("job {}: on_fault: {e}", self.id))?;
         let wire = WireSpec::parse(&self.wire)
             .map_err(|e| anyhow::anyhow!("job {}: wire: {e}", self.id))?;
+        let coreset = CoresetSpec::parse(&self.coreset)
+            .map_err(|e| anyhow::anyhow!("job {}: coreset: {e}", self.id))?;
         anyhow::ensure!(self.machines >= 1, "job {}: need at least one machine", self.id);
         anyhow::ensure!(
             self.branching >= 2 || self.machines == 1,
@@ -225,6 +250,8 @@ impl JobSpec {
             local_view: self.local_view,
             on_fault,
             wire,
+            coreset,
+            epoch: self.epoch,
             ..DistConfig::greedyml(AccumulationTree::new(self.machines, self.branching), self.seed)
         })
     }
@@ -243,6 +270,8 @@ impl JobSpec {
             "local_view": self.local_view,
             "on_fault": self.on_fault,
             "wire": self.wire,
+            "epoch": self.epoch,
+            "coreset": self.coreset,
         })
     }
 
@@ -260,6 +289,8 @@ impl JobSpec {
             local_view: bool_field(v, "local_view")?,
             on_fault: str_field(v, "on_fault")?.to_string(),
             wire: str_field(v, "wire")?.to_string(),
+            epoch: u64_field(v, "epoch")?,
+            coreset: str_field(v, "coreset")?.to_string(),
         })
     }
 }
@@ -280,6 +311,19 @@ pub enum ToGateway {
     /// [`FromGateway::Rejected`] (malformed); every accepted job later
     /// gets exactly one terminal frame.
     Submit(JobSpec),
+    /// Apply one dataset delta to the daemon's resident corpus (the one
+    /// `spec` fingerprints).  Answered with [`FromGateway::DeltaOk`]
+    /// carrying the corpus's new epoch; a malformed delta is a
+    /// connection-level [`FromGateway::Error`].  Subsequent
+    /// [`ToGateway::Submit`] jobs at the new epoch run against the
+    /// post-delta data — on warm fleets, workers patch their resident
+    /// shards in place instead of re-shipping them.
+    Delta {
+        /// Flat problem spec identifying the corpus (dataset fingerprint).
+        spec: String,
+        /// The diff: global-id inserts with data rows, plus deletes.
+        delta: PartitionDelta,
+    },
     /// Ask for the daemon's live counters ([`FromGateway::Stats`]).
     Stats,
 }
@@ -333,6 +377,13 @@ pub enum FromGateway {
         /// The error chain.
         error: String,
     },
+    /// A [`ToGateway::Delta`] applied cleanly; the corpus now serves the
+    /// returned epoch.  Jobs submitted at this epoch see the post-delta
+    /// data (and invalidate any older cached solutions for the corpus).
+    DeltaOk {
+        /// The corpus's dataset epoch after the delta.
+        epoch: u64,
+    },
     /// The daemon's live counters.
     Stats(GatewaySnapshot),
     /// Connection-level failure (handshake refusal, unreadable frame).
@@ -349,6 +400,9 @@ impl ToGateway {
         match self {
             Self::Hello { version } => json!({ "t": "hello", "version": version }),
             Self::Submit(job) => json!({ "t": "submit", "job": job.to_value() }),
+            Self::Delta { spec, delta } => {
+                json!({ "t": "delta", "spec": spec, "delta": delta.to_value() })
+            }
             Self::Stats => json!({ "t": "stats" }),
         }
     }
@@ -358,6 +412,11 @@ impl ToGateway {
         match str_field(v, "t")? {
             "hello" => Ok(Self::Hello { version: u64_field(v, "version")? as u32 }),
             "submit" => Ok(Self::Submit(JobSpec::from_value(field(v, "job")?)?)),
+            "delta" => Ok(Self::Delta {
+                spec: str_field(v, "spec")?.to_string(),
+                delta: PartitionDelta::from_value(field(v, "delta")?)
+                    .map_err(|e| anyhow::anyhow!("field 'delta': {e}"))?,
+            }),
             "stats" => Ok(Self::Stats),
             other => anyhow::bail!("unknown gateway request '{other}'"),
         }
@@ -383,6 +442,7 @@ impl FromGateway {
                 "faults": faults,
             }),
             Self::Failed { id, error } => json!({ "t": "failed", "id": id, "error": error }),
+            Self::DeltaOk { epoch } => json!({ "t": "delta_ok", "epoch": epoch }),
             Self::Stats(s) => json!({
                 "t": "stats",
                 "queued": s.queued,
@@ -422,6 +482,7 @@ impl FromGateway {
                 id: u64_field(v, "id")?,
                 error: str_field(v, "error")?.to_string(),
             }),
+            "delta_ok" => Ok(Self::DeltaOk { epoch: u64_field(v, "epoch")? }),
             "stats" => Ok(Self::Stats(GatewaySnapshot {
                 queued: u64_field(v, "queued")?,
                 running: u64_field(v, "running")?,
@@ -539,6 +600,15 @@ impl GatewayClient {
         self.send(&ToGateway::Submit(job.clone()))
     }
 
+    /// Apply one dataset delta to the daemon's resident corpus.  The
+    /// [`FromGateway::DeltaOk`] reply (via [`GatewayClient::next`])
+    /// carries the new epoch; submit subsequent jobs at that epoch.
+    /// Drain this corpus's in-flight results first — a job still queued
+    /// at the old epoch fails once the delta lands.
+    pub fn send_delta(&mut self, spec: &str, delta: &PartitionDelta) -> crate::Result<()> {
+        self.send(&ToGateway::Delta { spec: spec.to_string(), delta: delta.clone() })
+    }
+
     /// Ask for the daemon's counters (the reply arrives via
     /// [`GatewayClient::next`], after any frames already in flight).
     pub fn request_stats(&mut self) -> crate::Result<()> {
@@ -584,6 +654,12 @@ struct Shared {
     /// [`PROBLEM_CACHE`]): clients querying the same corpus share one
     /// resident oracle build.
     problems: Mutex<Vec<(String, Arc<BuiltProblem>)>>,
+    /// Live datasets by fingerprint, created by the first `delta` frame
+    /// against a corpus.  Each entry's own mutex serializes deltas and
+    /// solves on that corpus (a solve holds it for the run), so an
+    /// epoch-N job never races the delta producing epoch N + 1; distinct
+    /// corpora stay concurrent.
+    live: Mutex<Vec<(String, Arc<Mutex<LiveProblem>>)>>,
 }
 
 /// An admitted job on its way to a worker thread.
@@ -612,6 +688,7 @@ fn serve_loop(listener: TcpListener, gc: GatewayConfig) -> crate::Result<()> {
         queue: JobQueue::with_cache_entries(gc.mem_budget, gc.cache_entries),
         counters: GatewayCounters::default(),
         problems: Mutex::new(Vec::new()),
+        live: Mutex::new(Vec::new()),
     });
     let (tx, rx) = mpsc::channel::<ScheduledJob>();
     let rx = Arc::new(Mutex::new(rx));
@@ -710,6 +787,20 @@ fn serve_client(
                     }
                 }
             }
+            ToGateway::Delta { spec, delta } => match apply_delta(shared, &spec, &delta) {
+                Ok(epoch) => {
+                    send(&mut *lock(&writer), &FromGateway::DeltaOk { epoch }.to_value())?;
+                }
+                Err(e) => {
+                    // A delta the daemon cannot apply leaves the client's
+                    // view of the corpus undefined — refuse the
+                    // connection rather than serve it stale answers.
+                    let message = format!("delta: {e:#}");
+                    let _ =
+                        send(&mut *lock(&writer), &FromGateway::Error { message }.to_value());
+                    anyhow::bail!("delta: {e:#}");
+                }
+            },
             ToGateway::Stats => {
                 let mut snap = shared.counters.snapshot();
                 snap.submitted = shared.queue.submitted();
@@ -771,8 +862,17 @@ fn worker_loop(shared: &Shared, rx: &Mutex<Receiver<ScheduledJob>>) {
 /// Run one admitted job to its terminal frame.
 fn run_one(shared: &Shared, scheduled: &ScheduledJob) -> FromGateway {
     let id = scheduled.job.id;
-    let outcome = problem_for(shared, &scheduled.job.spec)
-        .and_then(|problem| shared.queue.submit(&problem, &scheduled.dist));
+    let live = {
+        let fp = dataset_fingerprint(&scheduled.job.spec);
+        lock(&shared.live)
+            .iter()
+            .find(|(f, _)| *f == fp)
+            .map(|(_, l)| Arc::clone(l))
+    };
+    let outcome = problem_for(shared, &scheduled.job.spec).and_then(|problem| match &live {
+        Some(l) => shared.queue.submit_live(&problem, &scheduled.dist, Some(&*lock(l))),
+        None => shared.queue.submit(&problem, &scheduled.dist),
+    });
     match outcome {
         Ok(Submission::Ran { solution, value, warm, faults }) => {
             FromGateway::Result { id, solution, value, warm, cached: false, faults }
@@ -788,6 +888,31 @@ fn run_one(shared: &Shared, scheduled: &ScheduledJob) -> FromGateway {
         Ok(Submission::Rejected { reason }) => FromGateway::Rejected { id, reason },
         Err(e) => FromGateway::Failed { id, error: format!("{e:#}") },
     }
+}
+
+/// Apply one delta to the corpus `spec` fingerprints: find (or create,
+/// on the first delta) its [`LiveProblem`], mutate the resident oracle
+/// in place, and return the new epoch.  Holding the corpus's own lock
+/// across the mutation means no solve observes a half-applied delta.
+fn apply_delta(shared: &Shared, spec: &str, delta: &PartitionDelta) -> crate::Result<u64> {
+    let problem = problem_for(shared, spec)?;
+    let fp = dataset_fingerprint(spec);
+    let entry = {
+        let mut live = lock(&shared.live);
+        match live.iter().find(|(f, _)| *f == fp) {
+            Some((_, l)) => Arc::clone(l),
+            None => {
+                let fresh = LiveProblem::new(problem.oracle.as_ref())
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                let fresh = Arc::new(Mutex::new(fresh));
+                live.push((fp, Arc::clone(&fresh)));
+                fresh
+            }
+        }
+    };
+    let mut corpus = lock(&entry);
+    corpus.apply(delta).map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(corpus.epoch())
 }
 
 /// The resident problem for a job spec: LRU lookup by dataset
@@ -840,6 +965,20 @@ mod tests {
             local_view: false,
             on_fault: "retry".to_string(),
             wire: "binary".to_string(),
+            epoch: 0,
+            coreset: "auto".to_string(),
+        }
+    }
+
+    fn sample_delta() -> PartitionDelta {
+        PartitionDelta {
+            n_global: 12,
+            insert: crate::objective::PartitionPayload {
+                n_global: 12,
+                elems: vec![10, 11],
+                data: crate::objective::PartitionData::Modular { weights: vec![1.5, 2.0] },
+            },
+            delete: vec![3],
         }
     }
 
@@ -880,6 +1019,7 @@ mod tests {
         vec![
             ToGateway::Hello { version: GATEWAY_PROTOCOL_VERSION },
             ToGateway::Submit(sample_job()),
+            ToGateway::Delta { spec: SPEC.to_string(), delta: sample_delta() },
             ToGateway::Stats,
         ]
     }
@@ -899,6 +1039,7 @@ mod tests {
                 faults: "1 fault seen, 1 retry".to_string(),
             },
             FromGateway::Failed { id: 3, error: "worker fleet died".to_string() },
+            FromGateway::DeltaOk { epoch: 2 },
             FromGateway::Stats(sample_snapshot()),
             FromGateway::Error { message: "expected hello as the first frame".to_string() },
         ]
@@ -977,15 +1118,15 @@ mod tests {
 
     #[test]
     fn hello_frame_bytes_match_the_documented_hex_dump() {
-        // Pinned at v2 like the doc's dump — a version bump must touch
+        // Pinned at v3 like the doc's dump — a version bump must touch
         // the doc, this test, and GATEWAY_PROTOCOL_VERSION together.
         let mut buf = Vec::new();
-        write_frame(&mut buf, &ToGateway::Hello { version: 2 }.to_value()).unwrap();
+        write_frame(&mut buf, &ToGateway::Hello { version: 3 }.to_value()).unwrap();
         assert_eq!(
             buf,
             [0x19, 0x00, 0x00, 0x00, 0x01, 0x7b, 0x22, 0x74, 0x22, 0x3a, 0x22, 0x68, 0x65,
              0x6c, 0x6c, 0x6f, 0x22, 0x2c, 0x22, 0x76, 0x65, 0x72, 0x73, 0x69, 0x6f, 0x6e,
-             0x22, 0x3a, 0x32, 0x7d],
+             0x22, 0x3a, 0x33, 0x7d],
             "Hello frame no longer matches the hex dump in docs/gateway-protocol.md"
         );
     }
@@ -1097,6 +1238,35 @@ mod tests {
                 assert_eq!(s.running, 0);
             }
             other => panic!("expected stats, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deltas_advance_the_daemons_resident_corpus() {
+        // Each delta frame bumps the corpus's epoch by one and answers
+        // DeltaOk; the daemon and the connection both survive to apply
+        // the next one.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let gc = GatewayConfig {
+            bind: String::new(),
+            workers: 1,
+            mem_budget: None,
+            cache_entries: 8,
+        };
+        std::thread::spawn(move || serve_loop(listener, gc));
+        let mut client = GatewayClient::connect(&addr).unwrap();
+        let cfg = Config::parse(SPEC).unwrap();
+        let problem = super::super::build_problem(&cfg, None).unwrap();
+        let p = problem.oracle.partitionable().unwrap();
+        for (round, doomed) in [(1u64, 5u32), (2, 9)] {
+            let delta = PartitionDelta {
+                n_global: problem.oracle.n(),
+                insert: p.extract_partition(&[]),
+                delete: vec![doomed],
+            };
+            client.send_delta(SPEC, &delta).unwrap();
+            assert_eq!(client.next().unwrap(), FromGateway::DeltaOk { epoch: round });
         }
     }
 

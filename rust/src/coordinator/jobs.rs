@@ -29,8 +29,10 @@
 
 use super::experiment::build_constraint;
 use super::BuiltProblem;
-use crate::algo::{dataset_fingerprint, run_dist_pooled_tracked, DistConfig, SessionPool};
-use crate::dist::{BackendSpec, FaultSpec, ShipSpec, WireSpec};
+use crate::algo::{dataset_fingerprint, run_dist_pooled_live, DistConfig, SessionPool};
+use crate::dist::{BackendSpec, CoresetSpec, FaultSpec, ShipSpec, WireSpec};
+use crate::objective::Oracle;
+use crate::stream::LiveProblem;
 use crate::tree::AccumulationTree;
 use crate::util::config::Config;
 use crate::ElemId;
@@ -78,10 +80,20 @@ struct CachedSolution {
     value: f64,
 }
 
+/// One cached solution plus the identity needed to invalidate it: the
+/// dataset fingerprint and the epoch the job ran at, so a live-dataset
+/// delta can purge exactly the entries it stales.
+struct CacheEntry {
+    key: u64,
+    fingerprint: String,
+    epoch: u64,
+    hit: CachedSolution,
+}
+
 /// Everything the queue mutates, behind one short-held lock.
 struct QueueState {
     /// LRU order: front = coldest, back = most recently used.
-    cache: Vec<(u64, CachedSolution)>,
+    cache: Vec<CacheEntry>,
     /// Bytes reserved by admitted jobs still in flight (budget ledger).
     in_flight: u64,
     submitted: u64,
@@ -170,17 +182,41 @@ impl JobQueue {
     /// jobs return their bytes, then runs.  Concurrent submitters thus
     /// compete for one ledger instead of overcommitting the fleet.
     pub fn submit(&self, problem: &BuiltProblem, cfg: &DistConfig) -> crate::Result<Submission> {
+        self.submit_live(problem, cfg, None)
+    }
+
+    /// [`JobQueue::submit`] against a live dataset: the run evaluates
+    /// `live`'s post-delta oracle (not the batch's epoch-0 problem), the
+    /// pool may advance a one-epoch-stale warm fleet in place instead of
+    /// re-establishing ([`run_dist_pooled_live`]), and every cached
+    /// solution this dataset produced at an earlier epoch is purged — a
+    /// delta invalidates it.  `cfg.epoch` must equal `live`'s epoch.
+    pub fn submit_live(
+        &self,
+        problem: &BuiltProblem,
+        cfg: &DistConfig,
+        live: Option<&LiveProblem>,
+    ) -> crate::Result<Submission> {
         let spec = cfg
             .problem
             .as_deref()
             .ok_or_else(|| anyhow::anyhow!("job has no problem spec (DistConfig::problem)"))?;
-        let key = job_key(cfg, spec, problem.oracle.n());
+        let fingerprint = dataset_fingerprint(spec);
+        let oracle: &dyn Oracle = match live {
+            Some(l) => l.oracle(),
+            None => problem.oracle.as_ref(),
+        };
+        let key = job_key(cfg, spec, oracle.n());
         {
             let mut st = self.state();
             st.submitted += 1;
-            if let Some(pos) = st.cache.iter().position(|(k, _)| *k == key) {
+            if let Some(l) = live {
+                st.cache
+                    .retain(|e| e.fingerprint != fingerprint || e.epoch >= l.epoch());
+            }
+            if let Some(pos) = st.cache.iter().position(|e| e.key == key) {
                 let entry = st.cache.remove(pos);
-                let hit = entry.1.clone();
+                let hit = entry.hit.clone();
                 st.cache.push(entry); // most recently used
                 st.cache_hits += 1;
                 return Ok(Submission::Cached { solution: hit.solution, value: hit.value });
@@ -188,7 +224,7 @@ impl JobQueue {
         }
         let spec_cfg =
             Config::parse(spec).map_err(|e| anyhow::anyhow!("job problem spec: {e}"))?;
-        let (constraint, k) = build_constraint(&spec_cfg, problem.oracle.n())?;
+        let (constraint, k) = build_constraint(&spec_cfg, oracle.n())?;
         let _reservation = match self.mem_budget {
             None => None,
             Some(budget) => {
@@ -214,12 +250,11 @@ impl JobQueue {
                 Some(Reservation { queue: self, estimate })
             }
         };
-        let run =
-            run_dist_pooled_tracked(problem.oracle.as_ref(), constraint.as_ref(), cfg, &self.pool)
-                .map_err(|e| {
-                    self.state().failed += 1;
-                    anyhow::anyhow!(e)
-                })?;
+        let run = run_dist_pooled_live(oracle, constraint.as_ref(), cfg, &self.pool, live)
+            .map_err(|e| {
+                self.state().failed += 1;
+                anyhow::anyhow!(e)
+            })?;
         let out = run.outcome;
         let faults =
             (!out.faults.is_empty()).then(|| out.faults.to_string()).unwrap_or_default();
@@ -228,9 +263,13 @@ impl JobQueue {
         // submission recomputes against a healthy fleet.
         if self.cache_entries > 0 && out.faults.machines_dropped.is_empty() {
             let mut st = self.state();
-            st.cache.retain(|(k, _)| *k != key);
-            st.cache
-                .push((key, CachedSolution { solution: out.solution.clone(), value: out.value }));
+            st.cache.retain(|e| e.key != key);
+            st.cache.push(CacheEntry {
+                key,
+                fingerprint,
+                epoch: cfg.epoch,
+                hit: CachedSolution { solution: out.solution.clone(), value: out.value },
+            });
             while st.cache.len() > self.cache_entries {
                 st.cache.remove(0); // evict the coldest
             }
@@ -282,7 +321,8 @@ fn job_key(cfg: &DistConfig, spec: &str, n: usize) -> u64 {
     };
     let canon = format!(
         "fp={fp}\n{problem_keys}n={n}\nkind={kind:?}\nseed={seed}\nm={m}\nb={b}\n\
-         scheme={scheme:?}\nlocal_view={lv}\nadded={added}\ncompare={cmp}\n",
+         scheme={scheme:?}\nlocal_view={lv}\nadded={added}\ncompare={cmp}\n\
+         epoch={epoch}\ncoreset={coreset}\n",
         fp = dataset_fingerprint(spec),
         n = n,
         kind = cfg.kind,
@@ -293,6 +333,10 @@ fn job_key(cfg: &DistConfig, spec: &str, n: usize) -> u64 {
         lv = cfg.local_view,
         added = cfg.added_elements,
         cmp = cfg.compare_all_children,
+        // A delta re-solve must never replay a pre-delta answer, and a
+        // sieve-filtered run is a different result from a full one.
+        epoch = cfg.epoch,
+        coreset = cfg.coreset.resolve().unwrap_or(false),
     );
     let mut h: u64 = 0xcbf29ce484222325;
     for byte in canon.as_bytes() {
@@ -383,6 +427,10 @@ pub struct JobBatch {
     /// `GREEDYML_WIRE` → json).  Deliberately *not* part of the job
     /// cache key ([`job_key`]): results are bit-identical across modes.
     pub wire: WireSpec,
+    /// Sieve-coreset leaves (`jobs.coreset` / `--coreset`, default auto
+    /// → `GREEDYML_CORESET` → off).  Unlike `wire` this *is* part of
+    /// the cache key: a coreset run answers with a different value.
+    pub coreset: CoresetSpec,
 }
 
 impl JobBatch {
@@ -414,6 +462,8 @@ impl JobBatch {
             .map_err(|e| anyhow::anyhow!("jobs.on_fault: {e}"))?;
         let wire = WireSpec::parse(cfg.str_or("jobs.wire", "auto"))
             .map_err(|e| anyhow::anyhow!("jobs.wire: {e}"))?;
+        let coreset = CoresetSpec::parse(cfg.str_or("jobs.coreset", "auto"))
+            .map_err(|e| anyhow::anyhow!("jobs.coreset: {e}"))?;
         Ok(Self {
             ks,
             seeds,
@@ -432,6 +482,7 @@ impl JobBatch {
                 as usize,
             on_fault,
             wire,
+            coreset,
         })
     }
 
@@ -460,6 +511,7 @@ impl JobBatch {
             local_view: self.local_view,
             on_fault: self.on_fault,
             wire: self.wire,
+            coreset: self.coreset,
             ..DistConfig::greedyml(
                 AccumulationTree::new(self.machines, self.branching),
                 seed,
@@ -691,6 +743,22 @@ mod tests {
         assert!(matches!(first, Submission::Ran { .. }));
         assert!(matches!(second, Submission::Ran { .. }), "no false cache hit");
         assert_eq!(queue.cache_hits(), 0);
+    }
+
+    #[test]
+    fn epoch_and_coreset_join_the_cache_identity() {
+        // A delta re-solve (same dataset, bumped epoch) and a sieve-run
+        // (coreset on) are different answers — neither may replay the
+        // epoch-0 full-greedy cache entry.
+        let cfg = retail_config(200);
+        let batch = JobBatch::from_config(&cfg).unwrap();
+        let base = batch.dist_config(&cfg, 4, 1);
+        let spec = base.problem.clone().unwrap();
+        let bumped = DistConfig { epoch: 1, ..base.clone() };
+        assert_ne!(job_key(&base, &spec, 200), job_key(&bumped, &spec, 200));
+        let sieved =
+            DistConfig { coreset: crate::dist::CoresetSpec::On, ..base.clone() };
+        assert_ne!(job_key(&base, &spec, 200), job_key(&sieved, &spec, 200));
     }
 
     #[test]

@@ -7,7 +7,7 @@ use super::experiment::AlgoSpec;
 use super::BuiltProblem;
 use crate::algo::{greedi_config, run_dist_pooled, run_sequential, DistConfig, SessionPool};
 use crate::constraint::Cardinality;
-use crate::dist::{BackendSpec, FaultReport, FaultSpec, ShipSpec, WireSpec};
+use crate::dist::{BackendSpec, CoresetSpec, FaultReport, FaultSpec, ShipSpec, WireSpec};
 use crate::greedy::GreedyKind;
 use crate::metrics::RunReport;
 use crate::tree::AccumulationTree;
@@ -45,6 +45,9 @@ pub struct Sweep {
     /// Frame encoding on the worker wire (`sweep.wire` config key /
     /// `--wire` flag / `GREEDYML_WIRE`).
     pub wire: WireSpec,
+    /// Sieve-streaming coreset mode (`sweep.coreset` config key /
+    /// `--coreset` flag / `GREEDYML_CORESET`).
+    pub coreset: CoresetSpec,
 }
 
 impl Sweep {
@@ -78,6 +81,8 @@ impl Sweep {
             .map_err(|e| anyhow::anyhow!("sweep.on_fault: {e}"))?;
         let wire = WireSpec::parse(cfg.str_or("sweep.wire", "auto"))
             .map_err(|e| anyhow::anyhow!("sweep.wire: {e}"))?;
+        let coreset = CoresetSpec::parse(cfg.str_or("sweep.coreset", "auto"))
+            .map_err(|e| anyhow::anyhow!("sweep.coreset: {e}"))?;
         Ok(Self {
             ks,
             algos,
@@ -91,6 +96,7 @@ impl Sweep {
             hosts: crate::dist::tcp::hosts_from_config(cfg, "sweep.hosts")?,
             on_fault,
             wire,
+            coreset,
         })
     }
 
@@ -108,6 +114,7 @@ impl Sweep {
         dist.hosts = self.hosts.clone();
         dist.on_fault = self.on_fault;
         dist.wire = self.wire;
+        dist.coreset = self.coreset;
         dist
     }
 

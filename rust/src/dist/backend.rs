@@ -254,6 +254,54 @@ pub enum WireMode {
     Binary,
 }
 
+/// Whether leaves sieve their partition down to a streaming coreset before
+/// accumulation — the `--coreset` flag / `run.coreset` config key /
+/// `GREEDYML_CORESET` environment variable.  In coreset mode every node
+/// ships (and is charged for) an O(k·log(k)/ε) coreset instead of full
+/// solutions-with-shards, trading the exact GreedyML answer for the sieve
+/// value band (see [`crate::stream::coreset`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CoresetSpec {
+    /// Defer to `GREEDYML_CORESET` (`on` | `off`), defaulting to off.
+    #[default]
+    Auto,
+    /// Full GreedyML accumulation (the paper's algorithm, the default).
+    Off,
+    /// Sieve-filter every shard / child union down to its coreset.
+    On,
+}
+
+impl CoresetSpec {
+    /// Parse a config/CLI token (`auto` | `on` | `off`, with the usual
+    /// boolean spellings).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" | "" => Ok(Self::Auto),
+            "on" | "true" | "1" | "yes" => Ok(Self::On),
+            "off" | "false" | "0" | "no" => Ok(Self::Off),
+            other => Err(format!("unknown coreset mode '{other}' (auto | on | off)")),
+        }
+    }
+
+    /// Resolve `Auto` through `GREEDYML_CORESET`; an unparsable variable
+    /// is an error, not a silent fallback — a mis-spelt mode must not
+    /// quietly change what an experiment measured.
+    pub fn resolve(self) -> Result<bool, DistError> {
+        match self {
+            Self::On => Ok(true),
+            Self::Off => Ok(false),
+            Self::Auto => match std::env::var("GREEDYML_CORESET") {
+                Err(_) => Ok(false),
+                Ok(v) => match Self::parse(&v) {
+                    Ok(Self::On) => Ok(true),
+                    Ok(_) => Ok(false),
+                    Err(e) => Err(DistError::backend(format!("GREEDYML_CORESET: {e}"))),
+                },
+            },
+        }
+    }
+}
+
 /// What the coordinator ships a remote backend when the **session** is
 /// established: either the rebuild recipe for every worker, or the
 /// per-machine dataset shards (`payloads[i]` belongs to machine `i`).
@@ -516,5 +564,21 @@ mod tests {
     fn explicit_wire_specs_resolve_without_env() {
         assert_eq!(WireSpec::Json.resolve().unwrap(), WireMode::Json);
         assert_eq!(WireSpec::Binary.resolve().unwrap(), WireMode::Binary);
+    }
+
+    #[test]
+    fn coreset_spec_parses_tokens() {
+        assert_eq!(CoresetSpec::parse("auto").unwrap(), CoresetSpec::Auto);
+        assert_eq!(CoresetSpec::parse(" On ").unwrap(), CoresetSpec::On);
+        assert_eq!(CoresetSpec::parse("true").unwrap(), CoresetSpec::On);
+        assert_eq!(CoresetSpec::parse("off").unwrap(), CoresetSpec::Off);
+        assert_eq!(CoresetSpec::parse("0").unwrap(), CoresetSpec::Off);
+        assert!(CoresetSpec::parse("maybe").is_err());
+    }
+
+    #[test]
+    fn explicit_coreset_specs_resolve_without_env() {
+        assert!(CoresetSpec::On.resolve().unwrap());
+        assert!(!CoresetSpec::Off.resolve().unwrap());
     }
 }

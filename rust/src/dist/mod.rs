@@ -85,8 +85,8 @@ pub mod trace;
 pub mod wire;
 
 pub use backend::{
-    AccumTask, Backend, BackendOutcome, BackendSpec, ResolvedBackend, ShipMode, ShipPlan,
-    ShipSpec, ThreadBackend, WireMode, WireSpec,
+    AccumTask, Backend, BackendOutcome, BackendSpec, CoresetSpec, ResolvedBackend, ShipMode,
+    ShipPlan, ShipSpec, ThreadBackend, WireMode, WireSpec,
 };
 pub use comm::CommModel;
 pub use error::DistError;

@@ -42,6 +42,10 @@ pub struct NodeParams {
     pub added_elements: usize,
     /// RandGreeDI argmax semantics (compare every child solution).
     pub compare_all_children: bool,
+    /// Coreset mode (`--coreset`): leaves sieve their shard down to a
+    /// coreset and every level accumulates over coresets only — the meter
+    /// charges the coreset, never the full shard (see [`crate::stream`]).
+    pub coreset: bool,
 }
 
 /// Rolling state of one machine between supersteps.
@@ -56,6 +60,11 @@ pub struct NodeState {
     pub sol_value: f64,
     /// Bytes currently charged for holding `sol`.
     pub sol_bytes: u64,
+    /// Coreset mode: the machine's current coreset (always ⊇ `sol`) — what
+    /// crosses the wire instead of the solution alone.  `None` otherwise.
+    pub coreset: Option<Vec<ElemId>>,
+    /// Bytes currently charged for holding `coreset`.
+    pub coreset_bytes: u64,
 }
 
 impl NodeState {
@@ -65,7 +74,9 @@ impl NodeState {
     /// shipping the transport layer attaches the solution's extracted data
     /// shard ([`ChildMsg::data`]) before the message crosses the wire.
     pub fn ship(&mut self) -> ChildMsg {
-        let bytes = self.sol_bytes;
+        // Coreset mode ships the whole coreset (solution included): the
+        // wire bytes are the coreset's bytes, still far below a shard.
+        let bytes = if self.coreset.is_some() { self.coreset_bytes } else { self.sol_bytes };
         self.stats.bytes_sent += bytes;
         ChildMsg {
             from: self.stats.id,
@@ -73,6 +84,7 @@ impl NodeState {
             value: self.sol_value,
             bytes,
             data: None,
+            coreset: std::mem::take(&mut self.coreset),
         }
     }
 }
@@ -97,6 +109,11 @@ pub struct ChildMsg {
     /// backend shares one address space and spec-shipped workers hold the
     /// full rebuilt dataset.
     pub data: Option<crate::objective::PartitionPayload>,
+    /// Coreset mode: the child's shipped coreset — the parent accumulates
+    /// over this (a superset of `sol`) instead of the solution alone, and
+    /// under partition shipping `data` covers these elements.  `None`
+    /// outside coreset mode.
+    pub coreset: Option<Vec<ElemId>>,
 }
 
 /// What one machine did during a single superstep — the backend returns
@@ -131,9 +148,60 @@ pub fn leaf_step(
 ) -> Result<(NodeState, StepReport), DistError> {
     let mut stats = MachineStats::new(id);
     let mut meter = MemoryMeter::new(p.mem_limit);
+    let view = p.local_view.then_some(part);
+    if p.coreset {
+        // Coreset mode: stream the shard through one sieve pass and keep
+        // only the candidate union resident — the meter charges the
+        // coreset, never the shard (the streaming memory model; elements
+        // outside the live sieves are discarded as they pass).
+        let k = constraint.rank();
+        let ((cs, out), secs) = timed(|| {
+            let cs = crate::stream::shard_coreset(oracle, k, part, view);
+            let mut out = greedy(p.kind, oracle, constraint, &cs.elems, view);
+            out.calls += cs.best.calls;
+            out.cost += cs.best.cost;
+            // Greedy over the coreset usually clears the winning sieve, but
+            // the (1/2 − ε) certificate belongs to the sieve — keep the max.
+            if cs.best.value > out.value {
+                out.value = cs.best.value;
+                out.solution = cs.best.solution.clone();
+            }
+            (cs, out)
+        });
+        let coreset_bytes: u64 =
+            cs.elems.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
+        meter.charge(coreset_bytes, id, 0, "coreset")?;
+        stats.calls = out.calls;
+        stats.cost = out.cost;
+        stats.comp_secs = secs;
+        let sol_bytes: u64 =
+            out.solution.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
+        meter.charge(sol_bytes, id, 0, "local solution")?;
+        stats.peak_mem = meter.peak();
+        let report = StepReport {
+            machine: id,
+            level: 0,
+            comp_secs: secs,
+            comm_secs: 0.0,
+            calls: out.calls,
+            accum_elems: 0,
+            peak_mem: meter.peak(),
+        };
+        return Ok((
+            NodeState {
+                stats,
+                meter,
+                sol: out.solution,
+                sol_value: out.value,
+                sol_bytes,
+                coreset: Some(cs.elems),
+                coreset_bytes,
+            },
+            report,
+        ));
+    }
     let data_bytes: u64 = part.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
     meter.charge(data_bytes, id, 0, "partition data")?;
-    let view = p.local_view.then_some(part);
     let (out, secs): (GreedyOutcome, f64) =
         timed(|| greedy(p.kind, oracle, constraint, part, view));
     stats.calls = out.calls;
@@ -155,7 +223,15 @@ pub fn leaf_step(
         peak_mem: meter.peak(),
     };
     Ok((
-        NodeState { stats, meter, sol: out.solution, sol_value: out.value, sol_bytes },
+        NodeState {
+            stats,
+            meter,
+            sol: out.solution,
+            sol_value: out.value,
+            sol_bytes,
+            coreset: None,
+            coreset_bytes: 0,
+        },
         report,
     ))
 }
@@ -191,12 +267,17 @@ pub fn accum_step(
     // Membership is tracked in a |D|-sized set, not an O(n) bitmap: the
     // union is O(b·k + added) elements and this runs once per active node
     // per level.
-    let cap = ctx.sol.len()
-        + children.iter().map(|c| c.sol.len()).sum::<usize>()
+    // Coreset mode: each message carries the child's whole coreset, and
+    // this node contributes its own previous coreset — the union stays a
+    // coreset union, never bare solutions.
+    let own: &[ElemId] = ctx.coreset.as_deref().unwrap_or(&ctx.sol);
+    let contrib = |c: &'_ ChildMsg| -> &[ElemId] { c.coreset.as_deref().unwrap_or(&c.sol) };
+    let cap = own.len()
+        + children.iter().map(|c| contrib(c).len()).sum::<usize>()
         + p.added_elements;
     let mut seen = std::collections::HashSet::with_capacity(cap);
     let mut d: Vec<ElemId> = Vec::with_capacity(cap);
-    for &e in ctx.sol.iter().chain(children.iter().flat_map(|c| c.sol.iter())) {
+    for &e in own.iter().chain(children.iter().flat_map(|c| contrib(c).iter())) {
         if seen.insert(e) {
             d.push(e);
         }
@@ -214,9 +295,29 @@ pub fn accum_step(
     }
     let accum_elems = d.len();
 
-    // Run GREEDY on the union (line 14).
+    // Run GREEDY on the union (line 14).  Coreset mode first re-sieves the
+    // union down to this node's own coreset and runs GREEDY over that,
+    // keeping the "every message is a coreset" invariant at every level.
     let view = p.local_view.then_some(&d[..]);
-    let (out, secs) = timed(|| greedy(p.kind, oracle, constraint, &d, view));
+    let mut next_coreset: Option<Vec<ElemId>> = None;
+    let (out, secs) = if p.coreset {
+        let k = constraint.rank();
+        let ((cs, out), secs) = timed(|| {
+            let cs = crate::stream::shard_coreset(oracle, k, &d, view);
+            let mut out = greedy(p.kind, oracle, constraint, &cs.elems, view);
+            out.calls += cs.best.calls;
+            out.cost += cs.best.cost;
+            if cs.best.value > out.value {
+                out.value = cs.best.value;
+                out.solution = cs.best.solution.clone();
+            }
+            (cs, out)
+        });
+        next_coreset = Some(cs.elems);
+        (out, secs)
+    } else {
+        timed(|| greedy(p.kind, oracle, constraint, &d, view))
+    };
     let mut calls = out.calls;
     let mut cost = out.cost;
 
@@ -267,12 +368,32 @@ pub fn accum_step(
     // (greedy selects *from* the union), so its data is already charged;
     // release everything D-related first, then re-charge just the retained
     // solution.
+    // Coreset mode: the node's next coreset is the re-sieve of D, extended
+    // (deterministically, in solution order) so it always covers the
+    // retained solution — under partition shipping the parent's parent
+    // must receive data for every solution element.
+    if let Some(cs) = next_coreset.as_mut() {
+        let have: std::collections::HashSet<ElemId> = cs.iter().copied().collect();
+        for &e in &best_sol {
+            if !have.contains(&e) {
+                cs.push(e);
+            }
+        }
+    }
     let new_bytes: u64 = best_sol.iter().map(|&e| oracle.elem_bytes(e) as u64).sum();
-    ctx.meter.release(recv_bytes + add_bytes + ctx.sol_bytes);
+    let next_cs_bytes: u64 = next_coreset
+        .as_deref()
+        .map_or(0, |cs| cs.iter().map(|&e| oracle.elem_bytes(e) as u64).sum());
+    ctx.meter.release(recv_bytes + add_bytes + ctx.sol_bytes + ctx.coreset_bytes);
     ctx.meter.charge(new_bytes, id, level, "merged solution")?;
+    if next_cs_bytes > 0 {
+        ctx.meter.charge(next_cs_bytes, id, level, "coreset")?;
+    }
     ctx.sol = best_sol;
     ctx.sol_value = best_val;
     ctx.sol_bytes = new_bytes;
+    ctx.coreset = next_coreset;
+    ctx.coreset_bytes = next_cs_bytes;
     ctx.stats.peak_mem = ctx.meter.peak();
     Ok(StepReport {
         machine: id,
@@ -314,6 +435,7 @@ mod tests {
             local_view: false,
             added_elements: 0,
             compare_all_children: false,
+            coreset: false,
         }
     }
 
@@ -372,6 +494,39 @@ mod tests {
         assert_eq!(sol1, sol2);
         assert_eq!(v1.to_bits(), v2.to_bits());
         assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn coreset_steps_ship_coresets_and_charge_less_memory() {
+        let o = oracle(800);
+        let c = Cardinality::new(6);
+        let full = params(800);
+        let p = NodeParams { coreset: true, ..params(800) };
+        let part_a: Vec<ElemId> = (0..400).collect();
+        let part_b: Vec<ElemId> = (400..800).collect();
+
+        let (full_a, full_ra) = leaf_step(&o, &c, &full, 0, &part_a).unwrap();
+        let (mut a, ra) = leaf_step(&o, &c, &p, 0, &part_a).unwrap();
+        let (mut b, _) = leaf_step(&o, &c, &p, 1, &part_b).unwrap();
+        // The coreset covers the solution and the meter charged it, not the
+        // shard — peak memory must come in strictly below the full leaf.
+        let cs = a.coreset.clone().expect("coreset mode keeps a coreset");
+        assert!(a.sol.iter().all(|e| cs.contains(e)), "solution must be inside the coreset");
+        assert!(cs.len() < part_a.len(), "coreset should shrink the shard");
+        assert!(ra.peak_mem < full_ra.peak_mem, "coreset {} vs full {}", ra.peak_mem, full_ra.peak_mem);
+        drop(full_a);
+
+        // Shipping moves the coreset; the wire bytes are the coreset's.
+        let msg = b.ship();
+        let shipped = msg.coreset.clone().expect("coreset crosses the wire");
+        assert!(msg.sol.iter().all(|e| shipped.contains(e)));
+        assert!(msg.bytes >= msg.sol.iter().map(|&e| o.elem_bytes(e) as u64).sum::<u64>());
+
+        let rep = accum_step(&o, &c, &p, &mut a, 1, &[msg], 0.0).unwrap();
+        assert!(rep.accum_elems <= cs.len() + shipped.len());
+        let merged = a.coreset.clone().expect("accumulation keeps the invariant");
+        assert!(a.sol.iter().all(|e| merged.contains(e)));
+        assert!(a.sol_value > 0.0);
     }
 
     #[test]

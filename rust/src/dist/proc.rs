@@ -194,6 +194,18 @@ impl ProcessBackend {
     pub fn fault_report(&self) -> super::FaultReport {
         self.inner.fault_report()
     }
+
+    /// Advance the resident dataset one epoch in place — fan per-machine
+    /// `Delta` frames and verify every `DeltaDone` (see
+    /// [`RemoteFleet::advance_epoch`]).  Returns the delta wire bytes.
+    pub fn advance_epoch(
+        &mut self,
+        epoch: u64,
+        deltas: Vec<crate::objective::PartitionDelta>,
+        fresh: Vec<crate::objective::PartitionPayload>,
+    ) -> Result<u64, DistError> {
+        self.inner.advance_epoch(epoch, deltas, fresh)
+    }
 }
 
 impl Backend for ProcessBackend {
@@ -531,9 +543,12 @@ fn serve(
                     let mut msg = s.ship();
                     // Partition shipping: the solution travels with its
                     // extracted data shard, so a parent that holds only
-                    // its own partition can evaluate it.
+                    // its own partition can evaluate it.  Coreset mode
+                    // ships the whole coreset's data — the parent
+                    // accumulates over it, and it covers the solution.
                     if let Some(p) = problem.partition() {
-                        match p.extract(&msg.sol) {
+                        let wanted: &[ElemId] = msg.coreset.as_deref().unwrap_or(&msg.sol);
+                        match p.extract(wanted) {
                             Ok(payload) => msg.data = Some(payload),
                             Err(e) => {
                                 reply(
@@ -648,6 +663,35 @@ fn serve(
                 // Liveness probe — answerable at any point in the session.
                 reply(output, &FromWorker::Pong)?;
             }
+            ToWorker::Delta { epoch, delta } => {
+                // Live-dataset update (v6): only meaningful on a
+                // partition-shipped session, and only between jobs —
+                // whatever per-job state exists describes the pre-delta
+                // dataset, so it dies here either way.
+                state = None;
+                pending = None;
+                match problem.partition_mut() {
+                    Some(p) => match p.apply_delta(&delta) {
+                        Ok(()) => reply(
+                            output,
+                            &FromWorker::DeltaDone { epoch, n: p.len_local() },
+                        )?,
+                        Err(e) => reply(
+                            output,
+                            &FromWorker::Fail(DistError::backend(format!(
+                                "worker {machine}: delta: {e}"
+                            ))),
+                        )?,
+                    },
+                    None => reply(
+                        output,
+                        &FromWorker::Fail(DistError::backend(format!(
+                            "worker {machine}: delta on a spec-shipped session \
+                             (live datasets need partition shipping)"
+                        ))),
+                    )?,
+                }
+            }
             ToWorker::Release => {
                 return Ok(()); // explicit end of session, no reply
             }
@@ -690,6 +734,7 @@ mod tests {
             local_view: false,
             added_elements: 0,
             compare_all_children: false,
+            coreset: false,
         }
     }
 
@@ -985,6 +1030,99 @@ mod tests {
             other => panic!("expected sol, got {other:?}"),
         }
         assert!(read_reply(&mut cursor).unwrap().is_none(), "clean EOF after the Sol");
+    }
+
+    #[test]
+    fn delta_between_jobs_updates_the_resident_shard() {
+        // v6 live deltas end to end on one in-memory session: solve on the
+        // shipped shard, apply a delta (delete the winner, insert a heavier
+        // element), solve again — the second job must see the new dataset.
+        let oracle = crate::objective::Modular::new(
+            (0..50).map(|i| i as f64 + 1.0).collect::<Vec<_>>(),
+        );
+        let p = crate::objective::Oracle::partitionable(&oracle).unwrap();
+        let payload = p.extract_partition(&[40, 7]);
+        let delta = crate::objective::PartitionDelta {
+            n_global: 50,
+            insert: p.extract_partition(&[49]),
+            delete: vec![40],
+        };
+        let mut input = Vec::new();
+        write_frame(
+            &mut input,
+            &ToWorker::InitPart { session: 0, machine: 0, threads: 1, payload }.to_value(),
+        )
+        .unwrap();
+        write_frame(
+            &mut input,
+            &job_frame(NodeParams { n: 50, ..params() }, "problem.k = 1\n").to_value(),
+        )
+        .unwrap();
+        write_frame(&mut input, &ToWorker::Leaf { part: vec![40, 7] }.to_value()).unwrap();
+        write_frame(&mut input, &ToWorker::Ship.to_value()).unwrap();
+        write_frame(&mut input, &ToWorker::Delta { epoch: 1, delta }.to_value()).unwrap();
+        write_frame(
+            &mut input,
+            &job_frame(NodeParams { n: 50, ..params() }, "problem.k = 1\n").to_value(),
+        )
+        .unwrap();
+        write_frame(&mut input, &ToWorker::Leaf { part: vec![7, 49] }.to_value()).unwrap();
+        write_frame(&mut input, &ToWorker::Ship.to_value()).unwrap();
+        let mut output = Vec::new();
+        serve_session(&mut input.as_slice(), &mut output).unwrap();
+
+        let mut cursor = output.as_slice();
+        expect_ready(&mut cursor, 2, "session ack");
+        expect_ready(&mut cursor, 50, "first job ack");
+        let _step = read_frame(&mut cursor).unwrap().unwrap();
+        let sol = read_frame(&mut cursor).unwrap().unwrap();
+        match FromWorker::from_value(&sol).unwrap() {
+            FromWorker::Sol(msg) => assert_eq!(msg.sol, vec![40], "pre-delta argmax"),
+            other => panic!("expected sol, got {other:?}"),
+        }
+        let done = read_frame(&mut cursor).unwrap().unwrap();
+        match FromWorker::from_value(&done).unwrap() {
+            FromWorker::DeltaDone { epoch, n } => {
+                assert_eq!(epoch, 1);
+                assert_eq!(n, 2, "40 deleted, 49 inserted: still two held elements");
+            }
+            other => panic!("expected delta_done, got {other:?}"),
+        }
+        expect_ready(&mut cursor, 50, "second job ack");
+        let _step = read_frame(&mut cursor).unwrap().unwrap();
+        let sol = read_frame(&mut cursor).unwrap().unwrap();
+        match FromWorker::from_value(&sol).unwrap() {
+            FromWorker::Sol(msg) => {
+                assert_eq!(msg.sol, vec![49], "post-delta argmax is the inserted element");
+                assert_eq!(msg.data.expect("partition mode ships data").elems, vec![49]);
+            }
+            other => panic!("expected sol, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn delta_on_a_spec_session_is_a_fail_not_a_panic() {
+        let oracle = crate::objective::Modular::new(vec![1.0; 10]);
+        let p = crate::objective::Oracle::partitionable(&oracle).unwrap();
+        let delta = crate::objective::PartitionDelta {
+            n_global: 10,
+            insert: p.extract_partition(&[]),
+            delete: vec![0],
+        };
+        let mut input = Vec::new();
+        write_frame(&mut input, &ToWorker::Delta { epoch: 1, delta }.to_value()).unwrap();
+        let mut output = Vec::new();
+        let mut problem = spec_problem(oracle);
+        serve(&mut input.as_slice(), &mut output, &mut problem, 0, WireMode::Json, &mut None)
+            .unwrap();
+        let mut cursor = output.as_slice();
+        let v = read_frame(&mut cursor).unwrap().unwrap();
+        match FromWorker::from_value(&v).unwrap() {
+            FromWorker::Fail(DistError::Backend { message }) => {
+                assert!(message.contains("partition shipping"), "{message}")
+            }
+            other => panic!("expected fail, got {other:?}"),
+        }
     }
 
     #[test]

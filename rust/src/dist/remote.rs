@@ -58,6 +58,7 @@ use super::fault::{FaultPolicy, FaultReport, RETRY_ATTEMPTS, RETRY_BACKOFF_BASE}
 use super::node::{ChildMsg, NodeParams, StepReport};
 use super::wire::{read_reply, write_cmd, FromWorker, ToWorker};
 use super::{DistError, MachineStats};
+use crate::objective::{PartitionDelta, PartitionPayload};
 use crate::{ElemId, MachineId};
 use std::io::{Read, Write};
 use std::time::Instant;
@@ -213,6 +214,7 @@ fn cmd_name(cmd: &ToWorker) -> &'static str {
         ToWorker::Recv { .. } => "recv",
         ToWorker::Accum { .. } => "accum",
         ToWorker::JobDone => "job-done",
+        ToWorker::Delta { .. } => "delta",
         ToWorker::Release => "release",
         ToWorker::Ping => "ping",
     }
@@ -230,6 +232,7 @@ fn replay_reply_matches(cmd: &ToWorker, reply: &FromWorker) -> bool {
             | (ToWorker::Ship, FromWorker::Sol(_))
             | (ToWorker::Recv { .. }, FromWorker::Ack)
             | (ToWorker::JobDone, FromWorker::Final { .. })
+            | (ToWorker::Delta { .. }, FromWorker::DeltaDone { .. })
             | (ToWorker::Ping, FromWorker::Pong)
     )
 }
@@ -387,6 +390,79 @@ impl<R: Read, W: Write> RemoteFleet<R, W> {
     /// Jobs started on this session so far.
     pub fn jobs_started(&self) -> u64 {
         self.next_job
+    }
+
+    /// Advance the resident dataset one epoch: fan one `Delta` frame per
+    /// machine (its shard's slice of the global diff), await every
+    /// `DeltaDone`, and verify each machine's post-delta shard size
+    /// against `fresh` — the coordinator-side payloads the same delta
+    /// produces.  `fresh` also replaces the retained init frames, so a
+    /// machine revived *after* the advance rebuilds from the post-delta
+    /// shard directly (one frame instead of replaying the stale init
+    /// plus the delta — equivalent by compaction, cheaper on the wire).
+    /// Returns the delta wire bytes.  Only partition-shipped sessions
+    /// can advance: spec shipping has no resident shard to diff.
+    pub fn advance_epoch(
+        &mut self,
+        epoch: u64,
+        deltas: Vec<PartitionDelta>,
+        fresh: Vec<PartitionPayload>,
+    ) -> Result<u64, DistError> {
+        if let Some(m) = self.dead.iter().position(|&d| d) {
+            return Err(DistError::transport(format!(
+                "machine {m} was dropped by an earlier degraded job; \
+                 re-establish the session"
+            )));
+        }
+        let machines = self.workers.len();
+        if deltas.len() != machines || fresh.len() != machines {
+            return Err(DistError::backend(format!(
+                "{} deltas / {} shards for {} workers",
+                deltas.len(),
+                fresh.len(),
+                machines
+            )));
+        }
+        if self.init_cmds.iter().any(|c| !matches!(c, ToWorker::InitPart { .. })) {
+            return Err(DistError::backend(
+                "delta on a spec-shipped session (live datasets need \
+                 partition shipping)",
+            ));
+        }
+        // Fan every delta before reading any DeltaDone so the m
+        // shard compactions run concurrently, mirroring establish.
+        let mut delta_bytes = 0u64;
+        for (w, delta) in self.workers.iter_mut().zip(deltas) {
+            delta_bytes += w.send(&ToWorker::Delta { epoch, delta })?;
+        }
+        for (m, payload) in fresh.into_iter().enumerate() {
+            let want = payload.elems.len();
+            match self.workers[m].recv_ok()? {
+                FromWorker::DeltaDone { epoch: e, n } if e == epoch && n == want => {}
+                FromWorker::DeltaDone { epoch: e, n } => {
+                    return Err(DistError::backend(format!(
+                        "{} holds {n} elements at epoch {e}, the coordinator's \
+                         delta leaves {want} at epoch {epoch}; the resident \
+                         shard diverged",
+                        self.workers[m].who()
+                    )))
+                }
+                other => {
+                    return Err(DistError::backend(format!(
+                        "{}: expected delta-done, got {other:?}",
+                        self.workers[m].who()
+                    )))
+                }
+            }
+            let (session, threads) = match &self.init_cmds[m] {
+                ToWorker::InitPart { session, threads, .. } => (*session, *threads),
+                _ => unreachable!("checked above: every init is an InitPart"),
+            };
+            self.expected_ready[m] = want;
+            self.init_cmds[m] =
+                ToWorker::InitPart { session, machine: m as MachineId, threads, payload };
+        }
+        Ok(delta_bytes)
     }
 
     /// End the session: best-effort `Release` to every worker (a worker
@@ -858,6 +934,7 @@ mod tests {
             local_view: false,
             added_elements: 0,
             compare_all_children: false,
+            coreset: false,
         }
     }
 
@@ -998,6 +1075,83 @@ mod tests {
         let msg = err.to_string();
         assert!(msg.contains("100 elements"), "{msg}");
         assert!(msg.contains("wants 60"), "{msg}");
+    }
+
+    #[test]
+    fn advance_epoch_fans_deltas_and_patches_the_retained_inits() {
+        use crate::objective::PartitionDelta;
+        let w0 = mem_worker(0, &[ready(3), FromWorker::DeltaDone { epoch: 1, n: 3 }]);
+        let w1 = mem_worker(1, &[ready(2), FromWorker::DeltaDone { epoch: 1, n: 3 }]);
+        let plan = ShipPlan::Partition {
+            payloads: vec![shard(10, vec![0, 1, 2]), shard(10, vec![5, 6])],
+        };
+        let mut fleet =
+            RemoteFleet::establish("test", vec![w0, w1], 1, plan, 10, 0).expect("establish");
+        let deltas = vec![
+            PartitionDelta { n_global: 12, insert: shard(12, vec![10]), delete: vec![1] },
+            PartitionDelta { n_global: 12, insert: shard(12, vec![11]), delete: Vec::new() },
+        ];
+        let fresh = vec![shard(12, vec![0, 2, 10]), shard(12, vec![5, 6, 11])];
+        let bytes = fleet.advance_epoch(1, deltas, fresh.clone()).expect("advance");
+        assert!(bytes > 0, "delta frames cost wire bytes");
+        assert_eq!(fleet.expected_ready, vec![3, 3]);
+        // The retained inits now ship the post-delta shards: a machine
+        // revived after the advance rebuilds the fresh dataset directly.
+        for m in 0..2 {
+            match &fleet.init_cmds[m] {
+                ToWorker::InitPart { payload, .. } => assert_eq!(payload, &fresh[m]),
+                other => panic!("expected init_part, got {other:?}"),
+            }
+        }
+        // The wire saw exactly init_part then delta, per worker.
+        let mut cursor = fleet.workers[0].writer.as_slice();
+        let (init, _) = read_cmd(&mut cursor).unwrap().expect("init_part");
+        assert!(matches!(init, ToWorker::InitPart { machine: 0, .. }), "{init:?}");
+        let (cmd, _) = read_cmd(&mut cursor).unwrap().expect("delta");
+        match cmd {
+            ToWorker::Delta { epoch, delta } => {
+                assert_eq!(epoch, 1);
+                assert_eq!(delta.delete, vec![1]);
+                assert_eq!(delta.insert.elems, vec![10]);
+            }
+            other => panic!("expected delta, got {other:?}"),
+        }
+        assert!(read_cmd(&mut cursor).unwrap().is_none(), "no further commands");
+    }
+
+    #[test]
+    fn advance_epoch_rejects_a_diverged_shard_size() {
+        use crate::objective::PartitionDelta;
+        // The worker claims 5 elements after the delta; the coordinator's
+        // own application of the same delta leaves 2.
+        let w0 = mem_worker(0, &[ready(3), FromWorker::DeltaDone { epoch: 1, n: 5 }]);
+        let plan = ShipPlan::Partition { payloads: vec![shard(10, vec![0, 1, 2])] };
+        let mut fleet =
+            RemoteFleet::establish("test", vec![w0], 1, plan, 10, 0).expect("establish");
+        let delta =
+            PartitionDelta { n_global: 10, insert: shard(10, Vec::new()), delete: vec![1] };
+        let err = fleet
+            .advance_epoch(1, vec![delta], vec![shard(10, vec![0, 2])])
+            .expect_err("a diverged shard must fail the advance");
+        let msg = err.to_string();
+        assert!(msg.contains("diverged"), "{msg}");
+        assert!(msg.contains("holds 5"), "{msg}");
+    }
+
+    #[test]
+    fn advance_epoch_refuses_a_spec_shipped_session() {
+        use crate::objective::PartitionDelta;
+        let replies = scripted(&[ready(10)]);
+        let worker = FramedWorker::new(0, replies.as_slice(), Vec::<u8>::new());
+        let mut fleet =
+            RemoteFleet::establish("test", vec![worker], 1, ShipPlan::Spec("spec"), 10, 0)
+                .expect("establish");
+        let delta =
+            PartitionDelta { n_global: 10, insert: shard(10, Vec::new()), delete: vec![3] };
+        let err = fleet
+            .advance_epoch(1, vec![delta], vec![shard(10, Vec::new())])
+            .expect_err("spec sessions hold no shard to patch");
+        assert!(err.to_string().contains("partition shipping"), "{err}");
     }
 
     // ---- supervision -----------------------------------------------------

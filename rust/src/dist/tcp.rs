@@ -333,6 +333,18 @@ impl TcpBackend {
         self.inner.fault_report()
     }
 
+    /// Advance the resident dataset one epoch in place — fan per-machine
+    /// `Delta` frames and verify every `DeltaDone` (see
+    /// [`RemoteFleet::advance_epoch`]).  Returns the delta wire bytes.
+    pub fn advance_epoch(
+        &mut self,
+        epoch: u64,
+        deltas: Vec<crate::objective::PartitionDelta>,
+        fresh: Vec<crate::objective::PartitionPayload>,
+    ) -> Result<u64, DistError> {
+        self.inner.advance_epoch(epoch, deltas, fresh)
+    }
+
     /// End the session: best-effort `Release` to every daemon, which
     /// drops its resident oracle and closes the connection.
     pub fn release(&mut self) {
@@ -576,6 +588,7 @@ mod tests {
             local_view: false,
             added_elements: 0,
             compare_all_children: false,
+            coreset: false,
         }
     }
 

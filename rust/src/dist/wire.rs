@@ -45,6 +45,11 @@
 //! Accum{level,comm_secs}        Step(report) | Fail(err)
 //! JobDone                       Final{stats,sol,value}  (worker stays
 //!                                          resident for the next Job)
+//! ── between jobs (v6, partition shipping only) ───────────────────────
+//! Delta{epoch,delta}            DeltaDone{epoch,n} | Fail(err)
+//!                                          (apply the machine's
+//!                                          sub-delta to the resident
+//!                                          shard; epoch advances)
 //! ── end of session ───────────────────────────────────────────────────
 //! Release                       (no reply; the worker exits)
 //! ```
@@ -53,7 +58,7 @@ use super::backend::WireMode;
 use super::node::{ChildMsg, NodeParams, StepReport};
 use super::{DistError, MachineStats};
 use crate::greedy::GreedyKind;
-use crate::objective::{PartitionDecoder, PartitionPayload};
+use crate::objective::{PartitionDecoder, PartitionDelta, PartitionPayload};
 use crate::{ElemId, MachineId};
 use serde_json::{json, Value};
 use std::io::{Read, Write};
@@ -108,7 +113,15 @@ const STREAM_CHUNK: usize = 64 * 1024;
 /// `--wire binary`), and the worker's `init_part` receive path ingests
 /// the shard incrementally ([`read_session_init`]) instead of buffering
 /// and parsing the whole frame first.
-pub const PROTOCOL_VERSION: u32 = 5;
+///
+/// v6: live-dataset deltas — the `delta` command fans one machine's
+/// [`PartitionDelta`] (inserts with data rows + deletes) to a resident
+/// partition-shipped worker, which applies it to its shard in place and
+/// confirms with `delta_done`; a session's dataset epoch advances without
+/// re-shipping O(n/m) shards.  `delta` gets a binary envelope alongside
+/// `init_part`/`sol`/`recv` (JSON fallback as always); `delta_done` is a
+/// control frame and stays JSON under either mode.
+pub const PROTOCOL_VERSION: u32 = 6;
 
 /// Write one frame with an explicit content type.  Returns the total
 /// number of bytes put on the wire (4-byte length prefix + content-type
@@ -283,6 +296,20 @@ pub enum ToWorker {
     /// have died while the fleet sat idle) and a revived session after
     /// replaying its command log.
     Ping,
+    /// Advance the resident shard by one dataset epoch (v6): the worker
+    /// applies its per-machine sub-delta to the resident
+    /// [`crate::objective::PartitionOracle`] in place — compacting deletes
+    /// out, appending owned inserts — and replies
+    /// [`FromWorker::DeltaDone`] with its post-delta shard size.  Only
+    /// legal between jobs of a partition-shipped session.
+    Delta {
+        /// The coordinator's dataset epoch *after* this delta.
+        epoch: u64,
+        /// This machine's sub-delta: the full delete list (a worker skips
+        /// deletes it does not hold) plus exactly the inserts the delta
+        /// ownership tape assigns to it.
+        delta: PartitionDelta,
+    },
 }
 
 /// Worker → coordinator replies.
@@ -319,6 +346,15 @@ pub enum FromWorker {
     Fail(DistError),
     /// Liveness probe reply to [`ToWorker::Ping`].
     Pong,
+    /// Receipt of a [`ToWorker::Delta`] (v6): the epoch the worker
+    /// advanced to and its post-delta shard size, which the coordinator
+    /// checks against its own replay of the partition.
+    DeltaDone {
+        /// Echo of the delta frame's epoch.
+        epoch: u64,
+        /// Elements held after applying the delta.
+        n: usize,
+    },
 }
 
 impl ToWorker {
@@ -359,6 +395,11 @@ impl ToWorker {
             Self::JobDone => json!({ "t": "job_done" }),
             Self::Release => json!({ "t": "release" }),
             Self::Ping => json!({ "t": "ping" }),
+            Self::Delta { epoch, delta } => json!({
+                "t": "delta",
+                "epoch": epoch,
+                "delta": delta.to_value(),
+            }),
         }
     }
 
@@ -400,6 +441,11 @@ impl ToWorker {
             "job_done" => Ok(Self::JobDone),
             "release" => Ok(Self::Release),
             "ping" => Ok(Self::Ping),
+            "delta" => Ok(Self::Delta {
+                epoch: u64_field(v, "epoch")?,
+                delta: PartitionDelta::from_value(field(v, "delta")?)
+                    .map_err(|e| DistError::backend(format!("partition delta: {e}")))?,
+            }),
             other => Err(DistError::backend(format!("unknown command '{other}'"))),
         }
     }
@@ -422,6 +468,9 @@ impl FromWorker {
             }),
             Self::Fail(e) => json!({ "t": "fail", "error": error_to_value(e) }),
             Self::Pong => json!({ "t": "pong" }),
+            Self::DeltaDone { epoch, n } => {
+                json!({ "t": "delta_done", "epoch": epoch, "n": n })
+            }
         }
     }
 
@@ -440,6 +489,10 @@ impl FromWorker {
             }),
             "fail" => Ok(Self::Fail(error_from_value(field(v, "error")?)?)),
             "pong" => Ok(Self::Pong),
+            "delta_done" => Ok(Self::DeltaDone {
+                epoch: u64_field(v, "epoch")?,
+                n: u64_field(v, "n")? as usize,
+            }),
             other => Err(DistError::backend(format!("unknown reply '{other}'"))),
         }
     }
@@ -452,10 +505,11 @@ impl FromWorker {
 const BIN_INIT_PART: u8 = 1;
 const BIN_SOL: u8 = 2;
 const BIN_RECV: u8 = 3;
+const BIN_DELTA: u8 = 4;
 
 /// Write one coordinator → worker command under `mode`.  Binary mode
-/// binary-encodes the payload-bearing commands (`init_part`, `recv`);
-/// everything else stays a JSON frame under either mode.
+/// binary-encodes the payload-bearing commands (`init_part`, `recv`,
+/// `delta`); everything else stays a JSON frame under either mode.
 pub fn write_cmd(w: &mut impl Write, cmd: &ToWorker, mode: WireMode) -> Result<u64, DistError> {
     if mode == WireMode::Binary {
         if let Some(bytes) = encode_binary_cmd(cmd) {
@@ -581,6 +635,13 @@ fn encode_binary_cmd(cmd: &ToWorker) -> Option<Vec<u8>> {
             }
             Some(out)
         }
+        ToWorker::Delta { epoch, delta } => {
+            let mut out = Vec::with_capacity(9 + delta.binary_len());
+            out.push(BIN_DELTA);
+            out.extend_from_slice(&epoch.to_le_bytes());
+            delta.encode_binary(&mut out);
+            Some(out)
+        }
         _ => None,
     }
 }
@@ -605,6 +666,12 @@ fn decode_binary_cmd(bytes: &[u8]) -> Result<ToWorker, DistError> {
             }
             cur.done()?;
             Ok(ToWorker::Recv { level, children })
+        }
+        BIN_DELTA => {
+            let epoch = cur.u64()?;
+            let delta = PartitionDelta::decode_binary(cur.rest())
+                .map_err(|e| DistError::backend(format!("partition delta: {e}")))?;
+            Ok(ToWorker::Delta { epoch, delta })
         }
         other => Err(DistError::backend(format!("unknown binary command tag {other}"))),
     }
@@ -635,16 +702,23 @@ fn decode_binary_reply(bytes: &[u8]) -> Result<FromWorker, DistError> {
 }
 
 /// A shipped child solution inside a binary envelope: fixed fields, the
-/// solution ids, then (optionally) its extracted shard, length-prefixed
-/// so multiple children pack into one `recv` frame.
+/// solution ids, then (optionally) the coreset ids and the extracted
+/// shard, length-prefixed so multiple children pack into one `recv` frame.
 fn encode_binary_child(out: &mut Vec<u8>, m: &ChildMsg) {
     out.extend_from_slice(&m.from.to_le_bytes());
     out.extend_from_slice(&m.value.to_bits().to_le_bytes());
     out.extend_from_slice(&m.bytes.to_le_bytes());
     out.extend_from_slice(&(m.sol.len() as u32).to_le_bytes());
     out.push(m.data.is_some() as u8);
+    out.push(m.coreset.is_some() as u8);
     for &e in &m.sol {
         out.extend_from_slice(&e.to_le_bytes());
+    }
+    if let Some(cs) = &m.coreset {
+        out.extend_from_slice(&(cs.len() as u32).to_le_bytes());
+        for &e in cs {
+            out.extend_from_slice(&e.to_le_bytes());
+        }
     }
     if let Some(data) = &m.data {
         out.extend_from_slice(&(data.binary_len() as u64).to_le_bytes());
@@ -662,6 +736,13 @@ fn decode_binary_child(cur: &mut Cursor<'_>) -> Result<ChildMsg, DistError> {
         1 => true,
         other => return Err(DistError::backend(format!("binary child: bad data flag {other}"))),
     };
+    let has_coreset = match cur.u8()? {
+        0 => false,
+        1 => true,
+        other => {
+            return Err(DistError::backend(format!("binary child: bad coreset flag {other}")))
+        }
+    };
     let sol_bytes = cur.take(sol_len.checked_mul(4).ok_or_else(|| {
         DistError::backend(format!("binary child: solution length {sol_len} overflows"))
     })?)?;
@@ -669,6 +750,20 @@ fn decode_binary_child(cur: &mut Cursor<'_>) -> Result<ChildMsg, DistError> {
         .chunks_exact(4)
         .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as ElemId)
         .collect();
+    let coreset = if has_coreset {
+        let cs_len = cur.u32()? as usize;
+        let cs_bytes = cur.take(cs_len.checked_mul(4).ok_or_else(|| {
+            DistError::backend(format!("binary child: coreset length {cs_len} overflows"))
+        })?)?;
+        Some(
+            cs_bytes
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as ElemId)
+                .collect(),
+        )
+    } else {
+        None
+    };
     let data = if has_data {
         let plen = cur.u64()?;
         let plen = usize::try_from(plen).map_err(|_| {
@@ -680,7 +775,7 @@ fn decode_binary_child(cur: &mut Cursor<'_>) -> Result<ChildMsg, DistError> {
     } else {
         None
     };
-    Ok(ChildMsg { from, sol, value, bytes, data })
+    Ok(ChildMsg { from, sol, value, bytes, data, coreset })
 }
 
 /// Bounds-checked reader over a binary frame's payload: every read is
@@ -799,6 +894,7 @@ fn params_to_value(p: &NodeParams) -> Value {
         "local_view": p.local_view,
         "added_elements": p.added_elements,
         "compare_all_children": p.compare_all_children,
+        "coreset": p.coreset,
     })
 }
 
@@ -820,6 +916,7 @@ fn params_from_value(v: &Value) -> Result<NodeParams, DistError> {
         local_view: bool_field(v, "local_view")?,
         added_elements: u64_field(v, "added_elements")? as usize,
         compare_all_children: bool_field(v, "compare_all_children")?,
+        coreset: bool_field(v, "coreset")?,
     })
 }
 
@@ -827,6 +924,9 @@ fn child_to_value(m: &ChildMsg) -> Value {
     let mut v = json!({ "from": m.from, "sol": m.sol, "value": m.value, "bytes": m.bytes });
     if let Some(data) = &m.data {
         v["data"] = data.to_value();
+    }
+    if let Some(cs) = &m.coreset {
+        v["coreset"] = json!(cs);
     }
     v
 }
@@ -843,6 +943,10 @@ fn child_from_value(v: &Value) -> Result<ChildMsg, DistError> {
                 PartitionPayload::from_value(d)
                     .map_err(|e| DistError::backend(format!("child data payload: {e}")))?,
             ),
+        },
+        coreset: match v.get("coreset") {
+            None | Some(Value::Null) => None,
+            Some(_) => Some(elems_field(v, "coreset")?),
         },
     })
 }
@@ -938,6 +1042,27 @@ mod tests {
     use super::*;
     use crate::objective::PartitionData;
 
+    /// A small delta for codec samples: one insert (with its data row),
+    /// one delete.
+    fn sample_delta() -> PartitionDelta {
+        PartitionDelta {
+            n_global: 1001,
+            insert: PartitionPayload {
+                n_global: 1001,
+                elems: vec![1000],
+                data: PartitionData::Cover {
+                    universe: 40,
+                    offsets: vec![0, 2],
+                    items: vec![4, 11],
+                    weights: None,
+                    self_cover: false,
+                    dominating: false,
+                },
+            },
+            delete: vec![9],
+        }
+    }
+
     /// A small shard payload for codec samples.
     fn sample_payload() -> PartitionPayload {
         PartitionPayload {
@@ -996,6 +1121,7 @@ mod tests {
                     local_view: true,
                     added_elements: 50,
                     compare_all_children: false,
+                    coreset: true,
                 },
                 spec: "problem.k = 4\n".to_string(),
             },
@@ -1004,15 +1130,23 @@ mod tests {
             ToWorker::Recv {
                 level: 2,
                 children: vec![
-                    ChildMsg { from: 4, sol: vec![7, 8], value: 12.5, bytes: 64, data: None },
-                    // Partition shipping: the solution travels with its
-                    // extracted data shard.
+                    ChildMsg {
+                        from: 4,
+                        sol: vec![7, 8],
+                        value: 12.5,
+                        bytes: 64,
+                        data: None,
+                        coreset: None,
+                    },
+                    // Partition shipping + coreset mode: the solution
+                    // travels with its coreset and its extracted data shard.
                     ChildMsg {
                         from: 5,
                         sol: vec![9],
                         value: 3.25,
                         bytes: 20,
                         data: Some(sample_payload()),
+                        coreset: Some(vec![9, 2, 511]),
                     },
                 ],
             },
@@ -1020,6 +1154,7 @@ mod tests {
             ToWorker::JobDone,
             ToWorker::Release,
             ToWorker::Ping,
+            ToWorker::Delta { epoch: 3, delta: sample_delta() },
         ]
     }
 
@@ -1044,6 +1179,7 @@ mod tests {
                 value: 7.25,
                 bytes: 96,
                 data: None,
+                coreset: Some(vec![1, 2, 3, 8]),
             }),
             FromWorker::Final {
                 stats: MachineStats { id: 6, calls: 10, peak_mem: 77, ..MachineStats::new(6) },
@@ -1059,6 +1195,7 @@ mod tests {
                 limit: 120,
             }),
             FromWorker::Pong,
+            FromWorker::DeltaDone { epoch: 3, n: 340 },
         ]
     }
 
@@ -1170,6 +1307,7 @@ mod tests {
                 value: v,
                 bytes: 0,
                 data: None,
+                coreset: None,
             });
             let mut buf = Vec::new();
             write_frame(&mut buf, &msg.to_value()).unwrap();
@@ -1210,8 +1348,10 @@ mod tests {
             let mut buf = Vec::new();
             let written = write_cmd(&mut buf, &cmd, WireMode::Binary).unwrap();
             assert_eq!(written, buf.len() as u64, "write_cmd must report the on-wire size");
-            let expect_binary =
-                matches!(cmd, ToWorker::InitPart { .. } | ToWorker::Recv { .. });
+            let expect_binary = matches!(
+                cmd,
+                ToWorker::InitPart { .. } | ToWorker::Recv { .. } | ToWorker::Delta { .. }
+            );
             let expect_ctype = if expect_binary { CONTENT_BINARY } else { CONTENT_JSON };
             assert_eq!(buf[4], expect_ctype, "wrong content type for {cmd:?}");
             let (decoded, mode) = read_cmd(&mut buf.as_slice()).unwrap().expect("frame");
@@ -1248,6 +1388,7 @@ mod tests {
             value: 0.1 + 0.2, // not exactly representable — bit-exactness matters
             bytes: 123,
             data: Some(sample_payload()),
+            coreset: Some(vec![9, 2, 511]),
         });
         let mut buf = Vec::new();
         write_reply(&mut buf, &msg, WireMode::Binary).unwrap();
@@ -1397,5 +1538,61 @@ mod tests {
             "binary init_part frame no longer matches the hex dump in docs/wire-protocol.md"
         );
         assert_eq!(written, buf.len() as u64, "write_cmd must report the on-wire size");
+    }
+
+    #[test]
+    fn binary_delta_frame_bytes_match_the_documented_hex_dump() {
+        // The annotated v6 binary dump in docs/wire-protocol.md shows this
+        // exact frame; if the encoding ever changes, the doc must change
+        // with it.
+        let cmd = ToWorker::Delta {
+            epoch: 1,
+            delta: PartitionDelta {
+                n_global: 4,
+                insert: PartitionPayload {
+                    n_global: 4,
+                    elems: vec![2],
+                    data: PartitionData::Modular { weights: vec![1.5] },
+                },
+                delete: vec![0],
+            },
+        };
+        let mut buf = Vec::new();
+        let written = write_cmd(&mut buf, &cmd, WireMode::Binary).unwrap();
+        let expect: Vec<u8> = [
+            // frame prefix: payload length 72, content type binary
+            &[0x48, 0x00, 0x00, 0x00, 0x02][..],
+            // envelope: tag delta, epoch = 1
+            &[0x04],
+            &[0x01, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00],
+            // delta header: n_global = 4, one delete, delete id 0
+            &[0x04, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00],
+            &[0x01, 0x00, 0x00, 0x00],
+            &[0x00, 0x00, 0x00, 0x00],
+            // insert payload header: family modular, flags 0, 2 sections
+            &[0x04, 0x00, 0x02, 0x00],
+            // n_global = 4, meta = 0
+            &[0x04, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00],
+            &[0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00],
+            // section 0 (elems): 1 byte, width 1
+            &[0x01, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x01],
+            // section 1 (weights): 8 bytes, width 8
+            &[0x08, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x08],
+            // elems = [2]
+            &[0x02],
+            // weights: 1.5 as f64 bits, little-endian
+            &[0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xf8, 0x3f],
+        ]
+        .concat();
+        assert_eq!(
+            buf, expect,
+            "binary delta frame no longer matches the hex dump in docs/wire-protocol.md"
+        );
+        assert_eq!(written, buf.len() as u64, "write_cmd must report the on-wire size");
+
+        // And the frame round-trips through the command reader.
+        let (decoded, mode) = read_cmd(&mut buf.as_slice()).unwrap().expect("frame");
+        assert_eq!(decoded, cmd);
+        assert_eq!(mode, WireMode::Binary);
     }
 }

@@ -19,7 +19,7 @@ pub mod stochastic;
 
 pub use lazy::greedy_lazy;
 pub use naive::greedy_naive;
-pub use sieve::sieve_streaming;
+pub use sieve::{sieve_coreset, sieve_streaming, SieveCoreset};
 pub use stochastic::greedy_stochastic;
 
 /// Result of one GREEDY run.

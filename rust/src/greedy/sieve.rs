@@ -20,6 +20,26 @@ struct Sieve<'a> {
     state: Box<dyn GainState + 'a>,
 }
 
+/// All live sieves after one pass, plus the query accounting.
+struct SievePass<'a> {
+    sieves: Vec<Sieve<'a>>,
+    calls: u64,
+    cost: u64,
+}
+
+/// The union of every sieve's candidate set after one pass — the streaming
+/// *coreset* of Lucic et al. ("Horizontally Scalable Submodular
+/// Maximization", PAPERS.md).  It contains the winning sieve's solution, so
+/// running greedy over it preserves the `(1/2 − ε)` certificate, and its
+/// size is at most `sieves × k = O(k·log(k)/ε)` elements — the quantity the
+/// coreset dist mode ships instead of whole `O(n/m)` shards.
+pub struct SieveCoreset {
+    /// Union of sieve candidate sets, in stream order.
+    pub elems: Vec<ElemId>,
+    /// The best single sieve (the classic Sieve-Streaming answer).
+    pub best: GreedyOutcome,
+}
+
 /// Run Sieve-Streaming over `stream` with budget `k` and accuracy `epsilon`.
 ///
 /// Only cardinality constraints are supported (the algorithm's analysis is
@@ -31,8 +51,55 @@ pub fn sieve_streaming(
     view: Option<&[ElemId]>,
     epsilon: f64,
 ) -> GreedyOutcome {
+    let pass = run_pass(oracle, constraint.k().max(1), stream, view, epsilon);
+    best_outcome(&pass)
+}
+
+/// Run the sieve pass and keep *every* sieve's candidates: the coreset
+/// consumed by `--coreset` dist runs (leaves sieve their shard; accumulation
+/// nodes re-sieve the union of their children's coresets).
+pub fn sieve_coreset(
+    oracle: &dyn Oracle,
+    constraint: &Cardinality,
+    stream: &[ElemId],
+    view: Option<&[ElemId]>,
+    epsilon: f64,
+) -> SieveCoreset {
+    let pass = run_pass(oracle, constraint.k().max(1), stream, view, epsilon);
+    let best = best_outcome(&pass);
+    let mut member: std::collections::HashSet<ElemId> = std::collections::HashSet::new();
+    for s in &pass.sieves {
+        member.extend(s.state.solution().iter().copied());
+    }
+    // Stream order keeps the coreset deterministic and re-sieveable.
+    let elems: Vec<ElemId> = stream.iter().copied().filter(|e| member.remove(e)).collect();
+    SieveCoreset { elems, best }
+}
+
+fn best_outcome(pass: &SievePass<'_>) -> GreedyOutcome {
+    let best = pass
+        .sieves
+        .iter()
+        .max_by(|a, b| a.state.value().partial_cmp(&b.state.value()).unwrap());
+    match best {
+        None => GreedyOutcome { solution: Vec::new(), value: 0.0, calls: pass.calls, cost: pass.cost },
+        Some(s) => GreedyOutcome {
+            solution: s.state.solution().to_vec(),
+            value: s.state.value(),
+            calls: pass.calls,
+            cost: pass.cost,
+        },
+    }
+}
+
+fn run_pass<'a>(
+    oracle: &'a dyn Oracle,
+    k: usize,
+    stream: &[ElemId],
+    view: Option<&[ElemId]>,
+    epsilon: f64,
+) -> SievePass<'a> {
     assert!(epsilon > 0.0 && epsilon < 1.0);
-    let k = constraint.k().max(1);
     let mut calls = 0u64;
     let mut cost = 0u64;
 
@@ -87,19 +154,7 @@ pub fn sieve_streaming(
         }
     }
 
-    // Best sieve wins.
-    let best = sieves
-        .iter()
-        .max_by(|a, b| a.state.value().partial_cmp(&b.state.value()).unwrap());
-    match best {
-        None => GreedyOutcome { solution: Vec::new(), value: 0.0, calls, cost },
-        Some(s) => GreedyOutcome {
-            solution: s.state.solution().to_vec(),
-            value: s.state.value(),
-            calls,
-            cost,
-        },
-    }
+    SievePass { sieves, calls, cost }
 }
 
 #[cfg(test)]
@@ -152,6 +207,32 @@ mod tests {
             assert!(out.solution.len() <= 12);
             assert!(out.value > 0.0);
         }
+    }
+
+    #[test]
+    fn coreset_contains_the_best_sieve_and_stays_small() {
+        let o = oracle(1200, 7);
+        let c = Cardinality::new(20);
+        let stream: Vec<u32> = (0..1200).collect();
+        let cs = sieve_coreset(&o, &c, &stream, None, 0.2);
+        // The winning sieve's solution is a subset of the union.
+        for e in &cs.best.solution {
+            assert!(cs.elems.contains(e), "coreset lost best-sieve element {e}");
+        }
+        // Union in stream order, no duplicates.
+        let mut sorted = cs.elems.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), cs.elems.len());
+        assert!(cs.elems.windows(2).all(|w| w[0] < w[1]));
+        // Far smaller than the stream; greedy over it clears the sieve value.
+        assert!(cs.elems.len() < 1200 / 2, "coreset {} too large", cs.elems.len());
+        let over = greedy_lazy(&o, &c, &cs.elems, None);
+        assert!(over.value >= cs.best.value - 1e-9);
+        // And matches a plain sieve_streaming run exactly.
+        let plain = sieve_streaming(&o, &c, &stream, None, 0.2);
+        assert_eq!(plain.solution, cs.best.solution);
+        assert_eq!(plain.value.to_bits(), cs.best.value.to_bits());
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod tree;
 #[warn(missing_docs)]
 pub mod dist;
 pub mod algo;
+pub mod stream;
 pub mod bsp;
 pub mod metrics;
 pub mod runtime;

@@ -61,13 +61,15 @@ const USAGE: &str =
     "usage: greedyml <run|sweep|submit|serve|gateway|tree|datasets|artifacts|model> [flags]
   run       --config <file> [--set key=value]… [--json <out.json>] [--pjrt]
             [--backend thread|process|tcp] [--hosts h1:port,h2:port] [--ship spec|partition]
-            [--on-fault fail|retry|degrade] [--wire json|binary]
+            [--on-fault fail|retry|degrade] [--wire json|binary] [--coreset auto|on|off]
   sweep     --config <file> (with a [sweep] section) [--set key=value]… [--json <out.json>]
             [--csv <dir>] [--backend thread|process|tcp] [--hosts h1:port,h2:port]
             [--ship spec|partition] [--on-fault fail|retry|degrade] [--wire json|binary]
+            [--coreset auto|on|off]
   submit    --config <file> (with a [jobs] section) [--set key=value]… [--json]
             [--gateway <addr>] [--backend thread|process|tcp] [--hosts h1:port,h2:port]
             [--ship spec|partition] [--on-fault fail|retry|degrade] [--wire json|binary]
+            [--coreset auto|on|off] [--deltas <file>] (re-solves the batch after each delta)
   serve     --bind <addr>   (tcp-backend worker daemon; --bind 127.0.0.1:0 picks a free port)
   gateway   --bind <addr> [--workers <n>] [--mem-budget <bytes>] [--cache-entries <n>]
             (job-service daemon: schedules concurrent submit clients onto warm fleets)
@@ -79,6 +81,7 @@ const USAGE: &str =
 fn cmd_run(args: &Args) -> greedyml::Result<()> {
     args.check_known(&[
         "config", "set", "json", "pjrt", "trace", "backend", "hosts", "ship", "on-fault", "wire",
+        "coreset",
     ])?;
     let mut cfg = Config::load(args.require("config")?)?;
     for kv in args.get_all("set") {
@@ -98,6 +101,9 @@ fn cmd_run(args: &Args) -> greedyml::Result<()> {
     }
     if let Some(wire) = args.get("wire") {
         cfg.set("run.wire", wire);
+    }
+    if let Some(coreset) = args.get("coreset") {
+        cfg.set("run.coreset", coreset);
     }
     let engine = if args.has("pjrt") || cfg.str_or("objective.backend", "cpu") == "pjrt" {
         if args.has("pjrt") {
@@ -154,6 +160,7 @@ fn cmd_run(args: &Args) -> greedyml::Result<()> {
 fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
     args.check_known(&[
         "config", "set", "json", "pjrt", "csv", "backend", "hosts", "ship", "on-fault", "wire",
+        "coreset",
     ])?;
     let mut cfg = Config::load(args.require("config")?)?;
     for kv in args.get_all("set") {
@@ -173,6 +180,9 @@ fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
     }
     if let Some(wire) = args.get("wire") {
         cfg.set("sweep.wire", wire);
+    }
+    if let Some(coreset) = args.get("coreset") {
+        cfg.set("sweep.coreset", coreset);
     }
     let engine = if args.has("pjrt") || cfg.str_or("objective.backend", "cpu") == "pjrt" {
         Some(Arc::new(Engine::load(&greedyml::runtime::artifact_dir())?))
@@ -205,6 +215,7 @@ fn cmd_sweep(args: &Args) -> greedyml::Result<()> {
 fn cmd_submit(args: &Args) -> greedyml::Result<()> {
     args.check_known(&[
         "config", "set", "backend", "hosts", "ship", "on-fault", "gateway", "json", "wire",
+        "coreset", "deltas",
     ])?;
     let mut cfg = Config::load(args.require("config")?)?;
     for kv in args.get_all("set") {
@@ -225,20 +236,37 @@ fn cmd_submit(args: &Args) -> greedyml::Result<()> {
     if let Some(wire) = args.get("wire") {
         cfg.set("jobs.wire", wire);
     }
+    if let Some(coreset) = args.get("coreset") {
+        cfg.set("jobs.coreset", coreset);
+    }
+    // A deltas file turns the batch into a live-dataset replay: every
+    // (seed, k) cell runs at epoch 0, then again after each delta, with
+    // resident fleets advanced in place between passes.
+    let deltas = match args.get("deltas") {
+        None => Vec::new(),
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("--deltas {path}: {e}"))?;
+            greedyml::stream::parse_deltas(&text)
+                .map_err(|e| anyhow::anyhow!("--deltas {path}: {e}"))?
+        }
+    };
     let batch = JobBatch::from_config(&cfg)?;
     let json = args.has("json");
     match args.get("gateway") {
-        Some(addr) => submit_gateway(&cfg, &batch, addr, json),
-        None => submit_local(&cfg, &batch, json),
+        Some(addr) => submit_gateway(&cfg, &batch, &deltas, addr, json),
+        None => submit_local(&cfg, &batch, &deltas, json),
     }
 }
 
 /// One `submit` table row as a JSON record (`--json` mode).  `value` is
 /// null for jobs that produced none (rejected/failed); `faults` is the
 /// run's fault summary (empty for a clean run); `detail` carries the
-/// rejection reason or error text.
+/// rejection reason or error text.  `epoch` is the dataset epoch the job
+/// ran at — 0 unless `--deltas` advanced the corpus.
 fn job_row(
     id: u64,
+    epoch: u64,
     k: usize,
     seed: u64,
     status: &str,
@@ -248,6 +276,7 @@ fn job_row(
 ) -> Json {
     Json::obj([
         ("id", Json::from(id)),
+        ("epoch", Json::from(epoch)),
         ("k", Json::from(k)),
         ("seed", Json::from(seed)),
         ("status", Json::from(status)),
@@ -279,56 +308,88 @@ fn queue_counters(
 
 /// Drive the batch through an in-process [`JobQueue`] — the historical
 /// `submit` path, still the right tool when the fleet belongs to this
-/// process alone.
-fn submit_local(cfg: &Config, batch: &JobBatch, json: bool) -> greedyml::Result<()> {
+/// process alone.  With `deltas`, the batch re-runs after each delta as
+/// an incremental re-solve over the advanced-in-place fleets.
+fn submit_local(
+    cfg: &Config,
+    batch: &JobBatch,
+    deltas: &[greedyml::objective::PartitionDelta],
+    json: bool,
+) -> greedyml::Result<()> {
     let problem = greedyml::coordinator::build_problem(cfg, None)?;
     let jobs = batch.jobs();
+    let mut live = match deltas.is_empty() {
+        true => None,
+        false => Some(
+            greedyml::stream::LiveProblem::new(problem.oracle.as_ref())
+                .map_err(|e| anyhow::anyhow!("--deltas: {e}"))?,
+        ),
+    };
     if !json {
         println!(
-            "submitting {} jobs against {} (n={}, fleet {}×b{})",
+            "submitting {} jobs against {} (n={}, fleet {}×b{}{})",
             jobs.len(),
             problem.summary.name,
             greedyml::util::fmt_count(problem.summary.n as u64),
             batch.machines,
-            batch.branching
+            batch.branching,
+            match deltas.len() {
+                0 => String::new(),
+                d => format!(", {} epochs", d + 1),
+            }
         );
-        println!("{:>6} {:>6}  {:<8} {}", "k", "seed", "status", "value");
+        println!("{:>6} {:>6} {:>6}  {:<8} {}", "epoch", "k", "seed", "status", "value");
     }
     let queue = JobQueue::with_cache_entries(batch.mem_budget, batch.cache_entries);
     let mut rows = Vec::new();
-    for (id, &(seed, k)) in jobs.iter().enumerate() {
-        let dist = batch.dist_config(cfg, k, seed);
-        // One job failing must not strand the rest of the batch — or eat
-        // the final accounting.  Report the row, keep draining.
-        let (status, value, faults, detail) = match queue.submit(&problem, &dist) {
-            Ok(Submission::Rejected { reason }) => {
-                if !json {
-                    println!("{k:>6} {seed:>6}  {:<8} — {reason}", "rejected");
-                }
-                ("rejected", None, String::new(), reason)
-            }
-            Ok(sub) => {
-                let value = sub.value();
-                if !json {
-                    println!("{k:>6} {seed:>6}  {:<8} {:.6}", sub.status(), value.unwrap());
-                }
-                let faults = match &sub {
-                    Submission::Ran { faults, .. } => faults.clone(),
-                    _ => String::new(),
+    for pass in 0..=deltas.len() {
+        if pass > 0 {
+            let l = live.as_mut().expect("deltas imply a live problem");
+            l.apply(&deltas[pass - 1])
+                .map_err(|e| anyhow::anyhow!("--deltas entry {}: {e}", pass - 1))?;
+        }
+        let ep = live.as_ref().map_or(0, |l| l.epoch());
+        for (j, &(seed, k)) in jobs.iter().enumerate() {
+            let id = (pass * jobs.len() + j) as u64;
+            let mut dist = batch.dist_config(cfg, k, seed);
+            dist.epoch = ep;
+            // One job failing must not strand the rest of the batch — or
+            // eat the final accounting.  Report the row, keep draining.
+            let (status, value, faults, detail) =
+                match queue.submit_live(&problem, &dist, live.as_ref()) {
+                    Ok(Submission::Rejected { reason }) => {
+                        if !json {
+                            println!("{ep:>6} {k:>6} {seed:>6}  {:<8} — {reason}", "rejected");
+                        }
+                        ("rejected", None, String::new(), reason)
+                    }
+                    Ok(sub) => {
+                        let value = sub.value();
+                        if !json {
+                            println!(
+                                "{ep:>6} {k:>6} {seed:>6}  {:<8} {:.6}",
+                                sub.status(),
+                                value.unwrap()
+                            );
+                        }
+                        let faults = match &sub {
+                            Submission::Ran { faults, .. } => faults.clone(),
+                            _ => String::new(),
+                        };
+                        if !json && !faults.is_empty() {
+                            println!("{:>6} {:>6} {:>6}  faults: {faults}", "", "", "");
+                        }
+                        (sub.status(), value, faults, String::new())
+                    }
+                    Err(e) => {
+                        if !json {
+                            println!("{ep:>6} {k:>6} {seed:>6}  {:<8} — {e}", "failed");
+                        }
+                        ("failed", None, String::new(), format!("{e:#}"))
+                    }
                 };
-                if !json && !faults.is_empty() {
-                    println!("{:>6} {:>6}  faults: {faults}", "", "");
-                }
-                (sub.status(), value, faults, String::new())
-            }
-            Err(e) => {
-                if !json {
-                    println!("{k:>6} {seed:>6}  {:<8} — {e}", "failed");
-                }
-                ("failed", None, String::new(), format!("{e:#}"))
-            }
-        };
-        rows.push(job_row(id as u64, k, seed, status, value, &faults, &detail));
+            rows.push(job_row(id, ep, k, seed, status, value, &faults, &detail));
+        }
     }
     let pool = queue.pool();
     if json {
@@ -374,66 +435,100 @@ fn submit_local(cfg: &Config, batch: &JobBatch, json: bool) -> greedyml::Result<
 /// Ship the batch to a `greedyml gateway` daemon and stream results back
 /// as they complete — completion order, not submission order, because the
 /// daemon runs admitted jobs concurrently.  The problem is built daemon-side
-/// from the shipped spec, so this process never touches the dataset.
-fn submit_gateway(cfg: &Config, batch: &JobBatch, addr: &str, json: bool) -> greedyml::Result<()> {
+/// from the shipped spec, so this process never touches the dataset.  With
+/// `deltas`, each pass is fully drained before the next `delta` frame goes
+/// out — a delta overtaking an in-flight job would fail it as stale.
+fn submit_gateway(
+    cfg: &Config,
+    batch: &JobBatch,
+    deltas: &[greedyml::objective::PartitionDelta],
+    addr: &str,
+    json: bool,
+) -> greedyml::Result<()> {
     let jobs = batch.jobs();
     if !json {
         println!(
-            "submitting {} jobs to gateway {addr} (fleet {}×b{})",
+            "submitting {} jobs to gateway {addr} (fleet {}×b{}{})",
             jobs.len(),
             batch.machines,
-            batch.branching
+            batch.branching,
+            match deltas.len() {
+                0 => String::new(),
+                d => format!(", {} epochs", d + 1),
+            }
         );
+        println!("{:>6} {:>6} {:>6}  {:<8} {}", "epoch", "k", "seed", "status", "value");
     }
     let mut client = GatewayClient::connect(addr)?;
-    for (id, &(seed, k)) in jobs.iter().enumerate() {
-        let dist = batch.dist_config(cfg, k, seed);
-        client.submit(&JobSpec::from_dist(id as u64, &dist)?)?;
-    }
-    if !json {
-        println!("{:>6} {:>6}  {:<8} {}", "k", "seed", "status", "value");
-    }
-    let mut rows: Vec<Option<Json>> = vec![None; jobs.len()];
-    let mut pending = jobs.len();
+    // The daemon keys its resident corpus by dataset fingerprint, which
+    // ignores the per-job `problem.k` override — the bare spec addresses
+    // the corpus every job in this batch runs against.
+    let corpus_spec = greedyml::coordinator::problem_spec(cfg);
+    let mut rows: Vec<Option<Json>> = vec![None; jobs.len() * (deltas.len() + 1)];
     let (mut rejected, mut failed) = (0u64, 0u64);
-    while pending > 0 {
-        let (id, status, value, faults, detail) = match client.next()? {
-            // Admission acks are bookkeeping, not terminal outcomes.
-            FromGateway::Accepted { .. } => continue,
-            FromGateway::Result { id, value, warm, cached, faults, .. } => {
-                let status = match (cached, warm) {
-                    (true, _) => "cached",
-                    (false, true) => "warm",
-                    (false, false) => "cold",
-                };
-                (id, status, Some(value), faults, String::new())
-            }
-            FromGateway::Rejected { id, reason } => {
-                rejected += 1;
-                (id, "rejected", None, String::new(), reason)
-            }
-            FromGateway::Failed { id, error } => {
-                failed += 1;
-                (id, "failed", None, String::new(), error)
-            }
-            other => anyhow::bail!("unexpected gateway frame {other:?}"),
-        };
-        let &(seed, k) = jobs
-            .get(id as usize)
-            .ok_or_else(|| anyhow::anyhow!("gateway answered unknown job id {id}"))?;
-        if !json {
-            match value {
-                Some(v) => println!("{k:>6} {seed:>6}  {status:<8} {v:.6}"),
-                None => println!("{k:>6} {seed:>6}  {status:<8} — {detail}"),
-            }
-            if !faults.is_empty() {
-                println!("{:>6} {:>6}  faults: {faults}", "", "");
-            }
+    let mut epoch_now = 0u64;
+    for pass in 0..=deltas.len() {
+        if pass > 0 {
+            client.send_delta(&corpus_spec, &deltas[pass - 1])?;
+            // The daemon's epoch is authoritative: another client may
+            // have advanced the corpus since our last pass.
+            epoch_now = loop {
+                match client.next()? {
+                    FromGateway::DeltaOk { epoch } => break epoch,
+                    FromGateway::Accepted { .. } => continue,
+                    other => anyhow::bail!("expected delta_ok from the gateway, got {other:?}"),
+                }
+            };
         }
-        if rows[id as usize].is_none() {
-            pending -= 1;
+        let base = pass * jobs.len();
+        for (j, &(seed, k)) in jobs.iter().enumerate() {
+            let mut dist = batch.dist_config(cfg, k, seed);
+            dist.epoch = epoch_now;
+            client.submit(&JobSpec::from_dist((base + j) as u64, &dist)?)?;
         }
-        rows[id as usize] = Some(job_row(id, k, seed, status, value, &faults, &detail));
+        let mut pending = jobs.len();
+        while pending > 0 {
+            let (id, status, value, faults, detail) = match client.next()? {
+                // Admission acks are bookkeeping, not terminal outcomes.
+                FromGateway::Accepted { .. } => continue,
+                FromGateway::Result { id, value, warm, cached, faults, .. } => {
+                    let status = match (cached, warm) {
+                        (true, _) => "cached",
+                        (false, true) => "warm",
+                        (false, false) => "cold",
+                    };
+                    (id, status, Some(value), faults, String::new())
+                }
+                FromGateway::Rejected { id, reason } => {
+                    rejected += 1;
+                    (id, "rejected", None, String::new(), reason)
+                }
+                FromGateway::Failed { id, error } => {
+                    failed += 1;
+                    (id, "failed", None, String::new(), error)
+                }
+                other => anyhow::bail!("unexpected gateway frame {other:?}"),
+            };
+            let j = (id as usize)
+                .checked_sub(base)
+                .filter(|j| *j < jobs.len())
+                .ok_or_else(|| anyhow::anyhow!("gateway answered job id {id} outside this pass"))?;
+            let (seed, k) = jobs[j];
+            if !json {
+                match value {
+                    Some(v) => println!("{epoch_now:>6} {k:>6} {seed:>6}  {status:<8} {v:.6}"),
+                    None => println!("{epoch_now:>6} {k:>6} {seed:>6}  {status:<8} — {detail}"),
+                }
+                if !faults.is_empty() {
+                    println!("{:>6} {:>6} {:>6}  faults: {faults}", "", "", "");
+                }
+            }
+            if rows[id as usize].is_none() {
+                pending -= 1;
+            }
+            rows[id as usize] =
+                Some(job_row(id, epoch_now, k, seed, status, value, &faults, &detail));
+        }
     }
     // Daemon-wide tallies: they cover every client of this gateway, not
     // just the batch we shipped.
@@ -445,6 +540,7 @@ fn submit_gateway(cfg: &Config, batch: &JobBatch, addr: &str, json: bool) -> gre
             other => anyhow::bail!("expected stats from the gateway, got {other:?}"),
         }
     };
+    let total = rows.len();
     if json {
         let counters = queue_counters(
             snap.submitted,
@@ -476,7 +572,7 @@ fn submit_gateway(cfg: &Config, batch: &JobBatch, addr: &str, json: bool) -> gre
         anyhow::bail!(
             "{} of {} jobs did not complete ({} rejected by admission, {} failed)",
             rejected + failed,
-            jobs.len(),
+            total,
             rejected,
             failed
         );

@@ -30,7 +30,8 @@ pub use kdominate::KDominatingSet;
 pub use kmedoid::KMedoid;
 pub use modular::Modular;
 pub use problem::{
-    PartitionData, PartitionDecoder, PartitionOracle, PartitionPayload, Partitionable,
+    PartitionData, PartitionDecoder, PartitionDelta, PartitionOracle, PartitionPayload,
+    Partitionable,
 };
 pub use wcover::WeightedCover;
 

@@ -851,6 +851,143 @@ impl PartitionPayload {
     }
 }
 
+// ---- live-dataset deltas (wire v6) --------------------------------------
+
+/// A serde-stable diff against a partitioned dataset: global-id inserts
+/// (with their per-family data rows, packaged exactly like a shard) plus
+/// global-id deletes.  One delta advances the dataset **epoch** by one;
+/// the coordinator applies it to its full-view oracle and fans per-machine
+/// sub-deltas to a resident fleet (`delta` frames, wire v6) so workers
+/// update shards in place instead of re-shipping O(n/m) payloads.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionDelta {
+    /// Global ground-set size *after* this delta.  Inserts may grow the
+    /// id space; it never shrinks (deleted ids simply leave every shard).
+    pub n_global: usize,
+    /// Inserted elements and their data rows.  `insert.n_global` must
+    /// equal the post-delta [`PartitionDelta::n_global`].
+    pub insert: PartitionPayload,
+    /// Deleted global element ids.
+    pub delete: Vec<ElemId>,
+}
+
+impl PartitionDelta {
+    /// Number of inserted plus deleted elements.
+    pub fn len(&self) -> usize {
+        self.insert.len() + self.delete.len()
+    }
+
+    /// True when the delta changes nothing.
+    pub fn is_empty(&self) -> bool {
+        self.insert.is_empty() && self.delete.is_empty()
+    }
+
+    /// Structural consistency: the insert payload validates against the
+    /// post-delta ground set, deletes are in range and unique, and no id
+    /// is both inserted and deleted (a replace is delete-old + insert-new
+    /// under a fresh id).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.insert.n_global != self.n_global {
+            return Err(format!(
+                "delta: insert payload describes a ground set of {} elements, \
+                 delta declares {}",
+                self.insert.n_global, self.n_global
+            ));
+        }
+        self.insert.validate()?;
+        let mut seen = std::collections::HashSet::with_capacity(self.delete.len());
+        for &e in &self.delete {
+            if (e as usize) >= self.n_global {
+                return Err(format!(
+                    "delta deletes element {e} outside the ground set ({})",
+                    self.n_global
+                ));
+            }
+            if !seen.insert(e) {
+                return Err(format!("delta deletes element {e} twice"));
+            }
+        }
+        if let Some(&e) = self.insert.elems.iter().find(|e| seen.contains(e)) {
+            return Err(format!("delta both inserts and deletes element {e}"));
+        }
+        Ok(())
+    }
+
+    /// Encode as a JSON value (embedded in `delta` frames; part of the
+    /// wire protocol like [`PartitionPayload::to_value`]).
+    pub fn to_value(&self) -> Value {
+        json!({
+            "n_global": self.n_global,
+            "insert": self.insert.to_value(),
+            "delete": self.delete,
+        })
+    }
+
+    /// Decode from a JSON value; validates like the payload path.
+    pub fn from_value(v: &Value) -> Result<Self, String> {
+        let n_global = field_u64(v, "n_global")? as usize;
+        let insert = PartitionPayload::from_value(
+            v.get("insert").ok_or("delta missing field 'insert'")?,
+        )?;
+        let delete: Vec<ElemId> = field_arr(v, "delete")?
+            .iter()
+            .map(|e| {
+                e.as_u64()
+                    .map(|x| x as ElemId)
+                    .ok_or_else(|| "delta field 'delete': non-integer element".to_string())
+            })
+            .collect::<Result<_, _>>()?;
+        let delta = Self { n_global, insert, delete };
+        delta.validate()?;
+        Ok(delta)
+    }
+
+    /// Exact byte length of [`PartitionDelta::encode_binary`]'s output.
+    pub fn binary_len(&self) -> usize {
+        8 + 4 + 4 * self.delete.len() + self.insert.binary_len()
+    }
+
+    /// Append the binary encoding: `[n_global u64 LE][n_delete u32 LE]`
+    /// `[delete ids u32 LE …]` then the insert payload's section encoding.
+    pub fn encode_binary(&self, out: &mut Vec<u8>) {
+        out.reserve(self.binary_len());
+        out.extend_from_slice(&(self.n_global as u64).to_le_bytes());
+        out.extend_from_slice(&(self.delete.len() as u32).to_le_bytes());
+        for &e in &self.delete {
+            out.extend_from_slice(&e.to_le_bytes());
+        }
+        self.insert.encode_binary(out);
+    }
+
+    /// Decode the binary encoding and validate.
+    pub fn decode_binary(bytes: &[u8]) -> Result<Self, String> {
+        if bytes.len() < 12 {
+            return Err("binary delta: truncated header".into());
+        }
+        let n_global = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+        let n_global = usize::try_from(n_global)
+            .map_err(|_| format!("binary delta: n_global {n_global} overflows"))?;
+        let n_delete = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let end = 12usize
+            .checked_add(n_delete.checked_mul(4).ok_or("binary delta: delete count overflows")?)
+            .ok_or("binary delta: delete count overflows")?;
+        if bytes.len() < end {
+            return Err(format!(
+                "binary delta: {n_delete} deletes declared, frame holds {} bytes",
+                bytes.len()
+            ));
+        }
+        let delete: Vec<ElemId> = bytes[12..end]
+            .chunks_exact(4)
+            .map(|c| ElemId::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let insert = PartitionPayload::decode_binary(&bytes[end..])?;
+        let delta = Self { n_global, insert, delete };
+        delta.validate()?;
+        Ok(delta)
+    }
+}
+
 fn field_u64(v: &Value, key: &str) -> Result<u64, String> {
     v.get(key)
         .and_then(Value::as_u64)
@@ -993,6 +1130,13 @@ impl PartitionOracle {
         self.to_local.contains_key(&e)
     }
 
+    /// Global ids currently held, in shard order (initial shard plus every
+    /// ingest, compacted after deltas) — the survivor list live-dataset
+    /// coordinators replay partitions against.
+    pub fn held(&self) -> &[ElemId] {
+        &self.to_global
+    }
+
     /// Whether this facade's objective is exact only under machine-local
     /// evaluation views (see [`Partitionable::needs_local_view`]).
     pub fn needs_local_view(&self) -> bool {
@@ -1103,6 +1247,51 @@ impl PartitionOracle {
             self.to_local.insert(g, self.to_global.len() as u32);
             self.to_global.push(g);
         }
+        Ok(())
+    }
+
+    /// Apply a live-dataset diff in place: deleted elements leave the
+    /// shard, inserted elements append after the survivors, and the
+    /// global ground set grows to `delta.n_global`.
+    ///
+    /// The shard **compacts** — deleted rows are physically removed and
+    /// local ids renumbered — so an incrementally-updated oracle is
+    /// structurally identical (same rows, same local order, same
+    /// `elem_bytes` accounting) to one cold-built from the post-delta
+    /// dataset with the same element order.  That structural identity is
+    /// what makes incremental re-solves bit-identical to from-scratch
+    /// runs.
+    ///
+    /// Deletes of elements this shard does not hold are skipped (another
+    /// machine owns them); inserts must be fresh here — on a worker the
+    /// coordinator's per-machine sub-delta guarantees it, and on the
+    /// coordinator's full view a clash means the delta re-inserts a live
+    /// id, which is refused.
+    pub fn apply_delta(&mut self, delta: &PartitionDelta) -> Result<(), String> {
+        delta.validate()?;
+        if delta.n_global < self.n_global {
+            return Err(format!(
+                "delta shrinks the ground set ({} -> {}); deleted ids leave \
+                 shards but the id space never contracts",
+                self.n_global, delta.n_global
+            ));
+        }
+        if let Some(&e) = delta.insert.elems.iter().find(|&&e| self.holds(e)) {
+            return Err(format!("delta inserts element {e}, which is already held"));
+        }
+        let dels: std::collections::HashSet<ElemId> = delta.delete.iter().copied().collect();
+        let survivors: Vec<ElemId> =
+            self.to_global.iter().copied().filter(|g| !dels.contains(g)).collect();
+        // Rebuild compacted: re-slice the survivors from the held shard,
+        // widen the ground set, then absorb the inserts through the same
+        // ingest path child solutions use.
+        let mut base = self.extract(&survivors)?;
+        base.n_global = delta.n_global;
+        let mut rebuilt = Self::from_payload(&base)?;
+        // Ingest even when empty: the family / universe / dim / client
+        // checks still run, so a mismatched delta fails the protocol here.
+        rebuilt.ingest(&delta.insert)?;
+        *self = rebuilt;
         Ok(())
     }
 
@@ -1671,6 +1860,151 @@ mod tests {
             assert_eq!(sa.gain(e).to_bits(), sr.gain(e).to_bits());
         }
         assert!(facade.extract(&[99]).is_err(), "unknown element refuses to extract");
+    }
+
+    #[test]
+    fn apply_delta_inserts_deletes_and_compacts_like_a_cold_rebuild() {
+        let base = PartitionPayload {
+            n_global: 6,
+            elems: vec![0, 2, 4],
+            data: PartitionData::Modular { weights: vec![1.0, 2.0, 3.0] },
+        };
+        let mut live = PartitionOracle::from_payload(&base).unwrap();
+        // Ground set grows to 8; delete 2 (held) and 5 (owned elsewhere,
+        // skipped here); insert 6 and 7.
+        let delta = PartitionDelta {
+            n_global: 8,
+            insert: PartitionPayload {
+                n_global: 8,
+                elems: vec![6, 7],
+                data: PartitionData::Modular { weights: vec![4.0, 5.0] },
+            },
+            delete: vec![2, 5],
+        };
+        live.apply_delta(&delta).unwrap();
+        assert_eq!(live.n(), 8, "facade adopts the post-delta ground set");
+        assert_eq!(live.len_local(), 4);
+        assert!(!live.holds(2), "deleted element left the shard");
+        // A cold rebuild of the post-delta shard (survivors in original
+        // order, inserts appended) must be structurally identical.
+        let cold = PartitionOracle::from_payload(&PartitionPayload {
+            n_global: 8,
+            elems: vec![0, 4, 6, 7],
+            data: PartitionData::Modular { weights: vec![1.0, 3.0, 4.0, 5.0] },
+        })
+        .unwrap();
+        let post = [0u32, 4, 6, 7];
+        let (sa, sb) = (live.new_state(None), cold.new_state(None));
+        for &e in &post {
+            assert_eq!(sa.gain(e).to_bits(), sb.gain(e).to_bits(), "gain({e})");
+            assert_eq!(live.elem_bytes(e), cold.elem_bytes(e), "elem_bytes({e})");
+        }
+        assert_eq!(live.extract(&post).unwrap(), cold.extract(&post).unwrap());
+    }
+
+    #[test]
+    fn apply_delta_on_a_cover_shard_matches_re_extraction() {
+        // The incremental-vs-cold identity on real CSR data: a live shard
+        // after (delete, insert) extracts exactly what the original
+        // oracle extracts for the post-delta element list.
+        let o = cover_oracle(100);
+        let p = o.partitionable().unwrap();
+        let base: Vec<ElemId> = (0..40).collect();
+        let mut live = PartitionOracle::from_payload(&p.extract_partition(&base)).unwrap();
+        let delta = PartitionDelta {
+            n_global: 100,
+            insert: p.extract_partition(&[50, 60]),
+            delete: vec![5, 7, 93],
+        };
+        live.apply_delta(&delta).unwrap();
+        let post: Vec<ElemId> = base
+            .iter()
+            .copied()
+            .filter(|e| ![5, 7].contains(e))
+            .chain([50, 60])
+            .collect();
+        assert_eq!(live.len_local(), post.len());
+        assert_eq!(live.extract(&post).unwrap(), p.extract_partition(&post));
+        // Gains over the live shard still match the full oracle.
+        let (sa, sb) = (o.new_state(None), live.new_state(None));
+        for &e in &post {
+            assert_eq!(sa.gain(e).to_bits(), sb.gain(e).to_bits(), "gain({e})");
+        }
+    }
+
+    #[test]
+    fn delta_json_and_binary_codecs_roundtrip() {
+        let o = cover_oracle(100);
+        let p = o.partitionable().unwrap();
+        let delta = PartitionDelta {
+            n_global: 100,
+            insert: p.extract_partition(&[10, 20, 30]),
+            delete: vec![3, 96],
+        };
+        delta.validate().unwrap();
+        assert_eq!(PartitionDelta::from_value(&delta.to_value()).unwrap(), delta);
+        let mut bin = Vec::new();
+        delta.encode_binary(&mut bin);
+        assert_eq!(bin.len(), delta.binary_len(), "binary_len must match the encoding");
+        assert_eq!(PartitionDelta::decode_binary(&bin).unwrap(), delta);
+        // Deletes-only deltas ship an empty insert payload of the family.
+        let bare = PartitionDelta {
+            n_global: 100,
+            insert: p.extract_partition(&[]),
+            delete: vec![1],
+        };
+        assert_eq!(PartitionDelta::from_value(&bare.to_value()).unwrap(), bare);
+        let mut bin = Vec::new();
+        bare.encode_binary(&mut bin);
+        assert_eq!(bin.len(), bare.binary_len());
+        assert_eq!(PartitionDelta::decode_binary(&bin).unwrap(), bare);
+    }
+
+    #[test]
+    fn malformed_deltas_are_rejected() {
+        let ins = |n: usize, elems: Vec<ElemId>, w: Vec<f64>| PartitionPayload {
+            n_global: n,
+            elems,
+            data: PartitionData::Modular { weights: w },
+        };
+        // Insert payload disagreeing with the declared post-delta n.
+        let d = PartitionDelta { n_global: 8, insert: ins(6, vec![], vec![]), delete: vec![] };
+        assert!(d.validate().is_err());
+        // Delete outside the ground set / duplicated / also inserted.
+        let d = PartitionDelta { n_global: 8, insert: ins(8, vec![], vec![]), delete: vec![8] };
+        assert!(d.validate().is_err());
+        let d =
+            PartitionDelta { n_global: 8, insert: ins(8, vec![], vec![]), delete: vec![1, 1] };
+        assert!(d.validate().is_err());
+        let d = PartitionDelta {
+            n_global: 8,
+            insert: ins(8, vec![6], vec![1.0]),
+            delete: vec![6],
+        };
+        assert!(d.validate().is_err());
+        // Application-time refusals: shrinking, re-inserting a held id,
+        // family mismatch.
+        let mut live = PartitionOracle::from_payload(&ins(6, vec![0, 2], vec![1.0, 2.0]))
+            .unwrap();
+        let shrink =
+            PartitionDelta { n_global: 4, insert: ins(4, vec![], vec![]), delete: vec![] };
+        assert!(live.apply_delta(&shrink).is_err(), "ground set never contracts");
+        let clash = PartitionDelta {
+            n_global: 6,
+            insert: ins(6, vec![2], vec![9.0]),
+            delete: vec![],
+        };
+        assert!(live.apply_delta(&clash).is_err(), "re-inserting a live id is refused");
+        let wrong_family = PartitionDelta {
+            n_global: 6,
+            insert: PartitionPayload {
+                n_global: 6,
+                elems: vec![],
+                data: PartitionData::Vectors { dim: 2, flat: vec![] },
+            },
+            delete: vec![],
+        };
+        assert!(live.apply_delta(&wrong_family).is_err(), "family mismatch is refused");
     }
 
     #[test]

@@ -1,0 +1,163 @@
+//! The delta-file grammar and per-machine delta splitting.
+//!
+//! A delta file is JSON: either a bare array of
+//! [`PartitionDelta::to_value`] objects or `{"deltas": [...]}`.  Each entry
+//! advances the dataset by one epoch, in order.  Example (modular family):
+//!
+//! ```json
+//! [
+//!   {
+//!     "n_global": 8,
+//!     "insert": { "n": 8, "elems": [6, 7],
+//!                 "data": { "family": "modular", "weights": [1.5, 0.5] } },
+//!     "delete": [2]
+//!   }
+//! ]
+//! ```
+//!
+//! The coordinator never ships a global delta verbatim: it splits it into
+//! per-machine *sub-deltas* — every machine receives the full delete list
+//! (a worker ignores deletes it does not hold; some other machine owns
+//! them) and exactly the inserts the deterministic [`owner_of`] tape
+//! assigns to it.  The split is a function of `(seed, element id)` only,
+//! so replaying the same delta file over the same seed always lands every
+//! insert on the same machine — the coupling that makes an incremental
+//! re-solve bit-identical to a cold run on the post-delta dataset.
+
+use crate::objective::{PartitionDelta, PartitionOracle};
+use crate::util::rng::Rng;
+use crate::ElemId;
+use serde_json::Value;
+
+/// Parse a delta file (bare array or `{"deltas": [...]}`).
+pub fn parse_deltas(text: &str) -> Result<Vec<PartitionDelta>, String> {
+    let v: Value =
+        serde_json::from_str(text).map_err(|e| format!("delta file: invalid JSON: {e}"))?;
+    let arr = match &v {
+        Value::Array(a) => a.as_slice(),
+        Value::Object(o) => match o.get("deltas") {
+            Some(Value::Array(a)) => a.as_slice(),
+            _ => {
+                return Err(
+                    "delta file: object form needs a \"deltas\" array field".to_string()
+                )
+            }
+        },
+        _ => return Err("delta file: expected an array or {\"deltas\": [...]}".to_string()),
+    };
+    arr.iter()
+        .enumerate()
+        .map(|(i, d)| PartitionDelta::from_value(d).map_err(|e| format!("deltas[{i}]: {e}")))
+        .collect()
+}
+
+/// Encode a delta sequence in the bare-array file form.
+pub fn deltas_to_value(deltas: &[PartitionDelta]) -> Value {
+    Value::Array(deltas.iter().map(|d| d.to_value()).collect())
+}
+
+/// The machine that owns inserted element `e` — an extension of the
+/// paper's random tape `r_W` to elements born after the initial draw.
+/// Depends only on `(seed, e)`, never on arrival order or machine load.
+pub fn owner_of(e: ElemId, machines: u32, seed: u64) -> u32 {
+    assert!(machines > 0, "need at least one machine");
+    Rng::split(seed ^ 0xD17A_0000, e as u64).below(machines as u64) as u32
+}
+
+/// Split a global delta into one sub-delta per machine (see module docs).
+pub fn split_delta(
+    delta: &PartitionDelta,
+    machines: u32,
+    seed: u64,
+) -> Result<Vec<PartitionDelta>, String> {
+    delta.validate()?;
+    let tmp = PartitionOracle::from_payload(&delta.insert)?;
+    let mut per: Vec<Vec<ElemId>> = vec![Vec::new(); machines as usize];
+    for &e in &delta.insert.elems {
+        per[owner_of(e, machines, seed) as usize].push(e);
+    }
+    per.into_iter()
+        .map(|ids| {
+            Ok(PartitionDelta {
+                n_global: delta.n_global,
+                insert: tmp.extract(&ids)?,
+                delete: delta.delete.clone(),
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::{Oracle, Partitionable};
+
+    fn sample_delta() -> PartitionDelta {
+        // A 12-element modular ground set; the delta inserts the two newest
+        // ids and deletes two old ones.
+        let weights = crate::objective::Modular::new((0..12).map(|i| i as f64).collect());
+        let insert = weights.partitionable().unwrap().extract_partition(&[10, 11]);
+        PartitionDelta { n_global: 12, insert, delete: vec![3, 4] }
+    }
+
+    #[test]
+    fn file_grammar_roundtrips_both_forms() {
+        let deltas = vec![sample_delta()];
+        let bare = serde_json::to_string(&deltas_to_value(&deltas)).unwrap();
+        let wrapped = serde_json::to_string(&serde_json::json!({ "deltas": deltas_to_value(&deltas) }))
+            .unwrap();
+        for text in [bare, wrapped] {
+            let parsed = parse_deltas(&text).unwrap();
+            assert_eq!(parsed, deltas);
+        }
+    }
+
+    #[test]
+    fn malformed_files_are_rejected_with_context() {
+        assert!(parse_deltas("not json").unwrap_err().contains("invalid JSON"));
+        assert!(parse_deltas("{\"nope\": []}").unwrap_err().contains("deltas"));
+        assert!(parse_deltas("42").unwrap_err().contains("expected an array"));
+        let err = parse_deltas("[{\"n_global\": 1}]").unwrap_err();
+        assert!(err.contains("deltas[0]"), "{err}");
+    }
+
+    #[test]
+    fn ownership_is_a_pure_function_of_seed_and_id() {
+        for e in 0..200u32 {
+            let a = owner_of(e, 4, 7);
+            assert_eq!(a, owner_of(e, 4, 7));
+            assert!(a < 4);
+        }
+        // Different seeds shuffle assignments (coupling is per-seed).
+        let moved = (0..200u32).filter(|&e| owner_of(e, 4, 7) != owner_of(e, 4, 8)).count();
+        assert!(moved > 50, "only {moved} of 200 moved across seeds");
+    }
+
+    #[test]
+    fn split_partitions_inserts_and_replicates_deletes() {
+        let d = sample_delta();
+        let subs = split_delta(&d, 3, 42).unwrap();
+        assert_eq!(subs.len(), 3);
+        let mut seen: Vec<ElemId> = Vec::new();
+        for (m, sub) in subs.iter().enumerate() {
+            assert_eq!(sub.n_global, d.n_global);
+            assert_eq!(sub.delete, d.delete);
+            for &e in &sub.insert.elems {
+                assert_eq!(owner_of(e, 3, 42), m as u32);
+            }
+            seen.extend_from_slice(&sub.insert.elems);
+        }
+        seen.sort_unstable();
+        let mut want = d.insert.elems.clone();
+        want.sort_unstable();
+        assert_eq!(seen, want, "sub-deltas must partition the insert set");
+        // Sub-delta data rows match the global delta's rows.
+        let tmp = PartitionOracle::from_payload(&d.insert).unwrap();
+        for sub in &subs {
+            if !sub.insert.is_empty() {
+                let re = tmp.extract(&sub.insert.elems).unwrap();
+                assert_eq!(re, sub.insert);
+            }
+        }
+    }
+}

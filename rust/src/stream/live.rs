@@ -1,0 +1,231 @@
+//! The coordinator's view of a live dataset: authoritative post-delta
+//! oracle, monotone epoch counter, and the partition replay that couples
+//! incremental fleet updates with cold from-scratch runs.
+//!
+//! A [`LiveProblem`] starts at epoch 0 as a full-ground-set
+//! [`PartitionOracle`] built from any [`Partitionable`] objective.  Every
+//! [`LiveProblem::apply`] advances the epoch by one: the oracle compacts
+//! deletes and appends inserts exactly the way a worker's
+//! [`PartitionOracle::apply_delta`] does, so the coordinator's dataset and
+//! every machine's shard stay structurally identical — the property that
+//! makes an incremental re-solve bit-identical to shipping the post-delta
+//! dataset cold.
+
+use std::collections::HashSet;
+
+use crate::objective::{Oracle, PartitionDelta, PartitionOracle, PartitionPayload};
+use crate::ElemId;
+
+use super::delta::{owner_of, split_delta};
+
+/// A dataset that evolves by [`PartitionDelta`]s, plus its epoch.
+pub struct LiveProblem {
+    oracle: PartitionOracle,
+    n0: usize,
+    epoch: u64,
+    history: Vec<PartitionDelta>,
+}
+
+impl LiveProblem {
+    /// Snapshot a base objective as the epoch-0 live dataset.
+    pub fn new(base: &dyn Oracle) -> Result<Self, String> {
+        let p = base.partitionable().ok_or_else(|| {
+            format!(
+                "{}: objective does not support partition shipping (required for live deltas)",
+                base.name()
+            )
+        })?;
+        let all: Vec<ElemId> = (0..base.n() as u32).collect();
+        let oracle = PartitionOracle::from_payload(&p.extract_partition(&all))?;
+        Ok(Self::from_oracle(oracle))
+    }
+
+    /// Adopt an already-built facade (possibly holding only part of its
+    /// global id space) as the epoch-0 dataset.
+    pub fn from_oracle(oracle: PartitionOracle) -> Self {
+        let n0 = oracle.n();
+        Self { oracle, n0, epoch: 0, history: Vec::new() }
+    }
+
+    /// Current epoch (number of deltas applied).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Ground-set size at epoch 0 (what the leaf random tape is drawn on).
+    pub fn n0(&self) -> usize {
+        self.n0
+    }
+
+    /// The authoritative post-delta oracle.  It is itself [`Partitionable`],
+    /// so a cold run on the current dataset solves over exactly this.
+    pub fn oracle(&self) -> &PartitionOracle {
+        &self.oracle
+    }
+
+    /// Deltas applied so far, oldest first.
+    pub fn history(&self) -> &[PartitionDelta] {
+        &self.history
+    }
+
+    /// Apply one delta: compacts deletes, ingests inserts, bumps the epoch.
+    pub fn apply(&mut self, delta: &PartitionDelta) -> Result<(), String> {
+        self.oracle.apply_delta(delta)?;
+        self.history.push(delta.clone());
+        self.epoch += 1;
+        Ok(())
+    }
+
+    /// Replay the delta history over the epoch-0 leaf partition `base`
+    /// (drawn on `n0` elements): deletes drop out of whichever part held
+    /// them, inserts append to the machine the [`owner_of`] tape assigns.
+    /// Pure in `(base, seed, history)` — a warm fleet advanced in place and
+    /// a cold fleet shipped from scratch agree on every machine's part.
+    pub fn parts_for(&self, base: Vec<Vec<ElemId>>, seed: u64) -> Vec<Vec<ElemId>> {
+        let machines = base.len() as u32;
+        let mut parts = base;
+        for d in &self.history {
+            if !d.delete.is_empty() {
+                let dels: HashSet<ElemId> = d.delete.iter().copied().collect();
+                for p in parts.iter_mut() {
+                    p.retain(|e| !dels.contains(e));
+                }
+            }
+            for &e in &d.insert.elems {
+                parts[owner_of(e, machines, seed) as usize].push(e);
+            }
+        }
+        parts
+    }
+
+    /// Per-machine sub-deltas for one global delta (see
+    /// [`super::delta::split_delta`]).
+    pub fn sub_deltas(
+        &self,
+        delta: &PartitionDelta,
+        machines: u32,
+        seed: u64,
+    ) -> Result<Vec<PartitionDelta>, String> {
+        split_delta(delta, machines, seed)
+    }
+
+    /// Extract one machine's shard payload at the current epoch.
+    pub fn shard(&self, part: &[ElemId]) -> Result<PartitionPayload, String> {
+        self.oracle.extract(part)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::KCover;
+    use crate::util::rng::RandomTape;
+    use std::sync::Arc;
+
+    fn cover(n: usize, seed: u64) -> KCover {
+        let data = crate::data::gen::transactions(
+            crate::data::gen::TransactionParams {
+                num_sets: n,
+                num_items: n / 2,
+                mean_size: 5.0,
+                zipf_s: 0.8,
+            },
+            seed,
+        );
+        KCover::new(Arc::new(data))
+    }
+
+    /// A delta over `grown`: insert `fresh` (already present in `grown`'s
+    /// ground set, beyond the live oracle's horizon), delete `dels`.
+    fn delta_from(grown: &KCover, n_global: usize, fresh: &[ElemId], dels: &[ElemId]) -> PartitionDelta {
+        let mut insert = grown.partitionable().unwrap().extract_partition(fresh);
+        insert.n_global = n_global;
+        PartitionDelta { n_global, insert, delete: dels.to_vec() }
+    }
+
+    #[test]
+    fn apply_advances_epoch_and_tracks_survivors() {
+        // The "grown" dataset has 70 sets; the live problem starts from the
+        // first 60 and the delta brings in two of the last ten.
+        let grown = cover(70, 5);
+        let base_ids: Vec<ElemId> = (0..60).collect();
+        let base = PartitionOracle::from_payload(
+            &grown.partitionable().unwrap().extract_partition(&base_ids),
+        )
+        .unwrap();
+        let mut live = LiveProblem::from_oracle(base);
+        assert_eq!(live.epoch(), 0);
+        assert_eq!(live.n0(), 70);
+
+        let d = delta_from(&grown, 70, &[60, 61], &[2, 9]);
+        live.apply(&d).unwrap();
+        assert_eq!(live.epoch(), 1);
+        assert_eq!(live.history().len(), 1);
+        assert!(live.oracle().holds(60) && live.oracle().holds(61));
+        assert!(!live.oracle().holds(2) && !live.oracle().holds(9));
+    }
+
+    #[test]
+    fn replayed_parts_match_the_live_oracle_shard_for_shard() {
+        let grown = cover(80, 7);
+        let base_ids: Vec<ElemId> = (0..64).collect();
+        let base = PartitionOracle::from_payload(
+            &grown.partitionable().unwrap().extract_partition(&base_ids),
+        )
+        .unwrap();
+        let mut live = LiveProblem::from_oracle(base);
+        let seed = 42u64;
+        let machines = 3u32;
+        let tape = RandomTape::draw(64, machines, seed);
+        let base_parts = tape.partition_of(&base_ids);
+
+        let d1 = delta_from(&grown, 80, &[64, 65, 66], &[1, 30]);
+        let d2 = delta_from(&grown, 80, &[70, 71], &[64, 5]);
+        for d in [&d1, &d2] {
+            // Worker-side path: split and apply sub-deltas to shard oracles.
+            let parts_before = live.parts_for(base_parts.clone(), seed);
+            let mut shards: Vec<PartitionOracle> = parts_before
+                .iter()
+                .map(|p| PartitionOracle::from_payload(&live.shard(p).unwrap()).unwrap())
+                .collect();
+            let subs = live.sub_deltas(d, machines, seed).unwrap();
+            for (s, sub) in shards.iter_mut().zip(&subs) {
+                s.apply_delta(sub).unwrap();
+            }
+            // Coordinator-side path: advance the live oracle and re-extract.
+            live.apply(d).unwrap();
+            let parts_after = live.parts_for(base_parts.clone(), seed);
+            for (m, (s, part)) in shards.iter().zip(&parts_after).enumerate() {
+                assert_eq!(s.held(), &part[..], "machine {m} part order diverged");
+                let inc = s.extract(part).unwrap();
+                let cold = live.shard(part).unwrap();
+                assert_eq!(inc, cold, "machine {m} shard data diverged");
+            }
+        }
+        assert_eq!(live.epoch(), 2);
+    }
+
+    #[test]
+    fn non_partitionable_oracles_are_rejected() {
+        struct Opaque;
+        impl Oracle for Opaque {
+            fn n(&self) -> usize {
+                3
+            }
+            fn name(&self) -> &'static str {
+                "opaque"
+            }
+            fn new_state<'a>(
+                &'a self,
+                _view: Option<&[ElemId]>,
+            ) -> Box<dyn crate::objective::GainState + 'a> {
+                unimplemented!("never evaluated in this test")
+            }
+            fn elem_bytes(&self, _e: ElemId) -> usize {
+                8
+            }
+        }
+        let err = LiveProblem::new(&Opaque).unwrap_err();
+        assert!(err.contains("partition shipping"), "{err}");
+    }
+}

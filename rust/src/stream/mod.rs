@@ -1,0 +1,30 @@
+//! Streaming subsystem: sieve coresets for the dist layer and live-dataset
+//! deltas for resident fleets.
+//!
+//! Two halves, both aimed at ROADMAP's "distributed streaming / dynamic
+//! data" workload:
+//!
+//! * [`coreset`] — in `--coreset` mode every leaf runs the Sieve-Streaming
+//!   pass ([`crate::greedy::sieve`]) over its shard and the multi-level
+//!   accumulation tree operates on the resulting O(k·log(k)/ε) coresets
+//!   instead of whole O(n/m) shards (Lucic et al., "Horizontally Scalable
+//!   Submodular Maximization", PAPERS.md).  Accumulation bytes and peak
+//!   worker memory shrink accordingly; the `(1/2 − ε)` certificate of the
+//!   winning sieve survives because the coreset contains its solution.
+//!
+//! * [`delta`] / [`live`] — a live dataset evolves by
+//!   [`crate::objective::PartitionDelta`]s (global-id inserts with data
+//!   rows, plus deletes).  [`live::LiveProblem`] tracks the authoritative
+//!   post-delta oracle and a monotone **epoch** counter; resident fleets
+//!   are advanced in place over the wire-v6 `delta` frame instead of
+//!   re-shipping shards, and the session/job layers key warm state by
+//!   (dataset fingerprint, epoch) so a stale fleet can never serve
+//!   pre-delta data.
+
+pub mod coreset;
+pub mod delta;
+pub mod live;
+
+pub use coreset::{coreset_size_bound, shard_coreset, CORESET_EPSILON};
+pub use delta::{deltas_to_value, owner_of, parse_deltas, split_delta};
+pub use live::LiveProblem;

@@ -13,7 +13,8 @@
 //! line — the full multi-host path, no cluster needed.
 
 use greedyml::algo::{
-    run_dist, run_dist_pooled, DistConfig, DistOutcome, PartitionScheme, SessionPool,
+    run_dist, run_dist_pooled, run_dist_pooled_live, DistConfig, DistOutcome, PartitionScheme,
+    SessionPool,
 };
 use greedyml::coordinator::{build_problem, experiment::build_constraint, problem_spec};
 use greedyml::dist::wire::{read_frame, write_frame, FromWorker, ToWorker, PROTOCOL_VERSION};
@@ -799,4 +800,76 @@ fn bad_problem_spec_is_a_backend_error_not_a_hang() {
         }
         other => panic!("expected backend error, got {other:?}"),
     }
+}
+
+// ---- live-epoch sessions (stale-fleet handling) --------------------------
+
+#[test]
+fn stale_epoch_fleets_advance_one_step_and_are_evicted_beyond_that() {
+    // The pool keys resident fleets by (dataset fingerprint, epoch), so a
+    // pre-delta fleet never key-matches a post-delta job.  Exactly one
+    // epoch behind it is advanced in place (no re-establish); any staler
+    // it must leave the pool and the session is rebuilt cold — and either
+    // way the answer equals a cold solve of the post-delta corpus.
+    use greedyml::objective::PartitionDelta;
+    use greedyml::stream::LiveProblem;
+
+    let parsed = Config::parse(COVERAGE_SPEC).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+    let mut live = LiveProblem::new(problem.oracle.as_ref()).unwrap();
+    let p = problem.oracle.partitionable().unwrap();
+    let del_only = |dels: &[u32]| -> PartitionDelta {
+        let mut insert = p.extract_partition(&[]);
+        insert.n_global = 500;
+        PartitionDelta { n_global: 500, insert, delete: dels.to_vec() }
+    };
+    let pool = SessionPool::new();
+    let cfg_at = |epoch: u64| DistConfig {
+        backend: BackendSpec::Process,
+        ship: ShipSpec::Partition,
+        problem: Some(problem_spec(&parsed)),
+        worker_bin: Some(worker_bin()),
+        epoch,
+        ..DistConfig::greedyml(AccumulationTree::new(4, 2), 42)
+    };
+    run_dist_pooled_live(live.oracle(), constraint.as_ref(), &cfg_at(0), &pool, Some(&live))
+        .expect("epoch-0 run");
+    assert_eq!(pool.sessions_established(), 1);
+
+    // One epoch behind: advanced in place.
+    live.apply(&del_only(&[7, 99])).unwrap();
+    let one =
+        run_dist_pooled_live(live.oracle(), constraint.as_ref(), &cfg_at(1), &pool, Some(&live))
+            .expect("one-behind re-solve");
+    assert!(one.warm, "a fleet exactly one epoch behind is advanced, not evicted");
+    assert_eq!(pool.sessions_established(), 1, "advancing never re-establishes");
+
+    // Two epochs behind: evicted, re-established cold.
+    live.apply(&del_only(&[123])).unwrap();
+    live.apply(&del_only(&[256, 400])).unwrap();
+    let jump =
+        run_dist_pooled_live(live.oracle(), constraint.as_ref(), &cfg_at(3), &pool, Some(&live))
+            .expect("two-behind re-solve");
+    assert!(!jump.warm, "a multi-epoch-stale fleet is released, never fast-forwarded");
+    assert_eq!(pool.sessions_established(), 2, "the stale fleet left the pool");
+
+    let cold_pool = SessionPool::new();
+    let cold = run_dist_pooled_live(
+        live.oracle(),
+        constraint.as_ref(),
+        &cfg_at(3),
+        &cold_pool,
+        Some(&live),
+    )
+    .expect("cold control");
+    assert_eq!(jump.outcome.solution, cold.outcome.solution);
+    assert_eq!(jump.outcome.value.to_bits(), cold.outcome.value.to_bits());
+
+    // A job still addressed at a pre-delta epoch is refused outright — no
+    // cached fleet (or cached answer) may serve it silently.
+    let err =
+        run_dist_pooled_live(live.oracle(), constraint.as_ref(), &cfg_at(0), &pool, Some(&live))
+            .expect_err("stale-epoch job must be rejected");
+    assert!(err.to_string().contains("epoch"), "{err}");
 }

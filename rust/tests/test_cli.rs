@@ -260,6 +260,9 @@ fn submit_command_gateway_json_matches_local_json() {
             .map(|r| {
                 (
                     r.get("id").unwrap().as_u64().unwrap(),
+                    // Both paths carry the dataset epoch (0 for this
+                    // static batch) — schema-identical local vs gateway.
+                    r.get("epoch").unwrap().as_u64().unwrap(),
                     r.get("k").unwrap().as_u64().unwrap(),
                     r.get("seed").unwrap().as_u64().unwrap(),
                     r.get("value").unwrap().as_f64().unwrap().to_bits(),

@@ -85,6 +85,8 @@ fn job(id: u64, spec: &str, backend: &str, on_fault: &str) -> JobSpec {
         local_view: false,
         on_fault: on_fault.to_string(),
         wire: "auto".to_string(),
+        epoch: 0,
+        coreset: "auto".to_string(),
     }
 }
 

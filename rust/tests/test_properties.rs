@@ -144,3 +144,70 @@ fn adding_machines_partitions_all_elements() {
         },
     );
 }
+
+#[test]
+fn sieve_value_within_half_minus_eps_of_exact_greedy() {
+    // Sieve-Streaming's certificate: value >= (1/2 - eps) * OPT, and the
+    // exact greedy value is itself <= OPT, so the sieve must clear
+    // (1/2 - eps) of whatever greedy achieves on the same instance.
+    forall(
+        "sieve (1/2 - eps) value bound",
+        25,
+        pair(Gen::u64(0..800), Gen::u64(3..20)),
+        |&(seed, k)| {
+            let oracle = random_instance(seed, 250, 120);
+            let k = k as usize;
+            let constraint = Cardinality::new(k);
+            let stream: Vec<u32> = (0..250).collect();
+            let eps = greedyml::stream::CORESET_EPSILON;
+            let sieve = greedyml::greedy::sieve_streaming(&oracle, &constraint, &stream, None, eps);
+            let exact = greedyml::greedy::greedy_lazy(&oracle, &constraint, &stream, None);
+            ensure(constraint.is_feasible(&sieve.solution), "sieve infeasible")?;
+            ensure(
+                sieve.value >= (0.5 - eps) * exact.value - 1e-9,
+                format!("sieve {} below (1/2-eps) of greedy {}", sieve.value, exact.value),
+            )
+        },
+    );
+}
+
+#[test]
+fn sieve_coreset_size_bounded_and_contains_its_solution() {
+    // The coreset a node ships is at most O(k*log(k)/eps) elements — the
+    // memory bound coreset mode's cost model rests on — and always carries
+    // the winning sieve's solution so the certificate survives re-greedy.
+    forall(
+        "coreset size within O(k log k / eps)",
+        25,
+        pair(Gen::u64(0..800), Gen::u64(2..25)),
+        |&(seed, k)| {
+            let oracle = random_instance(seed, 300, 140);
+            let k = k as usize;
+            let stream: Vec<u32> = (0..300).collect();
+            let eps = greedyml::stream::CORESET_EPSILON;
+            let cs = greedyml::greedy::sieve_coreset(
+                &oracle,
+                &Cardinality::new(k),
+                &stream,
+                None,
+                eps,
+            );
+            let bound = greedyml::stream::coreset_size_bound(k, eps);
+            ensure(
+                cs.elems.len() <= bound,
+                format!("coreset {} exceeds bound {bound} at k={k}", cs.elems.len()),
+            )?;
+            // Deduped, and a subset of the stream.
+            let set: std::collections::HashSet<_> = cs.elems.iter().collect();
+            ensure(set.len() == cs.elems.len(), "coreset has duplicates")?;
+            ensure(
+                cs.elems.iter().all(|e| (*e as usize) < 300),
+                "coreset outside ground set",
+            )?;
+            ensure(
+                cs.best.solution.iter().all(|e| set.contains(e)),
+                "best sieve solution not contained in its coreset",
+            )
+        },
+    );
+}

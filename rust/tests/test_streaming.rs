@@ -1,0 +1,370 @@
+//! The streaming subsystem's acceptance matrix: live-dataset deltas and
+//! sieve-coreset mode over real remote fleets.
+//!
+//! The delta half pins the determinism contract — a warm fleet advanced
+//! **in place** by a `delta` frame answers the next solve bit-identically
+//! to a cold fleet shipped the post-delta dataset from scratch — across
+//! {process, tcp} × {json, binary}.  The coreset half pins that a
+//! `--coreset on` run is bit-identical across backends and wire modes and
+//! keeps the sieve's (1/2 − ε) band against the full-shard answer.
+
+use greedyml::algo::{run_dist, run_dist_pooled_live, DistConfig, SessionPool};
+use greedyml::constraint::Cardinality;
+use greedyml::coordinator::{build_problem, experiment::build_constraint, problem_spec};
+use greedyml::data::gen::{transactions, TransactionParams};
+use greedyml::dist::{BackendSpec, CoresetSpec, ShipSpec, WireSpec};
+use greedyml::objective::{KCover, Oracle, PartitionDelta, PartitionOracle};
+use greedyml::stream::{LiveProblem, CORESET_EPSILON};
+use greedyml::tree::AccumulationTree;
+use greedyml::util::config::Config;
+use greedyml::util::rng::RandomTape;
+use greedyml::ElemId;
+use std::io::BufRead;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+
+/// The real `greedyml` binary — process-backend workers and `serve`
+/// daemons both come from it.
+fn worker_bin() -> String {
+    env!("CARGO_BIN_EXE_greedyml").to_string()
+}
+
+/// One spawned `greedyml serve` daemon on an ephemeral port, killed on
+/// drop (same helper as test_backend.rs).
+struct ServeDaemon {
+    child: Child,
+    addr: String,
+}
+
+impl ServeDaemon {
+    fn spawn() -> Self {
+        let mut child = Command::new(worker_bin())
+            .args(["serve", "--bind", "127.0.0.1:0"])
+            .stdout(Stdio::piped())
+            .spawn()
+            .expect("spawn greedyml serve");
+        let mut line = String::new();
+        std::io::BufReader::new(child.stdout.as_mut().expect("piped stdout"))
+            .read_line(&mut line)
+            .expect("read listen line");
+        let addr = line.trim().rsplit(' ').next().unwrap_or_default().to_string();
+        assert!(line.contains("listening on") && addr.contains(':'), "{line:?}");
+        ServeDaemon { child, addr }
+    }
+}
+
+impl Drop for ServeDaemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+// ---- live-dataset fixture ----------------------------------------------
+
+/// Epoch-0 ground-set size of the live fixture.
+const N0: usize = 520;
+/// Spec the pool fingerprints the corpus under.  Partition shipping never
+/// rebuilds from it — shards come from the live oracle — so it only has
+/// to be stable parseable text.
+const LIVE_SPEC: &str = "dataset.kind = retail\ndataset.n = 520\n";
+const SEED: u64 = 42;
+const K: usize = 10;
+
+/// A delta over the `grown` super-dataset: `fresh` ids (beyond the live
+/// oracle's horizon) arrive with their real data rows, `dels` leave.
+fn delta_from(
+    grown: &KCover,
+    n_global: usize,
+    fresh: &[ElemId],
+    dels: &[ElemId],
+) -> PartitionDelta {
+    let mut insert = grown.partitionable().unwrap().extract_partition(fresh);
+    insert.n_global = n_global;
+    PartitionDelta { n_global, insert, delete: dels.to_vec() }
+}
+
+/// The live fixture: a 520-element epoch-0 dataset carved out of a
+/// 560-element "future" dataset, plus two deltas that insert the later
+/// elements (with data) and delete earlier ones — the second delta also
+/// deletes an element the first inserted.
+fn live_fixture() -> (LiveProblem, Vec<PartitionDelta>) {
+    let grown = KCover::new(Arc::new(transactions(
+        TransactionParams { num_sets: 560, num_items: 240, mean_size: 6.0, zipf_s: 0.9 },
+        13,
+    )));
+    let p = grown.partitionable().unwrap();
+    let base_ids: Vec<ElemId> = (0..N0 as u32).collect();
+    let mut base = p.extract_partition(&base_ids);
+    base.n_global = N0;
+    let live = LiveProblem::from_oracle(PartitionOracle::from_payload(&base).unwrap());
+    let d1 = delta_from(&grown, 536, &(520u32..536).collect::<Vec<_>>(), &[3, 17, 101, 250]);
+    let d2 = delta_from(&grown, 549, &(536u32..549).collect::<Vec<_>>(), &[9, 333, 520]);
+    (live, vec![d1, d2])
+}
+
+/// A partition-shipped process-backend config at `epoch`.
+fn process_cfg(epoch: u64, wire: WireSpec) -> DistConfig {
+    DistConfig {
+        backend: BackendSpec::Process,
+        ship: ShipSpec::Partition,
+        problem: Some(LIVE_SPEC.to_string()),
+        worker_bin: Some(worker_bin()),
+        wire,
+        epoch,
+        ..DistConfig::greedyml(AccumulationTree::new(4, 2), SEED)
+    }
+}
+
+/// The same config over tcp daemons.
+fn tcp_live_cfg(epoch: u64, wire: WireSpec, fleet: &[ServeDaemon]) -> DistConfig {
+    DistConfig {
+        backend: BackendSpec::Tcp,
+        hosts: Some(fleet.iter().map(|d| d.addr.clone()).collect()),
+        worker_bin: None,
+        ..process_cfg(epoch, wire)
+    }
+}
+
+/// The shared delta-replay assertion: establish at epoch 0, then after
+/// every delta (a) advance the warm fleet in place and (b) cold-solve the
+/// post-delta dataset on a fresh pool — both answers must agree
+/// bit-for-bit, and the warm pool must never re-establish.
+fn assert_incremental_matches_cold(cfg_at: impl Fn(u64) -> DistConfig) {
+    let (mut live, deltas) = live_fixture();
+    let c = Cardinality::new(K);
+    let warm_pool = SessionPool::new();
+    let r0 = run_dist_pooled_live(live.oracle(), &c, &cfg_at(0), &warm_pool, Some(&live))
+        .expect("epoch-0 run");
+    assert!(!r0.warm, "first run establishes");
+    assert!(r0.outcome.value > 0.0);
+    assert_eq!(warm_pool.sessions_established(), 1);
+    for (i, d) in deltas.iter().enumerate() {
+        live.apply(d).unwrap();
+        let cfg = cfg_at(live.epoch());
+        let inc = run_dist_pooled_live(live.oracle(), &c, &cfg, &warm_pool, Some(&live))
+            .unwrap_or_else(|e| panic!("incremental re-solve after delta {i}: {e}"));
+        assert!(inc.warm, "delta {i}: a one-epoch-behind fleet advances in place");
+        assert_eq!(
+            warm_pool.sessions_established(),
+            1,
+            "delta {i}: advancing must not re-establish the session"
+        );
+        let cold_pool = SessionPool::new();
+        let cold = run_dist_pooled_live(live.oracle(), &c, &cfg, &cold_pool, Some(&live))
+            .unwrap_or_else(|e| panic!("cold re-solve after delta {i}: {e}"));
+        assert!(!cold.warm);
+        assert_eq!(
+            inc.outcome.solution, cold.outcome.solution,
+            "delta {i}: incremental and cold solutions must be bit-identical"
+        );
+        assert_eq!(
+            inc.outcome.value.to_bits(),
+            cold.outcome.value.to_bits(),
+            "delta {i}: {} vs {}",
+            inc.outcome.value,
+            cold.outcome.value
+        );
+        assert_eq!(inc.outcome.total_calls, cold.outcome.total_calls, "delta {i}");
+        assert!(inc.outcome.value > 0.0);
+    }
+}
+
+#[test]
+fn process_incremental_delta_resolve_is_bit_identical_to_cold_json_and_binary() {
+    for wire in [WireSpec::Json, WireSpec::Binary] {
+        assert_incremental_matches_cold(|epoch| process_cfg(epoch, wire));
+    }
+}
+
+#[test]
+fn tcp_incremental_delta_resolve_is_bit_identical_to_cold_json_and_binary() {
+    for wire in [WireSpec::Json, WireSpec::Binary] {
+        let fleet: Vec<ServeDaemon> = (0..2).map(|_| ServeDaemon::spawn()).collect();
+        assert_incremental_matches_cold(|epoch| tcp_live_cfg(epoch, wire, &fleet));
+    }
+}
+
+#[test]
+fn incremental_resolve_matches_a_thread_rerun_on_the_replayed_partition() {
+    // The thread backend has no fleet to advance — it just re-solves over
+    // the post-delta oracle on the replayed leaf partition.  By the
+    // determinism contract that is the same answer the advanced remote
+    // fleet gives.
+    let (mut live, deltas) = live_fixture();
+    let c = Cardinality::new(K);
+    let pool = SessionPool::new();
+    run_dist_pooled_live(live.oracle(), &c, &process_cfg(0, WireSpec::Json), &pool, Some(&live))
+        .expect("epoch-0 run");
+    live.apply(&deltas[0]).unwrap();
+    let inc =
+        run_dist_pooled_live(live.oracle(), &c, &process_cfg(1, WireSpec::Json), &pool, Some(&live))
+            .expect("incremental re-solve");
+    assert!(inc.warm);
+    let base = RandomTape::draw(live.n0(), 4, SEED).partition();
+    let thread_cfg = DistConfig {
+        backend: BackendSpec::Thread,
+        parts: Some(live.parts_for(base, SEED)),
+        epoch: 1,
+        ..DistConfig::greedyml(AccumulationTree::new(4, 2), SEED)
+    };
+    let thread = run_dist(live.oracle(), &c, &thread_cfg).expect("thread re-solve");
+    assert_eq!(inc.outcome.solution, thread.solution);
+    assert_eq!(inc.outcome.value.to_bits(), thread.value.to_bits());
+    // The pooled-live thread path pins the same replay on its own — a
+    // caller who never touches `parts` (the CLI's `--backend thread
+    // --deltas` cell) still gets the resident-shard split, not a fresh
+    // draw over an id space that contains the deleted elements.
+    let auto_cfg = DistConfig {
+        backend: BackendSpec::Thread,
+        epoch: 1,
+        ..DistConfig::greedyml(AccumulationTree::new(4, 2), SEED)
+    };
+    let auto =
+        run_dist_pooled_live(live.oracle(), &c, &auto_cfg, &SessionPool::new(), Some(&live))
+            .expect("pooled-live thread re-solve");
+    assert!(!auto.warm);
+    assert_eq!(auto.outcome.solution, thread.solution);
+    assert_eq!(auto.outcome.value.to_bits(), thread.value.to_bits());
+}
+
+#[test]
+fn deleted_and_inserted_elements_actually_move_the_answer() {
+    // Guard against a vacuous fixture: the deltas must change the dataset
+    // enough that at least one post-delta solution differs from the
+    // epoch-0 one, or every parity cell above would pass trivially.
+    let (mut live, deltas) = live_fixture();
+    let c = Cardinality::new(K);
+    let base_parts = RandomTape::draw(live.n0(), 4, SEED).partition();
+    let cfg = DistConfig {
+        backend: BackendSpec::Thread,
+        parts: Some(live.parts_for(base_parts.clone(), SEED)),
+        ..DistConfig::greedyml(AccumulationTree::new(4, 2), SEED)
+    };
+    let before = run_dist(live.oracle(), &c, &cfg).unwrap();
+    for d in &deltas {
+        live.apply(d).unwrap();
+    }
+    for d in &deltas {
+        for &e in &d.delete {
+            assert!(!live.oracle().holds(e), "deleted element {e} still held");
+        }
+    }
+    let cfg = DistConfig {
+        parts: Some(live.parts_for(base_parts, SEED)),
+        epoch: live.epoch(),
+        ..cfg
+    };
+    let after = run_dist(live.oracle(), &c, &cfg).unwrap();
+    assert!(
+        after.solution != before.solution || after.value.to_bits() != before.value.to_bits(),
+        "deltas did not perturb the solve at all — fixture too weak"
+    );
+}
+
+// ---- coreset mode -------------------------------------------------------
+
+const CORESET_SPEC: &str = "[dataset]\nkind = retail\nn = 500\nseed = 2\n[problem]\nk = 10\n";
+
+#[test]
+fn coreset_runs_are_bit_identical_across_backends_and_keep_the_sieve_band() {
+    let parsed = Config::parse(CORESET_SPEC).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+    let base = DistConfig::greedyml(AccumulationTree::new(4, 2), SEED);
+
+    let full_cfg = DistConfig { backend: BackendSpec::Thread, ..base.clone() };
+    let full = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &full_cfg)
+        .expect("full thread run");
+    let cs_cfg = DistConfig { coreset: CoresetSpec::On, ..full_cfg };
+    let cs = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &cs_cfg)
+        .expect("coreset thread run");
+    assert!(cs.value > 0.0);
+    assert!(
+        cs.value >= (0.5 - CORESET_EPSILON) * full.value,
+        "coreset value {} fell out of the sieve band of the full value {}",
+        cs.value,
+        full.value
+    );
+
+    let fleet: Vec<ServeDaemon> = (0..2).map(|_| ServeDaemon::spawn()).collect();
+    for wire in [WireSpec::Json, WireSpec::Binary] {
+        let process = DistConfig {
+            backend: BackendSpec::Process,
+            ship: ShipSpec::Partition,
+            problem: Some(problem_spec(&parsed)),
+            worker_bin: Some(worker_bin()),
+            wire,
+            coreset: CoresetSpec::On,
+            ..base.clone()
+        };
+        let p = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &process)
+            .unwrap_or_else(|e| panic!("process coreset run under {wire:?}: {e}"));
+        assert_eq!(p.solution, cs.solution, "process {wire:?}");
+        assert_eq!(p.value.to_bits(), cs.value.to_bits(), "process {wire:?}");
+        assert_eq!(p.total_calls, cs.total_calls, "process {wire:?}");
+
+        let tcp = DistConfig {
+            backend: BackendSpec::Tcp,
+            hosts: Some(fleet.iter().map(|d| d.addr.clone()).collect()),
+            worker_bin: None,
+            ..process
+        };
+        let t = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &tcp)
+            .unwrap_or_else(|e| panic!("tcp coreset run under {wire:?}: {e}"));
+        assert_eq!(t.solution, cs.solution, "tcp {wire:?}");
+        assert_eq!(t.value.to_bits(), cs.value.to_bits(), "tcp {wire:?}");
+        assert_eq!(t.total_calls, cs.total_calls, "tcp {wire:?}");
+    }
+}
+
+#[test]
+fn coreset_and_full_runs_are_distinct_cache_identities() {
+    // A coreset answer is a different result, not a cheaper route to the
+    // same one: the leaf greedy sees only the coreset, so its call count
+    // must drop against the full run on the same instance.
+    let parsed = Config::parse(CORESET_SPEC).unwrap();
+    let problem = build_problem(&parsed, None).unwrap();
+    let (constraint, _k) = build_constraint(&parsed, problem.oracle.n()).unwrap();
+    let base = DistConfig::greedyml(AccumulationTree::new(4, 2), SEED);
+    let full_cfg = DistConfig { backend: BackendSpec::Thread, ..base.clone() };
+    let full = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &full_cfg).unwrap();
+    let cs_cfg = DistConfig { coreset: CoresetSpec::On, ..full_cfg };
+    let cs = run_dist(problem.oracle.as_ref(), constraint.as_ref(), &cs_cfg).unwrap();
+    assert!(
+        cs.total_calls != full.total_calls || cs.solution != full.solution,
+        "coreset mode was a no-op on this instance"
+    );
+    // And the leaf-level memory the meter charges shrinks: peak worker
+    // memory under coreset must not exceed the full run's.
+    assert!(
+        cs.machines.iter().map(|m| m.peak_mem).max()
+            <= full.machines.iter().map(|m| m.peak_mem).max(),
+        "coreset peak mem exceeds full-run peak mem"
+    );
+}
+
+#[test]
+fn incremental_coreset_resolve_matches_cold_coreset_resolve() {
+    // Deltas and coresets compose: after an in-place advance, a coreset
+    // solve on the warm fleet must equal a coreset solve on a cold fleet —
+    // the shards are bit-identical, so the sieve passes are too.
+    let (mut live, deltas) = live_fixture();
+    let c = Cardinality::new(K);
+    let cfg_at = |epoch: u64| DistConfig {
+        coreset: CoresetSpec::On,
+        ..process_cfg(epoch, WireSpec::Binary)
+    };
+    let warm_pool = SessionPool::new();
+    run_dist_pooled_live(live.oracle(), &c, &cfg_at(0), &warm_pool, Some(&live))
+        .expect("epoch-0 coreset run");
+    live.apply(&deltas[0]).unwrap();
+    let inc = run_dist_pooled_live(live.oracle(), &c, &cfg_at(1), &warm_pool, Some(&live))
+        .expect("incremental coreset re-solve");
+    assert!(inc.warm);
+    let cold_pool = SessionPool::new();
+    let cold = run_dist_pooled_live(live.oracle(), &c, &cfg_at(1), &cold_pool, Some(&live))
+        .expect("cold coreset re-solve");
+    assert_eq!(inc.outcome.solution, cold.outcome.solution);
+    assert_eq!(inc.outcome.value.to_bits(), cold.outcome.value.to_bits());
+}

@@ -295,12 +295,15 @@ fn framed_sol_roundtrips_with_extracted_shard() {
     use greedyml::dist::wire::FromWorker;
     for (i, payload) in battery(0xD00D, 12).into_iter().enumerate() {
         let sol = payload.elems.clone();
+        // Alternate coreset-mode messages through the same battery.
+        let coreset = (i % 2 == 0).then(|| sol.clone());
         let msg = FromWorker::Sol(ChildMsg {
             from: i as u32,
             sol,
             value: 0.1 + i as f64 / 3.0,
             bytes: 17 * i as u64,
             data: Some(payload),
+            coreset,
         });
         let mut buf = Vec::new();
         write_reply(&mut buf, &msg, WireMode::Binary).unwrap();
